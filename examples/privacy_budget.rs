@@ -1,0 +1,52 @@
+//! Privacy accounting demo (paper Appendix F).
+//!
+//! Builds the default experiment's embedded client shards and reports each
+//! client's ε-MI-DP budget for sharing its parity data at several coding
+//! redundancies, illustrating the paper's observation that concentrated
+//! features leak more.
+//!
+//! ```sh
+//! cargo run --release --example privacy_budget
+//! ```
+
+use codedfedl::benchutil;
+use codedfedl::conf::ExperimentConfig;
+use codedfedl::coordinator::FedSetup;
+use codedfedl::privacy;
+use codedfedl::tensor::Mat;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExperimentConfig { epochs: 1, ..ExperimentConfig::tiny() };
+    let rt = benchutil::load_runtime(&cfg)?;
+    let setup = FedSetup::build(&cfg, &rt)?;
+
+    println!("=== per-client ε-MI-DP for sharing parity data (eq. 62) ===");
+    println!("{:>6} {:>12} {:>10} {:>10} {:>10}", "client", "f(Xhat)", "u=32", "u=64", "u=128");
+    for (j, cd) in setup.client_data.iter().enumerate() {
+        let xhat = &cd.xhat[0];
+        let f = privacy::concentration_f(xhat);
+        let eps: Vec<f64> = [32, 64, 128]
+            .iter()
+            .map(|&u| privacy::epsilon_mi_dp(xhat, u))
+            .collect();
+        println!(
+            "{j:>6} {f:>12.4} {:>10.4} {:>10.4} {:>10.4}",
+            eps[0], eps[1], eps[2]
+        );
+    }
+
+    println!("\n=== concentration drives leakage ===");
+    // Uniform-energy database: every point carries similar weight.
+    let uniform = Mat::from_fn(64, 8, |r, c| (((r * 13 + c * 7) % 17) as f32 + 1.0) / 17.0);
+    // Concentrated database: one dominant record in every feature.
+    let concentrated = Mat::from_fn(64, 8, |r, _| if r == 0 { 10.0 } else { 0.01 });
+    for (name, m) in [("uniform", &uniform), ("concentrated", &concentrated)] {
+        let rep = privacy::report(m, 64);
+        println!(
+            "{name:<14} f = {:>8.4}  ε(u=64) = {:>8.4} bits",
+            rep.f_stat, rep.epsilon_bits
+        );
+    }
+    println!("\nsmaller f ⇒ larger ε: vulnerable features need a bigger privacy budget.");
+    Ok(())
+}

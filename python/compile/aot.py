@@ -1,0 +1,107 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (not ``lowered.compiler_ir('hlo')`` protos, not ``.serialize()``)
+is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (what the published ``xla`` crate
+binds) rejects; the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --preset default [--preset paper ...]
+
+Also writes ``manifest.txt`` — one line per artifact:
+    <kind> file=<name> <dim>=<val> ...
+which the Rust runtime parses to verify shape agreement at startup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .shapes import PRESETS, ShapeSet
+
+F32 = "float32"
+
+
+def _spec(*dims):
+    import jax.numpy as jnp
+
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(kind: str, s: ShapeSet, a: dict) -> str:
+    """Lower one artifact of ``kind`` at the shapes in ``a`` to HLO text."""
+    if kind == "rff_embed":
+        low = jax.jit(model.embed_fn).lower(
+            _spec(a["b"], a["d"]), _spec(a["d"], a["q"]), _spec(a["q"]))
+    elif kind == "grad":
+        low = jax.jit(model.grad_fn).lower(
+            _spec(a["l"], a["q"]), _spec(a["l"], a["c"]),
+            _spec(a["q"], a["c"]), _spec(a["l"]))
+    elif kind == "encode":
+        low = jax.jit(model.encode_fn).lower(
+            _spec(a["u"], a["l"]), _spec(a["l"]),
+            _spec(a["l"], a["q"]), _spec(a["l"], a["c"]))
+    elif kind == "predict":
+        low = jax.jit(model.predict_fn).lower(
+            _spec(a["b"], a["q"]), _spec(a["q"], a["c"]))
+    else:
+        raise ValueError(f"unknown artifact kind {kind!r}")
+    return to_hlo_text(low)
+
+
+def build(out_dir: str, presets: list[str]) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines: list[str] = []
+    seen: set[str] = set()
+    for pname in presets:
+        s = PRESETS[pname]
+        for a in s.artifacts():
+            fname = a["file"]
+            dims = {k: v for k, v in a.items() if k not in ("kind", "file")}
+            line = " ".join(
+                [a["kind"], f"file={fname}"]
+                + [f"{k}={v}" for k, v in sorted(dims.items())])
+            if fname in seen:
+                continue
+            seen.add(fname)
+            manifest_lines.append(line)
+            path = os.path.join(out_dir, fname)
+            if os.path.exists(path):
+                print(f"[aot] keep   {fname}")
+                continue
+            text = lower_artifact(a["kind"], s, a)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"[aot] wrote  {fname}  ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"[aot] manifest.txt: {len(manifest_lines)} artifacts")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--preset", action="append", default=None,
+                   help=f"one of {sorted(PRESETS)} (repeatable)")
+    args = p.parse_args()
+    presets = args.preset or ["tiny", "default"]
+    build(args.out_dir, presets)
+
+
+if __name__ == "__main__":
+    main()

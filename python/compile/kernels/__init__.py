@@ -1,0 +1,17 @@
+"""L1: Pallas kernels for CodedFedL compute hot-spots.
+
+- rff.rff_embed     fused cos(X @ Omega + delta) feature map (paper eq. 18)
+- grad.grad         masked regression gradient X^T diag(m) (X theta - Y)
+- encode.encode     weighted random linear encoding (paper eq. 19)
+
+All kernels run under ``interpret=True`` so the lowered HLO executes on the
+CPU PJRT plugin; ``ref.py`` holds the pure-jnp oracles they are tested
+against (python/tests/test_kernels_*.py).
+"""
+
+from .encode import encode
+from .grad import grad, matmul_t, residual
+from .rff import rff_embed
+from . import ref
+
+__all__ = ["encode", "grad", "matmul_t", "residual", "rff_embed", "ref"]

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: weighted random linear encoding (paper eq. 19).
+
+parity = (G ⊙ w[None, :]) @ D  for generator G [u, l], weights w [l] and
+payload D [l, k] (transformed features, k=q, or labels, k=c).  The weight
+multiply fuses into the same VMEM tile as the MXU matmul, so the weighted
+generator never materialises in HBM.
+
+Grid: (u/bu, l/bl) with accumulation over l-tiles into the [bu, k] output
+block.  Encoding runs once per client before training (build path), but it
+is still the largest single matmul in the system (u × l × q), hence a
+first-class kernel rather than plain jnp.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+
+
+def _encode_kernel(g_ref, w_ref, d_ref, o_ref):
+    j = pl.program_id(1)
+    g = g_ref[...]  # [bu, bl]
+    w = w_ref[...]  # [1, bl]
+    d = d_ref[...]  # [bl, k]
+    part = jnp.dot(g * w, d, preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = part.astype(o_ref.dtype)
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] = (o_ref[...] + part).astype(o_ref.dtype)
+
+
+def encode(g, w, data, *, block_u: int | None = None,
+           block_l: int | None = None):
+    """Local parity block: (g * w[None, :]) @ data -> [u, k]."""
+    u, l = g.shape
+    l2, k = data.shape
+    assert l == l2, (l, l2)
+    assert w.shape == (l,)
+    bu, bl = tiling.encode_blocks(u, l)
+    if block_u is not None:
+        bu = block_u
+    if block_l is not None:
+        bl = block_l
+    assert u % bu == 0 and l % bl == 0
+
+    return pl.pallas_call(
+        _encode_kernel,
+        grid=(u // bu, l // bl),
+        in_specs=[
+            pl.BlockSpec((bu, bl), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bl), lambda i, j: (0, j)),
+            pl.BlockSpec((bl, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bu, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((u, k), data.dtype),
+        interpret=True,
+    )(g, w.reshape(1, l), data)

@@ -1,0 +1,105 @@
+"""L1 Pallas kernels: masked linear-regression gradient (paper eqs. 7/10/28).
+
+g = X^T · diag(mask) · (X·theta − Y)   over  X [L,q], Y [L,c], theta [q,c].
+
+Two kernels, chained by the L2 graph (python/compile/model.py):
+
+1. ``residual``:  R = diag(mask)(X·theta − Y)          grid over L-tiles
+2. ``matmul_t``:  g = X^T · R  with accumulation       grid (q-tiles, L-tiles)
+
+Splitting keeps every grid step's VMEM working set bounded regardless of q
+(theta is [q, c] with c small, so it stays resident in step 1; step 2 streams
+X twice-transposed tiles through the MXU and accumulates the [bq, c] output
+block in VMEM).  The same pair serves client partial gradients and the
+server-side coded gradient (mask ≡ 1 on parity data) — DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+
+
+def _residual_kernel(x_ref, y_ref, theta_ref, mask_ref, o_ref):
+    x = x_ref[...]          # [bl, q]
+    y = y_ref[...]          # [bl, c]
+    theta = theta_ref[...]  # [q, c]
+    mask = mask_ref[...]    # [bl, 1]
+    pred = jnp.dot(x, theta, preferred_element_type=jnp.float32)
+    o_ref[...] = (mask * (pred - y)).astype(o_ref.dtype)
+
+
+def residual(xhat, y, theta, mask, *, block_l: int | None = None):
+    """R = diag(mask) (xhat @ theta - y) -> [L, c]."""
+    l, q = xhat.shape
+    c = y.shape[1]
+    assert theta.shape == (q, c)
+    assert mask.shape == (l,)
+    bl = block_l or tiling.pick_block(l, tiling.LANE)
+    assert l % bl == 0
+
+    return pl.pallas_call(
+        _residual_kernel,
+        grid=(l // bl,),
+        in_specs=[
+            pl.BlockSpec((bl, q), lambda i: (i, 0)),
+            pl.BlockSpec((bl, c), lambda i: (i, 0)),
+            pl.BlockSpec((q, c), lambda i: (0, 0)),
+            pl.BlockSpec((bl, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bl, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, c), xhat.dtype),
+        interpret=True,
+    )(xhat, y, theta, mask.reshape(l, 1))
+
+
+def _matmul_t_kernel(x_ref, r_ref, o_ref):
+    j = pl.program_id(1)
+    x = x_ref[...]  # [bl, bq]
+    r = r_ref[...]  # [bl, c]
+    part = jnp.dot(x.T, r, preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = part.astype(o_ref.dtype)
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] = (o_ref[...] + part).astype(o_ref.dtype)
+
+
+def matmul_t(xhat, r, *, block_l: int | None = None,
+             block_q: int | None = None):
+    """g = xhat^T @ r -> [q, c], accumulated over L tiles in VMEM."""
+    l, q = xhat.shape
+    c = r.shape[1]
+    assert r.shape[0] == l
+    bl, bq = tiling.grad_blocks(l, q, c)
+    if block_l is not None:
+        bl = block_l
+    if block_q is not None:
+        bq = block_q
+    assert l % bl == 0 and q % bq == 0
+
+    return pl.pallas_call(
+        _matmul_t_kernel,
+        grid=(q // bq, l // bl),
+        in_specs=[
+            pl.BlockSpec((bl, bq), lambda i, j: (j, i)),
+            pl.BlockSpec((bl, c), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, c), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, c), xhat.dtype),
+        interpret=True,
+    )(xhat, r)
+
+
+def grad(xhat, y, theta, mask, **kw):
+    """Full masked gradient: xhat^T diag(mask) (xhat theta - y)."""
+    r = residual(xhat, y, theta, mask,
+                 block_l=kw.get("block_l"))
+    return matmul_t(xhat, r, block_l=kw.get("block_l"),
+                    block_q=kw.get("block_q"))

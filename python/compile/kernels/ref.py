@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written in
+the most direct jnp form; pytest (python/tests) asserts allclose between the
+kernel outputs (interpret mode) and these oracles across shape/dtype sweeps.
+These functions are also what the kernels must *mean* — any optimisation of
+the Pallas side is only legal while these stay the ground truth.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rff_embed_ref(x, omega, delta):
+    """Random Fourier feature map, paper eq. (18).
+
+    x:     [B, d] raw features
+    omega: [d, q] frequency vectors (columns ~ N(0, I/sigma^2))
+    delta: [q]    phases ~ Uniform(0, 2*pi]
+    returns [B, q]: sqrt(2/q) * cos(x @ omega + delta)
+    """
+    q = omega.shape[1]
+    return jnp.sqrt(2.0 / q).astype(x.dtype) * jnp.cos(x @ omega + delta[None, :])
+
+
+def residual_ref(xhat, y, theta, mask):
+    """Masked residual  diag(mask) @ (xhat @ theta - y)  -> [L, c]."""
+    return mask[:, None] * (xhat @ theta - y)
+
+
+def matmul_t_ref(xhat, r):
+    """xhat^T @ r -> [q, c]."""
+    return xhat.T @ r
+
+
+def grad_ref(xhat, y, theta, mask):
+    """Masked linear-regression gradient, paper eq. (7)/(10) numerator.
+
+    g = xhat^T diag(mask) (xhat @ theta - y), *unnormalised*: the coordinator
+    applies the 1/l or 1/((1-pnr_C) u) scaling (paper eqs. (28)-(30)).
+    """
+    return matmul_t_ref(xhat, residual_ref(xhat, y, theta, mask))
+
+
+def encode_ref(g, w, data):
+    """Weighted random linear encode, paper eq. (19): (g * w[None,:]) @ data.
+
+    g:    [u, l] generator matrix (private to the client)
+    w:    [l]    weight-matrix diagonal (sqrt of probability-of-no-return)
+    data: [l, k] transformed features (k=q) or labels (k=c)
+    returns [u, k] local parity block.
+    """
+    return (g * w[None, :]) @ data
+
+
+def predict_ref(xhat, theta):
+    """Model logits xhat @ theta -> [B, c]."""
+    return xhat @ theta

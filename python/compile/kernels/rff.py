@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: fused random Fourier feature embedding (paper eq. 18).
+
+Computes  sqrt(2/q) * cos(X @ Omega + delta)  in one pass: the matmul feeds
+the MXU, the bias-add / cos / scale run on the VPU over the same VMEM tile,
+so the [B, q] intermediate never round-trips to HBM (on real TPU).  Here the
+kernel is lowered with ``interpret=True`` so the identical HLO runs on the
+CPU PJRT plugin (see DESIGN.md §Hardware-Adaptation).
+
+Grid: (B/bb, q/bq).  Each step loads an X row-block [bb, d] and an Omega
+column-block [d, bq], both staying VMEM-resident; d (raw feature dim, 784
+for MNIST-like data) is small enough to keep un-tiled.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+
+
+def _rff_kernel(x_ref, omega_ref, delta_ref, o_ref, *, q_total: int):
+    x = x_ref[...]            # [bb, d]
+    omega = omega_ref[...]    # [d, bq]
+    delta = delta_ref[...]    # [1, bq]
+    acc = jnp.dot(x, omega, preferred_element_type=jnp.float32)
+    scale = jnp.sqrt(2.0 / q_total).astype(acc.dtype)
+    o_ref[...] = (scale * jnp.cos(acc + delta)).astype(o_ref.dtype)
+
+
+def rff_embed(x, omega, delta, *, block_b: int | None = None,
+              block_q: int | None = None):
+    """Pallas RFF embedding: x [B,d], omega [d,q], delta [q] -> [B,q]."""
+    b, d = x.shape
+    d2, q = omega.shape
+    assert d == d2, (d, d2)
+    assert delta.shape == (q,), delta.shape
+    bb, bq = tiling.rff_blocks(b, d, q)
+    if block_b is not None:
+        bb = block_b
+    if block_q is not None:
+        bq = block_q
+    assert b % bb == 0 and q % bq == 0, (b, bb, q, bq)
+
+    delta2 = delta.reshape(1, q)
+    kernel = functools.partial(_rff_kernel, q_total=q)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // bb, q // bq),
+        in_specs=[
+            pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, bq), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bq), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bq), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, q), x.dtype),
+        interpret=True,
+    )(x, omega, delta2)

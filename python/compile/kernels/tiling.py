@@ -1,0 +1,86 @@
+"""Tile-size selection shared by the Pallas kernels.
+
+TPU-oriented sizing: the MXU is a 128x128 systolic array and VMEM is a
+~16 MiB scratchpad per core, so we aim block dims at multiples of 128 (8 for
+the sublane dim) and keep the working set of each grid step well under the
+VMEM budget.  On this testbed kernels run under ``interpret=True`` (CPU), so
+these choices shape the *lowered structure* (what DESIGN.md's perf model
+estimates) rather than measured wallclock.
+"""
+
+from __future__ import annotations
+
+# VMEM budget per grid step, in bytes (conservative half of 16 MiB so double
+# buffering of in/out blocks fits).
+VMEM_BUDGET = 8 * 1024 * 1024
+
+# Preferred tile quanta for f32 on TPU: lane dim 128, sublane dim 8.
+LANE = 128
+SUBLANE = 8
+
+
+def largest_divisor_leq(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` (>=1).
+
+    Shapes in this project are AOT-fixed, so we can afford exact divisors and
+    keep the kernels free of ragged-edge masking.
+    """
+    if n <= 0:
+        raise ValueError(f"n must be positive, got {n}")
+    if target < 1:
+        target = 1
+    best = 1
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            lo, hi = d, n // d
+            if lo <= target and lo > best:
+                best = lo
+            if hi <= target and hi > best:
+                best = hi
+        d += 1
+    return best
+
+
+def pick_block(n: int, preferred: int) -> int:
+    """Pick a block size for a dimension of extent ``n``.
+
+    Prefers the TPU-friendly ``preferred`` quantum when it divides ``n``;
+    otherwise falls back to the largest divisor not exceeding it.
+    """
+    if n % preferred == 0:
+        return preferred
+    return largest_divisor_leq(n, preferred)
+
+
+def grad_blocks(l: int, q: int, c: int) -> tuple[int, int]:
+    """(block_l, block_q) for the residual/transpose-matmul gradient pair.
+
+    Working set per grid step of the X^T R accumulation:
+    X block  (bl, bq) + R block (bl, c) + out accumulator (bq, c), all f32.
+    """
+    bl = pick_block(l, LANE)
+    bq = pick_block(q, 4 * LANE)
+    # shrink bq until the working set fits the VMEM budget
+    while bq > 1 and 4 * (bl * bq + bl * c + bq * c) > VMEM_BUDGET:
+        bq = largest_divisor_leq(q, bq - 1)
+    return bl, bq
+
+
+def rff_blocks(b: int, d: int, q: int) -> tuple[int, int]:
+    """(block_b, block_q) for the fused cos(X @ Omega + delta) kernel.
+
+    Working set: X block (bb, d) + Omega block (d, bq) + out (bb, bq).
+    """
+    bb = pick_block(b, LANE)
+    bq = pick_block(q, 4 * LANE)
+    while bq > 1 and 4 * (bb * d + d * bq + bb * bq) > VMEM_BUDGET:
+        bq = largest_divisor_leq(q, bq - 1)
+    return bb, bq
+
+
+def encode_blocks(u: int, l: int) -> tuple[int, int]:
+    """(block_u, block_l) for the weighted-encode kernel."""
+    bu = pick_block(u, LANE)
+    bl = pick_block(l, LANE)
+    return bu, bl

@@ -1,0 +1,47 @@
+"""L2: the CodedFedL compute graphs, written in JAX over the L1 kernels.
+
+Each function here is one AOT unit: jitted, lowered once by ``aot.py`` to
+HLO text, loaded and executed by the Rust runtime.  Python never runs on the
+training path — these graphs are the *entire* numeric surface of the system:
+
+  embed_fn    (X, Omega, delta)        -> X_hat          paper eq. (18)
+  grad_fn     (X_hat, Y, theta, mask)  -> g (unnormalised) eqs. (7)/(10)/(28)
+  encode_fn   (G, w, X_hat, Y)         -> (X_parity, Y_parity)  eq. (19)
+  predict_fn  (X_hat, theta)           -> logits
+
+Normalisations (1/l, 1/((1-pnr_C) u*), 1/m), the model update (5) and the
+L2-regulariser term are applied by the Rust coordinator — they are O(q*c)
+and keeping them out of the graphs lets one grad artifact serve clients and
+server alike (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from . import kernels
+
+
+def embed_fn(x, omega, delta):
+    """RFF feature map over one row-block; chunked over the dataset by L3."""
+    return kernels.rff_embed(x, omega, delta)
+
+
+def grad_fn(xhat, y, theta, mask):
+    """Masked regression gradient  X^T diag(mask) (X theta - Y).
+
+    The same graph computes a client's partial gradient over its sampled
+    l*_j rows (mask selects them) and the server's coded gradient over the
+    global parity dataset (mask selects the u* live parity rows).
+    """
+    return kernels.grad(xhat, y, theta, mask)
+
+
+def encode_fn(g, w, xhat, y):
+    """Local parity dataset (X_parity, Y_parity) = G diag(w) [X_hat | Y]."""
+    xp = kernels.encode(g, w, xhat)
+    yp = kernels.encode(g, w, y)
+    return xp, yp
+
+
+def predict_fn(xhat, theta):
+    """Logits for evaluation; argmax happens in Rust (c is small)."""
+    return kernels.ref.predict_ref(xhat, theta)

@@ -1,0 +1,56 @@
+"""Single source of truth for the AOT artifact shape presets.
+
+The Rust coordinator resolves artifacts by these filenames
+(``rust/src/runtime/registry.rs`` builds the same names from its config), so
+changing a preset here must be matched there — the manifest emitted by
+``aot.py`` lets the runtime verify agreement at startup.
+
+Presets:
+  default — reduced scale used by tests, examples and the stock benches:
+            n=30 clients x 200-point local mini-batches (m=6000), q=512.
+  paper   — the paper's §V-A scale: 400-point local mini-batches (m=12000),
+            q=2000, u_max = 0.25 m rounded to a lane multiple.
+  tiny    — smoke-test scale for CI-fast integration tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ShapeSet:
+    """All AOT-fixed dimensions for one experiment scale."""
+
+    name: str
+    d: int        # raw feature dim
+    q: int        # RFF dim
+    c: int        # classes
+    l_client: int # local mini-batch rows per client
+    u_max: int    # max parity rows processed by the MEC server
+    b_embed: int  # row-block for embedding / prediction batches
+
+    def artifacts(self) -> list[dict]:
+        """The artifact list this shape set requires."""
+        return [
+            dict(kind="rff_embed", file=f"rff_embed_{self.b_embed}x{self.d}x{self.q}.hlo.txt",
+                 b=self.b_embed, d=self.d, q=self.q),
+            dict(kind="grad", file=f"grad_{self.l_client}x{self.q}x{self.c}.hlo.txt",
+                 l=self.l_client, q=self.q, c=self.c),
+            dict(kind="grad", file=f"grad_{self.u_max}x{self.q}x{self.c}.hlo.txt",
+                 l=self.u_max, q=self.q, c=self.c),
+            dict(kind="encode", file=f"encode_{self.u_max}x{self.l_client}x{self.q}x{self.c}.hlo.txt",
+                 u=self.u_max, l=self.l_client, q=self.q, c=self.c),
+            dict(kind="predict", file=f"predict_{self.b_embed}x{self.q}x{self.c}.hlo.txt",
+                 b=self.b_embed, q=self.q, c=self.c),
+        ]
+
+
+PRESETS: dict[str, ShapeSet] = {
+    "tiny": ShapeSet(name="tiny", d=32, q=64, c=10, l_client=40,
+                     u_max=128, b_embed=40),
+    "default": ShapeSet(name="default", d=784, q=512, c=10, l_client=200,
+                        u_max=1536, b_embed=200),
+    "paper": ShapeSet(name="paper", d=784, q=2000, c=10, l_client=400,
+                      u_max=3072, b_embed=400),
+}

@@ -1,0 +1,33 @@
+"""Shared fixtures and hypothesis strategies for the kernel test suite."""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from hypothesis import HealthCheck, settings
+
+# Pallas interpret mode is slow per-call; keep hypothesis example counts
+# modest but meaningful, and silence the too-slow health check.
+settings.register_profile(
+    "kernels",
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("kernels")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0DEDFED)
+
+
+def assert_close(a, b, rtol=2e-4, atol=2e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=rtol, atol=atol)

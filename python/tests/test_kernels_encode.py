@@ -1,0 +1,91 @@
+"""Pallas encode kernel vs oracle + the coding-theoretic properties the
+CodedFedL aggregation relies on (paper §III-B, §III-E)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import encode, ref
+from .conftest import assert_close
+
+
+def _mk(rng, u, l, k):
+    g = rng.normal(size=(u, l)).astype(np.float32)
+    w = rng.uniform(size=(l,)).astype(np.float32)
+    d = rng.normal(size=(l, k)).astype(np.float32)
+    return tuple(map(jnp.asarray, (g, w, d)))
+
+
+@given(
+    u=st.integers(1, 64),
+    l=st.integers(1, 64),
+    k=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_shape_sweep(u, l, k, seed):
+    rng = np.random.default_rng(seed)
+    g, w, d = _mk(rng, u, l, k)
+    assert_close(encode(g, w, d), ref.encode_ref(g, w, d), rtol=1e-3,
+                 atol=1e-3)
+
+
+def test_zero_weight_hides_point(rng):
+    """w_k = 0 rows must leave no trace in the parity data (never-processed
+    points have pnr=1 => weight sqrt(1-1)=0 ... see paper §III-D)."""
+    g, w, d = _mk(rng, 16, 24, 8)
+    w = w.at[5].set(0.0)
+    d_perturbed = d.at[5].add(100.0)
+    assert_close(encode(g, w, d), encode(g, w, d_perturbed))
+
+
+def test_linearity_in_payload(rng):
+    g, w, d = _mk(rng, 8, 16, 4)
+    d2 = jnp.asarray(np.random.default_rng(7).normal(size=d.shape),
+                     jnp.float32)
+    lhs = encode(g, w, d + 2.0 * d2)
+    rhs = encode(g, w, d) + 2.0 * encode(g, w, d2)
+    assert_close(lhs, rhs, rtol=1e-3, atol=1e-3)
+
+
+def test_zero_padded_generator_rows_are_zero_parity(rng):
+    """Padding G with zero rows yields zero parity rows — the runtime pads
+    u* up to the compiled u_max this way (DESIGN.md §2)."""
+    g, w, d = _mk(rng, 8, 16, 4)
+    gp = jnp.concatenate([g, jnp.zeros((4, 16))]).astype(jnp.float32)
+    out = np.asarray(encode(gp, w, d))
+    assert_close(out[:8], encode(g, w, d))
+    np.testing.assert_array_equal(out[8:], np.zeros((4, 4), np.float32))
+
+
+def test_gtg_over_u_approaches_identity(rng):
+    """WLLN approximation in eq. (31): G^T G / u -> I for large u."""
+    l = 12
+    for u, tol in [(200, 0.3), (20_000, 0.05)]:
+        g = rng.normal(size=(u, l)).astype(np.float32)
+        m = g.T @ g / u
+        off = m - np.eye(l, dtype=np.float32)
+        assert np.max(np.abs(off)) < tol, (u, np.max(np.abs(off)))
+
+
+def test_composite_parity_equals_global_encode(rng):
+    """Sum of local parities == global-G encode of the stacked dataset
+    (paper eq. 20-21): the server-side aggregation identity."""
+    q = 6
+    parts = []
+    gs, ws, ds = [], [], []
+    for lj in (8, 16, 4):
+        g, w, d = _mk(rng, 10, lj, q)
+        gs.append(np.asarray(g))
+        ws.append(np.asarray(w))
+        ds.append(np.asarray(d))
+        parts.append(np.asarray(encode(g, w, d)))
+    composite = np.sum(parts, axis=0)
+    g_glob = np.concatenate(gs, axis=1)
+    w_glob = np.concatenate(ws)
+    d_glob = np.concatenate(ds, axis=0)
+    global_parity = (g_glob * w_glob[None, :]) @ d_glob
+    np.testing.assert_allclose(composite, global_parity, rtol=1e-4,
+                               atol=1e-4)

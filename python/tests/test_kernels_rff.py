@@ -1,0 +1,71 @@
+"""Pallas RFF-embed kernel vs the pure-jnp oracle (paper eq. 18)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import ref, rff_embed
+from .conftest import assert_close
+
+
+def _mk(rng, b, d, q, dtype=np.float32):
+    x = rng.normal(size=(b, d)).astype(dtype)
+    omega = rng.normal(size=(d, q)).astype(dtype)
+    delta = rng.uniform(0, 2 * np.pi, size=(q,)).astype(dtype)
+    return jnp.asarray(x), jnp.asarray(omega), jnp.asarray(delta)
+
+
+@given(
+    b=st.integers(1, 96),
+    d=st.integers(1, 48),
+    q=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_shape_sweep(b, d, q, seed):
+    rng = np.random.default_rng(seed)
+    x, omega, delta = _mk(rng, b, d, q)
+    assert_close(rff_embed(x, omega, delta), ref.rff_embed_ref(x, omega, delta))
+
+
+def test_matches_ref_paper_block_shapes(rng):
+    # the 'default' preset shape: one embedding chunk
+    x, omega, delta = _mk(rng, 200, 784, 512)
+    assert_close(rff_embed(x, omega, delta), ref.rff_embed_ref(x, omega, delta))
+
+
+def test_explicit_blocks(rng):
+    x, omega, delta = _mk(rng, 64, 16, 64)
+    out = rff_embed(x, omega, delta, block_b=16, block_q=32)
+    assert_close(out, ref.rff_embed_ref(x, omega, delta))
+
+
+def test_output_range_bounded(rng):
+    # |sqrt(2/q) cos(.)| <= sqrt(2/q)
+    x, omega, delta = _mk(rng, 32, 8, 50)
+    out = np.asarray(rff_embed(x, omega, delta))
+    assert np.all(np.abs(out) <= np.sqrt(2 / 50) + 1e-6)
+
+
+def test_rbf_kernel_approximation(rng):
+    """phi(v1) . phi(v2) ~= exp(-||v1-v2||^2 / (2 sigma^2)) — eq. (8)/(17)."""
+    sigma = 2.0
+    d, q = 8, 8192
+    omega = rng.normal(scale=1.0 / sigma, size=(d, q)).astype(np.float32)
+    delta = rng.uniform(0, 2 * np.pi, size=(q,)).astype(np.float32)
+    v = rng.normal(size=(6, d)).astype(np.float32)
+    phi = np.asarray(rff_embed(jnp.asarray(v), jnp.asarray(omega),
+                               jnp.asarray(delta)))
+    approx = phi @ phi.T
+    sq = ((v[:, None, :] - v[None, :, :]) ** 2).sum(-1)
+    exact = np.exp(-sq / (2 * sigma**2))
+    np.testing.assert_allclose(approx, exact, atol=0.06)
+
+
+def test_deterministic(rng):
+    x, omega, delta = _mk(rng, 16, 8, 16)
+    a = np.asarray(rff_embed(x, omega, delta))
+    b = np.asarray(rff_embed(x, omega, delta))
+    np.testing.assert_array_equal(a, b)

@@ -1,0 +1,102 @@
+"""L2 model graphs + AOT lowering: shapes, HLO-text validity, manifest."""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.shapes import PRESETS
+from compile.kernels import ref
+from .conftest import assert_close
+
+
+class TestModelGraphs:
+    def test_embed_shapes(self, rng):
+        x = jnp.asarray(rng.normal(size=(40, 32)), jnp.float32)
+        om = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+        de = jnp.asarray(rng.uniform(size=(64,)), jnp.float32)
+        out = model.embed_fn(x, om, de)
+        assert out.shape == (40, 64)
+
+    def test_grad_shapes(self, rng):
+        xh = jnp.asarray(rng.normal(size=(40, 64)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(40, 10)), jnp.float32)
+        th = jnp.zeros((64, 10), jnp.float32)
+        m = jnp.ones((40,), jnp.float32)
+        assert model.grad_fn(xh, y, th, m).shape == (64, 10)
+
+    def test_encode_shapes(self, rng):
+        g = jnp.asarray(rng.normal(size=(128, 40)), jnp.float32)
+        w = jnp.ones((40,), jnp.float32)
+        xh = jnp.asarray(rng.normal(size=(40, 64)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(40, 10)), jnp.float32)
+        xp, yp = model.encode_fn(g, w, xh, y)
+        assert xp.shape == (128, 64) and yp.shape == (128, 10)
+
+    def test_grad_fn_equals_oracle(self, rng):
+        xh = jnp.asarray(rng.normal(size=(24, 16)), jnp.float32)
+        y = jnp.asarray(rng.normal(size=(24, 3)), jnp.float32)
+        th = jnp.asarray(rng.normal(size=(16, 3)), jnp.float32)
+        m = jnp.ones((24,), jnp.float32)
+        assert_close(model.grad_fn(xh, y, th, m),
+                     ref.grad_ref(xh, y, th, m), rtol=1e-3, atol=1e-3)
+
+
+class TestAotLowering:
+    @pytest.mark.parametrize("kind", ["rff_embed", "grad", "encode",
+                                      "predict"])
+    def test_lower_tiny_artifacts(self, kind):
+        s = PRESETS["tiny"]
+        arts = [a for a in s.artifacts() if a["kind"] == kind]
+        assert arts
+        for a in arts:
+            text = aot.lower_artifact(kind, s, a)
+            assert "ENTRY" in text
+            assert "HloModule" in text
+
+    def test_hlo_text_has_no_serialized_proto_markers(self):
+        s = PRESETS["tiny"]
+        a = [x for x in s.artifacts() if x["kind"] == "grad"][0]
+        text = aot.lower_artifact("grad", s, a)
+        # text interchange: human-readable, starts with HloModule
+        assert text.lstrip().startswith("HloModule")
+
+    def test_build_writes_manifest(self, tmp_path):
+        aot.build(str(tmp_path), ["tiny"])
+        manifest = (tmp_path / "manifest.txt").read_text().strip().split("\n")
+        files = set(os.listdir(tmp_path))
+        assert len(manifest) == len(PRESETS["tiny"].artifacts())
+        for line in manifest:
+            fields = dict(kv.split("=", 1) for kv in line.split()[1:])
+            assert fields["file"] in files
+
+    def test_build_is_idempotent(self, tmp_path):
+        aot.build(str(tmp_path), ["tiny"])
+        mtimes = {f: os.path.getmtime(tmp_path / f)
+                  for f in os.listdir(tmp_path) if f.endswith(".hlo.txt")}
+        aot.build(str(tmp_path), ["tiny"])
+        for f, t in mtimes.items():
+            assert os.path.getmtime(tmp_path / f) == t
+
+
+class TestShapePresets:
+    @pytest.mark.parametrize("name", sorted(PRESETS))
+    def test_artifact_dims_positive(self, name):
+        s = PRESETS[name]
+        for a in s.artifacts():
+            for k, v in a.items():
+                if k not in ("kind", "file"):
+                    assert isinstance(v, int) and v > 0
+
+    @pytest.mark.parametrize("name", sorted(PRESETS))
+    def test_filenames_unique_and_parse(self, name):
+        s = PRESETS[name]
+        files = [a["file"] for a in s.artifacts()]
+        assert len(files) == len(set(files))
+        for f in files:
+            assert f.endswith(".hlo.txt")

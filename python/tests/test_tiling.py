@@ -1,0 +1,68 @@
+"""Unit + property tests for tile-size selection."""
+
+from __future__ import annotations
+
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import tiling
+
+
+class TestLargestDivisor:
+    def test_exact(self):
+        assert tiling.largest_divisor_leq(128, 128) == 128
+
+    def test_smaller(self):
+        assert tiling.largest_divisor_leq(200, 128) == 100
+
+    def test_prime(self):
+        assert tiling.largest_divisor_leq(97, 64) == 1
+
+    def test_one(self):
+        assert tiling.largest_divisor_leq(1, 128) == 1
+
+    def test_target_below_one(self):
+        assert tiling.largest_divisor_leq(10, 0) == 1
+
+    def test_rejects_nonpositive(self):
+        with pytest.raises(ValueError):
+            tiling.largest_divisor_leq(0, 4)
+
+    @given(st.integers(1, 10_000), st.integers(1, 512))
+    def test_is_divisor_and_leq(self, n, t):
+        d = tiling.largest_divisor_leq(n, t)
+        assert n % d == 0
+        assert 1 <= d <= max(t, 1)
+
+    @given(st.integers(1, 2_000), st.integers(1, 256))
+    def test_is_largest(self, n, t):
+        d = tiling.largest_divisor_leq(n, t)
+        for cand in range(d + 1, min(n, t) + 1):
+            assert n % cand != 0
+
+
+class TestBlockPickers:
+    @given(st.integers(1, 4096), st.integers(1, 4096), st.integers(1, 16))
+    def test_grad_blocks_divide_and_fit(self, l, q, c):
+        bl, bq = tiling.grad_blocks(l, q, c)
+        assert l % bl == 0 and q % bq == 0
+        # If a smaller divisor exists, working set must fit the budget.
+        if bq > 1:
+            ws = 4 * (bl * bq + bl * c + bq * c)
+            # bq was only kept this large because it fits (or it's forced):
+            assert ws <= tiling.VMEM_BUDGET or bq == 1
+
+    @given(st.integers(1, 2048), st.integers(1, 1024), st.integers(1, 4096))
+    def test_rff_blocks_divide(self, b, d, q):
+        bb, bq = tiling.rff_blocks(b, d, q)
+        assert b % bb == 0 and q % bq == 0
+
+    @given(st.integers(1, 4096), st.integers(1, 4096))
+    def test_encode_blocks_divide(self, u, l):
+        bu, bl = tiling.encode_blocks(u, l)
+        assert u % bu == 0 and l % bl == 0
+
+    def test_preferred_lane_kept(self):
+        assert tiling.pick_block(1024, 128) == 128
+        assert tiling.pick_block(512, 512) == 512

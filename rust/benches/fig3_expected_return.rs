@@ -1,0 +1,68 @@
+//! Regenerates **Fig. 3(a)** and **Fig. 3(b)** (paper §IV): the piece-wise
+//! concavity of the expected return in ℓ̃ and the monotonicity of the
+//! optimized return in t, at the paper's illustration parameters
+//! `p = 0.9, τ = √3, μ = 2, α = 20` (Fig. 3(a) uses `t = 10`).
+//!
+//! ```sh
+//! cargo bench --bench fig3_expected_return
+//! ```
+
+use codedfedl::allocation::{expected_return, optimal_load};
+use codedfedl::benchutil::bench;
+use codedfedl::delay::NodeParams;
+
+fn node() -> NodeParams {
+    NodeParams { mu: 2.0, alpha: 20.0, tau: 3f64.sqrt(), p: 0.9 }
+}
+
+fn main() {
+    let n = node();
+
+    println!("=== Fig. 3(a): E[R_j(t; l)] vs l at t = 10 (piece-wise concave) ===");
+    println!("{:>8} {:>12}", "l", "E[R]");
+    let t = 10.0;
+    let mut series = Vec::new();
+    let lmax = n.mu * (t - 2.0 * n.tau); // beyond this the return is 0
+    for i in 0..=60 {
+        let ell = lmax * i as f64 / 60.0;
+        let er = expected_return(&n, t, ell);
+        series.push((ell, er));
+        if i % 4 == 0 {
+            println!("{ell:>8.3} {er:>12.5}");
+        }
+    }
+    // breakpoints at l = mu (t - nu tau): annotate
+    let nu_m = n.nu_max(t).unwrap();
+    let bps: Vec<f64> = (2..=nu_m).map(|v| n.mu * (t - n.tau * v as f64)).collect();
+    println!("concavity breakpoints (l = mu(t - nu*tau)): {bps:?}");
+    // shape checks (the figure's claims)
+    assert!(series.iter().all(|&(_, er)| er >= 0.0));
+    let peak = series.iter().cloned().fold((0.0, 0.0), |a, b| if b.1 > a.1 { b } else { a });
+    assert!(peak.1 > 0.0, "return must be positive somewhere");
+    assert!(
+        expected_return(&n, t, lmax * 0.999) < peak.1,
+        "return decays after the peak"
+    );
+
+    println!("\n=== Fig. 3(b): E[R_j(t; l*(t))] vs t (monotone increasing) ===");
+    println!("{:>8} {:>10} {:>12}", "t", "l*(t)", "E[R*]");
+    let mut prev = -1.0;
+    for i in 1..=40 {
+        let t = 0.5 * i as f64;
+        let (l, er) = optimal_load(&n, t, 50.0);
+        if i % 2 == 0 {
+            println!("{t:>8.2} {l:>10.3} {er:>12.5}");
+        }
+        assert!(er >= prev - 1e-9, "monotonicity violated at t={t}");
+        prev = er;
+    }
+    println!("monotone ✓ (paper App. C)");
+
+    println!("\n=== optimizer hot-path timings ===");
+    bench("optimal_load (fig3 node, t=10)", 10, 200, || {
+        std::hint::black_box(optimal_load(&node(), 10.0, 50.0));
+    });
+    bench("expected_return (single eval)", 10, 1000, || {
+        std::hint::black_box(expected_return(&node(), 10.0, 7.0));
+    });
+}

@@ -1,0 +1,13 @@
+//! Regenerates **Fig. 4(a–c)** (paper §V-B, MNIST): accuracy vs wall-clock
+//! and vs iteration for naive / greedy(ψ) / CodedFedL(δ), ψ, δ ∈ {0.1, 0.2}.
+//!
+//! ```sh
+//! cargo bench --bench fig4_mnist              # reduced scale (EPOCHS=16)
+//! EPOCHS=70 cargo bench --bench fig4_mnist    # paper iteration count
+//! ```
+
+mod fig_common;
+
+fn main() {
+    fig_common::run_figure("mnist", "Fig4/MNIST").expect("fig4 failed");
+}

@@ -1,0 +1,13 @@
+//! Regenerates **Fig. 5(a–c)** (paper §V-B, Fashion-MNIST): the harder
+//! dataset family; same scheme grid as Fig. 4.
+//!
+//! ```sh
+//! cargo bench --bench fig5_fashion
+//! EPOCHS=70 cargo bench --bench fig5_fashion
+//! ```
+
+mod fig_common;
+
+fn main() {
+    fig_common::run_figure("fashion", "Fig5/Fashion").expect("fig5 failed");
+}

@@ -1,0 +1,98 @@
+//! Hot-path micro/meso benchmarks (DESIGN.md §7, EXPERIMENTS.md §Perf):
+//! the L3 pieces that run every round, plus the PJRT executors.
+//!
+//! ```sh
+//! cargo bench --bench hotpath
+//! ```
+
+use codedfedl::allocation::{self, NodeSpec};
+use codedfedl::benchutil::{bench, load_runtime, shapes_for};
+use codedfedl::conf::{ExperimentConfig, Scheme};
+use codedfedl::coordinator::{run_scheme, FedSetup};
+use codedfedl::rng::Rng;
+use codedfedl::tensor::Mat;
+use codedfedl::topology::FleetSpec;
+
+fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+    let mut m = Mat::zeros(rows, cols);
+    rng.fill_normal_f32(m.as_mut_slice());
+    m
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::seed_from(42);
+
+    // --- allocation optimizer (runs once per experiment, but its cost
+    //     bounds how often deadlines could be re-optimized online) ---
+    let cfg = ExperimentConfig::default();
+    let spec = FleetSpec::paper(cfg.clients, cfg.q, cfg.classes);
+    let clients = spec.build_clients(&mut rng);
+    let m = cfg.global_batch() as f64;
+    let mut nodes: Vec<NodeSpec> = clients
+        .iter()
+        .map(|p| NodeSpec { params: *p, max_load: cfg.local_batch as f64 })
+        .collect();
+    nodes.push(NodeSpec { params: spec.build_server(), max_load: 0.1 * m });
+    bench("allocation::solve (31 nodes, paper fleet)", 3, 30, || {
+        std::hint::black_box(allocation::solve(&nodes, m).unwrap());
+    });
+
+    // --- PJRT executors at the default artifact shapes ---
+    let rt = load_runtime(&cfg)?;
+    let s = shapes_for(&cfg);
+    let xhat = randn(s.l_client, s.q, &mut rng);
+    let y = randn(s.l_client, s.c, &mut rng);
+    let theta = randn(s.q, s.c, &mut rng);
+    let mask = vec![1.0f32; s.l_client];
+    bench("runtime::grad (client 200x512x10)", 3, 50, || {
+        std::hint::black_box(rt.grad(&xhat, &y, &theta, &mask).unwrap());
+    });
+
+    let xp = randn(s.u_max, s.q, &mut rng);
+    let yp = randn(s.u_max, s.c, &mut rng);
+    let ones = vec![1.0f32; s.u_max];
+    bench("runtime::grad (server 1536x512x10)", 3, 20, || {
+        std::hint::black_box(rt.grad(&xp, &yp, &theta, &ones).unwrap());
+    });
+
+    let g = randn(s.u_max, s.l_client, &mut rng);
+    let w = vec![0.5f32; s.l_client];
+    bench("runtime::encode (1536x200 -> parity)", 3, 20, || {
+        std::hint::black_box(rt.encode(&g, &w, &xhat, &y).unwrap());
+    });
+
+    let x_raw = randn(s.b_embed, s.d, &mut rng);
+    let omega = randn(s.d, s.q, &mut rng);
+    let delta = vec![0.3f32; s.q];
+    bench("runtime::embed (200x784 -> 200x512)", 3, 20, || {
+        std::hint::black_box(rt.embed(&x_raw, &omega, &delta).unwrap());
+    });
+
+    let test = randn(2000, s.q, &mut rng);
+    bench("runtime::predict (2000x512x10)", 3, 20, || {
+        std::hint::black_box(rt.predict(&test, &theta).unwrap());
+    });
+
+    // --- aggregation primitives ---
+    let mut acc = Mat::zeros(s.q, s.c);
+    let gmat = randn(s.q, s.c, &mut rng);
+    bench("Mat::axpy (512x10 aggregate)", 10, 2000, || {
+        acc.axpy(0.5, &gmat);
+        std::hint::black_box(&acc);
+    });
+
+    // --- one full coded training round, end to end (tiny preset) ---
+    let tiny = ExperimentConfig { epochs: 1, ..ExperimentConfig::tiny() };
+    let rt_tiny = load_runtime(&tiny)?;
+    let setup = FedSetup::build(&tiny, &rt_tiny)?;
+    bench("full coded epoch (tiny: 5 clients x 2 steps)", 1, 10, || {
+        std::hint::black_box(
+            run_scheme(&setup, &rt_tiny, Scheme::Coded { delta: 0.3 }).unwrap(),
+        );
+    });
+    println!(
+        "\nPJRT executions so far: {} (tiny runtime) — per-round exec count drives L3 overhead",
+        rt_tiny.exec_count.get()
+    );
+    Ok(())
+}

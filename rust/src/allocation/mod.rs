@@ -1,0 +1,384 @@
+//! CodedFedL load allocation and coding-redundancy optimization
+//! (paper §III-C and §IV).
+//!
+//! Two-step structure exactly as the paper's Claim:
+//!
+//! * **Step 1** (eq. 24–26): for a fixed deadline `t`, maximise each node's
+//!   expected return `E[R_j(t; ℓ̃_j)] = ℓ̃_j · P(T_j ≤ t)` independently.
+//!   The Theorem shows the objective is piece-wise concave in `ℓ̃_j` with
+//!   breakpoints `ℓ = μ(t − ντ)`; we maximise each concave piece with
+//!   golden-section search (the paper used MATLAB `fminbnd`) and take the
+//!   best. For reliable links (`p = 0`, the AWGN case) the closed form
+//!   (eq. 34–35) via the Lambert `W₋₁` branch is used instead.
+//! * **Step 2** (eq. 27): the maximised total expected aggregate return is
+//!   monotonically increasing in `t` (App. C), so the minimum deadline with
+//!   `E[R(t)] = m` is found by bisection.
+//!
+//! Nodes are indexed `j ∈ [n+1]` with the MEC server's computing unit last,
+//! exactly as §IV's notation.
+
+pub mod outage;
+
+use crate::delay::NodeParams;
+use crate::numerics::{bisect_min_t, golden_section_max, lambert_w_m1};
+
+/// One node's optimisation input: its delay parameters and the cap on how
+/// many points it can process per round (`ℓ_j` for clients, `u_max` for the
+/// MEC server).
+#[derive(Clone, Copy, Debug)]
+pub struct NodeSpec {
+    pub params: NodeParams,
+    pub max_load: f64,
+}
+
+/// Result of the two-step optimisation (paper eq. 23).
+#[derive(Clone, Debug)]
+pub struct Allocation {
+    /// Optimal deadline time `t*` (seconds of simulated MEC time).
+    pub t_star: f64,
+    /// Optimal per-node loads `ℓ*_j(t*)`; last entry is `u*(t*)`.
+    pub loads: Vec<f64>,
+    /// Per-node expected returns at the optimum.
+    pub expected_returns: Vec<f64>,
+    /// Per-node probability of no return `1 − P(T_j ≤ t*)` at the optimal
+    /// load — the weight-matrix input of §III-D.
+    pub pnr: Vec<f64>,
+}
+
+impl Allocation {
+    /// Coding redundancy `u*` (the server is the last node, §IV notation).
+    pub fn u_star(&self) -> f64 {
+        *self.loads.last().expect("allocation has at least the server node")
+    }
+
+    /// Total expected aggregate return `E[R(t*)]` (should equal `m`).
+    pub fn total_expected_return(&self) -> f64 {
+        self.expected_returns.iter().sum()
+    }
+}
+
+/// Expected return `E[R_j(t; ℓ̃)] = ℓ̃ · P(T_j ≤ t)` (Theorem).
+pub fn expected_return(node: &NodeParams, t: f64, ell: f64) -> f64 {
+    if ell <= 0.0 {
+        return 0.0;
+    }
+    ell * node.cdf(t, ell)
+}
+
+/// AWGN / reliable-link closed form for the optimal load, eq. (34).
+///
+/// Also covers `τ = 0` (free communication): the formulas hold with the
+/// `2τ` offset collapsing to zero.
+pub fn optimal_load_awgn(node: &NodeParams, t: f64, max_load: f64) -> (f64, f64) {
+    let two_tau = 2.0 * node.tau;
+    if t <= two_tau || max_load <= 0.0 {
+        return (0.0, 0.0);
+    }
+    let s = slope_s(node);
+    let zeta = max_load / s + two_tau;
+    let ell = if t <= zeta { s * (t - two_tau) } else { max_load };
+    let ell = ell.min(max_load);
+    (ell, expected_return(node, t, ell))
+}
+
+/// The AWGN load slope `s_j = −α μ / (W₋₁(−e^{−(1+α)}) + 1)` (eq. 34).
+pub fn slope_s(node: &NodeParams) -> f64 {
+    let w = lambert_w_m1(-(-(1.0 + node.alpha)).exp());
+    -node.alpha * node.mu / (w + 1.0)
+}
+
+/// Step-1 subproblem (eq. 25/26): maximise `E[R(t; ℓ̃)]` over
+/// `0 ≤ ℓ̃ ≤ max_load` for a fixed deadline `t`. Returns `(ℓ*, E[R]*)`.
+pub fn optimal_load(node: &NodeParams, t: f64, max_load: f64) -> (f64, f64) {
+    if max_load <= 0.0 || t <= 2.0 * node.tau {
+        return (0.0, 0.0);
+    }
+    if node.p == 0.0 || node.tau == 0.0 {
+        return optimal_load_awgn(node, t, max_load);
+    }
+    let Some(nu_m) = node.nu_max(t) else {
+        return (0.0, 0.0);
+    };
+    // Concavity breakpoints ℓ = μ(t − ντ), ν = ν_m … 2 (ascending in ℓ).
+    // Beyond μ(t − 2τ) every step term is off and E[R] = 0.
+    //
+    // Perf: the NB(2, 1−p) retransmission pmf `(ν−1)(1−p)²p^{ν−2}` decays
+    // geometrically, so pieces past ν_cut (tail mass < 1e-12) contribute
+    // nothing distinguishable to the objective; they are merged into one
+    // interval instead of golden-sectioned individually. At LTE-scale
+    // deadlines (ν_m in the hundreds) this cuts `solve` from seconds to
+    // milliseconds (EXPERIMENTS.md §Perf iteration 3) while the
+    // grid-domination property test pins correctness.
+    let nu_cut = if node.p > 0.0 {
+        (2 + (-12.0 / node.p.log10()).ceil() as u64).min(nu_m)
+    } else {
+        nu_m
+    };
+    let mut bounds: Vec<f64> = Vec::new();
+    let tail_lo = node.mu * (t - node.tau * nu_cut as f64);
+    if nu_cut < nu_m && tail_lo > 0.0 {
+        // single merged interval for the negligible-mass tail pieces
+        bounds.push(tail_lo.min(max_load));
+    }
+    for nu in (2..=nu_cut).rev() {
+        let b = node.mu * (t - node.tau * nu as f64);
+        if b > 0.0 {
+            bounds.push(b.min(max_load));
+        }
+        if b >= max_load {
+            break; // further (larger) bounds are all clamped to max_load
+        }
+    }
+    bounds.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+    bounds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    bounds.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+
+    let f = |ell: f64| expected_return(node, t, ell);
+    let mut best = (0.0, 0.0);
+    let mut lo = 0.0;
+    for &hi in &bounds {
+        if hi > lo {
+            let (x, fx) = golden_section_max(lo, hi, 1e-10, f);
+            if fx > best.1 {
+                best = (x, fx);
+            }
+            // piece boundaries themselves are candidates (function is
+            // continuous, but golden section may sit strictly inside)
+            let fb = f(hi);
+            if fb > best.1 {
+                best = (hi, fb);
+            }
+        }
+        lo = hi;
+    }
+    // The cap itself.
+    let fc = f(max_load);
+    if fc > best.1 {
+        best = (max_load, fc);
+    }
+    best
+}
+
+/// Maximised total expected aggregate return at deadline `t` (Step 1 over
+/// all nodes, eq. 24).
+pub fn max_total_return(nodes: &[NodeSpec], t: f64) -> f64 {
+    nodes
+        .iter()
+        .map(|n| optimal_load(&n.params, t, n.max_load).1)
+        .sum()
+}
+
+/// Errors from the two-step solver.
+#[derive(Debug, thiserror::Error)]
+pub enum AllocError {
+    #[error("target return m={m} exceeds the system's supremum {sup} (need coding redundancy u_max > m - Σ ℓ_j)")]
+    Infeasible { m: f64, sup: f64 },
+    #[error("invalid node parameters: {0}")]
+    BadParams(String),
+}
+
+/// Two-step optimisation (paper eq. 23 via eq. 24–27): minimum deadline
+/// `t*` with `E[R(t*)] = m`, plus the optimal loads/redundancy at `t*`.
+pub fn solve(nodes: &[NodeSpec], m: f64) -> Result<Allocation, AllocError> {
+    for n in nodes {
+        n.params.validate().map_err(AllocError::BadParams)?;
+        if n.max_load < 0.0 {
+            return Err(AllocError::BadParams(format!(
+                "negative max_load {}",
+                n.max_load
+            )));
+        }
+    }
+    // Supremum of the total return as t → ∞ is Σ max_load; E[R] < sup for
+    // any finite t, so require strict slack (provided by parity data).
+    let sup: f64 = nodes.iter().map(|n| n.max_load).sum();
+    if sup <= m {
+        return Err(AllocError::Infeasible { m, sup });
+    }
+
+    // Bracket: start just above the fastest node's 2τ, double until
+    // feasible. The doubling terminates because E[R(t)] → sup > m.
+    let t_min = nodes
+        .iter()
+        .map(|n| 2.0 * n.params.tau)
+        .fold(f64::INFINITY, f64::min)
+        .max(1e-9);
+    let mut t_hi = t_min * 2.0 + 1.0;
+    for _ in 0..128 {
+        if max_total_return(nodes, t_hi) >= m {
+            break;
+        }
+        t_hi *= 2.0;
+    }
+    let total = |t: f64| max_total_return(nodes, t);
+    let t_star = bisect_min_t(t_min, t_hi, m, 1e-9, total)
+        .ok_or(AllocError::Infeasible { m, sup })?;
+
+    let mut loads = Vec::with_capacity(nodes.len());
+    let mut ers = Vec::with_capacity(nodes.len());
+    let mut pnr = Vec::with_capacity(nodes.len());
+    for n in nodes {
+        let (ell, er) = optimal_load(&n.params, t_star, n.max_load);
+        let p_le = if ell > 0.0 { n.params.cdf(t_star, ell) } else { 0.0 };
+        loads.push(ell);
+        ers.push(er);
+        pnr.push(1.0 - p_le);
+    }
+    Ok(Allocation { t_star, loads, expected_returns: ers, pnr })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig. 3's illustration parameters.
+    fn fig3_node() -> NodeParams {
+        NodeParams { mu: 2.0, alpha: 20.0, tau: 3f64.sqrt(), p: 0.9 }
+    }
+
+    #[test]
+    fn expected_return_zero_cases() {
+        let n = fig3_node();
+        assert_eq!(expected_return(&n, 10.0, 0.0), 0.0);
+        assert_eq!(expected_return(&n, 0.0, 5.0), 0.0);
+    }
+
+    #[test]
+    fn optimal_load_beats_grid_scan() {
+        // The optimizer must dominate a dense grid scan of the objective.
+        let n = fig3_node();
+        let t = 10.0;
+        let cap = 8.0;
+        let (_, er) = optimal_load(&n, t, cap);
+        let grid_best = (1..=4000)
+            .map(|i| expected_return(&n, t, cap * i as f64 / 4000.0))
+            .fold(0.0f64, f64::max);
+        assert!(
+            er >= grid_best - 1e-6,
+            "optimizer {er} < grid {grid_best}"
+        );
+    }
+
+    #[test]
+    fn optimal_load_awgn_matches_numeric() {
+        let n = NodeParams { mu: 2.0, alpha: 2.0, tau: 1.0, p: 0.0 };
+        for &t in &[2.5, 4.0, 9.0, 30.0] {
+            let (ell_cf, er_cf) = optimal_load_awgn(&n, t, 12.0);
+            let grid_best = (0..=6000)
+                .map(|i| expected_return(&n, t, 12.0 * i as f64 / 6000.0))
+                .fold(0.0f64, f64::max);
+            assert!(
+                (er_cf - grid_best).abs() < 1e-3 * (1.0 + grid_best),
+                "t={t}: closed form {er_cf} (ell {ell_cf}) vs grid {grid_best}"
+            );
+        }
+    }
+
+    #[test]
+    fn awgn_closed_form_piecewise_structure() {
+        // eq. (34): 0 below 2τ, linear in t, then saturates at ℓ_max.
+        let n = NodeParams { mu: 2.0, alpha: 2.0, tau: 1.0, p: 0.0 };
+        let cap = 10.0;
+        assert_eq!(optimal_load_awgn(&n, 1.9, cap).0, 0.0);
+        let s = slope_s(&n);
+        let (l1, _) = optimal_load_awgn(&n, 3.0, cap);
+        assert!((l1 - s * 1.0).abs() < 1e-9);
+        let zeta = cap / s + 2.0;
+        let (l2, _) = optimal_load_awgn(&n, zeta + 50.0, cap);
+        assert_eq!(l2, cap);
+    }
+
+    #[test]
+    fn optimized_return_monotone_in_t() {
+        // App. C: E[R_j(t; ℓ*(t))] is monotonically increasing in t.
+        let n = fig3_node();
+        let mut prev = -1.0;
+        for i in 1..60 {
+            let t = i as f64 * 0.5;
+            let (_, er) = optimal_load(&n, t, 50.0);
+            assert!(er >= prev - 1e-9, "t={t}: {er} < {prev}");
+            prev = er;
+        }
+    }
+
+    #[test]
+    fn solve_reaches_target_return() {
+        let clients: Vec<NodeSpec> = (0..8)
+            .map(|j| NodeSpec {
+                params: NodeParams {
+                    mu: 2.0 * 0.9f64.powi(j),
+                    alpha: 2.0,
+                    tau: 0.5 * 1.05f64.powi(j),
+                    p: 0.1,
+                },
+                max_load: 100.0,
+            })
+            .collect();
+        let mut nodes = clients;
+        nodes.push(NodeSpec {
+            params: NodeParams { mu: 50.0, alpha: 20.0, tau: 0.05, p: 0.0 },
+            max_load: 400.0,
+        });
+        let m = 800.0;
+        let alloc = solve(&nodes, m).unwrap();
+        assert!((alloc.total_expected_return() - m).abs() < 1e-3 * m);
+        // minimality: slightly smaller t misses the target
+        let smaller = max_total_return(&nodes, alloc.t_star * 0.99);
+        assert!(smaller < m);
+        for (l, n) in alloc.loads.iter().zip(nodes.iter()) {
+            assert!(*l >= 0.0 && *l <= n.max_load + 1e-9);
+        }
+        for p in &alloc.pnr {
+            assert!((0.0..=1.0).contains(p));
+        }
+    }
+
+    #[test]
+    fn solve_infeasible_without_redundancy() {
+        // Σ ℓ_j = m exactly: E[R] < m for all finite t => infeasible.
+        let nodes: Vec<NodeSpec> = (0..4)
+            .map(|_| NodeSpec {
+                params: NodeParams { mu: 2.0, alpha: 2.0, tau: 0.5, p: 0.1 },
+                max_load: 25.0,
+            })
+            .collect();
+        match solve(&nodes, 100.0) {
+            Err(AllocError::Infeasible { .. }) => {}
+            other => panic!("expected infeasible, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn solve_rejects_bad_params() {
+        let nodes = [NodeSpec {
+            params: NodeParams { mu: -1.0, alpha: 2.0, tau: 0.5, p: 0.1 },
+            max_load: 10.0,
+        }];
+        assert!(matches!(solve(&nodes, 5.0), Err(AllocError::BadParams(_))));
+    }
+
+    #[test]
+    fn more_redundancy_means_smaller_deadline() {
+        // The paper's headline mechanism: larger u_max ⇒ smaller t*.
+        let client = NodeSpec {
+            params: NodeParams { mu: 2.0, alpha: 2.0, tau: 0.5, p: 0.2 },
+            max_load: 50.0,
+        };
+        let server = |u: f64| NodeSpec {
+            params: NodeParams { mu: 100.0, alpha: 20.0, tau: 0.02, p: 0.0 },
+            max_load: u,
+        };
+        let m = 200.0;
+        let mk = |u: f64| {
+            let mut nodes = vec![client; 4];
+            nodes.push(server(u));
+            solve(&nodes, m).unwrap().t_star
+        };
+        let t_small = mk(20.0);
+        let t_big = mk(80.0);
+        assert!(
+            t_big < t_small,
+            "u=80 gives t*={t_big}, u=20 gives t*={t_small}"
+        );
+    }
+}

@@ -1,0 +1,212 @@
+//! Outage-probability load allocation (paper §VI future work).
+//!
+//! The main optimizer (eq. 23) targets the *expected* aggregate return
+//! `E[R(t)] = m`; here we instead pick the minimum deadline such that the
+//! probability of an aggregate-return outage is bounded:
+//!
+//! ```text
+//! min t  s.t.  P( R(t; u*, ℓ*) < (1−ε)·m ) ≤ η
+//! ```
+//!
+//! `R(t)` is a sum of independent scaled Bernoullis (eq. 22), so the
+//! outage probability is evaluated *exactly* by dynamic programming over
+//! the return distribution (loads quantised to integers), and the minimum
+//! deadline again falls to bisection because the outage probability is
+//! non-increasing in `t` for fixed loads re-optimised per `t`.
+
+use super::{optimal_load, NodeSpec};
+use crate::numerics::bisect_min_t;
+
+/// Exact `P(Σ_j ℓ_j·B_j < target)` for independent Bernoullis `B_j` with
+/// success probabilities `probs[j]` and integer weights `loads[j]`.
+///
+/// DP over achievable partial sums; cost `O(n · Σℓ)` — fine for the
+/// ≤31-node fleets and mini-batch-scale loads used here.
+pub fn outage_probability(loads: &[u64], probs: &[f64], target: u64) -> f64 {
+    assert_eq!(loads.len(), probs.len());
+    if target == 0 {
+        return 0.0;
+    }
+    // dist[s] = P(partial sum == s), truncated at `target` (everything at
+    // or above target is lumped into `at_least` — it can't become an
+    // outage later since sums only grow).
+    let cap = target as usize;
+    let mut dist = vec![0.0f64; cap];
+    let mut at_least = 0.0f64;
+    dist[0] = 1.0;
+    for (&l, &p) in loads.iter().zip(probs) {
+        if l == 0 {
+            continue;
+        }
+        let mut next = vec![0.0f64; cap];
+        let mut next_at_least = at_least; // mass already ≥ target stays
+        for (s, &mass) in dist.iter().enumerate() {
+            if mass == 0.0 {
+                continue;
+            }
+            // miss
+            next[s] += mass * (1.0 - p);
+            // hit
+            let ns = s + l as usize;
+            if ns >= cap {
+                next_at_least += mass * p;
+            } else {
+                next[ns] += mass * p;
+            }
+        }
+        dist = next;
+        at_least = next_at_least;
+    }
+    dist.iter().sum::<f64>().clamp(0.0, 1.0)
+}
+
+/// Result of the outage-constrained optimisation.
+#[derive(Clone, Debug)]
+pub struct OutageAllocation {
+    pub t_star: f64,
+    pub loads: Vec<f64>,
+    pub outage: f64,
+}
+
+/// Minimum deadline with `P(R(t) < (1−ε)m) ≤ η`, re-optimising the Step-1
+/// loads at every probed `t` (same structure as the expected-return
+/// two-step solve).
+pub fn solve_outage(
+    nodes: &[NodeSpec],
+    m: f64,
+    epsilon: f64,
+    eta: f64,
+) -> Option<OutageAllocation> {
+    assert!((0.0..1.0).contains(&epsilon) && (0.0..1.0).contains(&eta));
+    let target = ((1.0 - epsilon) * m).ceil() as u64;
+
+    let outage_at = |t: f64| -> (f64, Vec<f64>) {
+        let mut loads = Vec::with_capacity(nodes.len());
+        let mut int_loads = Vec::with_capacity(nodes.len());
+        let mut probs = Vec::with_capacity(nodes.len());
+        for n in nodes {
+            let (l, _) = optimal_load(&n.params, t, n.max_load);
+            let li = l.floor();
+            loads.push(l);
+            int_loads.push(li as u64);
+            probs.push(if li > 0.0 { n.params.cdf(t, li) } else { 0.0 });
+        }
+        (outage_probability(&int_loads, &probs, target), loads)
+    };
+
+    // Bracket then bisect on the (non-increasing in t) outage probability.
+    let t_min = nodes
+        .iter()
+        .map(|n| 2.0 * n.params.tau)
+        .fold(f64::INFINITY, f64::min)
+        .max(1e-9);
+    let mut t_hi = t_min * 2.0 + 1.0;
+    let mut ok = false;
+    for _ in 0..96 {
+        if outage_at(t_hi).0 <= eta {
+            ok = true;
+            break;
+        }
+        t_hi *= 2.0;
+    }
+    if !ok {
+        return None;
+    }
+    let t_star = bisect_min_t(t_min, t_hi, 1.0 - eta, 1e-6, |t| 1.0 - outage_at(t).0)?;
+    let (outage, loads) = outage_at(t_star);
+    Some(OutageAllocation { t_star, loads, outage })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::NodeParams;
+
+    #[test]
+    fn outage_probability_hand_cases() {
+        // Two nodes of weight 1, p = 0.5 each; target 2 ⇒ outage unless
+        // both hit: 1 − 0.25 = 0.75.
+        let o = outage_probability(&[1, 1], &[0.5, 0.5], 2);
+        assert!((o - 0.75).abs() < 1e-12);
+        // target 1 ⇒ outage only if both miss: 0.25.
+        let o = outage_probability(&[1, 1], &[0.5, 0.5], 1);
+        assert!((o - 0.25).abs() < 1e-12);
+        // target 0 ⇒ never an outage.
+        assert_eq!(outage_probability(&[1], &[0.1], 0), 0.0);
+        // zero-load nodes contribute nothing.
+        let o = outage_probability(&[0, 1], &[0.9, 0.5], 1);
+        assert!((o - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outage_matches_monte_carlo() {
+        let loads = [3u64, 5, 2, 7];
+        let probs = [0.9, 0.6, 0.8, 0.3];
+        let target = 10u64;
+        let exact = outage_probability(&loads, &probs, target);
+        let mut rng = crate::rng::Rng::seed_from(5);
+        let trials = 200_000;
+        let mut outages = 0usize;
+        for _ in 0..trials {
+            let sum: u64 = loads
+                .iter()
+                .zip(&probs)
+                .map(|(&l, &p)| if rng.next_f64() < p { l } else { 0 })
+                .sum();
+            outages += (sum < target) as usize;
+        }
+        let emp = outages as f64 / trials as f64;
+        assert!((emp - exact).abs() < 0.005, "{emp} vs {exact}");
+    }
+
+    fn fleet() -> Vec<NodeSpec> {
+        let mut nodes: Vec<NodeSpec> = (0..6)
+            .map(|j| NodeSpec {
+                params: NodeParams {
+                    mu: 5.0 * 0.9f64.powi(j),
+                    alpha: 2.0,
+                    tau: 0.3,
+                    p: 0.1,
+                },
+                max_load: 50.0,
+            })
+            .collect();
+        nodes.push(NodeSpec {
+            params: NodeParams { mu: 200.0, alpha: 50.0, tau: 0.02, p: 0.0 },
+            max_load: 150.0,
+        });
+        nodes
+    }
+
+    #[test]
+    fn solve_outage_meets_constraint() {
+        let nodes = fleet();
+        let m = 300.0;
+        let sol = solve_outage(&nodes, m, 0.1, 0.05).expect("feasible");
+        assert!(sol.outage <= 0.05 + 1e-6, "outage {}", sol.outage);
+        assert!(sol.t_star > 0.0);
+        for (l, n) in sol.loads.iter().zip(&nodes) {
+            assert!(*l >= 0.0 && *l <= n.max_load + 1e-9);
+        }
+    }
+
+    #[test]
+    fn stricter_eta_needs_larger_deadline() {
+        let nodes = fleet();
+        let m = 300.0;
+        let loose = solve_outage(&nodes, m, 0.1, 0.2).unwrap();
+        let tight = solve_outage(&nodes, m, 0.1, 0.01).unwrap();
+        assert!(
+            tight.t_star >= loose.t_star,
+            "tight {} !>= loose {}",
+            tight.t_star,
+            loose.t_star
+        );
+    }
+
+    #[test]
+    fn outage_target_above_capacity_is_infeasible() {
+        let nodes = fleet(); // total capacity 6*50 + 150 = 450
+        assert!(solve_outage(&nodes, 10_000.0, 0.0, 0.01).is_none());
+    }
+}

@@ -1,0 +1,199 @@
+//! Shared harness for the benches and examples: a small timing framework
+//! (criterion is unavailable offline — this provides warmup + median/MAD),
+//! one-call experiment runners, and ASCII renderings of the paper's
+//! figures.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::conf::{ExperimentConfig, Scheme};
+use crate::coordinator::{run_scheme, FedSetup, TrainOutcome};
+use crate::metrics::History;
+use crate::runtime::{Runtime, RuntimeShapes};
+
+/// Timing summary of one benchmark target.
+#[derive(Clone, Copy, Debug)]
+pub struct TimingStats {
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    /// Median absolute deviation — robust spread.
+    pub mad_ns: f64,
+}
+
+impl TimingStats {
+    pub fn line(&self, name: &str) -> String {
+        fn fmt(ns: f64) -> String {
+            if ns >= 1e9 {
+                format!("{:.3} s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.3} µs", ns / 1e3)
+            } else {
+                format!("{ns:.0} ns")
+            }
+        }
+        format!(
+            "{name:<44} median {:>12}  mean {:>12}  mad {:>10}  (n={})",
+            fmt(self.median_ns),
+            fmt(self.mean_ns),
+            fmt(self.mad_ns),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with warmup; prints and returns the stats.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> TimingStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let stats = TimingStats {
+        iters,
+        median_ns: median,
+        mean_ns: mean,
+        mad_ns: devs[devs.len() / 2],
+    };
+    println!("{}", stats.line(name));
+    stats
+}
+
+/// Derive the runtime shape set from an experiment config (must agree with
+/// `python/compile/shapes.py`; the manifest check fails fast otherwise).
+pub fn shapes_for(cfg: &ExperimentConfig) -> RuntimeShapes {
+    RuntimeShapes {
+        d: cfg.dim,
+        q: cfg.q,
+        c: cfg.classes,
+        l_client: cfg.local_batch,
+        u_max: cfg.u_max,
+        b_embed: cfg.local_batch,
+    }
+}
+
+/// Load the runtime for a config.
+pub fn load_runtime(cfg: &ExperimentConfig) -> Result<Runtime> {
+    Runtime::load(std::path::Path::new(&cfg.artifacts_dir), shapes_for(cfg))
+}
+
+/// Build the setup and run each scheme on it (shared data/fleet).
+pub fn run_experiment(
+    cfg: &ExperimentConfig,
+    schemes: &[Scheme],
+) -> Result<(FedSetup, Vec<(Scheme, TrainOutcome)>)> {
+    let rt = load_runtime(cfg)?;
+    let setup = FedSetup::build(cfg, &rt)?;
+    let mut out = Vec::with_capacity(schemes.len());
+    for &s in schemes {
+        eprintln!("[run] scheme {} ...", s.label());
+        let r = run_scheme(&setup, &rt, s)?;
+        eprintln!(
+            "[run]   final acc {:.3}  sim time {:.1} h  ({} iters)",
+            r.history.final_accuracy(),
+            r.history.total_sim_time() / 3600.0,
+            r.history.points.len()
+        );
+        out.push((s, r));
+    }
+    Ok((setup, out))
+}
+
+/// ASCII plot of several histories: accuracy vs a chosen x-axis.
+pub fn ascii_curves(
+    title: &str,
+    histories: &[&History],
+    x_of: impl Fn(&crate::metrics::Point) -> f64,
+    x_label: &str,
+) -> String {
+    const W: usize = 72;
+    const H: usize = 20;
+    let mut xmax = 0.0f64;
+    let mut ymax = 0.0f64;
+    for h in histories {
+        for p in &h.points {
+            xmax = xmax.max(x_of(p));
+            ymax = ymax.max(p.accuracy);
+        }
+    }
+    if xmax <= 0.0 {
+        xmax = 1.0;
+    }
+    ymax = (ymax * 1.05).min(1.0).max(0.1);
+    let mut grid = vec![vec![b' '; W]; H];
+    let marks = [b'*', b'o', b'+', b'x', b'#', b'@'];
+    for (hi, h) in histories.iter().enumerate() {
+        for p in &h.points {
+            let xi = ((x_of(p) / xmax) * (W - 1) as f64).round() as usize;
+            let yi = ((p.accuracy / ymax) * (H - 1) as f64).round() as usize;
+            let row = H - 1 - yi.min(H - 1);
+            grid[row][xi.min(W - 1)] = marks[hi % marks.len()];
+        }
+    }
+    let mut s = format!("{title}\n");
+    for (i, row) in grid.iter().enumerate() {
+        let yv = ymax * (H - 1 - i) as f64 / (H - 1) as f64;
+        s.push_str(&format!("{:5.2} |{}\n", yv, String::from_utf8_lossy(row)));
+    }
+    s.push_str(&format!("      +{}\n", "-".repeat(W)));
+    s.push_str(&format!("       0 … {xmax:.3e}  ({x_label})\n"));
+    for (hi, h) in histories.iter().enumerate() {
+        s.push_str(&format!("       {} = {}\n", marks[hi % marks.len()] as char, h.label));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Point;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let s = bench("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.median_ns >= 0.0);
+        assert!(s.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn ascii_curves_renders() {
+        let mut h = History::new("demo");
+        for i in 1..=10 {
+            h.push(Point {
+                iter: i,
+                sim_time: i as f64,
+                accuracy: i as f64 / 10.0,
+                train_loss: 0.0,
+            });
+        }
+        let s = ascii_curves("T", &[&h], |p| p.sim_time, "s");
+        assert!(s.contains("demo"));
+        assert!(s.contains('*'));
+        assert!(s.lines().count() > 20);
+    }
+
+    #[test]
+    fn shapes_match_config() {
+        let cfg = ExperimentConfig::tiny();
+        let s = shapes_for(&cfg);
+        assert_eq!(s.q, cfg.q);
+        assert_eq!(s.l_client, cfg.local_batch);
+        assert_eq!(s.u_max, cfg.u_max);
+    }
+}

@@ -1,0 +1,190 @@
+//! Tiny command-line parser (clap is unavailable offline).
+//!
+//! Model: `binary <subcommand> [--key value]... [--flag]...`. Subcommands
+//! and options are declared up front so `--help` output and unknown-option
+//! errors are first-class.
+
+use std::collections::BTreeMap;
+
+/// Declared option (all options take a value unless `is_flag`).
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments for one subcommand.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn parse_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        self.get(name)
+            .map(|v| v.parse::<f64>().map_err(|e| format!("--{name}: {e}")))
+            .transpose()
+    }
+
+    pub fn parse_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        self.get(name)
+            .map(|v| v.parse::<usize>().map_err(|e| format!("--{name}: {e}")))
+            .transpose()
+    }
+
+    pub fn parse_u64(&self, name: &str) -> Result<Option<u64>, String> {
+        self.get(name)
+            .map(|v| v.parse::<u64>().map_err(|e| format!("--{name}: {e}")))
+            .transpose()
+    }
+}
+
+/// A subcommand declaration.
+#[derive(Clone, Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+/// Parse `argv` (without the program name) against `commands`.
+/// Returns `(command name, args)` or a user-facing error/help string.
+pub fn parse_argv(
+    commands: &[Command],
+    argv: &[String],
+) -> Result<(&'static str, Args), String> {
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+        return Err(usage(commands));
+    }
+    let cmd = commands
+        .iter()
+        .find(|c| c.name == argv[0])
+        .ok_or_else(|| format!("unknown command {:?}\n\n{}", argv[0], usage(commands)))?;
+
+    let mut args = Args::default();
+    for o in &cmd.opts {
+        if let Some(d) = o.default {
+            args.values.insert(o.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 1;
+    while i < argv.len() {
+        let tok = &argv[i];
+        if tok == "--help" || tok == "-h" {
+            return Err(cmd_usage(cmd));
+        }
+        let name = tok
+            .strip_prefix("--")
+            .ok_or_else(|| format!("expected --option, got {tok:?}\n\n{}", cmd_usage(cmd)))?;
+        let spec = cmd
+            .opts
+            .iter()
+            .find(|o| o.name == name)
+            .ok_or_else(|| format!("unknown option --{name}\n\n{}", cmd_usage(cmd)))?;
+        if spec.is_flag {
+            args.flags.insert(name.to_string(), true);
+            i += 1;
+        } else {
+            let val = argv
+                .get(i + 1)
+                .ok_or_else(|| format!("--{name} needs a value"))?;
+            args.values.insert(name.to_string(), val.clone());
+            i += 2;
+        }
+    }
+    Ok((cmd.name, args))
+}
+
+/// Top-level usage text.
+pub fn usage(commands: &[Command]) -> String {
+    let mut s = String::from("codedfedl — CodedFedL (JSAC 2020) reproduction\n\nCommands:\n");
+    for c in commands {
+        s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+    }
+    s.push_str("\nUse `<command> --help` for options.");
+    s
+}
+
+fn cmd_usage(cmd: &Command) -> String {
+    let mut s = format!("{} — {}\n\nOptions:\n", cmd.name, cmd.about);
+    for o in &cmd.opts {
+        let kind = if o.is_flag { "" } else { " <value>" };
+        let def = o
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{kind:<10} {}{def}\n", o.name, o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmds() -> Vec<Command> {
+        vec![Command {
+            name: "train",
+            about: "run training",
+            opts: vec![
+                OptSpec { name: "scheme", help: "scheme", default: Some("coded"), is_flag: false },
+                OptSpec { name: "delta", help: "redundancy", default: None, is_flag: false },
+                OptSpec { name: "full", help: "paper scale", default: None, is_flag: true },
+            ],
+        }]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_defaults_flags() {
+        let (name, a) = parse_argv(&cmds(), &sv(&["train", "--delta", "0.1", "--full"])).unwrap();
+        assert_eq!(name, "train");
+        assert_eq!(a.get("scheme"), Some("coded"));
+        assert_eq!(a.parse_f64("delta").unwrap(), Some(0.1));
+        assert!(a.flag("full"));
+        assert!(!a.flag("absent"));
+    }
+
+    #[test]
+    fn unknown_command_and_option() {
+        assert!(parse_argv(&cmds(), &sv(&["nope"])).is_err());
+        assert!(parse_argv(&cmds(), &sv(&["train", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse_argv(&cmds(), &sv(&["train", "--delta"])).is_err());
+    }
+
+    #[test]
+    fn help_is_err_with_usage() {
+        let e = parse_argv(&cmds(), &sv(&["--help"])).unwrap_err();
+        assert!(e.contains("Commands"));
+        let e2 = parse_argv(&cmds(), &sv(&["train", "--help"])).unwrap_err();
+        assert!(e2.contains("Options"));
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let (_, a) = parse_argv(&cmds(), &sv(&["train", "--delta", "abc"])).unwrap();
+        assert!(a.parse_f64("delta").is_err());
+    }
+}

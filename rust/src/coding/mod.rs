@@ -1,0 +1,187 @@
+//! Distributed encoding bookkeeping (paper §III-B, §III-D).
+//!
+//! Clients privately draw generator matrices `G_j ∈ R^{u×ℓ_j}` (standard
+//! normal or Rademacher ±1, both zero-mean unit-variance as the paper
+//! requires), weight their data with `W_j = diag(w_j)` built from the
+//! probabilities of no return, and ship parity data to the server. The
+//! parity *computation* itself runs through the AOT encode artifact
+//! (L1 `encode` kernel); this module owns generation of `G_j`, the weight
+//! vectors, the composite aggregation, and the `GᵀG/u → I` diagnostic that
+//! justifies the unbiasedness approximation (eq. 31).
+
+pub mod secure_agg;
+
+use crate::rng::Rng;
+use crate::tensor::Mat;
+
+/// Distribution of the generator-matrix entries (paper §III-B offers both).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GeneratorKind {
+    /// i.i.d. standard normal — required by the privacy analysis (App. F).
+    Normal,
+    /// i.i.d. Rademacher ±1 (`Bernoulli(1/2)` over `{−1, +1}`).
+    Rademacher,
+}
+
+impl std::str::FromStr for GeneratorKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "normal" => Ok(GeneratorKind::Normal),
+            "rademacher" => Ok(GeneratorKind::Rademacher),
+            other => Err(format!("unknown generator kind {other:?}")),
+        }
+    }
+}
+
+/// Draw client `j`'s private generator matrix `G_j` of shape `[u, ell]`.
+pub fn generator_matrix(kind: GeneratorKind, u: usize, ell: usize, rng: &mut Rng) -> Mat {
+    let mut m = Mat::zeros(u, ell);
+    match kind {
+        GeneratorKind::Normal => rng.fill_normal_f32(m.as_mut_slice()),
+        GeneratorKind::Rademacher => rng.fill_rademacher_f32(m.as_mut_slice()),
+    }
+    m
+}
+
+/// Weight-vector construction (paper §III-D).
+///
+/// For the `ℓ*` points the client will process each round the weight is
+/// `√pnr₁` where `pnr₁ = 1 − P(T_j ≤ t*)`; the remaining `ℓ_j − ℓ*` points
+/// are never evaluated (`pnr₂ = 1`, weight 1). `processed` marks the
+/// sampled subset.
+pub fn weight_vector(processed: &[bool], pnr1: f64) -> Vec<f32> {
+    assert!(
+        (0.0..=1.0).contains(&pnr1),
+        "pnr must be a probability, got {pnr1}"
+    );
+    let w_proc = (pnr1 as f32).sqrt();
+    processed
+        .iter()
+        .map(|&p| if p { w_proc } else { 1.0 })
+        .collect()
+}
+
+/// Uniformly sample which `ell_star` of the client's `ell` points it will
+/// process each round (paper §III-D: "samples ℓ*_j data points uniformly
+/// and randomly"; the subset is fixed across rounds and hidden from the
+/// server).
+pub fn sample_processed(ell: usize, ell_star: usize, rng: &mut Rng) -> Vec<bool> {
+    assert!(ell_star <= ell, "ell_star {ell_star} > ell {ell}");
+    let perm = rng.permutation(ell);
+    let mut mask = vec![false; ell];
+    for &i in perm.iter().take(ell_star) {
+        mask[i] = true;
+    }
+    mask
+}
+
+/// Sum local parity blocks into the composite global parity dataset
+/// (paper eq. 20): `X̌ = Σ_j X̌^(j)`, `Y̌ = Σ_j Y̌^(j)`.
+pub fn aggregate_parity(parts: &[Mat]) -> Mat {
+    assert!(!parts.is_empty(), "no parity blocks to aggregate");
+    let mut acc = parts[0].clone();
+    for p in &parts[1..] {
+        acc.axpy(1.0, p);
+    }
+    acc
+}
+
+/// Diagnostic for the WLLN approximation of eq. (31): largest absolute
+/// deviation of `GᵀG / u` from the identity. Shrinks as `O(1/√u)`.
+pub fn gtg_identity_deviation(g: &Mat) -> f32 {
+    let u = g.rows() as f32;
+    let ell = g.cols();
+    let mut max_dev = 0.0f32;
+    for i in 0..ell {
+        for j in i..ell {
+            let mut dot = 0.0f32;
+            for r in 0..g.rows() {
+                dot += g.get(r, i) * g.get(r, j);
+            }
+            let target = if i == j { 1.0 } else { 0.0 };
+            max_dev = max_dev.max((dot / u - target).abs());
+        }
+    }
+    max_dev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn generator_kinds_have_unit_variance() {
+        let mut rng = Rng::seed_from(1);
+        for kind in [GeneratorKind::Normal, GeneratorKind::Rademacher] {
+            let g = generator_matrix(kind, 200, 100, &mut rng);
+            let n = (g.rows() * g.cols()) as f64;
+            let mean: f64 = g.as_slice().iter().map(|&v| v as f64).sum::<f64>() / n;
+            let var: f64 =
+                g.as_slice().iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+            assert!(mean.abs() < 0.03, "{kind:?} mean {mean}");
+            assert!((var - 1.0).abs() < 0.05, "{kind:?} var {var}");
+        }
+    }
+
+    #[test]
+    fn rademacher_entries_are_pm_one() {
+        let mut rng = Rng::seed_from(2);
+        let g = generator_matrix(GeneratorKind::Rademacher, 10, 10, &mut rng);
+        assert!(g.as_slice().iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn generator_kind_parses() {
+        assert_eq!("normal".parse::<GeneratorKind>().unwrap(), GeneratorKind::Normal);
+        assert_eq!(
+            "rademacher".parse::<GeneratorKind>().unwrap(),
+            GeneratorKind::Rademacher
+        );
+        assert!("gauss".parse::<GeneratorKind>().is_err());
+    }
+
+    #[test]
+    fn weight_vector_follows_section_iii_d() {
+        let processed = vec![true, false, true];
+        let w = weight_vector(&processed, 0.25);
+        assert_eq!(w, vec![0.5, 1.0, 0.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "pnr must be a probability")]
+    fn weight_vector_validates_pnr() {
+        weight_vector(&[true], 1.5);
+    }
+
+    #[test]
+    fn sample_processed_counts() {
+        let mut rng = Rng::seed_from(3);
+        let mask = sample_processed(50, 20, &mut rng);
+        assert_eq!(mask.len(), 50);
+        assert_eq!(mask.iter().filter(|&&b| b).count(), 20);
+    }
+
+    #[test]
+    fn aggregate_parity_sums() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![10.0, 20.0, 30.0, 40.0]);
+        let s = aggregate_parity(&[a, b]);
+        assert_eq!(s.as_slice(), &[11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn gtg_deviation_shrinks_with_u() {
+        let mut rng = Rng::seed_from(4);
+        let small = generator_matrix(GeneratorKind::Normal, 50, 8, &mut rng);
+        let large = generator_matrix(GeneratorKind::Normal, 5000, 8, &mut rng);
+        let d_small = gtg_identity_deviation(&small);
+        let d_large = gtg_identity_deviation(&large);
+        assert!(
+            d_large < d_small,
+            "dev(u=5000) {d_large} !< dev(u=50) {d_small}"
+        );
+        assert!(d_large < 0.1, "{d_large}");
+    }
+}

@@ -1,0 +1,157 @@
+//! Secure aggregation of local parity datasets (paper §VI future work,
+//! after Bonawitz et al. [53]).
+//!
+//! Each ordered client pair `(i, j)`, `i < j`, derives a shared mask
+//! `M_ij` from a pairwise seed; client `i` ships `X̌^(i) + Σ_{j>i} M_ij −
+//! Σ_{j<i} M_ji`, so the server's sum telescopes to the exact composite
+//! parity `Σ_j X̌^(j)` while every individual upload is statistically
+//! masked. Dropouts are handled by the survivors re-sharing the pairwise
+//! seeds they held with the dropped client so the server can subtract the
+//! orphaned masks (the standard seed-recovery path).
+
+use crate::rng::Rng;
+use crate::tensor::Mat;
+
+/// Deterministic pairwise seed for clients `(i, j)` under a session seed.
+/// Symmetric: both endpoints derive the same stream.
+fn pair_seed(session: u64, i: usize, j: usize) -> u64 {
+    let (a, b) = if i < j { (i, j) } else { (j, i) };
+    session
+        ^ (a as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (b as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+}
+
+/// The pairwise mask `M_ij` (shape `rows × cols`) for `i < j`.
+fn pair_mask(session: u64, i: usize, j: usize, rows: usize, cols: usize) -> Mat {
+    let mut rng = Rng::seed_from(pair_seed(session, i, j));
+    let mut m = Mat::zeros(rows, cols);
+    rng.fill_normal_f32(m.as_mut_slice());
+    m
+}
+
+/// Mask client `i`'s parity block for secure upload.
+///
+/// `n` is the total number of participating clients. The masking is
+/// self-cancelling over the full set: `Σ_i masked_i = Σ_i parity_i`.
+pub fn mask_parity(session: u64, i: usize, n: usize, parity: &Mat) -> Mat {
+    let mut out = parity.clone();
+    for j in 0..n {
+        if j == i {
+            continue;
+        }
+        let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+        let m = pair_mask(session, lo, hi, parity.rows(), parity.cols());
+        // convention: the lower index adds, the higher subtracts
+        out.axpy(if i == lo { 1.0 } else { -1.0 }, &m);
+    }
+    out
+}
+
+/// Server-side aggregation of masked uploads from the clients in `alive`
+/// (indices into the original cohort of `n`). For every pair with exactly
+/// one live endpoint, the orphaned mask is reconstructed from the
+/// recovered pairwise seed and subtracted — the dropout-recovery path.
+pub fn aggregate_masked(
+    session: u64,
+    n: usize,
+    alive: &[usize],
+    masked: &[Mat],
+) -> Mat {
+    assert_eq!(alive.len(), masked.len());
+    assert!(!masked.is_empty(), "no uploads to aggregate");
+    let rows = masked[0].rows();
+    let cols = masked[0].cols();
+    let mut sum = Mat::zeros(rows, cols);
+    for m in masked {
+        sum.axpy(1.0, m);
+    }
+    let is_alive = {
+        let mut v = vec![false; n];
+        for &a in alive {
+            v[a] = true;
+        }
+        v
+    };
+    // Cancel masks whose peer dropped out.
+    for &i in alive {
+        for j in 0..n {
+            if j == i || is_alive[j] {
+                continue;
+            }
+            let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+            let m = pair_mask(session, lo, hi, rows, cols);
+            // the live endpoint contributed +m (if lo) or −m (if hi);
+            // remove that contribution
+            sum.axpy(if i == lo { -1.0 } else { 1.0 }, &m);
+        }
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parities(n: usize, rows: usize, cols: usize) -> Vec<Mat> {
+        (0..n)
+            .map(|i| {
+                let mut rng = Rng::seed_from(1000 + i as u64);
+                let mut m = Mat::zeros(rows, cols);
+                rng.fill_normal_f32(m.as_mut_slice());
+                m
+            })
+            .collect()
+    }
+
+    #[test]
+    fn full_cohort_sum_is_exact() {
+        let n = 5;
+        let ps = parities(n, 6, 4);
+        let mut expect = Mat::zeros(6, 4);
+        for p in &ps {
+            expect.axpy(1.0, p);
+        }
+        let masked: Vec<Mat> = (0..n).map(|i| mask_parity(7, i, n, &ps[i])).collect();
+        let alive: Vec<usize> = (0..n).collect();
+        let sum = aggregate_masked(7, n, &alive, &masked);
+        assert!(sum.max_abs_diff(&expect) < 1e-3, "{}", sum.max_abs_diff(&expect));
+    }
+
+    #[test]
+    fn individual_upload_is_masked() {
+        let ps = parities(3, 6, 4);
+        let masked = mask_parity(7, 0, 3, &ps[0]);
+        // masked upload must differ substantially from the raw parity
+        assert!(masked.max_abs_diff(&ps[0]) > 0.5);
+    }
+
+    #[test]
+    fn dropout_recovery_restores_survivor_sum() {
+        let n = 6;
+        let ps = parities(n, 5, 3);
+        let masked: Vec<Mat> = (0..n).map(|i| mask_parity(11, i, n, &ps[i])).collect();
+        // clients 2 and 4 drop out
+        let alive: Vec<usize> = vec![0, 1, 3, 5];
+        let uploads: Vec<Mat> = alive.iter().map(|&i| masked[i].clone()).collect();
+        let sum = aggregate_masked(11, n, &alive, &uploads);
+        let mut expect = Mat::zeros(5, 3);
+        for &i in &alive {
+            expect.axpy(1.0, &ps[i]);
+        }
+        assert!(sum.max_abs_diff(&expect) < 1e-3, "{}", sum.max_abs_diff(&expect));
+    }
+
+    #[test]
+    fn pair_seed_is_symmetric() {
+        assert_eq!(pair_seed(3, 1, 4), pair_seed(3, 4, 1));
+        assert_ne!(pair_seed(3, 1, 4), pair_seed(3, 1, 5));
+        assert_ne!(pair_seed(3, 1, 4), pair_seed(4, 1, 4));
+    }
+
+    #[test]
+    fn single_client_cohort_is_identity() {
+        let ps = parities(1, 2, 2);
+        let masked = mask_parity(9, 0, 1, &ps[0]);
+        assert_eq!(masked.as_slice(), ps[0].as_slice());
+    }
+}

@@ -1,0 +1,377 @@
+//! Experiment configuration: a TOML-subset parser (serde/toml are not
+//! available in this offline environment) plus the typed
+//! [`ExperimentConfig`] all binaries and benches share.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with integer,
+//! float, boolean, `"string"` and flat `[v1, v2, …]` array values, `#`
+//! comments. That covers every config this project ships.
+
+mod parser;
+
+pub use parser::{parse, ConfError, Value};
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::coding::GeneratorKind;
+
+/// Which aggregation scheme the coordinator runs (§V-A "Schemes").
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Scheme {
+    /// Server waits for *all* client updates.
+    NaiveUncoded,
+    /// Server waits for the first `(1-ψ)·n` client updates.
+    GreedyUncoded { psi: f64 },
+    /// CodedFedL with redundancy `δ = u_max / m`.
+    Coded { delta: f64 },
+}
+
+impl Scheme {
+    pub fn label(&self) -> String {
+        match self {
+            Scheme::NaiveUncoded => "naive".into(),
+            Scheme::GreedyUncoded { psi } => format!("greedy(psi={psi})"),
+            Scheme::Coded { delta } => format!("coded(delta={delta})"),
+        }
+    }
+}
+
+/// Everything one training experiment needs; `Default` is the repo's
+/// reduced "default" scale (see python/compile/shapes.py — the two must
+/// agree; the artifact manifest is checked at runtime).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Root RNG seed; every stochastic object derives from it.
+    pub seed: u64,
+    /// Number of clients n.
+    pub clients: usize,
+    /// Raw feature dim d.
+    pub dim: usize,
+    /// RFF dimension q.
+    pub q: usize,
+    /// Classes c.
+    pub classes: usize,
+    /// RBF kernel width σ.
+    pub sigma: f64,
+    /// Per-client local mini-batch rows ℓ_j.
+    pub local_batch: usize,
+    /// Global mini-batches per epoch (m = clients · local_batch per step).
+    pub steps_per_epoch: usize,
+    /// Total epochs.
+    pub epochs: usize,
+    /// Initial learning rate (paper: 6).
+    pub lr: f64,
+    /// Step-decay factor (paper: 0.8)…
+    pub lr_decay: f64,
+    /// …applied at these epochs (paper: 40, 65).
+    pub lr_decay_epochs: Vec<usize>,
+    /// L2 regularisation λ (paper: 9e-6).
+    pub l2: f64,
+    /// Max parity rows the server can process (u_max, AOT-compiled shape).
+    pub u_max: usize,
+    /// Generator matrix distribution.
+    pub generator: GeneratorKind,
+    /// Train set size (m_total = train points across all clients).
+    pub train_size: usize,
+    /// Test set size.
+    pub test_size: usize,
+    /// Artifacts directory.
+    pub artifacts_dir: String,
+    /// Dataset family: "mnist" | "fashion" (synthetic stand-ins unless IDX
+    /// files are present under data/<family>/).
+    pub dataset: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            seed: 0xC0DE_DFED,
+            clients: 30,
+            dim: 784,
+            q: 512,
+            classes: 10,
+            sigma: 5.0,
+            local_batch: 200,
+            steps_per_epoch: 5,
+            epochs: 70,
+            lr: 6.0,
+            lr_decay: 0.8,
+            lr_decay_epochs: vec![40, 65],
+            l2: 9e-6,
+            u_max: 1536,
+            generator: GeneratorKind::Normal,
+            train_size: 30_000,
+            test_size: 2_000,
+            artifacts_dir: "artifacts".into(),
+            dataset: "mnist".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// The paper's full §V-A scale (requires `--preset paper` artifacts).
+    pub fn paper() -> Self {
+        ExperimentConfig {
+            q: 2000,
+            local_batch: 400,
+            u_max: 3072,
+            train_size: 60_000,
+            test_size: 10_000,
+            ..Default::default()
+        }
+    }
+
+    /// Tiny smoke scale used by integration tests.
+    pub fn tiny() -> Self {
+        ExperimentConfig {
+            clients: 5,
+            dim: 32,
+            q: 64,
+            local_batch: 40,
+            steps_per_epoch: 2,
+            epochs: 4,
+            lr_decay_epochs: vec![3],
+            u_max: 128,
+            train_size: 400,
+            test_size: 200,
+            dataset: "easy".into(),
+            ..Default::default()
+        }
+    }
+
+    /// Global mini-batch size m per step.
+    pub fn global_batch(&self) -> usize {
+        self.clients * self.local_batch
+    }
+
+    /// Total training iterations.
+    pub fn total_iters(&self) -> usize {
+        self.epochs * self.steps_per_epoch
+    }
+
+    /// Learning rate at (0-based) epoch `e` (step decay, §V-A).
+    pub fn lr_at_epoch(&self, e: usize) -> f64 {
+        let decays = self.lr_decay_epochs.iter().filter(|&&d| e >= d).count();
+        self.lr * self.lr_decay.powi(decays as i32)
+    }
+
+    /// Load from a TOML-subset file, overriding defaults.
+    pub fn from_file(path: &Path) -> Result<Self, ConfError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfError::Io(format!("{path:?}: {e}")))?;
+        Self::from_str_conf(&text)
+    }
+
+    /// Parse from config text, overriding defaults.
+    pub fn from_str_conf(text: &str) -> Result<Self, ConfError> {
+        let doc = parse(text)?;
+        let mut c = ExperimentConfig::default();
+        let empty = BTreeMap::new();
+        let sec = |name: &str| doc.get(name).unwrap_or(&empty);
+
+        let exp = sec("experiment");
+        read_u64(exp, "seed", &mut c.seed)?;
+        read_usize(exp, "clients", &mut c.clients)?;
+        read_string(exp, "dataset", &mut c.dataset)?;
+        read_string(exp, "artifacts_dir", &mut c.artifacts_dir)?;
+        read_usize(exp, "train_size", &mut c.train_size)?;
+        read_usize(exp, "test_size", &mut c.test_size)?;
+
+        let model = sec("model");
+        read_usize(model, "dim", &mut c.dim)?;
+        read_usize(model, "q", &mut c.q)?;
+        read_usize(model, "classes", &mut c.classes)?;
+        read_f64(model, "sigma", &mut c.sigma)?;
+
+        let tr = sec("training");
+        read_usize(tr, "local_batch", &mut c.local_batch)?;
+        read_usize(tr, "steps_per_epoch", &mut c.steps_per_epoch)?;
+        read_usize(tr, "epochs", &mut c.epochs)?;
+        read_f64(tr, "lr", &mut c.lr)?;
+        read_f64(tr, "lr_decay", &mut c.lr_decay)?;
+        read_f64(tr, "l2", &mut c.l2)?;
+        if let Some(v) = tr.get("lr_decay_epochs") {
+            c.lr_decay_epochs = v
+                .as_array()
+                .ok_or_else(|| bad("training.lr_decay_epochs", "array"))?
+                .iter()
+                .map(|x| {
+                    x.as_int()
+                        .map(|i| i as usize)
+                        .ok_or_else(|| bad("training.lr_decay_epochs", "int array"))
+                })
+                .collect::<Result<_, _>>()?;
+        }
+
+        let cod = sec("coding");
+        read_usize(cod, "u_max", &mut c.u_max)?;
+        if let Some(v) = cod.get("generator") {
+            let s = v.as_str().ok_or_else(|| bad("coding.generator", "string"))?;
+            c.generator = s.parse().map_err(ConfError::Invalid)?;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfError> {
+        if self.clients == 0 {
+            return Err(ConfError::Invalid("clients must be > 0".into()));
+        }
+        if self.train_size % self.clients != 0 {
+            return Err(ConfError::Invalid(format!(
+                "train_size {} must divide evenly across {} clients",
+                self.train_size, self.clients
+            )));
+        }
+        let per_client = self.train_size / self.clients;
+        if per_client % self.local_batch != 0 {
+            return Err(ConfError::Invalid(format!(
+                "per-client shard {per_client} must be a multiple of local_batch {}",
+                self.local_batch
+            )));
+        }
+        if !(self.lr > 0.0) || !(self.lr_decay > 0.0) {
+            return Err(ConfError::Invalid("lr and lr_decay must be > 0".into()));
+        }
+        if self.u_max == 0 {
+            return Err(ConfError::Invalid(
+                "u_max must be > 0 (coding redundancy provides feasibility slack)".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn bad(key: &str, want: &str) -> ConfError {
+    ConfError::Invalid(format!("{key}: expected {want}"))
+}
+
+fn read_u64(
+    sec: &BTreeMap<String, Value>,
+    key: &str,
+    out: &mut u64,
+) -> Result<(), ConfError> {
+    if let Some(v) = sec.get(key) {
+        *out = v.as_int().ok_or_else(|| bad(key, "int"))? as u64;
+    }
+    Ok(())
+}
+
+fn read_usize(
+    sec: &BTreeMap<String, Value>,
+    key: &str,
+    out: &mut usize,
+) -> Result<(), ConfError> {
+    if let Some(v) = sec.get(key) {
+        let i = v.as_int().ok_or_else(|| bad(key, "int"))?;
+        if i < 0 {
+            return Err(bad(key, "non-negative int"));
+        }
+        *out = i as usize;
+    }
+    Ok(())
+}
+
+fn read_f64(
+    sec: &BTreeMap<String, Value>,
+    key: &str,
+    out: &mut f64,
+) -> Result<(), ConfError> {
+    if let Some(v) = sec.get(key) {
+        *out = v.as_float().ok_or_else(|| bad(key, "float"))?;
+    }
+    Ok(())
+}
+
+fn read_string(
+    sec: &BTreeMap<String, Value>,
+    key: &str,
+    out: &mut String,
+) -> Result<(), ConfError> {
+    if let Some(v) = sec.get(key) {
+        *out = v.as_str().ok_or_else(|| bad(key, "string"))?.to_string();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        ExperimentConfig::default().validate().unwrap();
+        ExperimentConfig::tiny().validate().unwrap();
+        ExperimentConfig::paper().validate().unwrap();
+    }
+
+    #[test]
+    fn lr_schedule_matches_paper() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.lr_at_epoch(0), 6.0);
+        assert_eq!(c.lr_at_epoch(39), 6.0);
+        assert!((c.lr_at_epoch(40) - 4.8).abs() < 1e-12);
+        assert!((c.lr_at_epoch(65) - 3.84).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let text = r#"
+# experiment file
+[experiment]
+seed = 7
+clients = 10
+dataset = "fashion"
+train_size = 2000
+test_size = 500
+
+[model]
+dim = 64
+q = 128
+classes = 10
+sigma = 3.5
+
+[training]
+local_batch = 100
+steps_per_epoch = 2
+epochs = 30
+lr = 2.5
+lr_decay = 0.5
+lr_decay_epochs = [10, 20]
+l2 = 0.001
+
+[coding]
+u_max = 256
+generator = "rademacher"
+"#;
+        let c = ExperimentConfig::from_str_conf(text).unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.clients, 10);
+        assert_eq!(c.dataset, "fashion");
+        assert_eq!(c.q, 128);
+        assert!((c.sigma - 3.5).abs() < 1e-12);
+        assert_eq!(c.lr_decay_epochs, vec![10, 20]);
+        assert_eq!(c.generator, GeneratorKind::Rademacher);
+        assert_eq!(c.global_batch(), 1000);
+        assert_eq!(c.total_iters(), 60);
+    }
+
+    #[test]
+    fn rejects_inconsistent_partition() {
+        let text = "[experiment]\nclients = 7\ntrain_size = 100\n";
+        assert!(ExperimentConfig::from_str_conf(text).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_generator() {
+        let text = "[coding]\ngenerator = \"foo\"\n";
+        assert!(ExperimentConfig::from_str_conf(text).is_err());
+    }
+
+    #[test]
+    fn scheme_labels() {
+        assert_eq!(Scheme::NaiveUncoded.label(), "naive");
+        assert_eq!(Scheme::GreedyUncoded { psi: 0.1 }.label(), "greedy(psi=0.1)");
+        assert_eq!(Scheme::Coded { delta: 0.2 }.label(), "coded(delta=0.2)");
+    }
+}

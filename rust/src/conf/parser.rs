@@ -1,0 +1,225 @@
+//! Minimal TOML-subset parser (see module docs in `conf`).
+
+use std::collections::BTreeMap;
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`lr = 6` is fine).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section name → key → value. Keys before any `[section]`
+/// land in the `""` section.
+pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfError {
+    #[error("config io error: {0}")]
+    Io(String),
+    #[error("config parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("invalid config: {0}")]
+    Invalid(String),
+}
+
+fn perr(line: usize, msg: impl Into<String>) -> ConfError {
+    ConfError::Parse { line, msg: msg.into() }
+}
+
+/// Parse config text into a [`Doc`].
+pub fn parse(text: &str) -> Result<Doc, ConfError> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| perr(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(perr(lineno, "empty section name"));
+            }
+            section = name.to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| perr(lineno, "expected `key = value`"))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(perr(lineno, "empty key"));
+        }
+        let value = parse_value(val.trim(), lineno)?;
+        doc.entry(section.clone()).or_default().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+/// Remove a `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (idx, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..idx],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ConfError> {
+    if s.is_empty() {
+        return Err(perr(line, "missing value"));
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| perr(line, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(perr(line, "embedded quote in string"));
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| perr(line, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items = inner
+            .split(',')
+            .map(|item| parse_value(item.trim(), line))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(perr(line, format!("cannot parse value {s:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            "top = 1\n[a]\nx = 2\ny = 3.5\nz = \"hi\"\nb = true\narr = [1, 2, 3]\n",
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"], Value::Int(1));
+        assert_eq!(doc["a"]["x"], Value::Int(2));
+        assert_eq!(doc["a"]["y"], Value::Float(3.5));
+        assert_eq!(doc["a"]["z"], Value::Str("hi".into()));
+        assert_eq!(doc["a"]["b"], Value::Bool(true));
+        assert_eq!(
+            doc["a"]["arr"],
+            Value::Array(vec![Value::Int(1), Value::Int(2), Value::Int(3)])
+        );
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let doc = parse("# header\n\nx = 1 # trailing\ns = \"a # not comment\"\n").unwrap();
+        assert_eq!(doc[""]["x"], Value::Int(1));
+        assert_eq!(doc[""]["s"], Value::Str("a # not comment".into()));
+    }
+
+    #[test]
+    fn negative_and_scientific_numbers() {
+        let doc = parse("a = -4\nb = 9e-6\nc = -1.5e3\n").unwrap();
+        assert_eq!(doc[""]["a"], Value::Int(-4));
+        assert_eq!(doc[""]["b"], Value::Float(9e-6));
+        assert_eq!(doc[""]["c"], Value::Float(-1500.0));
+    }
+
+    #[test]
+    fn float_accepts_int_literal() {
+        assert_eq!(Value::Int(6).as_float(), Some(6.0));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let e = parse("x = 1\noops\n").unwrap_err();
+        match e {
+            ConfError::Parse { line, .. } => assert_eq!(line, 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(parse("x = \"unterminated\n").is_err());
+        assert!(parse("x = [1, 2\n").is_err());
+        assert!(parse("x = what\n").is_err());
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("= 3\n").is_err());
+    }
+
+    #[test]
+    fn later_keys_override() {
+        let doc = parse("[s]\nx = 1\nx = 2\n").unwrap();
+        assert_eq!(doc["s"]["x"], Value::Int(2));
+    }
+}

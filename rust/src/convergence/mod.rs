@@ -1,0 +1,137 @@
+//! Convergence-analysis helpers (paper Appendix E).
+//!
+//! Under the simplifying assumption `GᵀG/u = I`, CodedFedL is SGD with an
+//! unbiased gradient whose variance is bounded by `B = Σ_j B_j` (eq. 58)
+//! and whose full objective is `L`-smooth with `L = (1/m) Σ_j L_j²`
+//! (eq. 59, `L_j` = max singular value of `X̂^(j)`). The paper's bound:
+//!
+//! ```text
+//! E[f(θ̄)] − min f ≤ R √(2B / r_max) + L R² / r_max            (eq. 60)
+//! r_max(ε) = O( R² · max(2B/ε², L/ε) )
+//! ```
+
+use crate::tensor::Mat;
+
+/// Estimate the largest singular value of `X` by power iteration on
+/// `XᵀX` (returns σ_max, i.e. the square root of the top eigenvalue).
+pub fn max_singular_value(x: &Mat, iters: usize) -> f64 {
+    let (n, d) = (x.rows(), x.cols());
+    assert!(n > 0 && d > 0);
+    let mut v = vec![1.0f64 / (d as f64).sqrt(); d];
+    let mut lambda = 0.0f64;
+    for _ in 0..iters {
+        // w = X^T (X v)
+        let mut xv = vec![0.0f64; n];
+        for i in 0..n {
+            let row = x.row(i);
+            let mut s = 0.0f64;
+            for (j, &rv) in row.iter().enumerate() {
+                s += rv as f64 * v[j];
+            }
+            xv[i] = s;
+        }
+        let mut w = vec![0.0f64; d];
+        for i in 0..n {
+            let row = x.row(i);
+            let s = xv[i];
+            for (j, &rv) in row.iter().enumerate() {
+                w[j] += rv as f64 * s;
+            }
+        }
+        let norm = w.iter().map(|a| a * a).sum::<f64>().sqrt();
+        if norm == 0.0 {
+            return 0.0;
+        }
+        lambda = norm;
+        for (vj, wj) in v.iter_mut().zip(&w) {
+            *vj = wj / norm;
+        }
+    }
+    lambda.sqrt()
+}
+
+/// Smoothness constant `L = (1/m) Σ_j L_j²` from per-client top singular
+/// values (eq. 59).
+pub fn smoothness_l(sigma_max: &[f64], m: usize) -> f64 {
+    assert!(m > 0);
+    sigma_max.iter().map(|s| s * s).sum::<f64>() / m as f64
+}
+
+/// Suboptimality bound after `r_max` iterations (eq. 60).
+pub fn suboptimality_bound(r: f64, b: f64, l: f64, r_max: usize) -> f64 {
+    assert!(r_max > 0);
+    r * (2.0 * b / r_max as f64).sqrt() + l * r * r / r_max as f64
+}
+
+/// Iteration complexity to reach error `ε` (paper: `O(R² max(2B/ε², L/ε))`).
+pub fn iteration_complexity(r: f64, b: f64, l: f64, eps: f64) -> f64 {
+    assert!(eps > 0.0);
+    r * r * (2.0 * b / (eps * eps)).max(l / eps)
+}
+
+/// The constant learning rate the analysis prescribes:
+/// `μ = 1 / (L + 1/γ)`, `γ = √(2R²/(B·r_max))`.
+pub fn prescribed_lr(r: f64, b: f64, l: f64, r_max: usize) -> f64 {
+    let gamma = (2.0 * r * r / (b * r_max as f64)).sqrt();
+    1.0 / (l + 1.0 / gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_iteration_diagonal() {
+        // X = diag(3, 1) => sigma_max = 3.
+        let x = Mat::from_vec(2, 2, vec![3.0, 0.0, 0.0, 1.0]);
+        let s = max_singular_value(&x, 50);
+        assert!((s - 3.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn power_iteration_rank_one() {
+        // X = u v^T with |u| = 2, |v| = 5 ⇒ σ = 10.
+        let x = Mat::from_fn(4, 25, |_, _| 0.0);
+        let mut x = x;
+        for i in 0..4 {
+            for j in 0..25 {
+                x.set(i, j, 1.0); // u = ones(4) (norm 2), v = ones(25) (norm 5)
+            }
+        }
+        let s = max_singular_value(&x, 20);
+        assert!((s - 10.0).abs() < 1e-6, "{s}");
+    }
+
+    #[test]
+    fn power_iteration_zero_matrix() {
+        assert_eq!(max_singular_value(&Mat::zeros(3, 3), 10), 0.0);
+    }
+
+    #[test]
+    fn smoothness_formula() {
+        assert!((smoothness_l(&[2.0, 3.0], 13) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bound_decreases_in_iterations() {
+        let b1 = suboptimality_bound(1.0, 4.0, 2.0, 10);
+        let b2 = suboptimality_bound(1.0, 4.0, 2.0, 1000);
+        assert!(b2 < b1);
+    }
+
+    #[test]
+    fn complexity_regimes() {
+        // variance-dominated when 2B/eps^2 > L/eps
+        let r = iteration_complexity(2.0, 10.0, 1.0, 0.1);
+        assert!((r - 4.0 * 2000.0).abs() < 1e-9);
+        // smoothness-dominated for tiny B
+        let r2 = iteration_complexity(2.0, 1e-9, 5.0, 0.1);
+        assert!((r2 - 4.0 * 50.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lr_positive_and_sane() {
+        let lr = prescribed_lr(1.0, 4.0, 2.0, 100);
+        assert!(lr > 0.0 && lr < 1.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! The CodedFedL coordinator — the paper's system contribution.
+//!
+//! [`setup::FedSetup`] owns everything shared across schemes for one
+//! experiment (fleet, non-IID shards, RFF-embedded data, test set), so
+//! naive / greedy / coded runs compare on identical data and delays.
+//! [`trainer::run_scheme`] executes one scheme's full training run on the
+//! virtual MEC clock, computing every gradient through the PJRT runtime.
+
+pub mod setup;
+pub mod trainer;
+
+pub use setup::FedSetup;
+pub use trainer::{run_scheme, TrainOutcome};

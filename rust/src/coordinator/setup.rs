@@ -1,0 +1,177 @@
+//! One-time experiment setup shared by all schemes (fair comparison):
+//! dataset → non-IID shards → distributed RFF embedding → per-client
+//! mini-batches, plus the embedded test set and the fleet.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::conf::ExperimentConfig;
+use crate::data::{self, synth, Dataset};
+use crate::delay::NodeParams;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::tensor::Mat;
+use crate::topology::FleetSpec;
+
+/// One client's embedded data, partitioned into per-step mini-batches.
+#[derive(Clone, Debug)]
+pub struct ClientData {
+    /// Embedded features per mini-batch: `steps × [local_batch, q]`.
+    pub xhat: Vec<Mat>,
+    /// One-hot labels per mini-batch: `steps × [local_batch, c]`.
+    pub y: Vec<Mat>,
+}
+
+/// Everything schemes share for one experiment.
+pub struct FedSetup {
+    pub cfg: ExperimentConfig,
+    pub clients: Vec<NodeParams>,
+    pub server: NodeParams,
+    pub fleet_spec: FleetSpec,
+    pub client_data: Vec<ClientData>,
+    /// Embedded test features `[test_size, q]` + labels.
+    pub test_xhat: Mat,
+    pub test_labels: Vec<u8>,
+    /// Root RNG streams for schemes (delays, generators) are derived from
+    /// this seed so each scheme sees i.i.d. but reproducible draws.
+    pub seed: u64,
+    /// Smoothness constant `L = (1/m) Σ_j σ_max(X̂^(j))²` of the per-step
+    /// objective (paper eq. 59), measured on the first mini-batch. Used to
+    /// clamp the learning rate to the stable region (App. E prescribes
+    /// `μ = 1/(L + 1/γ)`; the paper's literal `lr = 6` diverges on data
+    /// whose kernel spectrum is more concentrated than MNIST's).
+    pub smoothness: f64,
+}
+
+impl FedSetup {
+    /// Build the experiment: generate/load data, build the fleet, shard
+    /// non-IID, embed through the runtime (this is the paper's
+    /// "distributed kernel embedding" — all clients share the
+    /// server-broadcast seed for Ω, δ, Remark 2).
+    pub fn build(cfg: &ExperimentConfig, rt: &Runtime) -> Result<FedSetup> {
+        cfg.validate().map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        let mut root = Rng::seed_from(cfg.seed);
+        let mut data_rng = root.split(1);
+        let mut topo_rng = root.split(2);
+        let mut rff_rng = root.split(3);
+
+        // --- dataset (real IDX files if present, synthetic otherwise) ---
+        let (train, test) = load_dataset(cfg, &mut data_rng)?;
+
+        // --- fleet (§V-A LTE setting) ---
+        let fleet_spec = FleetSpec::paper(cfg.clients, cfg.q, cfg.classes);
+        let clients = fleet_spec.build_clients(&mut topo_rng);
+        let server = fleet_spec.build_server();
+
+        // --- non-IID shards, assigned in expected-delay order (§V-A) ---
+        let shards = data::shard::non_iid_shards(&train, &clients, cfg.local_batch as f64);
+
+        // --- distributed RFF embedding (eq. 18, Remark 2) ---
+        // Ω columns ~ N(0, I/σ²), δ ~ U(0, 2π]; one shared stream = the
+        // shared pseudo-random seed of Remark 2.
+        let mut omega = Mat::zeros(cfg.dim, cfg.q);
+        rff_rng.fill_normal_scaled_f32(omega.as_mut_slice(), 1.0 / cfg.sigma);
+        let mut delta = vec![0.0f32; cfg.q];
+        rff_rng.fill_uniform_phase_f32(&mut delta);
+
+        let steps = cfg.steps_per_epoch;
+        let mut client_data = Vec::with_capacity(cfg.clients);
+        for shard in &shards {
+            let xhat = rt
+                .embed(&shard.x, &omega, &delta)
+                .context("embedding client shard")?;
+            let mut xb = Vec::with_capacity(steps);
+            let mut yb = Vec::with_capacity(steps);
+            for s in 0..steps {
+                xb.push(xhat.rows_slice(s * cfg.local_batch, cfg.local_batch));
+                yb.push(shard.y.rows_slice(s * cfg.local_batch, cfg.local_batch));
+            }
+            client_data.push(ClientData { xhat: xb, y: yb });
+        }
+
+        let test_xhat = rt.embed(&test.x, &omega, &delta).context("embedding test set")?;
+
+        // Smoothness of the per-step objective: the *exact* top eigenvalue
+        // of H = (1/m) X̂ᵀX̂ over one global mini-batch (power iteration on
+        // the stacked client mini-batches). Eq. 59's Σσ_j²/m bound is up
+        // to n× looser and over-clamps the learning rate.
+        let stacked: Vec<&Mat> = client_data.iter().map(|cd| &cd.xhat[0]).collect();
+        let stacked = Mat::vstack(&stacked);
+        let sigma = crate::convergence::max_singular_value(&stacked, 40);
+        let smoothness = sigma * sigma / cfg.global_batch() as f64;
+
+        Ok(FedSetup {
+            cfg: cfg.clone(),
+            clients,
+            server,
+            fleet_spec,
+            client_data,
+            test_xhat,
+            test_labels: test.labels,
+            seed: cfg.seed,
+            smoothness,
+        })
+    }
+
+    /// Effective learning rate at `epoch`: the configured schedule clamped
+    /// into the gradient-descent stability region `lr < 2/(L+λ)` (we use
+    /// a 1.8 safety numerator). All schemes share the clamp, so the
+    /// comparison stays fair.
+    pub fn effective_lr(&self, epoch: usize) -> f64 {
+        // 0.12/(L+λ) rather than the full stable 2/(L+λ): mirrors the
+        // paper's empirically-chosen lr=6, which sits well inside the
+        // stability region and spreads convergence over O(100) iterations
+        // (the regime where per-round wall-clock differences, not round-1
+        // cost, decide time-to-accuracy).
+        let clamp = 0.12 / (self.smoothness + self.cfg.l2);
+        self.cfg.lr_at_epoch(epoch).min(clamp * (self.cfg.lr_decay.powi(
+            self.cfg.lr_decay_epochs.iter().filter(|&&d| epoch >= d).count() as i32,
+        )))
+    }
+
+    /// Global mini-batch size m (the allocation target).
+    pub fn m(&self) -> usize {
+        self.cfg.global_batch()
+    }
+}
+
+/// Real IDX files if present under `data/<family>/`, else the seeded
+/// synthetic family (DESIGN.md §Substitutions).
+fn load_dataset(cfg: &ExperimentConfig, rng: &mut Rng) -> Result<(Dataset, Dataset)> {
+    let dir = Path::new("data").join(&cfg.dataset);
+    let train_images = dir.join("train-images-idx3-ubyte");
+    if train_images.exists() {
+        let mut train = data::idx::load_pair(
+            &train_images,
+            &dir.join("train-labels-idx1-ubyte"),
+            cfg.classes,
+        )?;
+        let mut test = data::idx::load_pair(
+            &dir.join("t10k-images-idx3-ubyte"),
+            &dir.join("t10k-labels-idx1-ubyte"),
+            cfg.classes,
+        )?;
+        anyhow::ensure!(
+            train.feature_dim() == cfg.dim,
+            "IDX feature dim {} != config dim {}",
+            train.feature_dim(),
+            cfg.dim
+        );
+        train.normalize_01();
+        test.normalize_01();
+        let train = train.slice(0, cfg.train_size.min(train.len()));
+        let test = test.slice(0, cfg.test_size.min(test.len()));
+        return Ok((train, test));
+    }
+    let spec = match cfg.dataset.as_str() {
+        "fashion" => synth::fashion_like(cfg.dim),
+        "easy" => synth::easy(cfg.dim),
+        _ => synth::mnist_like(cfg.dim),
+    };
+    // One generator pass so train/test share prototypes.
+    let all = synth::generate(&spec, cfg.train_size + cfg.test_size, rng);
+    let train = all.slice(0, cfg.train_size);
+    let test = all.slice(cfg.train_size, cfg.test_size);
+    Ok((train, test))
+}

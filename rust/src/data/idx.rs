@@ -1,0 +1,118 @@
+//! Loader for the IDX format used by MNIST / Fashion-MNIST distribution
+//! files (`train-images-idx3-ubyte` etc.), so the real datasets are used
+//! automatically when present (see `data::load_or_synth`).
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+use crate::tensor::Mat;
+
+/// Parse an IDX3 (images) byte buffer into `[n, rows*cols]` features
+/// scaled to `[0, 1]`.
+pub fn parse_images(buf: &[u8]) -> Result<Mat> {
+    if buf.len() < 16 {
+        bail!("idx3 file too short ({} bytes)", buf.len());
+    }
+    let magic = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    if magic != 0x0000_0803 {
+        bail!("bad idx3 magic {magic:#010x} (want 0x00000803)");
+    }
+    let n = u32::from_be_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+    let r = u32::from_be_bytes([buf[8], buf[9], buf[10], buf[11]]) as usize;
+    let c = u32::from_be_bytes([buf[12], buf[13], buf[14], buf[15]]) as usize;
+    let want = 16 + n * r * c;
+    if buf.len() != want {
+        bail!("idx3 size mismatch: header says {want} bytes, file has {}", buf.len());
+    }
+    let mut data = Vec::with_capacity(n * r * c);
+    data.extend(buf[16..].iter().map(|&b| b as f32 / 255.0));
+    Ok(Mat::from_vec(n, r * c, data))
+}
+
+/// Parse an IDX1 (labels) byte buffer.
+pub fn parse_labels(buf: &[u8]) -> Result<Vec<u8>> {
+    if buf.len() < 8 {
+        bail!("idx1 file too short ({} bytes)", buf.len());
+    }
+    let magic = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]);
+    if magic != 0x0000_0801 {
+        bail!("bad idx1 magic {magic:#010x} (want 0x00000801)");
+    }
+    let n = u32::from_be_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+    if buf.len() != 8 + n {
+        bail!("idx1 size mismatch: header says {} bytes, file has {}", 8 + n, buf.len());
+    }
+    Ok(buf[8..].to_vec())
+}
+
+/// Load an MNIST-layout directory: `{images_file, labels_file}`.
+pub fn load_pair(images: &Path, labels: &Path, num_classes: usize) -> Result<Dataset> {
+    let ibuf = fs::read(images).with_context(|| format!("reading {images:?}"))?;
+    let lbuf = fs::read(labels).with_context(|| format!("reading {labels:?}"))?;
+    let x = parse_images(&ibuf)?;
+    let l = parse_labels(&lbuf)?;
+    if x.rows() != l.len() {
+        bail!("images ({}) / labels ({}) count mismatch", x.rows(), l.len());
+    }
+    Ok(Dataset::from_labels(x, l, num_classes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idx3(n: usize, r: usize, c: usize, pixels: &[u8]) -> Vec<u8> {
+        let mut b = vec![];
+        b.extend(0x0803u32.to_be_bytes());
+        b.extend((n as u32).to_be_bytes());
+        b.extend((r as u32).to_be_bytes());
+        b.extend((c as u32).to_be_bytes());
+        b.extend(pixels);
+        b
+    }
+
+    fn idx1(labels: &[u8]) -> Vec<u8> {
+        let mut b = vec![];
+        b.extend(0x0801u32.to_be_bytes());
+        b.extend((labels.len() as u32).to_be_bytes());
+        b.extend(labels);
+        b
+    }
+
+    #[test]
+    fn parses_images_and_scales() {
+        let buf = idx3(2, 1, 2, &[0, 255, 128, 0]);
+        let m = parse_images(&buf).unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 2);
+        assert_eq!(m.get(0, 1), 1.0);
+        assert!((m.get(1, 0) - 128.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parses_labels() {
+        assert_eq!(parse_labels(&idx1(&[3, 1, 4])).unwrap(), vec![3, 1, 4]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut buf = idx3(1, 1, 1, &[0]);
+        buf[3] = 0x99;
+        assert!(parse_images(&buf).is_err());
+        let mut lb = idx1(&[1]);
+        lb[3] = 0x99;
+        assert!(parse_labels(&lb).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut buf = idx3(2, 2, 2, &[0; 8]);
+        buf.pop();
+        assert!(parse_images(&buf).is_err());
+        assert!(parse_images(&[1, 2, 3]).is_err());
+        assert!(parse_labels(&[1, 2]).is_err());
+    }
+}

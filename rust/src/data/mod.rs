@@ -1,0 +1,147 @@
+//! Datasets and the paper's non-IID client partitioning (§V-A).
+//!
+//! Real MNIST / Fashion-MNIST is loaded from IDX files when present
+//! (`data/mnist/`, `data/fashion/`); otherwise the seeded synthetic
+//! generators in [`synth`] stand in (DESIGN.md §Substitutions — the
+//! evaluated phenomena are delay-model and sharding properties, preserved
+//! by any 10-class dataset).
+
+pub mod idx;
+pub mod shard;
+pub mod synth;
+
+use crate::tensor::Mat;
+
+/// A supervised dataset: features `x [m, d]`, one-hot labels `y [m, c]`,
+/// and the integer class labels kept for sorting/eval.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Mat,
+    pub y: Mat,
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.y.cols()
+    }
+
+    /// Build one-hot labels from integer labels.
+    pub fn from_labels(x: Mat, labels: Vec<u8>, num_classes: usize) -> Self {
+        assert_eq!(x.rows(), labels.len());
+        let mut y = Mat::zeros(labels.len(), num_classes);
+        for (i, &l) in labels.iter().enumerate() {
+            assert!((l as usize) < num_classes, "label {l} >= c {num_classes}");
+            y.set(i, l as usize, 1.0);
+        }
+        Dataset { x, y, labels }
+    }
+
+    /// Row subset (gather) keeping all three views aligned.
+    pub fn gather(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.gather_rows(idx),
+            y: self.y.gather_rows(idx),
+            labels: idx.iter().map(|&i| self.labels[i]).collect(),
+        }
+    }
+
+    /// Contiguous row range.
+    pub fn slice(&self, start: usize, n: usize) -> Dataset {
+        let idx: Vec<usize> = (start..start + n).collect();
+        self.gather(&idx)
+    }
+
+    /// Normalise features to `[0, 1]` in place (paper §V-A normalises
+    /// before kernel embedding). No-op for an all-constant feature matrix.
+    pub fn normalize_01(&mut self) {
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in self.x.as_slice() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let span = hi - lo;
+        if span <= 0.0 {
+            return;
+        }
+        for v in self.x.as_mut_slice() {
+            *v = (*v - lo) / span;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let x = Mat::from_fn(4, 2, |r, c| (r * 2 + c) as f32);
+        Dataset::from_labels(x, vec![0, 1, 2, 1], 3)
+    }
+
+    #[test]
+    fn one_hot_is_correct() {
+        let d = toy();
+        assert_eq!(d.y.row(0), &[1.0, 0.0, 0.0]);
+        assert_eq!(d.y.row(1), &[0.0, 1.0, 0.0]);
+        assert_eq!(d.y.row(2), &[0.0, 0.0, 1.0]);
+        assert_eq!(d.num_classes(), 3);
+        assert_eq!(d.len(), 4);
+        assert_eq!(d.feature_dim(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "label")]
+    fn one_hot_validates_labels() {
+        Dataset::from_labels(Mat::zeros(1, 1), vec![5], 3);
+    }
+
+    #[test]
+    fn gather_keeps_alignment() {
+        let d = toy();
+        let g = d.gather(&[2, 0]);
+        assert_eq!(g.labels, vec![2, 0]);
+        assert_eq!(g.x.row(0), &[4.0, 5.0]);
+        assert_eq!(g.y.row(0), &[0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn slice_is_contiguous_gather() {
+        let d = toy();
+        let s = d.slice(1, 2);
+        assert_eq!(s.labels, vec![1, 2]);
+        assert_eq!(s.x.row(0), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn normalize_01_bounds() {
+        let mut d = toy();
+        d.normalize_01();
+        let s = d.x.as_slice();
+        assert_eq!(s.iter().cloned().fold(f32::INFINITY, f32::min), 0.0);
+        assert_eq!(s.iter().cloned().fold(f32::NEG_INFINITY, f32::max), 1.0);
+    }
+
+    #[test]
+    fn normalize_01_constant_is_noop() {
+        let mut d = Dataset::from_labels(
+            Mat::from_vec(2, 1, vec![3.0, 3.0]),
+            vec![0, 1],
+            2,
+        );
+        d.normalize_01();
+        assert_eq!(d.x.as_slice(), &[3.0, 3.0]);
+    }
+}

@@ -1,0 +1,125 @@
+//! The paper's non-IID data placement (§V-A).
+//!
+//! The training set is sorted by class label, partitioned into `n` equal
+//! shards (so most shards contain 1–2 classes), clients are sorted by their
+//! *expected* total round time (eq. 15 at the local mini-batch size), and
+//! shards are assigned in that order. This is what makes greedy-uncoded
+//! miss whole classes — the slowest clients own entire classes.
+
+use super::Dataset;
+use crate::delay::NodeParams;
+
+/// Sort-by-label + equal shards + assignment in expected-delay order.
+///
+/// Returns per-client datasets, index `j` = client `j` (matching the order
+/// of `clients`). `mini_batch` is the per-client mini-batch size used in
+/// the expected-delay formula (the paper uses ℓ_j = 400).
+pub fn non_iid_shards(
+    ds: &Dataset,
+    clients: &[NodeParams],
+    mini_batch: f64,
+) -> Vec<Dataset> {
+    let n = clients.len();
+    assert!(n > 0, "no clients");
+    assert_eq!(ds.len() % n, 0, "dataset size {} not divisible by n {}", ds.len(), n);
+    // Stable sort of data indices by label.
+    let mut order: Vec<usize> = (0..ds.len()).collect();
+    order.sort_by_key(|&i| ds.labels[i]);
+
+    // Clients sorted by expected total delay (fastest first).
+    let mut by_speed: Vec<usize> = (0..n).collect();
+    by_speed.sort_by(|&a, &b| {
+        clients[a]
+            .mean_delay(mini_batch)
+            .partial_cmp(&clients[b].mean_delay(mini_batch))
+            .unwrap()
+    });
+
+    let shard = ds.len() / n;
+    let mut out: Vec<Option<Dataset>> = (0..n).map(|_| None).collect();
+    for (rank, &client) in by_speed.iter().enumerate() {
+        let idx = &order[rank * shard..(rank + 1) * shard];
+        out[client] = Some(ds.gather(idx));
+    }
+    out.into_iter().map(|d| d.unwrap()).collect()
+}
+
+/// IID control: shuffle indices with a seeded permutation and deal equal
+/// shards (used by ablation benches).
+pub fn iid_shards(ds: &Dataset, n: usize, rng: &mut crate::rng::Rng) -> Vec<Dataset> {
+    assert!(n > 0 && ds.len() % n == 0);
+    let perm = rng.permutation(ds.len());
+    let shard = ds.len() / n;
+    (0..n)
+        .map(|j| ds.gather(&perm[j * shard..(j + 1) * shard]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, mnist_like};
+    use crate::rng::Rng;
+
+    fn fleet(n: usize) -> Vec<NodeParams> {
+        (0..n)
+            .map(|j| NodeParams {
+                mu: 100.0 * 0.8f64.powi(j as i32),
+                alpha: 2.0,
+                tau: 0.01 * 1.05f64.powi(j as i32),
+                p: 0.1,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shards_equal_size_and_partition() {
+        let ds = generate(&mnist_like(8), 200, &mut Rng::seed_from(1));
+        let shards = non_iid_shards(&ds, &fleet(10), 20.0);
+        assert_eq!(shards.len(), 10);
+        assert!(shards.iter().all(|s| s.len() == 20));
+    }
+
+    #[test]
+    fn shards_are_label_concentrated() {
+        let ds = generate(&mnist_like(8), 500, &mut Rng::seed_from(2));
+        let shards = non_iid_shards(&ds, &fleet(10), 50.0);
+        for s in &shards {
+            let distinct: std::collections::HashSet<u8> =
+                s.labels.iter().copied().collect();
+            assert!(distinct.len() <= 2, "shard has {} classes", distinct.len());
+        }
+    }
+
+    #[test]
+    fn fastest_client_gets_lowest_labels() {
+        let ds = generate(&mnist_like(8), 100, &mut Rng::seed_from(3));
+        let clients = fleet(10); // client 0 is fastest by construction
+        let shards = non_iid_shards(&ds, &clients, 10.0);
+        let min0 = *shards[0].labels.iter().min().unwrap();
+        let max0 = *shards[0].labels.iter().max().unwrap();
+        assert_eq!(min0, 0);
+        assert!(max0 <= 1);
+        // slowest client owns the top classes
+        let min_last = *shards[9].labels.iter().min().unwrap();
+        assert!(min_last >= 8);
+    }
+
+    #[test]
+    fn iid_shards_cover_classes() {
+        let ds = generate(&mnist_like(8), 400, &mut Rng::seed_from(4));
+        let shards = iid_shards(&ds, 4, &mut Rng::seed_from(5));
+        for s in &shards {
+            let distinct: std::collections::HashSet<u8> =
+                s.labels.iter().copied().collect();
+            assert!(distinct.len() >= 8, "iid shard lost classes");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn rejects_ragged_partition() {
+        let ds = generate(&mnist_like(8), 101, &mut Rng::seed_from(6));
+        non_iid_shards(&ds, &fleet(10), 10.0);
+    }
+}

@@ -1,0 +1,185 @@
+//! Asymmetric downlink/uplink delay model (paper footnote 1: "easy to
+//! address" generalisation; §VI future work).
+//!
+//! The symmetric model assumes reciprocal links; here the two legs have
+//! independent packet times and erasure probabilities:
+//!
+//! ```text
+//! T = ℓ̃/μ + Exp(αμ/ℓ̃) + τ_d·N_d + τ_u·N_u,
+//! N_d ~ Geometric(1−p_d),  N_u ~ Geometric(1−p_u)  (independent)
+//! ```
+//!
+//! The exact CDF generalises the Theorem's single negative-binomial series
+//! to a truncated double series over `(ν_d, ν_u)`.
+
+use crate::rng::Rng;
+
+use super::NodeParams;
+
+/// Node with direction-dependent link parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AsymNodeParams {
+    pub mu: f64,
+    pub alpha: f64,
+    pub tau_down: f64,
+    pub tau_up: f64,
+    pub p_down: f64,
+    pub p_up: f64,
+}
+
+impl AsymNodeParams {
+    /// The reciprocal special case — must agree with [`NodeParams`].
+    pub fn symmetric(n: &NodeParams) -> Self {
+        AsymNodeParams {
+            mu: n.mu,
+            alpha: n.alpha,
+            tau_down: n.tau,
+            tau_up: n.tau,
+            p_down: n.p,
+            p_up: n.p,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.mu > 0.0) || !(self.alpha > 0.0) {
+            return Err("mu and alpha must be > 0".into());
+        }
+        if self.tau_down < 0.0 || self.tau_up < 0.0 {
+            return Err("tau must be >= 0".into());
+        }
+        if !(0.0..1.0).contains(&self.p_down) || !(0.0..1.0).contains(&self.p_up) {
+            return Err("p must be in [0,1)".into());
+        }
+        Ok(())
+    }
+
+    /// Mean delay: `(ℓ̃/μ)(1+1/α) + τ_d/(1−p_d) + τ_u/(1−p_u)` —
+    /// the asymmetric version of eq. (15).
+    pub fn mean_delay(&self, ell: f64) -> f64 {
+        (ell / self.mu) * (1.0 + 1.0 / self.alpha)
+            + self.tau_down / (1.0 - self.p_down)
+            + self.tau_up / (1.0 - self.p_up)
+    }
+
+    /// Exact CDF `P(T ≤ t)` via the truncated double geometric series.
+    pub fn cdf(&self, t: f64, ell: f64) -> f64 {
+        if t <= 0.0 {
+            return 0.0;
+        }
+        let det = ell / self.mu;
+        let gamma = if ell > 0.0 { self.alpha * self.mu / ell } else { f64::INFINITY };
+        let qd = 1.0 - self.p_down;
+        let qu = 1.0 - self.p_up;
+        let mut sum = 0.0;
+        let mut pd_pow = qd; // P(N_d = a) = p_d^(a-1) q_d
+        let mut a = 1u64;
+        loop {
+            let t_after_down = t - det - self.tau_down * a as f64;
+            if t_after_down - self.tau_up <= 0.0 || pd_pow < 1e-14 {
+                // either no room for even one uplink packet, or negligible
+                // tail mass
+                if self.tau_down > 0.0 || a > 1 {
+                    break;
+                }
+            }
+            let mut pu_pow = qu;
+            let mut b = 1u64;
+            loop {
+                let slack = t_after_down - self.tau_up * b as f64;
+                if slack <= 0.0 || pu_pow < 1e-14 {
+                    break;
+                }
+                let f = if gamma.is_infinite() {
+                    1.0
+                } else {
+                    1.0 - (-gamma * slack).exp()
+                };
+                sum += pd_pow * pu_pow * f;
+                pu_pow *= self.p_up;
+                b += 1;
+                if self.tau_up == 0.0 && b > 64 {
+                    break; // free uplink: geometric tail is tiny past 64
+                }
+            }
+            pd_pow *= self.p_down;
+            a += 1;
+            if self.tau_down == 0.0 && a > 64 {
+                break;
+            }
+        }
+        sum.clamp(0.0, 1.0)
+    }
+
+    /// Sample one epoch delay.
+    pub fn sample_delay(&self, ell: f64, rng: &mut Rng) -> f64 {
+        let det = ell / self.mu;
+        let stoch = if ell == 0.0 {
+            0.0
+        } else {
+            rng.next_exponential(self.alpha * self.mu / ell)
+        };
+        let nd = rng.next_geometric_trials(self.p_down);
+        let nu = rng.next_geometric_trials(self.p_up);
+        det + stoch + self.tau_down * nd as f64 + self.tau_up * nu as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetric_case_matches_base_model() {
+        let base = NodeParams { mu: 3.0, alpha: 2.0, tau: 0.8, p: 0.25 };
+        let asym = AsymNodeParams::symmetric(&base);
+        let ell = 7.0;
+        for &t in &[2.0, 4.0, 8.0, 16.0] {
+            let a = asym.cdf(t, ell);
+            let b = base.cdf(t, ell);
+            assert!((a - b).abs() < 1e-9, "t={t}: asym {a} vs base {b}");
+        }
+        assert!((asym.mean_delay(ell) - base.mean_delay(ell)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_matches_monte_carlo() {
+        let n = AsymNodeParams {
+            mu: 2.0,
+            alpha: 2.0,
+            tau_down: 0.5,
+            tau_up: 1.5,
+            p_down: 0.4,
+            p_up: 0.1,
+        };
+        let mut rng = Rng::seed_from(21);
+        let ell = 4.0;
+        for &t in &[4.0, 6.0, 10.0] {
+            let trials = 60_000;
+            let hits = (0..trials).filter(|_| n.sample_delay(ell, &mut rng) <= t).count();
+            let emp = hits as f64 / trials as f64;
+            let exact = n.cdf(t, ell);
+            assert!((emp - exact).abs() < 0.01, "t={t}: {emp} vs {exact}");
+        }
+    }
+
+    #[test]
+    fn slower_uplink_shifts_the_distribution() {
+        let fast = AsymNodeParams {
+            mu: 2.0, alpha: 2.0, tau_down: 0.5, tau_up: 0.5, p_down: 0.1, p_up: 0.1,
+        };
+        let slow = AsymNodeParams { tau_up: 3.0, ..fast };
+        assert!(slow.mean_delay(5.0) > fast.mean_delay(5.0));
+        assert!(slow.cdf(6.0, 5.0) < fast.cdf(6.0, 5.0));
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        let ok = AsymNodeParams {
+            mu: 1.0, alpha: 1.0, tau_down: 0.1, tau_up: 0.1, p_down: 0.0, p_up: 0.0,
+        };
+        assert!(ok.validate().is_ok());
+        assert!(AsymNodeParams { mu: 0.0, ..ok }.validate().is_err());
+        assert!(AsymNodeParams { p_up: 1.0, ..ok }.validate().is_err());
+        assert!(AsymNodeParams { tau_down: -1.0, ..ok }.validate().is_err());
+    }
+}

@@ -1,0 +1,251 @@
+//! The paper's MEC compute + communication delay substrate (§II-B).
+//!
+//! Per node `j` the one-epoch execution time is (eqs. 11–14)
+//!
+//! ```text
+//! T_j = ℓ̃/μ  +  Exp(αμ/ℓ̃)  +  τ · (N_down + N_up)
+//! ```
+//!
+//! with `N_down, N_up ~ Geometric(1 - p)` i.i.d. retransmission counts.
+//! This module provides exact CDF/mean formulas (Theorem eq. 42 and eq. 15)
+//! used by the allocation optimizer, and samplers used by the virtual-clock
+//! round simulator. The MEC server's computing unit uses the same model
+//! with server-grade parameters (§III-C).
+
+pub mod asymmetric;
+
+use crate::rng::Rng;
+
+/// Stochastic parameters of one node (client or MEC computing unit).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeParams {
+    /// Deterministic data-processing rate μ (data points / second).
+    pub mu: f64,
+    /// Compute-to-memory-access ratio α (> 0); the stochastic compute part
+    /// is `Exp(αμ/ℓ̃)`, i.e. mean `ℓ̃/(αμ)`.
+    pub alpha: f64,
+    /// Per-packet transmission time τ = b / (ηW) seconds.
+    pub tau: f64,
+    /// Wireless erasure probability `p ∈ [0, 1)`; `p = 0` models the AWGN
+    /// special case (one reliable transmission).
+    pub p: f64,
+}
+
+impl NodeParams {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.mu > 0.0) {
+            return Err(format!("mu must be > 0, got {}", self.mu));
+        }
+        if !(self.alpha > 0.0) {
+            return Err(format!("alpha must be > 0, got {}", self.alpha));
+        }
+        if !(self.tau >= 0.0) {
+            return Err(format!("tau must be >= 0, got {}", self.tau));
+        }
+        if !(0.0..1.0).contains(&self.p) {
+            return Err(format!("p must be in [0,1), got {}", self.p));
+        }
+        Ok(())
+    }
+
+    /// Mean epoch delay, eq. (15):
+    /// `E[T] = (ℓ̃/μ)(1 + 1/α) + 2τ/(1-p)`.
+    pub fn mean_delay(&self, ell: f64) -> f64 {
+        (ell / self.mu) * (1.0 + 1.0 / self.alpha) + 2.0 * self.tau / (1.0 - self.p)
+    }
+
+    /// Largest retransmission total `ν_m` with `t - τ ν_m > 0` and
+    /// `t - τ(ν_m + 1) ≤ 0`; `None` when even `ν = 2` (one down + one up)
+    /// cannot complete, i.e. `t ≤ 2τ`.
+    pub fn nu_max(&self, t: f64) -> Option<u64> {
+        if self.tau == 0.0 {
+            // No communication cost: unbounded ν is meaningless; model as
+            // "links are free" and signal with a large sentinel of 2.
+            return if t > 0.0 { Some(u64::MAX) } else { None };
+        }
+        let x = t / self.tau;
+        // ν_m = ceil(x) - 1, adjusted for exact multiples.
+        let nu = if (x - x.round()).abs() < 1e-12 {
+            x.round() as i64 - 1
+        } else {
+            x.floor() as i64
+        };
+        if nu >= 2 {
+            Some(nu as u64)
+        } else {
+            None
+        }
+    }
+
+    /// Exact CDF `P(T ≤ t)` for processed load `ℓ̃` (Theorem / eq. 42).
+    ///
+    /// `ℓ̃ = 0` is the limit where compute time vanishes and only the two
+    /// communication legs remain.
+    pub fn cdf(&self, t: f64, ell: f64) -> f64 {
+        assert!(ell >= 0.0);
+        if t <= 0.0 {
+            return 0.0;
+        }
+        if self.tau == 0.0 {
+            // Pure compute: P(ℓ/μ + Exp(αμ/ℓ) ≤ t).
+            let det = ell / self.mu;
+            if t <= det {
+                return 0.0;
+            }
+            if ell == 0.0 {
+                return 1.0;
+            }
+            let gamma = self.alpha * self.mu / ell;
+            return 1.0 - (-(gamma) * (t - det)).exp();
+        }
+        let Some(nu_m) = self.nu_max(t) else {
+            return 0.0;
+        };
+        let det = ell / self.mu;
+        let q = 1.0 - self.p;
+        let mut sum = 0.0;
+        // P(N_com = ν) = (ν-1)(1-p)² p^(ν-2), ν ≥ 2 (NB(2, 1-p)).
+        let mut pmf_tail = q * q; // p^(ν-2) factor accumulates below
+        for nu in 2..=nu_m {
+            let slack = t - det - self.tau * nu as f64;
+            if slack <= 0.0 {
+                // Larger ν only shrinks slack further.
+                break;
+            }
+            let h = (nu - 1) as f64 * pmf_tail;
+            let f = if ell == 0.0 {
+                1.0
+            } else {
+                let gamma = self.alpha * self.mu / ell;
+                1.0 - (-gamma * slack).exp()
+            };
+            sum += h * f;
+            pmf_tail *= self.p;
+            if pmf_tail < 1e-300 {
+                break;
+            }
+        }
+        sum.clamp(0.0, 1.0)
+    }
+
+    /// Draw one epoch delay `T` for processed load `ℓ̃` (eqs. 11–14).
+    pub fn sample_delay(&self, ell: f64, rng: &mut Rng) -> f64 {
+        let det = ell / self.mu;
+        let stoch = if ell == 0.0 {
+            0.0
+        } else {
+            rng.next_exponential(self.alpha * self.mu / ell)
+        };
+        let n_down = rng.next_geometric_trials(self.p);
+        let n_up = rng.next_geometric_trials(self.p);
+        det + stoch + self.tau * (n_down + n_up) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn node() -> NodeParams {
+        NodeParams { mu: 2.0, alpha: 20.0, tau: 3f64.sqrt(), p: 0.9 }
+    }
+
+    #[test]
+    fn validate_catches_bad_params() {
+        assert!(node().validate().is_ok());
+        assert!(NodeParams { mu: 0.0, ..node() }.validate().is_err());
+        assert!(NodeParams { alpha: -1.0, ..node() }.validate().is_err());
+        assert!(NodeParams { p: 1.0, ..node() }.validate().is_err());
+        assert!(NodeParams { tau: -0.1, ..node() }.validate().is_err());
+    }
+
+    #[test]
+    fn nu_max_brackets_t() {
+        let n = node();
+        // paper: ν_m satisfies t - τν_m > 0 and t - τ(ν_m+1) <= 0.
+        for &t in &[3.5, 5.2, 10.0, 17.32, 100.0] {
+            if let Some(nu) = n.nu_max(t) {
+                assert!(t - n.tau * nu as f64 > 0.0);
+                assert!(t - n.tau * (nu + 1) as f64 <= 1e-9);
+            } else {
+                assert!(t <= 2.0 * n.tau + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn cdf_zero_before_two_packets() {
+        let n = node();
+        assert_eq!(n.cdf(2.0 * n.tau, 1.0), 0.0);
+        assert_eq!(n.cdf(0.0, 1.0), 0.0);
+        assert_eq!(n.cdf(-5.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn cdf_monotone_in_t_and_decreasing_in_ell() {
+        let n = node();
+        let mut prev = 0.0;
+        for i in 1..200 {
+            let t = i as f64 * 0.5;
+            let c = n.cdf(t, 10.0);
+            assert!(c >= prev - 1e-12, "t={t}");
+            assert!((0.0..=1.0).contains(&c));
+            prev = c;
+        }
+        // more load => later completion
+        assert!(n.cdf(30.0, 5.0) >= n.cdf(30.0, 20.0));
+    }
+
+    #[test]
+    fn cdf_matches_monte_carlo() {
+        let n = NodeParams { mu: 2.0, alpha: 2.0, tau: 1.0, p: 0.3 };
+        let mut rng = Rng::seed_from(11);
+        let ell = 6.0;
+        for &t in &[4.0, 6.0, 9.0] {
+            let trials = 60_000;
+            let hits = (0..trials)
+                .filter(|_| n.sample_delay(ell, &mut rng) <= t)
+                .count();
+            let emp = hits as f64 / trials as f64;
+            let exact = n.cdf(t, ell);
+            assert!(
+                (emp - exact).abs() < 0.01,
+                "t={t}: empirical {emp} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn mean_matches_monte_carlo() {
+        let n = NodeParams { mu: 4.0, alpha: 2.0, tau: 0.5, p: 0.1 };
+        let mut rng = Rng::seed_from(12);
+        let ell = 8.0;
+        let trials = 60_000;
+        let sum: f64 = (0..trials).map(|_| n.sample_delay(ell, &mut rng)).sum();
+        let emp = sum / trials as f64;
+        let exact = n.mean_delay(ell);
+        assert!((emp - exact).abs() / exact < 0.02, "{emp} vs {exact}");
+    }
+
+    #[test]
+    fn awgn_cdf_shape() {
+        // p = 0: exactly ν = 2 packets, shifted exponential beyond 2τ + ℓ/μ.
+        let n = NodeParams { mu: 2.0, alpha: 2.0, tau: 1.0, p: 0.0 };
+        let ell = 4.0;
+        let det = ell / n.mu + 2.0 * n.tau;
+        assert_eq!(n.cdf(det, ell), 0.0);
+        let gamma = n.alpha * n.mu / ell;
+        for &dt in &[0.5, 1.0, 3.0] {
+            let exact = 1.0 - (-gamma * dt).exp();
+            assert!((n.cdf(det + dt, ell) - exact).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn zero_load_is_comm_only() {
+        let n = NodeParams { mu: 2.0, alpha: 2.0, tau: 1.0, p: 0.0 };
+        assert_eq!(n.cdf(2.0001, 0.0), 1.0);
+        assert_eq!(n.cdf(1.9999, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,36 @@
+//! # CodedFedL
+//!
+//! Production reproduction of *“Coded Computing for Low-Latency Federated
+//! Learning over Wireless Edge Networks”* (Prakash et al., IEEE JSAC 2020).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (RFF embed, masked regression gradient, parity
+//!   encode) authored in `python/compile/kernels/`, lowered once.
+//! * **L2** — JAX graphs composing those kernels
+//!   (`python/compile/model.py`), AOT-exported to HLO text in `artifacts/`.
+//! * **L3** — this crate: the wireless-MEC delay substrate, the
+//!   load-allocation optimizer, the distributed-encoding bookkeeping and the
+//!   coded federated training loop, all executing the L2 artifacts through
+//!   the PJRT C API (`xla` crate). Python never runs on the training path.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod allocation;
+pub mod benchutil;
+pub mod cli;
+pub mod coding;
+pub mod conf;
+pub mod convergence;
+pub mod coordinator;
+pub mod data;
+pub mod delay;
+pub mod metrics;
+pub mod numerics;
+pub mod privacy;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod topology;

@@ -1,0 +1,252 @@
+//! `codedfedl` — leader binary: train federated schemes on the simulated
+//! wireless MEC fleet, inspect load allocation, and report privacy budgets.
+//!
+//! Run `codedfedl --help` for commands. The heavy lifting lives in the
+//! library (`rust/src/`); this file is argument plumbing only.
+
+use anyhow::Result;
+
+use codedfedl::allocation::{self, NodeSpec};
+use codedfedl::benchutil;
+use codedfedl::cli::{parse_argv, Args, Command, OptSpec};
+use codedfedl::conf::{ExperimentConfig, Scheme};
+use codedfedl::metrics::GainRow;
+use codedfedl::topology::FleetSpec;
+
+fn commands() -> Vec<Command> {
+    let common = vec![
+        OptSpec { name: "config", help: "TOML config file", default: None, is_flag: false },
+        OptSpec { name: "seed", help: "root RNG seed", default: None, is_flag: false },
+        OptSpec { name: "epochs", help: "override epochs", default: None, is_flag: false },
+        OptSpec { name: "preset", help: "tiny|default|paper", default: Some("default"), is_flag: false },
+    ];
+    vec![
+        Command {
+            name: "train",
+            about: "train one scheme (naive | greedy | coded) end to end",
+            opts: [
+                common.clone(),
+                vec![
+                    OptSpec { name: "scheme", help: "naive|greedy|coded", default: Some("coded"), is_flag: false },
+                    OptSpec { name: "delta", help: "coding redundancy u_max/m", default: Some("0.1"), is_flag: false },
+                    OptSpec { name: "psi", help: "greedy drop fraction", default: Some("0.1"), is_flag: false },
+                ],
+            ]
+            .concat(),
+        },
+        Command {
+            name: "compare",
+            about: "run naive vs greedy vs coded on one setup; print gain table",
+            opts: [
+                common.clone(),
+                vec![
+                    OptSpec { name: "delta", help: "coding redundancy", default: Some("0.1"), is_flag: false },
+                    OptSpec { name: "psi", help: "greedy drop fraction", default: Some("0.1"), is_flag: false },
+                    OptSpec { name: "gamma", help: "target accuracy for the gain row", default: None, is_flag: false },
+                ],
+            ]
+            .concat(),
+        },
+        Command {
+            name: "allocate",
+            about: "solve the two-step load allocation for the paper fleet and print (t*, ℓ*, u*)",
+            opts: [
+                common.clone(),
+                vec![OptSpec { name: "delta", help: "coding redundancy", default: Some("0.1"), is_flag: false }],
+            ]
+            .concat(),
+        },
+        Command {
+            name: "outage",
+            about: "outage-constrained deadline: min t with P(R(t) < (1-eps)m) <= eta (§VI extension)",
+            opts: [
+                common.clone(),
+                vec![
+                    OptSpec { name: "delta", help: "coding redundancy", default: Some("0.1"), is_flag: false },
+                    OptSpec { name: "eps", help: "allowed return shortfall fraction", default: Some("0.1"), is_flag: false },
+                    OptSpec { name: "eta", help: "outage probability bound", default: Some("0.05"), is_flag: false },
+                ],
+            ]
+            .concat(),
+        },
+        Command {
+            name: "info",
+            about: "print the resolved experiment configuration",
+            opts: common,
+        },
+    ]
+}
+
+fn config_from(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get_or("preset", "default") {
+        "tiny" => ExperimentConfig::tiny(),
+        "paper" => ExperimentConfig::paper(),
+        _ => ExperimentConfig::default(),
+    };
+    if let Some(path) = args.get("config") {
+        cfg = ExperimentConfig::from_file(std::path::Path::new(path))
+            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    }
+    if let Some(seed) = args.parse_u64("seed").map_err(anyhow::Error::msg)? {
+        cfg.seed = seed;
+    }
+    if let Some(e) = args.parse_usize("epochs").map_err(anyhow::Error::msg)? {
+        cfg.epochs = e;
+    }
+    Ok(cfg)
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, args) = match parse_argv(&commands(), &argv) {
+        Ok(x) => x,
+        Err(msg) => {
+            eprintln!("{msg}");
+            let help = argv.first().map(|s| s.as_str()) == Some("--help");
+            std::process::exit(if help { 0 } else { 2 });
+        }
+    };
+    if let Err(e) = dispatch(cmd, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "train" => cmd_train(args),
+        "compare" => cmd_compare(args),
+        "allocate" => cmd_allocate(args),
+        "outage" => cmd_outage(args),
+        "info" => {
+            println!("{:#?}", config_from(args)?);
+            Ok(())
+        }
+        _ => unreachable!("cli validated"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let delta = args.parse_f64("delta").map_err(anyhow::Error::msg)?.unwrap_or(0.1);
+    let psi = args.parse_f64("psi").map_err(anyhow::Error::msg)?.unwrap_or(0.1);
+    let scheme = match args.get_or("scheme", "coded") {
+        "naive" => Scheme::NaiveUncoded,
+        "greedy" => Scheme::GreedyUncoded { psi },
+        "coded" => Scheme::Coded { delta },
+        other => anyhow::bail!("unknown scheme {other:?}"),
+    };
+    let (_, results) = benchutil::run_experiment(&cfg, &[scheme])?;
+    let (s, out) = &results[0];
+    println!("scheme: {}", s.label());
+    if let (Some(t), Some(u)) = (out.t_star, out.u_star) {
+        println!("t* = {t:.2} s   u* = {u}   parity overhead = {:.1} s", out.parity_overhead);
+    }
+    let stride = (out.history.points.len() / 20).max(1);
+    for p in out.history.points.iter().step_by(stride) {
+        println!(
+            "iter {:>5}  sim {:>10.1} s  acc {:.4}  loss {:.5}",
+            p.iter, p.sim_time, p.accuracy, p.train_loss
+        );
+    }
+    println!("final accuracy {:.4}", out.history.final_accuracy());
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let delta = args.parse_f64("delta").map_err(anyhow::Error::msg)?.unwrap_or(0.1);
+    let psi = args.parse_f64("psi").map_err(anyhow::Error::msg)?.unwrap_or(0.1);
+    let schemes = [
+        Scheme::NaiveUncoded,
+        Scheme::GreedyUncoded { psi },
+        Scheme::Coded { delta },
+    ];
+    let (_, results) = benchutil::run_experiment(&cfg, &schemes)?;
+    let naive = &results[0].1.history;
+    let greedy = &results[1].1.history;
+    let coded = &results[2].1.history;
+
+    println!(
+        "{}",
+        benchutil::ascii_curves(
+            "accuracy vs simulated time",
+            &[naive, greedy, coded],
+            |p| p.sim_time,
+            "seconds",
+        )
+    );
+    let gamma = args
+        .parse_f64("gamma")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or_else(|| 0.95 * naive.best_accuracy());
+    println!("{}", GainRow::compute(gamma, naive, greedy, coded).render());
+    Ok(())
+}
+
+fn cmd_outage(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let delta = args.parse_f64("delta").map_err(anyhow::Error::msg)?.unwrap_or(0.1);
+    let eps = args.parse_f64("eps").map_err(anyhow::Error::msg)?.unwrap_or(0.1);
+    let eta = args.parse_f64("eta").map_err(anyhow::Error::msg)?.unwrap_or(0.05);
+    let spec = FleetSpec::paper(cfg.clients, cfg.q, cfg.classes);
+    let mut rng = codedfedl::rng::Rng::seed_from(cfg.seed).split(2);
+    let clients = spec.build_clients(&mut rng);
+    let m = cfg.global_batch() as f64;
+    let mut nodes: Vec<NodeSpec> = clients
+        .iter()
+        .map(|p| NodeSpec { params: *p, max_load: cfg.local_batch as f64 })
+        .collect();
+    nodes.push(NodeSpec { params: spec.build_server(), max_load: (delta * m).round() });
+
+    // Expected-return solve for comparison.
+    let mean = allocation::solve(&nodes, m).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    println!("expected-return deadline: t* = {:.3} s (E[R] = m)", mean.t_star);
+
+    let sol = allocation::outage::solve_outage(&nodes, m, eps, eta)
+        .ok_or_else(|| anyhow::anyhow!("outage target infeasible for this fleet"))?;
+    println!(
+        "outage-constrained:       t* = {:.3} s  (P(R < {:.0}) = {:.4} <= eta {eta})",
+        sol.t_star,
+        (1.0 - eps) * m,
+        sol.outage
+    );
+    println!(
+        "guarding the {:.0}% tail costs {:+.1}% deadline vs the mean target",
+        eta * 100.0,
+        100.0 * (sol.t_star - mean.t_star) / mean.t_star
+    );
+    Ok(())
+}
+
+fn cmd_allocate(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let delta = args.parse_f64("delta").map_err(anyhow::Error::msg)?.unwrap_or(0.1);
+    let spec = FleetSpec::paper(cfg.clients, cfg.q, cfg.classes);
+    let mut rng = codedfedl::rng::Rng::seed_from(cfg.seed).split(2);
+    let clients = spec.build_clients(&mut rng);
+    let m = cfg.global_batch() as f64;
+    let u_cap = (delta * m).round();
+    let mut nodes: Vec<NodeSpec> = clients
+        .iter()
+        .map(|p| NodeSpec { params: *p, max_load: cfg.local_batch as f64 })
+        .collect();
+    nodes.push(NodeSpec { params: spec.build_server(), max_load: u_cap });
+    let alloc = allocation::solve(&nodes, m).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    println!("m = {m}   δ = {delta}   u_cap = {u_cap}");
+    println!("t* = {:.3} s   u* = {:.1}", alloc.t_star, alloc.u_star());
+    println!("{:<6} {:>10} {:>12} {:>10} {:>8}", "node", "l*", "E[R]", "pnr", "tau(s)");
+    for (j, ((l, er), p)) in alloc
+        .loads
+        .iter()
+        .zip(&alloc.expected_returns)
+        .zip(&alloc.pnr)
+        .enumerate()
+    {
+        let tau = nodes[j].params.tau;
+        let name = if j < clients.len() { format!("c{j:02}") } else { "srv".into() };
+        println!("{name:<6} {l:>10.1} {er:>12.2} {p:>10.4} {tau:>8.2}");
+    }
+    println!("total E[R] = {:.2} (target m = {m})", alloc.total_expected_return());
+    Ok(())
+}

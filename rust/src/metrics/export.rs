@@ -1,0 +1,119 @@
+//! Export of convergence histories: CSV (for external plotting) and
+//! markdown tables (for EXPERIMENTS.md-style reports).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{GainRow, History};
+
+/// Write several histories into one long-format CSV:
+/// `scheme,iter,sim_time_s,accuracy,train_loss`.
+pub fn write_csv(path: &Path, histories: &[&History]) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {path:?}"))?;
+    writeln!(f, "scheme,iter,sim_time_s,accuracy,train_loss")?;
+    for h in histories {
+        for p in &h.points {
+            writeln!(
+                f,
+                "{},{},{:.6},{:.6},{:.6}",
+                h.label, p.iter, p.sim_time, p.accuracy, p.train_loss
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// Render histories to the same CSV format as a string (for tests /
+/// stdout piping).
+pub fn to_csv_string(histories: &[&History]) -> String {
+    let mut s = String::from("scheme,iter,sim_time_s,accuracy,train_loss\n");
+    for h in histories {
+        for p in &h.points {
+            s.push_str(&format!(
+                "{},{},{:.6},{:.6},{:.6}\n",
+                h.label, p.iter, p.sim_time, p.accuracy, p.train_loss
+            ));
+        }
+    }
+    s
+}
+
+/// Markdown gain table in the paper's Table II/III layout.
+pub fn gain_table_markdown(rows: &[GainRow]) -> String {
+    let mut s = String::from(
+        "| γ (%) | t_U (h) | t_G (h) | t_C (h) | t_U/t_C | t_G/t_C |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    let h = |t: Option<f64>| {
+        t.map(|x| format!("{:.2}", x / 3600.0)).unwrap_or_else(|| "—".into())
+    };
+    let g = |x: Option<f64>| x.map(|v| format!("{v:.1}×")).unwrap_or_else(|| "—".into());
+    for r in rows {
+        s.push_str(&format!(
+            "| {:.1} | {} | {} | {} | {} | {} |\n",
+            r.gamma * 100.0,
+            h(r.t_naive),
+            h(r.t_greedy),
+            h(r.t_coded),
+            g(r.gain_vs_naive()),
+            g(r.gain_vs_greedy()),
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Point;
+
+    fn hist() -> History {
+        let mut h = History::new("coded(delta=0.1)");
+        h.push(Point { iter: 1, sim_time: 10.0, accuracy: 0.5, train_loss: 1.0 });
+        h.push(Point { iter: 2, sim_time: 20.0, accuracy: 0.75, train_loss: 0.5 });
+        h
+    }
+
+    #[test]
+    fn csv_format() {
+        let h = hist();
+        let s = to_csv_string(&[&h]);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0], "scheme,iter,sim_time_s,accuracy,train_loss");
+        assert!(lines[1].starts_with("coded(delta=0.1),1,10.000000,0.500000"));
+    }
+
+    #[test]
+    fn csv_roundtrips_to_file() {
+        let h = hist();
+        let dir = std::env::temp_dir().join("codedfedl_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("hist.csv");
+        write_csv(&path, &[&h]).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(back, to_csv_string(&[&h]));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn markdown_table_shapes() {
+        let naive = hist();
+        let row = GainRow::compute(0.7, &naive, &naive, &naive);
+        let md = gain_table_markdown(&[row]);
+        assert!(md.contains("| 70.0 |"));
+        assert!(md.contains("1.0×"));
+        assert_eq!(md.lines().count(), 3);
+    }
+
+    #[test]
+    fn markdown_handles_missing() {
+        let naive = hist();
+        let row = GainRow::compute(0.99, &naive, &naive, &naive); // unreachable
+        let md = gain_table_markdown(&[row]);
+        assert!(md.contains("—"));
+    }
+}

@@ -1,0 +1,191 @@
+//! Training telemetry: accuracy, convergence histories, time-to-accuracy
+//! extraction and the gain tables of the paper's §V-B (Tables II/III).
+
+pub mod export;
+
+use crate::tensor::Mat;
+
+/// Classification accuracy of `logits [n, c]` against integer labels.
+pub fn accuracy(logits: &Mat, labels: &[u8]) -> f64 {
+    assert_eq!(logits.rows(), labels.len());
+    assert!(!labels.is_empty());
+    let pred = logits.argmax_rows();
+    let hits = pred
+        .iter()
+        .zip(labels)
+        .filter(|(p, l)| **p == **l as usize)
+        .count();
+    hits as f64 / labels.len() as f64
+}
+
+/// One recorded evaluation point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Point {
+    /// 1-based training iteration.
+    pub iter: usize,
+    /// Cumulative *simulated* MEC wall-clock (seconds), including any
+    /// one-time overheads (parity upload).
+    pub sim_time: f64,
+    /// Test accuracy in [0, 1].
+    pub accuracy: f64,
+    /// Training objective (regularised squared loss) if recorded.
+    pub train_loss: f64,
+}
+
+/// A scheme's convergence history.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub label: String,
+    pub points: Vec<Point>,
+}
+
+impl History {
+    pub fn new(label: impl Into<String>) -> Self {
+        History { label: label.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, p: Point) {
+        debug_assert!(
+            self.points.last().map_or(true, |last| p.sim_time >= last.sim_time),
+            "sim_time must be monotone"
+        );
+        self.points.push(p);
+    }
+
+    /// First simulated time at which accuracy `gamma` is reached
+    /// (`t_γ` of §V-B), or `None` if never.
+    pub fn time_to_accuracy(&self, gamma: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.accuracy >= gamma).map(|p| p.sim_time)
+    }
+
+    /// First iteration at which accuracy `gamma` is reached.
+    pub fn iters_to_accuracy(&self, gamma: f64) -> Option<usize> {
+        self.points.iter().find(|p| p.accuracy >= gamma).map(|p| p.iter)
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.points.last().map_or(0.0, |p| p.accuracy)
+    }
+
+    /// Best accuracy over the run (robust to late-stage noise).
+    pub fn best_accuracy(&self) -> f64 {
+        self.points.iter().map(|p| p.accuracy).fold(0.0, f64::max)
+    }
+
+    pub fn total_sim_time(&self) -> f64 {
+        self.points.last().map_or(0.0, |p| p.sim_time)
+    }
+}
+
+/// One row of Table II/III: target accuracy + per-scheme times + gains.
+#[derive(Clone, Debug)]
+pub struct GainRow {
+    pub gamma: f64,
+    pub t_naive: Option<f64>,
+    pub t_greedy: Option<f64>,
+    pub t_coded: Option<f64>,
+}
+
+impl GainRow {
+    pub fn compute(
+        gamma: f64,
+        naive: &History,
+        greedy: &History,
+        coded: &History,
+    ) -> GainRow {
+        GainRow {
+            gamma,
+            t_naive: naive.time_to_accuracy(gamma),
+            t_greedy: greedy.time_to_accuracy(gamma),
+            t_coded: coded.time_to_accuracy(gamma),
+        }
+    }
+
+    /// `t_γ^U / t_γ^C` — the paper's naive-over-coded gain.
+    pub fn gain_vs_naive(&self) -> Option<f64> {
+        Some(self.t_naive? / self.t_coded?)
+    }
+
+    /// `t_γ^G / t_γ^C` — the paper's greedy-over-coded gain.
+    pub fn gain_vs_greedy(&self) -> Option<f64> {
+        Some(self.t_greedy? / self.t_coded?)
+    }
+
+    /// Render like the paper's tables (times in hours).
+    pub fn render(&self) -> String {
+        fn hours(t: Option<f64>) -> String {
+            t.map(|s| format!("{:9.2}", s / 3600.0)).unwrap_or_else(|| format!("{:>9}", "—"))
+        }
+        fn gain(g: Option<f64>) -> String {
+            g.map(|x| format!("{x:6.1}x")).unwrap_or_else(|| format!("{:>7}", "—"))
+        }
+        format!(
+            "γ={:5.1}% | t_U={} h | t_G={} h | t_C={} h | U/C {} | G/C {}",
+            self.gamma * 100.0,
+            hours(self.t_naive),
+            hours(self.t_greedy),
+            hours(self.t_coded),
+            gain(self.gain_vs_naive()),
+            gain(self.gain_vs_greedy()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_hits() {
+        // logits argmax: [1, 0, 2]; labels [1, 2, 2] => 2/3
+        let logits = Mat::from_vec(
+            3,
+            3,
+            vec![0.0, 9.0, 1.0, 8.0, 2.0, 3.0, 0.1, 0.2, 0.9],
+        );
+        let acc = accuracy(&logits, &[1, 2, 2]);
+        assert!((acc - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    fn hist(label: &str, pts: &[(usize, f64, f64)]) -> History {
+        let mut h = History::new(label);
+        for &(i, t, a) in pts {
+            h.push(Point { iter: i, sim_time: t, accuracy: a, train_loss: 0.0 });
+        }
+        h
+    }
+
+    #[test]
+    fn time_to_accuracy_first_crossing() {
+        let h = hist("x", &[(1, 10.0, 0.5), (2, 20.0, 0.8), (3, 30.0, 0.7), (4, 40.0, 0.9)]);
+        assert_eq!(h.time_to_accuracy(0.8), Some(20.0));
+        assert_eq!(h.iters_to_accuracy(0.8), Some(2));
+        assert_eq!(h.time_to_accuracy(0.95), None);
+        assert_eq!(h.final_accuracy(), 0.9);
+        assert_eq!(h.best_accuracy(), 0.9);
+        assert_eq!(h.total_sim_time(), 40.0);
+    }
+
+    #[test]
+    fn gain_rows() {
+        let naive = hist("n", &[(1, 100.0, 0.9)]);
+        let greedy = hist("g", &[(1, 300.0, 0.9)]);
+        let coded = hist("c", &[(1, 50.0, 0.9)]);
+        let row = GainRow::compute(0.9, &naive, &greedy, &coded);
+        assert_eq!(row.gain_vs_naive(), Some(2.0));
+        assert_eq!(row.gain_vs_greedy(), Some(6.0));
+        let s = row.render();
+        assert!(s.contains("2.0x") && s.contains("6.0x"), "{s}");
+    }
+
+    #[test]
+    fn gain_row_handles_unreached_target() {
+        let naive = hist("n", &[(1, 100.0, 0.9)]);
+        let greedy = hist("g", &[(1, 300.0, 0.5)]); // never reaches
+        let coded = hist("c", &[(1, 50.0, 0.9)]);
+        let row = GainRow::compute(0.9, &naive, &greedy, &coded);
+        assert_eq!(row.t_greedy, None);
+        assert_eq!(row.gain_vs_greedy(), None);
+        assert!(row.render().contains("—"));
+    }
+}

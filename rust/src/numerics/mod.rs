@@ -1,0 +1,212 @@
+//! Scalar numerics used by the load-allocation optimizer:
+//! the Lambert `W₋₁` branch (paper eq. 34), golden-section maximisation of
+//! the piece-wise concave expected return, and bisection for the minimum
+//! deadline time (paper Remark 5).
+
+/// Machine-ish tolerance used by the iterative solvers.
+pub const TOL: f64 = 1e-12;
+
+/// Unit step `U(x) = 1` for `x > 0`, else `0` (paper's Theorem).
+#[inline]
+pub fn unit_step(x: f64) -> f64 {
+    if x > 0.0 {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Lambert `W₋₁(x)` — the minor real branch, defined for `x ∈ [-1/e, 0)`,
+/// returning `w ≤ -1` with `w e^w = x`.
+///
+/// Seeded with the asymptotic `ln(-x) - ln(-ln(-x))` (exact as `x → 0⁻`)
+/// or a branch-point series near `-1/e`, then polished with Halley
+/// iterations to ~1e-14 relative accuracy.
+pub fn lambert_w_m1(x: f64) -> f64 {
+    assert!(
+        x >= -std::f64::consts::E.recip() - 1e-15 && x < 0.0,
+        "W_-1 domain is [-1/e, 0), got {x}"
+    );
+    let e_inv = std::f64::consts::E.recip();
+    if (x + e_inv).abs() < 1e-14 {
+        return -1.0;
+    }
+    // Initial guess.
+    let mut w = if x > -0.25 * e_inv {
+        // Asymptotic near 0^-: W_-1(x) ~ ln(-x) - ln(-ln(-x)).
+        let l1 = (-x).ln();
+        let l2 = (-l1).ln();
+        l1 - l2
+    } else {
+        // Branch-point series: p = -sqrt(2(1 + e x)), W ≈ -1 + p - p²/3.
+        let p = -(2.0 * (1.0 + std::f64::consts::E * x)).sqrt();
+        -1.0 + p - p * p / 3.0
+    };
+    // Halley iteration on f(w) = w e^w - x.
+    for _ in 0..64 {
+        let ew = w.exp();
+        let f = w * ew - x;
+        let denom = ew * (w + 1.0) - (w + 2.0) * f / (2.0 * w + 2.0);
+        let dw = f / denom;
+        w -= dw;
+        if dw.abs() <= 1e-14 * (1.0 + w.abs()) {
+            break;
+        }
+    }
+    w
+}
+
+/// Golden-section search for the maximum of a *unimodal* `f` on `[a, b]`.
+///
+/// Returns `(x*, f(x*))`. Used per concavity interval of the expected
+/// return (paper Remark 4 — this is our stand-in for MATLAB's `fminbnd`).
+pub fn golden_section_max(
+    mut a: f64,
+    mut b: f64,
+    rel_tol: f64,
+    f: impl Fn(f64) -> f64,
+) -> (f64, f64) {
+    assert!(b >= a, "invalid interval [{a}, {b}]");
+    const INVPHI: f64 = 0.618_033_988_749_894_8; // 1/φ
+    const INVPHI2: f64 = 0.381_966_011_250_105_2; // 1/φ²
+    let mut h = b - a;
+    if h <= rel_tol * (1.0 + a.abs()) {
+        let x = 0.5 * (a + b);
+        return (x, f(x));
+    }
+    let mut c = a + INVPHI2 * h;
+    let mut d = a + INVPHI * h;
+    let mut fc = f(c);
+    let mut fd = f(d);
+    // ~log(h/tol)/log(φ) iterations; cap generously.
+    for _ in 0..200 {
+        if h <= rel_tol * (1.0 + a.abs().max(b.abs())) {
+            break;
+        }
+        if fc >= fd {
+            b = d;
+            d = c;
+            fd = fc;
+            h = b - a;
+            c = a + INVPHI2 * h;
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            h = b - a;
+            d = a + INVPHI * h;
+            fd = f(d);
+        }
+    }
+    if fc >= fd {
+        (c, fc)
+    } else {
+        (d, fd)
+    }
+}
+
+/// Bisection: smallest `t ∈ [lo, hi]` with `g(t) ≥ target`, for a
+/// monotonically non-decreasing `g` (paper Remark 5). Returns `None` if
+/// even `g(hi) < target`.
+pub fn bisect_min_t(
+    lo: f64,
+    hi: f64,
+    target: f64,
+    abs_tol: f64,
+    g: impl Fn(f64) -> f64,
+) -> Option<f64> {
+    if g(hi) < target {
+        return None;
+    }
+    let (mut lo, mut hi) = (lo, hi);
+    for _ in 0..200 {
+        if hi - lo <= abs_tol * (1.0 + hi.abs()) {
+            break;
+        }
+        let mid = 0.5 * (lo + hi);
+        if g(mid) >= target {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_step_semantics() {
+        assert_eq!(unit_step(1e-18), 1.0);
+        assert_eq!(unit_step(0.0), 0.0);
+        assert_eq!(unit_step(-1.0), 0.0);
+    }
+
+    #[test]
+    fn lambert_w_m1_inverts() {
+        // w e^w = x must hold across the domain.
+        for &x in &[-1e-8, -1e-4, -0.05, -0.2, -0.3, -0.35, -0.367] {
+            let w = lambert_w_m1(x);
+            assert!(w <= -1.0, "W_-1({x}) = {w} must be <= -1");
+            let back = w * w.exp();
+            assert!(
+                (back - x).abs() <= 1e-10 * x.abs().max(1e-12),
+                "x={x} w={w} back={back}"
+            );
+        }
+    }
+
+    #[test]
+    fn lambert_w_m1_branch_point() {
+        let e_inv = std::f64::consts::E.recip();
+        assert!((lambert_w_m1(-e_inv) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lambert_w_m1_known_value() {
+        // W_-1(-e^-2) solves w e^w = -e^-2; known w ≈ -3.146193220620583.
+        let w = lambert_w_m1(-(-2.0f64).exp());
+        assert!((w + 3.146_193_220_620_583).abs() < 1e-9, "{w}");
+    }
+
+    #[test]
+    #[should_panic(expected = "W_-1 domain")]
+    fn lambert_w_m1_domain_checked() {
+        lambert_w_m1(0.1);
+    }
+
+    #[test]
+    fn golden_section_finds_parabola_peak() {
+        let (x, fx) = golden_section_max(0.0, 10.0, 1e-10, |x| -(x - 3.7) * (x - 3.7) + 2.0);
+        assert!((x - 3.7).abs() < 1e-6, "{x}");
+        assert!((fx - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn golden_section_degenerate_interval() {
+        let (x, fx) = golden_section_max(2.0, 2.0, 1e-10, |x| x);
+        assert_eq!(x, 2.0);
+        assert_eq!(fx, 2.0);
+    }
+
+    #[test]
+    fn golden_section_boundary_max() {
+        // Monotone increasing on interval => max at right edge.
+        let (x, _) = golden_section_max(0.0, 1.0, 1e-10, |x| x);
+        assert!(x > 1.0 - 1e-6, "{x}");
+    }
+
+    #[test]
+    fn bisect_finds_threshold() {
+        let t = bisect_min_t(0.0, 100.0, 0.5, 1e-10, |t| 1.0 - (-t).exp()).unwrap();
+        assert!((t - std::f64::consts::LN_2).abs() < 1e-6, "{t}");
+    }
+
+    #[test]
+    fn bisect_infeasible_is_none() {
+        assert!(bisect_min_t(0.0, 10.0, 2.0, 1e-9, |t| 1.0 - (-t).exp()).is_none());
+    }
+}

@@ -1,0 +1,109 @@
+//! ε-mutual-information differential privacy accounting for sharing local
+//! parity datasets (paper Appendix F, eq. 62).
+//!
+//! For a Gaussian generator matrix, sharing `u` parity rows of client `j`'s
+//! database `X̂^(j)` leaks at most
+//!
+//! ```text
+//! ε_j = ½ log₂(1 + u / f²(X̂^(j)))        [bits]
+//! f(X̂) = min_k₂ sqrt( Σ_k₁ x_{k₁}(k₂)² − max_k₃ x_{k₃}(k₂)² )
+//! ```
+//!
+//! `f` measures how concentrated the data is along its most vulnerable
+//! feature: concentrated ⇒ small `f` ⇒ larger leakage.
+
+use crate::tensor::Mat;
+
+/// The feature-concentration statistic `f(X̂)` of eq. (62).
+///
+/// Returns 0 when some feature's energy is concentrated in a single data
+/// point (maximal vulnerability).
+pub fn concentration_f(xhat: &Mat) -> f64 {
+    assert!(xhat.rows() > 0 && xhat.cols() > 0, "empty database");
+    let mut min_val = f64::INFINITY;
+    for k2 in 0..xhat.cols() {
+        let mut sum_sq = 0.0f64;
+        let mut max_sq = 0.0f64;
+        for k1 in 0..xhat.rows() {
+            let v = xhat.get(k1, k2) as f64;
+            let sq = v * v;
+            sum_sq += sq;
+            max_sq = max_sq.max(sq);
+        }
+        min_val = min_val.min((sum_sq - max_sq).max(0.0));
+    }
+    min_val.sqrt()
+}
+
+/// ε-MI-DP privacy budget (bits) for sharing `u` parity rows, eq. (62).
+///
+/// Returns `f64::INFINITY` when `f(X̂) = 0` (a single point dominates some
+/// feature, so any parity row leaks unboundedly under this bound).
+pub fn epsilon_mi_dp(xhat: &Mat, u: usize) -> f64 {
+    let f = concentration_f(xhat);
+    if f == 0.0 {
+        return f64::INFINITY;
+    }
+    0.5 * (1.0 + u as f64 / (f * f)).log2()
+}
+
+/// Per-client privacy report used by the `privacy_budget` example and the
+/// privacy section of EXPERIMENTS.md.
+#[derive(Clone, Debug)]
+pub struct PrivacyReport {
+    pub f_stat: f64,
+    pub epsilon_bits: f64,
+    pub u: usize,
+}
+
+pub fn report(xhat: &Mat, u: usize) -> PrivacyReport {
+    PrivacyReport { f_stat: concentration_f(xhat), epsilon_bits: epsilon_mi_dp(xhat, u), u }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f_stat_hand_computed() {
+        // col0: sum_sq = 1+4+9=14, max_sq = 9 -> 5
+        // col1: sum_sq = 0.25+0.25+0.25 = 0.75, max_sq = 0.25 -> 0.5
+        let m = Mat::from_vec(3, 2, vec![1.0, 0.5, 2.0, 0.5, 3.0, 0.5]);
+        let f = concentration_f(&m);
+        assert!((f - 0.5f64.sqrt()).abs() < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn concentrated_feature_leaks_everything() {
+        // one point owns all the energy of column 1
+        let m = Mat::from_vec(2, 2, vec![1.0, 5.0, 1.0, 0.0]);
+        assert_eq!(concentration_f(&m), 0.0);
+        assert!(epsilon_mi_dp(&m, 10).is_infinite());
+    }
+
+    #[test]
+    fn epsilon_grows_with_u() {
+        let m = Mat::from_fn(20, 4, |r, c| ((r + c) % 5) as f32 / 5.0 + 0.1);
+        let e1 = epsilon_mi_dp(&m, 10);
+        let e2 = epsilon_mi_dp(&m, 100);
+        assert!(e2 > e1, "{e2} !> {e1}");
+        assert!(e1 > 0.0);
+    }
+
+    #[test]
+    fn uniform_data_leaks_little() {
+        // paper: "when raw data distribution is uniform in feature space,
+        // very little information is leaked" — epsilon shrinks as rows grow.
+        let small = Mat::from_fn(10, 4, |r, c| (((r * 7 + c * 3) % 10) as f32 + 1.0) / 10.0);
+        let big = Mat::from_fn(1000, 4, |r, c| (((r * 7 + c * 3) % 10) as f32 + 1.0) / 10.0);
+        assert!(epsilon_mi_dp(&big, 50) < epsilon_mi_dp(&small, 50));
+    }
+
+    #[test]
+    fn epsilon_formula_value() {
+        // f^2 = 3 for a column of four 1.0 entries (4 - 1); single column.
+        let m = Mat::from_vec(4, 1, vec![1.0; 4]);
+        let eps = epsilon_mi_dp(&m, 6);
+        assert!((eps - 0.5 * (1.0f64 + 2.0).log2()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,148 @@
+//! Samplers for the distributions the paper's models need:
+//! normal (generator matrices, RFF frequencies), exponential (stochastic
+//! compute time, eq. 11), geometric (retransmission counts, eq. 13),
+//! Rademacher (the paper's ±1 generator alternative) and uniform phases.
+
+use super::Rng;
+
+impl Rng {
+    /// Standard normal via Box–Muller (both values used through the cache
+    /// in [`NormalSource`]; this single-value form regenerates each call).
+    pub fn next_normal(&mut self) -> f64 {
+        // Draw u in (0,1] to avoid ln(0).
+        let u = 1.0 - self.next_f64();
+        let v = self.next_f64();
+        (-2.0 * u.ln()).sqrt() * (2.0 * std::f64::consts::PI * v).cos()
+    }
+
+    /// Exponential with rate `lambda` (mean `1/lambda`).
+    pub fn next_exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        let u = 1.0 - self.next_f64();
+        -u.ln() / lambda
+    }
+
+    /// Geometric number of trials until first success, support `{1, 2, …}`,
+    /// success probability `1 - p_fail` (the paper parameterises links by
+    /// the erasure probability `p_j`; `P(N = x) = p^(x-1) (1-p)`, eq. 13).
+    pub fn next_geometric_trials(&mut self, p_fail: f64) -> u64 {
+        debug_assert!((0.0..1.0).contains(&p_fail));
+        if p_fail == 0.0 {
+            return 1;
+        }
+        // Inverse CDF: N = ceil(ln(1-u) / ln(p_fail)).
+        let u = self.next_f64();
+        let n = ((1.0 - u).ln() / p_fail.ln()).ceil();
+        n.max(1.0) as u64
+    }
+
+    /// Rademacher ±1.
+    pub fn next_rademacher(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Fill a buffer with i.i.d. standard normals (f32).
+    pub fn fill_normal_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.next_normal() as f32;
+        }
+    }
+
+    /// Fill a buffer with i.i.d. normals scaled by `sigma` (f32).
+    pub fn fill_normal_scaled_f32(&mut self, out: &mut [f32], sigma: f64) {
+        for v in out.iter_mut() {
+            *v = (self.next_normal() * sigma) as f32;
+        }
+    }
+
+    /// Fill with i.i.d. Rademacher ±1 (f32).
+    pub fn fill_rademacher_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.next_rademacher();
+        }
+    }
+
+    /// Fill with `Uniform(0, 2π]` phases (f32) for the RFF map (eq. 18).
+    pub fn fill_uniform_phase_f32(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = ((1.0 - self.next_f64()) * 2.0 * std::f64::consts::PI) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        (mean, var)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from(1);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.next_normal()).collect();
+        let (m, v) = moments(&xs);
+        assert!(m.abs() < 0.02, "mean {m}");
+        assert!((v - 1.0).abs() < 0.03, "var {v}");
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let mut r = Rng::seed_from(2);
+        let lam = 2.5;
+        let xs: Vec<f64> = (0..50_000).map(|_| r.next_exponential(lam)).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 1.0 / lam).abs() < 0.01, "mean {m}");
+        assert!((v - 1.0 / (lam * lam)).abs() < 0.02, "var {v}");
+    }
+
+    #[test]
+    fn exponential_nonnegative() {
+        let mut r = Rng::seed_from(3);
+        assert!((0..1000).all(|_| r.next_exponential(0.1) >= 0.0));
+    }
+
+    #[test]
+    fn geometric_mean_matches() {
+        let mut r = Rng::seed_from(4);
+        let p_fail = 0.3;
+        let xs: Vec<f64> = (0..50_000)
+            .map(|_| r.next_geometric_trials(p_fail) as f64)
+            .collect();
+        let (m, _) = moments(&xs);
+        let expect = 1.0 / (1.0 - p_fail);
+        assert!((m - expect).abs() < 0.02, "mean {m} vs {expect}");
+        assert!(xs.iter().all(|&x| x >= 1.0));
+    }
+
+    #[test]
+    fn geometric_reliable_link_is_one_shot() {
+        let mut r = Rng::seed_from(5);
+        assert!((0..100).all(|_| r.next_geometric_trials(0.0) == 1));
+    }
+
+    #[test]
+    fn rademacher_balanced() {
+        let mut r = Rng::seed_from(6);
+        let sum: f32 = (0..40_000).map(|_| r.next_rademacher()).sum();
+        assert!(sum.abs() < 600.0, "sum {sum}");
+    }
+
+    #[test]
+    fn phases_in_range() {
+        let mut r = Rng::seed_from(7);
+        let mut buf = vec![0.0f32; 1000];
+        r.fill_uniform_phase_f32(&mut buf);
+        assert!(buf
+            .iter()
+            .all(|&p| p > 0.0 && p <= 2.0 * std::f32::consts::PI + 1e-6));
+    }
+}

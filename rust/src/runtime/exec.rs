@@ -1,0 +1,242 @@
+//! Typed executors over the compiled artifacts: embed / grad / encode /
+//! predict, each padding its workload to the compiled shape (exactly —
+//! zero rows contribute zero) and unpadding results.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+use super::{literal_to_mat, mat_to_literal, vec_to_literal};
+use crate::tensor::Mat;
+
+/// The AOT shapes one experiment needs (mirrors
+/// `python/compile/shapes.py::ShapeSet`).
+#[derive(Clone, Copy, Debug)]
+pub struct RuntimeShapes {
+    pub d: usize,
+    pub q: usize,
+    pub c: usize,
+    pub l_client: usize,
+    pub u_max: usize,
+    pub b_embed: usize,
+}
+
+/// A θ matrix pre-converted to an XLA literal (see
+/// [`Runtime::prepare_theta`]).
+pub struct PreparedTheta {
+    lit: xla::Literal,
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Compiled {
+    fn load(client: &xla::PjRtClient, path: &Path) -> Result<Compiled> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Compiled { exe })
+    }
+
+    /// Execute and return the single tuple element (graphs are lowered with
+    /// `return_tuple=True`).
+    fn run1(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let bufs = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple1()?)
+    }
+
+    /// Execute and return a 2-tuple (encode graph).
+    fn run2(&self, inputs: &[xla::Literal]) -> Result<(xla::Literal, xla::Literal)> {
+        let bufs = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple2()?)
+    }
+}
+
+/// Owns the PJRT client plus one compiled executable per artifact the
+/// experiment uses. Construction compiles everything up front so the
+/// training loop never hits a compile stall.
+pub struct Runtime {
+    shapes: RuntimeShapes,
+    embed: Compiled,
+    grad_client: Compiled,
+    grad_server: Compiled,
+    encode: Compiled,
+    predict: Compiled,
+    /// Running count of artifact executions (telemetry for §Perf).
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+impl Runtime {
+    /// Load `artifacts_dir/manifest.txt`, resolve the five artifacts the
+    /// shape set needs, and compile them on the CPU PJRT client.
+    pub fn load(artifacts_dir: &Path, shapes: RuntimeShapes) -> Result<Runtime> {
+        let man = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let RuntimeShapes { d, q, c, l_client, u_max, b_embed } = shapes;
+
+        let find = |kind: &str, dims: &[(&str, usize)]| -> Result<Compiled> {
+            let entry = man.require(kind, dims)?;
+            Compiled::load(&client, &man.path(entry))
+        };
+        Ok(Runtime {
+            shapes,
+            embed: find("rff_embed", &[("b", b_embed), ("d", d), ("q", q)])?,
+            grad_client: find("grad", &[("l", l_client), ("q", q), ("c", c)])?,
+            grad_server: find("grad", &[("l", u_max), ("q", q), ("c", c)])?,
+            encode: find("encode", &[("u", u_max), ("l", l_client), ("q", q), ("c", c)])?,
+            predict: find("predict", &[("b", b_embed), ("q", q), ("c", c)])?,
+            exec_count: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn shapes(&self) -> RuntimeShapes {
+        self.shapes
+    }
+
+    fn bump(&self) {
+        self.exec_count.set(self.exec_count.get() + 1);
+    }
+
+    /// RFF-embed `x [n, d]` (chunked over the compiled row-block; the last
+    /// chunk is zero-padded and trimmed). `omega [d, q]`, `delta [q]`.
+    pub fn embed(&self, x: &Mat, omega: &Mat, delta: &[f32]) -> Result<Mat> {
+        let RuntimeShapes { d, q, b_embed, .. } = self.shapes;
+        anyhow::ensure!(x.cols() == d, "embed: x has d={}, compiled d={d}", x.cols());
+        anyhow::ensure!(omega.rows() == d && omega.cols() == q, "embed: omega shape");
+        anyhow::ensure!(delta.len() == q, "embed: delta len");
+        let omega_l = mat_to_literal(omega)?;
+        let delta_l = vec_to_literal(delta);
+        let n = x.rows();
+        let mut out = Mat::zeros(n, q);
+        let mut start = 0;
+        while start < n {
+            let take = (n - start).min(b_embed);
+            let chunk = x.rows_slice(start, take).pad_rows(b_embed);
+            let res = self.run_embed(&chunk, &omega_l, &delta_l)?;
+            out.as_mut_slice()[start * q..(start + take) * q]
+                .copy_from_slice(&res.as_slice()[..take * q]);
+            start += take;
+        }
+        Ok(out)
+    }
+
+    fn run_embed(
+        &self,
+        chunk: &Mat,
+        omega_l: &xla::Literal,
+        delta_l: &xla::Literal,
+    ) -> Result<Mat> {
+        self.bump();
+        let lit = self.embed.run1(&[
+            mat_to_literal(chunk)?,
+            omega_l.clone(),
+            delta_l.clone(),
+        ])?;
+        literal_to_mat(&lit, self.shapes.b_embed, self.shapes.q)
+    }
+
+    /// Pre-convert θ to an XLA literal once per round; the coordinator
+    /// issues ~n+1 grad calls against the same θ each iteration, so
+    /// hoisting the conversion off the per-call path is free speed
+    /// (EXPERIMENTS.md §Perf iteration 2).
+    pub fn prepare_theta(&self, theta: &Mat) -> Result<PreparedTheta> {
+        let RuntimeShapes { q, c, .. } = self.shapes;
+        anyhow::ensure!(theta.rows() == q && theta.cols() == c, "theta shape");
+        Ok(PreparedTheta { lit: mat_to_literal(theta)? })
+    }
+
+    /// Masked gradient `X̂ᵀ diag(mask) (X̂θ − Y)` over up to `l_client`
+    /// (client) or `u_max` (server/parity) rows; rows are zero-padded to
+    /// the compiled shape, mask padded with 0.
+    pub fn grad(&self, xhat: &Mat, y: &Mat, theta: &Mat, mask: &[f32]) -> Result<Mat> {
+        let prepared = self.prepare_theta(theta)?;
+        self.grad_prepared(xhat, y, &prepared, mask)
+    }
+
+    /// [`Runtime::grad`] with a pre-converted θ literal.
+    pub fn grad_prepared(
+        &self,
+        xhat: &Mat,
+        y: &Mat,
+        theta: &PreparedTheta,
+        mask: &[f32],
+    ) -> Result<Mat> {
+        let RuntimeShapes { q, c, l_client, u_max, .. } = self.shapes;
+        anyhow::ensure!(xhat.cols() == q && y.cols() == c, "grad: payload shape");
+        anyhow::ensure!(xhat.rows() == y.rows() && mask.len() == xhat.rows(), "grad: rows");
+        let n = xhat.rows();
+        let (l, exe) = if n <= l_client {
+            (l_client, &self.grad_client)
+        } else if n <= u_max {
+            (u_max, &self.grad_server)
+        } else {
+            anyhow::bail!("grad: {n} rows exceeds largest compiled shape {u_max}");
+        };
+        let mut mask_p = mask.to_vec();
+        mask_p.resize(l, 0.0);
+        self.bump();
+        let lit = exe.run1(&[
+            mat_to_literal(&xhat.pad_rows(l))?,
+            mat_to_literal(&y.pad_rows(l))?,
+            theta.lit.clone(),
+            vec_to_literal(&mask_p),
+        ])?;
+        literal_to_mat(&lit, q, c)
+    }
+
+    /// Parity encode: `G [u, l] (u ≤ u_max zero-padded), w [l], X̂ [l, q],
+    /// Y [l, c]` → `(X̌ [u_max, q], Y̌ [u_max, c])`.
+    pub fn encode(&self, g: &Mat, w: &[f32], xhat: &Mat, y: &Mat) -> Result<(Mat, Mat)> {
+        let RuntimeShapes { q, c, l_client, u_max, .. } = self.shapes;
+        anyhow::ensure!(g.cols() == l_client, "encode: G cols {} != l {}", g.cols(), l_client);
+        anyhow::ensure!(g.rows() <= u_max, "encode: u {} > u_max {}", g.rows(), u_max);
+        anyhow::ensure!(w.len() == l_client, "encode: w len");
+        anyhow::ensure!(
+            xhat.rows() == l_client && xhat.cols() == q,
+            "encode: xhat shape"
+        );
+        anyhow::ensure!(y.rows() == l_client && y.cols() == c, "encode: y shape");
+        self.bump();
+        let (xp, yp) = self.encode.run2(&[
+            mat_to_literal(&g.pad_rows(u_max))?,
+            vec_to_literal(w),
+            mat_to_literal(xhat)?,
+            mat_to_literal(y)?,
+        ])?;
+        Ok((
+            literal_to_mat(&xp, u_max, q)?,
+            literal_to_mat(&yp, u_max, c)?,
+        ))
+    }
+
+    /// Logits `X̂ θ` for `n` rows (chunked + padded like [`Runtime::embed`]).
+    pub fn predict(&self, xhat: &Mat, theta: &Mat) -> Result<Mat> {
+        let RuntimeShapes { q, c, b_embed, .. } = self.shapes;
+        anyhow::ensure!(xhat.cols() == q, "predict: xhat shape");
+        anyhow::ensure!(theta.rows() == q && theta.cols() == c, "predict: theta shape");
+        let theta_l = mat_to_literal(theta)?;
+        let n = xhat.rows();
+        let mut out = Mat::zeros(n, c);
+        let mut start = 0;
+        while start < n {
+            let take = (n - start).min(b_embed);
+            let chunk = xhat.rows_slice(start, take).pad_rows(b_embed);
+            self.bump();
+            let lit = self.predict.run1(&[mat_to_literal(&chunk)?, theta_l.clone()])?;
+            let res = literal_to_mat(&lit, b_embed, c)?;
+            out.as_mut_slice()[start * c..(start + take) * c]
+                .copy_from_slice(&res.as_slice()[..take * c]);
+            start += take;
+        }
+        Ok(out)
+    }
+}

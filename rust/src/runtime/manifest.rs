@@ -1,0 +1,165 @@
+//! Parser for `artifacts/manifest.txt` written by `python/compile/aot.py`.
+//!
+//! Line format: `<kind> file=<name> <dim>=<int> ...`. The manifest is the
+//! contract between the Python compile path and this runtime: at startup
+//! the runtime resolves every shape the experiment needs against it and
+//! fails fast with an actionable message if an artifact is missing.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One artifact record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub kind: String,
+    pub file: String,
+    pub dims: BTreeMap<String, usize>,
+}
+
+impl ManifestEntry {
+    pub fn dim(&self, name: &str) -> Option<usize> {
+        self.dims.get(name).copied()
+    }
+}
+
+/// Parsed manifest with lookup helpers.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?} — run `make artifacts` first")
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut toks = line.split_whitespace();
+            let kind = toks.next().unwrap().to_string();
+            let mut file = None;
+            let mut dims = BTreeMap::new();
+            for tok in toks {
+                let (k, v) = tok
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad token {tok:?}", i + 1))?;
+                if k == "file" {
+                    file = Some(v.to_string());
+                } else {
+                    let n: usize = v.parse().with_context(|| {
+                        format!("manifest line {}: dim {k}={v:?} not an int", i + 1)
+                    })?;
+                    dims.insert(k.to_string(), n);
+                }
+            }
+            let Some(file) = file else {
+                bail!("manifest line {}: missing file=", i + 1);
+            };
+            entries.push(ManifestEntry { kind, file, dims });
+        }
+        Ok(Manifest { entries, dir: dir.to_path_buf() })
+    }
+
+    /// Find the entry of `kind` whose dims contain all of `want`.
+    pub fn find(&self, kind: &str, want: &[(&str, usize)]) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| {
+            e.kind == kind && want.iter().all(|(k, v)| e.dim(k) == Some(*v))
+        })
+    }
+
+    /// Like [`find`], but with a fail-fast error listing what exists.
+    pub fn require(&self, kind: &str, want: &[(&str, usize)]) -> Result<&ManifestEntry> {
+        self.find(kind, want).with_context(|| {
+            let have: Vec<String> = self
+                .entries
+                .iter()
+                .filter(|e| e.kind == kind)
+                .map(|e| format!("{:?}", e.dims))
+                .collect();
+            format!(
+                "no `{kind}` artifact with dims {want:?} in {:?}; available: [{}] — \
+                 rebuild with `python -m compile.aot` and a preset matching the config",
+                self.dir,
+                have.join(", ")
+            )
+        })
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path(&self, e: &ManifestEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+rff_embed file=rff_embed_40x32x64.hlo.txt b=40 d=32 q=64
+grad file=grad_40x64x10.hlo.txt c=10 l=40 q=64
+grad file=grad_128x64x10.hlo.txt c=10 l=128 q=64
+encode file=encode_128x40x64x10.hlo.txt c=10 l=40 q=64 u=128
+";
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 4);
+        assert_eq!(m.entries[0].kind, "rff_embed");
+        assert_eq!(m.entries[0].dim("q"), Some(64));
+        assert_eq!(m.entries[0].file, "rff_embed_40x32x64.hlo.txt");
+    }
+
+    #[test]
+    fn find_matches_all_dims() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let e = m.find("grad", &[("l", 128), ("q", 64)]).unwrap();
+        assert_eq!(e.file, "grad_128x64x10.hlo.txt");
+        assert!(m.find("grad", &[("l", 999)]).is_none());
+    }
+
+    #[test]
+    fn require_error_is_actionable() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let err = m.require("grad", &[("l", 999)]).unwrap_err().to_string();
+        assert!(err.contains("no `grad` artifact"));
+        assert!(err.contains("available"));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("grad l=10", Path::new("/x")).is_err()); // no file
+        assert!(Manifest::parse("grad file=a l=ten", Path::new("/x")).is_err());
+        assert!(Manifest::parse("grad file=a garbage", Path::new("/x")).is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let m = Manifest::parse("# hi\n\ngrad file=g.hlo.txt l=4\n", Path::new("/x")).unwrap();
+        assert_eq!(m.entries.len(), 1);
+    }
+
+    #[test]
+    fn path_joins_dir() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(
+            m.path(&m.entries[0]),
+            PathBuf::from("/tmp/a/rff_embed_40x32x64.hlo.txt")
+        );
+    }
+}

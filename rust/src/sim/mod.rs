@@ -1,0 +1,143 @@
+//! Virtual-clock MEC round simulator.
+//!
+//! Each training round we *sample* every node's epoch delay from the
+//! paper's stochastic models (§II-B) to decide (a) which gradients arrive
+//! and (b) how much simulated wall-clock the round costs under each
+//! scheme's waiting policy. Gradients themselves are really computed
+//! through the PJRT executables — the clock is virtual, the math is not
+//! (DESIGN.md §6).
+
+use crate::delay::NodeParams;
+use crate::rng::Rng;
+
+/// Sampled per-round delays for the client fleet.
+#[derive(Clone, Debug)]
+pub struct RoundDelays {
+    /// Per-client total time `T_j` for its processed load this round.
+    pub client_t: Vec<f64>,
+    /// The MEC computing unit's time `T_C` for the coded gradient.
+    pub server_t: f64,
+}
+
+impl RoundDelays {
+    /// Which clients made a deadline `t`.
+    pub fn arrivals(&self, t: f64) -> Vec<bool> {
+        self.client_t.iter().map(|&tt| tt <= t).collect()
+    }
+
+    /// Completion time when waiting for *all* clients (naive uncoded).
+    pub fn max_client_time(&self) -> f64 {
+        self.client_t.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Completion time when waiting for the fastest `k` clients (greedy
+    /// uncoded): the k-th order statistic. Also returns the indices of
+    /// those clients.
+    pub fn kth_fastest(&self, k: usize) -> (f64, Vec<usize>) {
+        assert!(k >= 1 && k <= self.client_t.len(), "k={k} out of range");
+        let mut idx: Vec<usize> = (0..self.client_t.len()).collect();
+        idx.sort_by(|&a, &b| self.client_t[a].partial_cmp(&self.client_t[b]).unwrap());
+        let winners = idx[..k].to_vec();
+        (self.client_t[winners[k - 1]], winners)
+    }
+}
+
+/// Samples rounds for a fixed fleet + per-node loads.
+pub struct RoundSampler {
+    clients: Vec<NodeParams>,
+    server: NodeParams,
+    /// Per-client processed load `ℓ̃_j` (drives both the deterministic and
+    /// stochastic compute parts).
+    pub client_loads: Vec<f64>,
+    /// Server parity load `u`.
+    pub server_load: f64,
+}
+
+impl RoundSampler {
+    pub fn new(
+        clients: Vec<NodeParams>,
+        server: NodeParams,
+        client_loads: Vec<f64>,
+        server_load: f64,
+    ) -> Self {
+        assert_eq!(clients.len(), client_loads.len());
+        RoundSampler { clients, server, client_loads, server_load }
+    }
+
+    /// Sample one round's delays.
+    pub fn sample(&self, rng: &mut Rng) -> RoundDelays {
+        let client_t = self
+            .clients
+            .iter()
+            .zip(&self.client_loads)
+            .map(|(c, &l)| c.sample_delay(l, rng))
+            .collect();
+        let server_t = self.server.sample_delay(self.server_load, rng);
+        RoundDelays { client_t, server_t }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet() -> (Vec<NodeParams>, NodeParams) {
+        let clients = (0..4)
+            .map(|j| NodeParams {
+                mu: 10.0 / (j as f64 + 1.0),
+                alpha: 2.0,
+                tau: 0.1,
+                p: 0.1,
+            })
+            .collect();
+        let server = NodeParams { mu: 1000.0, alpha: 100.0, tau: 0.01, p: 0.0 };
+        (clients, server)
+    }
+
+    #[test]
+    fn sample_shapes_and_positivity() {
+        let (c, s) = fleet();
+        let sampler = RoundSampler::new(c, s, vec![5.0; 4], 20.0);
+        let mut rng = Rng::seed_from(1);
+        let d = sampler.sample(&mut rng);
+        assert_eq!(d.client_t.len(), 4);
+        assert!(d.client_t.iter().all(|&t| t > 0.0));
+        assert!(d.server_t > 0.0);
+    }
+
+    #[test]
+    fn arrivals_match_threshold() {
+        let d = RoundDelays { client_t: vec![1.0, 3.0, 2.0], server_t: 0.5 };
+        assert_eq!(d.arrivals(2.0), vec![true, false, true]);
+        assert_eq!(d.max_client_time(), 3.0);
+    }
+
+    #[test]
+    fn kth_fastest_order_statistic() {
+        let d = RoundDelays { client_t: vec![5.0, 1.0, 3.0, 2.0], server_t: 0.0 };
+        let (t, winners) = d.kth_fastest(2);
+        assert_eq!(t, 2.0);
+        assert_eq!(winners, vec![1, 3]);
+        let (t_all, _) = d.kth_fastest(4);
+        assert_eq!(t_all, 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn kth_fastest_validates_k() {
+        RoundDelays { client_t: vec![1.0], server_t: 0.0 }.kth_fastest(2);
+    }
+
+    #[test]
+    fn zero_load_clients_are_comm_bound() {
+        let (c, s) = fleet();
+        let sampler = RoundSampler::new(c.clone(), s, vec![0.0; 4], 0.0);
+        let mut rng = Rng::seed_from(2);
+        for _ in 0..50 {
+            let d = sampler.sample(&mut rng);
+            for (t, cl) in d.client_t.iter().zip(&c) {
+                assert!(*t >= 2.0 * cl.tau);
+            }
+        }
+    }
+}

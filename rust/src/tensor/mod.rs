@@ -1,0 +1,275 @@
+//! Minimal row-major `f32` matrix used across the coordinator.
+//!
+//! The heavy math lives in the AOT-compiled XLA artifacts; this type only
+//! needs cheap construction, slicing into row blocks, zero-padding (which is
+//! *exact* for the CodedFedL math — see DESIGN.md §2) and a few O(n)
+//! reductions used by aggregation and metrics.
+
+use std::fmt;
+
+/// Dense row-major matrix of `f32`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat[{}x{}]", self.rows, self.cols)
+    }
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer/shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build by evaluating `f(r, c)` at every position.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row-major backing slice.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow one row.
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of rows `[start, start+n)` as a new matrix.
+    pub fn rows_slice(&self, start: usize, n: usize) -> Mat {
+        assert!(start + n <= self.rows, "row slice out of bounds");
+        Mat {
+            rows: n,
+            cols: self.cols,
+            data: self.data[start * self.cols..(start + n) * self.cols].to_vec(),
+        }
+    }
+
+    /// Copy of the rows at `idx` (gather), in order.
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Vec::with_capacity(idx.len() * self.cols);
+        for &r in idx {
+            out.extend_from_slice(self.row(r));
+        }
+        Mat { rows: idx.len(), cols: self.cols, data: out }
+    }
+
+    /// Zero-pad (or truncate-check) to `rows` rows. Padding rows are exact
+    /// no-ops for gradients/parity (zero rows contribute zero).
+    pub fn pad_rows(&self, rows: usize) -> Mat {
+        assert!(rows >= self.rows, "pad_rows cannot shrink ({} -> {rows})", self.rows);
+        let mut data = self.data.clone();
+        data.resize(rows * self.cols, 0.0);
+        Mat { rows, cols: self.cols, data }
+    }
+
+    /// Vertical stack of `mats` (all with equal `cols`).
+    pub fn vstack(mats: &[&Mat]) -> Mat {
+        assert!(!mats.is_empty());
+        let cols = mats[0].cols;
+        let rows: usize = mats.iter().map(|m| m.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for m in mats {
+            assert_eq!(m.cols, cols, "vstack col mismatch");
+            data.extend_from_slice(&m.data);
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// `self += alpha * other` (element-wise). Hot path of aggregation.
+    pub fn axpy(&mut self, alpha: f32, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `self *= alpha`.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// Index of the max element in each row (argmax over columns).
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|r| {
+                let row = self.row(r);
+                let mut best = 0usize;
+                for (i, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = i;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    /// Max absolute element-wise difference against `other`.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Naive reference matmul — used only in tests/diagnostics, never on the
+    /// training hot path (that goes through XLA).
+    pub fn matmul_ref(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.get(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out.data[i * other.cols + j] += a * other.get(k, j);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_get_set() {
+        let mut m = Mat::zeros(2, 3);
+        assert_eq!(m.get(1, 2), 0.0);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+    }
+
+    #[test]
+    fn from_fn_row_major() {
+        let m = Mat::from_fn(2, 2, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m.as_slice(), &[0.0, 1.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    fn rows_slice_and_gather() {
+        let m = Mat::from_fn(4, 2, |r, _| r as f32);
+        let s = m.rows_slice(1, 2);
+        assert_eq!(s.as_slice(), &[1.0, 1.0, 2.0, 2.0]);
+        let g = m.gather_rows(&[3, 0]);
+        assert_eq!(g.as_slice(), &[3.0, 3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pad_rows_appends_zeros() {
+        let m = Mat::from_vec(1, 2, vec![1.0, 2.0]);
+        let p = m.pad_rows(3);
+        assert_eq!(p.as_slice(), &[1.0, 2.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "pad_rows cannot shrink")]
+    fn pad_rows_rejects_shrink() {
+        Mat::zeros(3, 1).pad_rows(2);
+    }
+
+    #[test]
+    fn vstack_concatenates() {
+        let a = Mat::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Mat::from_vec(2, 2, vec![3.0, 4.0, 5.0, 6.0]);
+        let v = Mat::vstack(&[&a, &b]);
+        assert_eq!(v.rows(), 3);
+        assert_eq!(v.as_slice(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn axpy_scale_norm() {
+        let mut a = Mat::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Mat::from_vec(1, 2, vec![10.0, 10.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.as_slice(), &[6.0, 7.0]);
+        a.scale(2.0);
+        assert_eq!(a.as_slice(), &[12.0, 14.0]);
+        let n = Mat::from_vec(1, 2, vec![3.0, 4.0]).fro_norm();
+        assert!((n - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_rows_ties_pick_first() {
+        let m = Mat::from_vec(2, 3, vec![0.0, 5.0, 5.0, 9.0, 1.0, 2.0]);
+        assert_eq!(m.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn matmul_ref_small() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul_ref(&b);
+        assert_eq!(c.as_slice(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Mat::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Mat::from_vec(1, 2, vec![1.5, 1.0]);
+        assert!((a.max_abs_diff(&b) - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,185 @@
+//! The paper's wireless MEC fleet construction (§V-A).
+//!
+//! - LTE downlink/uplink: each client gets 3 resource blocks ⇒ max PHY rate
+//!   216 kbps. Effective rates follow the geometric ladder
+//!   `{1, k₁, k₁², …, k₁^{n−1}}` (times the max rate) assigned to clients by
+//!   a random permutation; erasure probability `p = 0.1` for all links
+//!   (constant-failure rate adaptation).
+//! - Compute: MAC rates follow the ladder `{1, k₂, …}` with max
+//!   3.072·10⁶ MAC/s, `α = 2`; the data-point rate `μ_j` divides the MAC
+//!   rate by the MACs per point of the regression gradient (`2·q·c`).
+//! - Packets carry one model/gradient (`q·c` scalars, 32 bit, 10%
+//!   protocol overhead): `τ_j = b / rate_j`.
+//! - The MEC server's computing unit has dedicated, reliable resources
+//!   (`P(T_C ≤ t) = 1` in §V-A — we model `p = 0` with server-grade rates).
+
+use crate::delay::NodeParams;
+use crate::rng::Rng;
+
+/// Knobs of the §V-A fleet; `Default` is the paper's exact setting except
+/// for `n`/`q`/`c`, which come from the experiment config.
+#[derive(Clone, Copy, Debug)]
+pub struct FleetSpec {
+    pub n: usize,
+    /// RFF dimension q (packet payload is the q×c model/gradient).
+    pub q: usize,
+    /// Number of classes c.
+    pub c: usize,
+    /// Link-rate ladder ratio k₁.
+    pub k1: f64,
+    /// MAC-rate ladder ratio k₂.
+    pub k2: f64,
+    /// Max effective PHY information rate in bit/s (3 LTE resource blocks).
+    pub max_rate_bps: f64,
+    /// Max MAC rate in MAC/s.
+    pub max_mac_rate: f64,
+    /// Compute/memory ratio α (same for all clients in §V-A).
+    pub alpha: f64,
+    /// Link erasure probability (same for all clients in §V-A).
+    pub p: f64,
+    /// Protocol overhead fraction (10%).
+    pub overhead: f64,
+    /// Bits per scalar (32).
+    pub bits_per_scalar: f64,
+}
+
+impl FleetSpec {
+    pub fn paper(n: usize, q: usize, c: usize) -> Self {
+        FleetSpec {
+            n,
+            q,
+            c,
+            k1: 0.95,
+            k2: 0.8,
+            max_rate_bps: 216_000.0,
+            max_mac_rate: 3.072e6,
+            alpha: 2.0,
+            p: 0.1,
+            overhead: 0.1,
+            bits_per_scalar: 32.0,
+        }
+    }
+
+    /// Packet size in bits for one model or gradient transfer (q·c scalars
+    /// plus protocol overhead).
+    pub fn packet_bits(&self) -> f64 {
+        (self.q * self.c) as f64 * self.bits_per_scalar * (1.0 + self.overhead)
+    }
+
+    /// MACs needed per data point of the regression gradient
+    /// (`X̂θ` then `X̂ᵀR`: 2·q·c multiply–accumulates per row).
+    pub fn macs_per_point(&self) -> f64 {
+        2.0 * (self.q * self.c) as f64
+    }
+
+    /// One-time parity upload time for `u` parity rows of width `q + c`
+    /// over client `j`'s uplink (expected retransmissions included) —
+    /// the Fig. 4(a) inset overhead.
+    pub fn parity_upload_secs(&self, client: &NodeParams, u: usize) -> f64 {
+        let bits =
+            u as f64 * (self.q + self.c) as f64 * self.bits_per_scalar * (1.0 + self.overhead);
+        let packets = bits / self.packet_bits();
+        packets * client.tau / (1.0 - client.p)
+    }
+
+    /// Build the client fleet. Both ladders are independently permuted
+    /// across clients (paper: "assign a random permutation of them").
+    pub fn build_clients(&self, rng: &mut Rng) -> Vec<NodeParams> {
+        let rate_perm = rng.permutation(self.n);
+        let mac_perm = rng.permutation(self.n);
+        (0..self.n)
+            .map(|j| {
+                let rate = self.max_rate_bps * self.k1.powi(rate_perm[j] as i32);
+                let macs = self.max_mac_rate * self.k2.powi(mac_perm[j] as i32);
+                NodeParams {
+                    mu: macs / self.macs_per_point(),
+                    alpha: self.alpha,
+                    tau: self.packet_bits() / rate,
+                    p: self.p,
+                }
+            })
+            .collect()
+    }
+
+    /// The MEC server's computing unit: dedicated, reliable, cloud-grade
+    /// (§III-C / §V-A). 100× the best client MAC rate, reliable fast link.
+    pub fn build_server(&self) -> NodeParams {
+        NodeParams {
+            mu: 100.0 * self.max_mac_rate / self.macs_per_point(),
+            alpha: 100.0,
+            tau: self.packet_bits() / (100.0 * self.max_rate_bps),
+            p: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packet_bits_paper_scale() {
+        let s = FleetSpec::paper(30, 2000, 10);
+        // 2000*10*32*1.1 = 704_000 bits
+        assert!((s.packet_bits() - 704_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fleet_has_ladder_rates() {
+        let s = FleetSpec::paper(30, 2000, 10);
+        let clients = s.build_clients(&mut Rng::seed_from(1));
+        assert_eq!(clients.len(), 30);
+        // fastest link tau = b / 216k; slowest = b / (216k * .95^29)
+        let taus: Vec<f64> = clients.iter().map(|c| c.tau).collect();
+        let min_tau = taus.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max_tau = taus.iter().cloned().fold(0.0, f64::max);
+        assert!((min_tau - s.packet_bits() / 216_000.0).abs() < 1e-9);
+        let expect_max = s.packet_bits() / (216_000.0 * 0.95f64.powi(29));
+        assert!((max_tau - expect_max).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_mu_ladder_and_params() {
+        let s = FleetSpec::paper(30, 2000, 10);
+        let clients = s.build_clients(&mut Rng::seed_from(2));
+        let mus: Vec<f64> = clients.iter().map(|c| c.mu).collect();
+        let max_mu = mus.iter().cloned().fold(0.0, f64::max);
+        assert!((max_mu - 3.072e6 / 40_000.0).abs() < 1e-9); // 76.8 pts/s
+        for c in &clients {
+            assert_eq!(c.alpha, 2.0);
+            assert_eq!(c.p, 0.1);
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn permutation_is_seed_dependent_but_ladder_preserved() {
+        let s = FleetSpec::paper(10, 100, 10);
+        let a = s.build_clients(&mut Rng::seed_from(3));
+        let b = s.build_clients(&mut Rng::seed_from(4));
+        let mut ra: Vec<u64> = a.iter().map(|c| c.tau.to_bits()).collect();
+        let mut rb: Vec<u64> = b.iter().map(|c| c.tau.to_bits()).collect();
+        assert_ne!(ra, rb, "different seeds should permute differently");
+        ra.sort_unstable();
+        rb.sort_unstable();
+        assert_eq!(ra, rb, "the ladder multiset is seed-independent");
+    }
+
+    #[test]
+    fn server_is_fast_and_reliable() {
+        let s = FleetSpec::paper(30, 2000, 10);
+        let srv = s.build_server();
+        assert_eq!(srv.p, 0.0);
+        assert!(srv.mu > 100.0 * 76.0);
+        srv.validate().unwrap();
+    }
+
+    #[test]
+    fn parity_upload_scales_with_u() {
+        let s = FleetSpec::paper(30, 200, 10);
+        let c = NodeParams { mu: 1.0, alpha: 2.0, tau: 2.0, p: 0.1 };
+        let t1 = s.parity_upload_secs(&c, 100);
+        let t2 = s.parity_upload_secs(&c, 200);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,201 @@
+//! Integration: the statistical heart of CodedFedL (paper §III-E).
+//!
+//! Eq. (30)–(32) claim the coded federated gradient `g_M` is a stochastic
+//! approximation of the full gradient `g` over the entire distributed
+//! dataset: `E[g_M] ≈ g`, with the approximation error vanishing as the
+//! coding redundancy `u` grows (WLLN on `GᵀG/u`). This suite verifies the
+//! claim *through the real pipeline* — weights from §III-D, parity from
+//! the AOT encode artifact, gradients from the AOT grad artifact —
+//! by averaging `g_M` over many simulated rounds.
+
+use codedfedl::coding::{self, GeneratorKind};
+use codedfedl::delay::NodeParams;
+use codedfedl::rng::Rng;
+use codedfedl::runtime::{Runtime, RuntimeShapes};
+use codedfedl::tensor::Mat;
+
+const TINY: RuntimeShapes =
+    RuntimeShapes { d: 32, q: 64, c: 10, l_client: 40, u_max: 128, b_embed: 40 };
+
+fn runtime() -> Runtime {
+    Runtime::load(std::path::Path::new("artifacts"), TINY)
+        .expect("tiny artifacts missing — run `make artifacts`")
+}
+
+fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+    let mut m = Mat::zeros(rows, cols);
+    rng.fill_normal_f32(m.as_mut_slice());
+    m
+}
+
+struct Client {
+    xhat: Mat,
+    y: Mat,
+    mask: Vec<f32>,
+    weights: Vec<f32>,
+    p_arrive: f64,
+}
+
+/// Build a 3-client toy federation with heterogeneous arrival
+/// probabilities and partial processed subsets.
+fn federation(rng: &mut Rng) -> (Vec<Client>, Mat) {
+    let theta = randn(64, 10, rng);
+    let clients = [(30usize, 0.85f64), (20, 0.6), (40, 0.35)]
+        .iter()
+        .map(|&(ell_star, p_arrive)| {
+            let xhat = randn(40, 64, rng);
+            let y = randn(40, 10, rng);
+            let processed = coding::sample_processed(40, ell_star, rng);
+            let weights = coding::weight_vector(&processed, 1.0 - p_arrive);
+            let mask: Vec<f32> =
+                processed.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect();
+            Client { xhat, y, mask, weights, p_arrive }
+        })
+        .collect();
+    (clients, theta)
+}
+
+/// Full-batch reference gradient `Σ_j X̂_jᵀ(X̂_jθ − Y_j)` (unnormalised).
+fn full_gradient(rt: &Runtime, clients: &[Client], theta: &Mat) -> Mat {
+    let mut g = Mat::zeros(64, 10);
+    for c in clients {
+        let gj = rt.grad(&c.xhat, &c.y, theta, &vec![1.0; 40]).unwrap();
+        g.axpy(1.0, &gj);
+    }
+    g
+}
+
+#[test]
+fn coded_federated_gradient_is_unbiased() {
+    let rt = runtime();
+    let mut rng = Rng::seed_from(0xFED);
+    let (clients, theta) = federation(&mut rng);
+    let g_full = full_gradient(&rt, &clients, &theta);
+
+    let u = 120usize; // large redundancy for a tight WLLN approximation
+    let rounds = 300;
+    let mut g_mean = Mat::zeros(64, 10);
+    for _ in 0..rounds {
+        let mut g_m = Mat::zeros(64, 10);
+        // Fresh generator per round so the average integrates over G too.
+        let mut xp_acc = Mat::zeros(128, 64);
+        let mut yp_acc = Mat::zeros(128, 10);
+        for c in &clients {
+            let g = coding::generator_matrix(GeneratorKind::Normal, u, 40, &mut rng);
+            let (xp, yp) = rt.encode(&g, &c.weights, &c.xhat, &c.y).unwrap();
+            xp_acc.axpy(1.0, &xp);
+            yp_acc.axpy(1.0, &yp);
+        }
+        // Coded gradient over the live u parity rows (server always
+        // arrives in this experiment: pnr_C = 0), scaled by 1/u (eq. 28).
+        let xp = xp_acc.rows_slice(0, u);
+        let yp = yp_acc.rows_slice(0, u);
+        let gc = rt.grad(&xp, &yp, &theta, &vec![1.0; u]).unwrap();
+        g_m.axpy(1.0 / u as f32, &gc);
+        // Uncoded gradients from the clients that arrive (eq. 29).
+        for c in &clients {
+            if rng.next_f64() < c.p_arrive {
+                let gu = rt.grad(&c.xhat, &c.y, &theta, &c.mask).unwrap();
+                g_m.axpy(1.0, &gu);
+            }
+        }
+        g_mean.axpy(1.0 / rounds as f32, &g_m);
+    }
+
+    // Relative error of the round-averaged g_M against the full gradient.
+    let mut diff = g_mean.clone();
+    diff.axpy(-1.0, &g_full);
+    let rel = diff.fro_norm() / g_full.fro_norm();
+    assert!(
+        rel < 0.08,
+        "E[g_M] deviates from g by {:.1}% (paper eq. 30-32 unbiasedness)",
+        rel * 100.0
+    );
+}
+
+#[test]
+fn coded_alone_recovers_weighted_gradient() {
+    // With no clients arriving, E[g_C]/u ≈ X̂ᵀW²(X̂θ−Y) (eq. 31).
+    let rt = runtime();
+    let mut rng = Rng::seed_from(0xFED + 1);
+    let (clients, theta) = federation(&mut rng);
+
+    // reference: sum_j X̂ᵀ diag(w²) (X̂θ − Y) via the grad artifact with
+    // mask = w² (exactly the masked-gradient semantics).
+    let mut g_ref = Mat::zeros(64, 10);
+    for c in &clients {
+        let w2: Vec<f32> = c.weights.iter().map(|w| w * w).collect();
+        let gj = rt.grad(&c.xhat, &c.y, &theta, &w2).unwrap();
+        g_ref.axpy(1.0, &gj);
+    }
+
+    let u = 120usize;
+    let rounds = 400;
+    let mut g_mean = Mat::zeros(64, 10);
+    for _ in 0..rounds {
+        let mut xp_acc = Mat::zeros(128, 64);
+        let mut yp_acc = Mat::zeros(128, 10);
+        for c in &clients {
+            let g = coding::generator_matrix(GeneratorKind::Rademacher, u, 40, &mut rng);
+            let (xp, yp) = rt.encode(&g, &c.weights, &c.xhat, &c.y).unwrap();
+            xp_acc.axpy(1.0, &xp);
+            yp_acc.axpy(1.0, &yp);
+        }
+        let xp = xp_acc.rows_slice(0, u);
+        let yp = yp_acc.rows_slice(0, u);
+        let gc = rt.grad(&xp, &yp, &theta, &vec![1.0; u]).unwrap();
+        g_mean.axpy(1.0 / (u as f32 * rounds as f32), &gc);
+    }
+    let mut diff = g_mean.clone();
+    diff.axpy(-1.0, &g_ref);
+    let rel = diff.fro_norm() / g_ref.fro_norm();
+    assert!(
+        rel < 0.08,
+        "E[g_C]/u deviates from X̂ᵀW²(X̂θ−Y) by {:.1}% (eq. 31)",
+        rel * 100.0
+    );
+}
+
+#[test]
+fn approximation_tightens_with_redundancy() {
+    // Single round, fixed G-seed per u: larger u ⇒ smaller deviation of
+    // g_C/u from its mean (variance ~ 1/u). Averaged over a few seeds to
+    // damp luck.
+    let rt = runtime();
+    let mut rng = Rng::seed_from(0xFED + 2);
+    let (clients, theta) = federation(&mut rng);
+    let mut g_ref = Mat::zeros(64, 10);
+    for c in &clients {
+        let w2: Vec<f32> = c.weights.iter().map(|w| w * w).collect();
+        let gj = rt.grad(&c.xhat, &c.y, &theta, &w2).unwrap();
+        g_ref.axpy(1.0, &gj);
+    }
+    let mut err_at = |u: usize, seeds: u64| -> f64 {
+        let mut total = 0.0;
+        for s in 0..seeds {
+            let mut rng = Rng::seed_from(0xABC + s);
+            let mut xp_acc = Mat::zeros(128, 64);
+            let mut yp_acc = Mat::zeros(128, 10);
+            for c in &clients {
+                let g = coding::generator_matrix(GeneratorKind::Normal, u, 40, &mut rng);
+                let (xp, yp) = rt.encode(&g, &c.weights, &c.xhat, &c.y).unwrap();
+                xp_acc.axpy(1.0, &xp);
+                yp_acc.axpy(1.0, &yp);
+            }
+            let xp = xp_acc.rows_slice(0, u);
+            let yp = yp_acc.rows_slice(0, u);
+            let gc = rt.grad(&xp, &yp, &theta, &vec![1.0; u]).unwrap();
+            let mut est = Mat::zeros(64, 10);
+            est.axpy(1.0 / u as f32, &gc);
+            est.axpy(-1.0, &g_ref);
+            total += (est.fro_norm() / g_ref.fro_norm()) as f64;
+        }
+        total / seeds as f64
+    };
+    let e_small = err_at(8, 6);
+    let e_large = err_at(120, 6);
+    assert!(
+        e_large < e_small,
+        "error at u=120 ({e_large:.3}) must beat u=8 ({e_small:.3})"
+    );
+}

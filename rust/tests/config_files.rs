@@ -1,0 +1,35 @@
+//! The shipped config files must stay parseable and consistent with the
+//! AOT shape presets they name.
+
+use std::path::Path;
+
+use codedfedl::conf::ExperimentConfig;
+
+#[test]
+fn default_config_parses_and_matches_preset() {
+    let c = ExperimentConfig::from_file(Path::new("configs/default.toml")).unwrap();
+    let d = ExperimentConfig::default();
+    assert_eq!(c.clients, d.clients);
+    assert_eq!(c.q, d.q);
+    assert_eq!(c.local_batch, d.local_batch);
+    assert_eq!(c.u_max, d.u_max);
+    assert_eq!(c.lr_decay_epochs, d.lr_decay_epochs);
+    assert_eq!(c.seed, d.seed);
+    assert!((c.l2 - d.l2).abs() < 1e-12);
+}
+
+#[test]
+fn paper_config_parses_and_matches_preset() {
+    let c = ExperimentConfig::from_file(Path::new("configs/paper.toml")).unwrap();
+    let p = ExperimentConfig::paper();
+    assert_eq!(c.q, p.q);
+    assert_eq!(c.local_batch, p.local_batch);
+    assert_eq!(c.u_max, p.u_max);
+    assert_eq!(c.train_size, p.train_size);
+    assert_eq!(c.global_batch(), 12_000); // the paper's m
+}
+
+#[test]
+fn missing_config_file_is_an_error() {
+    assert!(ExperimentConfig::from_file(Path::new("configs/nope.toml")).is_err());
+}

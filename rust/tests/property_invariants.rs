@@ -1,0 +1,241 @@
+//! Property-based tests over the coordinator's analytical substrates
+//! (proptest is unavailable offline; this is a seeded random-sweep driver
+//! with the same spirit: hundreds of generated cases per invariant, with
+//! the failing case's parameters printed by the assert messages).
+
+use codedfedl::allocation::{expected_return, optimal_load, solve, NodeSpec};
+use codedfedl::coding;
+use codedfedl::conf::parse;
+use codedfedl::delay::NodeParams;
+use codedfedl::numerics::lambert_w_m1;
+use codedfedl::rng::Rng;
+use codedfedl::tensor::Mat;
+
+/// Draw a random but valid node from the plausible MEC parameter ranges.
+fn arb_node(rng: &mut Rng) -> NodeParams {
+    NodeParams {
+        mu: 0.05 + rng.next_f64() * 100.0,
+        alpha: 0.2 + rng.next_f64() * 40.0,
+        tau: rng.next_f64() * 20.0,
+        p: rng.next_f64() * 0.95,
+    }
+}
+
+#[test]
+fn prop_cdf_is_a_cdf() {
+    // 0 ≤ F ≤ 1, nondecreasing in t, for random nodes and loads.
+    let mut rng = Rng::seed_from(101);
+    for case in 0..300 {
+        let n = arb_node(&mut rng);
+        let ell = rng.next_f64() * 500.0;
+        let scale = 0.2 + rng.next_f64();
+        let mut prev = 0.0;
+        for i in 0..40 {
+            let t = (i as f64 + 1.0) * scale;
+            let c = n.cdf(t, ell);
+            assert!(
+                (0.0..=1.0).contains(&c),
+                "case {case}: cdf {c} out of range at {n:?}, ell={ell}, t={t}"
+            );
+            assert!(
+                c >= prev - 1e-12,
+                "case {case}: cdf not monotone at {n:?}, ell={ell}, t={t}"
+            );
+            prev = c;
+        }
+    }
+}
+
+#[test]
+fn prop_cdf_decreasing_in_load() {
+    let mut rng = Rng::seed_from(102);
+    for case in 0..300 {
+        let n = arb_node(&mut rng);
+        let t = 2.0 * n.tau + 1.0 + rng.next_f64() * 50.0;
+        let l1 = rng.next_f64() * 100.0;
+        let l2 = l1 + rng.next_f64() * 100.0 + 1e-9;
+        assert!(
+            n.cdf(t, l1) >= n.cdf(t, l2) - 1e-12,
+            "case {case}: more load should not complete earlier ({n:?}, t={t}, {l1} vs {l2})"
+        );
+    }
+}
+
+#[test]
+fn prop_optimizer_dominates_grid() {
+    // optimal_load's value must match-or-beat a dense grid scan.
+    let mut rng = Rng::seed_from(103);
+    for case in 0..60 {
+        let n = arb_node(&mut rng);
+        let t = 2.0 * n.tau + 0.5 + rng.next_f64() * 30.0;
+        let cap = 1.0 + rng.next_f64() * 300.0;
+        let (_, er) = optimal_load(&n, t, cap);
+        let grid = (1..=800)
+            .map(|i| expected_return(&n, t, cap * i as f64 / 800.0))
+            .fold(0.0f64, f64::max);
+        assert!(
+            er >= grid - 1e-6 * (1.0 + grid),
+            "case {case}: optimizer {er} < grid {grid} at {n:?}, t={t}, cap={cap}"
+        );
+    }
+}
+
+#[test]
+fn prop_optimized_return_monotone_in_t() {
+    let mut rng = Rng::seed_from(104);
+    for case in 0..60 {
+        let n = arb_node(&mut rng);
+        let cap = 1.0 + rng.next_f64() * 200.0;
+        let scale = 0.3 + rng.next_f64() * 0.5;
+        let mut prev = -1.0;
+        for i in 1..30 {
+            let t = i as f64 * scale;
+            let (_, er) = optimal_load(&n, t, cap);
+            assert!(
+                er >= prev - 1e-9,
+                "case {case}: optimized return dipped at {n:?}, t={t}"
+            );
+            prev = er;
+        }
+    }
+}
+
+#[test]
+fn prop_solve_hits_target_and_loads_feasible() {
+    let mut rng = Rng::seed_from(105);
+    for case in 0..25 {
+        let n_clients = 2 + rng.next_below(8);
+        let cap = 20.0 + rng.next_f64() * 80.0;
+        let mut nodes: Vec<NodeSpec> = (0..n_clients)
+            .map(|_| NodeSpec { params: arb_node(&mut rng), max_load: cap })
+            .collect();
+        // reliable fast server provides the feasibility slack
+        nodes.push(NodeSpec {
+            params: NodeParams { mu: 500.0, alpha: 50.0, tau: 0.01, p: 0.0 },
+            max_load: cap * n_clients as f64,
+        });
+        let m = cap * n_clients as f64; // clients alone can't reach it
+        match solve(&nodes, m) {
+            Ok(alloc) => {
+                assert!(
+                    (alloc.total_expected_return() - m).abs() < 1e-3 * m,
+                    "case {case}: E[R]={} != m={m}",
+                    alloc.total_expected_return()
+                );
+                for (l, n) in alloc.loads.iter().zip(&nodes) {
+                    assert!(*l >= -1e-9 && *l <= n.max_load + 1e-6, "case {case}");
+                }
+                for p in &alloc.pnr {
+                    assert!((0.0..=1.0).contains(p), "case {case}: pnr {p}");
+                }
+            }
+            Err(e) => panic!("case {case}: unexpectedly infeasible: {e}"),
+        }
+    }
+}
+
+#[test]
+fn prop_lambert_w_inverts_everywhere() {
+    let mut rng = Rng::seed_from(106);
+    let e_inv = std::f64::consts::E.recip();
+    for _ in 0..2000 {
+        // log-uniform over (-1/e, 0)
+        let x = -e_inv * rng.next_f64().max(1e-12).powf(3.0);
+        let w = lambert_w_m1(x);
+        assert!(w <= -1.0 + 1e-9, "W_-1({x}) = {w}");
+        let back = w * w.exp();
+        assert!(
+            (back - x).abs() <= 1e-9 * x.abs().max(1e-300),
+            "inversion failed: x={x}, w={w}, back={back}"
+        );
+    }
+}
+
+#[test]
+fn prop_sampled_delay_consistent_with_cdf() {
+    // Kolmogorov-style agreement between sampler and analytic CDF.
+    let mut rng = Rng::seed_from(107);
+    for _ in 0..5 {
+        let n = NodeParams {
+            mu: 1.0 + rng.next_f64() * 10.0,
+            alpha: 0.5 + rng.next_f64() * 5.0,
+            tau: 0.1 + rng.next_f64(),
+            p: rng.next_f64() * 0.6,
+        };
+        let ell = 1.0 + rng.next_f64() * 20.0;
+        let t = n.mean_delay(ell) * (0.5 + rng.next_f64());
+        let trials = 40_000;
+        let hits = (0..trials).filter(|_| n.sample_delay(ell, &mut rng) <= t).count();
+        let emp = hits as f64 / trials as f64;
+        let exact = n.cdf(t, ell);
+        assert!(
+            (emp - exact).abs() < 0.015,
+            "sampler/cdf mismatch: {n:?} ell={ell} t={t}: {emp} vs {exact}"
+        );
+    }
+}
+
+#[test]
+fn prop_weight_vector_squares_to_pnr() {
+    let mut rng = Rng::seed_from(108);
+    for _ in 0..200 {
+        let ell = 1 + rng.next_below(100);
+        let ell_star = rng.next_below(ell + 1);
+        let pnr = rng.next_f64();
+        let processed = coding::sample_processed(ell, ell_star, &mut rng);
+        let w = coding::weight_vector(&processed, pnr);
+        for (wi, pi) in w.iter().zip(&processed) {
+            let expect = if *pi { pnr as f32 } else { 1.0 };
+            assert!((wi * wi - expect).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn prop_parity_aggregation_linear() {
+    // Σ encode_j == encode of concatenation — random shapes.
+    let mut rng = Rng::seed_from(109);
+    for _ in 0..50 {
+        let u = 1 + rng.next_below(12);
+        let k = 1 + rng.next_below(6);
+        let n_clients = 1 + rng.next_below(4);
+        let mut parts = Vec::new();
+        let mut global = Mat::zeros(u, k);
+        for _ in 0..n_clients {
+            let l = 1 + rng.next_below(10);
+            let mut g = Mat::zeros(u, l);
+            rng.fill_normal_f32(g.as_mut_slice());
+            let mut d = Mat::zeros(l, k);
+            rng.fill_normal_f32(d.as_mut_slice());
+            let part = g.matmul_ref(&d);
+            global.axpy(1.0, &part);
+            parts.push(part);
+        }
+        let agg = coding::aggregate_parity(&parts);
+        assert!(agg.max_abs_diff(&global) < 1e-4);
+    }
+}
+
+#[test]
+fn prop_conf_parser_roundtrip() {
+    // print(parse(x)) == parse(print(parse(x))) over generated docs.
+    let mut rng = Rng::seed_from(110);
+    for _ in 0..100 {
+        let mut text = String::from("[s]\n");
+        let n_keys = 1 + rng.next_below(6);
+        for k in 0..n_keys {
+            match rng.next_below(4) {
+                0 => text.push_str(&format!("k{k} = {}\n", rng.next_below(1000))),
+                1 => text.push_str(&format!("k{k} = {:.6}\n", rng.next_f64() * 100.0)),
+                2 => text.push_str(&format!("k{k} = \"v{}\"\n", rng.next_below(10))),
+                _ => text.push_str(&format!(
+                    "k{k} = [{}, {}]\n",
+                    rng.next_below(10),
+                    rng.next_below(10)
+                )),
+            }
+        }
+        let doc = parse(&text).expect("generated config must parse");
+        assert_eq!(doc["s"].len(), n_keys);
+    }
+}

@@ -1,0 +1,174 @@
+//! Integration: the PJRT runtime against Rust-side reference math.
+//!
+//! Requires the `tiny` artifacts (`make artifacts`). These tests prove the
+//! full AOT bridge — python/jax/pallas → HLO text → PJRT compile →
+//! execute — is numerically faithful, including the zero-padding policy.
+
+use codedfedl::rng::Rng;
+use codedfedl::runtime::{Runtime, RuntimeShapes};
+use codedfedl::tensor::Mat;
+
+const TINY: RuntimeShapes =
+    RuntimeShapes { d: 32, q: 64, c: 10, l_client: 40, u_max: 128, b_embed: 40 };
+
+fn runtime() -> Runtime {
+    Runtime::load(std::path::Path::new("artifacts"), TINY)
+        .expect("tiny artifacts missing — run `make artifacts`")
+}
+
+fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+    let mut m = Mat::zeros(rows, cols);
+    rng.fill_normal_f32(m.as_mut_slice());
+    m
+}
+
+/// max |a-b| helper with a tolerance suited to f32 matmuls at these sizes.
+fn assert_close(a: &Mat, b: &Mat, tol: f32) {
+    let d = a.max_abs_diff(b);
+    assert!(d <= tol, "max diff {d} > {tol}");
+}
+
+#[test]
+fn embed_matches_reference() {
+    let rt = runtime();
+    let mut rng = Rng::seed_from(1);
+    let x = randn(40, 32, &mut rng);
+    let omega = randn(32, 64, &mut rng);
+    let delta: Vec<f32> = (0..64).map(|_| rng.next_f32() * 6.28).collect();
+    let out = rt.embed(&x, &omega, &delta).unwrap();
+    // reference: sqrt(2/q) cos(x @ omega + delta)
+    let xo = x.matmul_ref(&omega);
+    let scale = (2.0f32 / 64.0).sqrt();
+    let expect = Mat::from_fn(40, 64, |r, c| scale * (xo.get(r, c) + delta[c]).cos());
+    assert_close(&out, &expect, 2e-5);
+}
+
+#[test]
+fn embed_chunks_and_pads_ragged_input() {
+    let rt = runtime();
+    let mut rng = Rng::seed_from(2);
+    // 100 rows with b_embed = 40: chunks 40/40/20(padded)
+    let x = randn(100, 32, &mut rng);
+    let omega = randn(32, 64, &mut rng);
+    let delta = vec![0.5f32; 64];
+    let full = rt.embed(&x, &omega, &delta).unwrap();
+    assert_eq!(full.rows(), 100);
+    // each row independent: row 95 must equal embedding of just that row
+    let single = rt.embed(&x.rows_slice(95, 1), &omega, &delta).unwrap();
+    let row_diff: f32 = full
+        .row(95)
+        .iter()
+        .zip(single.row(0))
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(row_diff < 1e-6, "{row_diff}");
+}
+
+#[test]
+fn grad_matches_reference() {
+    let rt = runtime();
+    let mut rng = Rng::seed_from(3);
+    let xhat = randn(40, 64, &mut rng);
+    let y = randn(40, 10, &mut rng);
+    let theta = randn(64, 10, &mut rng);
+    let mask: Vec<f32> = (0..40).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect();
+    let g = rt.grad(&xhat, &y, &theta, &mask).unwrap();
+    // reference: xhat^T diag(mask) (xhat theta - y)
+    let pred = xhat.matmul_ref(&theta);
+    let mut resid = Mat::zeros(40, 10);
+    for r in 0..40 {
+        for c in 0..10 {
+            resid.set(r, c, mask[r] * (pred.get(r, c) - y.get(r, c)));
+        }
+    }
+    let xt = Mat::from_fn(64, 40, |r, c| xhat.get(c, r));
+    let expect = xt.matmul_ref(&resid);
+    assert_close(&g, &expect, 1e-3);
+}
+
+#[test]
+fn grad_partial_rows_pad_exactly() {
+    // 25 rows (< l_client = 40) must give the same gradient as the same 25
+    // rows explicitly zero-padded by the caller.
+    let rt = runtime();
+    let mut rng = Rng::seed_from(4);
+    let xhat = randn(25, 64, &mut rng);
+    let y = randn(25, 10, &mut rng);
+    let theta = randn(64, 10, &mut rng);
+    let mask = vec![1.0f32; 25];
+    let g_small = rt.grad(&xhat, &y, &theta, &mask).unwrap();
+    let mut mask_p = mask.clone();
+    mask_p.resize(40, 1.0); // even mask=1 on zero rows contributes 0
+    let g_pad = rt
+        .grad(&xhat.pad_rows(40), &y.pad_rows(40), &theta, &mask_p)
+        .unwrap();
+    assert_close(&g_small, &g_pad, 1e-4);
+}
+
+#[test]
+fn grad_uses_server_shape_for_parity_rows() {
+    let rt = runtime();
+    let mut rng = Rng::seed_from(5);
+    // 100 rows: between l_client=40 and u_max=128 → server executable.
+    let xhat = randn(100, 64, &mut rng);
+    let y = randn(100, 10, &mut rng);
+    let theta = randn(64, 10, &mut rng);
+    let g = rt.grad(&xhat, &y, &theta, &vec![1.0; 100]).unwrap();
+    assert_eq!((g.rows(), g.cols()), (64, 10));
+    // too many rows must fail loudly
+    let big = randn(200, 64, &mut rng);
+    let yb = randn(200, 10, &mut rng);
+    assert!(rt.grad(&big, &yb, &theta, &vec![1.0; 200]).is_err());
+}
+
+#[test]
+fn encode_matches_reference_and_pads_generator() {
+    let rt = runtime();
+    let mut rng = Rng::seed_from(6);
+    let u = 100; // < u_max = 128: G zero-padded inside
+    let g = randn(u, 40, &mut rng);
+    let w: Vec<f32> = (0..40).map(|_| rng.next_f32()).collect();
+    let xhat = randn(40, 64, &mut rng);
+    let y = randn(40, 10, &mut rng);
+    let (xp, yp) = rt.encode(&g, &w, &xhat, &y).unwrap();
+    assert_eq!((xp.rows(), xp.cols()), (128, 64));
+    assert_eq!((yp.rows(), yp.cols()), (128, 10));
+    // reference on the live rows
+    let gw = Mat::from_fn(u, 40, |r, c| g.get(r, c) * w[c]);
+    let expect_x = gw.matmul_ref(&xhat);
+    assert_close(&xp.rows_slice(0, u), &expect_x, 1e-3);
+    // padded rows are exactly zero
+    assert!(xp.rows_slice(u, 128 - u).as_slice().iter().all(|&v| v == 0.0));
+    assert!(yp.rows_slice(u, 128 - u).as_slice().iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn predict_matches_reference() {
+    let rt = runtime();
+    let mut rng = Rng::seed_from(7);
+    let xhat = randn(90, 64, &mut rng); // ragged vs b_embed = 40
+    let theta = randn(64, 10, &mut rng);
+    let logits = rt.predict(&xhat, &theta).unwrap();
+    let expect = xhat.matmul_ref(&theta);
+    assert_close(&logits, &expect, 1e-3);
+}
+
+#[test]
+fn runtime_rejects_missing_shapes() {
+    let bad = RuntimeShapes { d: 31, ..TINY };
+    let err = Runtime::load(std::path::Path::new("artifacts"), bad)
+        .err()
+        .expect("should fail")
+        .to_string();
+    assert!(err.contains("rff_embed"), "{err}");
+}
+
+#[test]
+fn shape_validation_errors_are_loud() {
+    let rt = runtime();
+    let mut rng = Rng::seed_from(8);
+    let xhat = randn(40, 63, &mut rng); // wrong q
+    let y = randn(40, 10, &mut rng);
+    let theta = randn(64, 10, &mut rng);
+    assert!(rt.grad(&xhat, &y, &theta, &vec![1.0; 40]).is_err());
+}

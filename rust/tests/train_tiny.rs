@@ -1,0 +1,126 @@
+//! Integration: full federated training on the tiny preset, all schemes.
+//!
+//! Requires the `tiny` artifacts. Asserts the paper's qualitative claims
+//! at smoke scale plus exact reproducibility.
+
+use codedfedl::benchutil;
+use codedfedl::conf::{ExperimentConfig, Scheme};
+use codedfedl::coordinator::{run_scheme, FedSetup};
+
+fn tiny(epochs: usize) -> ExperimentConfig {
+    ExperimentConfig { epochs, ..ExperimentConfig::tiny() }
+}
+
+#[test]
+fn all_schemes_run_and_learn() {
+    let cfg = tiny(30);
+    let schemes = [
+        Scheme::NaiveUncoded,
+        Scheme::GreedyUncoded { psi: 0.2 },
+        Scheme::Coded { delta: 0.3 },
+    ];
+    let (_, results) = benchutil::run_experiment(&cfg, &schemes).unwrap();
+    for (s, r) in &results {
+        assert_eq!(r.history.points.len(), cfg.total_iters());
+        // 10-class random = 0.1; require real learning signal.
+        assert!(
+            r.history.best_accuracy() > 0.25,
+            "{} only reached {}",
+            s.label(),
+            r.history.best_accuracy()
+        );
+        // simulated clock is strictly increasing and positive
+        let mut prev = 0.0;
+        for p in &r.history.points {
+            assert!(p.sim_time > prev);
+            prev = p.sim_time;
+        }
+        // loss is finite (no divergence under the clamped lr)
+        assert!(r.history.points.iter().all(|p| p.train_loss.is_finite()));
+    }
+}
+
+#[test]
+fn coded_round_time_is_deadline_and_faster_than_naive() {
+    let cfg = tiny(8);
+    let (_, results) = benchutil::run_experiment(
+        &cfg,
+        &[Scheme::NaiveUncoded, Scheme::Coded { delta: 0.3 }],
+    )
+    .unwrap();
+    let naive = &results[0].1;
+    let coded = &results[1].1;
+    let t_star = coded.t_star.unwrap();
+    assert!(t_star > 0.0);
+    assert!(coded.u_star.unwrap() >= 1);
+    // every coded round costs exactly t*
+    let pts = &coded.history.points;
+    for w in pts.windows(2) {
+        let dt = w[1].sim_time - w[0].sim_time;
+        assert!((dt - t_star).abs() < 1e-9, "round cost {dt} != t* {t_star}");
+    }
+    // per-iteration simulated cost must beat waiting for every straggler
+    let naive_per_iter = naive.history.total_sim_time() / naive.history.points.len() as f64;
+    let coded_per_iter =
+        (coded.history.total_sim_time() - coded.parity_overhead) / pts.len() as f64;
+    assert!(
+        coded_per_iter < naive_per_iter,
+        "coded {coded_per_iter} !< naive {naive_per_iter}"
+    );
+}
+
+#[test]
+fn runs_are_exactly_reproducible() {
+    let cfg = tiny(4);
+    let run = || {
+        let rt = benchutil::load_runtime(&cfg).unwrap();
+        let setup = FedSetup::build(&cfg, &rt).unwrap();
+        run_scheme(&setup, &rt, Scheme::Coded { delta: 0.3 }).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.t_star, b.t_star);
+    assert_eq!(a.theta.as_slice(), b.theta.as_slice());
+    for (pa, pb) in a.history.points.iter().zip(&b.history.points) {
+        assert_eq!(pa.accuracy, pb.accuracy);
+        assert_eq!(pa.sim_time, pb.sim_time);
+    }
+}
+
+#[test]
+fn different_seeds_change_the_run() {
+    let cfg_a = tiny(3);
+    let cfg_b = ExperimentConfig { seed: 999, ..tiny(3) };
+    let rt = benchutil::load_runtime(&cfg_a).unwrap();
+    let sa = FedSetup::build(&cfg_a, &rt).unwrap();
+    let sb = FedSetup::build(&cfg_b, &rt).unwrap();
+    let ra = run_scheme(&sa, &rt, Scheme::NaiveUncoded).unwrap();
+    let rb = run_scheme(&sb, &rt, Scheme::NaiveUncoded).unwrap();
+    assert_ne!(ra.theta.as_slice(), rb.theta.as_slice());
+}
+
+#[test]
+fn greedy_discards_make_it_cheaper_per_round_than_naive() {
+    let cfg = tiny(6);
+    let (_, results) = benchutil::run_experiment(
+        &cfg,
+        &[Scheme::NaiveUncoded, Scheme::GreedyUncoded { psi: 0.4 }],
+    )
+    .unwrap();
+    let naive_t = results[0].1.history.total_sim_time();
+    let greedy_t = results[1].1.history.total_sim_time();
+    assert!(greedy_t < naive_t, "greedy {greedy_t} !< naive {naive_t}");
+}
+
+#[test]
+fn setup_smoothness_is_positive_and_lr_clamped() {
+    let cfg = tiny(2);
+    let rt = benchutil::load_runtime(&cfg).unwrap();
+    let setup = FedSetup::build(&cfg, &rt).unwrap();
+    assert!(setup.smoothness > 0.0);
+    let lr0 = setup.effective_lr(0);
+    assert!(lr0 > 0.0 && lr0 <= cfg.lr);
+    // decay still decays
+    let last = setup.effective_lr(cfg.epochs.max(4));
+    assert!(last <= lr0);
+}
