@@ -13,26 +13,24 @@
 //! cargo run --release --example ablations
 //! ```
 
-use codedfedl::benchutil::load_runtime;
-use codedfedl::conf::{ExperimentConfig, Scheme};
-use codedfedl::coordinator::{run_scheme, FedSetup};
 use codedfedl::data::shard;
 use codedfedl::metrics::export;
 use codedfedl::rng::Rng;
+use codedfedl::schemes::{CodedFedL, GreedyUncoded, NaiveUncoded};
+use codedfedl::ExperimentBuilder;
 
 fn main() -> anyhow::Result<()> {
-    let cfg = ExperimentConfig { epochs: 20, ..ExperimentConfig::tiny() };
-    let rt = load_runtime(&cfg)?;
+    let builder = ExperimentBuilder::preset("tiny")?.epochs(20);
+    let cfg = builder.config().clone();
 
     // ---------- ablation 1: non-IID vs IID sharding -----------------
     // The library's setup always shards non-IID (the paper's setting);
     // the IID control reuses shard::iid_shards on the same generated
     // dataset to quantify the class-starvation effect directly.
     println!("=== ablation 1: greedy uncoded under non-IID vs IID sharding ===");
-    let setup = FedSetup::build(&cfg, &rt)?;
-    let greedy = Scheme::GreedyUncoded { psi: 0.4 };
-    let noniid = run_scheme(&setup, &rt, greedy)?;
-    let naive = run_scheme(&setup, &rt, Scheme::NaiveUncoded)?;
+    let session = builder.clone().build()?;
+    let noniid = session.run(&mut GreedyUncoded::new(0.4))?;
+    let naive = session.run(&mut NaiveUncoded::new())?;
 
     // IID control: same client count and data volume, shuffled shards.
     // (Demonstrated via the library API on freshly generated data.)
@@ -54,7 +52,7 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let noniid_classes: Vec<usize> = (0..cfg.clients)
         .map(|j| {
-            setup.client_data[j].y[0]
+            session.setup().client_data[j].y[0]
                 .argmax_rows()
                 .into_iter()
                 .collect::<std::collections::HashSet<_>>()
@@ -82,9 +80,8 @@ fn main() -> anyhow::Result<()> {
         codedfedl::coding::GeneratorKind::Normal,
         codedfedl::coding::GeneratorKind::Rademacher,
     ] {
-        let cfg_g = ExperimentConfig { generator, ..cfg.clone() };
-        let setup_g = FedSetup::build(&cfg_g, &rt)?;
-        let out = run_scheme(&setup_g, &rt, Scheme::Coded { delta: 0.3 })?;
+        let session_g = builder.clone().generator(generator).build()?;
+        let out = session_g.run(&mut CodedFedL::new(0.3))?;
         println!(
             "{generator:?}: best acc {:.3}, t* = {:.3} s",
             out.history.best_accuracy(),

@@ -1,10 +1,11 @@
 //! End-to-end validation driver (DESIGN.md §4, EXPERIMENTS.md §E2E).
 //!
-//! Exercises every layer on a real small workload: generates the default
-//! 30-client non-IID experiment, runs all three schemes to completion
-//! through the AOT-compiled PJRT artifacts, logs the loss curve, the
-//! accuracy curves, the gain table and the privacy budget, and writes
-//! `e2e_results.txt`.
+//! Exercises every layer on a real small workload through the session
+//! API: builds the default 30-client non-IID experiment with
+//! `ExperimentBuilder`, runs all three schemes to completion on one
+//! `Session`, streams the coded run's loss curve from the engine's
+//! `RoundEvent`s, prints the accuracy curves, the gain table and the
+//! privacy budget, and writes `e2e_results.txt`.
 //!
 //! ```sh
 //! cargo run --release --example end_to_end              # ~2-3 min
@@ -14,20 +15,22 @@
 use std::fmt::Write as _;
 
 use codedfedl::benchutil;
-use codedfedl::conf::{ExperimentConfig, Scheme};
+use codedfedl::coordinator::EventLog;
 use codedfedl::metrics::GainRow;
 use codedfedl::privacy;
+use codedfedl::schemes::{CodedFedL, GreedyUncoded, NaiveUncoded};
+use codedfedl::ExperimentBuilder;
 
 fn main() -> anyhow::Result<()> {
     let epochs: usize = std::env::var("EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(20);
     let delta: f64 = std::env::var("DELTA").ok().and_then(|s| s.parse().ok()).unwrap_or(0.2);
     let psi: f64 = std::env::var("PSI").ok().and_then(|s| s.parse().ok()).unwrap_or(0.2);
-    let cfg = ExperimentConfig {
-        epochs,
+    let session = ExperimentBuilder::new()
+        .epochs(epochs)
         // paper decay shape (40/70, 65/70) scaled to the epoch budget
-        lr_decay_epochs: vec![epochs * 40 / 70, epochs * 65 / 70],
-        ..ExperimentConfig::default()
-    };
+        .lr_decay_epochs(vec![epochs * 40 / 70, epochs * 65 / 70])
+        .build()?;
+    let cfg = session.config();
     let mut report = String::new();
 
     writeln!(report, "# CodedFedL end-to-end run")?;
@@ -44,23 +47,22 @@ fn main() -> anyhow::Result<()> {
     )?;
 
     let wall0 = std::time::Instant::now();
-    let schemes = [
-        Scheme::NaiveUncoded,
-        Scheme::GreedyUncoded { psi },
-        Scheme::Coded { delta },
-    ];
-    let (setup, results) = benchutil::run_experiment(&cfg, &schemes)?;
+    let naive = session.run(&mut NaiveUncoded::new())?;
+    let greedy = session.run(&mut GreedyUncoded::new(psi))?;
+    // The coded run records the engine's per-round event stream — the same
+    // stream the CLI progress printer and the tests consume.
+    let mut events = EventLog::default();
+    let coded = session.run_observed(&mut CodedFedL::new(delta), &mut events)?;
     writeln!(report, "executor wall time: {:.1} s", wall0.elapsed().as_secs_f64())?;
-    writeln!(report, "measured smoothness L = {:.4}", setup.smoothness)?;
+    writeln!(report, "measured smoothness L = {:.4}", session.setup().smoothness)?;
 
-    // --- loss curve of the coded run (the required loss log) ---
-    let coded = &results[2].1;
+    // --- loss curve of the coded run (from RoundEvents) ---
     writeln!(report, "\n## loss curve (coded, every 5th iter)")?;
-    for p in coded.history.points.iter().step_by(5) {
+    for ev in events.events.iter().step_by(5) {
         writeln!(
             report,
             "iter {:>4}  sim {:>10.1} s  loss {:.5}  acc {:.4}",
-            p.iter, p.sim_time, p.train_loss, p.accuracy
+            ev.iter, ev.clock, ev.loss, ev.acc
         )?;
     }
     if let (Some(t), Some(u)) = (coded.t_star, coded.u_star) {
@@ -72,8 +74,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // --- accuracy vs simulated time (Fig. 4(c) shape) ---
-    let hists: Vec<&codedfedl::metrics::History> =
-        results.iter().map(|(_, r)| &r.history).collect();
+    let hists = [&naive.history, &greedy.history, &coded.history];
     writeln!(
         report,
         "\n{}",
@@ -87,11 +88,9 @@ fn main() -> anyhow::Result<()> {
 
     // --- gain table (Tables II/III shape) ---
     writeln!(report, "## time-to-accuracy gains")?;
-    let naive = &results[0].1.history;
-    let greedy = &results[1].1.history;
-    let best = naive.best_accuracy();
+    let best = naive.history.best_accuracy();
     for frac in [0.9, 0.95, 0.99] {
-        let row = GainRow::compute(frac * best, naive, greedy, &coded.history);
+        let row = GainRow::compute(frac * best, &naive.history, &greedy.history, &coded.history);
         writeln!(report, "{}", row.render())?;
     }
 
@@ -99,7 +98,7 @@ fn main() -> anyhow::Result<()> {
     writeln!(report, "\n## privacy (eq. 62), u = u*")?;
     let u = coded.u_star.unwrap_or(64);
     let mut worst = 0.0f64;
-    for cd in &setup.client_data {
+    for cd in &session.setup().client_data {
         worst = worst.max(privacy::epsilon_mi_dp(&cd.xhat[0], u));
     }
     writeln!(report, "worst-case client ε = {worst:.4} bits at u = {u}")?;
@@ -111,8 +110,12 @@ fn main() -> anyhow::Result<()> {
         coded.history.best_accuracy()
     );
     anyhow::ensure!(
-        coded.history.total_sim_time() < naive.total_sim_time(),
+        coded.history.total_sim_time() < naive.history.total_sim_time(),
         "coded must beat naive on simulated time"
+    );
+    anyhow::ensure!(
+        events.events.len() == cfg.total_iters(),
+        "one RoundEvent per round"
     );
     let losses: Vec<f64> = coded.history.points.iter().map(|p| p.train_loss).collect();
     anyhow::ensure!(

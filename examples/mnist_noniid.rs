@@ -11,19 +11,21 @@
 //! automatically if placed under `data/mnist/`).
 
 use codedfedl::benchutil;
-use codedfedl::conf::{ExperimentConfig, Scheme};
 use codedfedl::metrics::accuracy;
+use codedfedl::schemes::SchemeSpec;
+use codedfedl::ExperimentBuilder;
 
 fn main() -> anyhow::Result<()> {
     let epochs: usize = std::env::var("EPOCHS").ok().and_then(|s| s.parse().ok()).unwrap_or(16);
-    let cfg = ExperimentConfig { epochs, ..ExperimentConfig::default() };
+    let cfg = ExperimentBuilder::new().epochs(epochs).config().clone();
 
     let schemes = [
-        Scheme::NaiveUncoded,
-        Scheme::GreedyUncoded { psi: 0.2 },
-        Scheme::Coded { delta: 0.2 },
+        SchemeSpec::NaiveUncoded,
+        SchemeSpec::GreedyUncoded { psi: 0.2 },
+        SchemeSpec::Coded { delta: 0.2 },
     ];
-    let (setup, results) = benchutil::run_experiment(&cfg, &schemes)?;
+    let (session, results) = benchutil::run_experiment(&cfg, &schemes)?;
+    let setup = session.setup();
 
     // --- which classes do the slowest clients own? ---
     println!("=== non-IID placement: classes owned by the 6 slowest clients ===");
@@ -31,8 +33,7 @@ fn main() -> anyhow::Result<()> {
     order.sort_by(|&a, &b| {
         setup.clients[b]
             .mean_delay(cfg.local_batch as f64)
-            .partial_cmp(&setup.clients[a].mean_delay(cfg.local_batch as f64))
-            .unwrap()
+            .total_cmp(&setup.clients[a].mean_delay(cfg.local_batch as f64))
     });
     for &j in order.iter().take(6) {
         // labels of client j's first mini-batch (one-hot rows → argmax)
@@ -60,7 +61,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- per-class recall under each scheme ---
     println!("=== per-class recall of the final models ===");
-    let rt = benchutil::load_runtime(&cfg)?;
+    let rt = session.runtime();
     print!("{:<18}", "scheme");
     for c in 0..cfg.classes {
         print!("  c{c}   ");

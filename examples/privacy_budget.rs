@@ -9,20 +9,16 @@
 //! cargo run --release --example privacy_budget
 //! ```
 
-use codedfedl::benchutil;
-use codedfedl::conf::ExperimentConfig;
-use codedfedl::coordinator::FedSetup;
 use codedfedl::privacy;
 use codedfedl::tensor::Mat;
+use codedfedl::ExperimentBuilder;
 
 fn main() -> anyhow::Result<()> {
-    let cfg = ExperimentConfig { epochs: 1, ..ExperimentConfig::tiny() };
-    let rt = benchutil::load_runtime(&cfg)?;
-    let setup = FedSetup::build(&cfg, &rt)?;
+    let session = ExperimentBuilder::preset("tiny")?.epochs(1).build()?;
 
     println!("=== per-client ε-MI-DP for sharing parity data (eq. 62) ===");
     println!("{:>6} {:>12} {:>10} {:>10} {:>10}", "client", "f(Xhat)", "u=32", "u=64", "u=128");
-    for (j, cd) in setup.client_data.iter().enumerate() {
+    for (j, cd) in session.setup().client_data.iter().enumerate() {
         let xhat = &cd.xhat[0];
         let f = privacy::concentration_f(xhat);
         let eps: Vec<f64> = [32, 64, 128]

@@ -1,29 +1,30 @@
 //! Quickstart: train CodedFedL on the tiny preset in a few seconds.
 //!
 //! ```sh
-//! make artifacts                      # once
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Walks the full public API: config → runtime → setup → scheme run →
-//! metrics.
+//! Walks the canonical public API: **ExperimentBuilder → Session →
+//! Scheme runs → metrics**. One `Session` owns the shared data, fleet and
+//! runtime; every scheme you run on it sees identical conditions, which is
+//! what makes the comparison fair.
 
-use codedfedl::benchutil;
-use codedfedl::conf::{ExperimentConfig, Scheme};
+use codedfedl::schemes::{CodedFedL, NaiveUncoded};
+use codedfedl::ExperimentBuilder;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Pick a scale. `tiny` matches the `tiny` AOT artifact preset.
-    let cfg = ExperimentConfig { epochs: 40, ..ExperimentConfig::tiny() };
+    // 1. Build a session: pick a preset, override fields, `build()`.
+    //    (Validation errors name the offending config field.)
+    let session = ExperimentBuilder::preset("tiny")?.epochs(40).build()?;
+    let cfg = session.config();
     println!(
-        "CodedFedL quickstart: n={} clients, q={}, m={} per step",
+        "CodedFedL quickstart: n={} clients, q={}, m={} per step ({} backend)",
         cfg.clients,
         cfg.q,
-        cfg.global_batch()
+        cfg.global_batch(),
+        session.runtime().backend_name(),
     );
-
-    // 2. Run naive uncoded vs CodedFedL on the same fleet + data.
-    let schemes = [Scheme::NaiveUncoded, Scheme::Coded { delta: 0.3 }];
-    let (setup, results) = benchutil::run_experiment(&cfg, &schemes)?;
+    let setup = session.setup();
     println!(
         "fleet: fastest client mu={:.2} pts/s, slowest mu={:.2} pts/s, smoothness L={:.3}",
         setup.clients.iter().map(|c| c.mu).fold(0.0, f64::max),
@@ -31,9 +32,15 @@ fn main() -> anyhow::Result<()> {
         setup.smoothness,
     );
 
+    // 2. Run naive uncoded vs CodedFedL on the same fleet + data. Schemes
+    //    are plain structs implementing the `Scheme` trait — write your
+    //    own and pass it to `session.run` the same way.
+    let naive = session.run(&mut NaiveUncoded::new())?;
+    let coded = session.run(&mut CodedFedL::new(0.3))?;
+
     // 3. Inspect outcomes.
-    for (scheme, out) in &results {
-        println!("\n=== {} ===", scheme.label());
+    for out in [&naive, &coded] {
+        println!("\n=== {} ===", out.history.label);
         if let (Some(t), Some(u)) = (out.t_star, out.u_star) {
             println!("deadline t* = {t:.3} s, redundancy u* = {u} parity rows/round");
         }
@@ -51,11 +58,9 @@ fn main() -> anyhow::Result<()> {
     }
 
     // 4. The headline comparison: simulated time per round.
-    let naive_t = results[0].1.history.total_sim_time();
-    let coded_t = results[1].1.history.total_sim_time();
     println!(
         "\ncoded/naive simulated-time ratio: {:.2}x faster",
-        naive_t / coded_t
+        naive.history.total_sim_time() / coded.history.total_sim_time()
     );
     Ok(())
 }

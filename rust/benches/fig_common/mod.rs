@@ -8,9 +8,10 @@
 #![allow(dead_code)] // each bench uses the subset it needs
 
 use codedfedl::benchutil::{ascii_curves, run_experiment};
-use codedfedl::conf::{ExperimentConfig, Scheme};
+use codedfedl::conf::ExperimentConfig;
 use codedfedl::coordinator::TrainOutcome;
 use codedfedl::metrics::GainRow;
+use codedfedl::schemes::SchemeSpec as Scheme;
 
 pub fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)

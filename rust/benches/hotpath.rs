@@ -7,11 +7,12 @@
 
 use codedfedl::allocation::{self, NodeSpec};
 use codedfedl::benchutil::{bench, load_runtime, shapes_for};
-use codedfedl::conf::{ExperimentConfig, Scheme};
-use codedfedl::coordinator::{run_scheme, FedSetup};
+use codedfedl::conf::ExperimentConfig;
 use codedfedl::rng::Rng;
+use codedfedl::schemes::CodedFedL;
 use codedfedl::tensor::Mat;
 use codedfedl::topology::FleetSpec;
+use codedfedl::ExperimentBuilder;
 
 fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
     let mut m = Mat::zeros(rows, cols);
@@ -82,17 +83,14 @@ fn main() -> anyhow::Result<()> {
     });
 
     // --- one full coded training round, end to end (tiny preset) ---
-    let tiny = ExperimentConfig { epochs: 1, ..ExperimentConfig::tiny() };
-    let rt_tiny = load_runtime(&tiny)?;
-    let setup = FedSetup::build(&tiny, &rt_tiny)?;
+    let session = ExperimentBuilder::preset("tiny")?.epochs(1).build()?;
     bench("full coded epoch (tiny: 5 clients x 2 steps)", 1, 10, || {
-        std::hint::black_box(
-            run_scheme(&setup, &rt_tiny, Scheme::Coded { delta: 0.3 }).unwrap(),
-        );
+        std::hint::black_box(session.run(&mut CodedFedL::new(0.3)).unwrap());
     });
     println!(
-        "\nPJRT executions so far: {} (tiny runtime) — per-round exec count drives L3 overhead",
-        rt_tiny.exec_count.get()
+        "\n{} executions so far: {} (tiny runtime) — per-round exec count drives L3 overhead",
+        session.runtime().backend_name(),
+        session.runtime().exec_count.get()
     );
     Ok(())
 }

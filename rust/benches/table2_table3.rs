@@ -14,8 +14,8 @@
 mod fig_common;
 
 use codedfedl::benchutil::run_experiment;
-use codedfedl::conf::Scheme;
 use codedfedl::metrics::GainRow;
+use codedfedl::schemes::SchemeSpec as Scheme;
 
 fn main() -> anyhow::Result<()> {
     for dataset in ["mnist", "fashion"] {

@@ -168,14 +168,28 @@ pub fn max_total_return(nodes: &[NodeSpec], t: f64) -> f64 {
         .sum()
 }
 
-/// Errors from the two-step solver.
-#[derive(Debug, thiserror::Error)]
+/// Errors from the two-step solver (`thiserror` is unavailable offline,
+/// so `Display` and `Error` are hand-implemented).
+#[derive(Debug)]
 pub enum AllocError {
-    #[error("target return m={m} exceeds the system's supremum {sup} (need coding redundancy u_max > m - Σ ℓ_j)")]
     Infeasible { m: f64, sup: f64 },
-    #[error("invalid node parameters: {0}")]
     BadParams(String),
 }
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::Infeasible { m, sup } => write!(
+                f,
+                "target return m={m} exceeds the system's supremum {sup} \
+                 (need coding redundancy u_max > m - Σ ℓ_j)"
+            ),
+            AllocError::BadParams(msg) => write!(f, "invalid node parameters: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
 
 /// Two-step optimisation (paper eq. 23 via eq. 24–27): minimum deadline
 /// `t*` with `E[R(t*)] = m`, plus the optimal loads/redundancy at `t*`.

@@ -7,10 +7,12 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::conf::{ExperimentConfig, Scheme};
-use crate::coordinator::{run_scheme, FedSetup, TrainOutcome};
+use crate::conf::ExperimentConfig;
+use crate::coordinator::TrainOutcome;
+use crate::experiment::{ExperimentBuilder, Session};
 use crate::metrics::History;
 use crate::runtime::{Runtime, RuntimeShapes};
+use crate::schemes::SchemeSpec;
 
 /// Timing summary of one benchmark target.
 #[derive(Clone, Copy, Debug)]
@@ -72,35 +74,28 @@ pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Ti
     stats
 }
 
-/// Derive the runtime shape set from an experiment config (must agree with
-/// `python/compile/shapes.py`; the manifest check fails fast otherwise).
+/// Derive the runtime shape set from an experiment config (thin re-export
+/// of [`crate::experiment::shapes_for`] for bench ergonomics).
 pub fn shapes_for(cfg: &ExperimentConfig) -> RuntimeShapes {
-    RuntimeShapes {
-        d: cfg.dim,
-        q: cfg.q,
-        c: cfg.classes,
-        l_client: cfg.local_batch,
-        u_max: cfg.u_max,
-        b_embed: cfg.local_batch,
-    }
+    crate::experiment::shapes_for(cfg)
 }
 
 /// Load the runtime for a config.
 pub fn load_runtime(cfg: &ExperimentConfig) -> Result<Runtime> {
-    Runtime::load(std::path::Path::new(&cfg.artifacts_dir), shapes_for(cfg))
+    crate::experiment::load_runtime(cfg)
 }
 
-/// Build the setup and run each scheme on it (shared data/fleet).
+/// Build a [`Session`] for `cfg` and run each scheme spec on it (shared
+/// data/fleet — the paper's fair-comparison setup in one call).
 pub fn run_experiment(
     cfg: &ExperimentConfig,
-    schemes: &[Scheme],
-) -> Result<(FedSetup, Vec<(Scheme, TrainOutcome)>)> {
-    let rt = load_runtime(cfg)?;
-    let setup = FedSetup::build(cfg, &rt)?;
+    schemes: &[SchemeSpec],
+) -> Result<(Session, Vec<(SchemeSpec, TrainOutcome)>)> {
+    let session = ExperimentBuilder::from_config(cfg.clone()).build()?;
     let mut out = Vec::with_capacity(schemes.len());
     for &s in schemes {
         eprintln!("[run] scheme {} ...", s.label());
-        let r = run_scheme(&setup, &rt, s)?;
+        let r = session.run_spec(s)?;
         eprintln!(
             "[run]   final acc {:.3}  sim time {:.1} h  ({} iters)",
             r.history.final_accuracy(),
@@ -109,7 +104,7 @@ pub fn run_experiment(
         );
         out.push((s, r));
     }
-    Ok((setup, out))
+    Ok((session, out))
 }
 
 /// ASCII plot of several histories: accuracy vs a chosen x-axis.

@@ -4,41 +4,32 @@
 //!
 //! Supported syntax: `[section]` headers, `key = value` with integer,
 //! float, boolean, `"string"` and flat `[v1, v2, …]` array values, `#`
-//! comments. That covers every config this project ships.
+//! comments. That covers every config this project ships (see
+//! `configs/example.toml` for a fully commented reference file).
+//!
+//! Errors are first-class: an unknown section or key is rejected with the
+//! offending name and the accepted names, and a mistyped value is reported
+//! as `[section] key: expected T, got U` — so a typo in a sweep config
+//! fails loudly instead of silently running the defaults.
 
 mod parser;
 
-pub use parser::{parse, ConfError, Value};
+pub use parser::{parse, ConfError, Doc, Value};
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::coding::GeneratorKind;
 
-/// Which aggregation scheme the coordinator runs (§V-A "Schemes").
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Scheme {
-    /// Server waits for *all* client updates.
-    NaiveUncoded,
-    /// Server waits for the first `(1-ψ)·n` client updates.
-    GreedyUncoded { psi: f64 },
-    /// CodedFedL with redundancy `δ = u_max / m`.
-    Coded { delta: f64 },
-}
-
-impl Scheme {
-    pub fn label(&self) -> String {
-        match self {
-            Scheme::NaiveUncoded => "naive".into(),
-            Scheme::GreedyUncoded { psi } => format!("greedy(psi={psi})"),
-            Scheme::Coded { delta } => format!("coded(delta={delta})"),
-        }
-    }
-}
+/// Back-compat alias for the pre-0.2 closed scheme enum. New code should
+/// use the open [`crate::schemes::Scheme`] trait (or
+/// [`crate::schemes::SchemeSpec`] where a serialisable description is
+/// needed); the variant names and `label()` strings are unchanged.
+pub use crate::schemes::SchemeSpec as Scheme;
 
 /// Everything one training experiment needs; `Default` is the repo's
 /// reduced "default" scale (see python/compile/shapes.py — the two must
-/// agree; the artifact manifest is checked at runtime).
+/// agree; the artifact manifest is checked at runtime on the PJRT path).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     /// Root RNG seed; every stochastic object derives from it.
@@ -108,6 +99,21 @@ impl Default for ExperimentConfig {
     }
 }
 
+/// Accepted sections and keys — the single source of truth for unknown-key
+/// rejection (and for `configs/example.toml`, which documents all of them).
+const KNOWN_KEYS: &[(&str, &[&str])] = &[
+    (
+        "experiment",
+        &["seed", "clients", "dataset", "artifacts_dir", "train_size", "test_size"],
+    ),
+    ("model", &["dim", "q", "classes", "sigma"]),
+    (
+        "training",
+        &["local_batch", "steps_per_epoch", "epochs", "lr", "lr_decay", "lr_decay_epochs", "l2"],
+    ),
+    ("coding", &["u_max", "generator"]),
+];
+
 impl ExperimentConfig {
     /// The paper's full §V-A scale (requires `--preset paper` artifacts).
     pub fn paper() -> Self {
@@ -139,6 +145,18 @@ impl ExperimentConfig {
         }
     }
 
+    /// Resolve a named preset (`tiny` | `default` | `paper`).
+    pub fn preset(name: &str) -> Result<Self, ConfError> {
+        match name {
+            "tiny" => Ok(Self::tiny()),
+            "default" => Ok(Self::default()),
+            "paper" => Ok(Self::paper()),
+            other => Err(ConfError::Invalid(format!(
+                "unknown preset {other:?} (expected tiny, default or paper)"
+            ))),
+        }
+    }
+
     /// Global mini-batch size m per step.
     pub fn global_batch(&self) -> usize {
         self.clients * self.local_batch
@@ -162,52 +180,45 @@ impl ExperimentConfig {
         Self::from_str_conf(&text)
     }
 
-    /// Parse from config text, overriding defaults.
+    /// Parse from config text, overriding defaults. Rejects unknown
+    /// sections/keys and reports mistyped values as `[section] key: …`.
     pub fn from_str_conf(text: &str) -> Result<Self, ConfError> {
         let doc = parse(text)?;
+        reject_unknown_keys(&doc)?;
         let mut c = ExperimentConfig::default();
         let empty = BTreeMap::new();
-        let sec = |name: &str| doc.get(name).unwrap_or(&empty);
+        let sect = |name: &'static str| Sect { name, map: doc.get(name).unwrap_or(&empty) };
 
-        let exp = sec("experiment");
-        read_u64(exp, "seed", &mut c.seed)?;
-        read_usize(exp, "clients", &mut c.clients)?;
-        read_string(exp, "dataset", &mut c.dataset)?;
-        read_string(exp, "artifacts_dir", &mut c.artifacts_dir)?;
-        read_usize(exp, "train_size", &mut c.train_size)?;
-        read_usize(exp, "test_size", &mut c.test_size)?;
+        let exp = sect("experiment");
+        exp.get_u64("seed", &mut c.seed)?;
+        exp.get_usize("clients", &mut c.clients)?;
+        exp.get_string("dataset", &mut c.dataset)?;
+        exp.get_string("artifacts_dir", &mut c.artifacts_dir)?;
+        exp.get_usize("train_size", &mut c.train_size)?;
+        exp.get_usize("test_size", &mut c.test_size)?;
 
-        let model = sec("model");
-        read_usize(model, "dim", &mut c.dim)?;
-        read_usize(model, "q", &mut c.q)?;
-        read_usize(model, "classes", &mut c.classes)?;
-        read_f64(model, "sigma", &mut c.sigma)?;
+        let model = sect("model");
+        model.get_usize("dim", &mut c.dim)?;
+        model.get_usize("q", &mut c.q)?;
+        model.get_usize("classes", &mut c.classes)?;
+        model.get_f64("sigma", &mut c.sigma)?;
 
-        let tr = sec("training");
-        read_usize(tr, "local_batch", &mut c.local_batch)?;
-        read_usize(tr, "steps_per_epoch", &mut c.steps_per_epoch)?;
-        read_usize(tr, "epochs", &mut c.epochs)?;
-        read_f64(tr, "lr", &mut c.lr)?;
-        read_f64(tr, "lr_decay", &mut c.lr_decay)?;
-        read_f64(tr, "l2", &mut c.l2)?;
-        if let Some(v) = tr.get("lr_decay_epochs") {
-            c.lr_decay_epochs = v
-                .as_array()
-                .ok_or_else(|| bad("training.lr_decay_epochs", "array"))?
-                .iter()
-                .map(|x| {
-                    x.as_int()
-                        .map(|i| i as usize)
-                        .ok_or_else(|| bad("training.lr_decay_epochs", "int array"))
-                })
-                .collect::<Result<_, _>>()?;
-        }
+        let tr = sect("training");
+        tr.get_usize("local_batch", &mut c.local_batch)?;
+        tr.get_usize("steps_per_epoch", &mut c.steps_per_epoch)?;
+        tr.get_usize("epochs", &mut c.epochs)?;
+        tr.get_f64("lr", &mut c.lr)?;
+        tr.get_f64("lr_decay", &mut c.lr_decay)?;
+        tr.get_f64("l2", &mut c.l2)?;
+        tr.get_usize_array("lr_decay_epochs", &mut c.lr_decay_epochs)?;
 
-        let cod = sec("coding");
-        read_usize(cod, "u_max", &mut c.u_max)?;
-        if let Some(v) = cod.get("generator") {
-            let s = v.as_str().ok_or_else(|| bad("coding.generator", "string"))?;
-            c.generator = s.parse().map_err(ConfError::Invalid)?;
+        let cod = sect("coding");
+        cod.get_usize("u_max", &mut c.u_max)?;
+        if let Some(v) = cod.map.get("generator") {
+            let s = v.as_str().ok_or_else(|| cod.bad("generator", "string", v))?;
+            c.generator = s
+                .parse()
+                .map_err(|e: String| ConfError::Invalid(format!("[coding] generator: {e}")))?;
         }
         c.validate()?;
         Ok(c)
@@ -242,56 +253,108 @@ impl ExperimentConfig {
     }
 }
 
-fn bad(key: &str, want: &str) -> ConfError {
-    ConfError::Invalid(format!("{key}: expected {want}"))
-}
-
-fn read_u64(
-    sec: &BTreeMap<String, Value>,
-    key: &str,
-    out: &mut u64,
-) -> Result<(), ConfError> {
-    if let Some(v) = sec.get(key) {
-        *out = v.as_int().ok_or_else(|| bad(key, "int"))? as u64;
-    }
-    Ok(())
-}
-
-fn read_usize(
-    sec: &BTreeMap<String, Value>,
-    key: &str,
-    out: &mut usize,
-) -> Result<(), ConfError> {
-    if let Some(v) = sec.get(key) {
-        let i = v.as_int().ok_or_else(|| bad(key, "int"))?;
-        if i < 0 {
-            return Err(bad(key, "non-negative int"));
+/// Fail on any section or key the schema does not know, naming both the
+/// stray name and the accepted ones (SNIPPETS.md config pattern: a typo'd
+/// key must error, not silently fall back to a default).
+fn reject_unknown_keys(doc: &Doc) -> Result<(), ConfError> {
+    for (section, keys) in doc {
+        if section.is_empty() {
+            let first = keys.keys().next().map(String::as_str).unwrap_or("?");
+            return Err(ConfError::Invalid(format!(
+                "key `{first}` appears before any [section] header \
+                 (sections: experiment, model, training, coding)"
+            )));
         }
-        *out = i as usize;
+        let Some((_, known)) = KNOWN_KEYS.iter().find(|(s, _)| s == section) else {
+            return Err(ConfError::Invalid(format!(
+                "unknown section [{section}] (expected one of: experiment, model, \
+                 training, coding)"
+            )));
+        };
+        for key in keys.keys() {
+            if !known.contains(&key.as_str()) {
+                return Err(ConfError::Invalid(format!(
+                    "unknown key `{key}` in [{section}] (known keys: {})",
+                    known.join(", ")
+                )));
+            }
+        }
     }
     Ok(())
 }
 
-fn read_f64(
-    sec: &BTreeMap<String, Value>,
-    key: &str,
-    out: &mut f64,
-) -> Result<(), ConfError> {
-    if let Some(v) = sec.get(key) {
-        *out = v.as_float().ok_or_else(|| bad(key, "float"))?;
-    }
-    Ok(())
+/// One section's typed readers; every error names `[section] key`.
+struct Sect<'a> {
+    name: &'static str,
+    map: &'a BTreeMap<String, Value>,
 }
 
-fn read_string(
-    sec: &BTreeMap<String, Value>,
-    key: &str,
-    out: &mut String,
-) -> Result<(), ConfError> {
-    if let Some(v) = sec.get(key) {
-        *out = v.as_str().ok_or_else(|| bad(key, "string"))?.to_string();
+impl Sect<'_> {
+    fn bad(&self, key: &str, want: &str, got: &Value) -> ConfError {
+        ConfError::Invalid(format!(
+            "[{}] {key}: expected {want}, got {}",
+            self.name,
+            got.type_name()
+        ))
     }
-    Ok(())
+
+    /// The validated non-negative integer at `key`, if present.
+    fn get_nonneg(&self, key: &str) -> Result<Option<i64>, ConfError> {
+        match self.map.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                let i = v.as_int().ok_or_else(|| self.bad(key, "int", v))?;
+                if i < 0 {
+                    return Err(self.bad(key, "non-negative int", v));
+                }
+                Ok(Some(i))
+            }
+        }
+    }
+
+    fn get_u64(&self, key: &str, out: &mut u64) -> Result<(), ConfError> {
+        if let Some(i) = self.get_nonneg(key)? {
+            *out = i as u64;
+        }
+        Ok(())
+    }
+
+    fn get_usize(&self, key: &str, out: &mut usize) -> Result<(), ConfError> {
+        if let Some(i) = self.get_nonneg(key)? {
+            *out = i as usize;
+        }
+        Ok(())
+    }
+
+    fn get_f64(&self, key: &str, out: &mut f64) -> Result<(), ConfError> {
+        if let Some(v) = self.map.get(key) {
+            *out = v.as_float().ok_or_else(|| self.bad(key, "float", v))?;
+        }
+        Ok(())
+    }
+
+    fn get_string(&self, key: &str, out: &mut String) -> Result<(), ConfError> {
+        if let Some(v) = self.map.get(key) {
+            *out = v.as_str().ok_or_else(|| self.bad(key, "string", v))?.to_string();
+        }
+        Ok(())
+    }
+
+    fn get_usize_array(&self, key: &str, out: &mut Vec<usize>) -> Result<(), ConfError> {
+        if let Some(v) = self.map.get(key) {
+            let arr = v.as_array().ok_or_else(|| self.bad(key, "array", v))?;
+            *out = arr
+                .iter()
+                .map(|x| {
+                    x.as_int()
+                        .filter(|&i| i >= 0)
+                        .map(|i| i as usize)
+                        .ok_or_else(|| self.bad(key, "array of non-negative ints", x))
+                })
+                .collect::<Result<_, _>>()?;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -303,6 +366,14 @@ mod tests {
         ExperimentConfig::default().validate().unwrap();
         ExperimentConfig::tiny().validate().unwrap();
         ExperimentConfig::paper().validate().unwrap();
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert_eq!(ExperimentConfig::preset("tiny").unwrap().clients, 5);
+        assert_eq!(ExperimentConfig::preset("paper").unwrap().q, 2000);
+        let e = ExperimentConfig::preset("huge").unwrap_err().to_string();
+        assert!(e.contains("huge") && e.contains("paper"), "{e}");
     }
 
     #[test]
@@ -365,13 +436,50 @@ generator = "rademacher"
     #[test]
     fn rejects_bad_generator() {
         let text = "[coding]\ngenerator = \"foo\"\n";
-        assert!(ExperimentConfig::from_str_conf(text).is_err());
+        let e = ExperimentConfig::from_str_conf(text).unwrap_err().to_string();
+        assert!(e.contains("generator"), "{e}");
     }
 
     #[test]
-    fn scheme_labels() {
-        assert_eq!(Scheme::NaiveUncoded.label(), "naive");
-        assert_eq!(Scheme::GreedyUncoded { psi: 0.1 }.label(), "greedy(psi=0.1)");
-        assert_eq!(Scheme::Coded { delta: 0.2 }.label(), "coded(delta=0.2)");
+    fn mistyped_value_names_section_and_key() {
+        let e = ExperimentConfig::from_str_conf("[training]\nlr = \"high\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[training]") && e.contains("lr"), "{e}");
+        assert!(e.contains("expected float") && e.contains("got string"), "{e}");
+
+        let e = ExperimentConfig::from_str_conf("[experiment]\nclients = 2.5\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[experiment]") && e.contains("clients"), "{e}");
+    }
+
+    #[test]
+    fn unknown_key_is_rejected_with_its_name() {
+        let e = ExperimentConfig::from_str_conf("[experiment]\nclinets = 5\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("clinets"), "{e}");
+        assert!(e.contains("clients"), "suggestion list missing: {e}");
+    }
+
+    #[test]
+    fn unknown_section_is_rejected() {
+        let e = ExperimentConfig::from_str_conf("[trainings]\nlr = 1.0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("trainings"), "{e}");
+    }
+
+    #[test]
+    fn top_level_keys_are_rejected() {
+        let e = ExperimentConfig::from_str_conf("lr = 1.0\n").unwrap_err().to_string();
+        assert!(e.contains("lr") && e.contains("section"), "{e}");
+    }
+
+    #[test]
+    fn negative_int_keys_are_rejected() {
+        let e = ExperimentConfig::from_str_conf("[model]\nq = -4\n").unwrap_err().to_string();
+        assert!(e.contains("[model]") && e.contains('q'), "{e}");
     }
 }

@@ -49,21 +49,45 @@ impl Value {
             _ => None,
         }
     }
+
+    /// Human-readable type tag for "expected X, got Y" config errors.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Int(_) => "int",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "bool",
+            Value::Str(_) => "string",
+            Value::Array(_) => "array",
+        }
+    }
 }
 
 /// Parsed document: section name → key → value. Keys before any `[section]`
 /// land in the `""` section.
 pub type Doc = BTreeMap<String, BTreeMap<String, Value>>;
 
-#[derive(Debug, thiserror::Error)]
+/// Configuration error (`thiserror` is unavailable offline, so `Display`
+/// and `Error` are hand-implemented).
+#[derive(Debug)]
 pub enum ConfError {
-    #[error("config io error: {0}")]
     Io(String),
-    #[error("config parse error at line {line}: {msg}")]
     Parse { line: usize, msg: String },
-    #[error("invalid config: {0}")]
     Invalid(String),
 }
+
+impl std::fmt::Display for ConfError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfError::Io(msg) => write!(f, "config io error: {msg}"),
+            ConfError::Parse { line, msg } => {
+                write!(f, "config parse error at line {line}: {msg}")
+            }
+            ConfError::Invalid(msg) => write!(f, "invalid config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfError {}
 
 fn perr(line: usize, msg: impl Into<String>) -> ConfError {
     ConfError::Parse { line, msg: msg.into() }

@@ -1,0 +1,217 @@
+//! The scheme-agnostic per-round training engine (paper §III-E).
+//!
+//! [`run`] owns everything every scheme shares: the virtual MEC clock,
+//! per-round delay sampling, PJRT gradient execution against the round's
+//! prepared θ, the learning-rate schedule, the model update of eq. (5),
+//! per-round evaluation, [`crate::metrics::History`] recording and the
+//! [`RoundObserver`] event stream. Waiting/aggregation policy lives
+//! entirely behind the [`Scheme`] trait (`rust/src/schemes/`).
+//!
+//! Per round, every participating node's gradient is *really* executed
+//! through the runtime's grad executor; the delay model only decides
+//! arrivals and the simulated wall-clock cost of the round.
+
+use anyhow::{Context, Result};
+
+use super::setup::FedSetup;
+use crate::metrics::{accuracy, History, Point};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::schemes::{RoundCtx, RoundExec, Scheme};
+use crate::sim::RoundSampler;
+use crate::tensor::Mat;
+
+/// Result of one scheme's run.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub history: History,
+    /// CodedFedL's optimal deadline (None for uncoded schemes).
+    pub t_star: Option<f64>,
+    /// CodedFedL's redundancy u* (rows of parity processed per round).
+    pub u_star: Option<usize>,
+    /// One-time parity upload overhead added to the clock (seconds).
+    pub parity_overhead: f64,
+    /// Final model (q × c).
+    pub theta: Mat,
+}
+
+/// One completed training round, as seen by observers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundEvent {
+    /// 1-based global iteration (matches [`Point::iter`]).
+    pub iter: usize,
+    /// 0-based epoch.
+    pub epoch: usize,
+    /// Mini-batch index within the epoch.
+    pub step: usize,
+    /// Cumulative simulated MEC clock after this round (seconds).
+    pub clock: f64,
+    /// Client gradients that arrived and entered the aggregate.
+    pub arrivals: usize,
+    /// Training objective after the round's update.
+    pub loss: f64,
+    /// Test accuracy after the round's update.
+    pub acc: f64,
+}
+
+/// Receives one [`RoundEvent`] per training round. The CLI's progress
+/// printer, CSV streamers and test probes all hang off this — nothing
+/// needs to reach into engine internals.
+pub trait RoundObserver {
+    fn on_round(&mut self, event: &RoundEvent);
+}
+
+/// A buffering observer: records every event (handy in tests and for
+/// post-hoc export).
+#[derive(Clone, Debug, Default)]
+pub struct EventLog {
+    pub events: Vec<RoundEvent>,
+}
+
+impl RoundObserver for EventLog {
+    fn on_round(&mut self, event: &RoundEvent) {
+        self.events.push(*event);
+    }
+}
+
+/// Run `scheme` to completion over `setup`, computing gradients with `rt`
+/// and reporting each round to `observers`.
+pub fn run(
+    setup: &FedSetup,
+    rt: &Runtime,
+    scheme: &mut dyn Scheme,
+    observers: &mut [&mut dyn RoundObserver],
+) -> Result<TrainOutcome> {
+    let cfg = &setup.cfg;
+    let n = cfg.clients;
+    let m = setup.m() as f32;
+    let (q, c) = (cfg.q, cfg.classes);
+
+    // Scheme-specific RNG streams (same seed base ⇒ reproducible; split by
+    // the scheme's tag so e.g. coded's generator draws don't perturb
+    // naive's delay draws). The split order — delays first, then the
+    // scheme's private code stream — is part of the reproducibility
+    // contract with pre-trait runs.
+    let tag = scheme.rng_tag();
+    let mut root = Rng::seed_from(setup.seed ^ 0x5EED_0000);
+    let mut delay_rng = root.split(tag);
+    let mut code_rng = root.split(tag.wrapping_add(1000));
+
+    let prep = scheme
+        .prepare(setup, rt, &mut code_rng)
+        .with_context(|| format!("preparing scheme {}", scheme.label()))?;
+    anyhow::ensure!(
+        prep.client_loads.len() == n,
+        "scheme {} returned {} client loads for {n} clients",
+        scheme.label(),
+        prep.client_loads.len()
+    );
+
+    let sampler = RoundSampler::new(
+        setup.clients.clone(),
+        setup.server,
+        prep.client_loads,
+        prep.server_load,
+    );
+
+    let mut theta = Mat::zeros(q, c);
+    let mut history = History::new(scheme.label());
+    let mut clock = prep.clock_offset;
+
+    for iter in 0..cfg.total_iters() {
+        let epoch = iter / cfg.steps_per_epoch;
+        let step = iter % cfg.steps_per_epoch;
+        let lr = setup.effective_lr(epoch) as f32;
+        let delays = sampler.sample(&mut delay_rng);
+        // θ is reused by every grad call this round (EXPERIMENTS.md §Perf).
+        let theta_lit = rt.prepare_theta(&theta)?;
+        let ctx = RoundCtx { iter, epoch, step, setup };
+
+        // --- the scheme's waiting policy decides who participates ---
+        let plan = scheme.plan_round(&ctx, &delays)?;
+        let mut agg = Mat::zeros(q, c);
+        for req in &plan.requests {
+            anyhow::ensure!(
+                req.client < n,
+                "scheme {} requested client {} of {n}",
+                scheme.label(),
+                req.client
+            );
+            let cd = &setup.client_data[req.client];
+            let g = rt
+                .grad_prepared(&cd.xhat[step], &cd.y[step], &theta_lit, &req.mask)
+                .with_context(|| format!("client {} gradient (step {step})", req.client))?;
+            agg.axpy(req.scale, &g);
+        }
+        let exec = RoundExec::new(rt, &theta_lit);
+        let cost = scheme.aggregate(&ctx, &delays, &plan, &exec, &mut agg)?;
+
+        // g_M = (1/m̂)·agg + λθ  (eq. 30 + the §V-A L2 regulariser).
+        // m̂ = m for stochastically complete schemes (returned = 0) and the
+        // actual aggregate return (e.g. greedy's (1−ψ)m) otherwise.
+        let denom = if cost.returned > 0.0 { cost.returned } else { m };
+        agg.scale(1.0 / denom);
+        agg.axpy(cfg.l2 as f32, &theta);
+
+        // θ ← θ − μ_r g_M  (eq. 5).
+        theta.axpy(-lr, &agg);
+
+        clock += cost.sim_seconds;
+
+        // --- evaluation + event fan-out ---
+        let logits = rt.predict(&setup.test_xhat, &theta)?;
+        let acc = accuracy(&logits, &setup.test_labels);
+        let loss = eval_train_loss(rt, setup, &theta)?;
+        history.push(Point { iter: iter + 1, sim_time: clock, accuracy: acc, train_loss: loss });
+        let event = RoundEvent {
+            iter: iter + 1,
+            epoch,
+            step,
+            clock,
+            arrivals: plan.requests.len(),
+            loss,
+            acc,
+        };
+        for obs in observers.iter_mut() {
+            obs.on_round(&event);
+        }
+    }
+
+    let stats = scheme.stats();
+    Ok(TrainOutcome {
+        history,
+        t_star: stats.t_star,
+        u_star: stats.u_star,
+        parity_overhead: stats.parity_overhead,
+        theta,
+    })
+}
+
+/// How many clients the per-iteration loss probe samples. Sampling a
+/// fixed prefix (deterministic) keeps the curve comparable across
+/// iterations while cutting ~30 % off coordinator overhead at n = 30
+/// (EXPERIMENTS.md §Perf iteration 1). The probe is telemetry only — it
+/// never feeds back into training.
+const LOSS_PROBE_CLIENTS: usize = 4;
+
+/// Training objective `1/(2m_probe) Σ ||X̂θ − Y||² + (λ/2)||θ||²` over the
+/// first mini-batch of a fixed client sample (cheap proxy, logged for the
+/// loss curve required by the end-to-end driver).
+fn eval_train_loss(rt: &Runtime, setup: &FedSetup, theta: &Mat) -> Result<f64> {
+    let mut sum = 0.0f64;
+    let mut rows = 0usize;
+    for cd in setup.client_data.iter().take(LOSS_PROBE_CLIENTS) {
+        let logits = rt.predict(&cd.xhat[0], theta)?;
+        for r in 0..logits.rows() {
+            let lrow = logits.row(r);
+            let yrow = cd.y[0].row(r);
+            for (p, t) in lrow.iter().zip(yrow) {
+                let d = (p - t) as f64;
+                sum += d * d;
+            }
+        }
+        rows += logits.rows();
+    }
+    let l2 = setup.cfg.l2 * (theta.fro_norm() as f64).powi(2);
+    Ok(sum / (2.0 * rows as f64) + 0.5 * l2)
+}

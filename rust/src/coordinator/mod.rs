@@ -3,11 +3,17 @@
 //! [`setup::FedSetup`] owns everything shared across schemes for one
 //! experiment (fleet, non-IID shards, RFF-embedded data, test set), so
 //! naive / greedy / coded runs compare on identical data and delays.
-//! [`trainer::run_scheme`] executes one scheme's full training run on the
-//! virtual MEC clock, computing every gradient through the PJRT runtime.
+//! [`engine::run`] executes any [`crate::schemes::Scheme`] to completion
+//! on the virtual MEC clock, computing every gradient through the runtime
+//! and streaming one [`RoundEvent`] per round to registered
+//! [`RoundObserver`]s. [`trainer::run_scheme`] is the deprecated pre-trait
+//! entry point.
 
+pub mod engine;
 pub mod setup;
 pub mod trainer;
 
+pub use engine::{EventLog, RoundEvent, RoundObserver, TrainOutcome};
 pub use setup::FedSetup;
-pub use trainer::{run_scheme, TrainOutcome};
+#[allow(deprecated)]
+pub use trainer::run_scheme;

@@ -1,322 +1,25 @@
-//! One scheme's full training run on the virtual MEC clock
-//! (paper §III-E "Coded Federated Aggregation" and §V-A "Schemes").
+//! Back-compat shim over [`super::engine`].
 //!
-//! Per round, every participating node's gradient is *really* executed
-//! through the PJRT grad artifact; the delay model only decides arrivals
-//! and the simulated wall-clock cost of the round:
-//!
-//! * **naive uncoded** — wait for all `n` clients; round costs `max_j T_j`.
-//! * **greedy uncoded (ψ)** — wait for the fastest `(1−ψ)n`; round costs
-//!   the order statistic; stragglers' gradients are *discarded* (this is
-//!   what starves classes under non-IID sharding).
-//! * **CodedFedL (δ)** — load allocation fixes `(t*, ℓ*_j, u*)` once
-//!   before training (§III-C); each round costs exactly `t*`; arrivals
-//!   are compensated by the coded gradient from the parity data (eq. 30).
+//! The pre-0.2 API ran one closed-enum scheme through a monolithic
+//! `run_scheme`; the guts now live in the scheme-agnostic
+//! [`engine`](super::engine) behind the open [`crate::schemes::Scheme`]
+//! trait, and sessions are built with [`crate::ExperimentBuilder`]. This
+//! wrapper keeps old call sites compiling.
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
+use super::engine::{self, TrainOutcome};
 use super::setup::FedSetup;
-use crate::allocation::{self, NodeSpec};
-use crate::coding;
-use crate::conf::Scheme;
-use crate::metrics::{accuracy, History, Point};
-use crate::rng::Rng;
-use crate::sim::RoundSampler;
 use crate::runtime::Runtime;
-use crate::tensor::Mat;
-
-/// Result of one scheme's run.
-#[derive(Clone, Debug)]
-pub struct TrainOutcome {
-    pub history: History,
-    /// CodedFedL's optimal deadline (None for uncoded schemes).
-    pub t_star: Option<f64>,
-    /// CodedFedL's redundancy u* (rows of parity processed per round).
-    pub u_star: Option<usize>,
-    /// One-time parity upload overhead added to the clock (seconds).
-    pub parity_overhead: f64,
-    /// Final model (q × c).
-    pub theta: Mat,
-}
-
-/// CodedFedL state prepared before training (per global mini-batch parity).
-struct CodedState {
-    t_star: f64,
-    u_star: usize,
-    /// Per-client processed-subset masks (length `local_batch`, reused for
-    /// every mini-batch of that client as §III-D fixes the subset).
-    masks: Vec<Vec<f32>>,
-    /// Per-step composite parity: `steps × (X̌ [u_max, q], Y̌ [u_max, c])`.
-    parity: Vec<(Mat, Mat)>,
-    /// `1 − P(T_C ≤ t*)` for the coded-gradient scale of eq. (28).
-    pnr_server: f64,
-    parity_overhead: f64,
-}
+use crate::schemes::SchemeSpec;
 
 /// Run `scheme` to completion over `setup`, computing gradients with `rt`.
-pub fn run_scheme(setup: &FedSetup, rt: &Runtime, scheme: Scheme) -> Result<TrainOutcome> {
-    let cfg = &setup.cfg;
-    let m = setup.m() as f32;
-    let n = cfg.clients;
-    let (q, c) = (cfg.q, cfg.classes);
-
-    // Scheme-specific RNG streams (same seed base => reproducible; split
-    // by a scheme tag so coded's generator draws don't perturb naive's
-    // delay draws).
-    let tag = match scheme {
-        Scheme::NaiveUncoded => 101,
-        Scheme::GreedyUncoded { .. } => 102,
-        Scheme::Coded { .. } => 103,
-    };
-    let mut root = Rng::seed_from(setup.seed ^ 0x5EED_0000);
-    let mut delay_rng = root.split(tag);
-    let mut code_rng = root.split(tag + 1000);
-
-    let coded_state = match scheme {
-        Scheme::Coded { delta } => Some(prepare_coded(setup, rt, delta, &mut code_rng)?),
-        _ => None,
-    };
-
-    // Per-round processed loads (drive compute-time sampling).
-    let client_loads: Vec<f64> = match &coded_state {
-        Some(cs) => cs.masks.iter().map(|m| m.iter().sum::<f32>() as f64).collect(),
-        None => vec![cfg.local_batch as f64; n],
-    };
-    let sampler = RoundSampler::new(
-        setup.clients.clone(),
-        setup.server,
-        client_loads,
-        coded_state.as_ref().map_or(0.0, |c| c.u_star as f64),
-    );
-
-    let full_mask = vec![1.0f32; cfg.local_batch];
-    let mut theta = Mat::zeros(q, c);
-    let mut history = History::new(scheme.label());
-    let mut clock = coded_state.as_ref().map_or(0.0, |c| c.parity_overhead);
-
-    for iter in 0..cfg.total_iters() {
-        let epoch = iter / cfg.steps_per_epoch;
-        let step = iter % cfg.steps_per_epoch;
-        let lr = setup.effective_lr(epoch) as f32;
-        let delays = sampler.sample(&mut delay_rng);
-        // θ is reused by every grad call this round (EXPERIMENTS.md §Perf).
-        let theta_lit = rt.prepare_theta(&theta)?;
-
-        // --- gradient aggregation under the scheme's waiting policy ---
-        let mut agg = Mat::zeros(q, c);
-        let round_time;
-        let mut returned = 0.0f32; // aggregate return (for greedy scaling)
-        match (&scheme, &coded_state) {
-            (Scheme::NaiveUncoded, _) => {
-                for j in 0..n {
-                    let g = client_grad(rt, setup, j, step, &theta_lit, &full_mask)?;
-                    agg.axpy(1.0, &g);
-                }
-                returned = m;
-                round_time = delays.max_client_time();
-            }
-            (Scheme::GreedyUncoded { psi }, _) => {
-                let k = (((1.0 - psi) * n as f64).round() as usize).clamp(1, n);
-                let (t_k, winners) = delays.kth_fastest(k);
-                for &j in &winners {
-                    let g = client_grad(rt, setup, j, step, &theta_lit, &full_mask)?;
-                    agg.axpy(1.0, &g);
-                    returned += cfg.local_batch as f32;
-                }
-                round_time = t_k;
-            }
-            (Scheme::Coded { .. }, Some(cs)) => {
-                // Uncoded part: clients that make the deadline (eq. 29).
-                for (j, arrived) in delays.arrivals(cs.t_star).iter().enumerate() {
-                    if *arrived && cs.masks[j].iter().any(|&v| v > 0.0) {
-                        let g = client_grad(rt, setup, j, step, &theta_lit, &cs.masks[j])?;
-                        agg.axpy(1.0, &g);
-                    }
-                }
-                // Coded part (eq. 28): gradient over this step's parity,
-                // scaled by 1/((1−pnr_C)·u*).
-                if delays.server_t <= cs.t_star {
-                    let (xp, yp) = &cs.parity[step];
-                    let ones = vec![1.0f32; xp.rows()];
-                    let gc = rt
-                        .grad_prepared(xp, yp, &theta_lit, &ones)
-                        .context("coded gradient over parity data")?;
-                    let scale = 1.0 / ((1.0 - cs.pnr_server) as f32 * cs.u_star as f32);
-                    agg.axpy(scale, &gc);
-                }
-                returned = m;
-                round_time = cs.t_star;
-            }
-            (Scheme::Coded { .. }, None) => unreachable!(),
-        }
-
-        // g_M = (1/m̂)·agg + λθ  (eq. 30 + the §V-A L2 regulariser).
-        // m̂ = m for naive/coded (stochastically complete return) and the
-        // actual aggregate return (1−ψ)m for greedy.
-        let denom = if returned > 0.0 { returned } else { m };
-        agg.scale(1.0 / denom);
-        agg.axpy(cfg.l2 as f32, &theta);
-
-        // θ ← θ − μ_r g_M  (eq. 5).
-        theta.axpy(-lr, &agg);
-
-        clock += round_time;
-
-        // --- evaluation ---
-        let logits = rt.predict(&setup.test_xhat, &theta)?;
-        let acc = accuracy(&logits, &setup.test_labels);
-        let loss = eval_train_loss(rt, setup, &theta)?;
-        history.push(Point { iter: iter + 1, sim_time: clock, accuracy: acc, train_loss: loss });
-    }
-
-    Ok(TrainOutcome {
-        history,
-        t_star: coded_state.as_ref().map(|c| c.t_star),
-        u_star: coded_state.as_ref().map(|c| c.u_star),
-        parity_overhead: coded_state.as_ref().map_or(0.0, |c| c.parity_overhead),
-        theta,
-    })
-}
-
-/// One client's unnormalised masked gradient over its `step`-th mini-batch.
-fn client_grad(
-    rt: &Runtime,
-    setup: &FedSetup,
-    j: usize,
-    step: usize,
-    theta: &crate::runtime::PreparedTheta,
-    mask: &[f32],
-) -> Result<Mat> {
-    let cd = &setup.client_data[j];
-    rt.grad_prepared(&cd.xhat[step], &cd.y[step], theta, mask)
-        .with_context(|| format!("client {j} gradient (step {step})"))
-}
-
-/// How many clients the per-iteration loss probe samples. Sampling a
-/// fixed prefix (deterministic) keeps the curve comparable across
-/// iterations while cutting ~30 % off coordinator overhead at n = 30
-/// (EXPERIMENTS.md §Perf iteration 1). The probe is telemetry only — it
-/// never feeds back into training.
-const LOSS_PROBE_CLIENTS: usize = 4;
-
-/// Training objective `1/(2m_probe) Σ ||X̂θ − Y||² + (λ/2)||θ||²` over the
-/// first mini-batch of a fixed client sample (cheap proxy, logged for the
-/// loss curve required by the end-to-end driver).
-fn eval_train_loss(rt: &Runtime, setup: &FedSetup, theta: &Mat) -> Result<f64> {
-    let mut sum = 0.0f64;
-    let mut rows = 0usize;
-    for cd in setup.client_data.iter().take(LOSS_PROBE_CLIENTS) {
-        let logits = rt.predict(&cd.xhat[0], theta)?;
-        for r in 0..logits.rows() {
-            let lrow = logits.row(r);
-            let yrow = cd.y[0].row(r);
-            for (p, t) in lrow.iter().zip(yrow) {
-                let d = (p - t) as f64;
-                sum += d * d;
-            }
-        }
-        rows += logits.rows();
-    }
-    let l2 = setup.cfg.l2 * (theta.fro_norm() as f64).powi(2);
-    Ok(sum / (2.0 * rows as f64) + 0.5 * l2)
-}
-
-/// Load allocation (§III-C) + weight matrices (§III-D) + per-step parity
-/// datasets (§III-B) for CodedFedL.
-fn prepare_coded(
-    setup: &FedSetup,
-    rt: &Runtime,
-    delta: f64,
-    rng: &mut Rng,
-) -> Result<CodedState> {
-    let cfg = &setup.cfg;
-    let m = setup.m();
-    let u_cap = ((delta * m as f64).round() as usize).min(cfg.u_max);
-    anyhow::ensure!(u_cap > 0, "delta {delta} gives zero parity rows");
-
-    // --- two-step load allocation over the per-round mini-batch ---
-    let mut nodes: Vec<NodeSpec> = setup
-        .clients
-        .iter()
-        .map(|p| NodeSpec { params: *p, max_load: cfg.local_batch as f64 })
-        .collect();
-    nodes.push(NodeSpec { params: setup.server, max_load: u_cap as f64 });
-    let alloc = allocation::solve(&nodes, m as f64)
-        .map_err(|e| anyhow::anyhow!("load allocation failed: {e}"))?;
-    let t_star = alloc.t_star;
-
-    // Integer loads; pnr re-evaluated at the rounded load for exactness.
-    let ell_star: Vec<usize> = alloc.loads[..cfg.clients]
-        .iter()
-        .map(|&l| (l.floor() as usize).min(cfg.local_batch))
-        .collect();
-    let u_star = (alloc.u_star().floor() as usize).clamp(1, u_cap);
-    let pnr_server = 1.0 - setup.server.cdf(t_star, u_star as f64);
-    anyhow::ensure!(
-        pnr_server < 1.0,
-        "server never returns by t* — parameters are inconsistent"
-    );
-
-    // --- per-client processed subsets + weight vectors (§III-D) ---
-    let mut masks = Vec::with_capacity(cfg.clients);
-    let mut weights = Vec::with_capacity(cfg.clients);
-    for (j, client) in setup.clients.iter().enumerate() {
-        let processed = coding::sample_processed(cfg.local_batch, ell_star[j], rng);
-        let pnr1 = if ell_star[j] > 0 {
-            1.0 - client.cdf(t_star, ell_star[j] as f64)
-        } else {
-            1.0
-        };
-        weights.push(coding::weight_vector(&processed, pnr1));
-        masks.push(processed.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect());
-    }
-
-    // --- distributed encoding per global mini-batch (§V-A) ---
-    let mut parity: Vec<(Mat, Mat)> = Vec::with_capacity(cfg.steps_per_epoch);
-    for step in 0..cfg.steps_per_epoch {
-        let mut xp_acc: Option<Mat> = None;
-        let mut yp_acc: Option<Mat> = None;
-        for j in 0..cfg.clients {
-            let g = coding::generator_matrix(cfg.generator, u_star, cfg.local_batch, rng);
-            let cd = &setup.client_data[j];
-            let (xp, yp) = rt
-                .encode(&g, &weights[j], &cd.xhat[step], &cd.y[step])
-                .with_context(|| format!("encoding client {j}, step {step}"))?;
-            match (&mut xp_acc, &mut yp_acc) {
-                (Some(xa), Some(ya)) => {
-                    xa.axpy(1.0, &xp);
-                    ya.axpy(1.0, &yp);
-                }
-                _ => {
-                    xp_acc = Some(xp);
-                    yp_acc = Some(yp);
-                }
-            }
-        }
-        // Trim parity to the live u* rows (encode pads G to u_max with
-        // zero rows, whose parity is exactly zero).
-        let xp = xp_acc.unwrap().rows_slice(0, u_star);
-        let yp = yp_acc.unwrap().rows_slice(0, u_star);
-        parity.push((xp, yp));
-    }
-
-    // One-time parity upload overhead (Fig. 4(a) inset): clients upload in
-    // parallel; the clock pays the slowest client's total upload across
-    // all steps_per_epoch parity sets.
-    let parity_overhead = setup
-        .clients
-        .iter()
-        .map(|cl| {
-            setup.fleet_spec.parity_upload_secs(cl, u_star) * cfg.steps_per_epoch as f64
-        })
-        .fold(0.0, f64::max);
-
-    Ok(CodedState {
-        t_star,
-        u_star,
-        masks,
-        parity,
-        pnr_server,
-        parity_overhead,
-    })
+#[deprecated(
+    since = "0.2.0",
+    note = "build a Session with ExperimentBuilder and call Session::run \
+            (or coordinator::engine::run) with a schemes::Scheme"
+)]
+pub fn run_scheme(setup: &FedSetup, rt: &Runtime, scheme: SchemeSpec) -> Result<TrainOutcome> {
+    let mut built = scheme.build();
+    engine::run(setup, rt, built.as_mut(), &mut [])
 }

@@ -1,0 +1,220 @@
+//! The experiment session API: `ExperimentBuilder` → [`Session`] →
+//! [`Scheme`](crate::schemes::Scheme) runs.
+//!
+//! A [`Session`] owns the one-time shared state of an experiment — the
+//! [`FedSetup`] (fleet, non-IID shards, RFF-embedded data, test set) and
+//! the compiled [`Runtime`] — so any number of schemes can run on
+//! *identical* data and delay statistics, which is what makes the paper's
+//! comparisons fair. The builder layers config presets, file overrides and
+//! typed field overrides, and every validation error names the offending
+//! field.
+//!
+//! ```no_run
+//! use codedfedl::{ExperimentBuilder, schemes::{CodedFedL, NaiveUncoded}};
+//!
+//! let session = ExperimentBuilder::preset("tiny")?.epochs(8).build()?;
+//! let naive = session.run(&mut NaiveUncoded::new())?;
+//! let coded = session.run(&mut CodedFedL::new(0.3))?;
+//! assert!(coded.history.total_sim_time() < naive.history.total_sim_time());
+//! # anyhow::Ok(())
+//! ```
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coding::GeneratorKind;
+use crate::conf::{ConfError, ExperimentConfig};
+use crate::coordinator::{engine, FedSetup, RoundObserver, TrainOutcome};
+use crate::runtime::{Runtime, RuntimeShapes};
+use crate::schemes::{Scheme, SchemeSpec};
+
+/// Derive the runtime shape set from an experiment config (must agree with
+/// `python/compile/shapes.py`; the PJRT manifest check fails fast
+/// otherwise).
+pub fn shapes_for(cfg: &ExperimentConfig) -> RuntimeShapes {
+    RuntimeShapes {
+        d: cfg.dim,
+        q: cfg.q,
+        c: cfg.classes,
+        l_client: cfg.local_batch,
+        u_max: cfg.u_max,
+        b_embed: cfg.local_batch,
+    }
+}
+
+/// Load the runtime for a config.
+pub fn load_runtime(cfg: &ExperimentConfig) -> Result<Runtime> {
+    Runtime::load(Path::new(&cfg.artifacts_dir), shapes_for(cfg))
+}
+
+macro_rules! setters {
+    ($($(#[$doc:meta])* $name:ident: $ty:ty),* $(,)?) => {
+        $(
+            $(#[$doc])*
+            pub fn $name(mut self, v: $ty) -> Self {
+                self.cfg.$name = v;
+                self
+            }
+        )*
+    };
+}
+
+/// Builds a [`Session`]: preset or file config, field overrides, then
+/// `build()` validates, loads the runtime and materialises the
+/// [`FedSetup`].
+#[derive(Clone, Debug)]
+pub struct ExperimentBuilder {
+    cfg: ExperimentConfig,
+}
+
+impl Default for ExperimentBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExperimentBuilder {
+    /// Start from the repo's reduced `default` scale.
+    pub fn new() -> Self {
+        ExperimentBuilder { cfg: ExperimentConfig::default() }
+    }
+
+    /// Start from a named preset: `tiny` | `default` | `paper`. Unknown
+    /// names are an error listing the valid ones.
+    pub fn preset(name: &str) -> Result<Self> {
+        Ok(ExperimentBuilder { cfg: ExperimentConfig::preset(name).map_err(into_anyhow)? })
+    }
+
+    /// Start from a TOML config file. Unknown or mistyped keys fail with
+    /// the section and field name (`[training] lr: expected float, …`).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        Ok(ExperimentBuilder {
+            cfg: ExperimentConfig::from_file(path).map_err(into_anyhow)?,
+        })
+    }
+
+    /// Start from an explicit config value.
+    pub fn from_config(cfg: ExperimentConfig) -> Self {
+        ExperimentBuilder { cfg }
+    }
+
+    setters! {
+        /// Root RNG seed; every stochastic object derives from it.
+        seed: u64,
+        /// Number of clients n.
+        clients: usize,
+        /// Raw feature dimension d.
+        dim: usize,
+        /// RFF dimension q.
+        q: usize,
+        /// Number of classes c.
+        classes: usize,
+        /// RBF kernel width σ.
+        sigma: f64,
+        /// Per-client mini-batch rows ℓ_j.
+        local_batch: usize,
+        /// Global mini-batches per epoch.
+        steps_per_epoch: usize,
+        /// Total training epochs.
+        epochs: usize,
+        /// Initial learning rate.
+        lr: f64,
+        /// Step-decay factor.
+        lr_decay: f64,
+        /// Epochs at which the decay applies.
+        lr_decay_epochs: Vec<usize>,
+        /// L2 regularisation λ.
+        l2: f64,
+        /// Max parity rows (AOT-compiled shape).
+        u_max: usize,
+        /// Generator matrix distribution.
+        generator: GeneratorKind,
+        /// Train set size.
+        train_size: usize,
+        /// Test set size.
+        test_size: usize,
+        /// Artifacts directory for the PJRT runtime.
+        artifacts_dir: String,
+        /// Dataset family ("mnist" | "fashion" | "easy").
+        dataset: String,
+    }
+
+    /// The config as currently layered (pre-validation).
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// Validate the layered config, load/compile the runtime and build the
+    /// shared [`FedSetup`]. Every config error names the offending field.
+    pub fn build(self) -> Result<Session> {
+        self.cfg.validate().map_err(into_anyhow)?;
+        let rt = load_runtime(&self.cfg)?;
+        let setup = FedSetup::build(&self.cfg, &rt)?;
+        Ok(Session { setup, rt })
+    }
+}
+
+fn into_anyhow(e: ConfError) -> anyhow::Error {
+    anyhow::anyhow!(e.to_string())
+}
+
+/// One experiment's live state: the shared [`FedSetup`] plus the compiled
+/// [`Runtime`]. Run as many schemes as you like — they all see identical
+/// data, fleet and delay statistics.
+pub struct Session {
+    setup: FedSetup,
+    rt: Runtime,
+}
+
+impl Session {
+    /// Assemble a session from parts built elsewhere (advanced: custom
+    /// setups, shared runtimes in benches).
+    pub fn from_parts(setup: FedSetup, rt: Runtime) -> Self {
+        Session { setup, rt }
+    }
+
+    pub fn setup(&self) -> &FedSetup {
+        &self.setup
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.setup.cfg
+    }
+
+    /// Run a scheme to completion on this session's data and fleet.
+    pub fn run(&self, scheme: &mut dyn Scheme) -> Result<TrainOutcome> {
+        engine::run(&self.setup, &self.rt, scheme, &mut [])
+    }
+
+    /// [`Session::run`] with one [`RoundObserver`] receiving a
+    /// [`RoundEvent`](crate::coordinator::RoundEvent) per round.
+    pub fn run_observed(
+        &self,
+        scheme: &mut dyn Scheme,
+        observer: &mut dyn RoundObserver,
+    ) -> Result<TrainOutcome> {
+        engine::run(&self.setup, &self.rt, scheme, &mut [observer])
+    }
+
+    /// [`Session::run`] with any number of observers.
+    pub fn run_with(
+        &self,
+        scheme: &mut dyn Scheme,
+        observers: &mut [&mut dyn RoundObserver],
+    ) -> Result<TrainOutcome> {
+        engine::run(&self.setup, &self.rt, scheme, observers)
+    }
+
+    /// Convenience: build and run a [`SchemeSpec`] (the CLI/TOML string
+    /// form — `SchemeSpec::parse("coded:delta=0.1")`).
+    pub fn run_spec(&self, spec: SchemeSpec) -> Result<TrainOutcome> {
+        let mut scheme = spec.build();
+        self.run(scheme.as_mut())
+            .with_context(|| format!("running scheme {}", spec.label()))
+    }
+}

@@ -3,19 +3,63 @@
 //! Production reproduction of *“Coded Computing for Low-Latency Federated
 //! Learning over Wireless Edge Networks”* (Prakash et al., IEEE JSAC 2020).
 //!
+//! ## The session API
+//!
+//! Everything hangs off three pieces:
+//!
+//! 1. **[`ExperimentBuilder`]** — layer a config (preset, TOML file,
+//!    typed overrides; every validation error names the offending field)
+//!    and `build()` a session.
+//! 2. **[`Session`]** — owns the one-time shared state: the
+//!    [`coordinator::FedSetup`] (fleet, non-IID shards, RFF-embedded
+//!    data, test set) and the kernel [`runtime::Runtime`]. Run any number
+//!    of schemes on it; they all see identical data and delay statistics,
+//!    which is what makes the paper's comparisons fair.
+//! 3. **[`schemes::Scheme`]** — the open aggregation-policy trait. The
+//!    paper's three policies ship in [`schemes`] ([`schemes::NaiveUncoded`],
+//!    [`schemes::GreedyUncoded`], [`schemes::CodedFedL`]); new policies
+//!    implement `label` + `plan_round` (plus optional `prepare` /
+//!    `aggregate` hooks) and plug in without touching the engine.
+//!
+//! ```no_run
+//! use codedfedl::{ExperimentBuilder, schemes::{CodedFedL, NaiveUncoded}};
+//!
+//! let session = ExperimentBuilder::preset("tiny")?.epochs(8).build()?;
+//! let naive = session.run(&mut NaiveUncoded::new())?;
+//! let coded = session.run(&mut CodedFedL::new(0.3))?;
+//! println!(
+//!     "coded is {:.1}x faster on the simulated clock",
+//!     naive.history.total_sim_time() / coded.history.total_sim_time()
+//! );
+//! # anyhow::Ok(())
+//! ```
+//!
+//! Per round the engine ([`coordinator::engine`]) samples the wireless MEC
+//! delay model, asks the scheme which gradients to execute, really runs
+//! them through the runtime, applies the update of eq. (5), and emits one
+//! [`coordinator::RoundEvent`] to every registered
+//! [`coordinator::RoundObserver`] — the CLI progress printer, benches and
+//! tests all consume that same stream.
+//!
+//! ## The stack
+//!
 //! The crate is the **Layer-3 coordinator** of a three-layer stack:
 //!
-//! * **L1** — Pallas kernels (RFF embed, masked regression gradient, parity
-//!   encode) authored in `python/compile/kernels/`, lowered once.
+//! * **L1** — Pallas kernels (RFF embed, masked regression gradient,
+//!   parity encode) authored in `python/compile/kernels/`, lowered once.
 //! * **L2** — JAX graphs composing those kernels
 //!   (`python/compile/model.py`), AOT-exported to HLO text in `artifacts/`.
 //! * **L3** — this crate: the wireless-MEC delay substrate, the
-//!   load-allocation optimizer, the distributed-encoding bookkeeping and the
-//!   coded federated training loop, all executing the L2 artifacts through
-//!   the PJRT C API (`xla` crate). Python never runs on the training path.
+//!   load-allocation optimizer, the distributed-encoding bookkeeping and
+//!   the coded federated training loop. With `--features pjrt` the L2
+//!   artifacts execute through the PJRT C API (`xla` bindings); by default
+//!   [`runtime::native`] provides pure-Rust implementations of the same
+//!   kernel contracts so the whole system builds and tests offline.
 //!
-//! See `DESIGN.md` for the full system inventory and experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` for the full system inventory and experiment index,
+//! `EXPERIMENTS.md` for paper-vs-measured results, and
+//! `examples/quickstart.rs` for the canonical Builder → Session → Scheme
+//! walkthrough.
 
 pub mod allocation;
 pub mod benchutil;
@@ -26,11 +70,17 @@ pub mod convergence;
 pub mod coordinator;
 pub mod data;
 pub mod delay;
+pub mod experiment;
 pub mod metrics;
 pub mod numerics;
 pub mod privacy;
 pub mod rng;
 pub mod runtime;
+pub mod schemes;
 pub mod sim;
 pub mod tensor;
 pub mod topology;
+
+pub use coordinator::{FedSetup, RoundEvent, RoundObserver, TrainOutcome};
+pub use experiment::{ExperimentBuilder, Session};
+pub use schemes::{Scheme, SchemeSpec};

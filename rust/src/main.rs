@@ -2,16 +2,22 @@
 //! wireless MEC fleet, inspect load allocation, and report privacy budgets.
 //!
 //! Run `codedfedl --help` for commands. The heavy lifting lives in the
-//! library (`rust/src/`); this file is argument plumbing only.
+//! library (`rust/src/`); this file is argument plumbing only: it layers
+//! an [`ExperimentBuilder`], parses scheme strings with
+//! [`SchemeSpec::parse`] and consumes the engine's [`RoundEvent`] stream
+//! for progress output.
 
 use anyhow::Result;
 
 use codedfedl::allocation::{self, NodeSpec};
 use codedfedl::benchutil;
 use codedfedl::cli::{parse_argv, Args, Command, OptSpec};
-use codedfedl::conf::{ExperimentConfig, Scheme};
+use codedfedl::conf::ExperimentConfig;
+use codedfedl::coordinator::{RoundEvent, RoundObserver};
 use codedfedl::metrics::GainRow;
+use codedfedl::schemes::SchemeSpec;
 use codedfedl::topology::FleetSpec;
+use codedfedl::ExperimentBuilder;
 
 fn commands() -> Vec<Command> {
     let common = vec![
@@ -23,11 +29,11 @@ fn commands() -> Vec<Command> {
     vec![
         Command {
             name: "train",
-            about: "train one scheme (naive | greedy | coded) end to end",
+            about: "train one scheme (naive | greedy[:psi=ψ] | coded[:delta=δ]) end to end",
             opts: [
                 common.clone(),
                 vec![
-                    OptSpec { name: "scheme", help: "naive|greedy|coded", default: Some("coded"), is_flag: false },
+                    OptSpec { name: "scheme", help: "naive|greedy|coded, or e.g. coded:delta=0.2", default: Some("coded"), is_flag: false },
                     OptSpec { name: "delta", help: "coding redundancy u_max/m", default: Some("0.1"), is_flag: false },
                     OptSpec { name: "psi", help: "greedy drop fraction", default: Some("0.1"), is_flag: false },
                 ],
@@ -77,23 +83,23 @@ fn commands() -> Vec<Command> {
     ]
 }
 
-fn config_from(args: &Args) -> Result<ExperimentConfig> {
-    let mut cfg = match args.get_or("preset", "default") {
-        "tiny" => ExperimentConfig::tiny(),
-        "paper" => ExperimentConfig::paper(),
-        _ => ExperimentConfig::default(),
+/// Layer preset → config file → flag overrides into a builder.
+fn builder_from(args: &Args) -> Result<ExperimentBuilder> {
+    let mut b = match args.get("config") {
+        Some(path) => ExperimentBuilder::from_file(std::path::Path::new(path))?,
+        None => ExperimentBuilder::preset(args.get_or("preset", "default"))?,
     };
-    if let Some(path) = args.get("config") {
-        cfg = ExperimentConfig::from_file(std::path::Path::new(path))
-            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
-    }
     if let Some(seed) = args.parse_u64("seed").map_err(anyhow::Error::msg)? {
-        cfg.seed = seed;
+        b = b.seed(seed);
     }
     if let Some(e) = args.parse_usize("epochs").map_err(anyhow::Error::msg)? {
-        cfg.epochs = e;
+        b = b.epochs(e);
     }
-    Ok(cfg)
+    Ok(b)
+}
+
+fn config_from(args: &Args) -> Result<ExperimentConfig> {
+    Ok(builder_from(args)?.config().clone())
 }
 
 fn main() {
@@ -126,28 +132,46 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
     }
 }
 
+/// Streams engine round events to stdout every `stride` iterations — the
+/// CLI's view of the same [`RoundEvent`] stream tests and benches consume.
+struct ProgressPrinter {
+    stride: usize,
+}
+
+impl RoundObserver for ProgressPrinter {
+    fn on_round(&mut self, ev: &RoundEvent) {
+        if ev.iter % self.stride == 0 || ev.iter == 1 {
+            println!(
+                "iter {:>5}  sim {:>10.1} s  acc {:.4}  loss {:.5}  ({} arrivals)",
+                ev.iter, ev.clock, ev.acc, ev.loss, ev.arrivals
+            );
+        }
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = config_from(args)?;
     let delta = args.parse_f64("delta").map_err(anyhow::Error::msg)?.unwrap_or(0.1);
     let psi = args.parse_f64("psi").map_err(anyhow::Error::msg)?.unwrap_or(0.1);
-    let scheme = match args.get_or("scheme", "coded") {
-        "naive" => Scheme::NaiveUncoded,
-        "greedy" => Scheme::GreedyUncoded { psi },
-        "coded" => Scheme::Coded { delta },
-        other => anyhow::bail!("unknown scheme {other:?}"),
-    };
-    let (_, results) = benchutil::run_experiment(&cfg, &[scheme])?;
-    let (s, out) = &results[0];
-    println!("scheme: {}", s.label());
+    let raw = args.get_or("scheme", "coded");
+    let mut spec = SchemeSpec::parse(raw).map_err(anyhow::Error::msg)?;
+    // Bare scheme names take their parameter from --delta/--psi; the
+    // `name:key=value` form is self-contained.
+    if !raw.contains(':') {
+        match &mut spec {
+            SchemeSpec::GreedyUncoded { psi: p } => *p = psi,
+            SchemeSpec::Coded { delta: d } => *d = delta,
+            SchemeSpec::NaiveUncoded => {}
+        }
+    }
+
+    let session = builder_from(args)?.build()?;
+    let total = session.config().total_iters();
+    println!("scheme: {}", spec.label());
+    let mut scheme = spec.build();
+    let mut progress = ProgressPrinter { stride: (total / 20).max(1) };
+    let out = session.run_observed(scheme.as_mut(), &mut progress)?;
     if let (Some(t), Some(u)) = (out.t_star, out.u_star) {
         println!("t* = {t:.2} s   u* = {u}   parity overhead = {:.1} s", out.parity_overhead);
-    }
-    let stride = (out.history.points.len() / 20).max(1);
-    for p in out.history.points.iter().step_by(stride) {
-        println!(
-            "iter {:>5}  sim {:>10.1} s  acc {:.4}  loss {:.5}",
-            p.iter, p.sim_time, p.accuracy, p.train_loss
-        );
     }
     println!("final accuracy {:.4}", out.history.final_accuracy());
     Ok(())
@@ -158,9 +182,9 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let delta = args.parse_f64("delta").map_err(anyhow::Error::msg)?.unwrap_or(0.1);
     let psi = args.parse_f64("psi").map_err(anyhow::Error::msg)?.unwrap_or(0.1);
     let schemes = [
-        Scheme::NaiveUncoded,
-        Scheme::GreedyUncoded { psi },
-        Scheme::Coded { delta },
+        SchemeSpec::NaiveUncoded,
+        SchemeSpec::GreedyUncoded { psi },
+        SchemeSpec::Coded { delta },
     ];
     let (_, results) = benchutil::run_experiment(&cfg, &schemes)?;
     let naive = &results[0].1.history;

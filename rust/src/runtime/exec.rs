@@ -1,14 +1,31 @@
-//! Typed executors over the compiled artifacts: embed / grad / encode /
-//! predict, each padding its workload to the compiled shape (exactly —
-//! zero rows contribute zero) and unpadding results.
+//! Typed executors behind [`Runtime`]: embed / grad / encode / predict.
+//!
+//! Two interchangeable backends sit behind one shape-checked API:
+//!
+//! * **native** (default) — pure-Rust kernels
+//!   ([`super::native::NativeExec`]) matching the jnp oracles in
+//!   `python/compile/kernels/ref.py`. No artifacts, no external deps.
+//! * **pjrt** (`--features pjrt`) — the AOT HLO-text artifacts compiled
+//!   through the PJRT C API (`xla` bindings required), padding each
+//!   workload to the compiled shape (exactly — zero rows contribute zero)
+//!   and unpadding results.
+//!
+//! The shape contract (`RuntimeShapes`, padding limits) is enforced on
+//! both paths so natively-developed code never breaks under PJRT.
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 
-use super::manifest::Manifest;
-use super::{literal_to_mat, mat_to_literal, vec_to_literal};
+use super::native::NativeExec;
 use crate::tensor::Mat;
+
+#[cfg(feature = "pjrt")]
+use super::manifest::Manifest;
+#[cfg(feature = "pjrt")]
+use super::{literal_to_mat, mat_to_literal, vec_to_literal};
 
 /// The AOT shapes one experiment needs (mirrors
 /// `python/compile/shapes.py::ShapeSet`).
@@ -22,16 +39,23 @@ pub struct RuntimeShapes {
     pub b_embed: usize,
 }
 
-/// A θ matrix pre-converted to an XLA literal (see
-/// [`Runtime::prepare_theta`]).
+/// A θ matrix pre-converted for the backend (see
+/// [`Runtime::prepare_theta`]): the coordinator issues ~n+1 grad calls
+/// against the same θ each round, so the conversion is hoisted off the
+/// per-call path. Only the active backend's representation is
+/// materialised.
 pub struct PreparedTheta {
-    lit: xla::Literal,
+    mat: Option<Mat>,
+    #[cfg(feature = "pjrt")]
+    lit: Option<xla::Literal>,
 }
 
+#[cfg(feature = "pjrt")]
 struct Compiled {
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl Compiled {
     fn load(client: &xla::PjRtClient, path: &Path) -> Result<Compiled> {
         let proto = xla::HloModuleProto::from_text_file(
@@ -61,24 +85,62 @@ impl Compiled {
     }
 }
 
-/// Owns the PJRT client plus one compiled executable per artifact the
-/// experiment uses. Construction compiles everything up front so the
-/// training loop never hits a compile stall.
-pub struct Runtime {
-    shapes: RuntimeShapes,
+/// One compiled executable per artifact the experiment uses; construction
+/// compiles everything up front so the training loop never hits a compile
+/// stall.
+#[cfg(feature = "pjrt")]
+struct PjrtExec {
     embed: Compiled,
     grad_client: Compiled,
     grad_server: Compiled,
     encode: Compiled,
     predict: Compiled,
-    /// Running count of artifact executions (telemetry for §Perf).
+}
+
+enum Backend {
+    Native(NativeExec),
+    #[cfg(feature = "pjrt")]
+    Pjrt(Box<PjrtExec>),
+}
+
+/// Owns the executor backend plus the experiment's shape set.
+pub struct Runtime {
+    shapes: RuntimeShapes,
+    backend: Backend,
+    /// Running count of executor invocations (telemetry for §Perf).
     pub exec_count: std::cell::Cell<u64>,
 }
 
 impl Runtime {
-    /// Load `artifacts_dir/manifest.txt`, resolve the five artifacts the
-    /// shape set needs, and compile them on the CPU PJRT client.
+    /// Build the runtime for `shapes`.
+    ///
+    /// With the `pjrt` feature: loads `artifacts_dir/manifest.txt`,
+    /// resolves the five artifacts the shape set needs and compiles them
+    /// on the CPU PJRT client (failing fast if any is missing). Without
+    /// it: returns the native executor and ignores `artifacts_dir`.
     pub fn load(artifacts_dir: &Path, shapes: RuntimeShapes) -> Result<Runtime> {
+        #[cfg(feature = "pjrt")]
+        {
+            Self::load_pjrt(artifacts_dir, shapes)
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let _ = artifacts_dir;
+            Ok(Self::native(shapes))
+        }
+    }
+
+    /// The pure-Rust executor (always available).
+    pub fn native(shapes: RuntimeShapes) -> Runtime {
+        Runtime {
+            shapes,
+            backend: Backend::Native(NativeExec),
+            exec_count: std::cell::Cell::new(0),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn load_pjrt(artifacts_dir: &Path, shapes: RuntimeShapes) -> Result<Runtime> {
         let man = Manifest::load(artifacts_dir)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let RuntimeShapes { d, q, c, l_client, u_max, b_embed } = shapes;
@@ -87,13 +149,16 @@ impl Runtime {
             let entry = man.require(kind, dims)?;
             Compiled::load(&client, &man.path(entry))
         };
-        Ok(Runtime {
-            shapes,
+        let exec = PjrtExec {
             embed: find("rff_embed", &[("b", b_embed), ("d", d), ("q", q)])?,
             grad_client: find("grad", &[("l", l_client), ("q", q), ("c", c)])?,
             grad_server: find("grad", &[("l", u_max), ("q", q), ("c", c)])?,
             encode: find("encode", &[("u", u_max), ("l", l_client), ("q", q), ("c", c)])?,
             predict: find("predict", &[("b", b_embed), ("q", q), ("c", c)])?,
+        };
+        Ok(Runtime {
+            shapes,
+            backend: Backend::Pjrt(Box::new(exec)),
             exec_count: std::cell::Cell::new(0),
         })
     }
@@ -102,67 +167,85 @@ impl Runtime {
         self.shapes
     }
 
+    /// `"native"` or `"pjrt"` — which executor this runtime dispatches to.
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            Backend::Native(_) => "native",
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
     fn bump(&self) {
         self.exec_count.set(self.exec_count.get() + 1);
     }
 
-    /// RFF-embed `x [n, d]` (chunked over the compiled row-block; the last
-    /// chunk is zero-padded and trimmed). `omega [d, q]`, `delta [q]`.
+    /// RFF-embed `x [n, d]`. `omega [d, q]`, `delta [q]`. On the PJRT path
+    /// the input is chunked over the compiled row-block, the last chunk
+    /// zero-padded and trimmed.
     pub fn embed(&self, x: &Mat, omega: &Mat, delta: &[f32]) -> Result<Mat> {
-        let RuntimeShapes { d, q, b_embed, .. } = self.shapes;
+        let RuntimeShapes { d, q, .. } = self.shapes;
         anyhow::ensure!(x.cols() == d, "embed: x has d={}, compiled d={d}", x.cols());
         anyhow::ensure!(omega.rows() == d && omega.cols() == q, "embed: omega shape");
         anyhow::ensure!(delta.len() == q, "embed: delta len");
-        let omega_l = mat_to_literal(omega)?;
-        let delta_l = vec_to_literal(delta);
-        let n = x.rows();
-        let mut out = Mat::zeros(n, q);
-        let mut start = 0;
-        while start < n {
-            let take = (n - start).min(b_embed);
-            let chunk = x.rows_slice(start, take).pad_rows(b_embed);
-            let res = self.run_embed(&chunk, &omega_l, &delta_l)?;
-            out.as_mut_slice()[start * q..(start + take) * q]
-                .copy_from_slice(&res.as_slice()[..take * q]);
-            start += take;
+        match &self.backend {
+            Backend::Native(nb) => {
+                self.bump();
+                Ok(nb.embed(x, omega, delta))
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => {
+                let b_embed = self.shapes.b_embed;
+                let omega_l = mat_to_literal(omega)?;
+                let delta_l = vec_to_literal(delta);
+                let n = x.rows();
+                let mut out = Mat::zeros(n, q);
+                let mut start = 0;
+                while start < n {
+                    let take = (n - start).min(b_embed);
+                    let chunk = x.rows_slice(start, take).pad_rows(b_embed);
+                    self.bump();
+                    let lit = p.embed.run1(&[
+                        mat_to_literal(&chunk)?,
+                        omega_l.clone(),
+                        delta_l.clone(),
+                    ])?;
+                    let res = literal_to_mat(&lit, b_embed, q)?;
+                    out.as_mut_slice()[start * q..(start + take) * q]
+                        .copy_from_slice(&res.as_slice()[..take * q]);
+                    start += take;
+                }
+                Ok(out)
+            }
         }
-        Ok(out)
     }
 
-    fn run_embed(
-        &self,
-        chunk: &Mat,
-        omega_l: &xla::Literal,
-        delta_l: &xla::Literal,
-    ) -> Result<Mat> {
-        self.bump();
-        let lit = self.embed.run1(&[
-            mat_to_literal(chunk)?,
-            omega_l.clone(),
-            delta_l.clone(),
-        ])?;
-        literal_to_mat(&lit, self.shapes.b_embed, self.shapes.q)
-    }
-
-    /// Pre-convert θ to an XLA literal once per round; the coordinator
-    /// issues ~n+1 grad calls against the same θ each iteration, so
-    /// hoisting the conversion off the per-call path is free speed
-    /// (EXPERIMENTS.md §Perf iteration 2).
+    /// Pre-convert θ once per round (see [`PreparedTheta`]).
     pub fn prepare_theta(&self, theta: &Mat) -> Result<PreparedTheta> {
         let RuntimeShapes { q, c, .. } = self.shapes;
         anyhow::ensure!(theta.rows() == q && theta.cols() == c, "theta shape");
-        Ok(PreparedTheta { lit: mat_to_literal(theta)? })
+        Ok(PreparedTheta {
+            mat: match &self.backend {
+                Backend::Native(_) => Some(theta.clone()),
+                #[cfg(feature = "pjrt")]
+                Backend::Pjrt(_) => None,
+            },
+            #[cfg(feature = "pjrt")]
+            lit: match &self.backend {
+                Backend::Pjrt(_) => Some(mat_to_literal(theta)?),
+                _ => None,
+            },
+        })
     }
 
     /// Masked gradient `X̂ᵀ diag(mask) (X̂θ − Y)` over up to `l_client`
-    /// (client) or `u_max` (server/parity) rows; rows are zero-padded to
-    /// the compiled shape, mask padded with 0.
+    /// (client) or `u_max` (server/parity) rows.
     pub fn grad(&self, xhat: &Mat, y: &Mat, theta: &Mat, mask: &[f32]) -> Result<Mat> {
         let prepared = self.prepare_theta(theta)?;
         self.grad_prepared(xhat, y, &prepared, mask)
     }
 
-    /// [`Runtime::grad`] with a pre-converted θ literal.
+    /// [`Runtime::grad`] with a pre-converted θ.
     pub fn grad_prepared(
         &self,
         xhat: &Mat,
@@ -174,27 +257,39 @@ impl Runtime {
         anyhow::ensure!(xhat.cols() == q && y.cols() == c, "grad: payload shape");
         anyhow::ensure!(xhat.rows() == y.rows() && mask.len() == xhat.rows(), "grad: rows");
         let n = xhat.rows();
-        let (l, exe) = if n <= l_client {
-            (l_client, &self.grad_client)
-        } else if n <= u_max {
-            (u_max, &self.grad_server)
-        } else {
-            anyhow::bail!("grad: {n} rows exceeds largest compiled shape {u_max}");
-        };
-        let mut mask_p = mask.to_vec();
-        mask_p.resize(l, 0.0);
+        anyhow::ensure!(
+            n <= u_max.max(l_client),
+            "grad: {n} rows exceeds largest compiled shape {}",
+            u_max.max(l_client)
+        );
         self.bump();
-        let lit = exe.run1(&[
-            mat_to_literal(&xhat.pad_rows(l))?,
-            mat_to_literal(&y.pad_rows(l))?,
-            theta.lit.clone(),
-            vec_to_literal(&mask_p),
-        ])?;
-        literal_to_mat(&lit, q, c)
+        match &self.backend {
+            Backend::Native(nb) => {
+                let mat = theta.mat.as_ref().expect("native theta prepared");
+                Ok(nb.grad(xhat, y, mat, mask))
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => {
+                let (l, exe) = if n <= l_client {
+                    (l_client, &p.grad_client)
+                } else {
+                    (u_max, &p.grad_server)
+                };
+                let mut mask_p = mask.to_vec();
+                mask_p.resize(l, 0.0);
+                let lit = exe.run1(&[
+                    mat_to_literal(&xhat.pad_rows(l))?,
+                    mat_to_literal(&y.pad_rows(l))?,
+                    theta.lit.as_ref().expect("pjrt theta literal").clone(),
+                    vec_to_literal(&mask_p),
+                ])?;
+                literal_to_mat(&lit, q, c)
+            }
+        }
     }
 
-    /// Parity encode: `G [u, l] (u ≤ u_max zero-padded), w [l], X̂ [l, q],
-    /// Y [l, c]` → `(X̌ [u_max, q], Y̌ [u_max, c])`.
+    /// Parity encode: `G [u, l] (u ≤ u_max), w [l], X̂ [l, q], Y [l, c]` →
+    /// `(X̌ [u_max, q], Y̌ [u_max, c])` (rows past `u` are zero).
     pub fn encode(&self, g: &Mat, w: &[f32], xhat: &Mat, y: &Mat) -> Result<(Mat, Mat)> {
         let RuntimeShapes { q, c, l_client, u_max, .. } = self.shapes;
         anyhow::ensure!(g.cols() == l_client, "encode: G cols {} != l {}", g.cols(), l_client);
@@ -206,37 +301,54 @@ impl Runtime {
         );
         anyhow::ensure!(y.rows() == l_client && y.cols() == c, "encode: y shape");
         self.bump();
-        let (xp, yp) = self.encode.run2(&[
-            mat_to_literal(&g.pad_rows(u_max))?,
-            vec_to_literal(w),
-            mat_to_literal(xhat)?,
-            mat_to_literal(y)?,
-        ])?;
-        Ok((
-            literal_to_mat(&xp, u_max, q)?,
-            literal_to_mat(&yp, u_max, c)?,
-        ))
+        match &self.backend {
+            Backend::Native(nb) => Ok(nb.encode(g, w, xhat, y, u_max)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => {
+                let (xp, yp) = p.encode.run2(&[
+                    mat_to_literal(&g.pad_rows(u_max))?,
+                    vec_to_literal(w),
+                    mat_to_literal(xhat)?,
+                    mat_to_literal(y)?,
+                ])?;
+                Ok((
+                    literal_to_mat(&xp, u_max, q)?,
+                    literal_to_mat(&yp, u_max, c)?,
+                ))
+            }
+        }
     }
 
-    /// Logits `X̂ θ` for `n` rows (chunked + padded like [`Runtime::embed`]).
+    /// Logits `X̂ θ` for `n` rows (chunked + padded like [`Runtime::embed`]
+    /// on the PJRT path).
     pub fn predict(&self, xhat: &Mat, theta: &Mat) -> Result<Mat> {
-        let RuntimeShapes { q, c, b_embed, .. } = self.shapes;
+        let RuntimeShapes { q, c, .. } = self.shapes;
         anyhow::ensure!(xhat.cols() == q, "predict: xhat shape");
         anyhow::ensure!(theta.rows() == q && theta.cols() == c, "predict: theta shape");
-        let theta_l = mat_to_literal(theta)?;
-        let n = xhat.rows();
-        let mut out = Mat::zeros(n, c);
-        let mut start = 0;
-        while start < n {
-            let take = (n - start).min(b_embed);
-            let chunk = xhat.rows_slice(start, take).pad_rows(b_embed);
-            self.bump();
-            let lit = self.predict.run1(&[mat_to_literal(&chunk)?, theta_l.clone()])?;
-            let res = literal_to_mat(&lit, b_embed, c)?;
-            out.as_mut_slice()[start * c..(start + take) * c]
-                .copy_from_slice(&res.as_slice()[..take * c]);
-            start += take;
+        match &self.backend {
+            Backend::Native(nb) => {
+                self.bump();
+                Ok(nb.predict(xhat, theta))
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => {
+                let b_embed = self.shapes.b_embed;
+                let theta_l = mat_to_literal(theta)?;
+                let n = xhat.rows();
+                let mut out = Mat::zeros(n, c);
+                let mut start = 0;
+                while start < n {
+                    let take = (n - start).min(b_embed);
+                    let chunk = xhat.rows_slice(start, take).pad_rows(b_embed);
+                    self.bump();
+                    let lit = p.predict.run1(&[mat_to_literal(&chunk)?, theta_l.clone()])?;
+                    let res = literal_to_mat(&lit, b_embed, c)?;
+                    out.as_mut_slice()[start * c..(start + take) * c]
+                        .copy_from_slice(&res.as_slice()[..take * c]);
+                    start += take;
+                }
+                Ok(out)
+            }
         }
-        Ok(out)
     }
 }

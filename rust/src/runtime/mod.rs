@@ -1,36 +1,50 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
-//! training hot path.
+//! Kernel-executor runtime behind the training hot path.
 //!
-//! Wiring (see /opt/xla-example and DESIGN.md §2): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` once per artifact → `execute` per call. HLO *text* is
-//! the interchange format (jax ≥ 0.5 emits 64-bit-id protos that
-//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+//! Two backends, one API ([`Runtime`]):
 //!
-//! Shape policy: artifacts are compiled for fixed shapes; smaller workloads
-//! are zero-padded up to the compiled shape, which is *exact* for this
-//! math (zero data/generator rows contribute zero gradient/parity — tested
-//! in `python/tests/test_kernels_*.py` and `rust/tests/runtime_exec.rs`).
+//! * **native** (default feature set) — pure-Rust implementations of the
+//!   four kernel contracts (`runtime::native`), bit-for-bit faithful to
+//!   the jnp oracles in `python/compile/kernels/ref.py`. Builds and runs
+//!   with zero external dependencies.
+//! * **pjrt** (`--features pjrt`) — loads the AOT HLO-text artifacts and
+//!   executes them through the PJRT C API. Wiring (see DESIGN.md §2):
+//!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//!   `XlaComputation::from_proto` → `client.compile` once per artifact →
+//!   `execute` per call. HLO *text* is the interchange format (jax ≥ 0.5
+//!   emits 64-bit-id protos that xla_extension 0.5.1 rejects; the text
+//!   parser reassigns ids).
+//!
+//! Shape policy: artifacts are compiled for fixed shapes; smaller
+//! workloads are zero-padded up to the compiled shape, which is *exact*
+//! for this math (zero data/generator rows contribute zero
+//! gradient/parity — tested in `python/tests/test_kernels_*.py` and
+//! `rust/tests/runtime_exec.rs`). The native backend enforces the same
+//! shape contract so either backend exercises the other's invariants.
 
 mod exec;
 mod manifest;
+pub mod native;
 
 pub use exec::{PreparedTheta, Runtime, RuntimeShapes};
 pub use manifest::{Manifest, ManifestEntry};
 
+#[cfg(feature = "pjrt")]
 use crate::tensor::Mat;
 
 /// Convert a [`Mat`] into an XLA literal of the same `[rows, cols]` shape.
+#[cfg(feature = "pjrt")]
 pub fn mat_to_literal(m: &Mat) -> anyhow::Result<xla::Literal> {
     Ok(xla::Literal::vec1(m.as_slice()).reshape(&[m.rows() as i64, m.cols() as i64])?)
 }
 
 /// Convert a 1-D slice into an XLA literal of shape `[len]`.
+#[cfg(feature = "pjrt")]
 pub fn vec_to_literal(v: &[f32]) -> xla::Literal {
     xla::Literal::vec1(v)
 }
 
 /// Convert an XLA literal (known `[rows, cols]`) back into a [`Mat`].
+#[cfg(feature = "pjrt")]
 pub fn literal_to_mat(lit: &xla::Literal, rows: usize, cols: usize) -> anyhow::Result<Mat> {
     let v = lit.to_vec::<f32>()?;
     anyhow::ensure!(

@@ -1,0 +1,196 @@
+//! Pure-Rust executor implementing the L1 kernel contracts.
+//!
+//! Each function mirrors its jnp oracle in `python/compile/kernels/ref.py`
+//! — those oracles define what the kernels *mean*, so this backend and the
+//! PJRT artifacts are interchangeable up to f32 rounding. It exists so the
+//! whole crate builds, trains and tests in environments without the `xla`
+//! bindings or the AOT artifacts (enable the `pjrt` feature to switch).
+//!
+//! Shapes are unconstrained here (no compiled-shape padding needed), but
+//! the [`super::Runtime`] wrappers still enforce the artifact shape
+//! contract so code exercised natively keeps working on the PJRT path.
+
+use crate::tensor::Mat;
+
+/// Marker struct: the native executor is stateless.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeExec;
+
+impl NativeExec {
+    /// RFF embedding (paper eq. 18): `sqrt(2/q) · cos(x Ω + δ)`.
+    pub fn embed(&self, x: &Mat, omega: &Mat, delta: &[f32]) -> Mat {
+        let q = omega.cols();
+        let xo = x.matmul_ref(omega);
+        let scale = (2.0f32 / q as f32).sqrt();
+        Mat::from_fn(x.rows(), q, |r, c| scale * (xo.get(r, c) + delta[c]).cos())
+    }
+
+    /// Masked gradient (paper eqs. 7/10/28 numerator):
+    /// `X̂ᵀ diag(mask) (X̂θ − Y)` → `[q, c]`, unnormalised.
+    pub fn grad(&self, xhat: &Mat, y: &Mat, theta: &Mat, mask: &[f32]) -> Mat {
+        let (l, q) = (xhat.rows(), xhat.cols());
+        let c = y.cols();
+        // R = diag(mask)(X̂θ − Y)
+        let mut r = xhat.matmul_ref(theta);
+        for i in 0..l {
+            let m = mask[i];
+            let rrow = &mut r.as_mut_slice()[i * c..(i + 1) * c];
+            let yrow = y.row(i);
+            for (rv, &yv) in rrow.iter_mut().zip(yrow) {
+                *rv = m * (*rv - yv);
+            }
+        }
+        // g = X̂ᵀ R, accumulated row-block by row-block ([q, c] stays hot).
+        let mut g = Mat::zeros(q, c);
+        for i in 0..l {
+            if mask[i] == 0.0 {
+                continue; // zero residual row contributes nothing
+            }
+            let xrow = xhat.row(i);
+            let rrow = r.row(i);
+            let gs = g.as_mut_slice();
+            for (k, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let grow = &mut gs[k * c..(k + 1) * c];
+                for (gv, &rv) in grow.iter_mut().zip(rrow) {
+                    *gv += xv * rv;
+                }
+            }
+        }
+        g
+    }
+
+    /// Weighted random linear encode (paper eq. 19):
+    /// `(G ⊙ w[None, :]) · D` for `D ∈ {X̂ [l, q], Y [l, c]}`, zero-padded
+    /// to `u_max` output rows to match the compiled-artifact contract.
+    pub fn encode(
+        &self,
+        g: &Mat,
+        w: &[f32],
+        xhat: &Mat,
+        y: &Mat,
+        u_max: usize,
+    ) -> (Mat, Mat) {
+        let (u, l) = (g.rows(), g.cols());
+        let (q, c) = (xhat.cols(), y.cols());
+        let mut xp = Mat::zeros(u_max, q);
+        let mut yp = Mat::zeros(u_max, c);
+        for ui in 0..u {
+            let grow = g.row(ui);
+            let xrow_out = &mut xp.as_mut_slice()[ui * q..(ui + 1) * q];
+            for li in 0..l {
+                let gv = grow[li] * w[li];
+                if gv == 0.0 {
+                    continue;
+                }
+                for (ov, &dv) in xrow_out.iter_mut().zip(xhat.row(li)) {
+                    *ov += gv * dv;
+                }
+            }
+            let yrow_out = &mut yp.as_mut_slice()[ui * c..(ui + 1) * c];
+            for li in 0..l {
+                let gv = grow[li] * w[li];
+                if gv == 0.0 {
+                    continue;
+                }
+                for (ov, &dv) in yrow_out.iter_mut().zip(y.row(li)) {
+                    *ov += gv * dv;
+                }
+            }
+        }
+        (xp, yp)
+    }
+
+    /// Logits `X̂ θ` → `[n, c]`.
+    pub fn predict(&self, xhat: &Mat, theta: &Mat) -> Mat {
+        xhat.matmul_ref(theta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal_f32(m.as_mut_slice());
+        m
+    }
+
+    #[test]
+    fn grad_matches_elementwise_reference() {
+        let mut rng = Rng::seed_from(7);
+        let xhat = randn(6, 4, &mut rng);
+        let y = randn(6, 3, &mut rng);
+        let theta = randn(4, 3, &mut rng);
+        let mask = [1.0, 0.0, 1.0, 0.5, 1.0, 0.0];
+        let g = NativeExec.grad(&xhat, &y, &theta, &mask);
+        // direct triple loop
+        let mut want = Mat::zeros(4, 3);
+        for i in 0..6 {
+            for qc in 0..3 {
+                let mut pred = 0.0f32;
+                for k in 0..4 {
+                    pred += xhat.get(i, k) * theta.get(k, qc);
+                }
+                let r = mask[i] * (pred - y.get(i, qc));
+                for k in 0..4 {
+                    want.set(k, qc, want.get(k, qc) + xhat.get(i, k) * r);
+                }
+            }
+        }
+        assert!(g.max_abs_diff(&want) < 1e-4, "diff {}", g.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn masked_rows_do_not_contribute() {
+        let mut rng = Rng::seed_from(8);
+        let xhat = randn(4, 3, &mut rng);
+        let y = randn(4, 2, &mut rng);
+        let theta = randn(3, 2, &mut rng);
+        let g_masked = NativeExec.grad(&xhat, &y, &theta, &[1.0, 1.0, 0.0, 0.0]);
+        let g_sliced = NativeExec.grad(
+            &xhat.rows_slice(0, 2),
+            &y.rows_slice(0, 2),
+            &theta,
+            &[1.0, 1.0],
+        );
+        assert!(g_masked.max_abs_diff(&g_sliced) < 1e-6);
+    }
+
+    #[test]
+    fn encode_matches_reference_and_pads() {
+        let mut rng = Rng::seed_from(9);
+        let g = randn(3, 5, &mut rng);
+        let w: Vec<f32> = (0..5).map(|i| 0.2 * i as f32).collect();
+        let xhat = randn(5, 4, &mut rng);
+        let y = randn(5, 2, &mut rng);
+        let (xp, yp) = NativeExec.encode(&g, &w, &xhat, &y, 6);
+        assert_eq!((xp.rows(), xp.cols()), (6, 4));
+        assert_eq!((yp.rows(), yp.cols()), (6, 2));
+        // padded rows are exactly zero
+        assert!(xp.row(3).iter().chain(xp.row(5)).all(|&v| v == 0.0));
+        // row 0 of xp = Σ_l g[0,l]·w[l]·xhat[l,:]
+        for cc in 0..4 {
+            let mut want = 0.0f32;
+            for li in 0..5 {
+                want += g.get(0, li) * w[li] * xhat.get(li, cc);
+            }
+            assert!((xp.get(0, cc) - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn embed_is_bounded_and_scaled() {
+        let mut rng = Rng::seed_from(10);
+        let x = randn(8, 5, &mut rng);
+        let omega = randn(5, 16, &mut rng);
+        let delta = vec![0.3f32; 16];
+        let e = NativeExec.embed(&x, &omega, &delta);
+        let bound = (2.0f32 / 16.0).sqrt() + 1e-6;
+        assert!(e.as_slice().iter().all(|v| v.abs() <= bound));
+    }
+}

@@ -1,0 +1,232 @@
+//! CodedFedL (paper §III): deadline-based aggregation with a coded
+//! gradient from parity data compensating the missing stragglers.
+
+use anyhow::{Context, Result};
+
+use super::{GradRequest, RoundCost, RoundCtx, RoundExec, RoundPlan, Scheme, SchemeSetup, SchemeStats};
+use crate::allocation::{self, NodeSpec};
+use crate::coding;
+use crate::coordinator::FedSetup;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::sim::RoundDelays;
+use crate::tensor::Mat;
+
+/// State fixed before training (per global mini-batch parity).
+struct CodedState {
+    t_star: f64,
+    u_star: usize,
+    /// Per-client processed-subset masks (length `local_batch`, reused for
+    /// every mini-batch of that client as §III-D fixes the subset).
+    masks: Vec<Vec<f32>>,
+    /// Per-step composite parity: `steps × (X̌ [u*, q], Y̌ [u*, c])`.
+    parity: Vec<(Mat, Mat)>,
+    /// `1 − P(T_C ≤ t*)` for the coded-gradient scale of eq. (28).
+    pnr_server: f64,
+    parity_overhead: f64,
+}
+
+/// The paper's scheme: load allocation fixes `(t*, ℓ*_j, u*)` once before
+/// training (§III-C); each round costs exactly `t*`; deadline-missing
+/// clients are compensated by the coded gradient over the parity data
+/// (eq. 28), keeping the aggregate a stochastic approximation of the full
+/// gradient (eq. 30).
+pub struct CodedFedL {
+    delta: f64,
+    state: Option<CodedState>,
+}
+
+impl CodedFedL {
+    /// `delta` is the coding redundancy `u_max / m` in `(0, 1]`.
+    pub fn new(delta: f64) -> Self {
+        CodedFedL { delta, state: None }
+    }
+
+    pub fn delta(&self) -> f64 {
+        self.delta
+    }
+
+    fn state(&self) -> &CodedState {
+        self.state.as_ref().expect("prepare() runs before any round")
+    }
+}
+
+impl Scheme for CodedFedL {
+    fn label(&self) -> String {
+        format!("coded(delta={})", self.delta)
+    }
+
+    fn rng_tag(&self) -> u64 {
+        103
+    }
+
+    fn prepare(
+        &mut self,
+        setup: &FedSetup,
+        rt: &Runtime,
+        code_rng: &mut Rng,
+    ) -> Result<SchemeSetup> {
+        let state = prepare_coded(setup, rt, self.delta, code_rng)?;
+        let out = SchemeSetup {
+            client_loads: state
+                .masks
+                .iter()
+                .map(|m| m.iter().sum::<f32>() as f64)
+                .collect(),
+            server_load: state.u_star as f64,
+            clock_offset: state.parity_overhead,
+        };
+        self.state = Some(state);
+        Ok(out)
+    }
+
+    fn plan_round(&mut self, _ctx: &RoundCtx, delays: &RoundDelays) -> Result<RoundPlan> {
+        let cs = self.state();
+        // Uncoded part: clients that make the deadline (eq. 29) and have a
+        // non-empty processed subset contribute their masked gradient.
+        let requests = delays
+            .arrivals(cs.t_star)
+            .iter()
+            .enumerate()
+            .filter(|(j, arrived)| **arrived && cs.masks[*j].iter().any(|&v| v > 0.0))
+            .map(|(j, _)| GradRequest { client: j, mask: cs.masks[j].clone(), scale: 1.0 })
+            .collect();
+        Ok(RoundPlan { requests, round_time: cs.t_star })
+    }
+
+    fn aggregate(
+        &mut self,
+        ctx: &RoundCtx,
+        delays: &RoundDelays,
+        plan: &RoundPlan,
+        exec: &RoundExec,
+        agg: &mut Mat,
+    ) -> Result<RoundCost> {
+        let cs = self.state();
+        // Coded part (eq. 28): gradient over this step's parity, scaled by
+        // 1/((1−pnr_C)·u*), whenever the MEC unit itself makes t*.
+        if delays.server_t <= cs.t_star {
+            let (xp, yp) = &cs.parity[ctx.step];
+            let ones = vec![1.0f32; xp.rows()];
+            let gc = exec
+                .grad(xp, yp, &ones)
+                .context("coded gradient over parity data")?;
+            let scale = 1.0 / ((1.0 - cs.pnr_server) as f32 * cs.u_star as f32);
+            agg.axpy(scale, &gc);
+        }
+        // Every round costs exactly t*; the return is stochastically
+        // complete (returned = 0.0 ⇒ engine normalises by m).
+        Ok(RoundCost { sim_seconds: plan.round_time, returned: 0.0 })
+    }
+
+    fn stats(&self) -> SchemeStats {
+        match &self.state {
+            Some(cs) => SchemeStats {
+                t_star: Some(cs.t_star),
+                u_star: Some(cs.u_star),
+                parity_overhead: cs.parity_overhead,
+            },
+            None => SchemeStats::default(),
+        }
+    }
+}
+
+/// Load allocation (§III-C) + weight matrices (§III-D) + per-step parity
+/// datasets (§III-B).
+fn prepare_coded(
+    setup: &FedSetup,
+    rt: &Runtime,
+    delta: f64,
+    rng: &mut Rng,
+) -> Result<CodedState> {
+    let cfg = &setup.cfg;
+    let m = setup.m();
+    let u_cap = ((delta * m as f64).round() as usize).min(cfg.u_max);
+    anyhow::ensure!(u_cap > 0, "delta {delta} gives zero parity rows");
+
+    // --- two-step load allocation over the per-round mini-batch ---
+    let mut nodes: Vec<NodeSpec> = setup
+        .clients
+        .iter()
+        .map(|p| NodeSpec { params: *p, max_load: cfg.local_batch as f64 })
+        .collect();
+    nodes.push(NodeSpec { params: setup.server, max_load: u_cap as f64 });
+    let alloc = allocation::solve(&nodes, m as f64)
+        .map_err(|e| anyhow::anyhow!("load allocation failed: {e}"))?;
+    let t_star = alloc.t_star;
+
+    // Integer loads; pnr re-evaluated at the rounded load for exactness.
+    let ell_star: Vec<usize> = alloc.loads[..cfg.clients]
+        .iter()
+        .map(|&l| (l.floor() as usize).min(cfg.local_batch))
+        .collect();
+    let u_star = (alloc.u_star().floor() as usize).clamp(1, u_cap);
+    let pnr_server = 1.0 - setup.server.cdf(t_star, u_star as f64);
+    anyhow::ensure!(
+        pnr_server < 1.0,
+        "server never returns by t* — parameters are inconsistent"
+    );
+
+    // --- per-client processed subsets + weight vectors (§III-D) ---
+    let mut masks = Vec::with_capacity(cfg.clients);
+    let mut weights = Vec::with_capacity(cfg.clients);
+    for (j, client) in setup.clients.iter().enumerate() {
+        let processed = coding::sample_processed(cfg.local_batch, ell_star[j], rng);
+        let pnr1 = if ell_star[j] > 0 {
+            1.0 - client.cdf(t_star, ell_star[j] as f64)
+        } else {
+            1.0
+        };
+        weights.push(coding::weight_vector(&processed, pnr1));
+        masks.push(processed.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect());
+    }
+
+    // --- distributed encoding per global mini-batch (§V-A) ---
+    let mut parity: Vec<(Mat, Mat)> = Vec::with_capacity(cfg.steps_per_epoch);
+    for step in 0..cfg.steps_per_epoch {
+        let mut xp_acc: Option<Mat> = None;
+        let mut yp_acc: Option<Mat> = None;
+        for j in 0..cfg.clients {
+            let g = coding::generator_matrix(cfg.generator, u_star, cfg.local_batch, rng);
+            let cd = &setup.client_data[j];
+            let (xp, yp) = rt
+                .encode(&g, &weights[j], &cd.xhat[step], &cd.y[step])
+                .with_context(|| format!("encoding client {j}, step {step}"))?;
+            match (&mut xp_acc, &mut yp_acc) {
+                (Some(xa), Some(ya)) => {
+                    xa.axpy(1.0, &xp);
+                    ya.axpy(1.0, &yp);
+                }
+                _ => {
+                    xp_acc = Some(xp);
+                    yp_acc = Some(yp);
+                }
+            }
+        }
+        // Trim parity to the live u* rows (encode pads G to u_max with
+        // zero rows, whose parity is exactly zero).
+        let xp = xp_acc.unwrap().rows_slice(0, u_star);
+        let yp = yp_acc.unwrap().rows_slice(0, u_star);
+        parity.push((xp, yp));
+    }
+
+    // One-time parity upload overhead (Fig. 4(a) inset): clients upload in
+    // parallel; the clock pays the slowest client's total upload across
+    // all steps_per_epoch parity sets.
+    let parity_overhead = setup
+        .clients
+        .iter()
+        .map(|cl| {
+            setup.fleet_spec.parity_upload_secs(cl, u_star) * cfg.steps_per_epoch as f64
+        })
+        .fold(0.0, f64::max);
+
+    Ok(CodedState {
+        t_star,
+        u_star,
+        masks,
+        parity,
+        pnr_server,
+        parity_overhead,
+    })
+}

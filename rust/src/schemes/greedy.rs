@@ -1,0 +1,74 @@
+//! Greedy uncoded aggregation: wait for the fastest `(1−ψ)n` clients.
+
+use anyhow::Result;
+
+use super::{GradRequest, RoundCost, RoundCtx, RoundExec, RoundPlan, Scheme};
+use crate::sim::RoundDelays;
+use crate::tensor::Mat;
+
+/// The paper's straggler-dropping baseline (§V-A): each round the server
+/// keeps only the fastest `k = (1−ψ)n` updates, so the round costs the
+/// k-th order statistic and the stragglers' gradients are *discarded* —
+/// which is what starves whole classes under non-IID sharding (§V-B).
+#[derive(Clone, Copy, Debug)]
+pub struct GreedyUncoded {
+    psi: f64,
+}
+
+impl GreedyUncoded {
+    /// `psi` is the drop fraction in `[0, 1)`; `psi = 0` degenerates to
+    /// naive uncoded (same aggregate, same per-round winners set).
+    pub fn new(psi: f64) -> Self {
+        GreedyUncoded { psi }
+    }
+
+    pub fn psi(&self) -> f64 {
+        self.psi
+    }
+
+    fn k(&self, n: usize) -> usize {
+        (((1.0 - self.psi) * n as f64).round() as usize).clamp(1, n)
+    }
+}
+
+impl Scheme for GreedyUncoded {
+    fn label(&self) -> String {
+        format!("greedy(psi={})", self.psi)
+    }
+
+    fn rng_tag(&self) -> u64 {
+        102
+    }
+
+    fn plan_round(&mut self, ctx: &RoundCtx, delays: &RoundDelays) -> Result<RoundPlan> {
+        let cfg = &ctx.setup.cfg;
+        let (t_k, mut winners) =
+            delays.kth_fastest(self.k(cfg.clients)).map_err(anyhow::Error::msg)?;
+        // Execute in client order, not arrival order: the aggregate's f32
+        // rounding then depends only on the winner *set*, making
+        // greedy(ψ=0) bit-identical to naive on the same setup. This is a
+        // deliberate low-bit deviation from the pre-trait trainer, which
+        // summed winners in arrival order; delay draws, winner sets and
+        // round times are unchanged.
+        winners.sort_unstable();
+        let requests = winners
+            .into_iter()
+            .map(|j| GradRequest::full(j, cfg.local_batch))
+            .collect();
+        Ok(RoundPlan { requests, round_time: t_k })
+    }
+
+    fn aggregate(
+        &mut self,
+        ctx: &RoundCtx,
+        _delays: &RoundDelays,
+        plan: &RoundPlan,
+        _exec: &RoundExec,
+        _agg: &mut Mat,
+    ) -> Result<RoundCost> {
+        // Normalise by the *actual* aggregate return (1−ψ)m — greedy's
+        // discards are real data loss, not stochastic shortfall.
+        let returned = (plan.requests.len() * ctx.setup.cfg.local_batch) as f32;
+        Ok(RoundCost { sim_seconds: plan.round_time, returned })
+    }
+}

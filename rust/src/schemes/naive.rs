@@ -1,0 +1,39 @@
+//! Naive uncoded aggregation: wait for every client, every round.
+
+use anyhow::Result;
+
+use super::{GradRequest, RoundCtx, RoundPlan, Scheme};
+use crate::sim::RoundDelays;
+
+/// The paper's baseline (§V-A): the server waits for all `n` updates, so a
+/// round costs `max_j T_j` — one straggler prices the whole fleet. The
+/// aggregate is stochastically complete, so the default
+/// [`Scheme::aggregate`] (cost = planned time, denominator = m) applies
+/// as-is; this is also the minimal-surface reference implementation of the
+/// trait: `label` + `plan_round` and nothing else.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NaiveUncoded;
+
+impl NaiveUncoded {
+    pub fn new() -> Self {
+        NaiveUncoded
+    }
+}
+
+impl Scheme for NaiveUncoded {
+    fn label(&self) -> String {
+        "naive".into()
+    }
+
+    fn rng_tag(&self) -> u64 {
+        101
+    }
+
+    fn plan_round(&mut self, ctx: &RoundCtx, delays: &RoundDelays) -> Result<RoundPlan> {
+        let cfg = &ctx.setup.cfg;
+        let requests = (0..cfg.clients)
+            .map(|j| GradRequest::full(j, cfg.local_batch))
+            .collect();
+        Ok(RoundPlan { requests, round_time: delays.max_client_time() })
+    }
+}

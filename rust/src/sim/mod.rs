@@ -32,13 +32,21 @@ impl RoundDelays {
 
     /// Completion time when waiting for the fastest `k` clients (greedy
     /// uncoded): the k-th order statistic. Also returns the indices of
-    /// those clients.
-    pub fn kth_fastest(&self, k: usize) -> (f64, Vec<usize>) {
-        assert!(k >= 1 && k <= self.client_t.len(), "k={k} out of range");
-        let mut idx: Vec<usize> = (0..self.client_t.len()).collect();
-        idx.sort_by(|&a, &b| self.client_t[a].partial_cmp(&self.client_t[b]).unwrap());
+    /// those clients, sorted fastest-first.
+    ///
+    /// Total order via [`f64::total_cmp`], so a NaN delay (a buggy custom
+    /// delay model, say) sorts last instead of panicking mid-run; an
+    /// out-of-range `k` is a recoverable `Err`, not a panic, because `k`
+    /// may come straight from user-facing scheme parameters.
+    pub fn kth_fastest(&self, k: usize) -> Result<(f64, Vec<usize>), String> {
+        let n = self.client_t.len();
+        if k == 0 || k > n {
+            return Err(format!("kth_fastest: k={k} out of range 1..={n}"));
+        }
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| self.client_t[a].total_cmp(&self.client_t[b]));
         let winners = idx[..k].to_vec();
-        (self.client_t[winners[k - 1]], winners)
+        Ok((self.client_t[winners[k - 1]], winners))
     }
 }
 
@@ -115,17 +123,30 @@ mod tests {
     #[test]
     fn kth_fastest_order_statistic() {
         let d = RoundDelays { client_t: vec![5.0, 1.0, 3.0, 2.0], server_t: 0.0 };
-        let (t, winners) = d.kth_fastest(2);
+        let (t, winners) = d.kth_fastest(2).unwrap();
         assert_eq!(t, 2.0);
         assert_eq!(winners, vec![1, 3]);
-        let (t_all, _) = d.kth_fastest(4);
+        let (t_all, _) = d.kth_fastest(4).unwrap();
         assert_eq!(t_all, 5.0);
     }
 
     #[test]
-    #[should_panic(expected = "out of range")]
-    fn kth_fastest_validates_k() {
-        RoundDelays { client_t: vec![1.0], server_t: 0.0 }.kth_fastest(2);
+    fn kth_fastest_rejects_out_of_range_k() {
+        let d = RoundDelays { client_t: vec![1.0], server_t: 0.0 };
+        assert!(d.kth_fastest(0).is_err());
+        assert!(d.kth_fastest(2).is_err());
+        let msg = d.kth_fastest(2).unwrap_err();
+        assert!(msg.contains("k=2"), "{msg}");
+    }
+
+    #[test]
+    fn kth_fastest_survives_nan_delays() {
+        // total_cmp sorts NaN after every finite delay: the finite clients
+        // win, and no panic reaches the training loop.
+        let d = RoundDelays { client_t: vec![2.0, f64::NAN, 1.0], server_t: 0.0 };
+        let (t, winners) = d.kth_fastest(2).unwrap();
+        assert_eq!(t, 2.0);
+        assert_eq!(winners, vec![2, 0]);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! The shipped config files must stay parseable and consistent with the
-//! AOT shape presets they name.
+//! AOT shape presets they name, and config errors must name the offending
+//! field and section.
 
 use std::path::Path;
 
@@ -30,6 +31,48 @@ fn paper_config_parses_and_matches_preset() {
 }
 
 #[test]
+fn example_config_parses_and_documents_every_key() {
+    let c = ExperimentConfig::from_file(Path::new("configs/example.toml")).unwrap();
+    assert_eq!(c.seed, 7);
+    assert_eq!(c.clients, 10);
+    assert_eq!(c.dataset, "fashion");
+    assert_eq!(c.q, 128);
+    assert_eq!(c.lr_decay_epochs, vec![10, 20]);
+    // The example file exercises the whole schema: every known key of
+    // every section appears in it (it is the reference documentation).
+    let text = std::fs::read_to_string("configs/example.toml").unwrap();
+    for key in [
+        "seed", "clients", "dataset", "artifacts_dir", "train_size", "test_size", "dim", "q",
+        "classes", "sigma", "local_batch", "steps_per_epoch", "epochs", "lr", "lr_decay",
+        "lr_decay_epochs", "l2", "u_max", "generator",
+    ] {
+        assert!(text.contains(key), "example.toml is missing documented key {key}");
+    }
+}
+
+#[test]
 fn missing_config_file_is_an_error() {
     assert!(ExperimentConfig::from_file(Path::new("configs/nope.toml")).is_err());
+}
+
+#[test]
+fn mistyped_key_error_names_field_and_section() {
+    let dir = std::env::temp_dir().join("codedfedl_conf_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad_type.toml");
+    std::fs::write(&path, "[training]\nepochs = \"many\"\n").unwrap();
+    let err = ExperimentConfig::from_file(&path).unwrap_err().to_string();
+    assert!(err.contains("epochs"), "error must name the field: {err}");
+    assert!(err.contains("[training]"), "error must name the section: {err}");
+}
+
+#[test]
+fn unknown_key_error_names_the_stray_field() {
+    let dir = std::env::temp_dir().join("codedfedl_conf_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("typo.toml");
+    std::fs::write(&path, "[model]\nsigmma = 3.0\n").unwrap();
+    let err = ExperimentConfig::from_file(&path).unwrap_err().to_string();
+    assert!(err.contains("sigmma"), "error must name the stray key: {err}");
+    assert!(err.contains("sigma"), "error must list the known keys: {err}");
 }

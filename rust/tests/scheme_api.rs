@@ -1,0 +1,164 @@
+//! Integration: the open `Scheme` trait and the observer event stream.
+//!
+//! Proves the API is actually open: a **third-party scheme defined in
+//! this test file** (not in `src/`) runs end-to-end through
+//! `Session::run`, a `RoundObserver` receives exactly one event per
+//! round, `GreedyUncoded{psi: 0}` degenerates bit-for-bit to
+//! `NaiveUncoded`, and the deprecated `run_scheme` shim still matches the
+//! session path.
+
+use anyhow::Result;
+
+use codedfedl::coordinator::{EventLog, RoundEvent, RoundObserver};
+use codedfedl::schemes::{
+    GradRequest, GreedyUncoded, NaiveUncoded, RoundCtx, RoundPlan, Scheme, SchemeSpec,
+};
+use codedfedl::sim::RoundDelays;
+use codedfedl::{ExperimentBuilder, Session};
+
+fn tiny_session(epochs: usize) -> Session {
+    ExperimentBuilder::preset("tiny").unwrap().epochs(epochs).build().unwrap()
+}
+
+/// A third-party policy the crate has never heard of: wait for nobody,
+/// learn from the single fastest client each round, charge its delay.
+struct FastestOnly;
+
+impl Scheme for FastestOnly {
+    fn label(&self) -> String {
+        "fastest-only".into()
+    }
+
+    fn plan_round(&mut self, ctx: &RoundCtx, delays: &RoundDelays) -> Result<RoundPlan> {
+        let (t_1, winners) = delays.kth_fastest(1).map_err(anyhow::Error::msg)?;
+        let requests = winners
+            .into_iter()
+            .map(|j| GradRequest::full(j, ctx.setup.cfg.local_batch))
+            .collect();
+        Ok(RoundPlan { requests, round_time: t_1 })
+    }
+}
+
+/// A do-nothing policy: no gradients, fixed round cost. The minimal
+/// possible trait surface (`label` + `plan_round`).
+struct Idle;
+
+impl Scheme for Idle {
+    fn label(&self) -> String {
+        "idle".into()
+    }
+
+    fn plan_round(&mut self, _ctx: &RoundCtx, _delays: &RoundDelays) -> Result<RoundPlan> {
+        Ok(RoundPlan { requests: vec![], round_time: 1.0 })
+    }
+}
+
+#[test]
+fn third_party_scheme_runs_with_observer() {
+    let session = tiny_session(4);
+    let total = session.config().total_iters();
+
+    let mut events = EventLog::default();
+    let out = session.run_observed(&mut FastestOnly, &mut events).unwrap();
+
+    // One event per round, mirroring the recorded history exactly.
+    assert_eq!(events.events.len(), total);
+    assert_eq!(out.history.points.len(), total);
+    for (ev, p) in events.events.iter().zip(&out.history.points) {
+        assert_eq!(ev.iter, p.iter);
+        assert_eq!(ev.clock, p.sim_time);
+        assert_eq!(ev.acc, p.accuracy);
+        assert_eq!(ev.loss, p.train_loss);
+        assert_eq!(ev.arrivals, 1, "fastest-only aggregates one client per round");
+        assert_eq!(ev.epoch, (ev.iter - 1) / session.config().steps_per_epoch);
+    }
+    // The gradient really ran: θ moved, and metrics stay well-formed.
+    assert!(out.theta.as_slice().iter().any(|&v| v != 0.0));
+    assert!((0.0..=1.0).contains(&out.history.best_accuracy()));
+    assert!(out.history.points.iter().all(|p| p.train_loss.is_finite()));
+    assert_eq!(out.history.label, "fastest-only");
+    // Uncoded scheme: no deadline/redundancy to report.
+    assert_eq!(out.t_star, None);
+    assert_eq!(out.u_star, None);
+}
+
+#[test]
+fn noop_scheme_compiles_and_runs_through_session_run() {
+    let session = tiny_session(2);
+    let out = session.run(&mut Idle).unwrap();
+    assert_eq!(out.history.points.len(), session.config().total_iters());
+    // No gradients ⇒ θ never moves; clock advances exactly 1 s per round.
+    assert!(out.theta.as_slice().iter().all(|&v| v == 0.0));
+    for (i, p) in out.history.points.iter().enumerate() {
+        assert!((p.sim_time - (i + 1) as f64).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn greedy_psi_zero_matches_naive_round_for_round() {
+    // ψ = 0 keeps all n clients, and greedy executes winners in client
+    // order — so the model trajectory must be bit-identical to naive's.
+    // Only the simulated clock may differ (independent delay streams).
+    let session = tiny_session(4);
+    let naive = session.run(&mut NaiveUncoded::new()).unwrap();
+    let greedy = session.run(&mut GreedyUncoded::new(0.0)).unwrap();
+
+    assert_eq!(naive.theta.as_slice(), greedy.theta.as_slice());
+    assert_eq!(naive.history.points.len(), greedy.history.points.len());
+    for (pn, pg) in naive.history.points.iter().zip(&greedy.history.points) {
+        assert_eq!(pn.accuracy, pg.accuracy);
+        assert_eq!(pn.train_loss, pg.train_loss);
+    }
+}
+
+#[test]
+fn multiple_observers_see_the_same_stream() {
+    struct Counter(usize);
+    impl RoundObserver for Counter {
+        fn on_round(&mut self, _: &RoundEvent) {
+            self.0 += 1;
+        }
+    }
+    let session = tiny_session(2);
+    let mut log = EventLog::default();
+    let mut count = Counter(0);
+    session
+        .run_with(&mut NaiveUncoded::new(), &mut [&mut log, &mut count])
+        .unwrap();
+    assert_eq!(log.events.len(), count.0);
+    assert_eq!(count.0, session.config().total_iters());
+}
+
+#[test]
+fn deprecated_run_scheme_shim_matches_session_run() {
+    let session = tiny_session(2);
+    #[allow(deprecated)]
+    let via_shim = codedfedl::coordinator::run_scheme(
+        session.setup(),
+        session.runtime(),
+        SchemeSpec::Coded { delta: 0.3 },
+    )
+    .unwrap();
+    let via_session = session.run_spec(SchemeSpec::Coded { delta: 0.3 }).unwrap();
+    assert_eq!(via_shim.theta.as_slice(), via_session.theta.as_slice());
+    assert_eq!(via_shim.t_star, via_session.t_star);
+    assert_eq!(
+        via_shim.history.total_sim_time(),
+        via_session.history.total_sim_time()
+    );
+}
+
+#[test]
+fn scheme_spec_parse_is_cli_stable() {
+    // The CLI/TOML surface: bare names and key=value forms.
+    assert_eq!(SchemeSpec::parse("naive").unwrap(), SchemeSpec::NaiveUncoded);
+    assert_eq!(
+        SchemeSpec::parse("coded:delta=0.1").unwrap(),
+        SchemeSpec::Coded { delta: 0.1 }
+    );
+    assert_eq!(
+        SchemeSpec::parse("greedy:psi=0.4").unwrap(),
+        SchemeSpec::GreedyUncoded { psi: 0.4 }
+    );
+    assert!(SchemeSpec::parse("sneaky").is_err());
+}

@@ -1,23 +1,27 @@
-//! Integration: full federated training on the tiny preset, all schemes.
-//!
-//! Requires the `tiny` artifacts. Asserts the paper's qualitative claims
-//! at smoke scale plus exact reproducibility.
+//! Integration: full federated training on the tiny preset, all schemes,
+//! through the Builder → Session → Scheme API. Asserts the paper's
+//! qualitative claims at smoke scale plus exact reproducibility.
 
 use codedfedl::benchutil;
-use codedfedl::conf::{ExperimentConfig, Scheme};
-use codedfedl::coordinator::{run_scheme, FedSetup};
+use codedfedl::conf::ExperimentConfig;
+use codedfedl::schemes::{CodedFedL, SchemeSpec};
+use codedfedl::{ExperimentBuilder, Session};
 
 fn tiny(epochs: usize) -> ExperimentConfig {
     ExperimentConfig { epochs, ..ExperimentConfig::tiny() }
+}
+
+fn tiny_session(epochs: usize) -> Session {
+    ExperimentBuilder::preset("tiny").unwrap().epochs(epochs).build().unwrap()
 }
 
 #[test]
 fn all_schemes_run_and_learn() {
     let cfg = tiny(30);
     let schemes = [
-        Scheme::NaiveUncoded,
-        Scheme::GreedyUncoded { psi: 0.2 },
-        Scheme::Coded { delta: 0.3 },
+        SchemeSpec::NaiveUncoded,
+        SchemeSpec::GreedyUncoded { psi: 0.2 },
+        SchemeSpec::Coded { delta: 0.3 },
     ];
     let (_, results) = benchutil::run_experiment(&cfg, &schemes).unwrap();
     for (s, r) in &results {
@@ -45,7 +49,7 @@ fn coded_round_time_is_deadline_and_faster_than_naive() {
     let cfg = tiny(8);
     let (_, results) = benchutil::run_experiment(
         &cfg,
-        &[Scheme::NaiveUncoded, Scheme::Coded { delta: 0.3 }],
+        &[SchemeSpec::NaiveUncoded, SchemeSpec::Coded { delta: 0.3 }],
     )
     .unwrap();
     let naive = &results[0].1;
@@ -71,11 +75,9 @@ fn coded_round_time_is_deadline_and_faster_than_naive() {
 
 #[test]
 fn runs_are_exactly_reproducible() {
-    let cfg = tiny(4);
     let run = || {
-        let rt = benchutil::load_runtime(&cfg).unwrap();
-        let setup = FedSetup::build(&cfg, &rt).unwrap();
-        run_scheme(&setup, &rt, Scheme::Coded { delta: 0.3 }).unwrap()
+        let session = tiny_session(4);
+        session.run(&mut CodedFedL::new(0.3)).unwrap()
     };
     let a = run();
     let b = run();
@@ -89,13 +91,10 @@ fn runs_are_exactly_reproducible() {
 
 #[test]
 fn different_seeds_change_the_run() {
-    let cfg_a = tiny(3);
-    let cfg_b = ExperimentConfig { seed: 999, ..tiny(3) };
-    let rt = benchutil::load_runtime(&cfg_a).unwrap();
-    let sa = FedSetup::build(&cfg_a, &rt).unwrap();
-    let sb = FedSetup::build(&cfg_b, &rt).unwrap();
-    let ra = run_scheme(&sa, &rt, Scheme::NaiveUncoded).unwrap();
-    let rb = run_scheme(&sb, &rt, Scheme::NaiveUncoded).unwrap();
+    let sa = tiny_session(3);
+    let sb = ExperimentBuilder::preset("tiny").unwrap().epochs(3).seed(999).build().unwrap();
+    let ra = sa.run_spec(SchemeSpec::NaiveUncoded).unwrap();
+    let rb = sb.run_spec(SchemeSpec::NaiveUncoded).unwrap();
     assert_ne!(ra.theta.as_slice(), rb.theta.as_slice());
 }
 
@@ -104,7 +103,7 @@ fn greedy_discards_make_it_cheaper_per_round_than_naive() {
     let cfg = tiny(6);
     let (_, results) = benchutil::run_experiment(
         &cfg,
-        &[Scheme::NaiveUncoded, Scheme::GreedyUncoded { psi: 0.4 }],
+        &[SchemeSpec::NaiveUncoded, SchemeSpec::GreedyUncoded { psi: 0.4 }],
     )
     .unwrap();
     let naive_t = results[0].1.history.total_sim_time();
@@ -114,9 +113,9 @@ fn greedy_discards_make_it_cheaper_per_round_than_naive() {
 
 #[test]
 fn setup_smoothness_is_positive_and_lr_clamped() {
-    let cfg = tiny(2);
-    let rt = benchutil::load_runtime(&cfg).unwrap();
-    let setup = FedSetup::build(&cfg, &rt).unwrap();
+    let session = tiny_session(2);
+    let setup = session.setup();
+    let cfg = session.config();
     assert!(setup.smoothness > 0.0);
     let lr0 = setup.effective_lr(0);
     assert!(lr0 > 0.0 && lr0 <= cfg.lr);
