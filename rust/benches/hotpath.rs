@@ -1,14 +1,23 @@
 //! Hot-path micro/meso benchmarks (DESIGN.md §7, EXPERIMENTS.md §Perf):
-//! the L3 pieces that run every round, plus the PJRT executors.
+//! the L3 pieces that run every round, plus the kernel executors.
 //!
 //! ```sh
-//! cargo bench --bench hotpath
+//! cargo bench --bench hotpath                 # full run
+//! BENCH_SMOKE=1 cargo bench --bench hotpath   # CI smoke: 1 warmup, 2 iters
 //! ```
+//!
+//! Before timing anything the bench *verifies* every native kernel against
+//! the `matmul_ref`-based oracles at 1 and 4 threads and exits non-zero on
+//! divergence — the CI smoke job leans on this as a cheap end-to-end
+//! kernel check. Results are written to `BENCH_hotpath.json` (override the
+//! path with `BENCH_JSON`); `rust/PERF.md` records the tracked baseline
+//! and how to diff against it.
 
 use codedfedl::allocation::{self, NodeSpec};
-use codedfedl::benchutil::{bench, load_runtime, shapes_for};
+use codedfedl::benchutil::{bench_iters, load_runtime, shapes_for, BenchReport};
 use codedfedl::conf::ExperimentConfig;
 use codedfedl::rng::Rng;
+use codedfedl::runtime::{Runtime, RuntimeShapes};
 use codedfedl::schemes::CodedFedL;
 use codedfedl::tensor::Mat;
 use codedfedl::topology::FleetSpec;
@@ -20,8 +29,68 @@ fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
     m
 }
 
+/// Pin every native kernel to its reference oracle before any timing is
+/// recorded. `threads = 1` must match bit-for-bit; other thread counts are
+/// held to 1e-4 (they match exactly too — output rows are partitioned —
+/// but the gate is the documented contract, not the implementation).
+fn verify_kernels() -> anyhow::Result<()> {
+    let shapes = RuntimeShapes { d: 23, q: 65, c: 10, l_client: 37, u_max: 81, b_embed: 37 };
+    let mut rng = Rng::seed_from(7);
+    let x = randn(37, 23, &mut rng);
+    let omega = randn(23, 65, &mut rng);
+    let delta: Vec<f32> = (0..65).map(|_| rng.next_f32() * 6.28).collect();
+    let xhat = randn(37, 65, &mut rng);
+    let y = randn(37, 10, &mut rng);
+    let theta = randn(65, 10, &mut rng);
+    let mask: Vec<f32> = (0..37).map(|i| [1.0, 0.0, 0.5][i % 3]).collect();
+    let g = randn(60, 37, &mut rng);
+    let w: Vec<f32> = (0..37).map(|_| rng.next_f32()).collect();
+
+    // oracles, via the naive reference matmul
+    let scale = (2.0f32 / 65.0).sqrt();
+    let xo = x.matmul_ref(&omega);
+    let embed_want = Mat::from_fn(37, 65, |r, c| scale * (xo.get(r, c) + delta[c]).cos());
+    let pred = xhat.matmul_ref(&theta);
+    let resid = Mat::from_fn(37, 10, |r, c| mask[r] * (pred.get(r, c) - y.get(r, c)));
+    let xt = Mat::from_fn(65, 37, |r, c| xhat.get(c, r));
+    let grad_want = xt.matmul_ref(&resid);
+    let gw = Mat::from_fn(60, 37, |r, c| g.get(r, c) * w[c]);
+    let encode_x_want = gw.matmul_ref(&xhat);
+    let encode_y_want = gw.matmul_ref(&y);
+
+    for threads in [1usize, 4] {
+        let tol = if threads == 1 { 0.0 } else { 1e-4 };
+        let rt = Runtime::native_with_threads(shapes, threads);
+        let checks = [
+            ("embed", rt.embed(&x, &omega, &delta)?.max_abs_diff(&embed_want)),
+            ("grad", rt.grad(&xhat, &y, &theta, &mask)?.max_abs_diff(&grad_want)),
+            ("predict", rt.predict(&xhat, &theta)?.max_abs_diff(&pred)),
+        ];
+        let (xp, yp) = rt.encode(&g, &w, &xhat, &y)?;
+        let enc = [
+            ("encode.x", xp.rows_slice(0, 60).max_abs_diff(&encode_x_want)),
+            ("encode.y", yp.rows_slice(0, 60).max_abs_diff(&encode_y_want)),
+        ];
+        for (name, diff) in checks.iter().chain(enc.iter()) {
+            // embed/predict oracles share the kernels' accumulation order
+            // exactly; the grad/encode oracles go through an explicit
+            // transpose / pre-scaled generator, so they get the f32 budget.
+            let bound = if *name == "embed" || *name == "predict" { tol } else { tol.max(1e-4) };
+            anyhow::ensure!(
+                *diff <= bound,
+                "kernel {name} diverged from oracle at {threads} threads: max|Δ| = {diff}"
+            );
+        }
+    }
+    println!("kernel oracle check passed (threads 1, 4)");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    verify_kernels()?;
+
     let mut rng = Rng::seed_from(42);
+    let mut report = BenchReport::new();
 
     // --- allocation optimizer (runs once per experiment, but its cost
     //     bounds how often deadlines could be re-optimized online) ---
@@ -34,63 +103,78 @@ fn main() -> anyhow::Result<()> {
         .map(|p| NodeSpec { params: *p, max_load: cfg.local_batch as f64 })
         .collect();
     nodes.push(NodeSpec { params: spec.build_server(), max_load: 0.1 * m });
-    bench("allocation::solve (31 nodes, paper fleet)", 3, 30, || {
+    let (wu, it) = bench_iters(3, 30);
+    report.bench("allocation::solve", "31 nodes, paper fleet", 1, wu, it, || {
         std::hint::black_box(allocation::solve(&nodes, m).unwrap());
     });
 
-    // --- PJRT executors at the default artifact shapes ---
+    // --- kernel executors at the default artifact shapes ---
     let rt = load_runtime(&cfg)?;
+    let threads = rt.threads();
     let s = shapes_for(&cfg);
     let xhat = randn(s.l_client, s.q, &mut rng);
     let y = randn(s.l_client, s.c, &mut rng);
     let theta = randn(s.q, s.c, &mut rng);
     let mask = vec![1.0f32; s.l_client];
-    bench("runtime::grad (client 200x512x10)", 3, 50, || {
+    let (wu, it) = bench_iters(3, 50);
+    report.bench("runtime::grad", "client 200x512x10", threads, wu, it, || {
         std::hint::black_box(rt.grad(&xhat, &y, &theta, &mask).unwrap());
     });
 
     let xp = randn(s.u_max, s.q, &mut rng);
     let yp = randn(s.u_max, s.c, &mut rng);
     let ones = vec![1.0f32; s.u_max];
-    bench("runtime::grad (server 1536x512x10)", 3, 20, || {
+    let (wu, it) = bench_iters(3, 20);
+    report.bench("runtime::grad", "server 1536x512x10", threads, wu, it, || {
         std::hint::black_box(rt.grad(&xp, &yp, &theta, &ones).unwrap());
     });
 
     let g = randn(s.u_max, s.l_client, &mut rng);
     let w = vec![0.5f32; s.l_client];
-    bench("runtime::encode (1536x200 -> parity)", 3, 20, || {
+    let (wu, it) = bench_iters(3, 20);
+    report.bench("runtime::encode", "1536x200 -> parity", threads, wu, it, || {
         std::hint::black_box(rt.encode(&g, &w, &xhat, &y).unwrap());
     });
 
     let x_raw = randn(s.b_embed, s.d, &mut rng);
     let omega = randn(s.d, s.q, &mut rng);
     let delta = vec![0.3f32; s.q];
-    bench("runtime::embed (200x784 -> 200x512)", 3, 20, || {
+    let (wu, it) = bench_iters(3, 20);
+    report.bench("runtime::embed", "200x784 -> 200x512", threads, wu, it, || {
         std::hint::black_box(rt.embed(&x_raw, &omega, &delta).unwrap());
     });
 
     let test = randn(2000, s.q, &mut rng);
-    bench("runtime::predict (2000x512x10)", 3, 20, || {
+    let (wu, it) = bench_iters(3, 20);
+    report.bench("runtime::predict", "2000x512x10", threads, wu, it, || {
         std::hint::black_box(rt.predict(&test, &theta).unwrap());
     });
 
     // --- aggregation primitives ---
     let mut acc = Mat::zeros(s.q, s.c);
     let gmat = randn(s.q, s.c, &mut rng);
-    bench("Mat::axpy (512x10 aggregate)", 10, 2000, || {
+    let (wu, it) = bench_iters(10, 2000);
+    report.bench("Mat::axpy", "512x10 aggregate", 1, wu, it, || {
         acc.axpy(0.5, &gmat);
         std::hint::black_box(&acc);
     });
 
     // --- one full coded training round, end to end (tiny preset) ---
     let session = ExperimentBuilder::preset("tiny")?.epochs(1).build()?;
-    bench("full coded epoch (tiny: 5 clients x 2 steps)", 1, 10, || {
+    let (wu, it) = bench_iters(1, 10);
+    let epoch_threads = session.runtime().threads();
+    report.bench("full coded epoch", "tiny: 5 clients x 2 steps", epoch_threads, wu, it, || {
         std::hint::black_box(session.run(&mut CodedFedL::new(0.3)).unwrap());
     });
     println!(
-        "\n{} executions so far: {} (tiny runtime) — per-round exec count drives L3 overhead",
+        "\n{} executions so far: {} ({} threads) — per-round exec count drives L3 overhead",
         session.runtime().backend_name(),
-        session.runtime().exec_count.get()
+        session.runtime().exec_count(),
+        session.runtime().threads(),
     );
+
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    report.write_json(std::path::Path::new(&path))?;
+    println!("wrote {path}");
     Ok(())
 }

@@ -1,8 +1,10 @@
 //! Shared harness for the benches and examples: a small timing framework
 //! (criterion is unavailable offline — this provides warmup + median/MAD),
-//! one-call experiment runners, and ASCII renderings of the paper's
-//! figures.
+//! a machine-readable [`BenchReport`] (the tracked `BENCH_hotpath.json`
+//! baseline future PRs diff against — see `rust/PERF.md`), one-call
+//! experiment runners, and ASCII renderings of the paper's figures.
 
+use std::path::Path;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -72,6 +74,110 @@ pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Ti
     };
     println!("{}", stats.line(name));
     stats
+}
+
+/// True when the `BENCH_SMOKE` env var is set (and not `0`): benches run a
+/// fast smoke pass — 1 warmup, 2 iters — so CI can exercise the harness
+/// and the kernel oracle checks without paying full measurement time.
+pub fn smoke_mode() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// `(warmup, iters)` honouring [`smoke_mode`].
+pub fn bench_iters(warmup: usize, iters: usize) -> (usize, usize) {
+    if smoke_mode() {
+        (1, 2)
+    } else {
+        (warmup, iters)
+    }
+}
+
+/// One machine-readable benchmark record (a row of `BENCH_hotpath.json`).
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// Operation name, e.g. `runtime::grad`.
+    pub op: String,
+    /// Shape/workload label, e.g. `client 200x512x10`.
+    pub shape: String,
+    /// Median nanoseconds per iteration.
+    pub ns_per_iter: f64,
+    /// Worker-thread count the op ran with.
+    pub threads: usize,
+    /// Timed iterations behind the median.
+    pub iters: usize,
+}
+
+/// Collects [`TimingStats`] into the tracked-baseline JSON the perf
+/// workflow uploads and `rust/PERF.md` records. Serialisation is
+/// hand-rolled (serde is unavailable offline); all strings are ASCII
+/// op/shape labels we control.
+#[derive(Clone, Debug, Default)]
+pub struct BenchReport {
+    pub records: Vec<BenchRecord>,
+}
+
+impl BenchReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a record for an already-timed op.
+    pub fn record(&mut self, op: &str, shape: &str, threads: usize, stats: &TimingStats) {
+        self.records.push(BenchRecord {
+            op: op.to_string(),
+            shape: shape.to_string(),
+            ns_per_iter: stats.median_ns,
+            threads,
+            iters: stats.iters,
+        });
+    }
+
+    /// Time `f` via [`bench`] (printing the human-readable line) and
+    /// append the result. `warmup`/`iters` are taken as given — pass them
+    /// through [`bench_iters`] first if smoke mode should apply.
+    pub fn bench(
+        &mut self,
+        op: &str,
+        shape: &str,
+        threads: usize,
+        warmup: usize,
+        iters: usize,
+        f: impl FnMut(),
+    ) -> TimingStats {
+        let stats = bench(&format!("{op} ({shape})"), warmup, iters, f);
+        self.record(op, shape, threads, &stats);
+        stats
+    }
+
+    /// The report as a JSON document.
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        let mut out = String::from("{\n  \"schema\": 1,\n");
+        out.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
+        out.push_str("  \"records\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"op\": \"{}\", \"shape\": \"{}\", \"ns_per_iter\": {:.1}, \
+                 \"threads\": {}, \"iters\": {}}}{}\n",
+                esc(&r.op),
+                esc(&r.shape),
+                r.ns_per_iter,
+                r.threads,
+                r.iters,
+                if i + 1 == self.records.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| anyhow::anyhow!("writing bench report {path:?}: {e}"))
+    }
 }
 
 /// Derive the runtime shape set from an experiment config (thin re-export
@@ -164,6 +270,21 @@ mod tests {
         assert_eq!(s.iters, 5);
         assert!(s.median_ns >= 0.0);
         assert!(s.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn bench_report_serialises_records() {
+        let mut rep = BenchReport::new();
+        let stats = TimingStats { iters: 5, median_ns: 1234.5, mean_ns: 1300.0, mad_ns: 10.0 };
+        rep.record("runtime::grad", "client 200x512x10", 4, &stats);
+        rep.record("full coded epoch", "tiny", 1, &stats);
+        let json = rep.to_json();
+        assert!(json.contains("\"op\": \"runtime::grad\""), "{json}");
+        assert!(json.contains("\"shape\": \"client 200x512x10\""), "{json}");
+        assert!(json.contains("\"ns_per_iter\": 1234.5"), "{json}");
+        assert!(json.contains("\"threads\": 4"), "{json}");
+        // exactly one trailing comma between the two records, none after the last
+        assert_eq!(json.matches("},\n").count(), 1, "{json}");
     }
 
     #[test]

@@ -58,6 +58,14 @@ pub struct ExperimentConfig {
     pub lr_decay_epochs: Vec<usize>,
     /// L2 regularisation λ (paper: 9e-6).
     pub l2: f64,
+    /// Evaluate (full-test-set predict + loss probe) every `eval_every`
+    /// rounds (≥ 1; the final round is always evaluated). Telemetry only —
+    /// training math is unaffected.
+    pub eval_every: usize,
+    /// Native-backend worker threads (0 = available parallelism; capped
+    /// at 512 by the runtime). Results are identical for every value; 1
+    /// reproduces the serial executor.
+    pub threads: usize,
     /// Max parity rows the server can process (u_max, AOT-compiled shape).
     pub u_max: usize,
     /// Generator matrix distribution.
@@ -89,6 +97,8 @@ impl Default for ExperimentConfig {
             lr_decay: 0.8,
             lr_decay_epochs: vec![40, 65],
             l2: 9e-6,
+            eval_every: 1,
+            threads: 0,
             u_max: 1536,
             generator: GeneratorKind::Normal,
             train_size: 30_000,
@@ -109,9 +119,19 @@ const KNOWN_KEYS: &[(&str, &[&str])] = &[
     ("model", &["dim", "q", "classes", "sigma"]),
     (
         "training",
-        &["local_batch", "steps_per_epoch", "epochs", "lr", "lr_decay", "lr_decay_epochs", "l2"],
+        &[
+            "local_batch",
+            "steps_per_epoch",
+            "epochs",
+            "lr",
+            "lr_decay",
+            "lr_decay_epochs",
+            "l2",
+            "eval_every",
+        ],
     ),
     ("coding", &["u_max", "generator"]),
+    ("runtime", &["threads"]),
 ];
 
 impl ExperimentConfig {
@@ -210,6 +230,7 @@ impl ExperimentConfig {
         tr.get_f64("lr", &mut c.lr)?;
         tr.get_f64("lr_decay", &mut c.lr_decay)?;
         tr.get_f64("l2", &mut c.l2)?;
+        tr.get_usize("eval_every", &mut c.eval_every)?;
         tr.get_usize_array("lr_decay_epochs", &mut c.lr_decay_epochs)?;
 
         let cod = sect("coding");
@@ -220,6 +241,9 @@ impl ExperimentConfig {
                 .parse()
                 .map_err(|e: String| ConfError::Invalid(format!("[coding] generator: {e}")))?;
         }
+
+        let rtc = sect("runtime");
+        rtc.get_usize("threads", &mut c.threads)?;
         c.validate()?;
         Ok(c)
     }
@@ -249,6 +273,11 @@ impl ExperimentConfig {
                 "u_max must be > 0 (coding redundancy provides feasibility slack)".into(),
             ));
         }
+        if self.eval_every == 0 {
+            return Err(ConfError::Invalid(
+                "eval_every must be >= 1 (1 = evaluate every round)".into(),
+            ));
+        }
         Ok(())
     }
 }
@@ -262,13 +291,13 @@ fn reject_unknown_keys(doc: &Doc) -> Result<(), ConfError> {
             let first = keys.keys().next().map(String::as_str).unwrap_or("?");
             return Err(ConfError::Invalid(format!(
                 "key `{first}` appears before any [section] header \
-                 (sections: experiment, model, training, coding)"
+                 (sections: experiment, model, training, coding, runtime)"
             )));
         }
         let Some((_, known)) = KNOWN_KEYS.iter().find(|(s, _)| s == section) else {
             return Err(ConfError::Invalid(format!(
                 "unknown section [{section}] (expected one of: experiment, model, \
-                 training, coding)"
+                 training, coding, runtime)"
             )));
         };
         for key in keys.keys() {
@@ -425,6 +454,27 @@ generator = "rademacher"
         assert_eq!(c.generator, GeneratorKind::Rademacher);
         assert_eq!(c.global_batch(), 1000);
         assert_eq!(c.total_iters(), 60);
+    }
+
+    #[test]
+    fn eval_every_and_threads_parse_and_validate() {
+        let c = ExperimentConfig::from_str_conf(
+            "[training]\neval_every = 5\n\n[runtime]\nthreads = 4\n",
+        )
+        .unwrap();
+        assert_eq!(c.eval_every, 5);
+        assert_eq!(c.threads, 4);
+        // defaults: evaluate every round, auto thread count
+        let d = ExperimentConfig::default();
+        assert_eq!(d.eval_every, 1);
+        assert_eq!(d.threads, 0);
+        // eval_every = 0 is rejected with its name
+        let e = ExperimentConfig::from_str_conf("[training]\neval_every = 0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("eval_every"), "{e}");
+        // threads = 0 (auto) is valid
+        assert!(ExperimentConfig::from_str_conf("[runtime]\nthreads = 0\n").is_ok());
     }
 
     #[test]

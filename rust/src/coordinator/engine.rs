@@ -1,22 +1,27 @@
 //! The scheme-agnostic per-round training engine (paper §III-E).
 //!
 //! [`run`] owns everything every scheme shares: the virtual MEC clock,
-//! per-round delay sampling, PJRT gradient execution against the round's
-//! prepared θ, the learning-rate schedule, the model update of eq. (5),
-//! per-round evaluation, [`crate::metrics::History`] recording and the
-//! [`RoundObserver`] event stream. Waiting/aggregation policy lives
-//! entirely behind the [`Scheme`] trait (`rust/src/schemes/`).
+//! per-round delay sampling, gradient execution (native or PJRT) against
+//! the round's zero-copy prepared θ, the learning-rate schedule, the model
+//! update of eq. (5), periodic evaluation (`eval_every`),
+//! [`crate::metrics::History`] recording and the [`RoundObserver`] event
+//! stream. Waiting/aggregation policy lives entirely behind the [`Scheme`]
+//! trait (`rust/src/schemes/`).
 //!
 //! Per round, every participating node's gradient is *really* executed
-//! through the runtime's grad executor; the delay model only decides
-//! arrivals and the simulated wall-clock cost of the round.
+//! through the runtime's grad executor — the round's independent client
+//! requests go through [`Runtime::grad_batch`], which fans them out across
+//! the native backend's worker threads; the delay model only decides
+//! arrivals and the simulated wall-clock cost of the round. Aggregation
+//! always folds the results in plan order, so the aggregate's bits are
+//! independent of the thread count.
 
 use anyhow::{Context, Result};
 
 use super::setup::FedSetup;
 use crate::metrics::{accuracy, History, Point};
 use crate::rng::Rng;
-use crate::runtime::Runtime;
+use crate::runtime::{GradJob, Runtime};
 use crate::schemes::{RoundCtx, RoundExec, Scheme};
 use crate::sim::RoundSampler;
 use crate::tensor::Mat;
@@ -35,7 +40,14 @@ pub struct TrainOutcome {
     pub theta: Mat,
 }
 
-/// One completed training round, as seen by observers.
+/// One *evaluated* training round, as seen by observers.
+///
+/// With the default `eval_every = 1` every round is evaluated and
+/// observers see one event per round; with `eval_every = k > 1` the
+/// engine skips the full-test-set probe on intermediate rounds and
+/// observers only see the sampled ones (the final round is always
+/// evaluated). [`Point::iter`] / [`RoundEvent::iter`] carry the global
+/// iteration either way.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RoundEvent {
     /// 1-based global iteration (matches [`Point::iter`]).
@@ -54,9 +66,10 @@ pub struct RoundEvent {
     pub acc: f64,
 }
 
-/// Receives one [`RoundEvent`] per training round. The CLI's progress
-/// printer, CSV streamers and test probes all hang off this — nothing
-/// needs to reach into engine internals.
+/// Receives one [`RoundEvent`] per *evaluated* training round (every
+/// round at the default `eval_every = 1`). The CLI's progress printer,
+/// CSV streamers and test probes all hang off this — nothing needs to
+/// reach into engine internals.
 pub trait RoundObserver {
     fn on_round(&mut self, event: &RoundEvent);
 }
@@ -118,33 +131,52 @@ pub fn run(
     let mut history = History::new(scheme.label());
     let mut clock = prep.clock_offset;
 
-    for iter in 0..cfg.total_iters() {
+    let total_iters = cfg.total_iters();
+    for iter in 0..total_iters {
         let epoch = iter / cfg.steps_per_epoch;
         let step = iter % cfg.steps_per_epoch;
         let lr = setup.effective_lr(epoch) as f32;
         let delays = sampler.sample(&mut delay_rng);
-        // θ is reused by every grad call this round (EXPERIMENTS.md §Perf).
-        let theta_lit = rt.prepare_theta(&theta)?;
         let ctx = RoundCtx { iter, epoch, step, setup };
 
         // --- the scheme's waiting policy decides who participates ---
-        let plan = scheme.plan_round(&ctx, &delays)?;
         let mut agg = Mat::zeros(q, c);
-        for req in &plan.requests {
-            anyhow::ensure!(
-                req.client < n,
-                "scheme {} requested client {} of {n}",
-                scheme.label(),
-                req.client
-            );
-            let cd = &setup.client_data[req.client];
-            let g = rt
-                .grad_prepared(&cd.xhat[step], &cd.y[step], &theta_lit, &req.mask)
-                .with_context(|| format!("client {} gradient (step {step})", req.client))?;
-            agg.axpy(req.scale, &g);
-        }
-        let exec = RoundExec::new(rt, &theta_lit);
-        let cost = scheme.aggregate(&ctx, &delays, &plan, &exec, &mut agg)?;
+        let (arrivals, cost) = {
+            // θ is borrowed zero-copy by every grad call this round
+            // (EXPERIMENTS.md §Perf); the scope bounds the borrow so the
+            // update below can mutate θ again.
+            let theta_prep = rt.prepare_theta(&theta)?;
+            let plan = scheme.plan_round(&ctx, &delays)?;
+            for req in &plan.requests {
+                anyhow::ensure!(
+                    req.client < n,
+                    "scheme {} requested client {} of {n}",
+                    scheme.label(),
+                    req.client
+                );
+            }
+            // The round's independent client gradients run as one batch
+            // (parallel across the native worker threads)…
+            let jobs: Vec<GradJob> = plan
+                .requests
+                .iter()
+                .map(|req| {
+                    let cd = &setup.client_data[req.client];
+                    GradJob { xhat: &cd.xhat[step], y: &cd.y[step], mask: &req.mask }
+                })
+                .collect();
+            let grads = rt.grad_batch(&jobs, &theta_prep).with_context(|| {
+                format!("executing {} client gradients (step {step})", jobs.len())
+            })?;
+            // …and fold in plan order, fixing the aggregate's bits
+            // independently of the thread count.
+            for (req, g) in plan.requests.iter().zip(&grads) {
+                agg.axpy(req.scale, g);
+            }
+            let exec = RoundExec::new(rt, &theta_prep);
+            let cost = scheme.aggregate(&ctx, &delays, &plan, &exec, &mut agg)?;
+            (plan.requests.len(), cost)
+        };
 
         // g_M = (1/m̂)·agg + λθ  (eq. 30 + the §V-A L2 regulariser).
         // m̂ = m for stochastically complete schemes (returned = 0) and the
@@ -158,7 +190,12 @@ pub fn run(
 
         clock += cost.sim_seconds;
 
-        // --- evaluation + event fan-out ---
+        // --- evaluation + event fan-out (sampled every `eval_every`
+        //     rounds; the final round is always evaluated) ---
+        let evaluate = (iter + 1) % cfg.eval_every == 0 || iter + 1 == total_iters;
+        if !evaluate {
+            continue;
+        }
         let logits = rt.predict(&setup.test_xhat, &theta)?;
         let acc = accuracy(&logits, &setup.test_labels);
         let loss = eval_train_loss(rt, setup, &theta)?;
@@ -168,7 +205,7 @@ pub fn run(
             epoch,
             step,
             clock,
-            arrivals: plan.requests.len(),
+            arrivals,
             loss,
             acc,
         };

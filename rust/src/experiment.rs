@@ -43,9 +43,10 @@ pub fn shapes_for(cfg: &ExperimentConfig) -> RuntimeShapes {
     }
 }
 
-/// Load the runtime for a config.
+/// Load the runtime for a config (native worker-thread count comes from
+/// `cfg.threads`; `0` = available parallelism).
 pub fn load_runtime(cfg: &ExperimentConfig) -> Result<Runtime> {
-    Runtime::load(Path::new(&cfg.artifacts_dir), shapes_for(cfg))
+    Runtime::load_with(Path::new(&cfg.artifacts_dir), shapes_for(cfg), cfg.threads)
 }
 
 macro_rules! setters {
@@ -126,6 +127,10 @@ impl ExperimentBuilder {
         lr_decay_epochs: Vec<usize>,
         /// L2 regularisation λ.
         l2: f64,
+        /// Evaluate every `eval_every` rounds (≥ 1; final round always).
+        eval_every: usize,
+        /// Native worker threads (0 = available parallelism).
+        threads: usize,
         /// Max parity rows (AOT-compiled shape).
         u_max: usize,
         /// Generator matrix distribution.

@@ -54,7 +54,19 @@
 //!   the coded federated training loop. With `--features pjrt` the L2
 //!   artifacts execute through the PJRT C API (`xla` bindings); by default
 //!   [`runtime::native`] provides pure-Rust implementations of the same
-//!   kernel contracts so the whole system builds and tests offline.
+//!   kernel contracts — cache-blocked, multi-threaded, and bit-identical
+//!   across thread counts — so the whole system builds, tests and trains
+//!   fast offline.
+//!
+//! ## Performance
+//!
+//! The native backend is the measured hot path: see `rust/PERF.md` for
+//! the kernel/threading design, the tracked `BENCH_hotpath.json` baseline
+//! (`cargo bench --bench hotpath`), and how to compare runs across PRs.
+//! Thread count comes from `[runtime] threads` / `--threads` /
+//! [`ExperimentBuilder::threads`] (0 = all cores) and never changes
+//! results; `[training] eval_every` thins the per-round evaluation probe
+//! without touching the training math.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index,
 //! `EXPERIMENTS.md` for paper-vs-measured results, and

@@ -25,6 +25,18 @@ fn commands() -> Vec<Command> {
         OptSpec { name: "seed", help: "root RNG seed", default: None, is_flag: false },
         OptSpec { name: "epochs", help: "override epochs", default: None, is_flag: false },
         OptSpec { name: "preset", help: "tiny|default|paper", default: Some("default"), is_flag: false },
+        OptSpec {
+            name: "threads",
+            help: "native worker threads (0 = all cores)",
+            default: None,
+            is_flag: false,
+        },
+        OptSpec {
+            name: "eval-every",
+            help: "evaluate every k rounds (final round always)",
+            default: None,
+            is_flag: false,
+        },
     ];
     vec![
         Command {
@@ -94,6 +106,12 @@ fn builder_from(args: &Args) -> Result<ExperimentBuilder> {
     }
     if let Some(e) = args.parse_usize("epochs").map_err(anyhow::Error::msg)? {
         b = b.epochs(e);
+    }
+    if let Some(t) = args.parse_usize("threads").map_err(anyhow::Error::msg)? {
+        b = b.threads(t);
+    }
+    if let Some(k) = args.parse_usize("eval-every").map_err(anyhow::Error::msg)? {
+        b = b.eval_every(k);
     }
     Ok(b)
 }

@@ -2,9 +2,12 @@
 //!
 //! Two interchangeable backends sit behind one shape-checked API:
 //!
-//! * **native** (default) — pure-Rust kernels
-//!   ([`super::native::NativeExec`]) matching the jnp oracles in
-//!   `python/compile/kernels/ref.py`. No artifacts, no external deps.
+//! * **native** (default) — the blocked, multi-threaded pure-Rust kernels
+//!   of [`super::native::NativeExec`], matching the jnp oracles in
+//!   `python/compile/kernels/ref.py`. No artifacts, no external deps; the
+//!   thread count comes from the experiment config (`[runtime] threads`,
+//!   `0` = available parallelism) and never changes results (see
+//!   `rust/PERF.md`).
 //! * **pjrt** (`--features pjrt`) — the AOT HLO-text artifacts compiled
 //!   through the PJRT C API (`xla` bindings required), padding each
 //!   workload to the compiled shape (exactly — zero rows contribute zero)
@@ -14,12 +17,13 @@
 //! both paths so natively-developed code never breaks under PJRT.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
 #[cfg(feature = "pjrt")]
 use anyhow::Context;
 
-use super::native::NativeExec;
+use super::native::{run_lengths, NativeExec};
 use crate::tensor::Mat;
 
 #[cfg(feature = "pjrt")]
@@ -42,12 +46,22 @@ pub struct RuntimeShapes {
 /// A θ matrix pre-converted for the backend (see
 /// [`Runtime::prepare_theta`]): the coordinator issues ~n+1 grad calls
 /// against the same θ each round, so the conversion is hoisted off the
-/// per-call path. Only the active backend's representation is
-/// materialised.
-pub struct PreparedTheta {
-    mat: Option<Mat>,
+/// per-call path. The native representation is a zero-copy borrow (no
+/// per-round clone); only the PJRT path materialises a device literal.
+pub struct PreparedTheta<'a> {
+    mat: &'a Mat,
     #[cfg(feature = "pjrt")]
     lit: Option<xla::Literal>,
+}
+
+/// One gradient request of a round, executed by [`Runtime::grad_batch`].
+/// All fields borrow the caller's buffers — assembling a batch allocates
+/// nothing beyond the `Vec` of jobs.
+#[derive(Clone, Copy)]
+pub struct GradJob<'a> {
+    pub xhat: &'a Mat,
+    pub y: &'a Mat,
+    pub mask: &'a [f32],
 }
 
 #[cfg(feature = "pjrt")]
@@ -107,35 +121,57 @@ enum Backend {
 pub struct Runtime {
     shapes: RuntimeShapes,
     backend: Backend,
+    /// Resolved worker-thread count of the native backend (1 on PJRT).
+    threads: usize,
     /// Running count of executor invocations (telemetry for §Perf).
-    pub exec_count: std::cell::Cell<u64>,
+    exec_count: AtomicU64,
 }
 
 impl Runtime {
-    /// Build the runtime for `shapes`.
+    /// Build the runtime for `shapes` with automatic thread count.
     ///
     /// With the `pjrt` feature: loads `artifacts_dir/manifest.txt`,
     /// resolves the five artifacts the shape set needs and compiles them
     /// on the CPU PJRT client (failing fast if any is missing). Without
     /// it: returns the native executor and ignores `artifacts_dir`.
     pub fn load(artifacts_dir: &Path, shapes: RuntimeShapes) -> Result<Runtime> {
+        Self::load_with(artifacts_dir, shapes, 0)
+    }
+
+    /// [`Runtime::load`] with an explicit native worker-thread count
+    /// (`0` = available parallelism; ignored by the PJRT backend).
+    pub fn load_with(
+        artifacts_dir: &Path,
+        shapes: RuntimeShapes,
+        threads: usize,
+    ) -> Result<Runtime> {
         #[cfg(feature = "pjrt")]
         {
+            let _ = threads;
             Self::load_pjrt(artifacts_dir, shapes)
         }
         #[cfg(not(feature = "pjrt"))]
         {
             let _ = artifacts_dir;
-            Ok(Self::native(shapes))
+            Ok(Self::native_with_threads(shapes, threads))
         }
     }
 
-    /// The pure-Rust executor (always available).
+    /// The pure-Rust executor (always available), automatic thread count.
     pub fn native(shapes: RuntimeShapes) -> Runtime {
+        Self::native_with_threads(shapes, 0)
+    }
+
+    /// The pure-Rust executor with an explicit worker-thread count
+    /// (`0` = available parallelism). Results are identical for every
+    /// count; `threads = 1` reproduces the serial executor bit-for-bit.
+    pub fn native_with_threads(shapes: RuntimeShapes, threads: usize) -> Runtime {
+        let exec = NativeExec::new(threads);
         Runtime {
             shapes,
-            backend: Backend::Native(NativeExec),
-            exec_count: std::cell::Cell::new(0),
+            threads: exec.threads(),
+            backend: Backend::Native(exec),
+            exec_count: AtomicU64::new(0),
         }
     }
 
@@ -158,8 +194,9 @@ impl Runtime {
         };
         Ok(Runtime {
             shapes,
+            threads: 1,
             backend: Backend::Pjrt(Box::new(exec)),
-            exec_count: std::cell::Cell::new(0),
+            exec_count: AtomicU64::new(0),
         })
     }
 
@@ -176,8 +213,18 @@ impl Runtime {
         }
     }
 
+    /// Resolved worker-thread count (≥ 1; always 1 on the PJRT backend).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Total executor invocations so far (telemetry for §Perf).
+    pub fn exec_count(&self) -> u64 {
+        self.exec_count.load(Ordering::Relaxed)
+    }
+
     fn bump(&self) {
-        self.exec_count.set(self.exec_count.get() + 1);
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
     }
 
     /// RFF-embed `x [n, d]`. `omega [d, q]`, `delta [q]`. On the PJRT path
@@ -220,22 +267,34 @@ impl Runtime {
         }
     }
 
-    /// Pre-convert θ once per round (see [`PreparedTheta`]).
-    pub fn prepare_theta(&self, theta: &Mat) -> Result<PreparedTheta> {
+    /// Pre-convert θ once per round (see [`PreparedTheta`]). On the native
+    /// path this is a zero-copy borrow.
+    pub fn prepare_theta<'a>(&self, theta: &'a Mat) -> Result<PreparedTheta<'a>> {
         let RuntimeShapes { q, c, .. } = self.shapes;
         anyhow::ensure!(theta.rows() == q && theta.cols() == c, "theta shape");
         Ok(PreparedTheta {
-            mat: match &self.backend {
-                Backend::Native(_) => Some(theta.clone()),
-                #[cfg(feature = "pjrt")]
-                Backend::Pjrt(_) => None,
-            },
+            mat: theta,
             #[cfg(feature = "pjrt")]
             lit: match &self.backend {
                 Backend::Pjrt(_) => Some(mat_to_literal(theta)?),
                 _ => None,
             },
         })
+    }
+
+    /// Shape checks shared by [`Runtime::grad_prepared`] and
+    /// [`Runtime::grad_batch`].
+    fn check_grad_shapes(&self, xhat: &Mat, y: &Mat, mask: &[f32]) -> Result<()> {
+        let RuntimeShapes { q, c, l_client, u_max, .. } = self.shapes;
+        anyhow::ensure!(xhat.cols() == q && y.cols() == c, "grad: payload shape");
+        anyhow::ensure!(xhat.rows() == y.rows() && mask.len() == xhat.rows(), "grad: rows");
+        let n = xhat.rows();
+        anyhow::ensure!(
+            n <= u_max.max(l_client),
+            "grad: {n} rows exceeds largest compiled shape {}",
+            u_max.max(l_client)
+        );
+        Ok(())
     }
 
     /// Masked gradient `X̂ᵀ diag(mask) (X̂θ − Y)` over up to `l_client`
@@ -253,23 +312,14 @@ impl Runtime {
         theta: &PreparedTheta,
         mask: &[f32],
     ) -> Result<Mat> {
-        let RuntimeShapes { q, c, l_client, u_max, .. } = self.shapes;
-        anyhow::ensure!(xhat.cols() == q && y.cols() == c, "grad: payload shape");
-        anyhow::ensure!(xhat.rows() == y.rows() && mask.len() == xhat.rows(), "grad: rows");
-        let n = xhat.rows();
-        anyhow::ensure!(
-            n <= u_max.max(l_client),
-            "grad: {n} rows exceeds largest compiled shape {}",
-            u_max.max(l_client)
-        );
+        self.check_grad_shapes(xhat, y, mask)?;
         self.bump();
         match &self.backend {
-            Backend::Native(nb) => {
-                let mat = theta.mat.as_ref().expect("native theta prepared");
-                Ok(nb.grad(xhat, y, mat, mask))
-            }
+            Backend::Native(nb) => Ok(nb.grad(xhat, y, theta.mat, mask)),
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(p) => {
+                let RuntimeShapes { q, c, l_client, u_max, .. } = self.shapes;
+                let n = xhat.rows();
                 let (l, exe) = if n <= l_client {
                     (l_client, &p.grad_client)
                 } else {
@@ -285,6 +335,66 @@ impl Runtime {
                 ])?;
                 literal_to_mat(&lit, q, c)
             }
+        }
+    }
+
+    /// Execute a round's independent gradient requests, in input order.
+    ///
+    /// On the native backend the jobs are distributed across the runtime's
+    /// worker threads (each job runs a single-threaded kernel when there
+    /// are at least as many jobs as workers, and shares leftover workers
+    /// otherwise). Outputs come back in input order, so the caller's
+    /// aggregation order — and therefore the aggregate's bits — do not
+    /// depend on the thread count. The PJRT backend executes serially.
+    pub fn grad_batch(&self, jobs: &[GradJob<'_>], theta: &PreparedTheta) -> Result<Vec<Mat>> {
+        for (ji, job) in jobs.iter().enumerate() {
+            self.check_grad_shapes(job.xhat, job.y, job.mask)
+                .map_err(|e| e.context(format!("grad request {ji} of {}", jobs.len())))?;
+        }
+        match &self.backend {
+            Backend::Native(nb) => {
+                self.exec_count.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+                let t = self.threads.min(jobs.len()).max(1);
+                if t == 1 {
+                    // Single worker (or single job): let the kernel itself
+                    // use the full thread budget.
+                    return Ok(jobs
+                        .iter()
+                        .map(|j| nb.grad(j.xhat, j.y, theta.mat, j.mask))
+                        .collect());
+                }
+                // Across-job parallelism (balanced runs — lengths differ by
+                // at most one job). Each per-job kernel gets floor(threads/t)
+                // workers — with t = jobs < threads and threads % t != 0 the
+                // remainder idles for the batch; an uneven split would use it
+                // but make per-job thread counts positional for no measured
+                // win.
+                let per_job = NativeExec::new((self.threads / t).max(1));
+                let mut out: Vec<Option<Mat>> = jobs.iter().map(|_| None).collect();
+                let theta_mat = theta.mat;
+                std::thread::scope(|s| {
+                    let mut jrest = jobs;
+                    let mut orest = out.as_mut_slice();
+                    for take in run_lengths(jobs.len(), t) {
+                        let (jchunk, jtail) = jrest.split_at(take);
+                        jrest = jtail;
+                        let (ochunk, otail) = std::mem::take(&mut orest).split_at_mut(take);
+                        orest = otail;
+                        let per_job = &per_job;
+                        s.spawn(move || {
+                            for (job, slot) in jchunk.iter().zip(ochunk.iter_mut()) {
+                                *slot = Some(per_job.grad(job.xhat, job.y, theta_mat, job.mask));
+                            }
+                        });
+                    }
+                });
+                Ok(out.into_iter().map(|m| m.expect("worker filled its slot")).collect())
+            }
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => jobs
+                .iter()
+                .map(|j| self.grad_prepared(j.xhat, j.y, theta, j.mask))
+                .collect(),
         }
     }
 

@@ -2,10 +2,16 @@
 //!
 //! Two backends, one API ([`Runtime`]):
 //!
-//! * **native** (default feature set) — pure-Rust implementations of the
-//!   four kernel contracts (`runtime::native`), bit-for-bit faithful to
-//!   the jnp oracles in `python/compile/kernels/ref.py`. Builds and runs
-//!   with zero external dependencies.
+//! * **native** (default feature set, and the default training backend) —
+//!   pure-Rust implementations of the four kernel contracts
+//!   (`runtime::native`), numerically faithful to the jnp oracles in
+//!   `python/compile/kernels/ref.py` and built for throughput: blocked
+//!   register-tiled matmuls, fused residual/mask and weight-product
+//!   passes, and output-row parallelism across a scoped thread pool whose
+//!   size comes from the experiment config (results are bit-identical for
+//!   every thread count — see `rust/PERF.md`). A round's independent
+//!   client gradients batch through [`Runtime::grad_batch`]. Builds and
+//!   runs with zero external dependencies.
 //! * **pjrt** (`--features pjrt`) — loads the AOT HLO-text artifacts and
 //!   executes them through the PJRT C API. Wiring (see DESIGN.md §2):
 //!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
@@ -25,7 +31,7 @@ mod exec;
 mod manifest;
 pub mod native;
 
-pub use exec::{PreparedTheta, Runtime, RuntimeShapes};
+pub use exec::{GradJob, PreparedTheta, Runtime, RuntimeShapes};
 pub use manifest::{Manifest, ManifestEntry};
 
 #[cfg(feature = "pjrt")]

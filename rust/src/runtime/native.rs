@@ -1,112 +1,331 @@
-//! Pure-Rust executor implementing the L1 kernel contracts.
+//! Pure-Rust executor implementing the L1 kernel contracts — the *default*
+//! training backend since 0.2.
 //!
 //! Each function mirrors its jnp oracle in `python/compile/kernels/ref.py`
 //! — those oracles define what the kernels *mean*, so this backend and the
-//! PJRT artifacts are interchangeable up to f32 rounding. It exists so the
-//! whole crate builds, trains and tests in environments without the `xla`
-//! bindings or the AOT artifacts (enable the `pjrt` feature to switch).
+//! optional PJRT artifacts (`--features pjrt`) are interchangeable up to
+//! f32 rounding. Unlike the first native port (a thin wrapper over
+//! `Mat::matmul_ref`), this executor is built for throughput:
+//!
+//! * every matmul bottoms out in the cache-blocked, register-tiled kernel
+//!   in [`crate::tensor`] (`matmul_ref` remains the test oracle);
+//! * `grad` fuses the residual-mask pass into the prediction sweep and
+//!   skips fully-masked rows before any arithmetic happens;
+//! * `encode` hoists the duplicated `G[u,l]·w[l]` weight products into one
+//!   per-row panel shared by the X̌ and Y̌ accumulations;
+//! * `embed` computes the `x·Ω` panel and the `cos` transform in one fused
+//!   pass per row block;
+//! * all kernels run their *output rows* across a scoped thread pool
+//!   ([`NativeExec::new`] picks the count; `0` = available parallelism).
+//!
+//! Determinism: threads partition disjoint output row blocks, and each
+//! element accumulates its reduction terms in the same ascending order the
+//! serial reference uses, so **every thread count produces bit-identical
+//! results** — `threads = 1` and `threads = 64` match the pre-0.3 serial
+//! executor exactly. This is what keeps training histories reproducible
+//! across machines with different core counts (see `rust/PERF.md`).
 //!
 //! Shapes are unconstrained here (no compiled-shape padding needed), but
 //! the [`super::Runtime`] wrappers still enforce the artifact shape
 //! contract so code exercised natively keeps working on the PJRT path.
 
-use crate::tensor::Mat;
+use crate::tensor::{matmul_rows_into, Mat};
 
-/// Marker struct: the native executor is stateless.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct NativeExec;
+/// Work (in multiply-adds) below which a kernel stays single-threaded —
+/// spawning scoped threads costs tens of microseconds, which swamps tiny
+/// kernels. Thresholding is safe because results are thread-count
+/// invariant (see module docs).
+const PAR_MIN_FLOPS: usize = 1 << 16;
+
+/// Hard cap on worker threads. Every parallel kernel spawn is a real OS
+/// thread, so a config typo like `threads = 100000` would otherwise turn
+/// each call into a spawn storm (and `thread::scope` aborts if the OS
+/// refuses a spawn). Results are thread-count invariant, so capping is
+/// always safe.
+const MAX_THREADS: usize = 512;
+
+/// Balanced contiguous partition: `n` items into `t` runs whose lengths
+/// differ by at most one (the first `n % t` runs take the extra item).
+/// Shared by every parallel driver so no worker idles while another runs
+/// a double-length chunk (the failure mode of `ceil`-sized chunking when
+/// `n` is just above `t`).
+pub(crate) fn run_lengths(n: usize, t: usize) -> impl Iterator<Item = usize> {
+    let (base, extra) = (n / t, n % t);
+    (0..t).map(move |bi| base + usize::from(bi < extra))
+}
+
+/// The native executor: stateless kernels plus a configured thread count.
+#[derive(Clone, Copy, Debug)]
+pub struct NativeExec {
+    threads: usize,
+}
+
+impl Default for NativeExec {
+    /// Defaults to all available parallelism (same as `NativeExec::new(0)`).
+    fn default() -> Self {
+        NativeExec::new(0)
+    }
+}
 
 impl NativeExec {
+    /// Executor with `threads` worker threads; `0` resolves to the
+    /// machine's available parallelism. Capped at 512 (`MAX_THREADS`) —
+    /// see the constant's docs.
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            threads
+        };
+        NativeExec { threads: threads.min(MAX_THREADS) }
+    }
+
+    /// Single-threaded executor (used per-job when a round's gradient
+    /// requests are already being parallelised across jobs).
+    pub fn single() -> Self {
+        NativeExec { threads: 1 }
+    }
+
+    /// The resolved worker-thread count (≥ 1).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Thread count to use for a kernel costing `flops` multiply-adds.
+    fn threads_for(&self, flops: usize) -> usize {
+        if flops < PAR_MIN_FLOPS {
+            1
+        } else {
+            self.threads
+        }
+    }
+
     /// RFF embedding (paper eq. 18): `sqrt(2/q) · cos(x Ω + δ)`.
+    ///
+    /// Fused per row block: the `x·Ω` panel is produced by the blocked
+    /// matmul and transformed in place while still cache-hot.
     pub fn embed(&self, x: &Mat, omega: &Mat, delta: &[f32]) -> Mat {
+        let (n, d) = (x.rows(), x.cols());
         let q = omega.cols();
-        let xo = x.matmul_ref(omega);
+        let mut out = Mat::zeros(n, q);
+        if n == 0 || q == 0 {
+            return out;
+        }
+        // The zip below would silently truncate on a short delta; the old
+        // kernel's `delta[c]` indexing panicked instead. Keep it loud.
+        debug_assert_eq!(delta.len(), q, "embed: delta len != q");
         let scale = (2.0f32 / q as f32).sqrt();
-        Mat::from_fn(x.rows(), q, |r, c| scale * (xo.get(r, c) + delta[c]).cos())
+        let xs = x.as_slice();
+        let os = omega.as_slice();
+        par_row_blocks(
+            self.threads_for(n * d.max(1) * q),
+            n,
+            q,
+            out.as_mut_slice(),
+            |r0, block| {
+                let rows_here = block.len() / q;
+                matmul_rows_into(&xs[r0 * d..(r0 + rows_here) * d], os, block, d, q);
+                for row in block.chunks_exact_mut(q) {
+                    for (v, &dl) in row.iter_mut().zip(delta) {
+                        *v = scale * (*v + dl).cos();
+                    }
+                }
+            },
+        );
+        out
     }
 
     /// Masked gradient (paper eqs. 7/10/28 numerator):
     /// `X̂ᵀ diag(mask) (X̂θ − Y)` → `[q, c]`, unnormalised.
+    ///
+    /// Pass 1 fuses prediction, residual and mask row-by-row (fully masked
+    /// rows are skipped before any arithmetic); pass 2 forms `X̂ᵀ R` with
+    /// the `q` output rows partitioned across threads, each accumulating
+    /// over the data rows in ascending order.
     pub fn grad(&self, xhat: &Mat, y: &Mat, theta: &Mat, mask: &[f32]) -> Mat {
         let (l, q) = (xhat.rows(), xhat.cols());
         let c = y.cols();
-        // R = diag(mask)(X̂θ − Y)
-        let mut r = xhat.matmul_ref(theta);
-        for i in 0..l {
-            let m = mask[i];
-            let rrow = &mut r.as_mut_slice()[i * c..(i + 1) * c];
-            let yrow = y.row(i);
-            for (rv, &yv) in rrow.iter_mut().zip(yrow) {
-                *rv = m * (*rv - yv);
-            }
-        }
-        // g = X̂ᵀ R, accumulated row-block by row-block ([q, c] stays hot).
         let mut g = Mat::zeros(q, c);
-        for i in 0..l {
-            if mask[i] == 0.0 {
-                continue; // zero residual row contributes nothing
-            }
-            let xrow = xhat.row(i);
-            let rrow = r.row(i);
-            let gs = g.as_mut_slice();
-            for (k, &xv) in xrow.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
-                }
-                let grow = &mut gs[k * c..(k + 1) * c];
-                for (gv, &rv) in grow.iter_mut().zip(rrow) {
-                    *gv += xv * rv;
-                }
-            }
+        if l == 0 || q == 0 || c == 0 {
+            return g;
         }
+        let xs = xhat.as_slice();
+        let ts = theta.as_slice();
+        // R = diag(mask)(X̂θ − Y), one fused sweep per row.
+        let mut r = Mat::zeros(l, c);
+        {
+            let ys = y.as_slice();
+            par_row_blocks(
+                self.threads_for(l * q * c),
+                l,
+                c,
+                r.as_mut_slice(),
+                |i0, block| {
+                    for (ii, rrow) in block.chunks_exact_mut(c).enumerate() {
+                        let i = i0 + ii;
+                        let m = mask[i];
+                        if m == 0.0 {
+                            continue; // row never enters the aggregate
+                        }
+                        matmul_rows_into(&xs[i * q..(i + 1) * q], ts, rrow, q, c);
+                        for (rv, &yv) in rrow.iter_mut().zip(&ys[i * c..(i + 1) * c]) {
+                            *rv = m * (*rv - yv);
+                        }
+                    }
+                },
+            );
+        }
+        // g = X̂ᵀ R: each thread owns a disjoint block of g's rows (a
+        // contiguous k-range of X̂'s columns) and sweeps the data rows i in
+        // ascending order — the serial reference's per-element order, so
+        // the result is identical for every thread count.
+        let rs = r.as_slice();
+        par_row_blocks(
+            self.threads_for(l * q * c),
+            q,
+            c,
+            g.as_mut_slice(),
+            |k0, gblock| {
+                let kn = gblock.len() / c;
+                for i in 0..l {
+                    if mask[i] == 0.0 {
+                        continue;
+                    }
+                    let xseg = &xs[i * q + k0..i * q + k0 + kn];
+                    let rrow = &rs[i * c..(i + 1) * c];
+                    for (kk, &xv) in xseg.iter().enumerate() {
+                        let grow = &mut gblock[kk * c..(kk + 1) * c];
+                        for (gv, &rv) in grow.iter_mut().zip(rrow) {
+                            *gv += xv * rv;
+                        }
+                    }
+                }
+            },
+        );
         g
     }
 
     /// Weighted random linear encode (paper eq. 19):
     /// `(G ⊙ w[None, :]) · D` for `D ∈ {X̂ [l, q], Y [l, c]}`, zero-padded
     /// to `u_max` output rows to match the compiled-artifact contract.
-    pub fn encode(
-        &self,
-        g: &Mat,
-        w: &[f32],
-        xhat: &Mat,
-        y: &Mat,
-        u_max: usize,
-    ) -> (Mat, Mat) {
+    ///
+    /// The `G[u, l]·w[l]` products are computed once per output row into a
+    /// per-thread scratch panel and shared by the X̌ and Y̌ accumulations
+    /// (the first native port recomputed them for each).
+    pub fn encode(&self, g: &Mat, w: &[f32], xhat: &Mat, y: &Mat, u_max: usize) -> (Mat, Mat) {
         let (u, l) = (g.rows(), g.cols());
         let (q, c) = (xhat.cols(), y.cols());
         let mut xp = Mat::zeros(u_max, q);
         let mut yp = Mat::zeros(u_max, c);
-        for ui in 0..u {
-            let grow = g.row(ui);
-            let xrow_out = &mut xp.as_mut_slice()[ui * q..(ui + 1) * q];
-            for li in 0..l {
-                let gv = grow[li] * w[li];
-                if gv == 0.0 {
-                    continue;
+        if u == 0 || l == 0 {
+            return (xp, yp);
+        }
+        debug_assert_eq!(w.len(), l, "encode: w len != l");
+        let gs = g.as_slice();
+        let xs = xhat.as_slice();
+        let ys = y.as_slice();
+        let worker = |u0: usize, rows_here: usize, xblock: &mut [f32], yblock: &mut [f32]| {
+            let mut gw = vec![0.0f32; l]; // per-thread scratch panel
+            for ui in 0..rows_here {
+                let grow = &gs[(u0 + ui) * l..(u0 + ui + 1) * l];
+                for (gv, (&ge, &we)) in gw.iter_mut().zip(grow.iter().zip(w)) {
+                    *gv = ge * we;
                 }
-                for (ov, &dv) in xrow_out.iter_mut().zip(xhat.row(li)) {
-                    *ov += gv * dv;
+                if q > 0 {
+                    let orow = &mut xblock[ui * q..(ui + 1) * q];
+                    for (li, &gv) in gw.iter().enumerate() {
+                        for (ov, &dv) in orow.iter_mut().zip(&xs[li * q..(li + 1) * q]) {
+                            *ov += gv * dv;
+                        }
+                    }
+                }
+                if c > 0 {
+                    let orow = &mut yblock[ui * c..(ui + 1) * c];
+                    for (li, &gv) in gw.iter().enumerate() {
+                        for (ov, &dv) in orow.iter_mut().zip(&ys[li * c..(li + 1) * c]) {
+                            *ov += gv * dv;
+                        }
+                    }
                 }
             }
-            let yrow_out = &mut yp.as_mut_slice()[ui * c..(ui + 1) * c];
-            for li in 0..l {
-                let gv = grow[li] * w[li];
-                if gv == 0.0 {
-                    continue;
+        };
+        // Only the live `u` rows are touched; rows `u..u_max` stay zero.
+        let xp_live = &mut xp.as_mut_slice()[..u * q];
+        let yp_live = &mut yp.as_mut_slice()[..u * c];
+        let t = self.threads_for(u * l * (q + c)).min(u).max(1);
+        if t == 1 || q == 0 || c == 0 {
+            worker(0, u, xp_live, yp_live);
+        } else {
+            std::thread::scope(|s| {
+                let mut xrest = xp_live;
+                let mut yrest = yp_live;
+                let mut u0 = 0;
+                for rows_here in run_lengths(u, t) {
+                    let (xchunk, xtail) =
+                        std::mem::take(&mut xrest).split_at_mut(rows_here * q);
+                    xrest = xtail;
+                    let (ychunk, ytail) =
+                        std::mem::take(&mut yrest).split_at_mut(rows_here * c);
+                    yrest = ytail;
+                    let worker = &worker;
+                    s.spawn(move || worker(u0, rows_here, xchunk, ychunk));
+                    u0 += rows_here;
                 }
-                for (ov, &dv) in yrow_out.iter_mut().zip(y.row(li)) {
-                    *ov += gv * dv;
-                }
-            }
+            });
         }
         (xp, yp)
     }
 
-    /// Logits `X̂ θ` → `[n, c]`.
+    /// Logits `X̂ θ` → `[n, c]` via the blocked matmul, rows across threads.
     pub fn predict(&self, xhat: &Mat, theta: &Mat) -> Mat {
-        xhat.matmul_ref(theta)
+        let (n, q) = (xhat.rows(), xhat.cols());
+        let c = theta.cols();
+        let mut out = Mat::zeros(n, c);
+        if n == 0 || q == 0 || c == 0 {
+            return out;
+        }
+        let xs = xhat.as_slice();
+        let ts = theta.as_slice();
+        par_row_blocks(
+            self.threads_for(n * q * c),
+            n,
+            c,
+            out.as_mut_slice(),
+            |r0, block| {
+                let rows_here = block.len() / c;
+                matmul_rows_into(&xs[r0 * q..(r0 + rows_here) * q], ts, block, q, c);
+            },
+        );
+        out
     }
+}
+
+/// Split `out` (a `rows × row_width` buffer) into contiguous row blocks and
+/// run `f(first_row, block)` on each from its own scoped thread. Blocks are
+/// disjoint, every element is written by exactly one thread, and `f` is
+/// expected to preserve per-element accumulation order — together that
+/// makes the result identical for every thread count.
+fn par_row_blocks<F>(threads: usize, rows: usize, row_width: usize, out: &mut [f32], f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * row_width);
+    let t = threads.min(rows).max(1);
+    if t == 1 || row_width == 0 {
+        f(0, out);
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut row0 = 0;
+        for rows_here in run_lengths(rows, t) {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(rows_here * row_width);
+            rest = tail;
+            let f = &f;
+            s.spawn(move || f(row0, chunk));
+            row0 += rows_here;
+        }
+    });
 }
 
 #[cfg(test)]
@@ -127,7 +346,7 @@ mod tests {
         let y = randn(6, 3, &mut rng);
         let theta = randn(4, 3, &mut rng);
         let mask = [1.0, 0.0, 1.0, 0.5, 1.0, 0.0];
-        let g = NativeExec.grad(&xhat, &y, &theta, &mask);
+        let g = NativeExec::single().grad(&xhat, &y, &theta, &mask);
         // direct triple loop
         let mut want = Mat::zeros(4, 3);
         for i in 0..6 {
@@ -151,8 +370,9 @@ mod tests {
         let xhat = randn(4, 3, &mut rng);
         let y = randn(4, 2, &mut rng);
         let theta = randn(3, 2, &mut rng);
-        let g_masked = NativeExec.grad(&xhat, &y, &theta, &[1.0, 1.0, 0.0, 0.0]);
-        let g_sliced = NativeExec.grad(
+        let ex = NativeExec::single();
+        let g_masked = ex.grad(&xhat, &y, &theta, &[1.0, 1.0, 0.0, 0.0]);
+        let g_sliced = ex.grad(
             &xhat.rows_slice(0, 2),
             &y.rows_slice(0, 2),
             &theta,
@@ -168,7 +388,7 @@ mod tests {
         let w: Vec<f32> = (0..5).map(|i| 0.2 * i as f32).collect();
         let xhat = randn(5, 4, &mut rng);
         let y = randn(5, 2, &mut rng);
-        let (xp, yp) = NativeExec.encode(&g, &w, &xhat, &y, 6);
+        let (xp, yp) = NativeExec::single().encode(&g, &w, &xhat, &y, 6);
         assert_eq!((xp.rows(), xp.cols()), (6, 4));
         assert_eq!((yp.rows(), yp.cols()), (6, 2));
         // padded rows are exactly zero
@@ -189,8 +409,65 @@ mod tests {
         let x = randn(8, 5, &mut rng);
         let omega = randn(5, 16, &mut rng);
         let delta = vec![0.3f32; 16];
-        let e = NativeExec.embed(&x, &omega, &delta);
+        let e = NativeExec::single().embed(&x, &omega, &delta);
         let bound = (2.0f32 / 16.0).sqrt() + 1e-6;
         assert!(e.as_slice().iter().all(|v| v.abs() <= bound));
+    }
+
+    #[test]
+    fn thread_counts_are_bit_identical() {
+        // Shapes chosen to clear PAR_MIN_FLOPS (128·128·8 = 131k madds) so
+        // the scoped-thread path really runs.
+        let mut rng = Rng::seed_from(11);
+        let xhat = randn(128, 128, &mut rng);
+        let y = randn(128, 8, &mut rng);
+        let theta = randn(128, 8, &mut rng);
+        let mask: Vec<f32> = (0..128).map(|i| if i % 7 == 0 { 0.0 } else { 1.0 }).collect();
+        let base = NativeExec::single();
+        for t in [2usize, 3, 8] {
+            let ex = NativeExec::new(t);
+            assert_eq!(
+                base.grad(&xhat, &y, &theta, &mask).as_slice(),
+                ex.grad(&xhat, &y, &theta, &mask).as_slice(),
+                "grad diverged at {t} threads"
+            );
+            assert_eq!(
+                base.predict(&xhat, &theta).as_slice(),
+                ex.predict(&xhat, &theta).as_slice(),
+                "predict diverged at {t} threads"
+            );
+        }
+    }
+
+    #[test]
+    fn run_lengths_are_balanced_and_complete() {
+        // n just above t is the case ceil-chunking got wrong (idle workers).
+        for (n, t) in [(17usize, 16usize), (16, 16), (5, 2), (7, 3), (100, 7)] {
+            let lens: Vec<usize> = run_lengths(n, t).collect();
+            assert_eq!(lens.len(), t);
+            assert_eq!(lens.iter().sum::<usize>(), n);
+            let mn = *lens.iter().min().unwrap();
+            let mx = *lens.iter().max().unwrap();
+            assert!(mx - mn <= 1, "unbalanced: {lens:?}");
+        }
+    }
+
+    #[test]
+    fn thread_cap_is_applied() {
+        assert_eq!(NativeExec::new(100_000).threads(), 512);
+        assert_eq!(NativeExec::new(3).threads(), 3);
+        assert!(NativeExec::new(0).threads() >= 1);
+    }
+
+    #[test]
+    fn zero_row_inputs_are_handled() {
+        let ex = NativeExec::new(4);
+        let g = ex.grad(&Mat::zeros(0, 5), &Mat::zeros(0, 3), &Mat::zeros(5, 3), &[]);
+        assert_eq!((g.rows(), g.cols()), (5, 3));
+        assert!(g.as_slice().iter().all(|&v| v == 0.0));
+        let (xp, yp) =
+            ex.encode(&Mat::zeros(0, 4), &[0.5; 4], &Mat::zeros(4, 6), &Mat::zeros(4, 2), 8);
+        assert_eq!((xp.rows(), yp.rows()), (8, 8));
+        assert!(xp.as_slice().iter().all(|&v| v == 0.0));
     }
 }

@@ -126,11 +126,11 @@ pub struct RoundCost {
 /// gradient; a hybrid scheme's server-side correction; …).
 pub struct RoundExec<'a> {
     rt: &'a Runtime,
-    theta: &'a PreparedTheta,
+    theta: &'a PreparedTheta<'a>,
 }
 
 impl<'a> RoundExec<'a> {
-    pub(crate) fn new(rt: &'a Runtime, theta: &'a PreparedTheta) -> Self {
+    pub(crate) fn new(rt: &'a Runtime, theta: &'a PreparedTheta<'a>) -> Self {
         RoundExec { rt, theta }
     }
 

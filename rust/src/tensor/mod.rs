@@ -1,9 +1,23 @@
-//! Minimal row-major `f32` matrix used across the coordinator.
+//! Row-major `f32` matrix (and borrowed [`MatView`] row blocks) used across
+//! the coordinator and the native compute backend.
 //!
-//! The heavy math lives in the AOT-compiled XLA artifacts; this type only
-//! needs cheap construction, slicing into row blocks, zero-padding (which is
-//! *exact* for the CodedFedL math — see DESIGN.md §2) and a few O(n)
-//! reductions used by aggregation and metrics.
+//! Since the pure-Rust `runtime::native` backend became the default, this
+//! module *is* the training hot path: [`Mat::matmul`] is the cache-blocked,
+//! register-tiled kernel every `embed`/`grad`/`predict` call bottoms out in,
+//! and [`MatView`] provides zero-copy row-block access so per-round slicing
+//! never clones buffers. [`Mat::matmul_ref`] is kept as the naive reference
+//! oracle the fast kernels are tested against (and is what the AOT/PJRT
+//! artifacts execute when the `pjrt` feature is enabled).
+//!
+//! Determinism contract: the blocked kernel accumulates every output element
+//! over `k` in ascending order with plain (non-fused) f32 adds — the exact
+//! sequence `matmul_ref` performs — so for finite inputs blocked and
+//! reference results are bit-for-bit identical, not merely close.
+//! (`matmul_ref` skips `a == 0` terms; with non-finite operands those
+//! skipped `0·inf` products would differ, so the guarantee is stated for
+//! finite data — the only kind training produces.) The parallel drivers in
+//! `runtime::native` partition *output rows* across threads, which preserves
+//! that per-element order for every thread count.
 
 use std::fmt;
 
@@ -82,13 +96,30 @@ impl Mat {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// Copy of rows `[start, start+n)` as a new matrix.
+    /// Copy of rows `[start, start+n)` as a new matrix. Prefer
+    /// [`Mat::rows_view`] on hot paths — it borrows instead of cloning.
     pub fn rows_slice(&self, start: usize, n: usize) -> Mat {
         assert!(start + n <= self.rows, "row slice out of bounds");
         Mat {
             rows: n,
             cols: self.cols,
             data: self.data[start * self.cols..(start + n) * self.cols].to_vec(),
+        }
+    }
+
+    /// Zero-copy view of the whole matrix.
+    pub fn view(&self) -> MatView<'_> {
+        MatView { rows: self.rows, cols: self.cols, data: &self.data }
+    }
+
+    /// Zero-copy view of rows `[start, start+n)` (the borrowed counterpart
+    /// of [`Mat::rows_slice`]).
+    pub fn rows_view(&self, start: usize, n: usize) -> MatView<'_> {
+        assert!(start + n <= self.rows, "row view out of bounds");
+        MatView {
+            rows: n,
+            cols: self.cols,
+            data: &self.data[start * self.cols..(start + n) * self.cols],
         }
     }
 
@@ -169,8 +200,18 @@ impl Mat {
             .fold(0.0f32, f32::max)
     }
 
-    /// Naive reference matmul — used only in tests/diagnostics, never on the
-    /// training hot path (that goes through XLA).
+    /// Dense matmul `self · other` via the blocked kernel (single-threaded;
+    /// the parallel drivers live in `runtime::native`). Bit-for-bit equal to
+    /// [`Mat::matmul_ref`] on finite inputs — see the module docs for the
+    /// determinism contract.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        self.view().matmul(other)
+    }
+
+    /// Naive reference matmul — the test/diagnostic *oracle* the blocked
+    /// [`Mat::matmul`] (the default native-backend hot path) is pinned
+    /// against. Only the optional `pjrt` backend bypasses both in favour of
+    /// the AOT XLA artifacts.
     pub fn matmul_ref(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let mut out = Mat::zeros(self.rows, other.cols);
@@ -186,6 +227,112 @@ impl Mat {
             }
         }
         out
+    }
+}
+
+/// Borrowed, zero-copy row-block view of a [`Mat`] (same row-major layout).
+///
+/// Produced by [`Mat::view`] / [`Mat::rows_view`]. The blocked
+/// [`Mat::matmul`] runs through it, and it is the row-block API offered to
+/// schemes and tooling that would otherwise reach for the cloning
+/// [`Mat::rows_slice`]. (The per-round θ reuse has its own zero-copy
+/// path: the borrowed `runtime::PreparedTheta`.)
+#[derive(Clone, Copy, PartialEq)]
+pub struct MatView<'a> {
+    rows: usize,
+    cols: usize,
+    data: &'a [f32],
+}
+
+impl fmt::Debug for MatView<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "MatView[{}x{}]", self.rows, self.cols)
+    }
+}
+
+impl<'a> MatView<'a> {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row-major backing slice (borrowed from the parent [`Mat`]).
+    pub fn as_slice(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// Borrow one row.
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Materialise the view as an owned matrix.
+    pub fn to_mat(&self) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.to_vec() }
+    }
+
+    /// Dense matmul `self · other` via the blocked kernel (bit-for-bit
+    /// equal to [`Mat::matmul_ref`]).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        matmul_rows_into(self.data, &other.data, &mut out.data, self.cols, other.cols);
+        out
+    }
+}
+
+/// Width of the register tile of the blocked matmul: the accumulator array
+/// the compiler keeps in vector registers across the whole `k` loop, so the
+/// output row is loaded/stored once per tile instead of once per `k`.
+const MM_TILE: usize = 16;
+
+/// Core of the blocked matmul: `out = a · b`, where `a` is `r×k`, `b` is
+/// `k×n` and `out` is the `r×n` **all-zeros** destination. Runs a fixed
+/// `MM_TILE`-wide register tile over the output columns with the `k` loop
+/// innermost-but-one, so the hot loop is a pure `acc[t] += av * b[t]`
+/// sweep `chunks_exact` exposes to the autovectoriser.
+///
+/// Per output element the products are accumulated over `k` in ascending
+/// order with individual f32 adds — exactly [`Mat::matmul_ref`]'s order —
+/// so the result is bit-for-bit identical to the reference. Callers
+/// parallelise by splitting `a`/`out` into disjoint row blocks (see
+/// `runtime::native`), which keeps that guarantee for any thread count.
+pub(crate) fn matmul_rows_into(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
+    if k == 0 || n == 0 {
+        return;
+    }
+    debug_assert_eq!(a.len() % k, 0, "a is not whole rows");
+    debug_assert_eq!(out.len() % n, 0, "out is not whole rows");
+    debug_assert_eq!(a.len() / k, out.len() / n, "a/out row count mismatch");
+    debug_assert_eq!(b.len(), k * n, "b shape mismatch");
+    for (arow, orow) in a.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+        let mut j = 0;
+        let mut tiles = orow.chunks_exact_mut(MM_TILE);
+        for otile in &mut tiles {
+            let mut acc = [0.0f32; MM_TILE];
+            for (kk, &av) in arow.iter().enumerate() {
+                let btile = &b[kk * n + j..kk * n + j + MM_TILE];
+                for (av_acc, &bv) in acc.iter_mut().zip(btile) {
+                    *av_acc += av * bv;
+                }
+            }
+            otile.copy_from_slice(&acc);
+            j += MM_TILE;
+        }
+        // Column remainder (< MM_TILE wide): same ascending-k accumulation,
+        // scalar form, into the still-zero tail of the output row.
+        let tail = tiles.into_remainder();
+        if !tail.is_empty() {
+            for (kk, &av) in arow.iter().enumerate() {
+                let btail = &b[kk * n + j..(kk + 1) * n];
+                for (ov, &bv) in tail.iter_mut().zip(btail) {
+                    *ov += av * bv;
+                }
+            }
+        }
     }
 }
 
@@ -264,6 +411,51 @@ mod tests {
         let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
         let c = a.matmul_ref(&b);
         assert_eq!(c.as_slice(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn blocked_matmul_matches_reference_bitwise() {
+        // Shapes straddling the MM_TILE boundary, plus degenerate ones.
+        for (m, k, n) in [
+            (0, 3, 4),
+            (1, 1, 1),
+            (3, 5, MM_TILE),
+            (4, 7, MM_TILE + 3),
+            (5, 2, MM_TILE - 1),
+            (7, 33, 2 * MM_TILE + 5),
+            (2, 0, 3),
+            (2, 3, 0),
+        ] {
+            let a = Mat::from_fn(m, k, |r, c| ((r * 31 + c * 17) % 13) as f32 * 0.37 - 2.0);
+            let b = Mat::from_fn(k, n, |r, c| ((r * 7 + c * 29) % 11) as f32 * 0.53 - 1.5);
+            let fast = a.matmul(&b);
+            let oracle = a.matmul_ref(&b);
+            assert_eq!((fast.rows(), fast.cols()), (m, n));
+            assert_eq!(fast.as_slice(), oracle.as_slice(), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn views_borrow_without_cloning() {
+        let m = Mat::from_fn(4, 3, |r, c| (r * 3 + c) as f32);
+        let v = m.rows_view(1, 2);
+        assert_eq!((v.rows(), v.cols()), (2, 3));
+        assert_eq!(v.as_slice(), &m.as_slice()[3..9]);
+        assert_eq!(v.row(1), m.row(2));
+        assert_eq!(v.to_mat().as_slice(), m.rows_slice(1, 2).as_slice());
+        // view-based matmul equals the owned path
+        let b = Mat::from_fn(3, 5, |r, c| (r + c) as f32 * 0.5);
+        assert_eq!(
+            v.matmul(&b).as_slice(),
+            m.rows_slice(1, 2).matmul_ref(&b).as_slice()
+        );
+        assert_eq!(m.view().rows(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row view out of bounds")]
+    fn rows_view_rejects_overrun() {
+        Mat::zeros(3, 2).rows_view(2, 2);
     }
 
     #[test]

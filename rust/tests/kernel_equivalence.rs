@@ -1,0 +1,234 @@
+//! Property-style equivalence tests for the blocked/parallel native
+//! kernels (PR 2 tentpole): every fast kernel is pinned against the seed's
+//! serial reference implementation (ported verbatim below) across awkward
+//! shapes — 0 rows, 1 column, sizes straddling the register-tile width —
+//! and thread counts {1, 4}.
+//!
+//! Contract under test (see `rust/src/tensor` module docs): `threads = 1`
+//! is **bit-for-bit** equal to the serial reference; other thread counts
+//! must stay within 1e-4 max-abs-diff (they are in fact also exact, since
+//! threads partition disjoint output rows, but the looser bound is the
+//! documented API guarantee).
+
+use codedfedl::rng::Rng;
+use codedfedl::runtime::native::NativeExec;
+use codedfedl::tensor::Mat;
+
+fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+    let mut m = Mat::zeros(rows, cols);
+    rng.fill_normal_f32(m.as_mut_slice());
+    m
+}
+
+/// Mask pattern mixing kept, dropped and fractional rows.
+fn mask_for(l: usize) -> Vec<f32> {
+    (0..l).map(|i| [1.0f32, 0.0, 0.5, 1.0][i % 4]).collect()
+}
+
+/// Assert equality under the thread-count contract.
+fn assert_equiv(name: &str, threads: usize, got: &Mat, want: &Mat) {
+    assert_eq!((got.rows(), got.cols()), (want.rows(), want.cols()), "{name}: shape");
+    if threads == 1 {
+        assert_eq!(
+            got.as_slice(),
+            want.as_slice(),
+            "{name}: threads=1 must be bit-for-bit equal to the serial reference"
+        );
+    } else {
+        let d = got.max_abs_diff(want);
+        assert!(d <= 1e-4, "{name}: threads={threads} diff {d} > 1e-4");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Serial reference kernels: the seed implementation, ported verbatim.
+// ---------------------------------------------------------------------------
+
+/// Seed-native RFF embedding: `sqrt(2/q) · cos(x Ω + δ)` over `matmul_ref`.
+fn ref_embed(x: &Mat, omega: &Mat, delta: &[f32]) -> Mat {
+    let q = omega.cols();
+    let xo = x.matmul_ref(omega);
+    let scale = (2.0f32 / q as f32).sqrt();
+    Mat::from_fn(x.rows(), q, |r, c| scale * (xo.get(r, c) + delta[c]).cos())
+}
+
+/// Seed-native masked gradient: full `matmul_ref`, separate mask pass,
+/// zero-skipping accumulation.
+fn ref_grad(xhat: &Mat, y: &Mat, theta: &Mat, mask: &[f32]) -> Mat {
+    let (l, q) = (xhat.rows(), xhat.cols());
+    let c = y.cols();
+    let mut r = xhat.matmul_ref(theta);
+    for i in 0..l {
+        let m = mask[i];
+        let rrow = &mut r.as_mut_slice()[i * c..(i + 1) * c];
+        let yrow = y.row(i);
+        for (rv, &yv) in rrow.iter_mut().zip(yrow) {
+            *rv = m * (*rv - yv);
+        }
+    }
+    let mut g = Mat::zeros(q, c);
+    for i in 0..l {
+        if mask[i] == 0.0 {
+            continue;
+        }
+        let xrow = xhat.row(i);
+        let rrow = r.row(i);
+        let gs = g.as_mut_slice();
+        for (k, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let grow = &mut gs[k * c..(k + 1) * c];
+            for (gv, &rv) in grow.iter_mut().zip(rrow) {
+                *gv += xv * rv;
+            }
+        }
+    }
+    g
+}
+
+/// Seed-native weighted encode with duplicated `g·w` products.
+fn ref_encode(g: &Mat, w: &[f32], xhat: &Mat, y: &Mat, u_max: usize) -> (Mat, Mat) {
+    let (u, l) = (g.rows(), g.cols());
+    let (q, c) = (xhat.cols(), y.cols());
+    let mut xp = Mat::zeros(u_max, q);
+    let mut yp = Mat::zeros(u_max, c);
+    for ui in 0..u {
+        let grow = g.row(ui);
+        let xrow_out = &mut xp.as_mut_slice()[ui * q..(ui + 1) * q];
+        for li in 0..l {
+            let gv = grow[li] * w[li];
+            if gv == 0.0 {
+                continue;
+            }
+            for (ov, &dv) in xrow_out.iter_mut().zip(xhat.row(li)) {
+                *ov += gv * dv;
+            }
+        }
+        let yrow_out = &mut yp.as_mut_slice()[ui * c..(ui + 1) * c];
+        for li in 0..l {
+            let gv = grow[li] * w[li];
+            if gv == 0.0 {
+                continue;
+            }
+            for (ov, &dv) in yrow_out.iter_mut().zip(y.row(li)) {
+                *ov += gv * dv;
+            }
+        }
+    }
+    (xp, yp)
+}
+
+// ---------------------------------------------------------------------------
+// The property sweeps.
+// ---------------------------------------------------------------------------
+
+/// (l, q, c) shapes: degenerate, tiny, tile-straddling, realistic, and one
+/// large enough to clear the kernels' internal parallelism threshold so
+/// `threads = 4` really exercises the scoped-thread path.
+const GRAD_SHAPES: &[(usize, usize, usize)] = &[
+    (0, 8, 3),
+    (1, 1, 1),
+    (5, 17, 1),
+    (7, 16, 4),
+    (13, 15, 10),
+    (29, 33, 10),
+    (40, 65, 7),
+    (80, 100, 10),
+];
+
+#[test]
+fn matmul_blocked_equals_reference_across_shapes_and_threads() {
+    let mut rng = Rng::seed_from(101);
+    for &(m, k, n) in
+        &[(0usize, 5usize, 4usize), (1, 1, 1), (3, 17, 16), (9, 33, 31), (21, 8, 50), (60, 80, 20)]
+    {
+        let a = randn(m, k, &mut rng);
+        let b = randn(k, n, &mut rng);
+        let want = a.matmul_ref(&b);
+        // Mat::matmul is the single-threaded blocked kernel
+        assert_equiv("Mat::matmul", 1, &a.matmul(&b), &want);
+        // the threaded path is exercised through NativeExec::predict
+        for threads in [1usize, 4] {
+            let got = NativeExec::new(threads).predict(&a, &b);
+            assert_equiv("predict", threads, &got, &want);
+        }
+    }
+}
+
+#[test]
+fn grad_equals_reference_across_shapes_and_threads() {
+    let mut rng = Rng::seed_from(102);
+    for &(l, q, c) in GRAD_SHAPES {
+        let xhat = randn(l, q, &mut rng);
+        let y = randn(l, c, &mut rng);
+        let theta = randn(q, c, &mut rng);
+        let mask = mask_for(l);
+        let want = ref_grad(&xhat, &y, &theta, &mask);
+        for threads in [1usize, 4] {
+            let got = NativeExec::new(threads).grad(&xhat, &y, &theta, &mask);
+            assert_equiv("grad", threads, &got, &want);
+        }
+    }
+}
+
+#[test]
+fn embed_equals_reference_across_shapes_and_threads() {
+    let mut rng = Rng::seed_from(103);
+    for &(n, d, q) in
+        &[(0usize, 4usize, 8usize), (1, 1, 1), (6, 9, 17), (33, 16, 48), (40, 7, 65), (70, 40, 48)]
+    {
+        let x = randn(n, d, &mut rng);
+        let omega = randn(d, q, &mut rng);
+        let delta: Vec<f32> = (0..q).map(|_| rng.next_f32() * 6.28).collect();
+        let want = ref_embed(&x, &omega, &delta);
+        for threads in [1usize, 4] {
+            let got = NativeExec::new(threads).embed(&x, &omega, &delta);
+            assert_equiv("embed", threads, &got, &want);
+        }
+    }
+}
+
+#[test]
+fn encode_equals_reference_across_shapes_and_threads() {
+    let mut rng = Rng::seed_from(104);
+    // (u, l, q, c, u_max)
+    for &(u, l, q, c, u_max) in &[
+        (0usize, 5usize, 8usize, 3usize, 4usize),
+        (1, 1, 1, 1, 1),
+        (3, 7, 17, 1, 5),
+        (13, 10, 33, 10, 16),
+        (40, 20, 65, 6, 64),
+        (50, 40, 64, 8, 64),
+    ] {
+        let g = randn(u, l, &mut rng);
+        let w: Vec<f32> = (0..l).map(|i| if i % 5 == 0 { 0.0 } else { rng.next_f32() }).collect();
+        let xhat = randn(l, q, &mut rng);
+        let y = randn(l, c, &mut rng);
+        let (want_x, want_y) = ref_encode(&g, &w, &xhat, &y, u_max);
+        for threads in [1usize, 4] {
+            let (got_x, got_y) = NativeExec::new(threads).encode(&g, &w, &xhat, &y, u_max);
+            assert_equiv("encode.x", threads, &got_x, &want_x);
+            assert_equiv("encode.y", threads, &got_y, &want_y);
+        }
+    }
+}
+
+#[test]
+fn grad_with_exact_zero_features_still_matches() {
+    // The seed kernel skipped zero entries; the blocked kernel does not.
+    // Adding `0.0 * r` terms must not change any bit of the result.
+    let mut rng = Rng::seed_from(105);
+    let mut xhat = randn(12, 20, &mut rng);
+    for (i, v) in xhat.as_mut_slice().iter_mut().enumerate() {
+        if i % 3 == 0 {
+            *v = 0.0;
+        }
+    }
+    let y = randn(12, 4, &mut rng);
+    let theta = randn(20, 4, &mut rng);
+    let mask = mask_for(12);
+    let want = ref_grad(&xhat, &y, &theta, &mask);
+    let got = NativeExec::single().grad(&xhat, &y, &theta, &mask);
+    assert_equiv("grad(sparse)", 1, &got, &want);
+}

@@ -90,6 +90,70 @@ fn runs_are_exactly_reproducible() {
 }
 
 #[test]
+fn thread_count_does_not_change_the_history() {
+    // The native kernels partition output rows and the engine folds client
+    // gradients in plan order, so any thread count must reproduce the
+    // serial run bit-for-bit — for every scheme.
+    let run = |threads: usize, spec: SchemeSpec| {
+        ExperimentBuilder::preset("tiny")
+            .unwrap()
+            .epochs(3)
+            .threads(threads)
+            .build()
+            .unwrap()
+            .run_spec(spec)
+            .unwrap()
+    };
+    for spec in [
+        SchemeSpec::NaiveUncoded,
+        SchemeSpec::GreedyUncoded { psi: 0.2 },
+        SchemeSpec::Coded { delta: 0.3 },
+    ] {
+        let serial = run(1, spec);
+        let parallel = run(4, spec);
+        assert_eq!(
+            serial.theta.as_slice(),
+            parallel.theta.as_slice(),
+            "{}: threads=4 diverged from serial",
+            spec.label()
+        );
+        for (pa, pb) in serial.history.points.iter().zip(&parallel.history.points) {
+            assert_eq!(pa.accuracy, pb.accuracy, "{}", spec.label());
+            assert_eq!(pa.train_loss, pb.train_loss, "{}", spec.label());
+        }
+    }
+}
+
+#[test]
+fn eval_every_samples_history_but_keeps_training_identical() {
+    let run = |eval_every: usize| {
+        ExperimentBuilder::preset("tiny")
+            .unwrap()
+            .epochs(4) // tiny: 2 steps/epoch → 8 iterations
+            .eval_every(eval_every)
+            .build()
+            .unwrap()
+            .run(&mut CodedFedL::new(0.3))
+            .unwrap()
+    };
+    let dense = run(1);
+    let sparse = run(3);
+    // Sampled points carry their iteration; the final round is always there.
+    let iters: Vec<usize> = sparse.history.points.iter().map(|p| p.iter).collect();
+    assert_eq!(iters, vec![3, 6, 8]);
+    assert_eq!(dense.history.points.len(), 8);
+    // The probe is telemetry only: the trained model is unchanged…
+    assert_eq!(dense.theta.as_slice(), sparse.theta.as_slice());
+    // …and the sampled points agree exactly with the dense run's.
+    for p in &sparse.history.points {
+        let d = dense.history.points.iter().find(|q| q.iter == p.iter).unwrap();
+        assert_eq!(p.accuracy, d.accuracy);
+        assert_eq!(p.train_loss, d.train_loss);
+        assert_eq!(p.sim_time, d.sim_time);
+    }
+}
+
+#[test]
 fn different_seeds_change_the_run() {
     let sa = tiny_session(3);
     let sb = ExperimentBuilder::preset("tiny").unwrap().epochs(3).seed(999).build().unwrap();
