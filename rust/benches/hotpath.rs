@@ -2,26 +2,33 @@
 //! the L3 pieces that run every round, plus the kernel executors.
 //!
 //! ```sh
-//! cargo bench --bench hotpath                 # full run
-//! BENCH_SMOKE=1 cargo bench --bench hotpath   # CI smoke: 1 warmup, 2 iters
+//! cargo bench --bench hotpath   # full run — overwrites the TRACKED baseline JSON
+//! BENCH_SMOKE=1 BENCH_JSON=/tmp/smoke.json cargo bench --bench hotpath  # smoke: 1 warmup, 2 iters
 //! ```
 //!
 //! Before timing anything the bench *verifies* every native kernel against
 //! the `matmul_ref`-based oracles at 1 and 4 threads and exits non-zero on
 //! divergence — the CI smoke job leans on this as a cheap end-to-end
-//! kernel check. Results are written to `BENCH_hotpath.json` (override the
-//! path with `BENCH_JSON`); `rust/PERF.md` records the tracked baseline
-//! and how to diff against it.
+//! kernel check. It also measures the steady-state round's compute-path
+//! allocations under a counting global allocator and *fails* unless they
+//! are zero (the `tests/alloc_gate.rs` contract, re-checked here so the
+//! recorded baseline can never ship a regression). Results are written to
+//! `BENCH_hotpath.json` (override the path with `BENCH_JSON`);
+//! `rust/PERF.md` records the tracked baseline and how to diff against
+//! it.
 
 use codedfedl::allocation::{self, NodeSpec};
-use codedfedl::benchutil::{bench_iters, load_runtime, shapes_for, BenchReport};
+use codedfedl::benchutil::{bench_iters, load_runtime, shapes_for, BenchReport, CountingAlloc};
 use codedfedl::conf::ExperimentConfig;
 use codedfedl::rng::Rng;
-use codedfedl::runtime::{Runtime, RuntimeShapes};
+use codedfedl::runtime::{GradJob, Runtime, RuntimeShapes};
 use codedfedl::schemes::CodedFedL;
 use codedfedl::tensor::Mat;
 use codedfedl::topology::FleetSpec;
 use codedfedl::ExperimentBuilder;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
     let mut m = Mat::zeros(rows, cols);
@@ -159,8 +166,66 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(&acc);
     });
 
-    // --- one full coded training round, end to end (tiny preset) ---
+    // --- one steady-state training round, pool warm (the per-round
+    //     compute path the engine runs: pack θ, batch the n client
+    //     gradients into held slots, fold, evaluate) ---
     let session = ExperimentBuilder::preset("tiny")?.epochs(1).build()?;
+    {
+        let rt = session.runtime();
+        let setup = session.setup();
+        let scfg = session.config();
+        let (sq, sc, n) = (scfg.q, scfg.classes, scfg.clients);
+        let theta = randn(sq, sc, &mut rng);
+        let masks: Vec<Vec<f32>> = vec![vec![1.0f32; scfg.local_batch]; n];
+        // Everything the warm loop touches is allocated up front, exactly
+        // like coordinator::engine's round-persistent buffers.
+        let jobs: Vec<GradJob> = (0..n)
+            .map(|j| GradJob {
+                xhat: &setup.client_data[j].xhat[0],
+                y: &setup.client_data[j].y[0],
+                mask: &masks[j],
+            })
+            .collect();
+        let mut panel: Vec<f32> = Vec::new();
+        let mut outs: Vec<Mat> = (0..n).map(|_| Mat::zeros(sq, sc)).collect();
+        let mut agg = Mat::zeros(sq, sc);
+        let mut logits = Mat::zeros(setup.test_xhat.rows(), sc);
+        let mut round = || {
+            let prep = rt.prepare_theta_into(&theta, &mut panel).unwrap();
+            rt.grad_batch_into(&jobs, &prep, &mut outs).unwrap();
+            agg.as_mut_slice().fill(0.0);
+            for g in &outs {
+                agg.axpy(1.0, g);
+            }
+            rt.predict_into(&setup.test_xhat, &prep, &mut logits).unwrap();
+            std::hint::black_box(&agg);
+        };
+        // Warm the pool scratch arenas and every held buffer, then gate:
+        // a steady-state round must not allocate on the compute path.
+        round();
+        round();
+        let a0 = CountingAlloc::allocations();
+        round();
+        let allocs = CountingAlloc::allocations() - a0;
+        report.allocs_per_round = Some(allocs);
+        anyhow::ensure!(
+            allocs == 0,
+            "steady-state round allocated {allocs} times on the compute path \
+             (the alloc_gate contract is broken)"
+        );
+        println!("steady-state round compute-path allocations: {allocs}");
+        let (wu, it) = bench_iters(3, 50);
+        report.bench(
+            "full round steady",
+            "tiny: 5 clients, warm pool",
+            rt.threads(),
+            wu,
+            it,
+            &mut round,
+        );
+    }
+
+    // --- one full coded training epoch, end to end (tiny preset) ---
     let (wu, it) = bench_iters(1, 10);
     let epoch_threads = session.runtime().threads();
     report.bench("full coded epoch", "tiny: 5 clients x 2 steps", epoch_threads, wu, it, || {

@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Validate the committed BENCH_hotpath.json baseline against a smoke run.
+
+Usage: validate_bench_baseline.py <committed_baseline.json> <smoke_run.json>
+
+Checks (coverage gates, not timing gates — smoke numbers are meaningless):
+  * both documents parse and carry the current schema (2) with a
+    well-formed, non-empty record list (op/shape/ns_per_iter/threads/iters);
+  * the committed baseline is a full-mode run (``smoke: false``) — smoke
+    numbers must never be recorded as a baseline (rust/PERF.md);
+  * the committed baseline records a measured, *zero* ``allocs_per_round``
+    (the steady-state allocation-free contract of tests/alloc_gate.rs);
+  * every (op, shape) pair in the committed baseline is covered by the
+    smoke run, so a bench that silently stops running cannot leave a stale
+    baseline row behind.
+
+Exits non-zero with one line per failure.
+"""
+
+import json
+import sys
+
+SCHEMA = 2
+RECORD_FIELDS = {
+    "op": str,
+    "shape": str,
+    "ns_per_iter": (int, float),
+    "threads": int,
+    "iters": int,
+}
+
+
+def check_doc(doc, name, errors):
+    """Schema-validate one report; returns its (op, shape) set."""
+    if doc.get("schema") != SCHEMA:
+        errors.append(f"{name}: schema {doc.get('schema')!r} != {SCHEMA}")
+    records = doc.get("records")
+    if not isinstance(records, list) or not records:
+        errors.append(f"{name}: records must be a non-empty list")
+        return set()
+    keys = set()
+    for i, rec in enumerate(records):
+        for field, ty in RECORD_FIELDS.items():
+            if not isinstance(rec.get(field), ty):
+                errors.append(f"{name}: records[{i}].{field} is {rec.get(field)!r}, want {ty}")
+        if isinstance(rec.get("ns_per_iter"), (int, float)) and rec["ns_per_iter"] <= 0:
+            errors.append(f"{name}: records[{i}].ns_per_iter must be > 0")
+        keys.add((rec.get("op"), rec.get("shape")))
+    if len(keys) != len(records):
+        errors.append(f"{name}: duplicate (op, shape) records")
+    return keys
+
+
+def main(baseline_path, smoke_path):
+    errors = []
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    with open(smoke_path) as f:
+        smoke = json.load(f)
+
+    baseline_keys = check_doc(baseline, "baseline", errors)
+    smoke_keys = check_doc(smoke, "smoke run", errors)
+
+    if baseline.get("smoke") is not False:
+        errors.append("baseline: must be a full-mode run (smoke: false)")
+    if baseline.get("allocs_per_round") != 0:
+        errors.append(
+            "baseline: allocs_per_round must be the measured value 0, got "
+            f"{baseline.get('allocs_per_round')!r}"
+        )
+    for key in sorted(baseline_keys - smoke_keys, key=str):
+        errors.append(f"baseline record not covered by the smoke run: {key}")
+
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    print(
+        f"ok: baseline ({len(baseline_keys)} records) schema-valid and fully "
+        f"covered by the smoke run ({len(smoke_keys)} records)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    sys.exit(main(sys.argv[1], sys.argv[2]))

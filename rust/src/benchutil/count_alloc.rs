@@ -1,0 +1,71 @@
+//! A counting global allocator for the allocation gates.
+//!
+//! [`CountingAlloc`] forwards every request to the system allocator while
+//! counting calls and bytes in relaxed atomics. It is compiled
+//! unconditionally (a few instructions, zero cost unless installed) so
+//! that *out-of-crate* binaries — the `alloc_gate` integration test and
+//! the `hotpath` bench, which are separate crates and cannot see
+//! `#[cfg(test)]` items — can install it:
+//!
+//! ```ignore
+//! use codedfedl::benchutil::CountingAlloc;
+//!
+//! #[global_allocator]
+//! static ALLOC: CountingAlloc = CountingAlloc;
+//!
+//! let a0 = CountingAlloc::allocations();
+//! run_warm_round();
+//! assert_eq!(CountingAlloc::allocations() - a0, 0);
+//! ```
+//!
+//! Counters are process-global: measurements are only meaningful when
+//! nothing else allocates concurrently (keep gated measurements in a
+//! binary with a single test, as `tests/alloc_gate.rs` does).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// System-allocator wrapper that counts allocation calls and bytes.
+/// Install with `#[global_allocator]`; read with the associated fns.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    /// Allocation calls (alloc / alloc_zeroed / realloc) since process
+    /// start. Frees are not counted: the gates care about *acquiring*
+    /// memory on the hot path.
+    pub fn allocations() -> u64 {
+        ALLOCS.load(Ordering::Relaxed)
+    }
+
+    /// Bytes requested by the counted calls since process start.
+    pub fn bytes() -> u64 {
+        BYTES.load(Ordering::Relaxed)
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}

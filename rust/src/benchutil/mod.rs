@@ -1,8 +1,13 @@
 //! Shared harness for the benches and examples: a small timing framework
 //! (criterion is unavailable offline — this provides warmup + median/MAD),
 //! a machine-readable [`BenchReport`] (the tracked `BENCH_hotpath.json`
-//! baseline future PRs diff against — see `rust/PERF.md`), one-call
-//! experiment runners, and ASCII renderings of the paper's figures.
+//! baseline future PRs diff against — see `rust/PERF.md`), the
+//! [`CountingAlloc`] allocation gate, one-call experiment runners, and
+//! ASCII renderings of the paper's figures.
+
+mod count_alloc;
+
+pub use count_alloc::CountingAlloc;
 
 use std::path::Path;
 use std::time::Instant;
@@ -114,6 +119,11 @@ pub struct BenchRecord {
 #[derive(Clone, Debug, Default)]
 pub struct BenchReport {
     pub records: Vec<BenchRecord>,
+    /// Heap allocations measured across one warm steady-state round's
+    /// compute path (see the hotpath bench). `None` when the run did not
+    /// measure it; the committed baseline must record `Some(0)` — the
+    /// allocation-free contract of `tests/alloc_gate.rs`.
+    pub allocs_per_round: Option<u64>,
 }
 
 impl BenchReport {
@@ -154,8 +164,12 @@ impl BenchReport {
         fn esc(s: &str) -> String {
             s.replace('\\', "\\\\").replace('"', "\\\"")
         }
-        let mut out = String::from("{\n  \"schema\": 1,\n");
+        let mut out = String::from("{\n  \"schema\": 2,\n");
         out.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
+        match self.allocs_per_round {
+            Some(n) => out.push_str(&format!("  \"allocs_per_round\": {n},\n")),
+            None => out.push_str("  \"allocs_per_round\": null,\n"),
+        }
         out.push_str("  \"records\": [\n");
         for (i, r) in self.records.iter().enumerate() {
             out.push_str(&format!(
@@ -279,12 +293,18 @@ mod tests {
         rep.record("runtime::grad", "client 200x512x10", 4, &stats);
         rep.record("full coded epoch", "tiny", 1, &stats);
         let json = rep.to_json();
+        assert!(json.contains("\"schema\": 2"), "{json}");
         assert!(json.contains("\"op\": \"runtime::grad\""), "{json}");
         assert!(json.contains("\"shape\": \"client 200x512x10\""), "{json}");
         assert!(json.contains("\"ns_per_iter\": 1234.5"), "{json}");
         assert!(json.contains("\"threads\": 4"), "{json}");
+        // unmeasured allocation gate serialises as null…
+        assert!(json.contains("\"allocs_per_round\": null"), "{json}");
         // exactly one trailing comma between the two records, none after the last
         assert_eq!(json.matches("},\n").count(), 1, "{json}");
+        // …and a measured one as the number
+        rep.allocs_per_round = Some(0);
+        assert!(rep.to_json().contains("\"allocs_per_round\": 0"), "{}", rep.to_json());
     }
 
     #[test]

@@ -63,8 +63,10 @@ pub struct ExperimentConfig {
     /// training math is unaffected.
     pub eval_every: usize,
     /// Native-backend worker threads (0 = available parallelism; capped
-    /// at 512 by the runtime). Results are identical for every value; 1
-    /// reproduces the serial executor.
+    /// at 512 by the runtime). Sizes the persistent worker pool spawned
+    /// once per session — workers park between rounds, nothing spawns
+    /// per call. Results are identical for every value; 1 reproduces the
+    /// serial executor.
     pub threads: usize,
     /// Max parity rows the server can process (u_max, AOT-compiled shape).
     pub u_max: usize,

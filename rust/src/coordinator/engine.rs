@@ -2,28 +2,38 @@
 //!
 //! [`run`] owns everything every scheme shares: the virtual MEC clock,
 //! per-round delay sampling, gradient execution (native or PJRT) against
-//! the round's zero-copy prepared θ, the learning-rate schedule, the model
-//! update of eq. (5), periodic evaluation (`eval_every`),
-//! [`crate::metrics::History`] recording and the [`RoundObserver`] event
-//! stream. Waiting/aggregation policy lives entirely behind the [`Scheme`]
-//! trait (`rust/src/schemes/`).
+//! the round's prepared θ, the learning-rate schedule, the model update of
+//! eq. (5), periodic evaluation (`eval_every`), [`crate::metrics::History`]
+//! recording and the [`RoundObserver`] event stream. Waiting/aggregation
+//! policy lives entirely behind the [`Scheme`] trait (`rust/src/schemes/`).
 //!
 //! Per round, every participating node's gradient is *really* executed
 //! through the runtime's grad executor — the round's independent client
-//! requests go through [`Runtime::grad_batch`], which fans them out across
-//! the native backend's worker threads; the delay model only decides
-//! arrivals and the simulated wall-clock cost of the round. Aggregation
-//! always folds the results in plan order, so the aggregate's bits are
-//! independent of the thread count.
+//! requests go through [`Runtime::grad_batch_into`], which fans them out
+//! across the native backend's persistent worker pool; the delay model
+//! only decides arrivals and the simulated wall-clock cost of the round.
+//! Aggregation always folds the results in plan order, so the aggregate's
+//! bits are independent of the thread count.
+//!
+//! ## Steady-state allocation discipline
+//!
+//! Everything the compute path touches is allocated once, before round 1,
+//! and reused for the rest of training: the aggregate, the packed θ panel,
+//! the per-request gradient slots, the sampled-delay buffers and the
+//! evaluation logits. A warm round therefore performs **zero** heap
+//! allocations on the native compute path (`tests/alloc_gate.rs` pins
+//! this with a counting allocator). The remaining per-round allocations
+//! are control-path only — the scheme's `RoundPlan` and the borrowed
+//! `GradJob` list, a handful of pointer-sized entries per round.
 
 use anyhow::{Context, Result};
 
 use super::setup::FedSetup;
 use crate::metrics::{accuracy, History, Point};
 use crate::rng::Rng;
-use crate::runtime::{GradJob, Runtime};
+use crate::runtime::{GradJob, PreparedTheta, Runtime};
 use crate::schemes::{RoundCtx, RoundExec, Scheme};
-use crate::sim::RoundSampler;
+use crate::sim::{RoundDelays, RoundSampler};
 use crate::tensor::Mat;
 
 /// Result of one scheme's run.
@@ -120,32 +130,39 @@ pub fn run(
         prep.client_loads.len()
     );
 
-    let sampler = RoundSampler::new(
-        setup.clients.clone(),
-        setup.server,
-        prep.client_loads,
-        prep.server_load,
-    );
+    // Borrows the fleet from the setup — no per-run clone of every
+    // client's parameters.
+    let sampler =
+        RoundSampler::new(&setup.clients, setup.server, prep.client_loads, prep.server_load);
 
     let mut theta = Mat::zeros(q, c);
     let mut history = History::new(scheme.label());
     let mut clock = prep.clock_offset;
+
+    // --- round-persistent buffers (steady-state rounds reuse, never
+    //     allocate — see the module docs) ---
+    let mut agg = Mat::zeros(q, c);
+    let mut theta_panel: Vec<f32> = Vec::new();
+    let mut grad_outs: Vec<Mat> = Vec::new();
+    let mut delays = RoundDelays { client_t: Vec::with_capacity(n), server_t: 0.0 };
+    let mut eval_logits = Mat::zeros(setup.test_xhat.rows(), c);
+    let mut probe_logits = Mat::zeros(cfg.local_batch, c);
 
     let total_iters = cfg.total_iters();
     for iter in 0..total_iters {
         let epoch = iter / cfg.steps_per_epoch;
         let step = iter % cfg.steps_per_epoch;
         let lr = setup.effective_lr(epoch) as f32;
-        let delays = sampler.sample(&mut delay_rng);
+        sampler.sample_into(&mut delay_rng, &mut delays);
         let ctx = RoundCtx { iter, epoch, step, setup };
 
         // --- the scheme's waiting policy decides who participates ---
-        let mut agg = Mat::zeros(q, c);
+        agg.as_mut_slice().fill(0.0);
         let (arrivals, cost) = {
-            // θ is borrowed zero-copy by every grad call this round
-            // (EXPERIMENTS.md §Perf); the scope bounds the borrow so the
+            // θ is packed once and borrowed by every grad call this round
+            // (rust/PERF.md §Design); the scope bounds the borrow so the
             // update below can mutate θ again.
-            let theta_prep = rt.prepare_theta(&theta)?;
+            let theta_prep = rt.prepare_theta_into(&theta, &mut theta_panel)?;
             let plan = scheme.plan_round(&ctx, &delays)?;
             for req in &plan.requests {
                 anyhow::ensure!(
@@ -156,7 +173,8 @@ pub fn run(
                 );
             }
             // The round's independent client gradients run as one batch
-            // (parallel across the native worker threads)…
+            // (parallel across the persistent worker pool) into the
+            // engine's reusable output slots…
             let jobs: Vec<GradJob> = plan
                 .requests
                 .iter()
@@ -165,12 +183,16 @@ pub fn run(
                     GradJob { xhat: &cd.xhat[step], y: &cd.y[step], mask: &req.mask }
                 })
                 .collect();
-            let grads = rt.grad_batch(&jobs, &theta_prep).with_context(|| {
-                format!("executing {} client gradients (step {step})", jobs.len())
-            })?;
+            while grad_outs.len() < jobs.len() {
+                grad_outs.push(Mat::zeros(q, c));
+            }
+            rt.grad_batch_into(&jobs, &theta_prep, &mut grad_outs[..jobs.len()])
+                .with_context(|| {
+                    format!("executing {} client gradients (step {step})", jobs.len())
+                })?;
             // …and fold in plan order, fixing the aggregate's bits
             // independently of the thread count.
-            for (req, g) in plan.requests.iter().zip(&grads) {
+            for (req, g) in plan.requests.iter().zip(&grad_outs) {
                 agg.axpy(req.scale, g);
             }
             let exec = RoundExec::new(rt, &theta_prep);
@@ -196,9 +218,10 @@ pub fn run(
         if !evaluate {
             continue;
         }
-        let logits = rt.predict(&setup.test_xhat, &theta)?;
-        let acc = accuracy(&logits, &setup.test_labels);
-        let loss = eval_train_loss(rt, setup, &theta)?;
+        let theta_prep = rt.prepare_theta_into(&theta, &mut theta_panel)?;
+        rt.predict_into(&setup.test_xhat, &theta_prep, &mut eval_logits)?;
+        let acc = accuracy(&eval_logits, &setup.test_labels);
+        let loss = eval_train_loss(rt, setup, &theta_prep, &theta, &mut probe_logits)?;
         history.push(Point { iter: iter + 1, sim_time: clock, accuracy: acc, train_loss: loss });
         let event = RoundEvent {
             iter: iter + 1,
@@ -233,12 +256,19 @@ const LOSS_PROBE_CLIENTS: usize = 4;
 
 /// Training objective `1/(2m_probe) Σ ||X̂θ − Y||² + (λ/2)||θ||²` over the
 /// first mini-batch of a fixed client sample (cheap proxy, logged for the
-/// loss curve required by the end-to-end driver).
-fn eval_train_loss(rt: &Runtime, setup: &FedSetup, theta: &Mat) -> Result<f64> {
+/// loss curve required by the end-to-end driver). `logits` is the
+/// engine's reusable probe buffer (`[local_batch, c]`).
+fn eval_train_loss(
+    rt: &Runtime,
+    setup: &FedSetup,
+    prepared: &PreparedTheta,
+    theta: &Mat,
+    logits: &mut Mat,
+) -> Result<f64> {
     let mut sum = 0.0f64;
     let mut rows = 0usize;
     for cd in setup.client_data.iter().take(LOSS_PROBE_CLIENTS) {
-        let logits = rt.predict(&cd.xhat[0], theta)?;
+        rt.predict_into(&cd.xhat[0], prepared, logits)?;
         for r in 0..logits.rows() {
             let lrow = logits.row(r);
             let yrow = cd.y[0].row(r);

@@ -60,13 +60,19 @@
 //!
 //! ## Performance
 //!
-//! The native backend is the measured hot path: see `rust/PERF.md` for
-//! the kernel/threading design, the tracked `BENCH_hotpath.json` baseline
-//! (`cargo bench --bench hotpath`), and how to compare runs across PRs.
-//! Thread count comes from `[runtime] threads` / `--threads` /
-//! [`ExperimentBuilder::threads`] (0 = all cores) and never changes
-//! results; `[training] eval_every` thins the per-round evaluation probe
-//! without touching the training math.
+//! The native backend is the measured hot path: kernels dispatch onto a
+//! **persistent worker pool** ([`runtime::pool`], spawned once per
+//! [`Session`], workers parked between jobs), θ is packed once per round
+//! into a tile-aligned panel shared by every kernel call, and the engine
+//! reuses all per-round buffers — a warm training round performs zero
+//! heap allocations on the compute path (`tests/alloc_gate.rs`). See
+//! `rust/PERF.md` for the kernel/threading/allocation design, the
+//! tracked `BENCH_hotpath.json` baseline (`cargo bench --bench hotpath`),
+//! and how to compare runs across PRs. Thread count comes from
+//! `[runtime] threads` / `--threads` / [`ExperimentBuilder::threads`]
+//! (0 = all cores) and never changes results; `[training] eval_every`
+//! thins the per-round evaluation probe without touching the training
+//! math.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index,
 //! `EXPERIMENTS.md` for paper-vs-measured results, and

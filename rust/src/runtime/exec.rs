@@ -5,9 +5,9 @@
 //! * **native** (default) — the blocked, multi-threaded pure-Rust kernels
 //!   of [`super::native::NativeExec`], matching the jnp oracles in
 //!   `python/compile/kernels/ref.py`. No artifacts, no external deps; the
-//!   thread count comes from the experiment config (`[runtime] threads`,
-//!   `0` = available parallelism) and never changes results (see
-//!   `rust/PERF.md`).
+//!   worker pool is spawned once at construction (`[runtime] threads`,
+//!   `0` = available parallelism) and the count never changes results
+//!   (see `rust/PERF.md`).
 //! * **pjrt** (`--features pjrt`) — the AOT HLO-text artifacts compiled
 //!   through the PJRT C API (`xla` bindings required), padding each
 //!   workload to the compiled shape (exactly — zero rows contribute zero)
@@ -15,16 +15,31 @@
 //!
 //! The shape contract (`RuntimeShapes`, padding limits) is enforced on
 //! both paths so natively-developed code never breaks under PJRT.
+//!
+//! ## Allocation discipline
+//!
+//! Every kernel has an allocating form (`grad`, `predict`, `grad_batch`)
+//! for tests and one-off calls, and an `_into` form (`grad_into`,
+//! `predict_into`, `grad_batch_into`) that writes into caller-owned
+//! buffers. Together with [`Runtime::prepare_theta_into`] (θ packed into a
+//! caller-owned panel) the `_into` forms make a warm training round
+//! allocate **zero** bytes on the native compute path — the contract
+//! `tests/alloc_gate.rs` enforces with a counting global allocator. (The
+//! PJRT path allocates per call for literal conversion; the contract is
+//! native-only.)
 
+use std::borrow::Cow;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
 
 use anyhow::Result;
 #[cfg(feature = "pjrt")]
 use anyhow::Context;
 
-use super::native::{run_lengths, NativeExec};
-use crate::tensor::Mat;
+use super::native::NativeExec;
+use super::pool::WorkerPool;
+use crate::tensor::{pack_tile_panel, tile_padded_cols, Mat};
 
 #[cfg(feature = "pjrt")]
 use super::manifest::Manifest;
@@ -45,13 +60,38 @@ pub struct RuntimeShapes {
 
 /// A θ matrix pre-converted for the backend (see
 /// [`Runtime::prepare_theta`]): the coordinator issues ~n+1 grad calls
-/// against the same θ each round, so the conversion is hoisted off the
-/// per-call path. The native representation is a zero-copy borrow (no
-/// per-round clone); only the PJRT path materialises a device literal.
+/// plus predict against the same θ each round, so the conversion is
+/// hoisted off the per-call path. The native representation is a borrow
+/// of θ plus a tile-aligned packed panel (`[q, c_pad]`, zero tail
+/// columns) the register-tiled kernels read — built once per round,
+/// shared by every call, and allocation-free when the caller supplies the
+/// panel buffer ([`Runtime::prepare_theta_into`]). Only the PJRT path
+/// materialises a device literal.
 pub struct PreparedTheta<'a> {
     mat: &'a Mat,
+    /// The packed panel; borrows θ itself when `c` is tile-aligned.
+    packed: Cow<'a, [f32]>,
+    c_pad: usize,
     #[cfg(feature = "pjrt")]
     lit: Option<xla::Literal>,
+}
+
+impl PreparedTheta<'_> {
+    /// The underlying θ (`[q, c]`).
+    pub fn theta(&self) -> &Mat {
+        self.mat
+    }
+
+    /// The tile-aligned packed panel (`[q, padded_cols]`). Empty on the
+    /// PJRT backend, which reads θ through its device literal instead.
+    pub fn panel(&self) -> &[f32] {
+        &self.packed
+    }
+
+    /// Panel columns: `c` rounded up to the matmul register tile.
+    pub fn padded_cols(&self) -> usize {
+        self.c_pad
+    }
 }
 
 /// One gradient request of a round, executed by [`Runtime::grad_batch`].
@@ -125,6 +165,9 @@ pub struct Runtime {
     threads: usize,
     /// Running count of executor invocations (telemetry for §Perf).
     exec_count: AtomicU64,
+    /// Residual-panel scratch for single `grad_into` calls (grows once,
+    /// then warm; batched grads use the pool workers' arenas instead).
+    r_scratch: Mutex<Vec<f32>>,
 }
 
 impl Runtime {
@@ -163,8 +206,9 @@ impl Runtime {
     }
 
     /// The pure-Rust executor with an explicit worker-thread count
-    /// (`0` = available parallelism). Results are identical for every
-    /// count; `threads = 1` reproduces the serial executor bit-for-bit.
+    /// (`0` = available parallelism). The worker pool is spawned here,
+    /// once. Results are identical for every count; `threads = 1`
+    /// reproduces the serial executor bit-for-bit.
     pub fn native_with_threads(shapes: RuntimeShapes, threads: usize) -> Runtime {
         let exec = NativeExec::new(threads);
         Runtime {
@@ -172,6 +216,7 @@ impl Runtime {
             threads: exec.threads(),
             backend: Backend::Native(exec),
             exec_count: AtomicU64::new(0),
+            r_scratch: Mutex::new(Vec::new()),
         }
     }
 
@@ -197,6 +242,7 @@ impl Runtime {
             threads: 1,
             backend: Backend::Pjrt(Box::new(exec)),
             exec_count: AtomicU64::new(0),
+            r_scratch: Mutex::new(Vec::new()),
         })
     }
 
@@ -216,6 +262,16 @@ impl Runtime {
     /// Resolved worker-thread count (≥ 1; always 1 on the PJRT backend).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The native backend's persistent worker pool (`None` on PJRT).
+    /// Exposed for the worker-reuse tests and pool-level telemetry.
+    pub fn worker_pool(&self) -> Option<&WorkerPool> {
+        match &self.backend {
+            Backend::Native(nb) => Some(nb.pool()),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => None,
+        }
     }
 
     /// Total executor invocations so far (telemetry for §Perf).
@@ -267,23 +323,88 @@ impl Runtime {
         }
     }
 
-    /// Pre-convert θ once per round (see [`PreparedTheta`]). On the native
-    /// path this is a zero-copy borrow.
+    /// Pre-convert θ once per round (see [`PreparedTheta`]), allocating
+    /// the packed panel when `c` is not tile-aligned. Hot loops should
+    /// prefer [`Runtime::prepare_theta_into`], which reuses a caller
+    /// buffer instead.
     pub fn prepare_theta<'a>(&self, theta: &'a Mat) -> Result<PreparedTheta<'a>> {
-        let RuntimeShapes { q, c, .. } = self.shapes;
-        anyhow::ensure!(theta.rows() == q && theta.cols() == c, "theta shape");
+        self.prepare_theta_impl(theta, None)
+    }
+
+    /// [`Runtime::prepare_theta`] packing into a caller-owned panel buffer
+    /// (capacity reused across rounds — zero allocation once warm).
+    pub fn prepare_theta_into<'a>(
+        &self,
+        theta: &'a Mat,
+        panel: &'a mut Vec<f32>,
+    ) -> Result<PreparedTheta<'a>> {
+        self.prepare_theta_impl(theta, Some(panel))
+    }
+
+    /// The one copy of the panel policy behind both `prepare_theta` entry
+    /// points: skip on PJRT, borrow θ when tile-aligned, otherwise pack —
+    /// into `buf` when the caller supplied one, into a fresh allocation
+    /// otherwise.
+    fn prepare_theta_impl<'a>(
+        &self,
+        theta: &'a Mat,
+        buf: Option<&'a mut Vec<f32>>,
+    ) -> Result<PreparedTheta<'a>> {
+        let c = self.check_theta(theta)?;
+        let (packed, c_pad) = if !self.packs_panels() {
+            // PJRT reads θ through its device literal; no panel needed.
+            (Cow::Borrowed(&[] as &[f32]), c)
+        } else if tile_padded_cols(c) == c {
+            (Cow::Borrowed(theta.as_slice()), c)
+        } else {
+            match buf {
+                Some(buf) => {
+                    let c_pad = pack_tile_panel(theta, buf);
+                    (Cow::Borrowed(&buf[..]), c_pad)
+                }
+                None => {
+                    let mut panel = Vec::new();
+                    let c_pad = pack_tile_panel(theta, &mut panel);
+                    (Cow::Owned(panel), c_pad)
+                }
+            }
+        };
         Ok(PreparedTheta {
             mat: theta,
+            packed,
+            c_pad,
             #[cfg(feature = "pjrt")]
-            lit: match &self.backend {
-                Backend::Pjrt(_) => Some(mat_to_literal(theta)?),
-                _ => None,
-            },
+            lit: self.theta_literal(theta)?,
         })
     }
 
-    /// Shape checks shared by [`Runtime::grad_prepared`] and
-    /// [`Runtime::grad_batch`].
+    /// Whether this backend reads θ through the packed tile panel (the
+    /// native kernels do; PJRT reads the device literal instead, so
+    /// packing would be dead per-round work there).
+    fn packs_panels(&self) -> bool {
+        match &self.backend {
+            Backend::Native(_) => true,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => false,
+        }
+    }
+
+    /// Shared θ shape check; returns `c`.
+    fn check_theta(&self, theta: &Mat) -> Result<usize> {
+        let RuntimeShapes { q, c, .. } = self.shapes;
+        anyhow::ensure!(theta.rows() == q && theta.cols() == c, "theta shape");
+        Ok(c)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn theta_literal(&self, theta: &Mat) -> Result<Option<xla::Literal>> {
+        Ok(match &self.backend {
+            Backend::Pjrt(_) => Some(mat_to_literal(theta)?),
+            _ => None,
+        })
+    }
+
+    /// Shape checks shared by the grad entry points.
     fn check_grad_shapes(&self, xhat: &Mat, y: &Mat, mask: &[f32]) -> Result<()> {
         let RuntimeShapes { q, c, l_client, u_max, .. } = self.shapes;
         anyhow::ensure!(xhat.cols() == q && y.cols() == c, "grad: payload shape");
@@ -312,13 +433,41 @@ impl Runtime {
         theta: &PreparedTheta,
         mask: &[f32],
     ) -> Result<Mat> {
+        let RuntimeShapes { q, c, .. } = self.shapes;
+        let mut out = Mat::zeros(q, c);
+        self.grad_into(xhat, y, theta, mask, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Runtime::grad_prepared`] into a caller-owned `out` (`[q, c]`,
+    /// overwritten) — the allocation-free form the engine's round loop and
+    /// schemes' held buffers use.
+    pub fn grad_into(
+        &self,
+        xhat: &Mat,
+        y: &Mat,
+        theta: &PreparedTheta,
+        mask: &[f32],
+        out: &mut Mat,
+    ) -> Result<()> {
         self.check_grad_shapes(xhat, y, mask)?;
+        let RuntimeShapes { q, c, .. } = self.shapes;
+        anyhow::ensure!(
+            out.rows() == q && out.cols() == c,
+            "grad: out must be [{q}, {c}], got [{}, {}]",
+            out.rows(),
+            out.cols()
+        );
         self.bump();
         match &self.backend {
-            Backend::Native(nb) => Ok(nb.grad(xhat, y, theta.mat, mask)),
+            Backend::Native(nb) => {
+                let mut r = self.r_scratch.lock().unwrap_or_else(PoisonError::into_inner);
+                nb.grad_into(xhat, y, theta.panel(), theta.padded_cols(), mask, &mut r, out);
+                Ok(())
+            }
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(p) => {
-                let RuntimeShapes { q, c, l_client, u_max, .. } = self.shapes;
+                let RuntimeShapes { l_client, u_max, .. } = self.shapes;
                 let n = xhat.rows();
                 let (l, exe) = if n <= l_client {
                     (l_client, &p.grad_client)
@@ -333,68 +482,69 @@ impl Runtime {
                     theta.lit.as_ref().expect("pjrt theta literal").clone(),
                     vec_to_literal(&mask_p),
                 ])?;
-                literal_to_mat(&lit, q, c)
+                let g = literal_to_mat(&lit, q, c)?;
+                out.as_mut_slice().copy_from_slice(g.as_slice());
+                Ok(())
             }
         }
     }
 
-    /// Execute a round's independent gradient requests, in input order.
-    ///
-    /// On the native backend the jobs are distributed across the runtime's
-    /// worker threads (each job runs a single-threaded kernel when there
-    /// are at least as many jobs as workers, and shares leftover workers
-    /// otherwise). Outputs come back in input order, so the caller's
-    /// aggregation order — and therefore the aggregate's bits — do not
-    /// depend on the thread count. The PJRT backend executes serially.
+    /// Execute a round's independent gradient requests, in input order
+    /// (allocating wrapper over [`Runtime::grad_batch_into`]).
     pub fn grad_batch(&self, jobs: &[GradJob<'_>], theta: &PreparedTheta) -> Result<Vec<Mat>> {
+        let RuntimeShapes { q, c, .. } = self.shapes;
+        let mut outs: Vec<Mat> = jobs.iter().map(|_| Mat::zeros(q, c)).collect();
+        self.grad_batch_into(jobs, theta, &mut outs)?;
+        Ok(outs)
+    }
+
+    /// Execute a round's independent gradient requests into caller-owned
+    /// output slots (`outs[i] = grad(jobs[i])`, each `[q, c]`,
+    /// overwritten), in input order.
+    ///
+    /// On the native backend the jobs are partitioned across the
+    /// persistent worker pool (a single job instead runs the pool-parallel
+    /// kernel). Outputs land in input order, so the caller's aggregation
+    /// order — and therefore the aggregate's bits — do not depend on the
+    /// thread count. The PJRT backend executes serially.
+    pub fn grad_batch_into(
+        &self,
+        jobs: &[GradJob<'_>],
+        theta: &PreparedTheta,
+        outs: &mut [Mat],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            jobs.len() == outs.len(),
+            "grad batch: {} jobs but {} output slots",
+            jobs.len(),
+            outs.len()
+        );
+        let RuntimeShapes { q, c, .. } = self.shapes;
         for (ji, job) in jobs.iter().enumerate() {
             self.check_grad_shapes(job.xhat, job.y, job.mask)
                 .map_err(|e| e.context(format!("grad request {ji} of {}", jobs.len())))?;
         }
+        for (ji, out) in outs.iter().enumerate() {
+            anyhow::ensure!(
+                out.rows() == q && out.cols() == c,
+                "grad batch: output slot {ji} must be [{q}, {c}]"
+            );
+        }
         match &self.backend {
             Backend::Native(nb) => {
                 self.exec_count.fetch_add(jobs.len() as u64, Ordering::Relaxed);
-                let t = self.threads.min(jobs.len()).max(1);
-                if t == 1 {
-                    // Single worker (or single job): let the kernel itself
-                    // use the full thread budget.
-                    return Ok(jobs
-                        .iter()
-                        .map(|j| nb.grad(j.xhat, j.y, theta.mat, j.mask))
-                        .collect());
-                }
-                // Across-job parallelism (balanced runs — lengths differ by
-                // at most one job). Each per-job kernel gets floor(threads/t)
-                // workers — with t = jobs < threads and threads % t != 0 the
-                // remainder idles for the batch; an uneven split would use it
-                // but make per-job thread counts positional for no measured
-                // win.
-                let per_job = NativeExec::new((self.threads / t).max(1));
-                let mut out: Vec<Option<Mat>> = jobs.iter().map(|_| None).collect();
-                let theta_mat = theta.mat;
-                std::thread::scope(|s| {
-                    let mut jrest = jobs;
-                    let mut orest = out.as_mut_slice();
-                    for take in run_lengths(jobs.len(), t) {
-                        let (jchunk, jtail) = jrest.split_at(take);
-                        jrest = jtail;
-                        let (ochunk, otail) = std::mem::take(&mut orest).split_at_mut(take);
-                        orest = otail;
-                        let per_job = &per_job;
-                        s.spawn(move || {
-                            for (job, slot) in jchunk.iter().zip(ochunk.iter_mut()) {
-                                *slot = Some(per_job.grad(job.xhat, job.y, theta_mat, job.mask));
-                            }
-                        });
-                    }
-                });
-                Ok(out.into_iter().map(|m| m.expect("worker filled its slot")).collect())
+                let mut r = self.r_scratch.lock().unwrap_or_else(PoisonError::into_inner);
+                nb.grad_batch_into(jobs, theta.panel(), theta.padded_cols(), &mut r, outs);
+                Ok(())
             }
             #[cfg(feature = "pjrt")]
-            Backend::Pjrt(_) => jobs
-                .iter()
-                .map(|j| self.grad_prepared(j.xhat, j.y, theta, j.mask))
-                .collect(),
+            Backend::Pjrt(_) => {
+                for (job, out) in jobs.iter().zip(outs.iter_mut()) {
+                    let g = self.grad_prepared(job.xhat, job.y, theta, job.mask)?;
+                    out.as_mut_slice().copy_from_slice(g.as_slice());
+                }
+                Ok(())
+            }
         }
     }
 
@@ -429,23 +579,38 @@ impl Runtime {
         }
     }
 
-    /// Logits `X̂ θ` for `n` rows (chunked + padded like [`Runtime::embed`]
-    /// on the PJRT path).
+    /// Logits `X̂ θ` for `n` rows (allocating wrapper over
+    /// [`Runtime::predict_into`]).
     pub fn predict(&self, xhat: &Mat, theta: &Mat) -> Result<Mat> {
+        let prepared = self.prepare_theta(theta)?;
+        let mut out = Mat::zeros(xhat.rows(), self.shapes.c);
+        self.predict_into(xhat, &prepared, &mut out)?;
+        Ok(out)
+    }
+
+    /// Logits `X̂ θ` into a caller-owned `out` (`[n, c]`, overwritten) —
+    /// the allocation-free form the engine's evaluation probes hold
+    /// buffers for. Chunked + padded like [`Runtime::embed`] on the PJRT
+    /// path.
+    pub fn predict_into(&self, xhat: &Mat, theta: &PreparedTheta, out: &mut Mat) -> Result<()> {
         let RuntimeShapes { q, c, .. } = self.shapes;
         anyhow::ensure!(xhat.cols() == q, "predict: xhat shape");
-        anyhow::ensure!(theta.rows() == q && theta.cols() == c, "predict: theta shape");
+        anyhow::ensure!(
+            out.rows() == xhat.rows() && out.cols() == c,
+            "predict: out must be [{}, {c}]",
+            xhat.rows()
+        );
         match &self.backend {
             Backend::Native(nb) => {
                 self.bump();
-                Ok(nb.predict(xhat, theta))
+                nb.predict_into(xhat, theta.panel(), theta.padded_cols(), out);
+                Ok(())
             }
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(p) => {
                 let b_embed = self.shapes.b_embed;
-                let theta_l = mat_to_literal(theta)?;
+                let theta_l = theta.lit.as_ref().expect("pjrt theta literal");
                 let n = xhat.rows();
-                let mut out = Mat::zeros(n, c);
                 let mut start = 0;
                 while start < n {
                     let take = (n - start).min(b_embed);
@@ -457,7 +622,7 @@ impl Runtime {
                         .copy_from_slice(&res.as_slice()[..take * c]);
                     start += take;
                 }
-                Ok(out)
+                Ok(())
             }
         }
     }

@@ -7,11 +7,15 @@
 //!   (`runtime::native`), numerically faithful to the jnp oracles in
 //!   `python/compile/kernels/ref.py` and built for throughput: blocked
 //!   register-tiled matmuls, fused residual/mask and weight-product
-//!   passes, and output-row parallelism across a scoped thread pool whose
-//!   size comes from the experiment config (results are bit-identical for
-//!   every thread count — see `rust/PERF.md`). A round's independent
-//!   client gradients batch through [`Runtime::grad_batch`]. Builds and
-//!   runs with zero external dependencies.
+//!   passes, and output-row parallelism across a *persistent* worker pool
+//!   ([`pool::WorkerPool`], spawned once per runtime and parked between
+//!   jobs) whose size comes from the experiment config (results are
+//!   bit-identical for every thread count — see `rust/PERF.md`). A
+//!   round's independent client gradients batch through
+//!   [`Runtime::grad_batch`] / [`Runtime::grad_batch_into`], and the
+//!   `_into` kernel forms keep warm rounds free of compute-path
+//!   allocations (`tests/alloc_gate.rs`). Builds and runs with zero
+//!   external dependencies.
 //! * **pjrt** (`--features pjrt`) — loads the AOT HLO-text artifacts and
 //!   executes them through the PJRT C API. Wiring (see DESIGN.md §2):
 //!   `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
@@ -30,6 +34,7 @@
 mod exec;
 mod manifest;
 pub mod native;
+pub mod pool;
 
 pub use exec::{GradJob, PreparedTheta, Runtime, RuntimeShapes};
 pub use manifest::{Manifest, ManifestEntry};

@@ -11,53 +11,129 @@
 //!   in [`crate::tensor`] (`matmul_ref` remains the test oracle);
 //! * `grad` fuses the residual-mask pass into the prediction sweep and
 //!   skips fully-masked rows before any arithmetic happens;
+//! * `grad` and `predict` read θ through a tile-aligned packed panel
+//!   (built once per round by `Runtime::prepare_theta*` and shared by all
+//!   n+1 grad calls plus predict), so the narrow class dimension runs as
+//!   pure register tiles instead of the remainder path's per-`k` output
+//!   row traffic;
 //! * `encode` hoists the duplicated `G[u,l]·w[l]` weight products into one
-//!   per-row panel shared by the X̌ and Y̌ accumulations;
+//!   per-row panel held in the worker's persistent scratch arena;
 //! * `embed` computes the `x·Ω` panel and the `cos` transform in one fused
 //!   pass per row block;
-//! * all kernels run their *output rows* across a scoped thread pool
-//!   ([`NativeExec::new`] picks the count; `0` = available parallelism).
+//! * all kernels run their *output rows* across the persistent
+//!   [`WorkerPool`] the executor owns — workers are spawned **once** (at
+//!   `Session`/`Runtime` construction) and parked between jobs, so a
+//!   parallel kernel call costs a targeted `unpark` per participating
+//!   worker, not a `thread::scope` spawn/join (tens of microseconds,
+//!   which used to swamp the per-client shapes of CodedFedL);
+//! * the `*_into` variants write into caller-owned buffers, which is what
+//!   lets `coordinator::engine` run steady-state rounds with **zero heap
+//!   allocation** on the compute path (gated by `tests/alloc_gate.rs`).
 //!
 //! Determinism: threads partition disjoint output row blocks, and each
 //! element accumulates its reduction terms in the same ascending order the
 //! serial reference uses, so **every thread count produces bit-identical
 //! results** — `threads = 1` and `threads = 64` match the pre-0.3 serial
-//! executor exactly. This is what keeps training histories reproducible
-//! across machines with different core counts (see `rust/PERF.md`).
+//! executor exactly, and the pool path matches the pre-0.4 scoped-spawn
+//! path bit-for-bit (same partitioning, same per-element order). This is
+//! what keeps training histories reproducible across machines with
+//! different core counts (see `rust/PERF.md`).
 //!
 //! Shapes are unconstrained here (no compiled-shape padding needed), but
 //! the [`super::Runtime`] wrappers still enforce the artifact shape
 //! contract so code exercised natively keeps working on the PJRT path.
 
-use crate::tensor::{matmul_rows_into, Mat};
+use std::fmt;
+use std::sync::Arc;
+
+use super::exec::GradJob;
+use super::pool::WorkerPool;
+use crate::tensor::{matmul_rows_into, pack_tile_panel, tile_padded_cols, Mat};
 
 /// Work (in multiply-adds) below which a kernel stays single-threaded —
-/// spawning scoped threads costs tens of microseconds, which swamps tiny
+/// even a parked-worker wakeup costs a few microseconds, which swamps tiny
 /// kernels. Thresholding is safe because results are thread-count
 /// invariant (see module docs).
 const PAR_MIN_FLOPS: usize = 1 << 16;
 
-/// Hard cap on worker threads. Every parallel kernel spawn is a real OS
-/// thread, so a config typo like `threads = 100000` would otherwise turn
-/// each call into a spawn storm (and `thread::scope` aborts if the OS
+/// Hard cap on worker threads. The pool spawns its workers exactly once,
+/// but a config typo like `threads = 100000` would still try to park a
+/// hundred thousand OS threads (and `WorkerPool::new` panics if the OS
 /// refuses a spawn). Results are thread-count invariant, so capping is
 /// always safe.
 const MAX_THREADS: usize = 512;
 
 /// Balanced contiguous partition: `n` items into `t` runs whose lengths
 /// differ by at most one (the first `n % t` runs take the extra item).
-/// Shared by every parallel driver so no worker idles while another runs
-/// a double-length chunk (the failure mode of `ceil`-sized chunking when
-/// `n` is just above `t`).
-pub(crate) fn run_lengths(n: usize, t: usize) -> impl Iterator<Item = usize> {
+/// The iterator form survives only as the test oracle for [`run_bounds`]
+/// (its closed form), which every parallel driver now uses — no worker
+/// idles while another runs a double-length chunk (the failure mode of
+/// `ceil`-sized chunking when `n` is just above `t`).
+#[cfg(test)]
+fn run_lengths(n: usize, t: usize) -> impl Iterator<Item = usize> {
     let (base, extra) = (n / t, n % t);
     (0..t).map(move |bi| base + usize::from(bi < extra))
 }
 
-/// The native executor: stateless kernels plus a configured thread count.
-#[derive(Clone, Copy, Debug)]
+/// `(start, len)` of run `part` in the balanced contiguous partition of
+/// `n` items into `t` runs (lengths differ by at most one; the first
+/// `n % t` runs take the extra item). Pool tasks use this closed form to
+/// locate their block without allocating a chunk list.
+pub(crate) fn run_bounds(n: usize, t: usize, part: usize) -> (usize, usize) {
+    let (base, extra) = (n / t, n % t);
+    (part * base + part.min(extra), base + usize::from(part < extra))
+}
+
+/// Raw view of a caller-owned `&mut [f32]` that pool tasks carve into
+/// disjoint blocks (a shared `Fn` task cannot capture `&mut` directly).
+#[derive(Clone, Copy)]
+struct OutPtr {
+    ptr: *mut f32,
+    len: usize,
+}
+
+// Safety: tasks only materialise disjoint subslices (checked by the
+// callers' balanced-partition arithmetic), and the pool's latch keeps the
+// underlying borrow alive until every task finished.
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+impl OutPtr {
+    fn new(s: &mut [f32]) -> OutPtr {
+        OutPtr { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// Reborrow `[off, off + n)`.
+    ///
+    /// Safety: concurrent callers' ranges must be disjoint; bounds are
+    /// checked for real (this guards raw-pointer writes, so it must not
+    /// compile out in release builds).
+    unsafe fn slice_mut<'a>(self, off: usize, n: usize) -> &'a mut [f32] {
+        assert!(off + n <= self.len, "OutPtr: block [{off}, {}) out of bounds", off + n);
+        std::slice::from_raw_parts_mut(self.ptr.add(off), n)
+    }
+}
+
+/// Like [`OutPtr`] for a `&mut [Mat]` of per-job output slots.
+#[derive(Clone, Copy)]
+struct SlotPtr(*mut Mat);
+
+// Safety: each slot index is written by exactly one pool task (jobs are
+// partitioned into disjoint index ranges) within the pool latch's scope.
+unsafe impl Send for SlotPtr {}
+unsafe impl Sync for SlotPtr {}
+
+/// The native executor: stateless kernels plus the persistent worker pool
+/// they dispatch onto. Cloning shares the pool.
+#[derive(Clone)]
 pub struct NativeExec {
-    threads: usize,
+    pool: Arc<WorkerPool>,
+}
+
+impl fmt::Debug for NativeExec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "NativeExec[{} threads]", self.threads())
+    }
 }
 
 impl Default for NativeExec {
@@ -70,25 +146,27 @@ impl Default for NativeExec {
 impl NativeExec {
     /// Executor with `threads` worker threads; `0` resolves to the
     /// machine's available parallelism. Capped at 512 (`MAX_THREADS`) —
-    /// see the constant's docs.
+    /// see the constant's docs. The pool (caller + `threads − 1` parked
+    /// workers) is spawned here, once, and lives as long as the executor.
     pub fn new(threads: usize) -> Self {
-        let threads = if threads == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            threads
-        };
-        NativeExec { threads: threads.min(MAX_THREADS) }
+        NativeExec { pool: Arc::new(WorkerPool::new(resolve_threads(threads))) }
     }
 
-    /// Single-threaded executor (used per-job when a round's gradient
-    /// requests are already being parallelised across jobs).
+    /// Single-threaded executor (no workers spawned; kernels run inline on
+    /// the caller with the caller's scratch arena).
     pub fn single() -> Self {
-        NativeExec { threads: 1 }
+        NativeExec { pool: Arc::new(WorkerPool::new(1)) }
+    }
+
+    /// The persistent pool kernels dispatch onto (exposed for the worker
+    /// reuse tests and for callers that want to co-schedule work).
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
     }
 
     /// The resolved worker-thread count (≥ 1).
     pub fn threads(&self) -> usize {
-        self.threads
+        self.pool.threads()
     }
 
     /// Thread count to use for a kernel costing `flops` multiply-adds.
@@ -96,14 +174,15 @@ impl NativeExec {
         if flops < PAR_MIN_FLOPS {
             1
         } else {
-            self.threads
+            self.threads()
         }
     }
 
     /// RFF embedding (paper eq. 18): `sqrt(2/q) · cos(x Ω + δ)`.
     ///
     /// Fused per row block: the `x·Ω` panel is produced by the blocked
-    /// matmul and transformed in place while still cache-hot.
+    /// matmul directly in the output buffer and transformed in place while
+    /// still cache-hot (no separate row panel exists to allocate).
     pub fn embed(&self, x: &Mat, omega: &Mat, delta: &[f32]) -> Mat {
         let (n, d) = (x.rows(), x.cols());
         let q = omega.cols();
@@ -118,11 +197,12 @@ impl NativeExec {
         let xs = x.as_slice();
         let os = omega.as_slice();
         par_row_blocks(
+            &self.pool,
             self.threads_for(n * d.max(1) * q),
             n,
             q,
             out.as_mut_slice(),
-            |r0, block| {
+            |r0, block, _scratch| {
                 let rows_here = block.len() / q;
                 matmul_rows_into(&xs[r0 * d..(r0 + rows_here) * d], os, block, d, q);
                 for row in block.chunks_exact_mut(q) {
@@ -136,40 +216,82 @@ impl NativeExec {
     }
 
     /// Masked gradient (paper eqs. 7/10/28 numerator):
-    /// `X̂ᵀ diag(mask) (X̂θ − Y)` → `[q, c]`, unnormalised.
+    /// `X̂ᵀ diag(mask) (X̂θ − Y)` → `[q, c]`, unnormalised. Allocating
+    /// wrapper over [`NativeExec::grad_into`] for tests and one-off calls.
+    pub fn grad(&self, xhat: &Mat, y: &Mat, theta: &Mat, mask: &[f32]) -> Mat {
+        let mut out = Mat::zeros(theta.rows(), theta.cols());
+        let mut panel_buf = Vec::new();
+        let (panel, c_pad) = panel_of(theta, &mut panel_buf);
+        let mut r_buf = Vec::new();
+        self.grad_into(xhat, y, panel, c_pad, mask, &mut r_buf, &mut out);
+        out
+    }
+
+    /// [`NativeExec::grad`] into a caller-owned `out` (`[q, c]`,
+    /// overwritten), reading θ through its tile-aligned `panel`
+    /// (`[q, c_pad]`, see [`crate::tensor::pack_tile_panel`]) and using
+    /// `r_buf` for the residual panel `R` (grown once, then reused).
     ///
     /// Pass 1 fuses prediction, residual and mask row-by-row (fully masked
     /// rows are skipped before any arithmetic); pass 2 forms `X̂ᵀ R` with
-    /// the `q` output rows partitioned across threads, each accumulating
+    /// the `q` output rows partitioned across the pool, each accumulating
     /// over the data rows in ascending order.
-    pub fn grad(&self, xhat: &Mat, y: &Mat, theta: &Mat, mask: &[f32]) -> Mat {
+    #[allow(clippy::too_many_arguments)] // mirrors the kernel contract 1:1
+    pub fn grad_into(
+        &self,
+        xhat: &Mat,
+        y: &Mat,
+        panel: &[f32],
+        c_pad: usize,
+        mask: &[f32],
+        r_buf: &mut Vec<f32>,
+        out: &mut Mat,
+    ) {
         let (l, q) = (xhat.rows(), xhat.cols());
-        let c = y.cols();
-        let mut g = Mat::zeros(q, c);
+        let c = out.cols();
+        out.as_mut_slice().fill(0.0);
         if l == 0 || q == 0 || c == 0 {
-            return g;
+            return;
         }
+        // Real asserts, not debug: these sizes feed the raw-pointer block
+        // partitioning below, so a caller contract violation must panic in
+        // release builds rather than write out of bounds.
+        assert_eq!(out.rows(), q, "grad_into: out rows != q");
+        assert_eq!(panel.len(), q * c_pad, "grad_into: panel shape");
+        assert_eq!(mask.len(), l, "grad_into: mask len");
         let xs = xhat.as_slice();
-        let ts = theta.as_slice();
-        // R = diag(mask)(X̂θ − Y), one fused sweep per row.
-        let mut r = Mat::zeros(l, c);
+        let flops = l * q * c;
+        // R = diag(mask)(X̂θ − Y), one fused sweep per row. Stale rows from
+        // earlier calls are harmless: pass 2 skips exactly the mask == 0
+        // rows pass 1 skipped.
+        if r_buf.len() < l * c {
+            r_buf.resize(l * c, 0.0);
+        }
+        let (r_slice, _) = r_buf.split_at_mut(l * c);
         {
             let ys = y.as_slice();
             par_row_blocks(
-                self.threads_for(l * q * c),
+                &self.pool,
+                self.threads_for(flops),
                 l,
                 c,
-                r.as_mut_slice(),
-                |i0, block| {
+                r_slice,
+                |i0, block, scratch| {
+                    if scratch.len() < c_pad {
+                        scratch.resize(c_pad, 0.0);
+                    }
+                    let row_pad = &mut scratch[..c_pad];
                     for (ii, rrow) in block.chunks_exact_mut(c).enumerate() {
                         let i = i0 + ii;
                         let m = mask[i];
                         if m == 0.0 {
                             continue; // row never enters the aggregate
                         }
-                        matmul_rows_into(&xs[i * q..(i + 1) * q], ts, rrow, q, c);
-                        for (rv, &yv) in rrow.iter_mut().zip(&ys[i * c..(i + 1) * c]) {
-                            *rv = m * (*rv - yv);
+                        matmul_rows_into(&xs[i * q..(i + 1) * q], panel, row_pad, q, c_pad);
+                        for ((rv, &pv), &yv) in
+                            rrow.iter_mut().zip(&row_pad[..c]).zip(&ys[i * c..(i + 1) * c])
+                        {
+                            *rv = m * (pv - yv);
                         }
                     }
                 },
@@ -179,13 +301,14 @@ impl NativeExec {
         // contiguous k-range of X̂'s columns) and sweeps the data rows i in
         // ascending order — the serial reference's per-element order, so
         // the result is identical for every thread count.
-        let rs = r.as_slice();
+        let rs: &[f32] = r_slice;
         par_row_blocks(
-            self.threads_for(l * q * c),
+            &self.pool,
+            self.threads_for(flops),
             q,
             c,
-            g.as_mut_slice(),
-            |k0, gblock| {
+            out.as_mut_slice(),
+            |k0, gblock, _scratch| {
                 let kn = gblock.len() / c;
                 for i in 0..l {
                     if mask[i] == 0.0 {
@@ -202,16 +325,64 @@ impl NativeExec {
                 }
             },
         );
-        g
+    }
+
+    /// Execute a round's independent gradient requests into caller-owned
+    /// output slots, in input order.
+    ///
+    /// Scheduling: when jobs are scarce relative to the pool (fewer than
+    /// half the threads), each job runs the pool-parallel
+    /// [`NativeExec::grad_into`] kernel in turn; otherwise the jobs are
+    /// partitioned across the pool's workers and each runs the serial
+    /// kernel on its worker's persistent scratch arena. The serial and
+    /// parallel kernels are bit-identical, so outputs (and the caller's
+    /// fold order) never depend on the thread count or the crossover.
+    pub fn grad_batch_into(
+        &self,
+        jobs: &[GradJob<'_>],
+        panel: &[f32],
+        c_pad: usize,
+        r_buf: &mut Vec<f32>,
+        outs: &mut [Mat],
+    ) {
+        assert_eq!(jobs.len(), outs.len(), "grad_batch_into: slot count");
+        if jobs.is_empty() {
+            return;
+        }
+        let t = self.threads().min(jobs.len());
+        // With few jobs relative to the pool, one-worker-per-job would
+        // idle most workers; per-job row parallelism (each job using the
+        // whole pool in turn) recovers them. Both forms are bit-identical,
+        // so the crossover is purely a scheduling choice.
+        if t == 1 || jobs.len() * 2 <= self.threads() {
+            for (j, out) in jobs.iter().zip(outs.iter_mut()) {
+                self.grad_into(j.xhat, j.y, panel, c_pad, j.mask, r_buf, out);
+            }
+            return;
+        }
+        // Across-job parallelism: balanced contiguous job runs, one per
+        // pool part, serial kernel per job (worker scratch holds the
+        // packed prediction row and the residual panel).
+        let n_jobs = jobs.len();
+        let slots = SlotPtr(outs.as_mut_ptr());
+        self.pool.run(t, &|part, scratch| {
+            let (j0, jn) = run_bounds(n_jobs, t, part);
+            for ji in j0..j0 + jn {
+                let job = &jobs[ji];
+                // Safety: job index ranges are disjoint across parts.
+                let out = unsafe { &mut *slots.0.add(ji) };
+                grad_serial_packed(job.xhat, job.y, panel, c_pad, job.mask, scratch, out);
+            }
+        });
     }
 
     /// Weighted random linear encode (paper eq. 19):
     /// `(G ⊙ w[None, :]) · D` for `D ∈ {X̂ [l, q], Y [l, c]}`, zero-padded
     /// to `u_max` output rows to match the compiled-artifact contract.
     ///
-    /// The `G[u, l]·w[l]` products are computed once per output row into a
-    /// per-thread scratch panel and shared by the X̌ and Y̌ accumulations
-    /// (the first native port recomputed them for each).
+    /// The `G[u, l]·w[l]` products are computed once per output row into
+    /// the worker's persistent scratch arena and shared by the X̌ and Y̌
+    /// accumulations (the first native port recomputed them for each).
     pub fn encode(&self, g: &Mat, w: &[f32], xhat: &Mat, y: &Mat, u_max: usize) -> (Mat, Mat) {
         let (u, l) = (g.rows(), g.cols());
         let (q, c) = (xhat.cols(), y.cols());
@@ -224,9 +395,27 @@ impl NativeExec {
         let gs = g.as_slice();
         let xs = xhat.as_slice();
         let ys = y.as_slice();
-        let worker = |u0: usize, rows_here: usize, xblock: &mut [f32], yblock: &mut [f32]| {
-            let mut gw = vec![0.0f32; l]; // per-thread scratch panel
-            for ui in 0..rows_here {
+        // Only the live `u` rows are touched; rows `u..u_max` stay zero.
+        let t = if q == 0 || c == 0 {
+            1
+        } else {
+            self.threads_for(u * l * (q + c)).min(u).max(1)
+        };
+        let xp_ptr = OutPtr::new(&mut xp.as_mut_slice()[..u * q]);
+        let yp_ptr = OutPtr::new(&mut yp.as_mut_slice()[..u * c]);
+        self.pool.run(t, &|part, scratch| {
+            let (u0, un) = run_bounds(u, t, part);
+            if un == 0 {
+                return;
+            }
+            // Safety: row ranges are disjoint across parts.
+            let xblock = unsafe { xp_ptr.slice_mut(u0 * q, un * q) };
+            let yblock = unsafe { yp_ptr.slice_mut(u0 * c, un * c) };
+            if scratch.len() < l {
+                scratch.resize(l, 0.0);
+            }
+            let gw = &mut scratch[..l]; // fully overwritten per output row
+            for ui in 0..un {
                 let grow = &gs[(u0 + ui) * l..(u0 + ui + 1) * l];
                 for (gv, (&ge, &we)) in gw.iter_mut().zip(grow.iter().zip(w)) {
                     *gv = ge * we;
@@ -248,83 +437,174 @@ impl NativeExec {
                     }
                 }
             }
-        };
-        // Only the live `u` rows are touched; rows `u..u_max` stay zero.
-        let xp_live = &mut xp.as_mut_slice()[..u * q];
-        let yp_live = &mut yp.as_mut_slice()[..u * c];
-        let t = self.threads_for(u * l * (q + c)).min(u).max(1);
-        if t == 1 || q == 0 || c == 0 {
-            worker(0, u, xp_live, yp_live);
-        } else {
-            std::thread::scope(|s| {
-                let mut xrest = xp_live;
-                let mut yrest = yp_live;
-                let mut u0 = 0;
-                for rows_here in run_lengths(u, t) {
-                    let (xchunk, xtail) =
-                        std::mem::take(&mut xrest).split_at_mut(rows_here * q);
-                    xrest = xtail;
-                    let (ychunk, ytail) =
-                        std::mem::take(&mut yrest).split_at_mut(rows_here * c);
-                    yrest = ytail;
-                    let worker = &worker;
-                    s.spawn(move || worker(u0, rows_here, xchunk, ychunk));
-                    u0 += rows_here;
-                }
-            });
-        }
+        });
         (xp, yp)
     }
 
-    /// Logits `X̂ θ` → `[n, c]` via the blocked matmul, rows across threads.
+    /// Logits `X̂ θ` → `[n, c]`. Allocating wrapper over
+    /// [`NativeExec::predict_into`].
     pub fn predict(&self, xhat: &Mat, theta: &Mat) -> Mat {
+        let mut out = Mat::zeros(xhat.rows(), theta.cols());
+        let mut panel_buf = Vec::new();
+        let (panel, c_pad) = panel_of(theta, &mut panel_buf);
+        self.predict_into(xhat, panel, c_pad, &mut out);
+        out
+    }
+
+    /// Logits `X̂ θ` into a caller-owned `out` (`[n, c]`, overwritten),
+    /// reading θ through its tile-aligned `panel` (`[q, c_pad]`). Rows
+    /// run across the pool; with `c < c_pad` each row is computed as pure
+    /// register tiles in the worker's scratch arena and its live prefix
+    /// copied out.
+    pub fn predict_into(&self, xhat: &Mat, panel: &[f32], c_pad: usize, out: &mut Mat) {
         let (n, q) = (xhat.rows(), xhat.cols());
-        let c = theta.cols();
-        let mut out = Mat::zeros(n, c);
+        let c = out.cols();
+        // Real asserts: these sizes feed the raw-pointer row partitioning.
+        assert_eq!(out.rows(), n, "predict_into: out rows");
+        assert_eq!(panel.len(), q * c_pad, "predict_into: panel shape");
         if n == 0 || q == 0 || c == 0 {
-            return out;
+            out.as_mut_slice().fill(0.0);
+            return;
         }
         let xs = xhat.as_slice();
-        let ts = theta.as_slice();
-        par_row_blocks(
-            self.threads_for(n * q * c),
-            n,
-            c,
-            out.as_mut_slice(),
-            |r0, block| {
+        let threads = self.threads_for(n * q * c);
+        if c == c_pad {
+            // θ itself is tile-aligned: write output rows directly.
+            par_row_blocks(&self.pool, threads, n, c, out.as_mut_slice(), |r0, block, _s| {
                 let rows_here = block.len() / c;
-                matmul_rows_into(&xs[r0 * q..(r0 + rows_here) * q], ts, block, q, c);
-            },
-        );
-        out
+                block.fill(0.0);
+                matmul_rows_into(&xs[r0 * q..(r0 + rows_here) * q], panel, block, q, c);
+            });
+        } else {
+            par_row_blocks(&self.pool, threads, n, c, out.as_mut_slice(), |r0, block, scratch| {
+                if scratch.len() < c_pad {
+                    scratch.resize(c_pad, 0.0);
+                }
+                let row_pad = &mut scratch[..c_pad];
+                for (ii, orow) in block.chunks_exact_mut(c).enumerate() {
+                    let i = r0 + ii;
+                    matmul_rows_into(&xs[i * q..(i + 1) * q], panel, row_pad, q, c_pad);
+                    orow.copy_from_slice(&row_pad[..c]);
+                }
+            });
+        }
     }
 }
 
-/// Split `out` (a `rows × row_width` buffer) into contiguous row blocks and
-/// run `f(first_row, block)` on each from its own scoped thread. Blocks are
-/// disjoint, every element is written by exactly one thread, and `f` is
-/// expected to preserve per-element accumulation order — together that
-/// makes the result identical for every thread count.
-fn par_row_blocks<F>(threads: usize, rows: usize, row_width: usize, out: &mut [f32], f: F)
-where
-    F: Fn(usize, &mut [f32]) + Sync,
-{
-    debug_assert_eq!(out.len(), rows * row_width);
-    let t = threads.min(rows).max(1);
-    if t == 1 || row_width == 0 {
-        f(0, out);
+/// Resolve a configured thread count to the pool size [`NativeExec::new`]
+/// spawns: `0` → available parallelism, everything capped at
+/// [`MAX_THREADS`]. Kept separate from the constructor so the clamp is
+/// testable without actually parking 511 OS threads.
+fn resolve_threads(threads: usize) -> usize {
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    threads.min(MAX_THREADS)
+}
+
+/// Borrow `theta` as a tile-aligned panel: zero-copy when the column
+/// count is already tile-aligned, packed into `buf` otherwise.
+pub(crate) fn panel_of<'a>(theta: &'a Mat, buf: &'a mut Vec<f32>) -> (&'a [f32], usize) {
+    let c = theta.cols();
+    if tile_padded_cols(c) == c {
+        (theta.as_slice(), c)
+    } else {
+        let c_pad = pack_tile_panel(theta, buf);
+        (&buf[..], c_pad)
+    }
+}
+
+/// The serial masked gradient through the packed θ panel, into a
+/// caller-owned `out` (`[q, c]`, overwritten). Bit-identical to the
+/// parallel [`NativeExec::grad_into`] (same per-element accumulation
+/// order); runs per-job on a pool worker inside
+/// [`NativeExec::grad_batch_into`]. `scratch` holds the packed prediction
+/// row followed by the residual panel `R` (grown once, then warm).
+#[allow(clippy::too_many_arguments)] // mirrors the kernel contract 1:1
+fn grad_serial_packed(
+    xhat: &Mat,
+    y: &Mat,
+    panel: &[f32],
+    c_pad: usize,
+    mask: &[f32],
+    scratch: &mut Vec<f32>,
+    out: &mut Mat,
+) {
+    let (l, q) = (xhat.rows(), xhat.cols());
+    let c = out.cols();
+    out.as_mut_slice().fill(0.0);
+    if l == 0 || q == 0 || c == 0 {
         return;
     }
-    std::thread::scope(|s| {
-        let mut rest = out;
-        let mut row0 = 0;
-        for rows_here in run_lengths(rows, t) {
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(rows_here * row_width);
-            rest = tail;
-            let f = &f;
-            s.spawn(move || f(row0, chunk));
-            row0 += rows_here;
+    debug_assert_eq!(mask.len(), l, "grad: mask len");
+    let need = c_pad + l * c;
+    if scratch.len() < need {
+        scratch.resize(need, 0.0);
+    }
+    let (row_pad, rest) = scratch.split_at_mut(c_pad);
+    let r = &mut rest[..l * c];
+    let xs = xhat.as_slice();
+    let ys = y.as_slice();
+    for i in 0..l {
+        let m = mask[i];
+        if m == 0.0 {
+            continue; // stale R row is fine: pass 2 skips it too
         }
+        matmul_rows_into(&xs[i * q..(i + 1) * q], panel, row_pad, q, c_pad);
+        let rrow = &mut r[i * c..(i + 1) * c];
+        for ((rv, &pv), &yv) in rrow.iter_mut().zip(&row_pad[..c]).zip(&ys[i * c..(i + 1) * c]) {
+            *rv = m * (pv - yv);
+        }
+    }
+    let gs = out.as_mut_slice();
+    for i in 0..l {
+        if mask[i] == 0.0 {
+            continue;
+        }
+        let xrow = &xs[i * q..(i + 1) * q];
+        let rrow = &r[i * c..(i + 1) * c];
+        for (k, &xv) in xrow.iter().enumerate() {
+            let grow = &mut gs[k * c..(k + 1) * c];
+            for (gv, &rv) in grow.iter_mut().zip(rrow.iter()) {
+                *gv += xv * rv;
+            }
+        }
+    }
+}
+
+/// Split `out` (a `rows × row_width` buffer) into balanced contiguous row
+/// blocks and run `f(first_row, block, scratch)` on each from its own pool
+/// part (part 0 = the calling thread). Blocks are disjoint, every element
+/// is written by exactly one thread, and `f` is expected to preserve
+/// per-element accumulation order — together that makes the result
+/// identical for every thread count. `scratch` is the part's persistent
+/// arena (see [`WorkerPool`]).
+fn par_row_blocks<F>(
+    pool: &WorkerPool,
+    threads: usize,
+    rows: usize,
+    row_width: usize,
+    out: &mut [f32],
+    f: F,
+) where
+    F: Fn(usize, &mut [f32], &mut Vec<f32>) + Sync,
+{
+    // Real assert: this length is what makes the raw-pointer row blocks
+    // below in-bounds, so it must hold in release builds too.
+    assert_eq!(out.len(), rows * row_width, "par_row_blocks: out len");
+    let t = if row_width == 0 { 1 } else { threads.min(rows).max(1) };
+    let out_ptr = OutPtr::new(out);
+    let f = &f;
+    pool.run(t, &move |part, scratch| {
+        let (r0, rn) = run_bounds(rows, t, part);
+        if rn * row_width == 0 {
+            return;
+        }
+        // Safety: row ranges are disjoint across parts.
+        let block = unsafe { out_ptr.slice_mut(r0 * row_width, rn * row_width) };
+        f(r0, block, scratch);
     });
 }
 
@@ -382,6 +662,25 @@ mod tests {
     }
 
     #[test]
+    fn grad_into_reuses_buffers_bit_for_bit() {
+        let mut rng = Rng::seed_from(12);
+        let xhat = randn(20, 17, &mut rng);
+        let y = randn(20, 5, &mut rng);
+        let theta = randn(17, 5, &mut rng);
+        let mask: Vec<f32> = (0..20).map(|i| [1.0, 0.0, 0.5][i % 3]).collect();
+        let ex = NativeExec::new(2);
+        let want = ex.grad(&xhat, &y, &theta, &mask);
+        let mut panel = Vec::new();
+        let (p, c_pad) = panel_of(&theta, &mut panel);
+        let mut out = Mat::zeros(17, 5);
+        let mut r_buf = Vec::new();
+        for _ in 0..3 {
+            ex.grad_into(&xhat, &y, p, c_pad, &mask, &mut r_buf, &mut out);
+            assert_eq!(out.as_slice(), want.as_slice());
+        }
+    }
+
+    #[test]
     fn encode_matches_reference_and_pads() {
         let mut rng = Rng::seed_from(9);
         let g = randn(3, 5, &mut rng);
@@ -417,7 +716,7 @@ mod tests {
     #[test]
     fn thread_counts_are_bit_identical() {
         // Shapes chosen to clear PAR_MIN_FLOPS (128·128·8 = 131k madds) so
-        // the scoped-thread path really runs.
+        // the pooled parallel path really runs.
         let mut rng = Rng::seed_from(11);
         let xhat = randn(128, 128, &mut rng);
         let y = randn(128, 8, &mut rng);
@@ -449,12 +748,23 @@ mod tests {
             let mn = *lens.iter().min().unwrap();
             let mx = *lens.iter().max().unwrap();
             assert!(mx - mn <= 1, "unbalanced: {lens:?}");
+            // the closed form agrees with the iterator
+            let mut start = 0;
+            for (part, len) in lens.iter().enumerate() {
+                assert_eq!(run_bounds(n, t, part), (start, *len));
+                start += len;
+            }
         }
     }
 
     #[test]
     fn thread_cap_is_applied() {
-        assert_eq!(NativeExec::new(100_000).threads(), 512);
+        // The clamp is tested through resolve_threads — constructing a
+        // NativeExec would really park MAX_THREADS − 1 workers.
+        assert_eq!(resolve_threads(100_000), 512);
+        assert_eq!(resolve_threads(512), 512);
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
         assert_eq!(NativeExec::new(3).threads(), 3);
         assert!(NativeExec::new(0).threads() >= 1);
     }

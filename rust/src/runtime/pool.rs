@@ -1,0 +1,387 @@
+//! Persistent worker pool behind the native compute backend.
+//!
+//! The pre-0.4 kernels spawned fresh OS threads through
+//! `std::thread::scope` on *every* parallel call — tens of microseconds of
+//! spawn/join per kernel, paid n+1 times per training round, which swamped
+//! the per-client shapes CodedFedL actually runs (200-row gradients take
+//! ~100 µs of math). This module replaces those per-call spawns with one
+//! pool per [`crate::runtime::Runtime`] (and therefore one per `Session`):
+//! workers are spawned once, parked (`std::thread::park`) between jobs,
+//! and woken *individually* — a job spanning `parts` threads unparks
+//! exactly the `parts − 1` workers that participate, publishing a
+//! pointer-sized job descriptor — so dispatching a job performs **zero
+//! heap allocations** and idle workers on a wide pool never pay a
+//! wake/re-park cycle for narrow jobs.
+//!
+//! ## Dispatch model
+//!
+//! [`WorkerPool::run`]`(parts, task)` executes `task(part, scratch)` once
+//! for every `part in 0..parts`. The *calling thread runs part 0* and the
+//! parked workers run parts `1..parts`, so a pool of `t` threads is the
+//! caller plus `t − 1` spawned workers. The call returns only after every
+//! part has finished (a latch counted under the pool mutex), which is what
+//! makes the borrowed `task` reference sound to share with the workers.
+//!
+//! Callers split their output across parts themselves (disjoint row
+//! blocks — see `runtime::native`); the pool guarantees only that each
+//! part runs exactly once, on exactly one thread. Determinism is therefore
+//! unchanged from the scoped-spawn era: identical partitioning + identical
+//! per-element accumulation order ⇒ bit-identical results for every
+//! thread count.
+//!
+//! ## Per-worker scratch arenas
+//!
+//! Each thread (the caller included) owns a `Vec<f32>` scratch arena that
+//! persists across jobs — kernels `resize` it on first use and reuse the
+//! warm capacity forever after. This is what absorbs the encode kernel's
+//! `G·w` panel and the packed-θ row panels of `grad`/`predict` without
+//! per-call allocation. A part may only touch the scratch it is handed:
+//! part `i`'s arena is owned by whichever thread runs part `i`, and jobs
+//! are serialized, so the access is exclusive.
+
+use std::cell::UnsafeCell;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+
+/// A borrowed parallel job: `job(part, scratch)` runs once per part.
+pub type Job = dyn Fn(usize, &mut Vec<f32>) + Sync;
+
+/// Total worker threads ever spawned by pools in this process (telemetry
+/// for the no-thread-leak contract: steady-state training must not move
+/// this counter).
+static SPAWNED_WORKERS: AtomicU64 = AtomicU64::new(0);
+
+/// Worker threads spawned process-wide so far (monotonic).
+pub fn spawned_workers_total() -> u64 {
+    SPAWNED_WORKERS.load(Ordering::Relaxed)
+}
+
+/// Lock that shrugs off poisoning: pool state stays consistent even if a
+/// job panicked on some thread (the panic is re-raised on the caller).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Job slot + latch shared between the caller and the parked workers.
+struct State {
+    /// Monotonic job counter; a bump (under the mutex) publishes a job.
+    epoch: u64,
+    /// Parts of the current job. The caller runs part 0, worker `w` runs
+    /// part `w` when `w < parts`.
+    parts: usize,
+    /// The published job. The `'static` is a lie told via `transmute`: the
+    /// reference is only dereferenced between publication and the latch
+    /// reaching zero, and `run` does not return (so the borrow does not
+    /// end) until then.
+    job: Option<&'static Job>,
+    /// Workers still running the current job (the latch `run` blocks on).
+    running: usize,
+    /// A worker's job panicked; re-raised by the caller.
+    panicked: bool,
+    shutdown: bool,
+}
+
+/// One thread's scratch arena. `Sync` is sound because part `i` is run by
+/// exactly one thread per job and jobs are serialized by the dispatch
+/// mutex + latch, so each cell is accessed by one thread at a time.
+#[repr(align(64))] // keep arenas off each other's cache lines
+struct ScratchCell(UnsafeCell<Vec<f32>>);
+
+unsafe impl Sync for ScratchCell {}
+
+struct Shared {
+    state: Mutex<State>,
+    /// The caller parks here waiting for the latch.
+    done_cv: Condvar,
+    /// Scratch arenas, one per thread: `scratch[0]` is the caller's,
+    /// `scratch[w]` belongs to spawned worker `w`.
+    scratch: Vec<ScratchCell>,
+}
+
+/// A persistent pool of parked worker threads (see the module docs).
+///
+/// Created once per `Runtime` (sized by `[runtime] threads`); dropped
+/// pools shut their workers down and join them.
+pub struct WorkerPool {
+    threads: usize,
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// Parked workers' thread handles (`workers[w - 1]` is worker `w`),
+    /// for *targeted* wakeups: a job with `parts < threads` unparks only
+    /// the workers that participate instead of broadcasting to the whole
+    /// pool (a narrow job on a wide pool would otherwise pay a wasted
+    /// wake/lock/re-park cycle per idle worker per dispatch).
+    workers: Vec<std::thread::Thread>,
+    /// Serializes dispatches: `run` takes `&self`, but the job slot and
+    /// the caller scratch arena admit one dispatcher at a time.
+    dispatch: Mutex<()>,
+}
+
+impl fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "WorkerPool[{} threads]", self.threads)
+    }
+}
+
+impl WorkerPool {
+    /// Pool of `threads` total threads: the caller plus `threads − 1`
+    /// spawned workers, parked until the first [`WorkerPool::run`].
+    pub fn new(threads: usize) -> WorkerPool {
+        assert!(threads >= 1, "pool needs at least the calling thread");
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                parts: 0,
+                job: None,
+                running: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            done_cv: Condvar::new(),
+            scratch: (0..threads).map(|_| ScratchCell(UnsafeCell::new(Vec::new()))).collect(),
+        });
+        let handles: Vec<JoinHandle<()>> = (1..threads)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                SPAWNED_WORKERS.fetch_add(1, Ordering::Relaxed);
+                std::thread::Builder::new()
+                    .name(format!("codedfedl-pool-{w}"))
+                    .spawn(move || worker_loop(&shared, w))
+                    .expect("spawning pool worker thread")
+            })
+            .collect();
+        let workers = handles.iter().map(|h| h.thread().clone()).collect();
+        WorkerPool { threads, shared, handles, workers, dispatch: Mutex::new(()) }
+    }
+
+    /// Total threads (caller + parked workers) a job can span.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `task(part, scratch)` for every `part in 0..parts` and return
+    /// once all parts finished. `parts = 0` runs as one part; asking for
+    /// more parts than the pool has threads panics — a silent clamp would
+    /// leave a caller's `parts`-sized output partition partially
+    /// uncomputed with no error. The caller executes part 0 itself;
+    /// parked workers take parts `1..`.
+    ///
+    /// The dispatch allocates nothing; scratch arenas persist across
+    /// calls (warm after first use). If any part panics, the panic is
+    /// re-raised here *after* every other part finished, so borrowed data
+    /// never outlives its users.
+    pub fn run(&self, parts: usize, task: &Job) {
+        assert!(
+            parts <= self.threads,
+            "WorkerPool::run: {parts} parts on a {}-thread pool",
+            self.threads
+        );
+        let parts = parts.max(1);
+        let _dispatch = lock(&self.dispatch);
+        if parts == 1 {
+            // Job slot untouched: run inline on the caller's arena.
+            let scratch = unsafe { &mut *self.shared.scratch[0].0.get() };
+            task(0, scratch);
+            return;
+        }
+        // Publish the job. Lifetime-erasing the borrow is sound because
+        // this function only returns after the latch reaches zero (even on
+        // panic), so `task` outlives every dereference.
+        let job: &'static Job = unsafe { std::mem::transmute::<&Job, &'static Job>(task) };
+        {
+            let mut st = lock(&self.shared.state);
+            st.epoch += 1;
+            st.parts = parts;
+            st.job = Some(job);
+            st.running = parts - 1;
+        }
+        // Targeted wakeups: only the participating workers. An unpark
+        // delivered before the worker parks is banked (the token), so the
+        // publish-then-unpark order cannot lose a wakeup.
+        for w in 1..parts {
+            self.workers[w - 1].unpark();
+        }
+        // Part 0 runs here, on the caller's own arena.
+        let scratch = unsafe { &mut *self.shared.scratch[0].0.get() };
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(0, scratch)));
+        // Wait out the latch no matter what happened above.
+        let worker_panicked = {
+            let mut st = lock(&self.shared.state);
+            while st.running > 0 {
+                st = self.shared.done_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+            st.job = None;
+            std::mem::replace(&mut st.panicked, false)
+        };
+        if let Err(payload) = caller {
+            std::panic::resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("worker pool job panicked on a worker thread");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.shared.state);
+            st.shutdown = true;
+        }
+        for w in &self.workers {
+            w.unpark();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// What parked workers do: park until an epoch bump that includes them
+/// (the dispatcher unparks participants individually), run their part on
+/// their own arena, count down the latch.
+fn worker_loop(shared: &Shared, index: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if index < st.parts {
+                        break;
+                    }
+                    // Not a participant this job (a stale banked unpark
+                    // woke us); re-park. Safe to skip: the caller only
+                    // needs parts 1..parts.
+                }
+                drop(st);
+                std::thread::park();
+                st = lock(&shared.state);
+            }
+            st.job.expect("published job")
+        };
+        let scratch = unsafe { &mut *shared.scratch[index].0.get() };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(index, scratch)));
+        let mut st = lock(&shared.state);
+        if result.is_err() {
+            st.panicked = true;
+        }
+        st.running -= 1;
+        if st.running == 0 {
+            shared.done_cv.notify_one();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn every_part_runs_exactly_once() {
+        let pool = WorkerPool::new(4);
+        for _ in 0..50 {
+            let ran = AtomicUsize::new(0);
+            let seen = Mutex::new(HashSet::new());
+            pool.run(4, &|part, _s| {
+                ran.fetch_add(1, Ordering::SeqCst);
+                seen.lock().unwrap().insert(part);
+            });
+            assert_eq!(ran.load(Ordering::SeqCst), 4);
+            assert_eq!(seen.into_inner().unwrap(), (0..4).collect::<HashSet<_>>());
+        }
+    }
+
+    #[test]
+    fn zero_parts_runs_as_one() {
+        let pool = WorkerPool::new(3);
+        let ran = AtomicUsize::new(0);
+        pool.run(0, &|_p, _s| {
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "WorkerPool::run")]
+    fn excess_parts_are_rejected_loudly() {
+        // A silent clamp would leave a caller's larger partition silently
+        // uncomputed; over-subscription must panic instead.
+        let pool = WorkerPool::new(3);
+        pool.run(4, &|_p, _s| {});
+    }
+
+    #[test]
+    fn workers_are_reused_across_jobs() {
+        let pool = WorkerPool::new(3);
+        let ids = || {
+            let set = Mutex::new(HashSet::new());
+            pool.run(3, &|_p, _s| {
+                set.lock().unwrap().insert(std::thread::current().id());
+            });
+            set.into_inner().unwrap()
+        };
+        let first = ids();
+        assert_eq!(first.len(), 3, "3 parts must land on 3 distinct threads");
+        let spawned = spawned_workers_total();
+        for _ in 0..20 {
+            assert_eq!(ids(), first, "jobs must reuse the same parked workers");
+        }
+        assert_eq!(spawned_workers_total(), spawned, "dispatch must never spawn");
+    }
+
+    #[test]
+    fn scratch_arenas_persist_between_jobs() {
+        let pool = WorkerPool::new(2);
+        pool.run(2, &|part, scratch| {
+            scratch.resize(128, part as f32 + 1.0);
+        });
+        let kept = Mutex::new(Vec::new());
+        pool.run(2, &|part, scratch| {
+            kept.lock().unwrap().push((part, scratch.len(), scratch[0]));
+        });
+        let mut kept = kept.into_inner().unwrap();
+        kept.sort_by_key(|&(p, _, _)| p);
+        assert_eq!(kept, vec![(0, 128, 1.0), (1, 128, 2.0)]);
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        let here = std::thread::current().id();
+        let ok = Mutex::new(false);
+        pool.run(1, &|part, _s| {
+            assert_eq!(part, 0);
+            assert_eq!(std::thread::current().id(), here);
+            *ok.lock().unwrap() = true;
+        });
+        assert!(*ok.lock().unwrap());
+    }
+
+    #[test]
+    fn worker_panic_is_propagated_not_deadlocked() {
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(2, &|part, _s| {
+                if part == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        // The pool is still serviceable after a job panicked.
+        let ran = AtomicUsize::new(0);
+        pool.run(2, &|_p, _s| {
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ran.load(Ordering::SeqCst), 2);
+    }
+}

@@ -21,6 +21,12 @@ struct CodedState {
     masks: Vec<Vec<f32>>,
     /// Per-step composite parity: `steps × (X̌ [u*, q], Y̌ [u*, c])`.
     parity: Vec<(Mat, Mat)>,
+    /// All-ones mask over the `u*` parity rows, built once (the parity
+    /// gradient includes every row every round).
+    parity_mask: Vec<f32>,
+    /// Reusable output buffer for the per-round parity gradient — keeps
+    /// [`CodedFedL::aggregate`] free of compute-path allocations.
+    parity_grad: Mat,
     /// `1 − P(T_C ≤ t*)` for the coded-gradient scale of eq. (28).
     pnr_server: f64,
     parity_overhead: f64,
@@ -102,17 +108,18 @@ impl Scheme for CodedFedL {
         exec: &RoundExec,
         agg: &mut Mat,
     ) -> Result<RoundCost> {
-        let cs = self.state();
+        let cs = self.state.as_mut().expect("prepare() runs before any round");
         // Coded part (eq. 28): gradient over this step's parity, scaled by
-        // 1/((1−pnr_C)·u*), whenever the MEC unit itself makes t*.
+        // 1/((1−pnr_C)·u*), whenever the MEC unit itself makes t*. The
+        // mask and output buffer are held in the scheme state, so the
+        // round loop allocates nothing here.
         if delays.server_t <= cs.t_star {
-            let (xp, yp) = &cs.parity[ctx.step];
-            let ones = vec![1.0f32; xp.rows()];
-            let gc = exec
-                .grad(xp, yp, &ones)
-                .context("coded gradient over parity data")?;
             let scale = 1.0 / ((1.0 - cs.pnr_server) as f32 * cs.u_star as f32);
-            agg.axpy(scale, &gc);
+            let CodedState { parity, parity_mask, parity_grad, .. } = cs;
+            let (xp, yp) = &parity[ctx.step];
+            exec.grad_into(xp, yp, parity_mask, parity_grad)
+                .context("coded gradient over parity data")?;
+            agg.axpy(scale, parity_grad);
         }
         // Every round costs exactly t*; the return is stochastically
         // complete (returned = 0.0 ⇒ engine normalises by m).
@@ -226,6 +233,8 @@ fn prepare_coded(
         u_star,
         masks,
         parity,
+        parity_mask: vec![1.0; u_star],
+        parity_grad: Mat::zeros(cfg.q, cfg.classes),
         pnr_server,
         parity_overhead,
     })

@@ -140,6 +140,14 @@ impl<'a> RoundExec<'a> {
         self.rt.grad_prepared(xhat, y, self.theta, mask)
     }
 
+    /// [`RoundExec::grad`] into a caller-owned `out` (`[q, c]`,
+    /// overwritten). Schemes that hold their output buffer across rounds
+    /// (e.g. CodedFedL's parity gradient) keep the round loop free of
+    /// compute-path allocations this way.
+    pub fn grad_into(&self, xhat: &Mat, y: &Mat, mask: &[f32], out: &mut Mat) -> Result<()> {
+        self.rt.grad_into(xhat, y, self.theta, mask, out)
+    }
+
     /// The underlying runtime, for schemes that need more than `grad`.
     pub fn runtime(&self) -> &Runtime {
         self.rt

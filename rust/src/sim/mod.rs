@@ -50,9 +50,11 @@ impl RoundDelays {
     }
 }
 
-/// Samples rounds for a fixed fleet + per-node loads.
-pub struct RoundSampler {
-    clients: Vec<NodeParams>,
+/// Samples rounds for a fixed fleet + per-node loads. Borrows the fleet
+/// (one per experiment, owned by `FedSetup`) instead of cloning it per
+/// scheme run.
+pub struct RoundSampler<'a> {
+    clients: &'a [NodeParams],
     server: NodeParams,
     /// Per-client processed load `ℓ̃_j` (drives both the deterministic and
     /// stochastic compute parts).
@@ -61,9 +63,9 @@ pub struct RoundSampler {
     pub server_load: f64,
 }
 
-impl RoundSampler {
+impl<'a> RoundSampler<'a> {
     pub fn new(
-        clients: Vec<NodeParams>,
+        clients: &'a [NodeParams],
         server: NodeParams,
         client_loads: Vec<f64>,
         server_load: f64,
@@ -74,14 +76,25 @@ impl RoundSampler {
 
     /// Sample one round's delays.
     pub fn sample(&self, rng: &mut Rng) -> RoundDelays {
-        let client_t = self
-            .clients
-            .iter()
-            .zip(&self.client_loads)
-            .map(|(c, &l)| c.sample_delay(l, rng))
-            .collect();
-        let server_t = self.server.sample_delay(self.server_load, rng);
-        RoundDelays { client_t, server_t }
+        let mut out =
+            RoundDelays { client_t: Vec::with_capacity(self.clients.len()), server_t: 0.0 };
+        self.sample_into(rng, &mut out);
+        out
+    }
+
+    /// [`RoundSampler::sample`] into a caller-owned `RoundDelays` (cleared
+    /// and refilled; capacity reused across rounds). Draws the same RNG
+    /// sequence as `sample` — clients in index order, then the server —
+    /// so the two are interchangeable without perturbing reproducibility.
+    pub fn sample_into(&self, rng: &mut Rng, out: &mut RoundDelays) {
+        out.client_t.clear();
+        out.client_t.extend(
+            self.clients
+                .iter()
+                .zip(&self.client_loads)
+                .map(|(c, &l)| c.sample_delay(l, rng)),
+        );
+        out.server_t = self.server.sample_delay(self.server_load, rng);
     }
 }
 
@@ -105,12 +118,27 @@ mod tests {
     #[test]
     fn sample_shapes_and_positivity() {
         let (c, s) = fleet();
-        let sampler = RoundSampler::new(c, s, vec![5.0; 4], 20.0);
+        let sampler = RoundSampler::new(&c, s, vec![5.0; 4], 20.0);
         let mut rng = Rng::seed_from(1);
         let d = sampler.sample(&mut rng);
         assert_eq!(d.client_t.len(), 4);
         assert!(d.client_t.iter().all(|&t| t > 0.0));
         assert!(d.server_t > 0.0);
+    }
+
+    #[test]
+    fn sample_into_matches_sample_and_reuses_capacity() {
+        let (c, s) = fleet();
+        let sampler = RoundSampler::new(&c, s, vec![5.0; 4], 20.0);
+        let mut rng_a = Rng::seed_from(3);
+        let mut rng_b = Rng::seed_from(3);
+        let mut reused = RoundDelays { client_t: Vec::new(), server_t: 0.0 };
+        for _ in 0..10 {
+            let fresh = sampler.sample(&mut rng_a);
+            sampler.sample_into(&mut rng_b, &mut reused);
+            assert_eq!(fresh.client_t, reused.client_t);
+            assert_eq!(fresh.server_t, reused.server_t);
+        }
     }
 
     #[test]
@@ -152,7 +180,7 @@ mod tests {
     #[test]
     fn zero_load_clients_are_comm_bound() {
         let (c, s) = fleet();
-        let sampler = RoundSampler::new(c.clone(), s, vec![0.0; 4], 0.0);
+        let sampler = RoundSampler::new(&c, s, vec![0.0; 4], 0.0);
         let mut rng = Rng::seed_from(2);
         for _ in 0..50 {
             let d = sampler.sample(&mut rng);

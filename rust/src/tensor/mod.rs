@@ -208,6 +208,13 @@ impl Mat {
         self.view().matmul(other)
     }
 
+    /// [`Mat::matmul`] into a caller-owned destination (overwritten): the
+    /// allocation-free form hot loops hold a reusable `out` for. Panics if
+    /// `out` is not `[self.rows, other.cols]`.
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        self.view().matmul_into(other, out)
+    }
+
     /// Naive reference matmul — the test/diagnostic *oracle* the blocked
     /// [`Mat::matmul`] (the default native-backend hot path) is pinned
     /// against. Only the optional `pjrt` backend bypasses both in favour of
@@ -277,10 +284,22 @@ impl<'a> MatView<'a> {
     /// Dense matmul `self · other` via the blocked kernel (bit-for-bit
     /// equal to [`Mat::matmul_ref`]).
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let mut out = Mat::zeros(self.rows, other.cols);
-        matmul_rows_into(self.data, &other.data, &mut out.data, self.cols, other.cols);
+        self.matmul_into(other, &mut out);
         out
+    }
+
+    /// [`MatView::matmul`] into a caller-owned destination (overwritten;
+    /// same bit-for-bit contract). Panics on shape mismatch.
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        assert_eq!(
+            (out.rows, out.cols),
+            (self.rows, other.cols),
+            "matmul_into: out shape mismatch"
+        );
+        out.data.fill(0.0);
+        matmul_rows_into(self.data, &other.data, &mut out.data, self.cols, other.cols);
     }
 }
 
@@ -334,6 +353,41 @@ pub(crate) fn matmul_rows_into(a: &[f32], b: &[f32], out: &mut [f32], k: usize, 
             }
         }
     }
+}
+
+/// `cols` rounded up to the register-tile width of the blocked matmul.
+/// When a `b`-operand's row stride is a multiple of the tile, the kernel
+/// runs pure register tiles — no remainder columns, so accumulators stay
+/// in registers across the whole `k` loop instead of re-loading the
+/// output row every step (the win is large for narrow outputs like the
+/// `c = 10` class dimension).
+pub fn tile_padded_cols(cols: usize) -> usize {
+    match cols % MM_TILE {
+        0 => cols,
+        r => cols + (MM_TILE - r),
+    }
+}
+
+/// Pack `m` (`[rows, cols]`) into a tile-aligned panel `[rows, c_pad]`
+/// with zero-filled tail columns, reusing `out`'s capacity (steady-state
+/// callers pay no allocation). Returns `c_pad = tile_padded_cols(cols)`.
+///
+/// The padded columns never change the real outputs: every per-element
+/// accumulation reads only the first `cols` entries of each packed row in
+/// the same ascending-`k` order as the unpacked kernel, so results stay
+/// bit-identical (see the module docs).
+pub fn pack_tile_panel(m: &Mat, out: &mut Vec<f32>) -> usize {
+    let (rows, cols) = (m.rows, m.cols);
+    let c_pad = tile_padded_cols(cols);
+    out.clear();
+    out.resize(rows * c_pad, 0.0);
+    if cols == 0 {
+        return c_pad;
+    }
+    for (src, dst) in m.data.chunks_exact(cols).zip(out.chunks_exact_mut(c_pad)) {
+        dst[..cols].copy_from_slice(src);
+    }
+    c_pad
 }
 
 #[cfg(test)]
@@ -456,6 +510,61 @@ mod tests {
     #[should_panic(expected = "row view out of bounds")]
     fn rows_view_rejects_overrun() {
         Mat::zeros(3, 2).rows_view(2, 2);
+    }
+
+    #[test]
+    fn matmul_into_reuses_buffer_and_matches() {
+        let a = Mat::from_fn(3, 5, |r, c| (r * 5 + c) as f32 * 0.3 - 1.0);
+        let b = Mat::from_fn(5, 4, |r, c| (r + 2 * c) as f32 * 0.7 - 2.0);
+        let mut out = Mat::from_fn(3, 4, |_, _| 99.0); // stale contents must vanish
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out.as_slice(), a.matmul_ref(&b).as_slice());
+        // second use of the same buffer
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out.as_slice(), a.matmul_ref(&b).as_slice());
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul_into: out shape mismatch")]
+    fn matmul_into_rejects_wrong_out_shape() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(3, 4);
+        let mut out = Mat::zeros(2, 5);
+        a.matmul_into(&b, &mut out);
+    }
+
+    #[test]
+    fn tile_padding_rounds_up_to_tile() {
+        assert_eq!(tile_padded_cols(0), 0);
+        assert_eq!(tile_padded_cols(1), MM_TILE);
+        assert_eq!(tile_padded_cols(10), MM_TILE);
+        assert_eq!(tile_padded_cols(MM_TILE), MM_TILE);
+        assert_eq!(tile_padded_cols(MM_TILE + 1), 2 * MM_TILE);
+    }
+
+    #[test]
+    fn packed_panel_zero_fills_tails_and_reuses_capacity() {
+        let m = Mat::from_fn(4, 10, |r, c| (r * 10 + c) as f32);
+        let mut panel = Vec::new();
+        let c_pad = pack_tile_panel(&m, &mut panel);
+        assert_eq!(c_pad, MM_TILE);
+        assert_eq!(panel.len(), 4 * MM_TILE);
+        for r in 0..4 {
+            assert_eq!(&panel[r * c_pad..r * c_pad + 10], m.row(r));
+            assert!(panel[r * c_pad + 10..(r + 1) * c_pad].iter().all(|&v| v == 0.0));
+        }
+        // repacking a same-shape matrix reuses the buffer
+        let cap = panel.capacity();
+        let m2 = Mat::from_fn(4, 10, |r, c| -((r + c) as f32));
+        pack_tile_panel(&m2, &mut panel);
+        assert_eq!(panel.capacity(), cap);
+        assert_eq!(&panel[..10], m2.row(0));
+        // a packed row × tile-aligned matmul matches the unpadded kernel
+        let v = Mat::from_fn(1, 4, |_, c| 0.5 * c as f32 + 0.1);
+        let want = v.matmul(&m2); // [1, 10] — the panel now holds m2
+        let mut got_pad = vec![0.0f32; c_pad];
+        matmul_rows_into(v.as_slice(), &panel, &mut got_pad, 4, c_pad);
+        assert_eq!(&got_pad[..10], want.as_slice());
     }
 
     #[test]

@@ -1,0 +1,100 @@
+//! The steady-state allocation gate (PR 3): once warm, a training round's
+//! *compute path* — pack θ, run the round's client gradients as a batch
+//! into held slots, run the parity gradient, fold, evaluate — performs
+//! **zero** heap allocations on the native backend.
+//!
+//! The gate installs [`CountingAlloc`] as the process-global allocator
+//! and measures the exact sequence of runtime calls
+//! `coordinator::engine::run` issues per round, against the engine's own
+//! buffer-reuse discipline (round-persistent panel, output slots and
+//! logits). This file intentionally contains a **single** test: the
+//! counters are process-global, so any concurrently running test would
+//! pollute the measurement.
+
+use codedfedl::benchutil::CountingAlloc;
+use codedfedl::rng::Rng;
+use codedfedl::runtime::GradJob;
+use codedfedl::tensor::Mat;
+use codedfedl::ExperimentBuilder;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_compute_path_allocates_zero_bytes() {
+    // threads = 2 so the persistent pool (not just the inline part-0
+    // path) services the dispatches being gated.
+    let session = ExperimentBuilder::preset("tiny")
+        .unwrap()
+        .epochs(1)
+        .threads(2)
+        .build()
+        .unwrap();
+    let rt = session.runtime();
+    let setup = session.setup();
+    let cfg = session.config();
+    let (q, c, n) = (cfg.q, cfg.classes, cfg.clients);
+
+    let mut rng = Rng::seed_from(9);
+    let mut theta = Mat::zeros(q, c);
+    rng.fill_normal_f32(theta.as_mut_slice());
+
+    // Round-persistent state, mirroring coordinator::engine::run.
+    let masks: Vec<Vec<f32>> = vec![vec![1.0f32; cfg.local_batch]; n];
+    let jobs: Vec<GradJob> = (0..n)
+        .map(|j| GradJob {
+            xhat: &setup.client_data[j].xhat[0],
+            y: &setup.client_data[j].y[0],
+            mask: &masks[j],
+        })
+        .collect();
+    let mut panel: Vec<f32> = Vec::new();
+    let mut outs: Vec<Mat> = (0..n).map(|_| Mat::zeros(q, c)).collect();
+    let mut agg = Mat::zeros(q, c);
+    let mut eval_logits = Mat::zeros(setup.test_xhat.rows(), c);
+    // Parity-shaped server gradient (CodedFedL's eq. 28 path).
+    let u = 64usize;
+    let mut parity_x = Mat::zeros(u, q);
+    let mut parity_y = Mat::zeros(u, c);
+    rng.fill_normal_f32(parity_x.as_mut_slice());
+    rng.fill_normal_f32(parity_y.as_mut_slice());
+    let parity_mask = vec![1.0f32; u];
+    let mut parity_grad = Mat::zeros(q, c);
+
+    let mut round = |theta: &Mat| {
+        let prep = rt.prepare_theta_into(theta, &mut panel).unwrap();
+        rt.grad_batch_into(&jobs, &prep, &mut outs).unwrap();
+        agg.as_mut_slice().fill(0.0);
+        for g in &outs {
+            agg.axpy(1.0, g);
+        }
+        rt.grad_into(&parity_x, &parity_y, &prep, &parity_mask, &mut parity_grad)
+            .unwrap();
+        agg.axpy(0.5, &parity_grad);
+        rt.predict_into(&setup.test_xhat, &prep, &mut eval_logits).unwrap();
+    };
+
+    // Two warm-up rounds grow every buffer and scratch arena to its
+    // steady-state size…
+    round(&theta);
+    round(&theta);
+
+    // …after which a round must acquire no memory at all.
+    let (a0, b0) = (CountingAlloc::allocations(), CountingAlloc::bytes());
+    round(&theta);
+    let (a1, b1) = (CountingAlloc::allocations(), CountingAlloc::bytes());
+    assert_eq!(
+        a1 - a0,
+        0,
+        "warm compute path performed {} allocations ({} bytes)",
+        a1 - a0,
+        b1 - b0
+    );
+    assert_eq!(b1 - b0, 0, "warm compute path requested {} bytes", b1 - b0);
+
+    // Sanity: the counter itself works (an allocation is visible).
+    let before = CountingAlloc::allocations();
+    let v = std::hint::black_box(vec![0u8; 4096]);
+    assert!(CountingAlloc::allocations() > before, "counting allocator inert");
+    drop(v);
+}

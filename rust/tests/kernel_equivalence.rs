@@ -1,8 +1,11 @@
 //! Property-style equivalence tests for the blocked/parallel native
-//! kernels (PR 2 tentpole): every fast kernel is pinned against the seed's
-//! serial reference implementation (ported verbatim below) across awkward
-//! shapes — 0 rows, 1 column, sizes straddling the register-tile width —
-//! and thread counts {1, 4}.
+//! kernels (PR 2 tentpole, extended to the persistent worker pool in
+//! PR 3): every fast kernel is pinned against the seed's serial reference
+//! implementation (ported verbatim below) across awkward shapes — 0 rows,
+//! 1 column, sizes straddling the register-tile width — and thread counts
+//! {1, 2, 4, 8}, and the pooled path is additionally pinned against an
+//! in-test `std::thread::scope` driver replicating the pre-pool
+//! partitioning.
 //!
 //! Contract under test (see `rust/src/tensor` module docs): `threads = 1`
 //! is **bit-for-bit** equal to the serial reference; other thread counts
@@ -12,7 +15,9 @@
 
 use codedfedl::rng::Rng;
 use codedfedl::runtime::native::NativeExec;
+use codedfedl::schemes::CodedFedL;
 use codedfedl::tensor::Mat;
+use codedfedl::ExperimentBuilder;
 
 fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
     let mut m = Mat::zeros(rows, cols);
@@ -149,7 +154,7 @@ fn matmul_blocked_equals_reference_across_shapes_and_threads() {
         // Mat::matmul is the single-threaded blocked kernel
         assert_equiv("Mat::matmul", 1, &a.matmul(&b), &want);
         // the threaded path is exercised through NativeExec::predict
-        for threads in [1usize, 4] {
+        for threads in [1usize, 2, 4, 8] {
             let got = NativeExec::new(threads).predict(&a, &b);
             assert_equiv("predict", threads, &got, &want);
         }
@@ -165,7 +170,7 @@ fn grad_equals_reference_across_shapes_and_threads() {
         let theta = randn(q, c, &mut rng);
         let mask = mask_for(l);
         let want = ref_grad(&xhat, &y, &theta, &mask);
-        for threads in [1usize, 4] {
+        for threads in [1usize, 2, 4, 8] {
             let got = NativeExec::new(threads).grad(&xhat, &y, &theta, &mask);
             assert_equiv("grad", threads, &got, &want);
         }
@@ -182,7 +187,7 @@ fn embed_equals_reference_across_shapes_and_threads() {
         let omega = randn(d, q, &mut rng);
         let delta: Vec<f32> = (0..q).map(|_| rng.next_f32() * 6.28).collect();
         let want = ref_embed(&x, &omega, &delta);
-        for threads in [1usize, 4] {
+        for threads in [1usize, 2, 4, 8] {
             let got = NativeExec::new(threads).embed(&x, &omega, &delta);
             assert_equiv("embed", threads, &got, &want);
         }
@@ -206,7 +211,7 @@ fn encode_equals_reference_across_shapes_and_threads() {
         let xhat = randn(l, q, &mut rng);
         let y = randn(l, c, &mut rng);
         let (want_x, want_y) = ref_encode(&g, &w, &xhat, &y, u_max);
-        for threads in [1usize, 4] {
+        for threads in [1usize, 2, 4, 8] {
             let (got_x, got_y) = NativeExec::new(threads).encode(&g, &w, &xhat, &y, u_max);
             assert_equiv("encode.x", threads, &got_x, &want_x);
             assert_equiv("encode.y", threads, &got_y, &want_y);
@@ -231,4 +236,131 @@ fn grad_with_exact_zero_features_still_matches() {
     let want = ref_grad(&xhat, &y, &theta, &mask);
     let got = NativeExec::single().grad(&xhat, &y, &theta, &mask);
     assert_equiv("grad(sparse)", 1, &got, &want);
+}
+
+// ---------------------------------------------------------------------------
+// Pool-era additions (PR 3): the persistent-pool path vs the pre-pool
+// `std::thread::scope` driver vs the serial kernel, and worker reuse.
+// ---------------------------------------------------------------------------
+
+/// The pre-pool parallel driver, rebuilt in-test: balanced contiguous row
+/// blocks, one `thread::scope` spawn per block, the blocked matmul per
+/// block — exactly the partitioning `runtime::native` used before the
+/// worker pool. The pool must reproduce it bit-for-bit.
+fn scoped_predict(xhat: &Mat, theta: &Mat, threads: usize) -> Mat {
+    let n = xhat.rows();
+    let c = theta.cols();
+    let mut out = Mat::zeros(n, c);
+    if n == 0 || xhat.cols() == 0 || c == 0 {
+        return out;
+    }
+    let t = threads.min(n).max(1);
+    let (base, extra) = (n / t, n % t);
+    std::thread::scope(|s| {
+        let mut rest = out.as_mut_slice();
+        let mut r0 = 0;
+        for part in 0..t {
+            let rows_here = base + usize::from(part < extra);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(rows_here * c);
+            rest = tail;
+            s.spawn(move || {
+                let block = xhat.rows_view(r0, rows_here).matmul(theta);
+                chunk.copy_from_slice(block.as_slice());
+            });
+            r0 += rows_here;
+        }
+    });
+    out
+}
+
+#[test]
+fn pool_matches_scoped_threads_and_serial_bit_for_bit() {
+    let mut rng = Rng::seed_from(106);
+    // Includes shapes above the internal parallelism threshold so the pool
+    // dispatch (not just the inline part-0 path) really runs.
+    for &(n, q, c) in &[(7usize, 16usize, 4usize), (40, 65, 7), (80, 100, 16), (128, 128, 10)] {
+        let xhat = randn(n, q, &mut rng);
+        let theta = randn(q, c, &mut rng);
+        let serial = NativeExec::single().predict(&xhat, &theta);
+        for threads in [1usize, 2, 8] {
+            let pooled = NativeExec::new(threads).predict(&xhat, &theta);
+            let scoped = scoped_predict(&xhat, &theta, threads);
+            assert_eq!(
+                pooled.as_slice(),
+                serial.as_slice(),
+                "predict({n}x{q}x{c}): pool at {threads} threads diverged from serial"
+            );
+            assert_eq!(
+                pooled.as_slice(),
+                scoped.as_slice(),
+                "predict({n}x{q}x{c}): pool at {threads} threads diverged from thread::scope"
+            );
+        }
+    }
+}
+
+#[test]
+fn grad_is_pool_invariant_at_1_2_8_threads() {
+    // The round loop's kernel: serial reference vs the pooled kernel at
+    // {1, 2, 8}, bit-for-bit (stronger than the documented 1e-4 bound —
+    // this is what keeps training histories thread-count invariant).
+    let mut rng = Rng::seed_from(107);
+    for &(l, q, c) in &[(13usize, 15usize, 10usize), (40, 65, 7), (128, 128, 10)] {
+        let xhat = randn(l, q, &mut rng);
+        let y = randn(l, c, &mut rng);
+        let theta = randn(q, c, &mut rng);
+        let mask = mask_for(l);
+        let want = ref_grad(&xhat, &y, &theta, &mask);
+        for threads in [1usize, 2, 8] {
+            let got = NativeExec::new(threads).grad(&xhat, &y, &theta, &mask);
+            assert_eq!(
+                got.as_slice(),
+                want.as_slice(),
+                "grad({l}x{q}x{c}) diverged from the serial reference at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn session_runs_reuse_pool_workers_with_stable_exec_count() {
+    use std::collections::HashSet;
+    use std::sync::Mutex;
+
+    let session = ExperimentBuilder::preset("tiny")
+        .unwrap()
+        .epochs(2)
+        .threads(3)
+        .build()
+        .unwrap();
+    let rt = session.runtime();
+    let pool = rt.worker_pool().expect("native backend");
+    assert_eq!(pool.threads(), 3);
+    let participant_ids = || {
+        let seen = Mutex::new(HashSet::new());
+        pool.run(3, &|_part, _scratch| {
+            seen.lock().unwrap().insert(std::thread::current().id());
+        });
+        seen.into_inner().unwrap()
+    };
+    let workers_before = participant_ids();
+    assert_eq!(workers_before.len(), 3, "3 parts must land on 3 distinct threads");
+
+    // Two identical runs: the same parked workers service both (no
+    // per-round thread churn) and the executor is invoked the exact same
+    // number of times, producing the exact same model.
+    let c0 = rt.exec_count();
+    let r1 = session.run(&mut CodedFedL::new(0.3)).unwrap();
+    let c1 = rt.exec_count();
+    let r2 = session.run(&mut CodedFedL::new(0.3)).unwrap();
+    let c2 = rt.exec_count();
+    assert_eq!(c1 - c0, c2 - c1, "exec_count must be identical across identical runs");
+    assert!(c1 > c0, "runs must actually execute kernels");
+    assert_eq!(r1.theta.as_slice(), r2.theta.as_slice());
+
+    let workers_after = participant_ids();
+    assert_eq!(
+        workers_before, workers_after,
+        "Session::run must reuse the pool's parked workers, not spawn new ones"
+    );
 }
