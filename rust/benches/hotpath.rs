@@ -23,7 +23,7 @@ use codedfedl::conf::ExperimentConfig;
 use codedfedl::rng::Rng;
 use codedfedl::runtime::{GradJob, Runtime, RuntimeShapes};
 use codedfedl::schemes::CodedFedL;
-use codedfedl::tensor::Mat;
+use codedfedl::tensor::{Mat, SimdPolicy};
 use codedfedl::topology::FleetSpec;
 use codedfedl::ExperimentBuilder;
 
@@ -37,9 +37,9 @@ fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
 }
 
 /// Pin every native kernel to its reference oracle before any timing is
-/// recorded. `threads = 1` must match bit-for-bit; other thread counts are
-/// held to 1e-4 (they match exactly too — output rows are partitioned —
-/// but the gate is the documented contract, not the implementation).
+/// recorded, under **both** SIMD policies. `simd = scalar, threads = 1`
+/// must match bit-for-bit; every other combination (other thread counts,
+/// the detected SIMD ISA's fused multiply-adds) is held to 1e-4.
 fn verify_kernels() -> anyhow::Result<()> {
     let shapes = RuntimeShapes { d: 23, q: 65, c: 10, l_client: 37, u_max: 81, b_embed: 37 };
     let mut rng = Rng::seed_from(7);
@@ -65,31 +65,42 @@ fn verify_kernels() -> anyhow::Result<()> {
     let encode_x_want = gw.matmul_ref(&xhat);
     let encode_y_want = gw.matmul_ref(&y);
 
-    for threads in [1usize, 4] {
-        let tol = if threads == 1 { 0.0 } else { 1e-4 };
-        let rt = Runtime::native_with_threads(shapes, threads);
-        let checks = [
-            ("embed", rt.embed(&x, &omega, &delta)?.max_abs_diff(&embed_want)),
-            ("grad", rt.grad(&xhat, &y, &theta, &mask)?.max_abs_diff(&grad_want)),
-            ("predict", rt.predict(&xhat, &theta)?.max_abs_diff(&pred)),
-        ];
-        let (xp, yp) = rt.encode(&g, &w, &xhat, &y)?;
-        let enc = [
-            ("encode.x", xp.rows_slice(0, 60).max_abs_diff(&encode_x_want)),
-            ("encode.y", yp.rows_slice(0, 60).max_abs_diff(&encode_y_want)),
-        ];
-        for (name, diff) in checks.iter().chain(enc.iter()) {
-            // embed/predict oracles share the kernels' accumulation order
-            // exactly; the grad/encode oracles go through an explicit
-            // transpose / pre-scaled generator, so they get the f32 budget.
-            let bound = if *name == "embed" || *name == "predict" { tol } else { tol.max(1e-4) };
-            anyhow::ensure!(
-                *diff <= bound,
-                "kernel {name} diverged from oracle at {threads} threads: max|Δ| = {diff}"
-            );
+    for policy in [SimdPolicy::Scalar, SimdPolicy::Auto] {
+        for threads in [1usize, 4] {
+            let rt = Runtime::native_with(shapes, threads, policy);
+            // embed/predict oracles share the scalar kernels' accumulation
+            // order exactly, so simd=scalar at one thread is bit-exact;
+            // the grad/encode oracles go through an explicit transpose /
+            // pre-scaled generator — and any SIMD ISA uses fused
+            // multiply-adds — so everything else gets the f32 budget.
+            let exact = policy == SimdPolicy::Scalar && threads == 1;
+            let checks = [
+                ("embed", rt.embed(&x, &omega, &delta)?.max_abs_diff(&embed_want)),
+                ("grad", rt.grad(&xhat, &y, &theta, &mask)?.max_abs_diff(&grad_want)),
+                ("predict", rt.predict(&xhat, &theta)?.max_abs_diff(&pred)),
+            ];
+            let (xp, yp) = rt.encode(&g, &w, &xhat, &y)?;
+            let enc = [
+                ("encode.x", xp.rows_slice(0, 60).max_abs_diff(&encode_x_want)),
+                ("encode.y", yp.rows_slice(0, 60).max_abs_diff(&encode_y_want)),
+            ];
+            for (name, diff) in checks.iter().chain(enc.iter()) {
+                let bound = if exact && (*name == "embed" || *name == "predict") {
+                    0.0
+                } else {
+                    1e-4
+                };
+                anyhow::ensure!(
+                    *diff <= bound,
+                    "kernel {name} diverged from oracle at {threads} threads \
+                     (simd={}, isa={}): max|Δ| = {diff}",
+                    policy,
+                    rt.isa_name()
+                );
+            }
         }
     }
-    println!("kernel oracle check passed (threads 1, 4)");
+    println!("kernel oracle check passed (simd scalar+auto, threads 1, 4)");
     Ok(())
 }
 
@@ -118,28 +129,65 @@ fn main() -> anyhow::Result<()> {
     // --- kernel executors at the default artifact shapes ---
     let rt = load_runtime(&cfg)?;
     let threads = rt.threads();
+    report.isa = rt.isa_name().to_string();
+    println!("selected GEMM isa: {} ({} threads)", rt.isa_name(), threads);
     let s = shapes_for(&cfg);
     let xhat = randn(s.l_client, s.q, &mut rng);
     let y = randn(s.l_client, s.c, &mut rng);
     let theta = randn(s.q, s.c, &mut rng);
     let mask = vec![1.0f32; s.l_client];
+    // grad = prediction + transpose-accumulate passes: 2·l·q·c madds.
+    let grad_flops = |l: usize| (4 * l * s.q * s.c) as u64;
     let (wu, it) = bench_iters(3, 50);
-    report.bench("runtime::grad", "client 200x512x10", threads, wu, it, || {
-        std::hint::black_box(rt.grad(&xhat, &y, &theta, &mask).unwrap());
-    });
+    report.bench_flops(
+        "runtime::grad",
+        "client 200x512x10",
+        threads,
+        wu,
+        it,
+        grad_flops(s.l_client),
+        || {
+            std::hint::black_box(rt.grad(&xhat, &y, &theta, &mask).unwrap());
+        },
+    );
+
+    // The same shape through the forced-scalar runtime: the tracked
+    // SIMD-vs-scalar comparison row (PERF.md's speedup column).
+    let rt_scalar = Runtime::native_with(s, threads, SimdPolicy::Scalar);
+    let (wu, it) = bench_iters(3, 50);
+    report.bench_flops(
+        "runtime::grad",
+        "client 200x512x10 simd=scalar",
+        threads,
+        wu,
+        it,
+        grad_flops(s.l_client),
+        || {
+            std::hint::black_box(rt_scalar.grad(&xhat, &y, &theta, &mask).unwrap());
+        },
+    );
 
     let xp = randn(s.u_max, s.q, &mut rng);
     let yp = randn(s.u_max, s.c, &mut rng);
     let ones = vec![1.0f32; s.u_max];
     let (wu, it) = bench_iters(3, 20);
-    report.bench("runtime::grad", "server 1536x512x10", threads, wu, it, || {
-        std::hint::black_box(rt.grad(&xp, &yp, &theta, &ones).unwrap());
-    });
+    report.bench_flops(
+        "runtime::grad",
+        "server 1536x512x10",
+        threads,
+        wu,
+        it,
+        grad_flops(s.u_max),
+        || {
+            std::hint::black_box(rt.grad(&xp, &yp, &theta, &ones).unwrap());
+        },
+    );
 
     let g = randn(s.u_max, s.l_client, &mut rng);
     let w = vec![0.5f32; s.l_client];
     let (wu, it) = bench_iters(3, 20);
-    report.bench("runtime::encode", "1536x200 -> parity", threads, wu, it, || {
+    let encode_flops = (2 * s.u_max * s.l_client * (s.q + s.c)) as u64;
+    report.bench_flops("runtime::encode", "1536x200 -> parity", threads, wu, it, encode_flops, || {
         std::hint::black_box(rt.encode(&g, &w, &xhat, &y).unwrap());
     });
 
@@ -147,13 +195,15 @@ fn main() -> anyhow::Result<()> {
     let omega = randn(s.d, s.q, &mut rng);
     let delta = vec![0.3f32; s.q];
     let (wu, it) = bench_iters(3, 20);
-    report.bench("runtime::embed", "200x784 -> 200x512", threads, wu, it, || {
+    let embed_flops = (2 * s.b_embed * s.d * s.q) as u64;
+    report.bench_flops("runtime::embed", "200x784 -> 200x512", threads, wu, it, embed_flops, || {
         std::hint::black_box(rt.embed(&x_raw, &omega, &delta).unwrap());
     });
 
     let test = randn(2000, s.q, &mut rng);
     let (wu, it) = bench_iters(3, 20);
-    report.bench("runtime::predict", "2000x512x10", threads, wu, it, || {
+    let predict_flops = (2 * 2000 * s.q * s.c) as u64;
+    report.bench_flops("runtime::predict", "2000x512x10", threads, wu, it, predict_flops, || {
         std::hint::black_box(rt.predict(&test, &theta).unwrap());
     });
 
@@ -161,7 +211,7 @@ fn main() -> anyhow::Result<()> {
     let mut acc = Mat::zeros(s.q, s.c);
     let gmat = randn(s.q, s.c, &mut rng);
     let (wu, it) = bench_iters(10, 2000);
-    report.bench("Mat::axpy", "512x10 aggregate", 1, wu, it, || {
+    report.bench_flops("Mat::axpy", "512x10 aggregate", 1, wu, it, (2 * s.q * s.c) as u64, || {
         acc.axpy(0.5, &gmat);
         std::hint::black_box(&acc);
     });
@@ -232,10 +282,12 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(session.run(&mut CodedFedL::new(0.3)).unwrap());
     });
     println!(
-        "\n{} executions so far: {} ({} threads) — per-round exec count drives L3 overhead",
+        "\n{} executions so far: {} ({} threads, isa {}) — per-round exec count drives L3 \
+         overhead",
         session.runtime().backend_name(),
         session.runtime().exec_count(),
         session.runtime().threads(),
+        session.runtime().isa_name(),
     );
 
     let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());

@@ -4,8 +4,12 @@
 Usage: validate_bench_baseline.py <committed_baseline.json> <smoke_run.json>
 
 Checks (coverage gates, not timing gates — smoke numbers are meaningless):
-  * both documents parse and carry the current schema (2) with a
-    well-formed, non-empty record list (op/shape/ns_per_iter/threads/iters);
+  * both documents parse and carry the current schema (3) with a
+    well-formed, non-empty record list (op/shape/ns_per_iter/threads/iters
+    plus the schema-3 ``gflops`` field: a positive number or null);
+  * both documents record a non-empty ``isa`` string (the GEMM microkernel
+    the run resolved — ``scalar`` / ``avx2+fma`` / ``neon`` / ``pjrt``),
+    so perf numbers are always attributable to an instruction set;
   * the committed baseline is a full-mode run (``smoke: false``) — smoke
     numbers must never be recorded as a baseline (rust/PERF.md);
   * the committed baseline records a measured, *zero* ``allocs_per_round``
@@ -14,13 +18,17 @@ Checks (coverage gates, not timing gates — smoke numbers are meaningless):
     smoke run, so a bench that silently stops running cannot leave a stale
     baseline row behind.
 
-Exits non-zero with one line per failure.
+Advisory (printed as WARN, never fails the job — smoke timings are noisy
+and run on whatever machine CI hands out): any shared (op, shape) whose
+smoke throughput regressed more than 20% against the committed baseline
+is flagged, so a real kernel regression leaves a visible trail in the log
+next to the uploaded artifact.
 """
 
 import json
 import sys
 
-SCHEMA = 2
+SCHEMA = 3
 RECORD_FIELDS = {
     "op": str,
     "shape": str,
@@ -28,27 +36,58 @@ RECORD_FIELDS = {
     "threads": int,
     "iters": int,
 }
+# Warn when a smoke run is this much slower than the committed baseline.
+REGRESSION_WARN_RATIO = 1.20
 
 
 def check_doc(doc, name, errors):
-    """Schema-validate one report; returns its (op, shape) set."""
+    """Schema-validate one report; returns its {(op, shape): record} map."""
     if doc.get("schema") != SCHEMA:
         errors.append(f"{name}: schema {doc.get('schema')!r} != {SCHEMA}")
+    isa = doc.get("isa")
+    if not isinstance(isa, str) or not isa:
+        errors.append(f"{name}: isa must be a non-empty string, got {isa!r}")
     records = doc.get("records")
     if not isinstance(records, list) or not records:
         errors.append(f"{name}: records must be a non-empty list")
-        return set()
-    keys = set()
+        return {}
+    by_key = {}
     for i, rec in enumerate(records):
         for field, ty in RECORD_FIELDS.items():
             if not isinstance(rec.get(field), ty):
                 errors.append(f"{name}: records[{i}].{field} is {rec.get(field)!r}, want {ty}")
         if isinstance(rec.get("ns_per_iter"), (int, float)) and rec["ns_per_iter"] <= 0:
             errors.append(f"{name}: records[{i}].ns_per_iter must be > 0")
-        keys.add((rec.get("op"), rec.get("shape")))
-    if len(keys) != len(records):
+        if "gflops" not in rec:
+            errors.append(f"{name}: records[{i}] is missing the schema-3 gflops field")
+        elif rec["gflops"] is not None:
+            if not isinstance(rec["gflops"], (int, float)) or rec["gflops"] <= 0:
+                errors.append(f"{name}: records[{i}].gflops is {rec['gflops']!r}, want > 0 or null")
+        by_key[(rec.get("op"), rec.get("shape"))] = rec
+    if len(by_key) != len(records):
         errors.append(f"{name}: duplicate (op, shape) records")
-    return keys
+    return by_key
+
+
+def warn_on_regressions(baseline, smoke):
+    """Advisory throughput diff on shared keys; never fails the run."""
+    warned = 0
+    for key in sorted(set(baseline) & set(smoke), key=str):
+        base_ns = baseline[key].get("ns_per_iter")
+        smoke_ns = smoke[key].get("ns_per_iter")
+        if not isinstance(base_ns, (int, float)) or not isinstance(smoke_ns, (int, float)):
+            continue
+        if base_ns <= 0 or smoke_ns <= 0:
+            continue
+        if smoke_ns > base_ns * REGRESSION_WARN_RATIO:
+            warned += 1
+            print(
+                f"WARN: {key}: smoke run {smoke_ns:.0f} ns/iter is "
+                f"{smoke_ns / base_ns:.2f}x the committed baseline ({base_ns:.0f} ns/iter) "
+                f"— advisory only (smoke timings are noisy)",
+                file=sys.stderr,
+            )
+    return warned
 
 
 def main(baseline_path, smoke_path):
@@ -58,8 +97,8 @@ def main(baseline_path, smoke_path):
     with open(smoke_path) as f:
         smoke = json.load(f)
 
-    baseline_keys = check_doc(baseline, "baseline", errors)
-    smoke_keys = check_doc(smoke, "smoke run", errors)
+    baseline_recs = check_doc(baseline, "baseline", errors)
+    smoke_recs = check_doc(smoke, "smoke run", errors)
 
     if baseline.get("smoke") is not False:
         errors.append("baseline: must be a full-mode run (smoke: false)")
@@ -68,16 +107,18 @@ def main(baseline_path, smoke_path):
             "baseline: allocs_per_round must be the measured value 0, got "
             f"{baseline.get('allocs_per_round')!r}"
         )
-    for key in sorted(baseline_keys - smoke_keys, key=str):
+    for key in sorted(set(baseline_recs) - set(smoke_recs), key=str):
         errors.append(f"baseline record not covered by the smoke run: {key}")
 
     if errors:
         for e in errors:
             print(f"FAIL: {e}", file=sys.stderr)
         return 1
+    warned = warn_on_regressions(baseline_recs, smoke_recs)
     print(
-        f"ok: baseline ({len(baseline_keys)} records) schema-valid and fully "
-        f"covered by the smoke run ({len(smoke_keys)} records)"
+        f"ok: baseline ({len(baseline_recs)} records, isa {baseline.get('isa')!r}) "
+        f"schema-valid and fully covered by the smoke run ({len(smoke_recs)} records, "
+        f"isa {smoke.get('isa')!r}); {warned} advisory throughput warning(s)"
     )
     return 0
 

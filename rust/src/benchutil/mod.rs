@@ -110,6 +110,10 @@ pub struct BenchRecord {
     pub threads: usize,
     /// Timed iterations behind the median.
     pub iters: usize,
+    /// Achieved throughput in GFLOP/s (`flops / ns_per_iter`), for ops
+    /// with a known multiply-add count (schema 3). `None` for composite
+    /// targets (full rounds/epochs) whose flop count is not meaningful.
+    pub gflops: Option<f64>,
 }
 
 /// Collects [`TimingStats`] into the tracked-baseline JSON the perf
@@ -124,6 +128,11 @@ pub struct BenchReport {
     /// measure it; the committed baseline must record `Some(0)` — the
     /// allocation-free contract of `tests/alloc_gate.rs`.
     pub allocs_per_round: Option<u64>,
+    /// The GEMM microkernel ISA the run's runtime resolved
+    /// (`Runtime::isa_name()`: `scalar` / `avx2+fma` / `neon` / `pjrt`)
+    /// — required non-empty by the schema-3 baseline validator so perf
+    /// numbers are always attributable to an instruction set.
+    pub isa: String,
 }
 
 impl BenchReport {
@@ -131,14 +140,29 @@ impl BenchReport {
         Self::default()
     }
 
-    /// Append a record for an already-timed op.
+    /// Append a record for an already-timed op, without a flop count.
     pub fn record(&mut self, op: &str, shape: &str, threads: usize, stats: &TimingStats) {
+        self.record_flops(op, shape, threads, stats, None);
+    }
+
+    /// Append a record for an already-timed op; `flops` (multiply-adds
+    /// counted as 2 floating-point ops) yields the record's GFLOP/s.
+    pub fn record_flops(
+        &mut self,
+        op: &str,
+        shape: &str,
+        threads: usize,
+        stats: &TimingStats,
+        flops: Option<u64>,
+    ) {
         self.records.push(BenchRecord {
             op: op.to_string(),
             shape: shape.to_string(),
             ns_per_iter: stats.median_ns,
             threads,
             iters: stats.iters,
+            // flops/ns ≡ GFLOP/s
+            gflops: flops.map(|f| f as f64 / stats.median_ns),
         });
     }
 
@@ -159,27 +183,51 @@ impl BenchReport {
         stats
     }
 
+    /// [`BenchReport::bench`] for an op with a known flop count: records
+    /// achieved GFLOP/s alongside the timing.
+    #[allow(clippy::too_many_arguments)] // bench() plus one flop count
+    pub fn bench_flops(
+        &mut self,
+        op: &str,
+        shape: &str,
+        threads: usize,
+        warmup: usize,
+        iters: usize,
+        flops: u64,
+        f: impl FnMut(),
+    ) -> TimingStats {
+        let stats = bench(&format!("{op} ({shape})"), warmup, iters, f);
+        self.record_flops(op, shape, threads, &stats, Some(flops));
+        stats
+    }
+
     /// The report as a JSON document.
     pub fn to_json(&self) -> String {
         fn esc(s: &str) -> String {
             s.replace('\\', "\\\\").replace('"', "\\\"")
         }
-        let mut out = String::from("{\n  \"schema\": 2,\n");
+        let mut out = String::from("{\n  \"schema\": 3,\n");
         out.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
+        out.push_str(&format!("  \"isa\": \"{}\",\n", esc(&self.isa)));
         match self.allocs_per_round {
             Some(n) => out.push_str(&format!("  \"allocs_per_round\": {n},\n")),
             None => out.push_str("  \"allocs_per_round\": null,\n"),
         }
         out.push_str("  \"records\": [\n");
         for (i, r) in self.records.iter().enumerate() {
+            let gflops = match r.gflops {
+                Some(g) => format!("{g:.3}"),
+                None => "null".to_string(),
+            };
             out.push_str(&format!(
                 "    {{\"op\": \"{}\", \"shape\": \"{}\", \"ns_per_iter\": {:.1}, \
-                 \"threads\": {}, \"iters\": {}}}{}\n",
+                 \"threads\": {}, \"iters\": {}, \"gflops\": {}}}{}\n",
                 esc(&r.op),
                 esc(&r.shape),
                 r.ns_per_iter,
                 r.threads,
                 r.iters,
+                gflops,
                 if i + 1 == self.records.len() { "" } else { "," }
             ));
         }
@@ -289,15 +337,20 @@ mod tests {
     #[test]
     fn bench_report_serialises_records() {
         let mut rep = BenchReport::new();
+        rep.isa = "avx2+fma".to_string();
         let stats = TimingStats { iters: 5, median_ns: 1234.5, mean_ns: 1300.0, mad_ns: 10.0 };
-        rep.record("runtime::grad", "client 200x512x10", 4, &stats);
+        rep.record_flops("runtime::grad", "client 200x512x10", 4, &stats, Some(2_469));
         rep.record("full coded epoch", "tiny", 1, &stats);
         let json = rep.to_json();
-        assert!(json.contains("\"schema\": 2"), "{json}");
+        assert!(json.contains("\"schema\": 3"), "{json}");
+        assert!(json.contains("\"isa\": \"avx2+fma\""), "{json}");
         assert!(json.contains("\"op\": \"runtime::grad\""), "{json}");
         assert!(json.contains("\"shape\": \"client 200x512x10\""), "{json}");
         assert!(json.contains("\"ns_per_iter\": 1234.5"), "{json}");
         assert!(json.contains("\"threads\": 4"), "{json}");
+        // 2469 flops / 1234.5 ns = 2.000 GFLOP/s; composite rows get null
+        assert!(json.contains("\"gflops\": 2.000"), "{json}");
+        assert!(json.contains("\"gflops\": null"), "{json}");
         // unmeasured allocation gate serialises as null…
         assert!(json.contains("\"allocs_per_round\": null"), "{json}");
         // exactly one trailing comma between the two records, none after the last

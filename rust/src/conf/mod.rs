@@ -20,6 +20,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::coding::GeneratorKind;
+use crate::tensor::SimdPolicy;
 
 /// Back-compat alias for the pre-0.2 closed scheme enum. New code should
 /// use the open [`crate::schemes::Scheme`] trait (or
@@ -68,6 +69,11 @@ pub struct ExperimentConfig {
     /// per call. Results are identical for every value; 1 reproduces the
     /// serial executor.
     pub threads: usize,
+    /// Native-backend SIMD microkernel policy: `auto` (detect AVX2+FMA /
+    /// NEON once at session construction; deterministic per ISA, ≤ 1e-4
+    /// from scalar) or `scalar` (the bit-exact reproducibility anchor —
+    /// identical to the pre-SIMD backend for every thread count).
+    pub simd: SimdPolicy,
     /// Max parity rows the server can process (u_max, AOT-compiled shape).
     pub u_max: usize,
     /// Generator matrix distribution.
@@ -101,6 +107,7 @@ impl Default for ExperimentConfig {
             l2: 9e-6,
             eval_every: 1,
             threads: 0,
+            simd: SimdPolicy::Auto,
             u_max: 1536,
             generator: GeneratorKind::Normal,
             train_size: 30_000,
@@ -133,7 +140,7 @@ const KNOWN_KEYS: &[(&str, &[&str])] = &[
         ],
     ),
     ("coding", &["u_max", "generator"]),
-    ("runtime", &["threads"]),
+    ("runtime", &["threads", "simd"]),
 ];
 
 impl ExperimentConfig {
@@ -246,6 +253,12 @@ impl ExperimentConfig {
 
         let rtc = sect("runtime");
         rtc.get_usize("threads", &mut c.threads)?;
+        if let Some(v) = rtc.map.get("simd") {
+            let s = v.as_str().ok_or_else(|| rtc.bad("simd", "string", v))?;
+            c.simd = s
+                .parse()
+                .map_err(|e: String| ConfError::Invalid(format!("[runtime] simd: {e}")))?;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -477,6 +490,23 @@ generator = "rademacher"
         assert!(e.contains("eval_every"), "{e}");
         // threads = 0 (auto) is valid
         assert!(ExperimentConfig::from_str_conf("[runtime]\nthreads = 0\n").is_ok());
+    }
+
+    #[test]
+    fn simd_policy_parses_and_rejects_bad_values() {
+        assert_eq!(ExperimentConfig::default().simd, SimdPolicy::Auto);
+        let c = ExperimentConfig::from_str_conf("[runtime]\nsimd = \"scalar\"\n").unwrap();
+        assert_eq!(c.simd, SimdPolicy::Scalar);
+        let c = ExperimentConfig::from_str_conf("[runtime]\nsimd = \"auto\"\n").unwrap();
+        assert_eq!(c.simd, SimdPolicy::Auto);
+        // unknown policy names the key and lists the accepted values
+        let e = ExperimentConfig::from_str_conf("[runtime]\nsimd = \"avx9\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("simd") && e.contains("avx9") && e.contains("scalar"), "{e}");
+        // mistyped value names section and key
+        let e = ExperimentConfig::from_str_conf("[runtime]\nsimd = 2\n").unwrap_err().to_string();
+        assert!(e.contains("[runtime]") && e.contains("simd"), "{e}");
     }
 
     #[test]

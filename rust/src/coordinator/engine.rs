@@ -10,10 +10,14 @@
 //! Per round, every participating node's gradient is *really* executed
 //! through the runtime's grad executor — the round's independent client
 //! requests go through [`Runtime::grad_batch_into`], which fans them out
-//! across the native backend's persistent worker pool; the delay model
-//! only decides arrivals and the simulated wall-clock cost of the round.
+//! across the native backend's persistent worker pool and through its
+//! construction-time GEMM ISA (`[runtime] simd`); the delay model only
+//! decides arrivals and the simulated wall-clock cost of the round.
 //! Aggregation always folds the results in plan order, so the aggregate's
-//! bits are independent of the thread count.
+//! bits are independent of the thread count — and, for a fixed ISA, of
+//! nothing else: `simd = "scalar"` reproduces pre-SIMD histories exactly,
+//! while a SIMD ISA yields its own deterministic history (≤ 1e-4 kernel
+//! deltas from scalar).
 //!
 //! ## Steady-state allocation discipline
 //!

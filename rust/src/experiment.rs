@@ -28,6 +28,7 @@ use crate::conf::{ConfError, ExperimentConfig};
 use crate::coordinator::{engine, FedSetup, RoundObserver, TrainOutcome};
 use crate::runtime::{Runtime, RuntimeShapes};
 use crate::schemes::{Scheme, SchemeSpec};
+use crate::tensor::SimdPolicy;
 
 /// Derive the runtime shape set from an experiment config (must agree with
 /// `python/compile/shapes.py`; the PJRT manifest check fails fast
@@ -44,9 +45,11 @@ pub fn shapes_for(cfg: &ExperimentConfig) -> RuntimeShapes {
 }
 
 /// Load the runtime for a config (native worker-thread count comes from
-/// `cfg.threads`; `0` = available parallelism).
+/// `cfg.threads`, `0` = available parallelism; the GEMM microkernel ISA
+/// is resolved once here from `cfg.simd`).
 pub fn load_runtime(cfg: &ExperimentConfig) -> Result<Runtime> {
-    Runtime::load_with(Path::new(&cfg.artifacts_dir), shapes_for(cfg), cfg.threads)
+    let dir = Path::new(&cfg.artifacts_dir);
+    Runtime::load_with_policy(dir, shapes_for(cfg), cfg.threads, cfg.simd)
 }
 
 macro_rules! setters {
@@ -131,6 +134,9 @@ impl ExperimentBuilder {
         eval_every: usize,
         /// Native worker threads (0 = available parallelism).
         threads: usize,
+        /// SIMD microkernel policy (`Auto` detects AVX2+FMA / NEON once;
+        /// `Scalar` pins the bit-exact fallback).
+        simd: SimdPolicy,
         /// Max parity rows (AOT-compiled shape).
         u_max: usize,
         /// Generator matrix distribution.

@@ -60,19 +60,32 @@
 //!
 //! ## Performance
 //!
-//! The native backend is the measured hot path: kernels dispatch onto a
+//! The native backend is the measured hot path: every matmul bottoms out
+//! in an **ISA-dispatched GEMM microkernel** ([`tensor::gemm_into`] —
+//! explicit AVX2+FMA on x86_64 and NEON on aarch64, 4×16 register
+//! blocks, with the scalar register-tile loop as the always-available
+//! fallback and determinism oracle), kernels dispatch onto a
 //! **persistent worker pool** ([`runtime::pool`], spawned once per
 //! [`Session`], workers parked between jobs), θ is packed once per round
-//! into a tile-aligned panel shared by every kernel call, and the engine
+//! into a tile-aligned panel shared by every kernel call (SIMD A-operand
+//! packs live in the workers' persistent scratch arenas), and the engine
 //! reuses all per-round buffers — a warm training round performs zero
 //! heap allocations on the compute path (`tests/alloc_gate.rs`). See
-//! `rust/PERF.md` for the kernel/threading/allocation design, the
-//! tracked `BENCH_hotpath.json` baseline (`cargo bench --bench hotpath`),
-//! and how to compare runs across PRs. Thread count comes from
-//! `[runtime] threads` / `--threads` / [`ExperimentBuilder::threads`]
-//! (0 = all cores) and never changes results; `[training] eval_every`
-//! thins the per-round evaluation probe without touching the training
-//! math.
+//! `rust/PERF.md` for the kernel/dispatch/threading/allocation design,
+//! the tracked `BENCH_hotpath.json` baseline (schema 3: per-op GFLOP/s +
+//! the selected ISA; `cargo bench --bench hotpath`), and how to compare
+//! runs across PRs.
+//!
+//! Knobs: thread count comes from `[runtime] threads` / `--threads` /
+//! [`ExperimentBuilder::threads`] (0 = all cores) and never changes
+//! results. The microkernel comes from `[runtime] simd` / `--simd` /
+//! [`ExperimentBuilder::simd`]: `auto` (default) detects the best ISA
+//! once per session — deterministic and thread-count invariant for a
+//! fixed host, within 1e-4 of scalar (fused multiply-adds round
+//! differently); `scalar` pins the bit-exact fallback, reproducing
+//! pre-SIMD histories exactly — use it when comparing training runs
+//! across machines with different ISAs. `[training] eval_every` thins
+//! the per-round evaluation probe without touching the training math.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index,
 //! `EXPERIMENTS.md` for paper-vs-measured results, and

@@ -37,6 +37,12 @@ fn commands() -> Vec<Command> {
             default: None,
             is_flag: false,
         },
+        OptSpec {
+            name: "simd",
+            help: "GEMM microkernel policy: auto (detect AVX2/NEON) | scalar (bit-exact)",
+            default: None,
+            is_flag: false,
+        },
     ];
     vec![
         Command {
@@ -112,6 +118,9 @@ fn builder_from(args: &Args) -> Result<ExperimentBuilder> {
     }
     if let Some(k) = args.parse_usize("eval-every").map_err(anyhow::Error::msg)? {
         b = b.eval_every(k);
+    }
+    if let Some(s) = args.get("simd") {
+        b = b.simd(s.parse().map_err(anyhow::Error::msg)?);
     }
     Ok(b)
 }

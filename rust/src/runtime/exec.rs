@@ -39,7 +39,7 @@ use anyhow::Context;
 
 use super::native::NativeExec;
 use super::pool::WorkerPool;
-use crate::tensor::{pack_tile_panel, tile_padded_cols, Mat};
+use crate::tensor::{pack_tile_panel, tile_padded_cols, Isa, Mat, SimdPolicy};
 
 #[cfg(feature = "pjrt")]
 use super::manifest::Manifest;
@@ -182,35 +182,57 @@ impl Runtime {
     }
 
     /// [`Runtime::load`] with an explicit native worker-thread count
-    /// (`0` = available parallelism; ignored by the PJRT backend).
+    /// (`0` = available parallelism; ignored by the PJRT backend) and the
+    /// default `auto` SIMD policy.
     pub fn load_with(
         artifacts_dir: &Path,
         shapes: RuntimeShapes,
         threads: usize,
     ) -> Result<Runtime> {
+        Self::load_with_policy(artifacts_dir, shapes, threads, SimdPolicy::Auto)
+    }
+
+    /// [`Runtime::load_with`] plus an explicit SIMD policy for the native
+    /// backend's GEMM microkernel (`auto` detects AVX2+FMA / NEON once at
+    /// construction, `scalar` pins the bit-exact fallback; ignored by the
+    /// PJRT backend, which executes compiled artifacts).
+    pub fn load_with_policy(
+        artifacts_dir: &Path,
+        shapes: RuntimeShapes,
+        threads: usize,
+        simd: SimdPolicy,
+    ) -> Result<Runtime> {
         #[cfg(feature = "pjrt")]
         {
-            let _ = threads;
+            let _ = (threads, simd);
             Self::load_pjrt(artifacts_dir, shapes)
         }
         #[cfg(not(feature = "pjrt"))]
         {
             let _ = artifacts_dir;
-            Ok(Self::native_with_threads(shapes, threads))
+            Ok(Self::native_with(shapes, threads, simd))
         }
     }
 
-    /// The pure-Rust executor (always available), automatic thread count.
+    /// The pure-Rust executor (always available), automatic thread count
+    /// and `auto` SIMD policy.
     pub fn native(shapes: RuntimeShapes) -> Runtime {
         Self::native_with_threads(shapes, 0)
     }
 
     /// The pure-Rust executor with an explicit worker-thread count
-    /// (`0` = available parallelism). The worker pool is spawned here,
-    /// once. Results are identical for every count; `threads = 1`
-    /// reproduces the serial executor bit-for-bit.
+    /// (`0` = available parallelism) and `auto` SIMD policy. The worker
+    /// pool is spawned here, once. Results are identical for every
+    /// count; `threads = 1` reproduces the serial executor bit-for-bit.
     pub fn native_with_threads(shapes: RuntimeShapes, threads: usize) -> Runtime {
-        let exec = NativeExec::new(threads);
+        Self::native_with(shapes, threads, SimdPolicy::Auto)
+    }
+
+    /// [`Runtime::native_with_threads`] plus an explicit [`SimdPolicy`]
+    /// — the resolved ISA ([`Runtime::isa`]) is fixed here, once, and
+    /// every kernel call dispatches through it.
+    pub fn native_with(shapes: RuntimeShapes, threads: usize, simd: SimdPolicy) -> Runtime {
+        let exec = NativeExec::with_policy(threads, simd);
         Runtime {
             shapes,
             threads: exec.threads(),
@@ -262,6 +284,27 @@ impl Runtime {
     /// Resolved worker-thread count (≥ 1; always 1 on the PJRT backend).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The GEMM instruction set the native backend resolved at
+    /// construction (`None` on the PJRT backend, which runs compiled
+    /// artifacts instead of the in-process microkernels).
+    pub fn isa(&self) -> Option<Isa> {
+        match &self.backend {
+            Backend::Native(nb) => Some(nb.isa()),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => None,
+        }
+    }
+
+    /// Telemetry string for the selected microkernel ISA (`"scalar"`,
+    /// `"avx2+fma"`, `"neon"`, or `"pjrt"` on the artifact backend) —
+    /// recorded in `BENCH_hotpath.json` (schema 3).
+    pub fn isa_name(&self) -> &'static str {
+        match self.isa() {
+            Some(isa) => isa.name(),
+            None => "pjrt",
+        }
     }
 
     /// The native backend's persistent worker pool (`None` on PJRT).

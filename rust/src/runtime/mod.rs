@@ -5,15 +5,17 @@
 //! * **native** (default feature set, and the default training backend) —
 //!   pure-Rust implementations of the four kernel contracts
 //!   (`runtime::native`), numerically faithful to the jnp oracles in
-//!   `python/compile/kernels/ref.py` and built for throughput: blocked
-//!   register-tiled matmuls, fused residual/mask and weight-product
+//!   `python/compile/kernels/ref.py` and built for throughput: an
+//!   ISA-dispatched GEMM microkernel (`tensor::gemm_into` — AVX2+FMA /
+//!   NEON selected once at construction from `[runtime] simd`, scalar
+//!   register-tile fallback), fused residual/mask and weight-product
 //!   passes, and output-row parallelism across a *persistent* worker pool
 //!   ([`pool::WorkerPool`], spawned once per runtime and parked between
 //!   jobs) whose size comes from the experiment config (results are
-//!   bit-identical for every thread count — see `rust/PERF.md`). A
-//!   round's independent client gradients batch through
-//!   [`Runtime::grad_batch`] / [`Runtime::grad_batch_into`], and the
-//!   `_into` kernel forms keep warm rounds free of compute-path
+//!   bit-identical for every thread count, at every ISA — see
+//!   `rust/PERF.md`). A round's independent client gradients batch
+//!   through [`Runtime::grad_batch`] / [`Runtime::grad_batch_into`], and
+//!   the `_into` kernel forms keep warm rounds free of compute-path
 //!   allocations (`tests/alloc_gate.rs`). Builds and runs with zero
 //!   external dependencies.
 //! * **pjrt** (`--features pjrt`) — loads the AOT HLO-text artifacts and

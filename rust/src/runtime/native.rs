@@ -7,8 +7,15 @@
 //! f32 rounding. Unlike the first native port (a thin wrapper over
 //! `Mat::matmul_ref`), this executor is built for throughput:
 //!
-//! * every matmul bottoms out in the cache-blocked, register-tiled kernel
-//!   in [`crate::tensor`] (`matmul_ref` remains the test oracle);
+//! * every matmul bottoms out in the ISA-dispatched GEMM microkernel of
+//!   [`crate::tensor`] (`tensor::gemm_into`): an explicit AVX2+FMA
+//!   (x86_64) or NEON (aarch64) 4×16 register-blocked kernel, selected
+//!   **once** at executor construction from the configured
+//!   [`SimdPolicy`] (`[runtime] simd`, CLI `--simd`) via runtime feature
+//!   detection, with the scalar register-tile loop as the
+//!   always-available fallback (`matmul_ref` remains the test oracle);
+//!   SIMD row blocks pack the A-operand into the worker's persistent
+//!   scratch arena, so dispatch stays allocation-free;
 //! * `grad` fuses the residual-mask pass into the prediction sweep and
 //!   skips fully-masked rows before any arithmetic happens;
 //! * `grad` and `predict` read θ through a tile-aligned packed panel
@@ -16,8 +23,10 @@
 //!   n+1 grad calls plus predict), so the narrow class dimension runs as
 //!   pure register tiles instead of the remainder path's per-`k` output
 //!   row traffic;
-//! * `encode` hoists the duplicated `G[u,l]·w[l]` weight products into one
-//!   per-row panel held in the worker's persistent scratch arena;
+//! * `encode` materialises each part's rows of the weighted generator
+//!   `G ⊙ w` once into a panel in the worker's persistent scratch arena
+//!   and runs both parity accumulations as register-blocked GEMMs over
+//!   it;
 //! * `embed` computes the `x·Ω` panel and the `cos` transform in one fused
 //!   pass per row block;
 //! * all kernels run their *output rows* across the persistent
@@ -33,11 +42,16 @@
 //! Determinism: threads partition disjoint output row blocks, and each
 //! element accumulates its reduction terms in the same ascending order the
 //! serial reference uses, so **every thread count produces bit-identical
-//! results** — `threads = 1` and `threads = 64` match the pre-0.3 serial
-//! executor exactly, and the pool path matches the pre-0.4 scoped-spawn
-//! path bit-for-bit (same partitioning, same per-element order). This is
-//! what keeps training histories reproducible across machines with
-//! different core counts (see `rust/PERF.md`).
+//! results** under every ISA — with `simd = "scalar"`, `threads = 1` and
+//! `threads = 64` match the pre-0.3 serial executor exactly, and the pool
+//! path matches the pre-0.4 scoped-spawn path bit-for-bit (same
+//! partitioning, same per-element order). A SIMD ISA changes the rounding
+//! (fused multiply-adds; validated ≤ 1e-4 against the oracles) but not
+//! the determinism: for a fixed ISA, results are reproducible run-to-run
+//! and thread-count invariant, because an element's lane and op sequence
+//! depend only on its position, never on the row partition. This is what
+//! keeps training histories reproducible across machines with different
+//! core counts (see `rust/PERF.md`).
 //!
 //! Shapes are unconstrained here (no compiled-shape padding needed), but
 //! the [`super::Runtime`] wrappers still enforce the artifact shape
@@ -48,7 +62,9 @@ use std::sync::Arc;
 
 use super::exec::GradJob;
 use super::pool::WorkerPool;
-use crate::tensor::{matmul_rows_into, pack_tile_panel, tile_padded_cols, Mat};
+use crate::tensor::{
+    gemm_into, gemm_pack_len, pack_tile_panel, saxpy_into, tile_padded_cols, Isa, Mat, SimdPolicy,
+};
 
 /// Work (in multiply-adds) below which a kernel stays single-threaded —
 /// even a parked-worker wakeup costs a few microseconds, which swamps tiny
@@ -123,16 +139,21 @@ struct SlotPtr(*mut Mat);
 unsafe impl Send for SlotPtr {}
 unsafe impl Sync for SlotPtr {}
 
-/// The native executor: stateless kernels plus the persistent worker pool
-/// they dispatch onto. Cloning shares the pool.
+/// The native executor: stateless kernels, the persistent worker pool
+/// they dispatch onto, and the GEMM ISA resolved once at construction.
+/// Cloning shares the pool (and copies the ISA).
 #[derive(Clone)]
 pub struct NativeExec {
     pool: Arc<WorkerPool>,
+    /// The microkernel every matmul/saxpy in this executor dispatches to,
+    /// resolved from the configured [`SimdPolicy`] exactly once — no
+    /// per-call feature detection.
+    isa: Isa,
 }
 
 impl fmt::Debug for NativeExec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "NativeExec[{} threads]", self.threads())
+        write!(f, "NativeExec[{} threads, {}]", self.threads(), self.isa.name())
     }
 }
 
@@ -144,24 +165,40 @@ impl Default for NativeExec {
 }
 
 impl NativeExec {
-    /// Executor with `threads` worker threads; `0` resolves to the
-    /// machine's available parallelism. Capped at 512 (`MAX_THREADS`) —
-    /// see the constant's docs. The pool (caller + `threads − 1` parked
-    /// workers) is spawned here, once, and lives as long as the executor.
+    /// Executor with `threads` worker threads and the `auto` SIMD policy
+    /// (the config default — see [`NativeExec::with_policy`]); `0`
+    /// resolves to the machine's available parallelism, capped at 512
+    /// (`MAX_THREADS`). The pool (caller + `threads − 1` parked workers)
+    /// is spawned here, once, and lives as long as the executor.
     pub fn new(threads: usize) -> Self {
-        NativeExec { pool: Arc::new(WorkerPool::new(resolve_threads(threads))) }
+        NativeExec::with_policy(threads, SimdPolicy::Auto)
+    }
+
+    /// [`NativeExec::new`] with an explicit SIMD policy: `Auto` detects
+    /// the best ISA for this host once (AVX2+FMA / NEON / scalar),
+    /// `Scalar` pins every kernel to the bit-exact fallback loop.
+    pub fn with_policy(threads: usize, simd: SimdPolicy) -> Self {
+        NativeExec {
+            pool: Arc::new(WorkerPool::new(resolve_threads(threads))),
+            isa: Isa::detect(simd),
+        }
     }
 
     /// Single-threaded executor (no workers spawned; kernels run inline on
-    /// the caller with the caller's scratch arena).
+    /// the caller with the caller's scratch arena), `auto` SIMD policy.
     pub fn single() -> Self {
-        NativeExec { pool: Arc::new(WorkerPool::new(1)) }
+        NativeExec::with_policy(1, SimdPolicy::Auto)
     }
 
     /// The persistent pool kernels dispatch onto (exposed for the worker
     /// reuse tests and for callers that want to co-schedule work).
     pub fn pool(&self) -> &WorkerPool {
         &self.pool
+    }
+
+    /// The resolved GEMM instruction set every kernel dispatches to.
+    pub fn isa(&self) -> Isa {
+        self.isa
     }
 
     /// The resolved worker-thread count (≥ 1).
@@ -196,15 +233,28 @@ impl NativeExec {
         let scale = (2.0f32 / q as f32).sqrt();
         let xs = x.as_slice();
         let os = omega.as_slice();
+        let isa = self.isa;
         par_row_blocks(
             &self.pool,
             self.threads_for(n * d.max(1) * q),
             n,
             q,
             out.as_mut_slice(),
-            |r0, block, _scratch| {
+            |r0, block, scratch| {
                 let rows_here = block.len() / q;
-                matmul_rows_into(&xs[r0 * d..(r0 + rows_here) * d], os, block, d, q);
+                let pack = gemm_pack_len(d);
+                if scratch.len() < pack {
+                    scratch.resize(pack, 0.0);
+                }
+                gemm_into(
+                    isa,
+                    &xs[r0 * d..(r0 + rows_here) * d],
+                    os,
+                    block,
+                    d,
+                    q,
+                    &mut scratch[..pack],
+                );
                 for row in block.chunks_exact_mut(q) {
                     for (v, &dl) in row.iter_mut().zip(delta) {
                         *v = scale * (*v + dl).cos();
@@ -268,6 +318,7 @@ impl NativeExec {
             r_buf.resize(l * c, 0.0);
         }
         let (r_slice, _) = r_buf.split_at_mut(l * c);
+        let isa = self.isa;
         {
             let ys = y.as_slice();
             par_row_blocks(
@@ -287,7 +338,8 @@ impl NativeExec {
                         if m == 0.0 {
                             continue; // row never enters the aggregate
                         }
-                        matmul_rows_into(&xs[i * q..(i + 1) * q], panel, row_pad, q, c_pad);
+                        // single-row GEMM: no A-pack needed
+                        gemm_into(isa, &xs[i * q..(i + 1) * q], panel, row_pad, q, c_pad, &mut []);
                         for ((rv, &pv), &yv) in
                             rrow.iter_mut().zip(&row_pad[..c]).zip(&ys[i * c..(i + 1) * c])
                         {
@@ -300,7 +352,9 @@ impl NativeExec {
         // g = X̂ᵀ R: each thread owns a disjoint block of g's rows (a
         // contiguous k-range of X̂'s columns) and sweeps the data rows i in
         // ascending order — the serial reference's per-element order, so
-        // the result is identical for every thread count.
+        // the result is identical for every thread count. (Kept as a
+        // saxpy accumulation rather than a GEMM: the mask-skipped rows
+        // hold stale residuals that must never enter the product.)
         let rs: &[f32] = r_slice;
         par_row_blocks(
             &self.pool,
@@ -317,10 +371,7 @@ impl NativeExec {
                     let xseg = &xs[i * q + k0..i * q + k0 + kn];
                     let rrow = &rs[i * c..(i + 1) * c];
                     for (kk, &xv) in xseg.iter().enumerate() {
-                        let grow = &mut gblock[kk * c..(kk + 1) * c];
-                        for (gv, &rv) in grow.iter_mut().zip(rrow) {
-                            *gv += xv * rv;
-                        }
+                        saxpy_into(isa, xv, rrow, &mut gblock[kk * c..(kk + 1) * c]);
                     }
                 }
             },
@@ -365,13 +416,14 @@ impl NativeExec {
         // packed prediction row and the residual panel).
         let n_jobs = jobs.len();
         let slots = SlotPtr(outs.as_mut_ptr());
+        let isa = self.isa;
         self.pool.run(t, &|part, scratch| {
             let (j0, jn) = run_bounds(n_jobs, t, part);
             for ji in j0..j0 + jn {
                 let job = &jobs[ji];
                 // Safety: job index ranges are disjoint across parts.
                 let out = unsafe { &mut *slots.0.add(ji) };
-                grad_serial_packed(job.xhat, job.y, panel, c_pad, job.mask, scratch, out);
+                grad_serial_packed(isa, job.xhat, job.y, panel, c_pad, job.mask, scratch, out);
             }
         });
     }
@@ -380,9 +432,13 @@ impl NativeExec {
     /// `(G ⊙ w[None, :]) · D` for `D ∈ {X̂ [l, q], Y [l, c]}`, zero-padded
     /// to `u_max` output rows to match the compiled-artifact contract.
     ///
-    /// The `G[u, l]·w[l]` products are computed once per output row into
-    /// the worker's persistent scratch arena and shared by the X̌ and Y̌
-    /// accumulations (the first native port recomputed them for each).
+    /// Each pool part materialises its rows of the weighted generator
+    /// `G ⊙ w` once into a panel in the worker's persistent scratch arena
+    /// and runs the X̌ and Y̌ accumulations as GEMMs over it through the
+    /// executor's ISA (the first native port recomputed the `G·w`
+    /// products for each accumulation, and the second still swept them
+    /// row by row). The wide X̌ side (`q`) vectorises; a sub-tile Y̌ side
+    /// (`c < 16`) runs the kernel's scalar column tail.
     pub fn encode(&self, g: &Mat, w: &[f32], xhat: &Mat, y: &Mat, u_max: usize) -> (Mat, Mat) {
         let (u, l) = (g.rows(), g.cols());
         let (q, c) = (xhat.cols(), y.cols());
@@ -395,6 +451,7 @@ impl NativeExec {
         let gs = g.as_slice();
         let xs = xhat.as_slice();
         let ys = y.as_slice();
+        let isa = self.isa;
         // Only the live `u` rows are touched; rows `u..u_max` stay zero.
         let t = if q == 0 || c == 0 {
             1
@@ -411,32 +468,21 @@ impl NativeExec {
             // Safety: row ranges are disjoint across parts.
             let xblock = unsafe { xp_ptr.slice_mut(u0 * q, un * q) };
             let yblock = unsafe { yp_ptr.slice_mut(u0 * c, un * c) };
-            if scratch.len() < l {
-                scratch.resize(l, 0.0);
+            // Scratch: the part's `G ⊙ w` panel rows, then the GEMM's
+            // A-block pack area (grown once, then warm).
+            let need = un * l + gemm_pack_len(l);
+            if scratch.len() < need {
+                scratch.resize(need, 0.0);
             }
-            let gw = &mut scratch[..l]; // fully overwritten per output row
-            for ui in 0..un {
-                let grow = &gs[(u0 + ui) * l..(u0 + ui + 1) * l];
-                for (gv, (&ge, &we)) in gw.iter_mut().zip(grow.iter().zip(w)) {
+            let (gw, pack) = scratch[..need].split_at_mut(un * l);
+            let grows = gs[u0 * l..(u0 + un) * l].chunks_exact(l);
+            for (gwrow, grow) in gw.chunks_exact_mut(l).zip(grows) {
+                for (gv, (&ge, &we)) in gwrow.iter_mut().zip(grow.iter().zip(w)) {
                     *gv = ge * we;
                 }
-                if q > 0 {
-                    let orow = &mut xblock[ui * q..(ui + 1) * q];
-                    for (li, &gv) in gw.iter().enumerate() {
-                        for (ov, &dv) in orow.iter_mut().zip(&xs[li * q..(li + 1) * q]) {
-                            *ov += gv * dv;
-                        }
-                    }
-                }
-                if c > 0 {
-                    let orow = &mut yblock[ui * c..(ui + 1) * c];
-                    for (li, &gv) in gw.iter().enumerate() {
-                        for (ov, &dv) in orow.iter_mut().zip(&ys[li * c..(li + 1) * c]) {
-                            *ov += gv * dv;
-                        }
-                    }
-                }
             }
+            gemm_into(isa, gw, xs, xblock, l, q, pack);
+            gemm_into(isa, gw, ys, yblock, l, c, pack);
         });
         (xp, yp)
     }
@@ -468,12 +514,25 @@ impl NativeExec {
         }
         let xs = xhat.as_slice();
         let threads = self.threads_for(n * q * c);
+        let isa = self.isa;
         if c == c_pad {
             // θ itself is tile-aligned: write output rows directly.
-            par_row_blocks(&self.pool, threads, n, c, out.as_mut_slice(), |r0, block, _s| {
+            par_row_blocks(&self.pool, threads, n, c, out.as_mut_slice(), |r0, block, scratch| {
                 let rows_here = block.len() / c;
+                let pack = gemm_pack_len(q);
+                if scratch.len() < pack {
+                    scratch.resize(pack, 0.0);
+                }
                 block.fill(0.0);
-                matmul_rows_into(&xs[r0 * q..(r0 + rows_here) * q], panel, block, q, c);
+                gemm_into(
+                    isa,
+                    &xs[r0 * q..(r0 + rows_here) * q],
+                    panel,
+                    block,
+                    q,
+                    c,
+                    &mut scratch[..pack],
+                );
             });
         } else {
             par_row_blocks(&self.pool, threads, n, c, out.as_mut_slice(), |r0, block, scratch| {
@@ -483,7 +542,8 @@ impl NativeExec {
                 let row_pad = &mut scratch[..c_pad];
                 for (ii, orow) in block.chunks_exact_mut(c).enumerate() {
                     let i = r0 + ii;
-                    matmul_rows_into(&xs[i * q..(i + 1) * q], panel, row_pad, q, c_pad);
+                    // single-row GEMM: no A-pack needed
+                    gemm_into(isa, &xs[i * q..(i + 1) * q], panel, row_pad, q, c_pad, &mut []);
                     orow.copy_from_slice(&row_pad[..c]);
                 }
             });
@@ -518,12 +578,13 @@ pub(crate) fn panel_of<'a>(theta: &'a Mat, buf: &'a mut Vec<f32>) -> (&'a [f32],
 
 /// The serial masked gradient through the packed θ panel, into a
 /// caller-owned `out` (`[q, c]`, overwritten). Bit-identical to the
-/// parallel [`NativeExec::grad_into`] (same per-element accumulation
-/// order); runs per-job on a pool worker inside
+/// parallel [`NativeExec::grad_into`] at the same ISA (same per-element
+/// accumulation order); runs per-job on a pool worker inside
 /// [`NativeExec::grad_batch_into`]. `scratch` holds the packed prediction
 /// row followed by the residual panel `R` (grown once, then warm).
 #[allow(clippy::too_many_arguments)] // mirrors the kernel contract 1:1
 fn grad_serial_packed(
+    isa: Isa,
     xhat: &Mat,
     y: &Mat,
     panel: &[f32],
@@ -552,7 +613,8 @@ fn grad_serial_packed(
         if m == 0.0 {
             continue; // stale R row is fine: pass 2 skips it too
         }
-        matmul_rows_into(&xs[i * q..(i + 1) * q], panel, row_pad, q, c_pad);
+        // single-row GEMM: no A-pack needed
+        gemm_into(isa, &xs[i * q..(i + 1) * q], panel, row_pad, q, c_pad, &mut []);
         let rrow = &mut r[i * c..(i + 1) * c];
         for ((rv, &pv), &yv) in rrow.iter_mut().zip(&row_pad[..c]).zip(&ys[i * c..(i + 1) * c]) {
             *rv = m * (pv - yv);
@@ -566,10 +628,7 @@ fn grad_serial_packed(
         let xrow = &xs[i * q..(i + 1) * q];
         let rrow = &r[i * c..(i + 1) * c];
         for (k, &xv) in xrow.iter().enumerate() {
-            let grow = &mut gs[k * c..(k + 1) * c];
-            for (gv, &rv) in grow.iter_mut().zip(rrow.iter()) {
-                *gv += xv * rv;
-            }
+            saxpy_into(isa, xv, rrow, &mut gs[k * c..(k + 1) * c]);
         }
     }
 }
@@ -767,6 +826,24 @@ mod tests {
         assert!(resolve_threads(0) >= 1);
         assert_eq!(NativeExec::new(3).threads(), 3);
         assert!(NativeExec::new(0).threads() >= 1);
+    }
+
+    #[test]
+    fn simd_policy_resolution_is_exposed_and_close() {
+        let scalar = NativeExec::with_policy(1, SimdPolicy::Scalar);
+        assert_eq!(scalar.isa(), Isa::Scalar);
+        let auto = NativeExec::with_policy(1, SimdPolicy::Auto);
+        assert!(!auto.isa().name().is_empty());
+        // whatever auto resolved to stays within the documented 1e-4 of
+        // the scalar path on a realistic gradient shape
+        let mut rng = Rng::seed_from(13);
+        let xhat = randn(33, 40, &mut rng);
+        let y = randn(33, 6, &mut rng);
+        let theta = randn(40, 6, &mut rng);
+        let mask = vec![1.0f32; 33];
+        let a = scalar.grad(&xhat, &y, &theta, &mask);
+        let b = auto.grad(&xhat, &y, &theta, &mask);
+        assert!(a.max_abs_diff(&b) <= 1e-4, "diff {}", a.max_abs_diff(&b));
     }
 
     #[test]

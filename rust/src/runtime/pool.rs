@@ -34,10 +34,13 @@
 //! Each thread (the caller included) owns a `Vec<f32>` scratch arena that
 //! persists across jobs — kernels `resize` it on first use and reuse the
 //! warm capacity forever after. This is what absorbs the encode kernel's
-//! `G·w` panel and the packed-θ row panels of `grad`/`predict` without
-//! per-call allocation. A part may only touch the scratch it is handed:
-//! part `i`'s arena is owned by whichever thread runs part `i`, and jobs
-//! are serialized, so the access is exclusive.
+//! `G·w` panel, the packed-θ row panels of `grad`/`predict`, and the
+//! SIMD microkernels' A-operand pack blocks (`tensor::gemm_pack_len`)
+//! without per-call allocation — the zero-alloc warm-round invariant
+//! holds under every `[runtime] simd` policy (`tests/alloc_gate.rs` runs
+//! under both). A part may only touch the scratch it is handed: part
+//! `i`'s arena is owned by whichever thread runs part `i`, and jobs are
+//! serialized, so the access is exclusive.
 
 use std::cell::UnsafeCell;
 use std::fmt;

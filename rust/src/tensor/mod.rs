@@ -2,22 +2,40 @@
 //! the coordinator and the native compute backend.
 //!
 //! Since the pure-Rust `runtime::native` backend became the default, this
-//! module *is* the training hot path: [`Mat::matmul`] is the cache-blocked,
-//! register-tiled kernel every `embed`/`grad`/`predict` call bottoms out in,
-//! and [`MatView`] provides zero-copy row-block access so per-round slicing
-//! never clones buffers. [`Mat::matmul_ref`] is kept as the naive reference
-//! oracle the fast kernels are tested against (and is what the AOT/PJRT
-//! artifacts execute when the `pjrt` feature is enabled).
+//! module *is* the training hot path. The GEMM microkernels live in the
+//! [`gemm`] submodule: a runtime-ISA-dispatched [`gemm_into`] (scalar /
+//! AVX2+FMA / NEON, selected once per runtime via [`SimdPolicy`] →
+//! [`Isa`]) plus the scalar register-tile loop that doubles as the
+//! always-available fallback and the determinism oracle. There is exactly
+//! **one** row-slice matmul implementation: [`Mat::matmul`] delegates to
+//! [`MatView::matmul_into`], which calls the shared kernel — every other
+//! matmul in the tree (the `runtime::native` kernels included) goes
+//! through the same entry points. [`MatView`] provides zero-copy
+//! row-block access so per-round slicing never clones buffers, and
+//! [`Mat::matmul_ref`] is the naive reference oracle the fast kernels are
+//! tested against (and what the AOT/PJRT artifacts execute when the
+//! `pjrt` feature is enabled).
 //!
-//! Determinism contract: the blocked kernel accumulates every output element
-//! over `k` in ascending order with plain (non-fused) f32 adds — the exact
+//! Determinism contract: [`Mat::matmul`] / [`MatView::matmul`] always run
+//! the *scalar* kernel, which accumulates every output element over `k`
+//! in ascending order with plain (non-fused) f32 adds — the exact
 //! sequence `matmul_ref` performs — so for finite inputs blocked and
 //! reference results are bit-for-bit identical, not merely close.
 //! (`matmul_ref` skips `a == 0` terms; with non-finite operands those
 //! skipped `0·inf` products would differ, so the guarantee is stated for
-//! finite data — the only kind training produces.) The parallel drivers in
-//! `runtime::native` partition *output rows* across threads, which preserves
-//! that per-element order for every thread count.
+//! finite data — the only kind training produces.) SIMD execution is
+//! opt-in per call site through [`gemm_into`]'s `Isa` parameter: the
+//! native backend threads its runtime-detected ISA into every kernel, and
+//! `simd = "scalar"` pins those call sites to this same bit-exact path
+//! (see the [`gemm`] module docs for the SIMD determinism contract). The
+//! parallel drivers in `runtime::native` partition *output rows* across
+//! threads, which preserves per-element order — and therefore bitwise
+//! results — for every thread count, under every ISA.
+
+pub mod gemm;
+
+pub use gemm::{gemm_into, gemm_pack_len, saxpy_into, Isa, SimdPolicy, GEMM_MR};
+pub(crate) use gemm::{matmul_rows_into, MM_TILE};
 
 use std::fmt;
 
@@ -300,58 +318,6 @@ impl<'a> MatView<'a> {
         );
         out.data.fill(0.0);
         matmul_rows_into(self.data, &other.data, &mut out.data, self.cols, other.cols);
-    }
-}
-
-/// Width of the register tile of the blocked matmul: the accumulator array
-/// the compiler keeps in vector registers across the whole `k` loop, so the
-/// output row is loaded/stored once per tile instead of once per `k`.
-const MM_TILE: usize = 16;
-
-/// Core of the blocked matmul: `out = a · b`, where `a` is `r×k`, `b` is
-/// `k×n` and `out` is the `r×n` **all-zeros** destination. Runs a fixed
-/// `MM_TILE`-wide register tile over the output columns with the `k` loop
-/// innermost-but-one, so the hot loop is a pure `acc[t] += av * b[t]`
-/// sweep `chunks_exact` exposes to the autovectoriser.
-///
-/// Per output element the products are accumulated over `k` in ascending
-/// order with individual f32 adds — exactly [`Mat::matmul_ref`]'s order —
-/// so the result is bit-for-bit identical to the reference. Callers
-/// parallelise by splitting `a`/`out` into disjoint row blocks (see
-/// `runtime::native`), which keeps that guarantee for any thread count.
-pub(crate) fn matmul_rows_into(a: &[f32], b: &[f32], out: &mut [f32], k: usize, n: usize) {
-    if k == 0 || n == 0 {
-        return;
-    }
-    debug_assert_eq!(a.len() % k, 0, "a is not whole rows");
-    debug_assert_eq!(out.len() % n, 0, "out is not whole rows");
-    debug_assert_eq!(a.len() / k, out.len() / n, "a/out row count mismatch");
-    debug_assert_eq!(b.len(), k * n, "b shape mismatch");
-    for (arow, orow) in a.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
-        let mut j = 0;
-        let mut tiles = orow.chunks_exact_mut(MM_TILE);
-        for otile in &mut tiles {
-            let mut acc = [0.0f32; MM_TILE];
-            for (kk, &av) in arow.iter().enumerate() {
-                let btile = &b[kk * n + j..kk * n + j + MM_TILE];
-                for (av_acc, &bv) in acc.iter_mut().zip(btile) {
-                    *av_acc += av * bv;
-                }
-            }
-            otile.copy_from_slice(&acc);
-            j += MM_TILE;
-        }
-        // Column remainder (< MM_TILE wide): same ascending-k accumulation,
-        // scalar form, into the still-zero tail of the output row.
-        let tail = tiles.into_remainder();
-        if !tail.is_empty() {
-            for (kk, &av) in arow.iter().enumerate() {
-                let btail = &b[kk * n + j..(kk + 1) * n];
-                for (ov, &bv) in tail.iter_mut().zip(btail) {
-                    *ov += av * bv;
-                }
-            }
-        }
     }
 }
 

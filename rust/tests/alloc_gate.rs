@@ -10,15 +10,28 @@
 //! logits). This file intentionally contains a **single** test: the
 //! counters are process-global, so any concurrently running test would
 //! pollute the measurement.
+//!
+//! Runs under the SIMD policy named by `CODEDFEDL_SIMD` (`scalar` |
+//! `auto`; default `auto`) — CI runs it once per policy, so the SIMD
+//! microkernels' A-operand packing (carved from the workers' persistent
+//! scratch arenas) is held to the same zero-allocation contract as the
+//! scalar path.
 
 use codedfedl::benchutil::CountingAlloc;
 use codedfedl::rng::Rng;
 use codedfedl::runtime::GradJob;
-use codedfedl::tensor::Mat;
+use codedfedl::tensor::{Mat, SimdPolicy};
 use codedfedl::ExperimentBuilder;
 
 #[global_allocator]
 static ALLOC: CountingAlloc = CountingAlloc;
+
+fn env_policy() -> SimdPolicy {
+    match std::env::var("CODEDFEDL_SIMD") {
+        Ok(v) => v.parse().expect("CODEDFEDL_SIMD"),
+        Err(_) => SimdPolicy::Auto,
+    }
+}
 
 #[test]
 fn steady_state_compute_path_allocates_zero_bytes() {
@@ -28,6 +41,7 @@ fn steady_state_compute_path_allocates_zero_bytes() {
         .unwrap()
         .epochs(1)
         .threads(2)
+        .simd(env_policy())
         .build()
         .unwrap();
     let rt = session.runtime();

@@ -1,22 +1,27 @@
 //! Property-style equivalence tests for the blocked/parallel native
 //! kernels (PR 2 tentpole, extended to the persistent worker pool in
-//! PR 3): every fast kernel is pinned against the seed's serial reference
-//! implementation (ported verbatim below) across awkward shapes — 0 rows,
-//! 1 column, sizes straddling the register-tile width — and thread counts
-//! {1, 2, 4, 8}, and the pooled path is additionally pinned against an
-//! in-test `std::thread::scope` driver replicating the pre-pool
-//! partitioning.
+//! PR 3 and to the SIMD microkernels in PR 4): every fast kernel is
+//! pinned against the seed's serial reference implementation (ported
+//! verbatim below) across awkward shapes — 0 rows, 1 column, sizes
+//! straddling the register-tile width — and thread counts {1, 2, 4, 8},
+//! and the pooled path is additionally pinned against an in-test
+//! `std::thread::scope` driver replicating the pre-pool partitioning.
 //!
-//! Contract under test (see `rust/src/tensor` module docs): `threads = 1`
-//! is **bit-for-bit** equal to the serial reference; other thread counts
-//! must stay within 1e-4 max-abs-diff (they are in fact also exact, since
-//! threads partition disjoint output rows, but the looser bound is the
-//! documented API guarantee).
+//! Contract under test (see `rust/src/tensor` module docs): with the
+//! scalar microkernel, `threads = 1` is **bit-for-bit** equal to the
+//! serial reference; every other combination — other thread counts, or a
+//! SIMD ISA's fused multiply-adds — must stay within 1e-4 max-abs-diff.
+//! Each resolved ISA is additionally deterministic and thread-count
+//! invariant (bitwise), which is tested directly.
+//!
+//! The sweeps run under the SIMD policy named by the `CODEDFEDL_SIMD`
+//! env var (`scalar` | `auto`; default `auto`, the config default) — CI
+//! runs this binary once per policy so the fallback path cannot rot.
 
 use codedfedl::rng::Rng;
 use codedfedl::runtime::native::NativeExec;
 use codedfedl::schemes::CodedFedL;
-use codedfedl::tensor::Mat;
+use codedfedl::tensor::{gemm_into, gemm_pack_len, Isa, Mat, SimdPolicy};
 use codedfedl::ExperimentBuilder;
 
 fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
@@ -30,18 +35,39 @@ fn mask_for(l: usize) -> Vec<f32> {
     (0..l).map(|i| [1.0f32, 0.0, 0.5, 1.0][i % 4]).collect()
 }
 
-/// Assert equality under the thread-count contract.
-fn assert_equiv(name: &str, threads: usize, got: &Mat, want: &Mat) {
+/// The SIMD policy this test binary sweeps under (CI matrix:
+/// `CODEDFEDL_SIMD=scalar` / `auto`; unset behaves like the config
+/// default, `auto`). A typo fails loudly rather than silently testing
+/// the wrong path.
+fn env_policy() -> SimdPolicy {
+    match std::env::var("CODEDFEDL_SIMD") {
+        Ok(v) => v.parse().expect("CODEDFEDL_SIMD"),
+        Err(_) => SimdPolicy::Auto,
+    }
+}
+
+/// Executor under test: `threads` workers, the env-selected SIMD policy.
+fn exec(threads: usize) -> NativeExec {
+    NativeExec::with_policy(threads, env_policy())
+}
+
+/// Assert equality under the documented contract: bit-for-bit when the
+/// executor resolved the scalar ISA and runs one thread, ≤ 1e-4 otherwise.
+fn assert_equiv(name: &str, ex: &NativeExec, threads: usize, got: &Mat, want: &Mat) {
     assert_eq!((got.rows(), got.cols()), (want.rows(), want.cols()), "{name}: shape");
-    if threads == 1 {
+    if ex.isa() == Isa::Scalar && threads == 1 {
         assert_eq!(
             got.as_slice(),
             want.as_slice(),
-            "{name}: threads=1 must be bit-for-bit equal to the serial reference"
+            "{name}: scalar threads=1 must be bit-for-bit equal to the serial reference"
         );
     } else {
         let d = got.max_abs_diff(want);
-        assert!(d <= 1e-4, "{name}: threads={threads} diff {d} > 1e-4");
+        assert!(
+            d <= 1e-4,
+            "{name}: threads={threads} isa={} diff {d} > 1e-4",
+            ex.isa().name()
+        );
     }
 }
 
@@ -151,12 +177,15 @@ fn matmul_blocked_equals_reference_across_shapes_and_threads() {
         let a = randn(m, k, &mut rng);
         let b = randn(k, n, &mut rng);
         let want = a.matmul_ref(&b);
-        // Mat::matmul is the single-threaded blocked kernel
-        assert_equiv("Mat::matmul", 1, &a.matmul(&b), &want);
-        // the threaded path is exercised through NativeExec::predict
+        // Mat::matmul is the single-threaded *scalar* kernel — always
+        // bit-for-bit reference-equal, whatever the SIMD policy.
+        assert_eq!(a.matmul(&b).as_slice(), want.as_slice(), "Mat::matmul ({m},{k},{n})");
+        // the threaded (and ISA-dispatched) path is exercised through
+        // NativeExec::predict
         for threads in [1usize, 2, 4, 8] {
-            let got = NativeExec::new(threads).predict(&a, &b);
-            assert_equiv("predict", threads, &got, &want);
+            let ex = exec(threads);
+            let got = ex.predict(&a, &b);
+            assert_equiv("predict", &ex, threads, &got, &want);
         }
     }
 }
@@ -171,8 +200,9 @@ fn grad_equals_reference_across_shapes_and_threads() {
         let mask = mask_for(l);
         let want = ref_grad(&xhat, &y, &theta, &mask);
         for threads in [1usize, 2, 4, 8] {
-            let got = NativeExec::new(threads).grad(&xhat, &y, &theta, &mask);
-            assert_equiv("grad", threads, &got, &want);
+            let ex = exec(threads);
+            let got = ex.grad(&xhat, &y, &theta, &mask);
+            assert_equiv("grad", &ex, threads, &got, &want);
         }
     }
 }
@@ -188,8 +218,9 @@ fn embed_equals_reference_across_shapes_and_threads() {
         let delta: Vec<f32> = (0..q).map(|_| rng.next_f32() * 6.28).collect();
         let want = ref_embed(&x, &omega, &delta);
         for threads in [1usize, 2, 4, 8] {
-            let got = NativeExec::new(threads).embed(&x, &omega, &delta);
-            assert_equiv("embed", threads, &got, &want);
+            let ex = exec(threads);
+            let got = ex.embed(&x, &omega, &delta);
+            assert_equiv("embed", &ex, threads, &got, &want);
         }
     }
 }
@@ -212,9 +243,10 @@ fn encode_equals_reference_across_shapes_and_threads() {
         let y = randn(l, c, &mut rng);
         let (want_x, want_y) = ref_encode(&g, &w, &xhat, &y, u_max);
         for threads in [1usize, 2, 4, 8] {
-            let (got_x, got_y) = NativeExec::new(threads).encode(&g, &w, &xhat, &y, u_max);
-            assert_equiv("encode.x", threads, &got_x, &want_x);
-            assert_equiv("encode.y", threads, &got_y, &want_y);
+            let ex = exec(threads);
+            let (got_x, got_y) = ex.encode(&g, &w, &xhat, &y, u_max);
+            assert_equiv("encode.x", &ex, threads, &got_x, &want_x);
+            assert_equiv("encode.y", &ex, threads, &got_y, &want_y);
         }
     }
 }
@@ -234,8 +266,9 @@ fn grad_with_exact_zero_features_still_matches() {
     let theta = randn(20, 4, &mut rng);
     let mask = mask_for(12);
     let want = ref_grad(&xhat, &y, &theta, &mask);
-    let got = NativeExec::single().grad(&xhat, &y, &theta, &mask);
-    assert_equiv("grad(sparse)", 1, &got, &want);
+    let ex = NativeExec::with_policy(1, env_policy());
+    let got = ex.grad(&xhat, &y, &theta, &mask);
+    assert_equiv("grad(sparse)", &ex, 1, &got, &want);
 }
 
 // ---------------------------------------------------------------------------
@@ -275,15 +308,19 @@ fn scoped_predict(xhat: &Mat, theta: &Mat, threads: usize) -> Mat {
 
 #[test]
 fn pool_matches_scoped_threads_and_serial_bit_for_bit() {
+    // Pinned to the scalar microkernel: the in-test thread::scope driver
+    // runs the scalar Mat::matmul, and simd=scalar is the policy whose
+    // bits must match the pre-pool (and pre-SIMD) backend exactly.
     let mut rng = Rng::seed_from(106);
     // Includes shapes above the internal parallelism threshold so the pool
     // dispatch (not just the inline part-0 path) really runs.
     for &(n, q, c) in &[(7usize, 16usize, 4usize), (40, 65, 7), (80, 100, 16), (128, 128, 10)] {
         let xhat = randn(n, q, &mut rng);
         let theta = randn(q, c, &mut rng);
-        let serial = NativeExec::single().predict(&xhat, &theta);
+        let serial = NativeExec::with_policy(1, SimdPolicy::Scalar).predict(&xhat, &theta);
         for threads in [1usize, 2, 8] {
-            let pooled = NativeExec::new(threads).predict(&xhat, &theta);
+            let pooled =
+                NativeExec::with_policy(threads, SimdPolicy::Scalar).predict(&xhat, &theta);
             let scoped = scoped_predict(&xhat, &theta, threads);
             assert_eq!(
                 pooled.as_slice(),
@@ -301,9 +338,10 @@ fn pool_matches_scoped_threads_and_serial_bit_for_bit() {
 
 #[test]
 fn grad_is_pool_invariant_at_1_2_8_threads() {
-    // The round loop's kernel: serial reference vs the pooled kernel at
-    // {1, 2, 8}, bit-for-bit (stronger than the documented 1e-4 bound —
-    // this is what keeps training histories thread-count invariant).
+    // The round loop's kernel: serial reference vs the pooled scalar
+    // kernel at {1, 2, 8}, bit-for-bit (stronger than the documented 1e-4
+    // bound — this is what keeps training histories thread-count
+    // invariant and simd=scalar histories PR-3-identical).
     let mut rng = Rng::seed_from(107);
     for &(l, q, c) in &[(13usize, 15usize, 10usize), (40, 65, 7), (128, 128, 10)] {
         let xhat = randn(l, q, &mut rng);
@@ -312,13 +350,114 @@ fn grad_is_pool_invariant_at_1_2_8_threads() {
         let mask = mask_for(l);
         let want = ref_grad(&xhat, &y, &theta, &mask);
         for threads in [1usize, 2, 8] {
-            let got = NativeExec::new(threads).grad(&xhat, &y, &theta, &mask);
+            let got =
+                NativeExec::with_policy(threads, SimdPolicy::Scalar).grad(&xhat, &y, &theta, &mask);
             assert_eq!(
                 got.as_slice(),
                 want.as_slice(),
                 "grad({l}x{q}x{c}) diverged from the serial reference at {threads} threads"
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD-era additions (PR 4): the ISA-dispatched microkernel vs the
+// matmul_ref oracle over awkward GEMM shapes, and per-ISA determinism.
+// ---------------------------------------------------------------------------
+
+/// (m, k, n) shapes chosen to hit every remainder path of the
+/// microkernels: empty output, k = 0, single row, n < the 16-wide tile,
+/// n % 16 ≠ 0, rows % GEMM_MR ≠ 0, and tile-aligned panels.
+const GEMM_SHAPES: &[(usize, usize, usize)] = &[
+    (0, 5, 7),
+    (3, 0, 4),
+    (1, 1, 1),
+    (1, 64, 16),
+    (2, 9, 3),
+    (3, 17, 15),
+    (5, 33, 16),
+    (6, 20, 17),
+    (7, 11, 47),
+    (9, 40, 32),
+    (13, 128, 10),
+];
+
+/// Seeded-random matmul vs `matmul_ref` over the awkward shapes, under
+/// both policies: `scalar` must be bit-exact, the detected ISA must stay
+/// within 1e-4 and be run-to-run deterministic.
+#[test]
+fn gemm_awkward_shapes_match_reference_under_both_policies() {
+    let mut rng = Rng::seed_from(108);
+    let run = |isa: Isa, a: &Mat, b: &Mat| {
+        let mut out = Mat::zeros(a.rows(), b.cols());
+        let mut pack = vec![0.0f32; gemm_pack_len(a.cols())];
+        gemm_into(
+            isa,
+            a.as_slice(),
+            b.as_slice(),
+            out.as_mut_slice(),
+            a.cols(),
+            b.cols(),
+            &mut pack,
+        );
+        out
+    };
+    let auto = Isa::detect(SimdPolicy::Auto);
+    for &(m, k, n) in GEMM_SHAPES {
+        let a = randn(m, k, &mut rng);
+        let b = randn(k, n, &mut rng);
+        let want = a.matmul_ref(&b);
+        // simd = scalar: exact
+        let scalar = run(Isa::Scalar, &a, &b);
+        assert_eq!(scalar.as_slice(), want.as_slice(), "scalar ({m},{k},{n})");
+        // simd = auto (whatever this host resolved): ≤ 1e-4 and
+        // deterministic across repeated runs
+        let fast = run(auto, &a, &b);
+        let d = fast.max_abs_diff(&want);
+        assert!(d <= 1e-4, "{} ({m},{k},{n}): diff {d} > 1e-4", auto.name());
+        assert_eq!(
+            fast.as_slice(),
+            run(auto, &a, &b).as_slice(),
+            "{} ({m},{k},{n}) is not deterministic",
+            auto.name()
+        );
+    }
+}
+
+/// Whatever ISA `auto` resolves, thread counts must not change a bit:
+/// an element's lane and op sequence depend only on its position, never
+/// on the pool's row partition.
+#[test]
+fn auto_isa_is_thread_count_invariant_bitwise() {
+    let mut rng = Rng::seed_from(109);
+    let xhat = randn(96, 80, &mut rng);
+    let y = randn(96, 10, &mut rng);
+    let theta = randn(80, 10, &mut rng);
+    let mask = mask_for(96);
+    let delta = vec![0.25f32; 10];
+    let base = NativeExec::with_policy(1, SimdPolicy::Auto);
+    for threads in [2usize, 3, 8] {
+        let ex = NativeExec::with_policy(threads, SimdPolicy::Auto);
+        assert_eq!(ex.isa(), base.isa(), "auto must resolve identically in one process");
+        assert_eq!(
+            base.grad(&xhat, &y, &theta, &mask).as_slice(),
+            ex.grad(&xhat, &y, &theta, &mask).as_slice(),
+            "grad diverged at {threads} threads on {}",
+            ex.isa().name()
+        );
+        assert_eq!(
+            base.predict(&xhat, &theta).as_slice(),
+            ex.predict(&xhat, &theta).as_slice(),
+            "predict diverged at {threads} threads on {}",
+            ex.isa().name()
+        );
+        assert_eq!(
+            base.embed(&xhat, &theta, &delta).as_slice(),
+            ex.embed(&xhat, &theta, &delta).as_slice(),
+            "embed diverged at {threads} threads on {}",
+            ex.isa().name()
+        );
     }
 }
 
