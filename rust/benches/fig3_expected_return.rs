@@ -32,7 +32,7 @@ fn main() {
         }
     }
     // breakpoints at l = mu (t - nu tau): annotate
-    let nu_m = n.nu_max(t).unwrap();
+    let nu_m = n.nu_max(t).bounded().expect("tau > 0 with t > 2tau");
     let bps: Vec<f64> = (2..=nu_m).map(|v| n.mu * (t - n.tau * v as f64)).collect();
     println!("concavity breakpoints (l = mu(t - nu*tau)): {bps:?}");
     // shape checks (the figure's claims)

@@ -96,7 +96,9 @@ pub fn optimal_load(node: &NodeParams, t: f64, max_load: f64) -> (f64, f64) {
     if node.p == 0.0 || node.tau == 0.0 {
         return optimal_load_awgn(node, t, max_load);
     }
-    let Some(nu_m) = node.nu_max(t) else {
+    // τ > 0 here (τ = 0 took the AWGN branch above), so the budget is
+    // either a concrete bound or infeasible — never `NuMax::Unbounded`.
+    let Some(nu_m) = node.nu_max(t).bounded() else {
         return (0.0, 0.0);
     };
     // Concavity breakpoints ℓ = μ(t − ντ), ν = ν_m … 2 (ascending in ℓ).

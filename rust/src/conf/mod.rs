@@ -20,7 +20,9 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::coding::GeneratorKind;
+use crate::sim::scenario::ScenarioSpec;
 use crate::tensor::SimdPolicy;
+use crate::topology::AsymLinkSpec;
 
 /// Back-compat alias for the pre-0.2 closed scheme enum. New code should
 /// use the open [`crate::schemes::Scheme`] trait (or
@@ -74,6 +76,19 @@ pub struct ExperimentConfig {
     /// from scalar) or `scalar` (the bit-exact reproducibility anchor —
     /// identical to the pre-SIMD backend for every thread count).
     pub simd: SimdPolicy,
+    /// Per-round network scenario applied to the fleet (`[scenario]`
+    /// section / `--scenario`): `static` (default — bit-identical to the
+    /// fixed-fleet behaviour), `dropout:rate=…`, `fading:depth=…,period=…`
+    /// or `burst:slow=…,factor=…`. Every scheme on a session sees the
+    /// same scenario realisation, so comparisons stay fair.
+    pub scenario: ScenarioSpec,
+    /// Asymmetric downlink/uplink link overrides (`[fleet]` section):
+    /// per-leg multipliers on the §V-A τ ladder plus per-leg erasure
+    /// probabilities. `None` (default) keeps the paper's reciprocal
+    /// links. The exact per-leg model drives the round timeline; the
+    /// load-allocation optimizer sees each client's reciprocal surrogate
+    /// with matched mean communication delay.
+    pub fleet_asym: Option<AsymLinkSpec>,
     /// Max parity rows the server can process (u_max, AOT-compiled shape).
     pub u_max: usize,
     /// Generator matrix distribution.
@@ -108,6 +123,8 @@ impl Default for ExperimentConfig {
             eval_every: 1,
             threads: 0,
             simd: SimdPolicy::Auto,
+            scenario: ScenarioSpec::Static,
+            fleet_asym: None,
             u_max: 1536,
             generator: GeneratorKind::Normal,
             train_size: 30_000,
@@ -141,6 +158,8 @@ const KNOWN_KEYS: &[(&str, &[&str])] = &[
     ),
     ("coding", &["u_max", "generator"]),
     ("runtime", &["threads", "simd"]),
+    ("scenario", &["kind"]),
+    ("fleet", &["tau_down", "tau_up", "p_down", "p_up"]),
 ];
 
 impl ExperimentConfig {
@@ -259,6 +278,30 @@ impl ExperimentConfig {
                 .parse()
                 .map_err(|e: String| ConfError::Invalid(format!("[runtime] simd: {e}")))?;
         }
+
+        let sc = sect("scenario");
+        if let Some(v) = sc.map.get("kind") {
+            let s = v.as_str().ok_or_else(|| sc.bad("kind", "string", v))?;
+            c.scenario = s
+                .parse()
+                .map_err(|e: String| ConfError::Invalid(format!("[scenario] kind: {e}")))?;
+        }
+
+        // Any [fleet] key switches the fleet to the asymmetric per-leg
+        // link model; omitted keys keep the reciprocal-equivalent
+        // defaults (unit τ multipliers, the paper's p = 0.1).
+        let fl = sect("fleet");
+        if ["tau_down", "tau_up", "p_down", "p_up"]
+            .iter()
+            .any(|k| fl.map.contains_key(*k))
+        {
+            let mut a = AsymLinkSpec::default();
+            fl.get_f64("tau_down", &mut a.tau_down)?;
+            fl.get_f64("tau_up", &mut a.tau_up)?;
+            fl.get_f64("p_down", &mut a.p_down)?;
+            fl.get_f64("p_up", &mut a.p_up)?;
+            c.fleet_asym = Some(a);
+        }
         c.validate()?;
         Ok(c)
     }
@@ -293,6 +336,12 @@ impl ExperimentConfig {
                 "eval_every must be >= 1 (1 = evaluate every round)".into(),
             ));
         }
+        self.scenario
+            .validate()
+            .map_err(|e| ConfError::Invalid(format!("[scenario] kind: {e}")))?;
+        if let Some(a) = &self.fleet_asym {
+            a.validate().map_err(|e| ConfError::Invalid(format!("[fleet] {e}")))?;
+        }
         Ok(())
     }
 }
@@ -306,13 +355,14 @@ fn reject_unknown_keys(doc: &Doc) -> Result<(), ConfError> {
             let first = keys.keys().next().map(String::as_str).unwrap_or("?");
             return Err(ConfError::Invalid(format!(
                 "key `{first}` appears before any [section] header \
-                 (sections: experiment, model, training, coding, runtime)"
+                 (sections: experiment, model, training, coding, runtime, \
+                 scenario, fleet)"
             )));
         }
         let Some((_, known)) = KNOWN_KEYS.iter().find(|(s, _)| s == section) else {
             return Err(ConfError::Invalid(format!(
                 "unknown section [{section}] (expected one of: experiment, model, \
-                 training, coding, runtime)"
+                 training, coding, runtime, scenario, fleet)"
             )));
         };
         for key in keys.keys() {
@@ -507,6 +557,65 @@ generator = "rademacher"
         // mistyped value names section and key
         let e = ExperimentConfig::from_str_conf("[runtime]\nsimd = 2\n").unwrap_err().to_string();
         assert!(e.contains("[runtime]") && e.contains("simd"), "{e}");
+    }
+
+    #[test]
+    fn scenario_kind_parses_defaults_and_rejects_garbage() {
+        assert_eq!(ExperimentConfig::default().scenario, ScenarioSpec::Static);
+        let c = ExperimentConfig::from_str_conf("[scenario]\nkind = \"dropout:rate=0.2\"\n")
+            .unwrap();
+        assert_eq!(c.scenario, ScenarioSpec::Dropout { rate: 0.2 });
+        let c = ExperimentConfig::from_str_conf(
+            "[scenario]\nkind = \"fading:depth=0.4,period=16\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.scenario, ScenarioSpec::Fading { depth: 0.4, period: 16.0 });
+        // unknown kind names the section and the offender
+        let e = ExperimentConfig::from_str_conf("[scenario]\nkind = \"chaos\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[scenario]") && e.contains("chaos"), "{e}");
+        // out-of-range parameter is rejected with its name
+        let e = ExperimentConfig::from_str_conf("[scenario]\nkind = \"dropout:rate=1.5\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("rate"), "{e}");
+        // mistyped value names section and key
+        let e = ExperimentConfig::from_str_conf("[scenario]\nkind = 3\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[scenario]") && e.contains("kind"), "{e}");
+        // unknown key in [scenario] is rejected
+        let e = ExperimentConfig::from_str_conf("[scenario]\nmode = \"static\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("mode") && e.contains("kind"), "{e}");
+    }
+
+    #[test]
+    fn fleet_asym_round_trips_through_config() {
+        // Full [fleet] section round-trips into the typed spec…
+        let text = "[fleet]\ntau_down = 1.5\ntau_up = 3.0\np_down = 0.05\np_up = 0.2\n";
+        let a = ExperimentConfig::from_str_conf(text).unwrap().fleet_asym.unwrap();
+        assert_eq!(a, AsymLinkSpec { tau_down: 1.5, tau_up: 3.0, p_down: 0.05, p_up: 0.2 });
+        // …a partial section fills the reciprocal-equivalent defaults…
+        let a = ExperimentConfig::from_str_conf("[fleet]\ntau_up = 2.0\n")
+            .unwrap()
+            .fleet_asym
+            .unwrap();
+        assert_eq!(a, AsymLinkSpec { tau_up: 2.0, ..AsymLinkSpec::default() });
+        // …no [fleet] section keeps the symmetric model…
+        assert!(ExperimentConfig::default().fleet_asym.is_none());
+        assert!(ExperimentConfig::from_str_conf("").unwrap().fleet_asym.is_none());
+        // …and invalid values are rejected naming the section.
+        let e = ExperimentConfig::from_str_conf("[fleet]\np_up = 1.0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[fleet]") && e.contains("p_up"), "{e}");
+        let e = ExperimentConfig::from_str_conf("[fleet]\ntau_down = 0.0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[fleet]") && e.contains("tau_down"), "{e}");
     }
 
     #[test]

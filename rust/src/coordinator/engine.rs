@@ -7,6 +7,15 @@
 //! recording and the [`RoundObserver`] event stream. Waiting/aggregation
 //! policy lives entirely behind the [`Scheme`] trait (`rust/src/schemes/`).
 //!
+//! Delay sampling is scenario-aware: each round the engine resets a
+//! [`FleetView`] to the setup's base per-leg links, lets the configured
+//! [`Scenario`] (`[scenario]` / `--scenario`) modulate it — dropouts,
+//! fading, compute bursts — and samples the per-leg event timeline into a
+//! reusable [`RoundTrace`]. Schemes receive the trace through
+//! [`RoundCtx`] and its totals through the usual
+//! [`crate::sim::RoundDelays`] view. The default `static` scenario
+//! reproduces fixed-fleet histories bit-for-bit (`tests/scenario_determinism.rs`).
+//!
 //! Per round, every participating node's gradient is *really* executed
 //! through the runtime's grad executor — the round's independent client
 //! requests go through [`Runtime::grad_batch_into`], which fans them out
@@ -23,11 +32,12 @@
 //!
 //! Everything the compute path touches is allocated once, before round 1,
 //! and reused for the rest of training: the aggregate, the packed θ panel,
-//! the per-request gradient slots, the sampled-delay buffers and the
-//! evaluation logits. A warm round therefore performs **zero** heap
-//! allocations on the native compute path (`tests/alloc_gate.rs` pins
-//! this with a counting allocator). The remaining per-round allocations
-//! are control-path only — the scheme's `RoundPlan` and the borrowed
+//! the per-request gradient slots, the fleet view, the round trace
+//! (legs, totals, sorted events) and the evaluation logits. A warm round
+//! therefore performs **zero** heap allocations on the native compute
+//! path under every built-in scenario (`tests/alloc_gate.rs` pins this
+//! with a counting allocator). The remaining per-round allocations are
+//! control-path only — the scheme's `RoundPlan` and the borrowed
 //! `GradJob` list, a handful of pointer-sized entries per round.
 
 use anyhow::{Context, Result};
@@ -37,8 +47,10 @@ use crate::metrics::{accuracy, History, Point};
 use crate::rng::Rng;
 use crate::runtime::{GradJob, PreparedTheta, Runtime};
 use crate::schemes::{RoundCtx, RoundExec, Scheme};
-use crate::sim::{RoundDelays, RoundSampler};
+use crate::sim::scenario::{Scenario, SCENARIO_STREAM_TAG};
+use crate::sim::timeline::RoundTrace;
 use crate::tensor::Mat;
+use crate::topology::FleetView;
 
 /// Result of one scheme's run.
 #[derive(Clone, Debug)]
@@ -117,12 +129,19 @@ pub fn run(
     // Scheme-specific RNG streams (same seed base ⇒ reproducible; split by
     // the scheme's tag so e.g. coded's generator draws don't perturb
     // naive's delay draws). The split order — delays first, then the
-    // scheme's private code stream — is part of the reproducibility
-    // contract with pre-trait runs.
+    // scheme's private code stream, then the scenario stream — is part of
+    // the reproducibility contract with pre-trait runs. The scenario
+    // stream's tag is deliberately scheme-independent: every scheme on a
+    // session faces the same network realisation (dropout patterns,
+    // bursts), which keeps cross-scheme comparisons fair; the `static`
+    // scenario never draws from it, preserving pre-scenario histories
+    // bit-for-bit.
     let tag = scheme.rng_tag();
     let mut root = Rng::seed_from(setup.seed ^ 0x5EED_0000);
     let mut delay_rng = root.split(tag);
     let mut code_rng = root.split(tag.wrapping_add(1000));
+    let mut scenario_rng = root.split(SCENARIO_STREAM_TAG);
+    let mut scenario: Box<dyn Scenario> = cfg.scenario.build();
 
     let prep = scheme
         .prepare(setup, rt, &mut code_rng)
@@ -134,21 +153,24 @@ pub fn run(
         prep.client_loads.len()
     );
 
-    // Borrows the fleet from the setup — no per-run clone of every
-    // client's parameters.
-    let sampler =
-        RoundSampler::new(&setup.clients, setup.server, prep.client_loads, prep.server_load);
+    let client_loads = prep.client_loads;
+    let server_load = prep.server_load;
 
     let mut theta = Mat::zeros(q, c);
     let mut history = History::new(scheme.label());
     let mut clock = prep.clock_offset;
 
     // --- round-persistent buffers (steady-state rounds reuse, never
-    //     allocate — see the module docs) ---
+    //     allocate — see the module docs). The fleet view and round trace
+    //     are part of the same discipline: the view is reset from the
+    //     setup's base links (no clone of the fleet per round beyond the
+    //     in-place copy), the scenario modulates it in place, and the
+    //     trace samples into held buffers. ---
     let mut agg = Mat::zeros(q, c);
     let mut theta_panel: Vec<f32> = Vec::new();
     let mut grad_outs: Vec<Mat> = Vec::new();
-    let mut delays = RoundDelays { client_t: Vec::with_capacity(n), server_t: 0.0 };
+    let mut view = FleetView::from_base(&setup.client_links, setup.server);
+    let mut trace = RoundTrace::with_capacity(n);
     let mut eval_logits = Mat::zeros(setup.test_xhat.rows(), c);
     let mut probe_logits = Mat::zeros(cfg.local_batch, c);
 
@@ -157,8 +179,12 @@ pub fn run(
         let epoch = iter / cfg.steps_per_epoch;
         let step = iter % cfg.steps_per_epoch;
         let lr = setup.effective_lr(epoch) as f32;
-        sampler.sample_into(&mut delay_rng, &mut delays);
-        let ctx = RoundCtx { iter, epoch, step, setup };
+        // Scenario first (this round's fleet), then the per-leg timeline
+        // draw — same delay-RNG sequence as the one-shot sampler.
+        view.reset_from(&setup.client_links, setup.server);
+        scenario.begin_round(iter, &mut view, &mut scenario_rng);
+        trace.sample_into(&view, &client_loads, server_load, &mut delay_rng);
+        let ctx = RoundCtx { iter, epoch, step, setup, trace: &trace };
 
         // --- the scheme's waiting policy decides who participates ---
         agg.as_mut_slice().fill(0.0);
@@ -167,7 +193,7 @@ pub fn run(
             // (rust/PERF.md §Design); the scope bounds the borrow so the
             // update below can mutate θ again.
             let theta_prep = rt.prepare_theta_into(&theta, &mut theta_panel)?;
-            let plan = scheme.plan_round(&ctx, &delays)?;
+            let plan = scheme.plan_round(&ctx, trace.delays())?;
             for req in &plan.requests {
                 anyhow::ensure!(
                     req.client < n,
@@ -200,7 +226,7 @@ pub fn run(
                 agg.axpy(req.scale, g);
             }
             let exec = RoundExec::new(rt, &theta_prep);
-            let cost = scheme.aggregate(&ctx, &delays, &plan, &exec, &mut agg)?;
+            let cost = scheme.aggregate(&ctx, trace.delays(), &plan, &exec, &mut agg)?;
             (plan.requests.len(), cost)
         };
 

@@ -8,6 +8,7 @@ use anyhow::{Context, Result};
 
 use crate::conf::ExperimentConfig;
 use crate::data::{self, synth, Dataset};
+use crate::delay::asymmetric::AsymNodeParams;
 use crate::delay::NodeParams;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
@@ -26,7 +27,17 @@ pub struct ClientData {
 /// Everything schemes share for one experiment.
 pub struct FedSetup {
     pub cfg: ExperimentConfig,
+    /// Per-client reciprocal-model parameters — what the load-allocation
+    /// optimizer and CDF layer consume. Under a `[fleet]`-configured
+    /// asymmetric fleet these are each client's
+    /// [`AsymNodeParams::reciprocal_surrogate`] (matched mean
+    /// communication delay); otherwise the §V-A fleet unchanged.
     pub clients: Vec<NodeParams>,
+    /// Per-client per-leg link models — what the round timeline samples
+    /// (scenario-modulated through a [`crate::topology::FleetView`]).
+    /// Reciprocal fleets carry `AsymNodeParams::symmetric(clients[j])`,
+    /// which samples bit-identically to the base model.
+    pub client_links: Vec<AsymNodeParams>,
     pub server: NodeParams,
     pub fleet_spec: FleetSpec,
     pub client_data: Vec<ClientData>,
@@ -59,9 +70,21 @@ impl FedSetup {
         // --- dataset (real IDX files if present, synthetic otherwise) ---
         let (train, test) = load_dataset(cfg, &mut data_rng)?;
 
-        // --- fleet (§V-A LTE setting) ---
-        let fleet_spec = FleetSpec::paper(cfg.clients, cfg.q, cfg.classes);
-        let clients = fleet_spec.build_clients(&mut topo_rng);
+        // --- fleet (§V-A LTE setting; [fleet] may make links asymmetric) ---
+        let mut fleet_spec = FleetSpec::paper(cfg.clients, cfg.q, cfg.classes);
+        fleet_spec.asym = cfg.fleet_asym;
+        let base_clients = fleet_spec.build_clients(&mut topo_rng);
+        let client_links = fleet_spec.build_links(&base_clients);
+        // The allocation/CDF layer speaks the reciprocal model: under
+        // asymmetric links each client is represented there by a
+        // surrogate with matched mean communication delay, while the
+        // round timeline samples the exact per-leg model. The symmetric
+        // fleet passes through untouched (bit-identity).
+        let clients: Vec<NodeParams> = if fleet_spec.asym.is_some() {
+            client_links.iter().map(AsymNodeParams::reciprocal_surrogate).collect()
+        } else {
+            base_clients
+        };
         let server = fleet_spec.build_server();
 
         // --- non-IID shards, assigned in expected-delay order (§V-A) ---
@@ -104,6 +127,7 @@ impl FedSetup {
         Ok(FedSetup {
             cfg: cfg.clone(),
             clients,
+            client_links,
             server,
             fleet_spec,
             client_data,

@@ -14,7 +14,7 @@
 
 use crate::rng::Rng;
 
-use super::NodeParams;
+use super::{DelayLegs, NodeParams};
 
 /// Node with direction-dependent link parameters.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -110,17 +110,51 @@ impl AsymNodeParams {
         sum.clamp(0.0, 1.0)
     }
 
-    /// Sample one epoch delay.
-    pub fn sample_delay(&self, ell: f64, rng: &mut Rng) -> f64 {
-        let det = ell / self.mu;
-        let stoch = if ell == 0.0 {
+    /// Sample one epoch's per-leg delays. The RNG sequence (exponential
+    /// compute draw, downlink count, uplink count) matches both the
+    /// historical asymmetric `sample_delay` and — through
+    /// [`AsymNodeParams::symmetric`] — [`NodeParams::sample_legs`], so a
+    /// reciprocal-link fleet sampled through this model reproduces the
+    /// base model's draws bit-for-bit.
+    pub fn sample_legs(&self, ell: f64, rng: &mut Rng) -> DelayLegs {
+        let compute_det = ell / self.mu;
+        let compute_stoch = if ell == 0.0 {
             0.0
         } else {
             rng.next_exponential(self.alpha * self.mu / ell)
         };
-        let nd = rng.next_geometric_trials(self.p_down);
-        let nu = rng.next_geometric_trials(self.p_up);
-        det + stoch + self.tau_down * nd as f64 + self.tau_up * nu as f64
+        let n_down = rng.next_geometric_trials(self.p_down);
+        let n_up = rng.next_geometric_trials(self.p_up);
+        DelayLegs {
+            n_down,
+            n_up,
+            compute_det,
+            compute_stoch,
+            tau_down: self.tau_down,
+            tau_up: self.tau_up,
+        }
+    }
+
+    /// Sample one epoch delay: the sum over the sampled legs.
+    pub fn sample_delay(&self, ell: f64, rng: &mut Rng) -> f64 {
+        self.sample_legs(ell, rng).total()
+    }
+
+    /// Symmetric surrogate with the same *mean* communication delay:
+    /// `p = (p_d + p_u)/2` and τ chosen so `2τ/(1−p)` equals
+    /// `τ_d/(1−p_d) + τ_u/(1−p_u)`. The load-allocation optimizer
+    /// (`crate::allocation`) speaks the reciprocal model of the Theorem;
+    /// under a `[fleet]`-configured asymmetric fleet each client is
+    /// represented there by this surrogate while the round simulator
+    /// keeps the exact per-leg model. Only meaningful for genuinely
+    /// asymmetric links — the symmetric case should use the original
+    /// [`NodeParams`] unchanged (round-tripping through the surrogate
+    /// can flip the last ulp of τ).
+    pub fn reciprocal_surrogate(&self) -> NodeParams {
+        let p = 0.5 * (self.p_down + self.p_up);
+        let mean_comm =
+            self.tau_down / (1.0 - self.p_down) + self.tau_up / (1.0 - self.p_up);
+        NodeParams { mu: self.mu, alpha: self.alpha, tau: 0.5 * (1.0 - p) * mean_comm, p }
     }
 }
 
@@ -170,6 +204,43 @@ mod tests {
         let slow = AsymNodeParams { tau_up: 3.0, ..fast };
         assert!(slow.mean_delay(5.0) > fast.mean_delay(5.0));
         assert!(slow.cdf(6.0, 5.0) < fast.cdf(6.0, 5.0));
+    }
+
+    #[test]
+    fn symmetric_sample_legs_match_base_model_bitwise() {
+        let base = NodeParams { mu: 3.0, alpha: 2.0, tau: 0.8, p: 0.25 };
+        let asym = AsymNodeParams::symmetric(&base);
+        let mut rng_a = Rng::seed_from(5);
+        let mut rng_b = Rng::seed_from(5);
+        for i in 0..200 {
+            let ell = (i % 5) as f64;
+            let a = asym.sample_delay(ell, &mut rng_a);
+            let b = base.sample_delay(ell, &mut rng_b);
+            assert_eq!(a.to_bits(), b.to_bits(), "ell={ell}");
+        }
+    }
+
+    #[test]
+    fn reciprocal_surrogate_preserves_mean_delay() {
+        let asym = AsymNodeParams {
+            mu: 2.0,
+            alpha: 2.0,
+            tau_down: 0.5,
+            tau_up: 1.5,
+            p_down: 0.4,
+            p_up: 0.1,
+        };
+        let sur = asym.reciprocal_surrogate();
+        sur.validate().unwrap();
+        assert_eq!(sur.mu, asym.mu);
+        assert_eq!(sur.alpha, asym.alpha);
+        assert!((sur.p - 0.25).abs() < 1e-12);
+        for &ell in &[0.0, 3.0, 11.0] {
+            assert!(
+                (sur.mean_delay(ell) - asym.mean_delay(ell)).abs() < 1e-12,
+                "ell={ell}"
+            );
+        }
     }
 
     #[test]

@@ -16,6 +16,94 @@ pub mod asymmetric;
 
 use crate::rng::Rng;
 
+/// One epoch delay decomposed into its §II-B legs: the downlink wait for
+/// θ (`τ_d·N_down`), the deterministic + stochastic compute parts, and
+/// the uplink wait for the gradient (`τ_u·N_up`). Produced by
+/// [`NodeParams::sample_legs`] / [`asymmetric::AsymNodeParams::sample_legs`]
+/// and consumed by the round timeline ([`crate::sim::timeline`]), which
+/// turns the legs into ordered completion events.
+///
+/// The raw draws (`N_down`, `N_up`, the exponential compute part) are
+/// stored instead of pre-summed times so [`DelayLegs::total`] can
+/// reproduce the historical one-shot `sample_delay` arithmetic
+/// bit-for-bit — f64 addition is not associative, and seeded histories
+/// are pinned on the old grouping.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct DelayLegs {
+    /// Downlink retransmission count `N_down ≥ 1` (eq. 13).
+    pub n_down: u64,
+    /// Uplink retransmission count `N_up ≥ 1`.
+    pub n_up: u64,
+    /// Deterministic compute time `ℓ̃/μ` (eq. 11).
+    pub compute_det: f64,
+    /// Stochastic compute draw `~ Exp(αμ/ℓ̃)` (0 when `ℓ̃ = 0`).
+    pub compute_stoch: f64,
+    /// Downlink per-packet time (τ in the reciprocal model).
+    pub tau_down: f64,
+    /// Uplink per-packet time.
+    pub tau_up: f64,
+}
+
+impl DelayLegs {
+    /// Time to receive θ: `τ_d · N_down`.
+    pub fn downlink_time(&self) -> f64 {
+        self.tau_down * self.n_down as f64
+    }
+
+    /// Time to deliver the gradient: `τ_u · N_up`.
+    pub fn uplink_time(&self) -> f64 {
+        self.tau_up * self.n_up as f64
+    }
+
+    /// Local compute time (deterministic + stochastic parts).
+    pub fn compute_time(&self) -> f64 {
+        self.compute_det + self.compute_stoch
+    }
+
+    /// Total epoch delay `T` (eq. 11). With reciprocal links
+    /// (`tau_down` bitwise equal to `tau_up`) this evaluates the
+    /// historical `det + stoch + τ·(N_down + N_up)` grouping exactly, so
+    /// legs-based sampling reproduces pre-timeline delay draws
+    /// bit-for-bit; per-leg τs use the asymmetric grouping
+    /// `det + stoch + τ_d·N_down + τ_u·N_up`.
+    pub fn total(&self) -> f64 {
+        if self.tau_down.to_bits() == self.tau_up.to_bits() {
+            self.compute_det
+                + self.compute_stoch
+                + self.tau_down * (self.n_down + self.n_up) as f64
+        } else {
+            self.compute_det + self.compute_stoch + self.downlink_time() + self.uplink_time()
+        }
+    }
+}
+
+/// Retransmission budget implied by a deadline `t` (Theorem / eq. 42):
+/// the shape [`NodeParams::nu_max`] hands the CDF, replacing the old
+/// `Option<u64>` whose `Some(u64::MAX)` sentinel leaked τ = 0 semantics
+/// to every caller.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NuMax {
+    /// `τ = 0`: links are free, the retransmission count never binds and
+    /// only the compute legs limit completion.
+    Unbounded,
+    /// The largest feasible total `ν_m ≥ 2` with `t − τ·ν_m > 0` and
+    /// `t − τ·(ν_m + 1) ≤ 0`.
+    Bounded(u64),
+    /// Even `ν = 2` (one downlink + one uplink packet) cannot complete:
+    /// `t ≤ 2τ`.
+    Infeasible,
+}
+
+impl NuMax {
+    /// The bound, when one exists (`Unbounded`/`Infeasible` ⇒ `None`).
+    pub fn bounded(self) -> Option<u64> {
+        match self {
+            NuMax::Bounded(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
 /// Stochastic parameters of one node (client or MEC computing unit).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct NodeParams {
@@ -54,14 +142,13 @@ impl NodeParams {
         (ell / self.mu) * (1.0 + 1.0 / self.alpha) + 2.0 * self.tau / (1.0 - self.p)
     }
 
-    /// Largest retransmission total `ν_m` with `t - τ ν_m > 0` and
-    /// `t - τ(ν_m + 1) ≤ 0`; `None` when even `ν = 2` (one down + one up)
-    /// cannot complete, i.e. `t ≤ 2τ`.
-    pub fn nu_max(&self, t: f64) -> Option<u64> {
+    /// Retransmission budget at deadline `t`: `Bounded(ν_m)` with
+    /// `t - τ ν_m > 0` and `t - τ(ν_m + 1) ≤ 0`; `Infeasible` when even
+    /// `ν = 2` (one down + one up) cannot complete, i.e. `t ≤ 2τ`; and
+    /// `Unbounded` when `τ = 0` (free links — the count never binds).
+    pub fn nu_max(&self, t: f64) -> NuMax {
         if self.tau == 0.0 {
-            // No communication cost: unbounded ν is meaningless; model as
-            // "links are free" and signal with a large sentinel of 2.
-            return if t > 0.0 { Some(u64::MAX) } else { None };
+            return if t > 0.0 { NuMax::Unbounded } else { NuMax::Infeasible };
         }
         let x = t / self.tau;
         // ν_m = ceil(x) - 1, adjusted for exact multiples.
@@ -71,9 +158,9 @@ impl NodeParams {
             x.floor() as i64
         };
         if nu >= 2 {
-            Some(nu as u64)
+            NuMax::Bounded(nu as u64)
         } else {
-            None
+            NuMax::Infeasible
         }
     }
 
@@ -86,20 +173,21 @@ impl NodeParams {
         if t <= 0.0 {
             return 0.0;
         }
-        if self.tau == 0.0 {
-            // Pure compute: P(ℓ/μ + Exp(αμ/ℓ) ≤ t).
-            let det = ell / self.mu;
-            if t <= det {
-                return 0.0;
+        let nu_m = match self.nu_max(t) {
+            NuMax::Infeasible => return 0.0,
+            NuMax::Unbounded => {
+                // τ = 0, pure compute: P(ℓ/μ + Exp(αμ/ℓ) ≤ t).
+                let det = ell / self.mu;
+                if t <= det {
+                    return 0.0;
+                }
+                if ell == 0.0 {
+                    return 1.0;
+                }
+                let gamma = self.alpha * self.mu / ell;
+                return 1.0 - (-(gamma) * (t - det)).exp();
             }
-            if ell == 0.0 {
-                return 1.0;
-            }
-            let gamma = self.alpha * self.mu / ell;
-            return 1.0 - (-(gamma) * (t - det)).exp();
-        }
-        let Some(nu_m) = self.nu_max(t) else {
-            return 0.0;
+            NuMax::Bounded(v) => v,
         };
         let det = ell / self.mu;
         let q = 1.0 - self.p;
@@ -128,17 +216,36 @@ impl NodeParams {
         sum.clamp(0.0, 1.0)
     }
 
-    /// Draw one epoch delay `T` for processed load `ℓ̃` (eqs. 11–14).
-    pub fn sample_delay(&self, ell: f64, rng: &mut Rng) -> f64 {
-        let det = ell / self.mu;
-        let stoch = if ell == 0.0 {
+    /// Draw one epoch's per-leg delays for processed load `ℓ̃`
+    /// (eqs. 11–14). The RNG sequence — the exponential compute draw
+    /// (skipped at `ℓ̃ = 0`), then the downlink and uplink retransmission
+    /// counts — is exactly the historical [`NodeParams::sample_delay`]
+    /// sequence, so legs-based and one-shot sampling are interchangeable
+    /// without perturbing seeded runs.
+    pub fn sample_legs(&self, ell: f64, rng: &mut Rng) -> DelayLegs {
+        let compute_det = ell / self.mu;
+        let compute_stoch = if ell == 0.0 {
             0.0
         } else {
             rng.next_exponential(self.alpha * self.mu / ell)
         };
         let n_down = rng.next_geometric_trials(self.p);
         let n_up = rng.next_geometric_trials(self.p);
-        det + stoch + self.tau * (n_down + n_up) as f64
+        DelayLegs {
+            n_down,
+            n_up,
+            compute_det,
+            compute_stoch,
+            tau_down: self.tau,
+            tau_up: self.tau,
+        }
+    }
+
+    /// Draw one epoch delay `T` for processed load `ℓ̃` (eqs. 11–14): the
+    /// sum over the sampled legs ([`DelayLegs::total`], which preserves
+    /// the historical summation order bit-for-bit).
+    pub fn sample_delay(&self, ell: f64, rng: &mut Rng) -> f64 {
+        self.sample_legs(ell, rng).total()
     }
 }
 
@@ -165,12 +272,60 @@ mod tests {
         let n = node();
         // paper: ν_m satisfies t - τν_m > 0 and t - τ(ν_m+1) <= 0.
         for &t in &[3.5, 5.2, 10.0, 17.32, 100.0] {
-            if let Some(nu) = n.nu_max(t) {
-                assert!(t - n.tau * nu as f64 > 0.0);
-                assert!(t - n.tau * (nu + 1) as f64 <= 1e-9);
-            } else {
-                assert!(t <= 2.0 * n.tau + 1e-12);
+            match n.nu_max(t) {
+                NuMax::Bounded(nu) => {
+                    assert!(t - n.tau * nu as f64 > 0.0);
+                    assert!(t - n.tau * (nu + 1) as f64 <= 1e-9);
+                }
+                NuMax::Infeasible => assert!(t <= 2.0 * n.tau + 1e-12),
+                NuMax::Unbounded => panic!("tau > 0 can never be Unbounded"),
             }
+        }
+    }
+
+    #[test]
+    fn nu_max_tau_zero_is_unbounded_not_a_sentinel() {
+        // Regression: τ = 0 used to smuggle `Some(u64::MAX)` through the
+        // Option shape; it is now an explicit variant the CDF handles.
+        let n = NodeParams { mu: 2.0, alpha: 2.0, tau: 0.0, p: 0.0 };
+        assert_eq!(n.nu_max(1.0), NuMax::Unbounded);
+        assert_eq!(n.nu_max(1e-9), NuMax::Unbounded);
+        assert_eq!(n.nu_max(0.0), NuMax::Infeasible);
+        assert_eq!(n.nu_max(-3.0), NuMax::Infeasible);
+        assert_eq!(NuMax::Unbounded.bounded(), None);
+        assert_eq!(NuMax::Bounded(5).bounded(), Some(5));
+        assert_eq!(NuMax::Infeasible.bounded(), None);
+
+        // CDF at τ = 0 stays the pure shifted-exponential compute law.
+        let ell = 4.0;
+        let det = ell / n.mu;
+        assert_eq!(n.cdf(det, ell), 0.0);
+        assert_eq!(n.cdf(0.0, ell), 0.0);
+        let gamma = n.alpha * n.mu / ell;
+        for &dt in &[0.5, 1.0, 3.0] {
+            let exact = 1.0 - (-gamma * dt).exp();
+            assert!((n.cdf(det + dt, ell) - exact).abs() < 1e-12);
+        }
+        // Zero load over free links completes instantly after t = 0.
+        assert_eq!(n.cdf(0.5, 0.0), 1.0);
+    }
+
+    #[test]
+    fn sample_legs_total_reproduces_sample_delay_bitwise() {
+        let n = node();
+        let mut rng_legs = Rng::seed_from(77);
+        let mut rng_one = Rng::seed_from(77);
+        for i in 0..200 {
+            let ell = (i % 7) as f64;
+            let legs = n.sample_legs(ell, &mut rng_legs);
+            let one = n.sample_delay(ell, &mut rng_one);
+            assert_eq!(legs.total().to_bits(), one.to_bits(), "ell={ell}");
+            assert!(legs.n_down >= 1 && legs.n_up >= 1);
+            assert!(legs.downlink_time() > 0.0 && legs.uplink_time() > 0.0);
+            // The legs decompose the total (up to f64 re-association).
+            let parts = legs.downlink_time() + legs.compute_time() + legs.uplink_time();
+            let tol = 1e-12 * legs.total().abs().max(1.0);
+            assert!((parts - legs.total()).abs() <= tol);
         }
     }
 

@@ -28,7 +28,9 @@ use crate::conf::{ConfError, ExperimentConfig};
 use crate::coordinator::{engine, FedSetup, RoundObserver, TrainOutcome};
 use crate::runtime::{Runtime, RuntimeShapes};
 use crate::schemes::{Scheme, SchemeSpec};
+use crate::sim::scenario::ScenarioSpec;
 use crate::tensor::SimdPolicy;
+use crate::topology::AsymLinkSpec;
 
 /// Derive the runtime shape set from an experiment config (must agree with
 /// `python/compile/shapes.py`; the PJRT manifest check fails fast
@@ -137,6 +139,13 @@ impl ExperimentBuilder {
         /// SIMD microkernel policy (`Auto` detects AVX2+FMA / NEON once;
         /// `Scalar` pins the bit-exact fallback).
         simd: SimdPolicy,
+        /// Per-round network scenario (`ScenarioSpec::Static` — the
+        /// default — is bit-identical to the fixed-fleet behaviour;
+        /// `Dropout`/`Fading`/`Burst` open the non-stationary regimes).
+        scenario: ScenarioSpec,
+        /// Asymmetric downlink/uplink link overrides (`None` keeps the
+        /// paper's reciprocal §V-A links).
+        fleet_asym: Option<AsymLinkSpec>,
         /// Max parity rows (AOT-compiled shape).
         u_max: usize,
         /// Generator matrix distribution.

@@ -41,6 +41,25 @@
 //! [`coordinator::RoundObserver`] — the CLI progress printer, benches and
 //! tests all consume that same stream.
 //!
+//! ## Network scenarios and the round timeline
+//!
+//! Delay sampling is an *event timeline*, not one scalar per client: each
+//! round records every client's ordered leg completions (downlink wait →
+//! compute → uplink wait) plus the MEC unit's parity completion in a
+//! [`sim::timeline::RoundTrace`], whose totals feed the familiar
+//! [`sim::RoundDelays`] view. On top sits a pluggable
+//! [`sim::scenario::Scenario`] (`[scenario]` config / `--scenario` /
+//! [`ExperimentBuilder::scenario`]): `static` (default, bit-identical to
+//! the fixed-fleet §V-A setting), `dropout:rate=…` (per-round client
+//! unavailability), `fading:depth=…,period=…` (round-varying τ/p) and
+//! `burst:slow=…,factor=…` (compute-rate dips). Every scheme on a session
+//! sees the same scenario realisation, so comparisons stay fair, and all
+//! scenarios are deterministic across thread counts and SIMD policies.
+//! The `[fleet]` section additionally opens asymmetric downlink/uplink
+//! links (per-leg τ multipliers and erasure probabilities) sampled
+//! exactly by the timeline, with the allocation optimizer seeing each
+//! client's matched-mean reciprocal surrogate.
+//!
 //! ## The stack
 //!
 //! The crate is the **Layer-3 coordinator** of a three-layer stack:
@@ -115,3 +134,4 @@ pub mod topology;
 pub use coordinator::{FedSetup, RoundEvent, RoundObserver, TrainOutcome};
 pub use experiment::{ExperimentBuilder, Session};
 pub use schemes::{Scheme, SchemeSpec};
+pub use sim::scenario::{Scenario, ScenarioSpec};

@@ -43,6 +43,12 @@ fn commands() -> Vec<Command> {
             default: None,
             is_flag: false,
         },
+        OptSpec {
+            name: "scenario",
+            help: "network scenario: static | dropout[:rate=r] | fading[:depth=d,period=T] | burst[:slow=s,factor=f]",
+            default: None,
+            is_flag: false,
+        },
     ];
     vec![
         Command {
@@ -121,6 +127,9 @@ fn builder_from(args: &Args) -> Result<ExperimentBuilder> {
     }
     if let Some(s) = args.get("simd") {
         b = b.simd(s.parse().map_err(anyhow::Error::msg)?);
+    }
+    if let Some(s) = args.get("scenario") {
+        b = b.scenario(s.parse().map_err(anyhow::Error::msg)?);
     }
     Ok(b)
 }

@@ -90,11 +90,14 @@ impl Scheme for CodedFedL {
         let cs = self.state();
         // Uncoded part: clients that make the deadline (eq. 29) and have a
         // non-empty processed subset contribute their masked gradient.
+        // Scenario-dropped clients carry infinite delays, so they simply
+        // miss t* and the parity gradient compensates — exactly the
+        // paper's straggler story. `arrivals_iter` keeps this per-round
+        // decision free of the old `Vec<bool>` allocation.
         let requests = delays
-            .arrivals(cs.t_star)
-            .iter()
+            .arrivals_iter(cs.t_star)
             .enumerate()
-            .filter(|(j, arrived)| **arrived && cs.masks[*j].iter().any(|&v| v > 0.0))
+            .filter(|&(j, arrived)| arrived && cs.masks[j].iter().any(|&v| v > 0.0))
             .map(|(j, _)| GradRequest { client: j, mask: cs.masks[j].clone(), scale: 1.0 })
             .collect();
         Ok(RoundPlan { requests, round_time: cs.t_star })

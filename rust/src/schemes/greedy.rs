@@ -42,8 +42,18 @@ impl Scheme for GreedyUncoded {
 
     fn plan_round(&mut self, ctx: &RoundCtx, delays: &RoundDelays) -> Result<RoundPlan> {
         let cfg = &ctx.setup.cfg;
-        let (t_k, mut winners) =
-            delays.kth_fastest(self.k(cfg.clients)).map_err(anyhow::Error::msg)?;
+        // Scenario-dropped clients carry infinite delays: they sort after
+        // every finite one and can never be winners, so k is clamped to
+        // the clients actually reachable this round (no-op under the
+        // static scenario). A round with nobody reachable contributes
+        // nothing — the built-in scenarios guarantee at least one client.
+        let present = delays.present_count();
+        if present == 0 {
+            return Ok(RoundPlan { requests: Vec::new(), round_time: 0.0 });
+        }
+        let (t_k, mut winners) = delays
+            .kth_fastest(self.k(cfg.clients).min(present))
+            .map_err(anyhow::Error::msg)?;
         // Execute in client order, not arrival order: the aggregate's f32
         // rounding then depends only on the winner *set*, making
         // greedy(ψ=0) bit-identical to naive on the same setup. This is a

@@ -40,6 +40,7 @@ use crate::conf::ExperimentConfig;
 use crate::coordinator::FedSetup;
 use crate::rng::Rng;
 use crate::runtime::{PreparedTheta, Runtime};
+use crate::sim::timeline::RoundTrace;
 use crate::sim::RoundDelays;
 use crate::tensor::Mat;
 
@@ -78,6 +79,12 @@ pub struct RoundCtx<'a> {
     pub step: usize,
     /// The shared experiment state (fleet, shards, config).
     pub setup: &'a FedSetup,
+    /// This round's full event timeline — ordered per-leg completion
+    /// events per client (downlink → compute → uplink) plus the server's
+    /// parity completion, after scenario modulation. The
+    /// [`RoundDelays`] passed alongside the hooks is the same trace's
+    /// totals view; schemes that only wait on totals can ignore this.
+    pub trace: &'a RoundTrace,
 }
 
 /// One client gradient the engine executes on the scheme's behalf.

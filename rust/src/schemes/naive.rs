@@ -1,16 +1,19 @@
-//! Naive uncoded aggregation: wait for every client, every round.
+//! Naive uncoded aggregation: wait for every reachable client, every
+//! round.
 
 use anyhow::Result;
 
-use super::{GradRequest, RoundCtx, RoundPlan, Scheme};
+use super::{GradRequest, RoundCost, RoundCtx, RoundExec, RoundPlan, Scheme};
 use crate::sim::RoundDelays;
+use crate::tensor::Mat;
 
 /// The paper's baseline (§V-A): the server waits for all `n` updates, so a
-/// round costs `max_j T_j` — one straggler prices the whole fleet. The
-/// aggregate is stochastically complete, so the default
-/// [`Scheme::aggregate`] (cost = planned time, denominator = m) applies
-/// as-is; this is also the minimal-surface reference implementation of the
-/// trait: `label` + `plan_round` and nothing else.
+/// round costs `max_j T_j` — one straggler prices the whole fleet. Under a
+/// non-static scenario, clients the round dropped (infinite delay) are
+/// excluded: the server knows they are unreachable, waits only for the
+/// present ones, and normalises by the data that actually returned — on
+/// the default `static` scenario that denominator is exactly `m`,
+/// reproducing the historical behaviour bit-for-bit.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NaiveUncoded;
 
@@ -32,8 +35,25 @@ impl Scheme for NaiveUncoded {
     fn plan_round(&mut self, ctx: &RoundCtx, delays: &RoundDelays) -> Result<RoundPlan> {
         let cfg = &ctx.setup.cfg;
         let requests = (0..cfg.clients)
+            .filter(|&j| delays.is_present(j))
             .map(|j| GradRequest::full(j, cfg.local_batch))
             .collect();
         Ok(RoundPlan { requests, round_time: delays.max_client_time() })
+    }
+
+    fn aggregate(
+        &mut self,
+        ctx: &RoundCtx,
+        _delays: &RoundDelays,
+        plan: &RoundPlan,
+        _exec: &RoundExec,
+        _agg: &mut Mat,
+    ) -> Result<RoundCost> {
+        // Normalise by the actual aggregate return: with everyone present
+        // this is exactly m (identical to the historical m-denominator);
+        // under scenario dropout the absent clients' data really is
+        // missing from the round, mirroring greedy's discard pricing.
+        let returned = (plan.requests.len() * ctx.setup.cfg.local_batch) as f32;
+        Ok(RoundCost { sim_seconds: plan.round_time, returned })
     }
 }

@@ -4,30 +4,90 @@
 //! paper's stochastic models (§II-B) to decide (a) which gradients arrive
 //! and (b) how much simulated wall-clock the round costs under each
 //! scheme's waiting policy. Gradients themselves are really computed
-//! through the PJRT executables — the clock is virtual, the math is not
-//! (DESIGN.md §6).
+//! through the runtime's executors — the clock is virtual, the math is
+//! not (DESIGN.md §6).
+//!
+//! The simulation is layered:
+//!
+//! * [`timeline`] — the per-round event timeline: every client's ordered
+//!   leg-completion events (downlink → compute → uplink) plus the MEC
+//!   unit's parity completion, recorded in a reusable
+//!   [`timeline::RoundTrace`] whose [`RoundDelays`] is a cheap totals
+//!   view every waiting policy consumes.
+//! * [`scenario`] — pluggable per-round network behaviour: a
+//!   [`scenario::Scenario`] modulates the round's
+//!   [`crate::topology::FleetView`] (dropouts, fading, compute bursts)
+//!   before the timeline samples it. `static` — the default — is
+//!   bit-identical to the fixed-fleet behaviour below.
+//! * [`RoundSampler`] — the direct fixed-fleet sampler (the pre-timeline
+//!   path, kept as the static reference and for code that needs totals
+//!   only).
+//!
+//! A client a scenario marks unavailable carries `T_j = ∞` in
+//! [`RoundDelays`]: it never arrives by any deadline, sorts after every
+//! finite delay, and is excluded from the waiting policies' pricing.
+
+pub mod scenario;
+pub mod timeline;
+
+pub use scenario::{Scenario, ScenarioSpec};
+pub use timeline::{Leg, LegEvent, RoundTrace};
 
 use crate::delay::NodeParams;
 use crate::rng::Rng;
 
 /// Sampled per-round delays for the client fleet.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct RoundDelays {
-    /// Per-client total time `T_j` for its processed load this round.
+    /// Per-client total time `T_j` for its processed load this round
+    /// (`f64::INFINITY` for clients the round's scenario dropped).
     pub client_t: Vec<f64>,
     /// The MEC computing unit's time `T_C` for the coded gradient.
     pub server_t: f64,
 }
 
 impl RoundDelays {
-    /// Which clients made a deadline `t`.
+    /// Which clients made a deadline `t`. Allocates a fresh `Vec` — on
+    /// per-round paths prefer [`RoundDelays::arrivals_iter`] or
+    /// [`RoundDelays::arrivals_into`].
     pub fn arrivals(&self, t: f64) -> Vec<bool> {
-        self.client_t.iter().map(|&tt| tt <= t).collect()
+        self.arrivals_iter(t).collect()
     }
 
-    /// Completion time when waiting for *all* clients (naive uncoded).
+    /// Allocation-free view of [`RoundDelays::arrivals`]: per-client
+    /// "made the deadline `t`" flags in client-index order.
+    pub fn arrivals_iter(&self, t: f64) -> impl Iterator<Item = bool> + '_ {
+        self.client_t.iter().map(move |&tt| tt <= t)
+    }
+
+    /// [`RoundDelays::arrivals`] into a caller-owned buffer (cleared and
+    /// refilled; capacity reused across rounds).
+    pub fn arrivals_into(&self, t: f64, out: &mut Vec<bool>) {
+        out.clear();
+        out.extend(self.arrivals_iter(t));
+    }
+
+    /// Whether client `j` is reachable this round (scenario dropouts
+    /// carry an infinite delay).
+    pub fn is_present(&self, j: usize) -> bool {
+        self.client_t[j].is_finite()
+    }
+
+    /// Number of clients reachable this round.
+    pub fn present_count(&self) -> usize {
+        self.client_t.iter().filter(|t| t.is_finite()).count()
+    }
+
+    /// Completion time when waiting for *all* reachable clients (naive
+    /// uncoded). Scenario-dropped clients are not waited for — the server
+    /// knows they are gone this round — so only finite delays price the
+    /// round; 0 when no client is reachable.
     pub fn max_client_time(&self) -> f64 {
-        self.client_t.iter().cloned().fold(0.0, f64::max)
+        self.client_t
+            .iter()
+            .filter(|t| t.is_finite())
+            .cloned()
+            .fold(0.0, f64::max)
     }
 
     /// Completion time when waiting for the fastest `k` clients (greedy
@@ -146,6 +206,39 @@ mod tests {
         let d = RoundDelays { client_t: vec![1.0, 3.0, 2.0], server_t: 0.5 };
         assert_eq!(d.arrivals(2.0), vec![true, false, true]);
         assert_eq!(d.max_client_time(), 3.0);
+    }
+
+    #[test]
+    fn arrivals_iter_and_into_match_arrivals() {
+        let d = RoundDelays { client_t: vec![1.0, 3.0, 2.0, f64::INFINITY], server_t: 0.5 };
+        let vec_form = d.arrivals(2.5);
+        assert_eq!(d.arrivals_iter(2.5).collect::<Vec<bool>>(), vec_form);
+        let mut buf = vec![true; 1]; // stale contents + wrong length
+        d.arrivals_into(2.5, &mut buf);
+        assert_eq!(buf, vec_form);
+        assert_eq!(buf, vec![true, false, true, false]);
+    }
+
+    #[test]
+    fn dropped_clients_are_absent_everywhere() {
+        // A scenario-dropped client (T = ∞) never arrives, never prices
+        // the round, and sorts after every finite delay.
+        let d = RoundDelays {
+            client_t: vec![4.0, f64::INFINITY, 2.0],
+            server_t: 0.0,
+        };
+        assert!(!d.is_present(1));
+        assert!(d.is_present(0) && d.is_present(2));
+        assert_eq!(d.present_count(), 2);
+        assert_eq!(d.max_client_time(), 4.0);
+        assert_eq!(d.arrivals(1e12), vec![true, false, true]);
+        let (t2, winners) = d.kth_fastest(2).unwrap();
+        assert_eq!(t2, 4.0);
+        assert_eq!(winners, vec![2, 0]);
+        // All dropped: nothing to wait for.
+        let none = RoundDelays { client_t: vec![f64::INFINITY; 2], server_t: 0.0 };
+        assert_eq!(none.present_count(), 0);
+        assert_eq!(none.max_client_time(), 0.0);
     }
 
     #[test]

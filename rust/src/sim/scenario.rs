@@ -1,0 +1,432 @@
+//! Pluggable per-round network scenarios.
+//!
+//! The paper evaluates a *stationary* fleet (§V-A): every round draws
+//! from the same per-node distributions. Real edge networks are not
+//! stationary — clients churn, links fade, compute throttles — and the
+//! related work (stochastic/time-varying coded FL) lives in exactly that
+//! regime. A [`Scenario`] opens that axis: at the top of every round it
+//! modulates the round's [`FleetView`] (a working copy of the base
+//! fleet) before the timeline samples it. Schemes are oblivious — they
+//! keep consuming [`crate::sim::RoundDelays`]; a dropped client simply
+//! carries `T_j = ∞`.
+//!
+//! Built-ins ([`ScenarioSpec`], the CLI/TOML-facing parser in the style
+//! of [`crate::schemes::SchemeSpec`]):
+//!
+//! * `static` — no modulation; **bit-identical** to the pre-scenario
+//!   fixed-fleet behaviour (it never touches the scenario RNG stream).
+//! * `dropout:rate=…` — each client is unavailable each round with the
+//!   given probability (at least one client is always kept).
+//! * `fading:depth=…,period=…` — deterministic sinusoidal modulation of
+//!   every link's τ and p over rounds (slow large-scale fading).
+//! * `burst:slow=…,factor=…` — each client's compute rate μ dips by
+//!   `factor` with probability `slow` per round (thermal throttling,
+//!   background load).
+//!
+//! Determinism: scenarios draw only from the dedicated stream the engine
+//! hands them (tag [`SCENARIO_STREAM_TAG`], split off the experiment
+//! seed *independently of the scheme*), so every scheme on a session
+//! faces the same network realisation — the fair-comparison property the
+//! paper's evaluation relies on — and runs are reproducible across
+//! thread counts and SIMD policies (`tests/scenario_determinism.rs`).
+
+use std::f64::consts::PI;
+
+use crate::rng::Rng;
+use crate::topology::FleetView;
+
+/// Tag of the RNG stream scenarios draw from. The engine splits it off
+/// the experiment root *after* the per-scheme delay/code streams and with
+/// a scheme-independent label: pre-scenario streams keep their exact
+/// historical sequences, and every scheme sees the same scenario draws.
+pub const SCENARIO_STREAM_TAG: u64 = 0x5CE4_A210;
+
+/// A per-round network behaviour. Implementations mutate the round's
+/// [`FleetView`] in place; the engine resets the view to the base fleet
+/// before every call, so modulation never accumulates unless the
+/// scenario tracks state itself.
+///
+/// Contract: draw randomness only from `rng` (reproducibility); do not
+/// allocate in steady state — the warm-round zero-allocation gate
+/// (`tests/alloc_gate.rs`) runs every built-in scenario; and keep **at
+/// least one client available** every round. The waiting policies treat
+/// an empty round as costing zero simulated time (there is nobody to
+/// wait for), so a scenario that blacks out the whole fleet for a
+/// stretch of rounds would let training advance on a free clock —
+/// a silently wrong experiment, not an error. [`DropoutScenario`] shows
+/// the deterministic keep-one fallback.
+pub trait Scenario {
+    /// Human-readable label for logs and reports.
+    fn label(&self) -> String;
+
+    /// Modulate `view` for round `round` (0-based global iteration).
+    fn begin_round(&mut self, round: usize, view: &mut FleetView, rng: &mut Rng);
+}
+
+/// The fixed fleet of the paper (§V-A): no modulation, no RNG use.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StaticScenario;
+
+impl Scenario for StaticScenario {
+    fn label(&self) -> String {
+        "static".into()
+    }
+
+    fn begin_round(&mut self, _round: usize, _view: &mut FleetView, _rng: &mut Rng) {}
+}
+
+/// Per-round client unavailability: each client drops with probability
+/// `rate`, independently per round. If every client would drop, the
+/// deterministic fallback keeps client `round % n` — a round with nobody
+/// reachable would stall every waiting policy.
+#[derive(Clone, Copy, Debug)]
+pub struct DropoutScenario {
+    pub rate: f64,
+}
+
+impl Scenario for DropoutScenario {
+    fn label(&self) -> String {
+        format!("dropout(rate={})", self.rate)
+    }
+
+    fn begin_round(&mut self, round: usize, view: &mut FleetView, rng: &mut Rng) {
+        for a in view.available.iter_mut() {
+            if rng.next_f64() < self.rate {
+                *a = false;
+            }
+        }
+        let n = view.available.len();
+        if n > 0 && view.available.iter().all(|&a| !a) {
+            view.available[round % n] = true;
+        }
+    }
+}
+
+/// Slow sinusoidal link fading: round `r` scales every client's per-leg
+/// τ and erasure probability by `1 + depth·sin(2π r / period)` (p capped
+/// below 1). Deterministic — uses no randomness.
+#[derive(Clone, Copy, Debug)]
+pub struct FadingScenario {
+    pub depth: f64,
+    pub period: f64,
+}
+
+/// Erasure probabilities stay strictly below 1 under fading.
+const P_FADE_CAP: f64 = 0.99;
+
+impl Scenario for FadingScenario {
+    fn label(&self) -> String {
+        format!("fading(depth={},period={})", self.depth, self.period)
+    }
+
+    fn begin_round(&mut self, round: usize, view: &mut FleetView, _rng: &mut Rng) {
+        let f = 1.0 + self.depth * (2.0 * PI * round as f64 / self.period).sin();
+        for c in view.clients.iter_mut() {
+            // Both legs scale by the same factor, so reciprocal links stay
+            // bitwise-reciprocal (and keep the symmetric total grouping).
+            c.tau_down *= f;
+            c.tau_up *= f;
+            c.p_down = (c.p_down * f).min(P_FADE_CAP);
+            c.p_up = (c.p_up * f).min(P_FADE_CAP);
+        }
+    }
+}
+
+/// Per-round compute-rate dips: each client's μ is divided by `factor`
+/// with probability `slow` (modelling thermal throttling or background
+/// load bursts).
+#[derive(Clone, Copy, Debug)]
+pub struct BurstScenario {
+    pub slow: f64,
+    pub factor: f64,
+}
+
+impl Scenario for BurstScenario {
+    fn label(&self) -> String {
+        format!("burst(slow={},factor={})", self.slow, self.factor)
+    }
+
+    fn begin_round(&mut self, _round: usize, view: &mut FleetView, rng: &mut Rng) {
+        for c in view.clients.iter_mut() {
+            if rng.next_f64() < self.slow {
+                c.mu /= self.factor;
+            }
+        }
+    }
+}
+
+/// Closed, serialisable description of the built-in scenarios — the form
+/// the CLI (`--scenario`), TOML files (`[scenario] kind = …`) and tests
+/// speak. `parse` accepts `static`, `dropout[:rate=r]`,
+/// `fading[:depth=d,period=T]` and `burst[:slow=s,factor=f]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScenarioSpec {
+    /// The paper's fixed fleet (default; bit-identical to pre-scenario runs).
+    Static,
+    /// Per-round client unavailability with the given probability.
+    Dropout { rate: f64 },
+    /// Sinusoidal τ/p modulation over rounds.
+    Fading { depth: f64, period: f64 },
+    /// Per-round compute-rate dips.
+    Burst { slow: f64, factor: f64 },
+}
+
+impl ScenarioSpec {
+    pub fn label(&self) -> String {
+        match self {
+            ScenarioSpec::Static => "static".into(),
+            ScenarioSpec::Dropout { rate } => format!("dropout(rate={rate})"),
+            ScenarioSpec::Fading { depth, period } => {
+                format!("fading(depth={depth},period={period})")
+            }
+            ScenarioSpec::Burst { slow, factor } => {
+                format!("burst(slow={slow},factor={factor})")
+            }
+        }
+    }
+
+    /// Parse a scenario string: `static`, `dropout`, `dropout:rate=0.2`,
+    /// `fading:depth=0.5,period=20`, `burst:slow=0.1,factor=4`, …
+    /// Unknown names, unknown parameters and out-of-range values are
+    /// errors naming the offender and the accepted forms.
+    pub fn parse(s: &str) -> Result<ScenarioSpec, String> {
+        let (name, params) = match s.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p)),
+            None => (s.trim(), None),
+        };
+        // Comma-separated key=value list against a (key, default) table.
+        let kvs = |allowed: &[(&str, f64)]| -> Result<Vec<f64>, String> {
+            let mut vals: Vec<f64> = allowed.iter().map(|&(_, d)| d).collect();
+            let Some(p) = params else { return Ok(vals) };
+            for part in p.split(',') {
+                let part = part.trim();
+                let (k, v) = part.split_once('=').ok_or_else(|| {
+                    format!("scenario {name:?}: expected key=value, got {part:?}")
+                })?;
+                let idx = allowed
+                    .iter()
+                    .position(|&(key, _)| key == k.trim())
+                    .ok_or_else(|| {
+                        let keys: Vec<&str> = allowed.iter().map(|&(key, _)| key).collect();
+                        format!(
+                            "scenario {name:?}: unknown parameter {:?} (expected {})",
+                            k.trim(),
+                            keys.join(", ")
+                        )
+                    })?;
+                vals[idx] = v
+                    .trim()
+                    .parse::<f64>()
+                    .map_err(|e| format!("scenario {name:?}: {}: {e}", k.trim()))?;
+            }
+            Ok(vals)
+        };
+        let spec = match name {
+            "static" => match params {
+                None => ScenarioSpec::Static,
+                Some(p) => {
+                    return Err(format!("scenario \"static\" takes no parameters, got {p:?}"))
+                }
+            },
+            "dropout" => {
+                let v = kvs(&[("rate", 0.1)])?;
+                ScenarioSpec::Dropout { rate: v[0] }
+            }
+            "fading" => {
+                let v = kvs(&[("depth", 0.5), ("period", 20.0)])?;
+                ScenarioSpec::Fading { depth: v[0], period: v[1] }
+            }
+            "burst" => {
+                let v = kvs(&[("slow", 0.1), ("factor", 4.0)])?;
+                ScenarioSpec::Burst { slow: v[0], factor: v[1] }
+            }
+            other => {
+                return Err(format!(
+                    "unknown scenario {other:?} (expected static | dropout[:rate=r] | \
+                     fading[:depth=d,period=T] | burst[:slow=s,factor=f])"
+                ))
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Range-check the parameters (also called by the config validator,
+    /// since specs can be built directly).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            ScenarioSpec::Static => Ok(()),
+            ScenarioSpec::Dropout { rate } => {
+                if !(0.0..1.0).contains(&rate) {
+                    return Err(format!("dropout rate must be in [0,1), got {rate}"));
+                }
+                Ok(())
+            }
+            ScenarioSpec::Fading { depth, period } => {
+                if !(0.0..1.0).contains(&depth) {
+                    return Err(format!("fading depth must be in [0,1), got {depth}"));
+                }
+                if !(period > 0.0) {
+                    return Err(format!("fading period must be > 0 rounds, got {period}"));
+                }
+                Ok(())
+            }
+            ScenarioSpec::Burst { slow, factor } => {
+                if !(0.0..=1.0).contains(&slow) {
+                    return Err(format!("burst slow must be in [0,1], got {slow}"));
+                }
+                if !(factor >= 1.0) {
+                    return Err(format!("burst factor must be >= 1, got {factor}"));
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Instantiate the described scenario.
+    pub fn build(&self) -> Box<dyn Scenario> {
+        match *self {
+            ScenarioSpec::Static => Box::new(StaticScenario),
+            ScenarioSpec::Dropout { rate } => Box::new(DropoutScenario { rate }),
+            ScenarioSpec::Fading { depth, period } => {
+                Box::new(FadingScenario { depth, period })
+            }
+            ScenarioSpec::Burst { slow, factor } => Box::new(BurstScenario { slow, factor }),
+        }
+    }
+}
+
+impl std::str::FromStr for ScenarioSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        ScenarioSpec::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::FleetSpec;
+
+    fn view(n: usize) -> (Vec<crate::delay::asymmetric::AsymNodeParams>, FleetView) {
+        let spec = FleetSpec::paper(n, 64, 10);
+        let clients = spec.build_clients(&mut Rng::seed_from(2));
+        let links = spec.build_links(&clients);
+        let server = spec.build_server();
+        let v = FleetView::from_base(&links, server);
+        (links, v)
+    }
+
+    #[test]
+    fn spec_parse_roundtrip_and_defaults() {
+        assert_eq!(ScenarioSpec::parse("static").unwrap(), ScenarioSpec::Static);
+        assert_eq!(
+            ScenarioSpec::parse("dropout").unwrap(),
+            ScenarioSpec::Dropout { rate: 0.1 }
+        );
+        assert_eq!(
+            ScenarioSpec::parse("dropout:rate=0.25").unwrap(),
+            ScenarioSpec::Dropout { rate: 0.25 }
+        );
+        assert_eq!(
+            ScenarioSpec::parse("fading:depth=0.3,period=12").unwrap(),
+            ScenarioSpec::Fading { depth: 0.3, period: 12.0 }
+        );
+        assert_eq!(
+            ScenarioSpec::parse("fading:period=8").unwrap(),
+            ScenarioSpec::Fading { depth: 0.5, period: 8.0 }
+        );
+        assert_eq!(
+            "burst:slow=0.2,factor=8".parse::<ScenarioSpec>().unwrap(),
+            ScenarioSpec::Burst { slow: 0.2, factor: 8.0 }
+        );
+    }
+
+    #[test]
+    fn spec_parse_rejects_garbage() {
+        assert!(ScenarioSpec::parse("chaos").is_err());
+        assert!(ScenarioSpec::parse("static:rate=0.1").is_err());
+        assert!(ScenarioSpec::parse("dropout:frequency=0.1").is_err());
+        assert!(ScenarioSpec::parse("dropout:rate=lots").is_err());
+        assert!(ScenarioSpec::parse("dropout:rate=1.5").is_err());
+        assert!(ScenarioSpec::parse("fading:depth=2").is_err());
+        assert!(ScenarioSpec::parse("fading:period=0").is_err());
+        assert!(ScenarioSpec::parse("burst:factor=0.5").is_err());
+        let e = ScenarioSpec::parse("dropout:frequency=0.1").unwrap_err();
+        assert!(e.contains("frequency") && e.contains("rate"), "{e}");
+    }
+
+    #[test]
+    fn built_scenarios_carry_matching_labels() {
+        for spec in [
+            ScenarioSpec::Static,
+            ScenarioSpec::Dropout { rate: 0.2 },
+            ScenarioSpec::Fading { depth: 0.5, period: 20.0 },
+            ScenarioSpec::Burst { slow: 0.1, factor: 4.0 },
+        ] {
+            assert_eq!(spec.build().label(), spec.label());
+        }
+    }
+
+    #[test]
+    fn static_scenario_touches_nothing() {
+        let (links, mut v) = view(4);
+        let before = v.clone();
+        let mut rng = Rng::seed_from(7);
+        let probe = rng.clone();
+        StaticScenario.begin_round(3, &mut v, &mut rng);
+        assert_eq!(v.clients, before.clients);
+        assert_eq!(v.available, before.available);
+        // …and the RNG stream is untouched (bit-identity contract).
+        let mut a = rng;
+        let mut b = probe;
+        assert_eq!(a.next_u64(), b.next_u64());
+        let _ = links;
+    }
+
+    #[test]
+    fn dropout_always_keeps_at_least_one_client() {
+        let (_, mut v) = view(5);
+        let mut sc = DropoutScenario { rate: 0.999 };
+        let mut rng = Rng::seed_from(11);
+        for round in 0..50 {
+            v.available.iter_mut().for_each(|a| *a = true);
+            sc.begin_round(round, &mut v, &mut rng);
+            assert!(v.available.iter().any(|&a| a), "round {round}");
+        }
+    }
+
+    #[test]
+    fn fading_modulates_links_periodically_and_keeps_reciprocity() {
+        let (links, mut v) = view(3);
+        let mut sc = FadingScenario { depth: 0.5, period: 8.0 };
+        let mut rng = Rng::seed_from(1);
+        // Quarter period: sin = 1, links degrade by exactly 1 + depth.
+        sc.begin_round(2, &mut v, &mut rng);
+        for (c, l) in v.clients.iter().zip(&links) {
+            assert!((c.tau_up / l.tau_up - 1.5).abs() < 1e-12);
+            assert_eq!(c.tau_down.to_bits(), c.tau_up.to_bits(), "reciprocal links stay so");
+            assert!(c.p_down <= P_FADE_CAP && c.p_down >= l.p_down);
+        }
+        // Round 0: sin = 0, no modulation.
+        let (links2, mut v2) = view(3);
+        sc.begin_round(0, &mut v2, &mut rng);
+        for (c, l) in v2.clients.iter().zip(&links2) {
+            assert_eq!(c.tau_up.to_bits(), l.tau_up.to_bits());
+        }
+    }
+
+    #[test]
+    fn burst_slows_compute_only() {
+        let (links, mut v) = view(6);
+        let mut sc = BurstScenario { slow: 1.0, factor: 4.0 };
+        let mut rng = Rng::seed_from(9);
+        sc.begin_round(0, &mut v, &mut rng);
+        for (c, l) in v.clients.iter().zip(&links) {
+            assert!((c.mu - l.mu / 4.0).abs() < 1e-12);
+            assert_eq!(c.tau_up.to_bits(), l.tau_up.to_bits());
+            assert_eq!(c.p_down, l.p_down);
+        }
+    }
+}

@@ -1,0 +1,280 @@
+//! The per-round event timeline: what happens between "sent θ" and
+//! "gradient arrived".
+//!
+//! The one-shot sampler collapses a client's round into a single scalar
+//! `T_j`; the timeline keeps the §II-B legs — downlink wait, compute,
+//! uplink wait — as *ordered completion events* on the round clock
+//! (`t = 0` = the server broadcasts θ), plus the MEC computing unit's
+//! parity completion. Schemes and observers can therefore reason about
+//! partial progress (who has θ by the deadline? whose gradient is in
+//! flight?) instead of only totals.
+//!
+//! [`RoundTrace`] is the reusable per-round record: [`RoundTrace::sample_into`]
+//! draws every leg through the fleet's per-leg link models
+//! ([`crate::delay::asymmetric::AsymNodeParams::sample_legs`]) in client
+//! order then the server — the *identical* RNG sequence as the one-shot
+//! [`crate::sim::RoundSampler`], with per-client totals that match it
+//! bit-for-bit ([`crate::delay::DelayLegs::total`]). The totals are kept
+//! in an embedded [`RoundDelays`] ([`RoundTrace::delays`]) so
+//! `arrivals`/`kth_fastest` and every existing scheme work unchanged on
+//! top of the trace.
+//!
+//! Everything is buffer-reused: once warm, a round's trace (legs, totals,
+//! sorted events) is rebuilt with **zero** heap allocations
+//! (`tests/alloc_gate.rs` pins this under every built-in scenario).
+
+use super::RoundDelays;
+use crate::delay::DelayLegs;
+use crate::rng::Rng;
+use crate::topology::FleetView;
+
+/// One leg of a client's round trip.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Leg {
+    /// The client received θ (`τ_d · N_down` after broadcast).
+    Downlink,
+    /// The client finished its local gradient computation.
+    Compute,
+    /// The client's gradient reached the server (the client's total `T_j`).
+    Uplink,
+}
+
+/// One completion event on the round clock.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LegEvent {
+    /// Client `client` finished `leg` at `time`.
+    Client { client: usize, leg: Leg, time: f64 },
+    /// The MEC computing unit finished the coded/parity gradient (`T_C`).
+    ServerParity { time: f64 },
+}
+
+impl LegEvent {
+    /// The event's instant on the round clock.
+    pub fn time(&self) -> f64 {
+        match *self {
+            LegEvent::Client { time, .. } => time,
+            LegEvent::ServerParity { time } => time,
+        }
+    }
+
+    /// The client index, when the event belongs to a client.
+    pub fn client(&self) -> Option<usize> {
+        match *self {
+            LegEvent::Client { client, .. } => Some(client),
+            LegEvent::ServerParity { .. } => None,
+        }
+    }
+}
+
+/// The sampled timeline of one training round. Construct once
+/// ([`RoundTrace::with_capacity`]) and refill every round with
+/// [`RoundTrace::sample_into`]; all buffers are reused.
+#[derive(Clone, Debug, Default)]
+pub struct RoundTrace {
+    /// Per-client sampled legs (meaningful only where `present`).
+    legs: Vec<DelayLegs>,
+    /// Which clients were available this round (scenario dropouts absent).
+    present: Vec<bool>,
+    /// Per-client totals + server total — the cheap view schemes consume.
+    delays: RoundDelays,
+    /// All leg-completion events, ordered by time.
+    events: Vec<LegEvent>,
+}
+
+impl RoundTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A trace with buffers pre-sized for an `n`-client fleet, so even
+    /// round 1 samples without growing.
+    pub fn with_capacity(n: usize) -> Self {
+        RoundTrace {
+            legs: Vec::with_capacity(n),
+            present: Vec::with_capacity(n),
+            delays: RoundDelays { client_t: Vec::with_capacity(n), server_t: 0.0 },
+            events: Vec::with_capacity(3 * n + 1),
+        }
+    }
+
+    /// Sample one round against the (scenario-modulated) fleet view.
+    ///
+    /// RNG order is the reproducibility contract: clients in index order
+    /// (each drawing compute-exponential, downlink count, uplink count),
+    /// then the server — exactly the [`crate::sim::RoundSampler`]
+    /// sequence. Clients the view marks unavailable draw nothing and
+    /// carry `T_j = ∞`.
+    pub fn sample_into(
+        &mut self,
+        view: &FleetView,
+        client_loads: &[f64],
+        server_load: f64,
+        rng: &mut Rng,
+    ) {
+        assert_eq!(
+            view.len(),
+            client_loads.len(),
+            "fleet view and load vector disagree on the client count"
+        );
+        self.legs.clear();
+        self.present.clear();
+        self.delays.client_t.clear();
+        self.events.clear();
+        for (j, (link, &load)) in view.clients.iter().zip(client_loads).enumerate() {
+            if !view.available[j] {
+                self.legs.push(DelayLegs::default());
+                self.present.push(false);
+                self.delays.client_t.push(f64::INFINITY);
+                continue;
+            }
+            let legs = link.sample_legs(load, rng);
+            let t_down = legs.downlink_time();
+            let t_compute = t_down + legs.compute_time();
+            let total = legs.total();
+            self.events.push(LegEvent::Client { client: j, leg: Leg::Downlink, time: t_down });
+            self.events.push(LegEvent::Client { client: j, leg: Leg::Compute, time: t_compute });
+            self.events.push(LegEvent::Client { client: j, leg: Leg::Uplink, time: total });
+            self.legs.push(legs);
+            self.present.push(true);
+            self.delays.client_t.push(total);
+        }
+        self.delays.server_t = view.server.sample_delay(server_load, rng);
+        self.events.push(LegEvent::ServerParity { time: self.delays.server_t });
+        // sort_unstable is in-place (no allocation on the warm path); ties
+        // keep a deterministic order for a given input sequence.
+        self.events.sort_unstable_by(|a, b| a.time().total_cmp(&b.time()));
+    }
+
+    /// The round's totals — the view every waiting policy consumes.
+    pub fn delays(&self) -> &RoundDelays {
+        &self.delays
+    }
+
+    /// All leg-completion events this round, ordered by time
+    /// (`3 × present clients + 1` entries).
+    pub fn events(&self) -> &[LegEvent] {
+        &self.events
+    }
+
+    /// Client `j`'s sampled legs, `None` when the scenario dropped it.
+    pub fn legs(&self, j: usize) -> Option<DelayLegs> {
+        if self.present[j] {
+            Some(self.legs[j])
+        } else {
+            None
+        }
+    }
+
+    /// Whether client `j` was available this round.
+    pub fn is_present(&self, j: usize) -> bool {
+        self.present[j]
+    }
+
+    /// Number of clients in the sampled round.
+    pub fn num_clients(&self) -> usize {
+        self.present.len()
+    }
+
+    /// The MEC computing unit's parity-completion time `T_C`.
+    pub fn server_time(&self) -> f64 {
+        self.delays.server_t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::RoundSampler;
+    use crate::topology::FleetSpec;
+
+    fn fleet(n: usize) -> (FleetSpec, Vec<crate::delay::NodeParams>) {
+        let spec = FleetSpec::paper(n, 64, 10);
+        let clients = spec.build_clients(&mut Rng::seed_from(3));
+        (spec, clients)
+    }
+
+    #[test]
+    fn totals_match_one_shot_sampler_bitwise() {
+        let (spec, clients) = fleet(6);
+        let links = spec.build_links(&clients);
+        let server = spec.build_server();
+        let loads = vec![17.0; 6];
+
+        let sampler = RoundSampler::new(&clients, server, loads.clone(), 30.0);
+        let mut rng_a = Rng::seed_from(42);
+        let mut rng_b = Rng::seed_from(42);
+        let mut legacy = RoundDelays::default();
+        let view = FleetView::from_base(&links, server);
+        let mut trace = RoundTrace::with_capacity(6);
+        for round in 0..40 {
+            sampler.sample_into(&mut rng_a, &mut legacy);
+            trace.sample_into(&view, &loads, 30.0, &mut rng_b);
+            assert_eq!(trace.delays().server_t.to_bits(), legacy.server_t.to_bits());
+            for (a, b) in trace.delays().client_t.iter().zip(&legacy.client_t) {
+                assert_eq!(a.to_bits(), b.to_bits(), "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn events_are_ordered_and_legs_consistent() {
+        let (spec, clients) = fleet(4);
+        let links = spec.build_links(&clients);
+        let server = spec.build_server();
+        let view = FleetView::from_base(&links, server);
+        let mut trace = RoundTrace::with_capacity(4);
+        trace.sample_into(&view, &[9.0; 4], 20.0, &mut Rng::seed_from(8));
+
+        let events = trace.events();
+        assert_eq!(events.len(), 3 * 4 + 1);
+        for w in events.windows(2) {
+            assert!(w[0].time() <= w[1].time());
+        }
+        for j in 0..4 {
+            assert!(trace.is_present(j));
+            let legs = trace.legs(j).unwrap();
+            // The uplink event carries the client's total delay.
+            assert_eq!(legs.total(), trace.delays().client_t[j]);
+            // Per-client leg order: downlink ≤ compute-done ≤ total.
+            assert!(legs.downlink_time() <= legs.downlink_time() + legs.compute_time());
+            assert!(legs.downlink_time() + legs.compute_time() <= legs.total() + 1e-12);
+        }
+        assert_eq!(trace.num_clients(), 4);
+        assert_eq!(trace.server_time(), trace.delays().server_t);
+        assert!(events.iter().any(|e| e.client().is_none()));
+    }
+
+    #[test]
+    fn unavailable_clients_draw_nothing_and_carry_infinity() {
+        let (spec, clients) = fleet(3);
+        let links = spec.build_links(&clients);
+        let server = spec.build_server();
+        let loads = [5.0; 3];
+
+        let mut view = FleetView::from_base(&links, server);
+        view.available[1] = false;
+        let mut trace = RoundTrace::with_capacity(3);
+        trace.sample_into(&view, &loads, 10.0, &mut Rng::seed_from(4));
+        assert!(!trace.is_present(1));
+        assert!(trace.legs(1).is_none());
+        assert!(trace.delays().client_t[1].is_infinite());
+        assert_eq!(trace.events().len(), 3 * 2 + 1);
+        assert_eq!(trace.delays().present_count(), 2);
+
+        // The dropped client consumes no RNG: clients 0 and 2 must draw
+        // what they would if the fleet were just the two of them.
+        let two_links = [links[0], links[2]];
+        let two_view = FleetView::from_base(&two_links, server);
+        let mut two = RoundTrace::with_capacity(2);
+        two.sample_into(&two_view, &[5.0; 2], 10.0, &mut Rng::seed_from(4));
+        assert_eq!(
+            two.delays().client_t[0].to_bits(),
+            trace.delays().client_t[0].to_bits()
+        );
+        assert_eq!(
+            two.delays().client_t[1].to_bits(),
+            trace.delays().client_t[2].to_bits()
+        );
+        assert_eq!(two.delays().server_t.to_bits(), trace.delays().server_t.to_bits());
+    }
+}

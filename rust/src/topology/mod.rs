@@ -13,13 +13,58 @@
 //! - The MEC server's computing unit has dedicated, reliable resources
 //!   (`P(T_C ≤ t) = 1` in §V-A — we model `p = 0` with server-grade rates).
 
+use crate::delay::asymmetric::AsymNodeParams;
 use crate::delay::NodeParams;
 use crate::rng::Rng;
+
+/// Fleet-wide asymmetric-link overrides (the `[fleet]` config section;
+/// paper footnote 1's non-reciprocal generalisation): per-leg multipliers
+/// on the §V-A τ ladder plus per-leg erasure probabilities replacing the
+/// reciprocal `p`. `Default` is the reciprocal-equivalent setting (unit
+/// multipliers, the paper's `p = 0.1` on both legs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AsymLinkSpec {
+    /// Downlink packet-time multiplier applied to each client's ladder τ.
+    pub tau_down: f64,
+    /// Uplink packet-time multiplier.
+    pub tau_up: f64,
+    /// Downlink erasure probability (replaces the symmetric `p`).
+    pub p_down: f64,
+    /// Uplink erasure probability.
+    pub p_up: f64,
+}
+
+impl Default for AsymLinkSpec {
+    fn default() -> Self {
+        AsymLinkSpec { tau_down: 1.0, tau_up: 1.0, p_down: 0.1, p_up: 0.1 }
+    }
+}
+
+impl AsymLinkSpec {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.tau_down > 0.0) || !(self.tau_up > 0.0) {
+            return Err(format!(
+                "tau_down/tau_up must be > 0 multipliers, got {}/{}",
+                self.tau_down, self.tau_up
+            ));
+        }
+        if !(0.0..1.0).contains(&self.p_down) || !(0.0..1.0).contains(&self.p_up) {
+            return Err(format!(
+                "p_down/p_up must be in [0,1), got {}/{}",
+                self.p_down, self.p_up
+            ));
+        }
+        Ok(())
+    }
+}
 
 /// Knobs of the §V-A fleet; `Default` is the paper's exact setting except
 /// for `n`/`q`/`c`, which come from the experiment config.
 #[derive(Clone, Copy, Debug)]
 pub struct FleetSpec {
+    /// Asymmetric downlink/uplink overrides (`None` = the paper's
+    /// reciprocal links; see [`AsymLinkSpec`]).
+    pub asym: Option<AsymLinkSpec>,
     pub n: usize,
     /// RFF dimension q (packet payload is the q×c model/gradient).
     pub q: usize,
@@ -46,6 +91,7 @@ pub struct FleetSpec {
 impl FleetSpec {
     pub fn paper(n: usize, q: usize, c: usize) -> Self {
         FleetSpec {
+            asym: None,
             n,
             q,
             c,
@@ -111,6 +157,82 @@ impl FleetSpec {
             p: 0.0,
         }
     }
+
+    /// Per-leg link models for an already-built fleet — the form the
+    /// round timeline samples. With `asym = None` every client keeps
+    /// reciprocal links (`τ_d = τ_u = τ`, `p_d = p_u = p`), which samples
+    /// bit-identically to the base [`NodeParams`] model; with overrides,
+    /// the §V-A τ ladder is scaled per leg and the per-leg erasure
+    /// probabilities replace the symmetric `p`. Draws no randomness —
+    /// the ladder permutation lives entirely in
+    /// [`FleetSpec::build_clients`].
+    pub fn build_links(&self, clients: &[NodeParams]) -> Vec<AsymNodeParams> {
+        clients
+            .iter()
+            .map(|c| match self.asym {
+                None => AsymNodeParams::symmetric(c),
+                Some(a) => AsymNodeParams {
+                    mu: c.mu,
+                    alpha: c.alpha,
+                    tau_down: c.tau * a.tau_down,
+                    tau_up: c.tau * a.tau_up,
+                    p_down: a.p_down,
+                    p_up: a.p_up,
+                },
+            })
+            .collect()
+    }
+}
+
+/// The round's working copy of the fleet — what a
+/// [`crate::sim::scenario::Scenario`] modulates before the timeline
+/// samples delays. The engine resets it from the base fleet at the top of
+/// every round ([`FleetView::reset_from`], allocation-free once warm), so
+/// scenarios mutate freely: scale node parameters, mark clients
+/// unavailable, slow the server — without touching the experiment's base
+/// topology.
+#[derive(Clone, Debug)]
+pub struct FleetView {
+    /// Per-client per-leg node models, this round.
+    pub clients: Vec<AsymNodeParams>,
+    /// Per-client availability; an unavailable client samples no delay
+    /// and carries `T_j = ∞` in the round's delays.
+    pub available: Vec<bool>,
+    /// The MEC computing unit, this round.
+    pub server: NodeParams,
+}
+
+impl FleetView {
+    /// A view initialised to the base fleet, everyone available.
+    pub fn from_base(links: &[AsymNodeParams], server: NodeParams) -> Self {
+        let mut view = FleetView {
+            clients: Vec::with_capacity(links.len()),
+            available: Vec::with_capacity(links.len()),
+            server,
+        };
+        view.reset_from(links, server);
+        view
+    }
+
+    /// Reset to the base fleet (called at the top of every round). Clears
+    /// and refills in place — zero allocations once the buffers reached
+    /// fleet size.
+    pub fn reset_from(&mut self, links: &[AsymNodeParams], server: NodeParams) {
+        self.clients.clear();
+        self.clients.extend_from_slice(links);
+        self.available.clear();
+        self.available.resize(links.len(), true);
+        self.server = server;
+    }
+
+    /// Number of clients in the fleet.
+    pub fn len(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.clients.is_empty()
+    }
 }
 
 #[cfg(test)]
@@ -172,6 +294,59 @@ mod tests {
         assert_eq!(srv.p, 0.0);
         assert!(srv.mu > 100.0 * 76.0);
         srv.validate().unwrap();
+    }
+
+    #[test]
+    fn build_links_symmetric_matches_base_and_asym_scales_ladder() {
+        let mut spec = FleetSpec::paper(8, 100, 10);
+        let clients = spec.build_clients(&mut Rng::seed_from(6));
+        // Reciprocal default: per-leg model mirrors the base exactly.
+        for (l, c) in spec.build_links(&clients).iter().zip(&clients) {
+            assert_eq!(l.tau_down.to_bits(), c.tau.to_bits());
+            assert_eq!(l.tau_up.to_bits(), c.tau.to_bits());
+            assert_eq!(l.p_down, c.p);
+            assert_eq!(l.p_up, c.p);
+            assert_eq!(l.mu, c.mu);
+            l.validate().unwrap();
+        }
+        // Asymmetric overrides: the ladder τ is scaled per leg, p replaced.
+        spec.asym = Some(AsymLinkSpec { tau_down: 1.0, tau_up: 2.5, p_down: 0.05, p_up: 0.2 });
+        for (l, c) in spec.build_links(&clients).iter().zip(&clients) {
+            assert!((l.tau_down - c.tau).abs() < 1e-12);
+            assert!((l.tau_up - 2.5 * c.tau).abs() < 1e-12);
+            assert_eq!((l.p_down, l.p_up), (0.05, 0.2));
+            l.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn asym_link_spec_validates() {
+        assert!(AsymLinkSpec::default().validate().is_ok());
+        let ok = AsymLinkSpec::default();
+        assert!(AsymLinkSpec { tau_down: 0.0, ..ok }.validate().is_err());
+        assert!(AsymLinkSpec { tau_up: -1.0, ..ok }.validate().is_err());
+        assert!(AsymLinkSpec { p_down: 1.0, ..ok }.validate().is_err());
+        assert!(AsymLinkSpec { p_up: -0.1, ..ok }.validate().is_err());
+    }
+
+    #[test]
+    fn fleet_view_resets_to_base_without_growing() {
+        let spec = FleetSpec::paper(5, 100, 10);
+        let clients = spec.build_clients(&mut Rng::seed_from(9));
+        let links = spec.build_links(&clients);
+        let server = spec.build_server();
+        let mut view = FleetView::from_base(&links, server);
+        assert_eq!(view.len(), 5);
+        assert!(!view.is_empty());
+        assert!(view.available.iter().all(|&a| a));
+        // Scenario-style mutation…
+        view.clients[2].mu *= 0.25;
+        view.available[4] = false;
+        // …is fully undone by the per-round reset.
+        view.reset_from(&links, server);
+        assert_eq!(view.clients[2].mu, links[2].mu);
+        assert!(view.available[4]);
+        assert!(view.clients.capacity() >= 5);
     }
 
     #[test]

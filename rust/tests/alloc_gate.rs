@@ -16,11 +16,23 @@
 //! microkernels' A-operand packing (carved from the workers' persistent
 //! scratch arenas) is held to the same zero-allocation contract as the
 //! scalar path.
+//!
+//! The gate also covers the scenario-aware *decision* path (PR 5): the
+//! per-round fleet-view reset, scenario modulation, per-leg timeline
+//! sampling and CodedFedL's deadline-arrival scan
+//! (`RoundDelays::arrivals_into`/`arrivals_iter`, which replaced the
+//! per-round `Vec<bool>` allocation) run at zero warm-round allocations
+//! under every built-in scenario. The scheme's `RoundPlan`/mask control
+//! path stays outside the gate (a handful of pointer-sized entries per
+//! round — see the engine module docs).
 
 use codedfedl::benchutil::CountingAlloc;
 use codedfedl::rng::Rng;
 use codedfedl::runtime::GradJob;
+use codedfedl::sim::scenario::{Scenario, ScenarioSpec};
+use codedfedl::sim::timeline::RoundTrace;
 use codedfedl::tensor::{Mat, SimdPolicy};
+use codedfedl::topology::FleetView;
 use codedfedl::ExperimentBuilder;
 
 #[global_allocator]
@@ -105,6 +117,63 @@ fn steady_state_compute_path_allocates_zero_bytes() {
         b1 - b0
     );
     assert_eq!(b1 - b0, 0, "warm compute path requested {} bytes", b1 - b0);
+
+    // --- the scenario-aware decision path: per-round fleet-view reset +
+    //     scenario modulation + per-leg timeline sampling + the coded
+    //     scheme's arrival scan, then the same compute round — zero
+    //     allocations once warm, under EVERY built-in scenario. ---
+    let loads: Vec<f64> = vec![cfg.local_batch as f64; n];
+    let mut arrived: Vec<bool> = Vec::new();
+    for spec in [
+        ScenarioSpec::Static,
+        ScenarioSpec::Dropout { rate: 0.3 },
+        ScenarioSpec::Fading { depth: 0.5, period: 7.0 },
+        ScenarioSpec::Burst { slow: 0.3, factor: 4.0 },
+    ] {
+        let mut scenario = spec.build();
+        let mut scen_rng = Rng::seed_from(31);
+        let mut delay_rng = Rng::seed_from(32);
+        let mut view = FleetView::from_base(&setup.client_links, setup.server);
+        let mut trace = RoundTrace::with_capacity(n);
+
+        // Warm-up rounds reach every buffer's steady-state size (the
+        // trace/view/arrival capacities are fleet-sized by construction,
+        // so two are plenty)…
+        for r in 0..2 {
+            view.reset_from(&setup.client_links, setup.server);
+            scenario.begin_round(r, &mut view, &mut scen_rng);
+            trace.sample_into(&view, &loads, 8.0, &mut delay_rng);
+            trace.delays().arrivals_into(5.0, &mut arrived);
+        }
+
+        // …after which warm rounds must acquire no memory at all.
+        let (a0, b0) = (CountingAlloc::allocations(), CountingAlloc::bytes());
+        for r in 2..5 {
+            view.reset_from(&setup.client_links, setup.server);
+            scenario.begin_round(r, &mut view, &mut scen_rng);
+            trace.sample_into(&view, &loads, 8.0, &mut delay_rng);
+            trace.delays().arrivals_into(5.0, &mut arrived);
+            let made_it = trace.delays().arrivals_iter(5.0).filter(|&a| a).count();
+            std::hint::black_box(made_it);
+            round(&theta);
+        }
+        let (a1, b1) = (CountingAlloc::allocations(), CountingAlloc::bytes());
+        assert_eq!(
+            a1 - a0,
+            0,
+            "scenario {}: warm rounds performed {} allocations ({} bytes)",
+            spec.label(),
+            a1 - a0,
+            b1 - b0
+        );
+        assert_eq!(
+            b1 - b0,
+            0,
+            "scenario {}: warm rounds requested {} bytes",
+            spec.label(),
+            b1 - b0
+        );
+    }
 
     // Sanity: the counter itself works (an allocation is visible).
     let before = CountingAlloc::allocations();

@@ -1,0 +1,217 @@
+//! Scenario determinism gates for the event-timeline refactor.
+//!
+//! 1. **Static equivalence** — the scenario-aware timeline path draws the
+//!    *identical* RNG sequence and produces bit-identical delays to the
+//!    pre-timeline [`RoundSampler`] (kept in-tree as the reference), and
+//!    a `scenario = "static"` training run is a bit-reproducible golden
+//!    history: two independently-built sessions hash identically, at
+//!    every thread count.
+//! 2. **Scenario reproducibility** — every built-in scenario yields the
+//!    same bits across repeated runs, across thread counts, and within
+//!    each SIMD policy.
+//! 3. **Scenarios matter** — the non-static built-ins actually change
+//!    the sampled rounds (no silently-inert scenario).
+//! 4. **Asymmetric fleet end-to-end** — a `[fleet]`-configured session
+//!    builds per-leg links, hands the optimizer matched-mean surrogates,
+//!    trains, and reproduces bit-for-bit.
+
+use codedfedl::conf::ExperimentConfig;
+use codedfedl::rng::Rng;
+use codedfedl::schemes::SchemeSpec;
+use codedfedl::sim::scenario::{Scenario, ScenarioSpec};
+use codedfedl::sim::timeline::RoundTrace;
+use codedfedl::sim::{RoundDelays, RoundSampler};
+use codedfedl::tensor::SimdPolicy;
+use codedfedl::topology::{AsymLinkSpec, FleetSpec, FleetView};
+use codedfedl::{ExperimentBuilder, TrainOutcome};
+
+const BUILT_INS: [ScenarioSpec; 4] = [
+    ScenarioSpec::Static,
+    ScenarioSpec::Dropout { rate: 0.3 },
+    ScenarioSpec::Fading { depth: 0.6, period: 5.0 },
+    ScenarioSpec::Burst { slow: 0.4, factor: 8.0 },
+];
+
+/// FNV-1a over the run's bits: θ plus every history point. Any change to
+/// delay draws, participation or kernels shows up here.
+fn run_hash(out: &TrainOutcome) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bits: u64| {
+        for b in bits.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for &v in out.theta.as_slice() {
+        eat(v.to_bits() as u64);
+    }
+    for p in &out.history.points {
+        eat(p.iter as u64);
+        eat(p.sim_time.to_bits());
+        eat(p.accuracy.to_bits());
+        eat(p.train_loss.to_bits());
+    }
+    h
+}
+
+fn run(scenario: ScenarioSpec, threads: usize, simd: SimdPolicy) -> TrainOutcome {
+    ExperimentBuilder::preset("tiny")
+        .unwrap()
+        .epochs(2)
+        .threads(threads)
+        .simd(simd)
+        .scenario(scenario)
+        .build()
+        .unwrap()
+        .run_spec(SchemeSpec::Coded { delta: 0.3 })
+        .unwrap()
+}
+
+#[test]
+fn static_timeline_matches_pre_refactor_sampler_bitwise() {
+    // The one-shot RoundSampler *is* the pre-refactor sampling code,
+    // unchanged — bit-equality against it over many rounds proves the
+    // static scenario's delay stream survived the per-leg refactor.
+    let spec = FleetSpec::paper(8, 64, 10);
+    let clients = spec.build_clients(&mut Rng::seed_from(4));
+    let links = spec.build_links(&clients);
+    let server = spec.build_server();
+    let loads = vec![13.0; 8];
+
+    let sampler = RoundSampler::new(&clients, server, loads.clone(), 40.0);
+    let mut legacy_rng = Rng::seed_from(99);
+    let mut legacy = RoundDelays::default();
+
+    let mut scenario = ScenarioSpec::Static.build();
+    let mut scen_rng = Rng::seed_from(1234); // static must never touch it
+    let scen_probe = scen_rng.clone();
+    let mut timeline_rng = Rng::seed_from(99);
+    let mut view = FleetView::from_base(&links, server);
+    let mut trace = RoundTrace::with_capacity(8);
+
+    for round in 0..60 {
+        sampler.sample_into(&mut legacy_rng, &mut legacy);
+        view.reset_from(&links, server);
+        scenario.begin_round(round, &mut view, &mut scen_rng);
+        trace.sample_into(&view, &loads, 40.0, &mut timeline_rng);
+        assert_eq!(trace.delays().server_t.to_bits(), legacy.server_t.to_bits());
+        for (j, (a, b)) in trace.delays().client_t.iter().zip(&legacy.client_t).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "round {round}, client {j}");
+        }
+    }
+    // The scenario stream was never consumed.
+    let mut a = scen_rng;
+    let mut b = scen_probe;
+    assert_eq!(a.next_u64(), b.next_u64());
+}
+
+#[test]
+fn static_golden_history_is_thread_invariant_and_reproducible() {
+    // Two independently-built sessions (builder vs config value) must
+    // produce the same golden hash, and the hash must not move with the
+    // thread count. This pins `scenario = "static"` to one bit-exact
+    // history per (seed, simd policy).
+    let golden = run_hash(&run(ScenarioSpec::Static, 1, SimdPolicy::Scalar));
+    let again = run_hash(&run(ScenarioSpec::Static, 1, SimdPolicy::Scalar));
+    assert_eq!(golden, again, "same-config rebuild changed the static history");
+
+    let threaded = run_hash(&run(ScenarioSpec::Static, 4, SimdPolicy::Scalar));
+    assert_eq!(golden, threaded, "thread count changed the static history");
+
+    let via_config = {
+        let cfg = ExperimentConfig {
+            epochs: 2,
+            threads: 1,
+            simd: SimdPolicy::Scalar,
+            ..ExperimentConfig::tiny()
+        };
+        let session = ExperimentBuilder::from_config(cfg).build().unwrap();
+        session.run_spec(SchemeSpec::Coded { delta: 0.3 }).unwrap()
+    };
+    assert_eq!(
+        golden,
+        run_hash(&via_config),
+        "config-built session diverged from the builder path"
+    );
+}
+
+#[test]
+fn every_builtin_scenario_is_reproducible_across_threads_and_simd() {
+    for scenario in BUILT_INS {
+        for simd in [SimdPolicy::Scalar, SimdPolicy::Auto] {
+            let one = run_hash(&run(scenario, 1, simd));
+            let rerun = run_hash(&run(scenario, 1, simd));
+            let four = run_hash(&run(scenario, 4, simd));
+            assert_eq!(one, rerun, "{}: rerun changed bits", scenario.label());
+            assert_eq!(one, four, "{}: thread count changed bits", scenario.label());
+        }
+    }
+}
+
+#[test]
+fn non_static_scenarios_change_the_sampled_rounds() {
+    // Naive's round cost is the max present delay — any dropout, fade or
+    // burst moves the simulated clock. A scenario that silently does
+    // nothing would make these hashes collide with static.
+    let run_naive = |scenario: ScenarioSpec| {
+        ExperimentBuilder::preset("tiny")
+            .unwrap()
+            .epochs(4) // 8 rounds: a 0.3-rate dropout hits w.p. 1 - 0.7^40
+            .threads(1)
+            .simd(SimdPolicy::Scalar)
+            .scenario(scenario)
+            .build()
+            .unwrap()
+            .run_spec(SchemeSpec::NaiveUncoded)
+            .unwrap()
+    };
+    let static_hash = run_hash(&run_naive(ScenarioSpec::Static));
+    for scenario in &BUILT_INS[1..] {
+        let h = run_hash(&run_naive(*scenario));
+        assert_ne!(h, static_hash, "{} left the run untouched", scenario.label());
+    }
+}
+
+#[test]
+fn asymmetric_fleet_runs_end_to_end_and_reproduces() {
+    let cfg = ExperimentConfig {
+        epochs: 2,
+        fleet_asym: Some(AsymLinkSpec {
+            tau_down: 1.0,
+            tau_up: 2.5,
+            p_down: 0.05,
+            p_up: 0.2,
+        }),
+        ..ExperimentConfig::tiny()
+    };
+    let build = || ExperimentBuilder::from_config(cfg.clone()).build().unwrap();
+    let session = build();
+    let setup = session.setup();
+    assert_eq!(setup.client_links.len(), cfg.clients);
+    for (link, surrogate) in setup.client_links.iter().zip(&setup.clients) {
+        assert!(link.tau_up > link.tau_down, "uplink multiplier not applied");
+        assert_eq!((link.p_down, link.p_up), (0.05, 0.2));
+        // The optimizer-facing surrogate preserves the mean comm delay.
+        let mean_asym = link.tau_down / (1.0 - link.p_down) + link.tau_up / (1.0 - link.p_up);
+        let mean_surrogate = 2.0 * surrogate.tau / (1.0 - surrogate.p);
+        assert!((mean_asym - mean_surrogate).abs() < 1e-9);
+    }
+
+    let a = session.run_spec(SchemeSpec::Coded { delta: 0.3 }).unwrap();
+    assert!(a.t_star.unwrap() > 0.0);
+    assert!(a.history.points.iter().all(|p| p.train_loss.is_finite()));
+    let b = build().run_spec(SchemeSpec::Coded { delta: 0.3 }).unwrap();
+    assert_eq!(run_hash(&a), run_hash(&b), "asymmetric run is not reproducible");
+
+    // And the asymmetry is real: the symmetric fleet trains on a
+    // different simulated clock.
+    let sym = ExperimentBuilder::from_config(ExperimentConfig {
+        fleet_asym: None,
+        ..cfg.clone()
+    })
+    .build()
+    .unwrap()
+    .run_spec(SchemeSpec::Coded { delta: 0.3 })
+    .unwrap();
+    assert_ne!(run_hash(&a), run_hash(&sym));
+}

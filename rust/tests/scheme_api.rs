@@ -13,11 +13,28 @@ use codedfedl::coordinator::{EventLog, RoundEvent, RoundObserver};
 use codedfedl::schemes::{
     GradRequest, GreedyUncoded, NaiveUncoded, RoundCtx, RoundPlan, Scheme, SchemeSpec,
 };
+use codedfedl::sim::scenario::ScenarioSpec;
 use codedfedl::sim::RoundDelays;
 use codedfedl::{ExperimentBuilder, Session};
 
+/// The suite honours `CODEDFEDL_SCENARIO` (CI runs it once per built-in
+/// scenario): the open-trait guarantees — one event per round,
+/// greedy(ψ=0) ≡ naive bit-for-bit, shim parity — are scenario-invariant
+/// because every scheme on a session sees the same network realisation.
+fn env_scenario() -> ScenarioSpec {
+    match std::env::var("CODEDFEDL_SCENARIO") {
+        Ok(v) => v.parse().expect("CODEDFEDL_SCENARIO"),
+        Err(_) => ScenarioSpec::Static,
+    }
+}
+
 fn tiny_session(epochs: usize) -> Session {
-    ExperimentBuilder::preset("tiny").unwrap().epochs(epochs).build().unwrap()
+    ExperimentBuilder::preset("tiny")
+        .unwrap()
+        .epochs(epochs)
+        .scenario(env_scenario())
+        .build()
+        .unwrap()
 }
 
 /// A third-party policy the crate has never heard of: wait for nobody,

@@ -1,18 +1,32 @@
 //! Integration: full federated training on the tiny preset, all schemes,
 //! through the Builder → Session → Scheme API. Asserts the paper's
 //! qualitative claims at smoke scale plus exact reproducibility.
+//!
+//! Runs under the network scenario named by `CODEDFEDL_SCENARIO`
+//! (any [`ScenarioSpec`] string; default `static`) — CI runs the suite
+//! once per scenario, so every qualitative claim (coded's fixed t*,
+//! monotone clocks, thread invariance, eval_every telemetry-only) holds
+//! under client dropout too, not just the paper's stationary fleet.
 
 use codedfedl::benchutil;
 use codedfedl::conf::ExperimentConfig;
 use codedfedl::schemes::{CodedFedL, SchemeSpec};
+use codedfedl::sim::scenario::ScenarioSpec;
 use codedfedl::{ExperimentBuilder, Session};
 
+fn env_scenario() -> ScenarioSpec {
+    match std::env::var("CODEDFEDL_SCENARIO") {
+        Ok(v) => v.parse().expect("CODEDFEDL_SCENARIO"),
+        Err(_) => ScenarioSpec::Static,
+    }
+}
+
 fn tiny(epochs: usize) -> ExperimentConfig {
-    ExperimentConfig { epochs, ..ExperimentConfig::tiny() }
+    ExperimentConfig { epochs, scenario: env_scenario(), ..ExperimentConfig::tiny() }
 }
 
 fn tiny_session(epochs: usize) -> Session {
-    ExperimentBuilder::preset("tiny").unwrap().epochs(epochs).build().unwrap()
+    ExperimentBuilder::from_config(tiny(epochs)).build().unwrap()
 }
 
 #[test]
@@ -99,6 +113,7 @@ fn thread_count_does_not_change_the_history() {
             .unwrap()
             .epochs(3)
             .threads(threads)
+            .scenario(env_scenario())
             .build()
             .unwrap()
             .run_spec(spec)
@@ -131,6 +146,7 @@ fn eval_every_samples_history_but_keeps_training_identical() {
             .unwrap()
             .epochs(4) // tiny: 2 steps/epoch → 8 iterations
             .eval_every(eval_every)
+            .scenario(env_scenario())
             .build()
             .unwrap()
             .run(&mut CodedFedL::new(0.3))
@@ -156,7 +172,7 @@ fn eval_every_samples_history_but_keeps_training_identical() {
 #[test]
 fn different_seeds_change_the_run() {
     let sa = tiny_session(3);
-    let sb = ExperimentBuilder::preset("tiny").unwrap().epochs(3).seed(999).build().unwrap();
+    let sb = ExperimentBuilder::from_config(tiny(3)).seed(999).build().unwrap();
     let ra = sa.run_spec(SchemeSpec::NaiveUncoded).unwrap();
     let rb = sb.run_spec(SchemeSpec::NaiveUncoded).unwrap();
     assert_ne!(ra.theta.as_slice(), rb.theta.as_slice());
