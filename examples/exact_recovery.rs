@@ -1,0 +1,85 @@
+//! Exact-recovery aggregation: erasure-decode stragglers instead of
+//! averaging around them.
+//!
+//! ```sh
+//! cargo run --release --example exact_recovery
+//! ```
+//!
+//! The paper's CodedFedL aggregates in *expectation*: the server's parity
+//! gradient substitutes for whatever the stragglers would have sent, so
+//! the update is unbiased but not the all-clients update. With
+//! `recovery = exact` the coded scheme instead treats each client's
+//! gradient block as a GF(256) source symbol: the server keeps
+//! `ceil(n·overhead)` repair symbols, watches the round's arrival
+//! timeline, stops as soon as the received subset is decodable, and
+//! erasure-decodes the missing blocks — reproducing the all-arrived
+//! aggregate gradient *bit for bit* on every round the code can absorb.
+//!
+//! This example trains the coded scheme under a dropout scenario in both
+//! recovery modes and with both built-in codes, then re-runs the exact
+//! mode at a different worker-thread count and checks the final model is
+//! bit-identical: GF(256) decoding has no floating-point rounding, so the
+//! exact path inherits the engine's thread-invariance guarantee wholesale.
+
+use codedfedl::coding::{CodeSpec, RecoveryMode};
+use codedfedl::schemes::SchemeSpec;
+use codedfedl::sim::scenario::ScenarioSpec;
+use codedfedl::tensor::Mat;
+use codedfedl::ExperimentBuilder;
+
+fn run_once(code: CodeSpec, recovery: RecoveryMode, threads: usize) -> anyhow::Result<(f64, f64, Mat)> {
+    // The fixed seed pins the data, fleet and dropout realisation, so
+    // every run below faces the same stragglers.
+    let session = ExperimentBuilder::preset("tiny")?
+        .epochs(8)
+        .threads(threads)
+        .scenario(ScenarioSpec::Dropout { rate: 0.2 })
+        .code(code)
+        .recovery(recovery)
+        .build()?;
+    let out = session.run_spec(SchemeSpec::Coded { delta: 0.3 })?;
+    Ok((
+        out.history.final_accuracy(),
+        out.history.total_sim_time(),
+        out.theta,
+    ))
+}
+
+fn main() -> anyhow::Result<()> {
+    let runs = [
+        ("dense / expectation (paper)", CodeSpec::Dense, RecoveryMode::Expectation),
+        ("dense / exact", CodeSpec::Dense, RecoveryMode::Exact),
+        (
+            "rateless / exact",
+            CodeSpec::Rateless { overhead: 0.5 },
+            RecoveryMode::Exact,
+        ),
+    ];
+
+    println!(
+        "{:<28} {:>10} {:>14}",
+        "code / recovery", "final acc", "sim time (s)"
+    );
+    for (name, code, recovery) in runs {
+        let (acc, sim_time, _) = run_once(code, recovery, 0)?;
+        println!("{name:<28} {acc:>10.4} {sim_time:>14.1}");
+    }
+
+    // The exact path is all-integer once gradients are packed: GF(256)
+    // decoding introduces no floating-point rounding, and the decoded
+    // aggregate is refolded in a fixed client order. Re-running at a
+    // different thread count must therefore reproduce the model to the
+    // bit, straggler recovery and all.
+    let (_, _, theta_a) = run_once(CodeSpec::Dense, RecoveryMode::Exact, 1)?;
+    let (_, _, theta_b) = run_once(CodeSpec::Dense, RecoveryMode::Exact, 4)?;
+    let identical = theta_a
+        .as_slice()
+        .iter()
+        .zip(theta_b.as_slice())
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    anyhow::ensure!(identical, "exact-recovery model diverged across thread counts");
+    println!("\nexact recovery at 1 and 4 threads: final models are bit-identical.");
+    println!("decoding stragglers exactly keeps the update deterministic — only");
+    println!("round latency depends on which clients arrived.");
+    Ok(())
+}

@@ -9,6 +9,7 @@
 //! cargo run --release --example privacy_budget
 //! ```
 
+use codedfedl::coding::{CodeSpec, GeneratorKind};
 use codedfedl::privacy;
 use codedfedl::tensor::Mat;
 use codedfedl::ExperimentBuilder;
@@ -37,12 +38,24 @@ fn main() -> anyhow::Result<()> {
     // Concentrated database: one dominant record in every feature.
     let concentrated = Mat::from_fn(64, 8, |r, _| if r == 0 { 10.0 } else { 0.01 });
     for (name, m) in [("uniform", &uniform), ("concentrated", &concentrated)] {
-        let rep = privacy::report(m, 64);
+        let rep = privacy::report(m, 64, &CodeSpec::Dense, GeneratorKind::Normal);
         println!(
-            "{name:<14} f = {:>8.4}  ε(u=64) = {:>8.4} bits",
-            rep.f_stat, rep.epsilon_bits
+            "{name:<14} f = {:>8.4}  ε(u=64) = {} bits  [{}]",
+            rep.f_stat,
+            rep.epsilon_label(),
+            rep.code
         );
     }
     println!("\nsmaller f ⇒ larger ε: vulnerable features need a bigger privacy budget.");
+
+    println!("\n=== analysis scope ===");
+    // Eq. (62) is a Gaussian-generator bound; the rateless GF(256) code
+    // shares no real-valued parity rows, so the report says so explicitly
+    // instead of printing a number the analysis does not support.
+    let rateless = CodeSpec::Rateless { overhead: 0.5 };
+    let rep = privacy::report(&uniform, 64, &rateless, GeneratorKind::Normal);
+    println!("{:<28} ε = {}", rep.code, rep.epsilon_label());
+    let rademacher = privacy::report(&uniform, 64, &CodeSpec::Dense, GeneratorKind::Rademacher);
+    println!("{:<28} ε = {}", rademacher.code, rademacher.epsilon_label());
     Ok(())
 }

@@ -19,11 +19,12 @@
 
 use codedfedl::allocation::{self, NodeSpec};
 use codedfedl::benchutil::{bench_iters, load_runtime, shapes_for, BenchReport, CountingAlloc};
+use codedfedl::coding::{gf256, Code, CodeSpec, DecodeScratch};
 use codedfedl::conf::ExperimentConfig;
 use codedfedl::rng::Rng;
 use codedfedl::runtime::{GradJob, Runtime, RuntimeShapes};
 use codedfedl::schemes::CodedFedL;
-use codedfedl::tensor::{Mat, SimdPolicy};
+use codedfedl::tensor::{Isa, Mat, SimdPolicy};
 use codedfedl::topology::FleetSpec;
 use codedfedl::ExperimentBuilder;
 
@@ -215,6 +216,123 @@ fn main() -> anyhow::Result<()> {
         acc.axpy(0.5, &gmat);
         std::hint::black_box(&acc);
     });
+
+    // --- GF(256) erasure codec (coding::) ---
+    {
+        let isa = rt.isa().unwrap_or(Isa::Scalar);
+
+        // Row kernels on a 1 MiB row — the byte-throughput primitives the
+        // codec is built from.
+        let row_len = 1usize << 20;
+        let src_row: Vec<u8> = (0..row_len).map(|i| (i.wrapping_mul(31) >> 3) as u8).collect();
+        let mut dst_row = vec![0u8; row_len];
+        let (wu, it) = bench_iters(10, 200);
+        report.bench_throughput(
+            "gf256::xor_row",
+            "1 MiB row",
+            1,
+            wu,
+            it,
+            Some(row_len as u64),
+            None,
+            || {
+                gf256::xor_row(isa, &src_row, &mut dst_row);
+                std::hint::black_box(&dst_row);
+            },
+        );
+        let (wu, it) = bench_iters(10, 200);
+        report.bench_throughput(
+            "gf256::mul_acc_row",
+            "1 MiB row, coeff=0x53",
+            1,
+            wu,
+            it,
+            Some(row_len as u64),
+            None,
+            || {
+                gf256::mul_acc_row(isa, 0x53, &src_row, &mut dst_row);
+                std::hint::black_box(&dst_row);
+            },
+        );
+
+        // Full codec over the default gradient-block shape: one symbol is
+        // one client's packed [q x c] f32 gradient (q·c·4 bytes).
+        let n = cfg.clients;
+        let len = s.q * s.c * 4;
+        for spec in [CodeSpec::Dense, CodeSpec::Rateless { overhead: 0.5 }] {
+            let code = spec.build(cfg.generator, n, 0xC0DE);
+            let r = code.repairs();
+            let mut pool = vec![0u8; n * len];
+            for (i, b) in pool.iter_mut().enumerate() {
+                *b = (i.wrapping_mul(131) >> 2) as u8;
+            }
+            let mut repairs = vec![0u8; r * len];
+            let label = spec.label();
+
+            // encode: all r repair symbols from the n source symbols
+            let (wu, it) = bench_iters(3, 50);
+            report.bench_throughput(
+                &format!("coding::encode[{label}]"),
+                &format!("{n}+{r} x {len} B"),
+                1,
+                wu,
+                it,
+                Some((r * len) as u64),
+                Some(r as u64),
+                || {
+                    for rr in 0..r {
+                        let out = &mut repairs[rr * len..(rr + 1) * len];
+                        code.encode_repair(isa, rr, &pool, len, out);
+                    }
+                    std::hint::black_box(&repairs);
+                },
+            );
+
+            // decode: pick the largest decodable erasure pattern from a
+            // deterministic preference list (dense handles multi-erasure
+            // w.h.p.; rateless row 0 guarantees any single erasure).
+            let mut scratch = DecodeScratch::new();
+            scratch.reserve(r, n, len);
+            let truth = pool.clone();
+            let drop = [vec![1, 4, 7], vec![2, 5], vec![3]]
+                .into_iter()
+                .find(|d| {
+                    let mut have = vec![true; n];
+                    for &j in d {
+                        have[j] = false;
+                    }
+                    code.decodable(&have, r, &mut scratch)
+                })
+                .expect("single-erasure patterns are always decodable");
+            let mut have = vec![true; n];
+            for &j in &drop {
+                have[j] = false;
+            }
+            let (wu, it) = bench_iters(3, 50);
+            println!("codec {label}: decoding {} erased of {n}", drop.len());
+            report.bench_throughput(
+                &format!("coding::decode[{label}]"),
+                &format!("{n}+{r} x {len} B"),
+                1,
+                wu,
+                it,
+                Some((drop.len() * len) as u64),
+                Some(drop.len() as u64),
+                || {
+                    for &j in &drop {
+                        pool[j * len..(j + 1) * len].fill(0);
+                    }
+                    code.decode_into(isa, &have, r, len, &mut pool, &repairs, &mut scratch)
+                        .expect("pattern pre-checked decodable");
+                    std::hint::black_box(&pool);
+                },
+            );
+            anyhow::ensure!(
+                pool == truth,
+                "codec {label} decode diverged from the source pool after timing"
+            );
+        }
+    }
 
     // --- one steady-state training round, pool warm (the per-round
     //     compute path the engine runs: pack θ, batch the n client

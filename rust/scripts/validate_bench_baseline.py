@@ -4,9 +4,11 @@
 Usage: validate_bench_baseline.py <committed_baseline.json> <smoke_run.json>
 
 Checks (coverage gates, not timing gates — smoke numbers are meaningless):
-  * both documents parse and carry the current schema (3) with a
+  * both documents parse and carry the current schema (4) with a
     well-formed, non-empty record list (op/shape/ns_per_iter/threads/iters
-    plus the schema-3 ``gflops`` field: a positive number or null);
+    plus the throughput fields — ``gflops`` (schema 3) and the schema-4
+    codec columns ``gbps``/``symbols_per_s`` — each a positive number or
+    null);
   * both documents record a non-empty ``isa`` string (the GEMM microkernel
     the run resolved — ``scalar`` / ``avx2+fma`` / ``neon`` / ``pjrt``),
     so perf numbers are always attributable to an instruction set;
@@ -28,7 +30,7 @@ next to the uploaded artifact.
 import json
 import sys
 
-SCHEMA = 3
+SCHEMA = 4
 RECORD_FIELDS = {
     "op": str,
     "shape": str,
@@ -36,6 +38,9 @@ RECORD_FIELDS = {
     "threads": int,
     "iters": int,
 }
+# Per-record throughput columns: must be present, and a positive number
+# or null (null = not meaningful for that op).
+THROUGHPUT_FIELDS = ("gflops", "gbps", "symbols_per_s")
 # Warn when a smoke run is this much slower than the committed baseline.
 REGRESSION_WARN_RATIO = 1.20
 
@@ -58,11 +63,14 @@ def check_doc(doc, name, errors):
                 errors.append(f"{name}: records[{i}].{field} is {rec.get(field)!r}, want {ty}")
         if isinstance(rec.get("ns_per_iter"), (int, float)) and rec["ns_per_iter"] <= 0:
             errors.append(f"{name}: records[{i}].ns_per_iter must be > 0")
-        if "gflops" not in rec:
-            errors.append(f"{name}: records[{i}] is missing the schema-3 gflops field")
-        elif rec["gflops"] is not None:
-            if not isinstance(rec["gflops"], (int, float)) or rec["gflops"] <= 0:
-                errors.append(f"{name}: records[{i}].gflops is {rec['gflops']!r}, want > 0 or null")
+        for field in THROUGHPUT_FIELDS:
+            if field not in rec:
+                errors.append(f"{name}: records[{i}] is missing the schema-4 {field} field")
+            elif rec[field] is not None:
+                if not isinstance(rec[field], (int, float)) or rec[field] <= 0:
+                    errors.append(
+                        f"{name}: records[{i}].{field} is {rec[field]!r}, want > 0 or null"
+                    )
         by_key[(rec.get("op"), rec.get("shape"))] = rec
     if len(by_key) != len(records):
         errors.append(f"{name}: duplicate (op, shape) records")

@@ -114,6 +114,12 @@ pub struct BenchRecord {
     /// with a known multiply-add count (schema 3). `None` for composite
     /// targets (full rounds/epochs) whose flop count is not meaningful.
     pub gflops: Option<f64>,
+    /// Achieved byte throughput in GB/s (`bytes / ns_per_iter`), for the
+    /// GF(256) row kernels and codec ops (schema 4). `None` elsewhere.
+    pub gbps: Option<f64>,
+    /// Achieved coded symbols per second, for the erasure codec's
+    /// encode/decode ops (schema 4). `None` elsewhere.
+    pub symbols_per_s: Option<f64>,
 }
 
 /// Collects [`TimingStats`] into the tracked-baseline JSON the perf
@@ -163,7 +169,54 @@ impl BenchReport {
             iters: stats.iters,
             // flops/ns ≡ GFLOP/s
             gflops: flops.map(|f| f as f64 / stats.median_ns),
+            gbps: None,
+            symbols_per_s: None,
         });
+    }
+
+    /// Append a record for an already-timed coding op: `bytes` processed
+    /// per iteration yields GB/s, `symbols` per iteration yields symbols/s
+    /// (schema 4's codec throughput columns).
+    pub fn record_throughput(
+        &mut self,
+        op: &str,
+        shape: &str,
+        threads: usize,
+        stats: &TimingStats,
+        bytes: Option<u64>,
+        symbols: Option<u64>,
+    ) {
+        self.records.push(BenchRecord {
+            op: op.to_string(),
+            shape: shape.to_string(),
+            ns_per_iter: stats.median_ns,
+            threads,
+            iters: stats.iters,
+            gflops: None,
+            // bytes/ns ≡ GB/s; symbols/ns · 1e9 ≡ symbols/s
+            gbps: bytes.map(|b| b as f64 / stats.median_ns),
+            symbols_per_s: symbols.map(|s| s as f64 * 1e9 / stats.median_ns),
+        });
+    }
+
+    /// [`BenchReport::bench`] for a coding op with known per-iteration
+    /// byte and/or symbol counts: records GB/s and symbols/s alongside
+    /// the timing.
+    #[allow(clippy::too_many_arguments)] // bench() plus two throughput counts
+    pub fn bench_throughput(
+        &mut self,
+        op: &str,
+        shape: &str,
+        threads: usize,
+        warmup: usize,
+        iters: usize,
+        bytes: Option<u64>,
+        symbols: Option<u64>,
+        f: impl FnMut(),
+    ) -> TimingStats {
+        let stats = bench(&format!("{op} ({shape})"), warmup, iters, f);
+        self.record_throughput(op, shape, threads, &stats, bytes, symbols);
+        stats
     }
 
     /// Time `f` via [`bench`] (printing the human-readable line) and
@@ -206,7 +259,7 @@ impl BenchReport {
         fn esc(s: &str) -> String {
             s.replace('\\', "\\\\").replace('"', "\\\"")
         }
-        let mut out = String::from("{\n  \"schema\": 3,\n");
+        let mut out = String::from("{\n  \"schema\": 4,\n");
         out.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
         out.push_str(&format!("  \"isa\": \"{}\",\n", esc(&self.isa)));
         match self.allocs_per_round {
@@ -214,20 +267,25 @@ impl BenchReport {
             None => out.push_str("  \"allocs_per_round\": null,\n"),
         }
         out.push_str("  \"records\": [\n");
-        for (i, r) in self.records.iter().enumerate() {
-            let gflops = match r.gflops {
-                Some(g) => format!("{g:.3}"),
+        fn opt(v: Option<f64>) -> String {
+            match v {
+                Some(x) => format!("{x:.3}"),
                 None => "null".to_string(),
-            };
+            }
+        }
+        for (i, r) in self.records.iter().enumerate() {
             out.push_str(&format!(
                 "    {{\"op\": \"{}\", \"shape\": \"{}\", \"ns_per_iter\": {:.1}, \
-                 \"threads\": {}, \"iters\": {}, \"gflops\": {}}}{}\n",
+                 \"threads\": {}, \"iters\": {}, \"gflops\": {}, \"gbps\": {}, \
+                 \"symbols_per_s\": {}}}{}\n",
                 esc(&r.op),
                 esc(&r.shape),
                 r.ns_per_iter,
                 r.threads,
                 r.iters,
-                gflops,
+                opt(r.gflops),
+                opt(r.gbps),
+                opt(r.symbols_per_s),
                 if i + 1 == self.records.len() { "" } else { "," }
             ));
         }
@@ -341,8 +399,10 @@ mod tests {
         let stats = TimingStats { iters: 5, median_ns: 1234.5, mean_ns: 1300.0, mad_ns: 10.0 };
         rep.record_flops("runtime::grad", "client 200x512x10", 4, &stats, Some(2_469));
         rep.record("full coded epoch", "tiny", 1, &stats);
+        // codec row: 2469 bytes and 2 symbols per iteration
+        rep.record_throughput("coding::encode", "dense 10+5", 1, &stats, Some(2_469), Some(2));
         let json = rep.to_json();
-        assert!(json.contains("\"schema\": 3"), "{json}");
+        assert!(json.contains("\"schema\": 4"), "{json}");
         assert!(json.contains("\"isa\": \"avx2+fma\""), "{json}");
         assert!(json.contains("\"op\": \"runtime::grad\""), "{json}");
         assert!(json.contains("\"shape\": \"client 200x512x10\""), "{json}");
@@ -351,10 +411,16 @@ mod tests {
         // 2469 flops / 1234.5 ns = 2.000 GFLOP/s; composite rows get null
         assert!(json.contains("\"gflops\": 2.000"), "{json}");
         assert!(json.contains("\"gflops\": null"), "{json}");
+        // 2469 bytes / 1234.5 ns = 2.000 GB/s; 2 symbols / 1234.5 ns =
+        // 1_620_089 symbols/s; non-codec rows carry null
+        assert!(json.contains("\"gbps\": 2.000"), "{json}");
+        assert!(json.contains("\"symbols_per_s\": 1620089."), "{json}");
+        assert!(json.contains("\"gbps\": null"), "{json}");
+        assert!(json.contains("\"symbols_per_s\": null"), "{json}");
         // unmeasured allocation gate serialises as null…
         assert!(json.contains("\"allocs_per_round\": null"), "{json}");
-        // exactly one trailing comma between the two records, none after the last
-        assert_eq!(json.matches("},\n").count(), 1, "{json}");
+        // a trailing comma between consecutive records, none after the last
+        assert_eq!(json.matches("},\n").count(), 2, "{json}");
         // …and a measured one as the number
         rep.allocs_per_round = Some(0);
         assert!(rep.to_json().contains("\"allocs_per_round\": 0"), "{}", rep.to_json());

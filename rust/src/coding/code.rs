@@ -1,0 +1,953 @@
+//! The pluggable erasure-code layer: [`Code`] trait, [`CodeSpec`] /
+//! [`RecoveryMode`] descriptions, and the two built-in codes.
+//!
+//! The paper's parity dataset compensates stragglers only *in expectation*
+//! (eq. 31): the server can never reconstruct the exact full-fleet
+//! gradient from a partial arrival set. This module adds the machinery
+//! that can. A [`Code`] is **systematic** over client shards: source
+//! symbol `j` is client `j`'s quantized gradient block (its f32 entries
+//! split into byte planes by [`pack_byte_planes`]), and each repair symbol
+//! is a GF(256) linear combination of the sources with a fixed, seeded
+//! coefficient row. When the round's arrival subset is decodable,
+//! [`Code::decode_into`] reconstructs every missing source **bit-exactly**
+//! — GF(256) arithmetic has no rounding — which is what powers
+//! `recovery = exact` in [`crate::schemes::CodedFedL`].
+//!
+//! Two implementations ship:
+//!
+//! * [`DenseRandomCode`] — the paper's dense random generator, refactored
+//!   behind the trait. Its real-valued expectation-mode path (generator
+//!   matrices for parity *datasets*) is reached through
+//!   [`DenseRandomCode::generator_matrix`]; its exact-mode byte-level
+//!   coefficients are dense uniform nonzero GF(256) entries (an MDS-like
+//!   random code: any `k ≤ repairs` erasures decode with probability
+//!   `≈ 1 − k/256`).
+//! * [`RatelessCode`] — an LT/Raptor-style systematic fountain code with
+//!   a seeded ideal-soliton degree distribution and binary (coefficient-1)
+//!   rows, so encode and most of decode are pure XOR (SNIPPETS' RFC 6330
+//!   binary-row observation). Decoding is *inactivation* style: a belief-
+//!   propagation peeling pass resolves degree-1 equations for free, and
+//!   only the stubborn residual falls back to GF(256) Gauss–Jordan.
+//!
+//! All decode state lives in a caller-owned [`DecodeScratch`], so warm
+//! rounds run the full pack → encode → decode cycle with zero heap
+//! allocations (see `tests/alloc_gate.rs`).
+
+use std::fmt;
+
+use super::{gf256, GeneratorKind};
+use crate::rng::Rng;
+use crate::tensor::{Isa, Mat};
+
+/// Which built-in code family a [`Code`] instance belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodeKind {
+    /// Dense random linear code (the paper's generator, §III-B).
+    Dense,
+    /// Systematic LT/Raptor-style fountain code.
+    Rateless,
+}
+
+impl CodeKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CodeKind::Dense => "dense",
+            CodeKind::Rateless => "rateless",
+        }
+    }
+}
+
+/// Closed, serialisable description of the built-in codes — the form the
+/// CLI, TOML files and benches speak (`"rateless:overhead=0.5"` ↔
+/// `CodeSpec::Rateless { overhead: 0.5 }`), mirroring
+/// [`crate::schemes::SchemeSpec`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CodeSpec {
+    /// Dense random linear code (the paper's baseline).
+    Dense,
+    /// Rateless fountain code; `overhead` is the repair budget as a
+    /// fraction of the source count (`repairs = ⌈overhead · n⌉`).
+    Rateless { overhead: f64 },
+}
+
+impl Default for CodeSpec {
+    fn default() -> Self {
+        CodeSpec::Dense
+    }
+}
+
+impl CodeSpec {
+    pub const DEFAULT_OVERHEAD: f64 = 0.5;
+
+    pub fn kind(&self) -> CodeKind {
+        match self {
+            CodeSpec::Dense => CodeKind::Dense,
+            CodeSpec::Rateless { .. } => CodeKind::Rateless,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            CodeSpec::Dense => "dense".into(),
+            CodeSpec::Rateless { overhead } => format!("rateless(overhead={overhead})"),
+        }
+    }
+
+    /// Parse a code string: `dense`, `rateless`, `rateless:overhead=0.5`.
+    /// Case-insensitive, like every other spec parser in the crate.
+    pub fn parse(s: &str) -> Result<CodeSpec, String> {
+        let lower = s.trim().to_ascii_lowercase();
+        let (name, params) = match lower.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p)),
+            None => (lower.as_str(), None),
+        };
+        match name {
+            "dense" => match params {
+                None => Ok(CodeSpec::Dense),
+                Some(p) => Err(format!("code \"dense\" takes no parameters, got {p:?}")),
+            },
+            "rateless" => {
+                let overhead = match params {
+                    None => Self::DEFAULT_OVERHEAD,
+                    Some(p) => {
+                        let (k, v) = p.split_once('=').ok_or_else(|| {
+                            format!("code \"rateless\": expected overhead=<value>, got {p:?}")
+                        })?;
+                        if k.trim() != "overhead" {
+                            return Err(format!(
+                                "code \"rateless\": unknown parameter {:?} (expected overhead)",
+                                k.trim()
+                            ));
+                        }
+                        v.trim()
+                            .parse::<f64>()
+                            .map_err(|e| format!("code \"rateless\": overhead: {e}"))?
+                    }
+                };
+                Ok(CodeSpec::Rateless { overhead })
+            }
+            other => Err(format!(
+                "unknown code {other:?} (expected one of dense | rateless[:overhead=ρ])"
+            )),
+        }
+    }
+
+    /// Reject parameter values no code can be built from.
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            CodeSpec::Dense => Ok(()),
+            CodeSpec::Rateless { overhead } => {
+                if !overhead.is_finite() || overhead <= 0.0 || overhead > 4.0 {
+                    Err(format!("rateless overhead must be in (0, 4], got {overhead}"))
+                } else {
+                    Ok(())
+                }
+            }
+        }
+    }
+
+    /// Instantiate the described code over `sources` client shards, with
+    /// coefficient rows drawn deterministically from `seed`.
+    pub fn build(&self, generator: GeneratorKind, sources: usize, seed: u64) -> Box<dyn Code> {
+        match *self {
+            CodeSpec::Dense => {
+                // Half the fleet in repairs: the dense random code decodes
+                // any ≤ repairs erasures with high probability, matching
+                // the straggler regime the paper targets.
+                let repairs = (sources + 1) / 2;
+                Box::new(DenseRandomCode::new(generator, sources, repairs, seed))
+            }
+            CodeSpec::Rateless { overhead } => Box::new(RatelessCode::new(sources, overhead, seed)),
+        }
+    }
+}
+
+impl std::str::FromStr for CodeSpec {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        CodeSpec::parse(s)
+    }
+}
+
+impl fmt::Display for CodeSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// How `schemes::coded` turns arrivals into an aggregate.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RecoveryMode {
+    /// The paper's mode: a real-valued parity-dataset gradient compensates
+    /// missing stragglers in expectation (eq. 28/31).
+    #[default]
+    Expectation,
+    /// Watch the arrival stream, stop as soon as the received subset is
+    /// decodable, and reconstruct the full-fleet gradient bit-exactly.
+    Exact,
+}
+
+impl RecoveryMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RecoveryMode::Expectation => "expectation",
+            RecoveryMode::Exact => "exact",
+        }
+    }
+}
+
+impl std::str::FromStr for RecoveryMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "expectation" => Ok(RecoveryMode::Expectation),
+            "exact" => Ok(RecoveryMode::Exact),
+            other => Err(format!(
+                "unknown recovery mode {other:?} (expected one of expectation | exact)"
+            )),
+        }
+    }
+}
+
+impl fmt::Display for RecoveryMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Caller-owned decoder workspace. [`DecodeScratch::reserve`] sizes every
+/// buffer for the worst case once (all sources missing, every repair in
+/// play), after which [`Code::decodable`] / [`Code::decode_into`] never
+/// allocate — the warm-round 0-alloc gate depends on this.
+#[derive(Default)]
+pub struct DecodeScratch {
+    /// Coefficient matrix over the missing columns, `eqs × k` row-major.
+    a: Vec<u8>,
+    /// Aliasing-free copy of the current pivot's coefficient row.
+    pivot_a: Vec<u8>,
+    /// Symbol-valued right-hand sides, `eqs × symbol_len` row-major.
+    rhs: Vec<u8>,
+    /// Missing source indices (the unknown columns, ascending).
+    miss: Vec<usize>,
+    /// Per-equation count of live nonzero coefficients (peeling driver).
+    nz: Vec<usize>,
+    /// Equations already spent as a peel step or a pivot.
+    consumed: Vec<bool>,
+    /// Column → pivot equation (`usize::MAX` while unsolved).
+    pivot_of: Vec<usize>,
+    /// Columns resolved by the peeling pass.
+    solved: Vec<bool>,
+}
+
+impl DecodeScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow every buffer to hold a `max_eqs`-equation, `max_sources`-column
+    /// system over `symbol_len`-byte symbols. Idempotent; call once with
+    /// the worst case before entering an allocation-gated loop.
+    pub fn reserve(&mut self, max_eqs: usize, max_sources: usize, symbol_len: usize) {
+        reserve_to(&mut self.a, max_eqs * max_sources);
+        reserve_to(&mut self.pivot_a, max_sources);
+        reserve_to(&mut self.rhs, max_eqs * symbol_len);
+        reserve_to(&mut self.miss, max_sources);
+        reserve_to(&mut self.nz, max_eqs);
+        reserve_to(&mut self.consumed, max_eqs);
+        reserve_to(&mut self.pivot_of, max_sources);
+        reserve_to(&mut self.solved, max_sources);
+    }
+}
+
+fn reserve_to<T>(v: &mut Vec<T>, cap: usize) {
+    if v.capacity() < cap {
+        v.reserve(cap - v.len());
+    }
+}
+
+/// An erasure code over client shards.
+///
+/// A code is systematic: the `sources()` source symbols are the client
+/// blocks themselves, and `repairs()` extra symbols are GF(256) linear
+/// combinations `repair_r = Σ_j coeff(r, j) · source_j` (byte-wise, over
+/// the packed planes). Implementations fix the coefficient structure at
+/// construction (seeded, deterministic); encode, decodability and decode
+/// are provided generically on top of [`Code::coeff`], with sparse codes
+/// free to override [`Code::encode_repair`] for XOR-only throughput.
+pub trait Code {
+    /// Which family this code belongs to (drives reporting and privacy
+    /// applicability).
+    fn kind(&self) -> CodeKind;
+
+    /// Human-readable label (`"dense"`, `"rateless(overhead=0.5)"`).
+    fn label(&self) -> String;
+
+    /// Number of source symbols (= clients).
+    fn sources(&self) -> usize;
+
+    /// Number of repair symbols this instance carries.
+    fn repairs(&self) -> usize;
+
+    /// GF(256) coefficient of `source` in repair row `repair`.
+    fn coeff(&self, repair: usize, source: usize) -> u8;
+
+    /// Encode repair row `repair` over the packed source pool
+    /// (`sources() · symbol_len` bytes, source `j` at `j · symbol_len`)
+    /// into `out` (`symbol_len` bytes, overwritten).
+    fn encode_repair(&self, isa: Isa, repair: usize, sources: &[u8], symbol_len: usize, out: &mut [u8]) {
+        assert_eq!(out.len(), symbol_len, "encode_repair: bad output length");
+        assert_eq!(
+            sources.len(),
+            self.sources() * symbol_len,
+            "encode_repair: bad source pool length"
+        );
+        out.fill(0);
+        for j in 0..self.sources() {
+            let row = &sources[j * symbol_len..(j + 1) * symbol_len];
+            gf256::mul_acc_row(isa, self.coeff(repair, j), row, out);
+        }
+    }
+
+    /// Whether the arrival subset `have` plus the first `repairs_avail`
+    /// repair symbols determine every missing source (full column rank of
+    /// the erasure system). Allocation-free once `scratch` is reserved.
+    fn decodable(&self, have: &[bool], repairs_avail: usize, scratch: &mut DecodeScratch) -> bool {
+        let n = self.sources();
+        assert_eq!(have.len(), n, "decodable: bad arrival mask length");
+        let eqs = repairs_avail.min(self.repairs());
+        scratch.miss.clear();
+        scratch.miss.extend((0..n).filter(|&j| !have[j]));
+        let k = scratch.miss.len();
+        if k == 0 {
+            return true;
+        }
+        if eqs < k {
+            return false;
+        }
+        // Plain Gaussian elimination on the eqs × k erasure matrix: the
+        // subset is decodable iff every column gets a pivot. Row ops over
+        // GF(256) preserve column rank, so this agrees exactly with the
+        // peel + Gauss–Jordan path `decode_into` runs.
+        scratch.a.clear();
+        scratch.a.resize(eqs * k, 0);
+        for e in 0..eqs {
+            for t in 0..k {
+                scratch.a[e * k + t] = self.coeff(e, scratch.miss[t]);
+            }
+        }
+        let mut rank = 0usize;
+        for col in 0..k {
+            let Some(r) = (rank..eqs).find(|&r| scratch.a[r * k + col] != 0) else {
+                return false;
+            };
+            if r != rank {
+                for t in 0..k {
+                    scratch.a.swap(rank * k + t, r * k + t);
+                }
+            }
+            let p = scratch.a[rank * k + col];
+            for r2 in rank + 1..eqs {
+                let v = scratch.a[r2 * k + col];
+                if v == 0 {
+                    continue;
+                }
+                let f = gf256::div(v, p);
+                for t in col..k {
+                    let pv = scratch.a[rank * k + t];
+                    scratch.a[r2 * k + t] ^= gf256::mul(f, pv);
+                }
+            }
+            rank += 1;
+        }
+        true
+    }
+
+    /// Reconstruct every missing source bit-exactly from the arrivals and
+    /// the first `repairs_avail` repair symbols.
+    ///
+    /// `sources` is the packed pool; rows with `have[j] = true` hold the
+    /// arrived bytes on entry, and rows with `have[j] = false` are
+    /// overwritten with the decoded bytes. `repairs` holds repair row `r`
+    /// at `r · symbol_len`. Errors when the subset is not decodable.
+    /// Inactivation decoding: a peeling pass resolves degree-1 equations
+    /// (the common case for [`RatelessCode`]), then GF(256) Gauss–Jordan
+    /// finishes the residual. Deterministic — pivot choice is by index —
+    /// and allocation-free once `scratch` is reserved.
+    fn decode_into(
+        &self,
+        isa: Isa,
+        have: &[bool],
+        repairs_avail: usize,
+        symbol_len: usize,
+        sources: &mut [u8],
+        repairs: &[u8],
+        scratch: &mut DecodeScratch,
+    ) -> Result<(), String> {
+        let n = self.sources();
+        assert_eq!(have.len(), n, "decode_into: bad arrival mask length");
+        assert_eq!(sources.len(), n * symbol_len, "decode_into: bad source pool length");
+        let eqs = repairs_avail.min(self.repairs());
+        assert!(
+            repairs.len() >= eqs * symbol_len,
+            "decode_into: repair pool holds {} bytes, need {}",
+            repairs.len(),
+            eqs * symbol_len
+        );
+        scratch.miss.clear();
+        scratch.miss.extend((0..n).filter(|&j| !have[j]));
+        let k = scratch.miss.len();
+        if k == 0 {
+            return Ok(());
+        }
+        if eqs < k {
+            return Err(format!(
+                "undecodable: {k} sources missing, only {eqs} repair symbols available"
+            ));
+        }
+        let len = symbol_len;
+
+        // System setup: A over the missing columns, rhs = repair symbol
+        // minus (= plus, in GF(2^8)) the arrived sources' contributions.
+        scratch.a.clear();
+        scratch.a.resize(eqs * k, 0);
+        scratch.nz.clear();
+        scratch.nz.resize(eqs, 0);
+        scratch.consumed.clear();
+        scratch.consumed.resize(eqs, false);
+        scratch.solved.clear();
+        scratch.solved.resize(k, false);
+        scratch.pivot_of.clear();
+        scratch.pivot_of.resize(k, usize::MAX);
+        scratch.rhs.clear();
+        scratch.rhs.resize(eqs * len, 0);
+        for e in 0..eqs {
+            let mut cnt = 0usize;
+            for t in 0..k {
+                let co = self.coeff(e, scratch.miss[t]);
+                scratch.a[e * k + t] = co;
+                if co != 0 {
+                    cnt += 1;
+                }
+            }
+            scratch.nz[e] = cnt;
+            let rhs_row = &mut scratch.rhs[e * len..(e + 1) * len];
+            rhs_row.copy_from_slice(&repairs[e * len..(e + 1) * len]);
+            for j in 0..n {
+                if have[j] {
+                    let row = &sources[j * len..(j + 1) * len];
+                    gf256::mul_acc_row(isa, self.coeff(e, j), row, rhs_row);
+                }
+            }
+        }
+
+        // Peeling pass: any equation left with a single unknown yields
+        // that source directly; substituting it may expose new degree-1
+        // equations. For a fountain code in its working regime this pass
+        // resolves nearly everything with XOR-only row ops.
+        loop {
+            let Some(e) = (0..eqs).find(|&e| !scratch.consumed[e] && scratch.nz[e] == 1) else {
+                break;
+            };
+            let c = (0..k)
+                .find(|&t| scratch.a[e * k + t] != 0)
+                .expect("nz = 1 equation with no live coefficient");
+            let co = scratch.a[e * k + c];
+            let m = scratch.miss[c];
+            {
+                let dst = &mut sources[m * len..(m + 1) * len];
+                dst.copy_from_slice(&scratch.rhs[e * len..(e + 1) * len]);
+                gf256::scale_row(gf256::inv(co), dst);
+            }
+            scratch.consumed[e] = true;
+            scratch.solved[c] = true;
+            scratch.a[e * k + c] = 0;
+            scratch.nz[e] = 0;
+            for e2 in 0..eqs {
+                let f = scratch.a[e2 * k + c];
+                if f == 0 {
+                    continue;
+                }
+                let src = &sources[m * len..(m + 1) * len];
+                gf256::mul_acc_row(isa, f, src, &mut scratch.rhs[e2 * len..(e2 + 1) * len]);
+                scratch.a[e2 * k + c] = 0;
+                scratch.nz[e2] -= 1;
+            }
+        }
+
+        // Inactivation residual: Gauss–Jordan over whatever peeling left.
+        // Pivot selection is first-by-index, so the elimination sequence —
+        // and therefore every intermediate byte — is deterministic.
+        for c in 0..k {
+            if scratch.solved[c] {
+                continue;
+            }
+            let Some(e) = (0..eqs).find(|&e| !scratch.consumed[e] && scratch.a[e * k + c] != 0)
+            else {
+                return Err(format!(
+                    "undecodable: erasure system is rank-deficient at missing source {}",
+                    scratch.miss[c]
+                ));
+            };
+            scratch.consumed[e] = true;
+            scratch.pivot_of[c] = e;
+            let p = scratch.a[e * k + c];
+            if p != 1 {
+                let ip = gf256::inv(p);
+                for t in 0..k {
+                    let v = scratch.a[e * k + t];
+                    scratch.a[e * k + t] = gf256::mul(ip, v);
+                }
+                gf256::scale_row(ip, &mut scratch.rhs[e * len..(e + 1) * len]);
+            }
+            scratch.pivot_a.clear();
+            scratch.pivot_a.extend_from_slice(&scratch.a[e * k..(e + 1) * k]);
+            for e2 in 0..eqs {
+                if e2 == e {
+                    continue;
+                }
+                let f = scratch.a[e2 * k + c];
+                if f == 0 {
+                    continue;
+                }
+                for t in 0..k {
+                    let pv = scratch.pivot_a[t];
+                    scratch.a[e2 * k + t] ^= gf256::mul(f, pv);
+                }
+                let (dst, src) = row_pair_mut(&mut scratch.rhs, len, e2, e);
+                gf256::mul_acc_row(isa, f, src, dst);
+            }
+        }
+
+        // Jordan elimination leaves each pivot row as a unit vector, so
+        // its rhs *is* the missing source.
+        for c in 0..k {
+            if scratch.solved[c] {
+                continue;
+            }
+            let e = scratch.pivot_of[c];
+            let m = scratch.miss[c];
+            sources[m * len..(m + 1) * len].copy_from_slice(&scratch.rhs[e * len..(e + 1) * len]);
+        }
+        Ok(())
+    }
+}
+
+/// Disjoint mutable views of rows `i` and `j` (`i ≠ j`) of a row-major
+/// byte pool, for same-buffer row updates during elimination.
+fn row_pair_mut(buf: &mut [u8], len: usize, i: usize, j: usize) -> (&mut [u8], &mut [u8]) {
+    assert_ne!(i, j, "row_pair_mut: aliasing rows");
+    if i < j {
+        let (lo, hi) = buf.split_at_mut(j * len);
+        (&mut lo[i * len..(i + 1) * len], &mut hi[..len])
+    } else {
+        let (lo, hi) = buf.split_at_mut(i * len);
+        (&mut hi[..len], &mut lo[j * len..(j + 1) * len])
+    }
+}
+
+/// The paper's dense random generator behind the [`Code`] trait.
+///
+/// Expectation mode keeps the real-valued machinery: per-client generator
+/// matrices come from [`DenseRandomCode::generator_matrix`] (exactly the
+/// historical `coding::generator_matrix` draw — bit-for-bit, preserving
+/// pre-PR histories). Exact mode uses the byte-level side: `repairs`
+/// coefficient rows of i.i.d. uniform *nonzero* GF(256) entries, drawn
+/// once from `seed`.
+pub struct DenseRandomCode {
+    generator: GeneratorKind,
+    sources: usize,
+    repairs: usize,
+    /// `repairs × sources` row-major, all entries nonzero.
+    coeffs: Vec<u8>,
+}
+
+impl DenseRandomCode {
+    pub fn new(generator: GeneratorKind, sources: usize, repairs: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from(seed);
+        let coeffs = (0..repairs * sources)
+            .map(|_| (rng.next_below(255) + 1) as u8)
+            .collect();
+        DenseRandomCode { generator, sources, repairs, coeffs }
+    }
+
+    /// Expectation-mode instance: no byte-level repair rows (and no RNG
+    /// consumed — the real-valued draw order of pre-PR runs is sacred).
+    pub fn expectation(generator: GeneratorKind, sources: usize) -> Self {
+        DenseRandomCode { generator, sources, repairs: 0, coeffs: Vec::new() }
+    }
+
+    pub fn generator(&self) -> GeneratorKind {
+        self.generator
+    }
+
+    /// Draw a real-valued generator matrix `G_j ∈ R^{u×ℓ}` for the parity
+    /// *dataset* path (paper §III-B) — the historical
+    /// [`super::generator_matrix`] draw, unchanged.
+    pub fn generator_matrix(&self, u: usize, ell: usize, rng: &mut Rng) -> Mat {
+        super::generator_matrix(self.generator, u, ell, rng)
+    }
+}
+
+impl Code for DenseRandomCode {
+    fn kind(&self) -> CodeKind {
+        CodeKind::Dense
+    }
+
+    fn label(&self) -> String {
+        "dense".into()
+    }
+
+    fn sources(&self) -> usize {
+        self.sources
+    }
+
+    fn repairs(&self) -> usize {
+        self.repairs
+    }
+
+    fn coeff(&self, repair: usize, source: usize) -> u8 {
+        self.coeffs[repair * self.sources + source]
+    }
+}
+
+/// Systematic LT/Raptor-style fountain code over GF(256) byte planes.
+///
+/// Repair rows carry **binary** coefficients, so every encode/peel row op
+/// is a pure XOR lane. Row 0 is the full-degree sum of all sources (any
+/// single erasure peels immediately); rows 1.. draw their degree from the
+/// ideal soliton distribution and their neighbours from a seeded
+/// permutation — fully deterministic given `(sources, overhead, seed)`.
+pub struct RatelessCode {
+    sources: usize,
+    overhead: f64,
+    /// Sparse rows: `(source index, coefficient)`, ascending by index.
+    rows: Vec<Vec<(usize, u8)>>,
+}
+
+impl RatelessCode {
+    pub fn new(sources: usize, overhead: f64, seed: u64) -> Self {
+        assert!(sources > 0, "rateless code needs at least one source");
+        assert!(
+            overhead.is_finite() && overhead > 0.0,
+            "rateless overhead must be positive, got {overhead}"
+        );
+        let repairs = ((sources as f64 * overhead).ceil() as usize).max(1);
+        let mut rng = Rng::seed_from(seed);
+        let mut rows = Vec::with_capacity(repairs);
+        rows.push((0..sources).map(|j| (j, 1u8)).collect());
+        let n = sources as f64;
+        for _ in 1..repairs {
+            // Ideal soliton: P(1) = 1/n, P(d) = 1/(d(d−1)) for 2 ≤ d ≤ n.
+            let u = rng.next_f64();
+            let d = if u < 1.0 / n {
+                1
+            } else {
+                ((1.0 / (1.0 - (u - 1.0 / n))).ceil() as usize).clamp(2, sources)
+            };
+            let perm = rng.permutation(sources);
+            let mut row: Vec<(usize, u8)> = perm[..d].iter().map(|&j| (j, 1u8)).collect();
+            row.sort_unstable_by_key(|&(j, _)| j);
+            rows.push(row);
+        }
+        RatelessCode { sources, overhead, rows }
+    }
+
+    pub fn overhead(&self) -> f64 {
+        self.overhead
+    }
+}
+
+impl Code for RatelessCode {
+    fn kind(&self) -> CodeKind {
+        CodeKind::Rateless
+    }
+
+    fn label(&self) -> String {
+        format!("rateless(overhead={})", self.overhead)
+    }
+
+    fn sources(&self) -> usize {
+        self.sources
+    }
+
+    fn repairs(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn coeff(&self, repair: usize, source: usize) -> u8 {
+        match self.rows[repair].binary_search_by_key(&source, |&(j, _)| j) {
+            Ok(i) => self.rows[repair][i].1,
+            Err(_) => 0,
+        }
+    }
+
+    /// Sparse override: touch only the row's neighbours (XOR-only, since
+    /// every live coefficient is 1).
+    fn encode_repair(&self, isa: Isa, repair: usize, sources: &[u8], symbol_len: usize, out: &mut [u8]) {
+        assert_eq!(out.len(), symbol_len, "encode_repair: bad output length");
+        assert_eq!(
+            sources.len(),
+            self.sources * symbol_len,
+            "encode_repair: bad source pool length"
+        );
+        out.fill(0);
+        for &(j, co) in &self.rows[repair] {
+            let row = &sources[j * symbol_len..(j + 1) * symbol_len];
+            gf256::mul_acc_row(isa, co, row, out);
+        }
+    }
+}
+
+/// Split `values` into byte planes inside `out` (`4 · values.len()` bytes):
+/// plane `p` of value `i` lands at `p · values.len() + i`. Lossless — the
+/// little-endian f32 bit patterns are preserved exactly, so pack → decode
+/// → unpack is a bitwise identity. Plane-major layout keeps each plane
+/// contiguous for the XOR lanes.
+pub fn pack_byte_planes(values: &[f32], out: &mut [u8]) {
+    let n = values.len();
+    assert_eq!(out.len(), 4 * n, "pack_byte_planes: need 4 bytes per value");
+    for (i, v) in values.iter().enumerate() {
+        let b = v.to_le_bytes();
+        out[i] = b[0];
+        out[n + i] = b[1];
+        out[2 * n + i] = b[2];
+        out[3 * n + i] = b[3];
+    }
+}
+
+/// Inverse of [`pack_byte_planes`].
+pub fn unpack_byte_planes(planes: &[u8], out: &mut [f32]) {
+    let n = out.len();
+    assert_eq!(planes.len(), 4 * n, "unpack_byte_planes: need 4 bytes per value");
+    for (i, v) in out.iter_mut().enumerate() {
+        *v = f32::from_le_bytes([planes[i], planes[n + i], planes[2 * n + i], planes[3 * n + i]]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_pool(n: usize, len: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::seed_from(seed);
+        (0..n * len).map(|_| rng.next_below(256) as u8).collect()
+    }
+
+    fn encode_all(code: &dyn Code, pool: &[u8], len: usize) -> Vec<u8> {
+        let mut repairs = vec![0u8; code.repairs() * len];
+        for r in 0..code.repairs() {
+            let out = &mut repairs[r * len..(r + 1) * len];
+            code.encode_repair(Isa::Scalar, r, pool, len, out);
+        }
+        repairs
+    }
+
+    fn roundtrip(code: &dyn Code, drop: &[usize], len: usize) {
+        let n = code.sources();
+        let truth = random_pool(n, len, 77);
+        let repairs = encode_all(code, &truth, len);
+        let mut have = vec![true; n];
+        let mut pool = truth.clone();
+        for &j in drop {
+            have[j] = false;
+            pool[j * len..(j + 1) * len].fill(0);
+        }
+        let mut scratch = DecodeScratch::new();
+        assert!(code.decodable(&have, code.repairs(), &mut scratch));
+        code.decode_into(Isa::Scalar, &have, code.repairs(), len, &mut pool, &repairs, &mut scratch)
+            .unwrap();
+        assert_eq!(pool, truth, "decode is not bit-exact (dropped {drop:?})");
+    }
+
+    #[test]
+    fn dense_code_round_trips_every_drop_pattern_it_claims() {
+        // 6 sources, 3 repairs. Single erasures are *guaranteed* decodable
+        // (every coefficient is nonzero); larger subsets decode whenever
+        // the rank check accepts them — sweep all pairs and triples and
+        // round-trip exactly those, requiring the accept rate a random
+        // GF(256) code delivers. 53 is odd (tail-exercising).
+        let code = DenseRandomCode::new(GeneratorKind::Normal, 6, 3, 42);
+        roundtrip(&code, &[], 53);
+        for a in 0..6 {
+            roundtrip(&code, &[a], 53);
+        }
+        let mut scratch = DecodeScratch::new();
+        let (mut tried, mut ok) = (0usize, 0usize);
+        for a in 0..6 {
+            for b in a + 1..6 {
+                for extra in [None, Some((b + 1) % 6)] {
+                    let mut drop = vec![a, b];
+                    if let Some(c) = extra {
+                        if drop.contains(&c) {
+                            continue;
+                        }
+                        drop.push(c);
+                        drop.sort_unstable();
+                    }
+                    tried += 1;
+                    let mut have = vec![true; 6];
+                    for &j in &drop {
+                        have[j] = false;
+                    }
+                    if code.decodable(&have, 3, &mut scratch) {
+                        ok += 1;
+                        roundtrip(&code, &drop, 53);
+                    }
+                }
+            }
+        }
+        // Random nonzero coefficients make singular submatrices rare
+        // (≈ 1/255 per subset); demand a decisive majority decodes.
+        assert!(ok * 10 >= tried * 8, "only {ok}/{tried} subsets decodable");
+    }
+
+    #[test]
+    fn rateless_code_round_trips_decodable_subsets() {
+        let code = RatelessCode::new(10, 0.5, 7);
+        assert_eq!(code.sources(), 10);
+        assert_eq!(code.repairs(), 5);
+        let mut scratch = DecodeScratch::new();
+        // Any single erasure peels off row 0 (the full-degree row).
+        for j in 0..10 {
+            let mut have = vec![true; 10];
+            have[j] = false;
+            assert!(code.decodable(&have, 5, &mut scratch), "single erasure {j}");
+            roundtrip(&code, &[j], 31);
+        }
+        // Sweep all pairs; decode exactly the decodable ones.
+        let mut decodable_pairs = 0;
+        for a in 0..10 {
+            for b in a + 1..10 {
+                let mut have = vec![true; 10];
+                have[a] = false;
+                have[b] = false;
+                if code.decodable(&have, 5, &mut scratch) {
+                    decodable_pairs += 1;
+                    roundtrip(&code, &[a, b], 31);
+                }
+            }
+        }
+        assert!(decodable_pairs > 0, "soliton rows decode no pair at all");
+    }
+
+    #[test]
+    fn undecodable_subsets_are_rejected_not_mis_decoded() {
+        let code = DenseRandomCode::new(GeneratorKind::Normal, 4, 2, 1);
+        let mut scratch = DecodeScratch::new();
+        let have = vec![false, false, false, true]; // 3 missing > 2 repairs
+        assert!(!code.decodable(&have, 2, &mut scratch));
+        let len = 8;
+        let mut pool = vec![0u8; 4 * len];
+        let repairs = vec![0u8; 2 * len];
+        let err = code
+            .decode_into(Isa::Scalar, &have, 2, len, &mut pool, &repairs, &mut scratch)
+            .unwrap_err();
+        assert!(err.contains("undecodable"), "{err}");
+        // Zero repairs available: nothing missing is fine, anything else not.
+        assert!(code.decodable(&[true; 4], 0, &mut scratch));
+        assert!(!code.decodable(&[true, true, true, false], 0, &mut scratch));
+    }
+
+    #[test]
+    fn codes_are_deterministic_in_their_seed() {
+        let a = DenseRandomCode::new(GeneratorKind::Normal, 8, 4, 9);
+        let b = DenseRandomCode::new(GeneratorKind::Normal, 8, 4, 9);
+        let c = DenseRandomCode::new(GeneratorKind::Normal, 8, 4, 10);
+        assert_eq!(a.coeffs, b.coeffs);
+        assert_ne!(a.coeffs, c.coeffs);
+        assert!(a.coeffs.iter().all(|&v| v != 0), "dense rows must be all-nonzero");
+
+        let ra = RatelessCode::new(12, 0.5, 3);
+        let rb = RatelessCode::new(12, 0.5, 3);
+        assert_eq!(ra.rows, rb.rows);
+        assert_eq!(ra.rows[0].len(), 12, "row 0 is the full-degree spike");
+    }
+
+    #[test]
+    fn pack_unpack_is_a_bitwise_identity() {
+        let values = [0.0f32, -0.0, 1.5, -3.25e-12, f32::MIN_POSITIVE, 1.0e30, -7.0];
+        let mut planes = vec![0u8; 4 * values.len()];
+        pack_byte_planes(&values, &mut planes);
+        let mut back = vec![0.0f32; values.len()];
+        unpack_byte_planes(&planes, &mut back);
+        for (a, b) in values.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Plane-major: first plane holds every value's low byte.
+        assert_eq!(planes[2], 1.5f32.to_le_bytes()[0]);
+    }
+
+    #[test]
+    fn code_spec_parses_case_insensitively_with_helpful_errors() {
+        assert_eq!(CodeSpec::parse("dense").unwrap(), CodeSpec::Dense);
+        assert_eq!(CodeSpec::parse("Dense").unwrap(), CodeSpec::Dense);
+        assert_eq!(
+            CodeSpec::parse("rateless").unwrap(),
+            CodeSpec::Rateless { overhead: CodeSpec::DEFAULT_OVERHEAD }
+        );
+        assert_eq!(
+            CodeSpec::parse("RATELESS:overhead=0.75").unwrap(),
+            CodeSpec::Rateless { overhead: 0.75 }
+        );
+        let e = CodeSpec::parse("fountain").unwrap_err();
+        assert!(e.contains("expected one of"), "{e}");
+        assert!(e.contains("dense") && e.contains("rateless"), "{e}");
+        assert!(CodeSpec::parse("dense:overhead=1").is_err());
+        assert!(CodeSpec::parse("rateless:rho=1").is_err());
+        assert!(CodeSpec::parse("rateless:overhead=lots").is_err());
+        assert!(CodeSpec::Rateless { overhead: 0.0 }.validate().is_err());
+        assert!(CodeSpec::Rateless { overhead: f64::NAN }.validate().is_err());
+        assert!(CodeSpec::Rateless { overhead: 0.5 }.validate().is_ok());
+        assert_eq!(CodeSpec::default(), CodeSpec::Dense);
+        assert_eq!(CodeSpec::Rateless { overhead: 0.5 }.to_string(), "rateless(overhead=0.5)");
+    }
+
+    #[test]
+    fn recovery_mode_parses_case_insensitively() {
+        assert_eq!("expectation".parse::<RecoveryMode>().unwrap(), RecoveryMode::Expectation);
+        assert_eq!("Exact".parse::<RecoveryMode>().unwrap(), RecoveryMode::Exact);
+        assert_eq!(RecoveryMode::default(), RecoveryMode::Expectation);
+        let e = "precise".parse::<RecoveryMode>().unwrap_err();
+        assert!(e.contains("expected one of"), "{e}");
+        assert_eq!(RecoveryMode::Exact.to_string(), "exact");
+    }
+
+    #[test]
+    fn spec_build_matches_kind_and_source_count() {
+        let d = CodeSpec::Dense.build(GeneratorKind::Normal, 10, 5);
+        assert_eq!(d.kind(), CodeKind::Dense);
+        assert_eq!(d.sources(), 10);
+        assert_eq!(d.repairs(), 5);
+        let r = CodeSpec::Rateless { overhead: 0.5 }.build(GeneratorKind::Normal, 10, 5);
+        assert_eq!(r.kind(), CodeKind::Rateless);
+        assert_eq!(r.repairs(), 5);
+        assert_eq!(r.label(), "rateless(overhead=0.5)");
+    }
+
+    #[test]
+    fn reserved_scratch_survives_repeated_use() {
+        let code = DenseRandomCode::new(GeneratorKind::Normal, 6, 3, 5);
+        let len = 16;
+        let mut scratch = DecodeScratch::new();
+        scratch.reserve(3, 6, len);
+        let truth = random_pool(6, len, 3);
+        let repairs = encode_all(&code, &truth, len);
+        for drop in [vec![1], vec![0, 4], vec![2, 3, 5]] {
+            let mut have = vec![true; 6];
+            let mut pool = truth.clone();
+            for &j in &drop {
+                have[j] = false;
+                pool[j * len..(j + 1) * len].fill(0);
+            }
+            // Single erasures always decode; the larger patterns do
+            // whenever this seed's random submatrices are regular.
+            if drop.len() > 1 && !code.decodable(&have, 3, &mut scratch) {
+                continue;
+            }
+            assert!(code.decodable(&have, 3, &mut scratch));
+            code.decode_into(Isa::Scalar, &have, 3, len, &mut pool, &repairs, &mut scratch)
+                .unwrap();
+            assert_eq!(pool, truth);
+        }
+    }
+}

@@ -1,0 +1,319 @@
+//! GF(256) field arithmetic and erasure-coding row kernels.
+//!
+//! The rateless/exact-recovery coding layer works over the finite field
+//! GF(2⁸) with the primitive polynomial `x⁸ + x⁴ + x³ + x² + 1` (0x11D,
+//! the RFC 6330 / Reed–Solomon convention, generator α = 2). Addition is
+//! XOR; multiplication goes through compile-time exp/log tables, so every
+//! operation is exact — erasure decode reproduces the encoded bytes
+//! bit-for-bit, on every thread count and under every SIMD policy.
+//!
+//! The symbol-row kernels ([`xor_row`], [`mul_acc_row`], [`scale_row`])
+//! follow the `tensor::gemm` dispatch discipline: the caller resolves an
+//! [`Isa`] once (at scheme/bench construction) and every call branches on
+//! the copy it is handed. SIMD arms are feature-guarded so a
+//! hand-constructed [`Isa`] degrades to the scalar oracle instead of
+//! faulting, and the scalar loop is the bit-for-bit reference — trivially
+//! so here, since XOR and table lookups carry no rounding. Coefficient-1
+//! rows (the bulk of an LT/Raptor code, per the RFC 6330 errata's
+//! binary-row observation) take the pure-XOR lane; general coefficients
+//! run the scalar table loop, which only appears on the few dense rows of
+//! elimination and of the dense baseline code.
+
+use crate::tensor::Isa;
+
+/// exp/log tables for GF(256) under 0x11D, built at compile time. `EXP`
+/// is doubled (`EXP[i + 255] = EXP[i]`) so `mul` needs no modular
+/// reduction: `log a + log b ≤ 508 < 510`.
+const fn build_tables() -> ([u8; 512], [u8; 256]) {
+    let mut exp = [0u8; 512];
+    let mut log = [0u8; 256];
+    let mut x: u16 = 1;
+    let mut i = 0;
+    while i < 255 {
+        exp[i] = x as u8;
+        log[x as usize] = i as u8;
+        x <<= 1;
+        if x & 0x100 != 0 {
+            x ^= 0x11D;
+        }
+        i += 1;
+    }
+    let mut j = 0;
+    while j < 255 {
+        exp[255 + j] = exp[j];
+        j += 1;
+    }
+    (exp, log)
+}
+
+const TABLES: ([u8; 512], [u8; 256]) = build_tables();
+static GF_EXP: [u8; 512] = TABLES.0;
+static GF_LOG: [u8; 256] = TABLES.1;
+
+/// Field addition (= subtraction): XOR.
+#[inline]
+pub fn add(a: u8, b: u8) -> u8 {
+    a ^ b
+}
+
+/// Field multiplication via the exp/log tables.
+#[inline]
+pub fn mul(a: u8, b: u8) -> u8 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    GF_EXP[GF_LOG[a as usize] as usize + GF_LOG[b as usize] as usize]
+}
+
+/// Multiplicative inverse. Panics on 0, which has none.
+#[inline]
+pub fn inv(a: u8) -> u8 {
+    assert!(a != 0, "gf256: inverse of zero");
+    GF_EXP[255 - GF_LOG[a as usize] as usize]
+}
+
+/// Field division `a / b`. Panics when `b = 0`.
+#[inline]
+pub fn div(a: u8, b: u8) -> u8 {
+    mul(a, inv(b))
+}
+
+/// Whether this host can run the AVX2 XOR lanes (cached CPUID probe, so
+/// re-checking per dispatch is a load-and-test — the same safety net
+/// `tensor::gemm` uses against hand-constructed [`Isa`] values).
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// Whether this host can run the NEON XOR lanes (cached probe).
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+/// `dst[i] ^= src[i]` — the coefficient-1 row update, and the hot loop of
+/// the whole coding layer. Bit-identical across ISAs (XOR has no rounding);
+/// the SIMD arms exist purely for throughput.
+pub fn xor_row(isa: Isa, src: &[u8], dst: &mut [u8]) {
+    assert_eq!(src.len(), dst.len(), "gf256::xor_row: length mismatch");
+    match isa {
+        Isa::Scalar => xor_row_scalar(src, dst),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma if avx2_available() => {
+            // Safety: lengths asserted equal above; the guard verified AVX2.
+            unsafe { xor_row_avx2(src, dst) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon if neon_available() => {
+            // Safety: lengths asserted equal above; the guard verified NEON.
+            unsafe { xor_row_neon(src, dst) }
+        }
+        // An ISA this build has no kernel for, or this host lacks: degrade
+        // to the scalar oracle, never fault.
+        #[allow(unreachable_patterns)]
+        _ => xor_row_scalar(src, dst),
+    }
+}
+
+/// `dst[i] ^= coeff · src[i]` over GF(256). `coeff = 0` is a no-op,
+/// `coeff = 1` takes the [`xor_row`] SIMD lane; general coefficients run
+/// the scalar table loop (rare by construction — see the module docs).
+pub fn mul_acc_row(isa: Isa, coeff: u8, src: &[u8], dst: &mut [u8]) {
+    match coeff {
+        0 => {}
+        1 => xor_row(isa, src, dst),
+        c => {
+            assert_eq!(src.len(), dst.len(), "gf256::mul_acc_row: length mismatch");
+            let log_c = GF_LOG[c as usize] as usize;
+            for (d, &s) in dst.iter_mut().zip(src) {
+                if s != 0 {
+                    *d ^= GF_EXP[log_c + GF_LOG[s as usize] as usize];
+                }
+            }
+        }
+    }
+}
+
+/// `row[i] *= coeff` in place (pivot normalisation). `coeff` must be
+/// nonzero — scaling a row to zero is never a valid elimination step.
+pub fn scale_row(coeff: u8, row: &mut [u8]) {
+    assert!(coeff != 0, "gf256::scale_row: zero coefficient");
+    if coeff == 1 {
+        return;
+    }
+    let log_c = GF_LOG[coeff as usize] as usize;
+    for v in row.iter_mut() {
+        if *v != 0 {
+            *v = GF_EXP[log_c + GF_LOG[*v as usize] as usize];
+        }
+    }
+}
+
+fn xor_row_scalar(src: &[u8], dst: &mut [u8]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d ^= s;
+    }
+}
+
+/// Safety: caller guarantees `src.len() == dst.len()` and AVX2 support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn xor_row_avx2(src: &[u8], dst: &mut [u8]) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let mut i = 0;
+    while i + 32 <= n {
+        let a = _mm256_loadu_si256(dst.as_ptr().add(i) as *const __m256i);
+        let b = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+        _mm256_storeu_si256(dst.as_mut_ptr().add(i) as *mut __m256i, _mm256_xor_si256(a, b));
+        i += 32;
+    }
+    while i < n {
+        *dst.get_unchecked_mut(i) ^= *src.get_unchecked(i);
+        i += 1;
+    }
+}
+
+/// Safety: caller guarantees `src.len() == dst.len()` and NEON support.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn xor_row_neon(src: &[u8], dst: &mut [u8]) {
+    use std::arch::aarch64::*;
+    let n = dst.len();
+    let mut i = 0;
+    while i + 16 <= n {
+        let a = vld1q_u8(dst.as_ptr().add(i));
+        let b = vld1q_u8(src.as_ptr().add(i));
+        vst1q_u8(dst.as_mut_ptr().add(i), veorq_u8(a, b));
+        i += 16;
+    }
+    while i < n {
+        *dst.get_unchecked_mut(i) ^= *src.get_unchecked(i);
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::SimdPolicy;
+
+    #[test]
+    fn tables_are_a_bijection() {
+        for a in 1..=255u8 {
+            assert_eq!(GF_EXP[GF_LOG[a as usize] as usize], a);
+        }
+        for i in 0..255usize {
+            assert_eq!(GF_LOG[GF_EXP[i] as usize] as usize, i);
+            assert_eq!(GF_EXP[i + 255], GF_EXP[i], "doubled table at {i}");
+        }
+        assert_eq!(mul(2, 0x80), 0x1D, "0x11D reduction (alpha^8 = 0x1D)");
+    }
+
+    #[test]
+    fn addition_is_xor_and_self_inverse() {
+        let mut rng = Rng::seed_from(10);
+        for _ in 0..1000 {
+            let a = rng.next_below(256) as u8;
+            let b = rng.next_below(256) as u8;
+            assert_eq!(add(a, b), a ^ b);
+            assert_eq!(add(add(a, b), b), a);
+        }
+    }
+
+    #[test]
+    fn multiplication_axioms_hold() {
+        // Commutativity + identity + annihilator exhaustively…
+        for a in 0..=255u8 {
+            assert_eq!(mul(a, 1), a);
+            assert_eq!(mul(1, a), a);
+            assert_eq!(mul(a, 0), 0);
+            for b in 0..=255u8 {
+                assert_eq!(mul(a, b), mul(b, a), "commutativity at ({a}, {b})");
+            }
+        }
+        // …associativity and distributivity over a random sweep.
+        let mut rng = Rng::seed_from(11);
+        for _ in 0..50_000 {
+            let a = rng.next_below(256) as u8;
+            let b = rng.next_below(256) as u8;
+            let c = rng.next_below(256) as u8;
+            assert_eq!(mul(mul(a, b), c), mul(a, mul(b, c)), "assoc ({a},{b},{c})");
+            assert_eq!(
+                mul(a, add(b, c)),
+                add(mul(a, b), mul(a, c)),
+                "distrib ({a},{b},{c})"
+            );
+        }
+    }
+
+    #[test]
+    fn every_nonzero_element_has_an_inverse() {
+        for a in 1..=255u8 {
+            let ia = inv(a);
+            assert_eq!(mul(a, ia), 1, "inv({a}) = {ia}");
+            assert_eq!(div(a, a), 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inverse of zero")]
+    fn zero_has_no_inverse() {
+        inv(0);
+    }
+
+    #[test]
+    fn row_kernels_match_the_scalar_oracle() {
+        // 1031 is odd and > one SIMD lane, so body + tail are both hit.
+        let mut rng = Rng::seed_from(12);
+        let len = 1031;
+        let src: Vec<u8> = (0..len).map(|_| rng.next_below(256) as u8).collect();
+        let base: Vec<u8> = (0..len).map(|_| rng.next_below(256) as u8).collect();
+        let detected = Isa::detect(SimdPolicy::Auto);
+        for coeff in [0u8, 1, 2, 7, 0x53, 0xFE, 0xFF] {
+            let mut scalar = base.clone();
+            let mut simd = base.clone();
+            mul_acc_row(Isa::Scalar, coeff, &src, &mut scalar);
+            mul_acc_row(detected, coeff, &src, &mut simd);
+            assert_eq!(scalar, simd, "mul_acc_row diverged at coeff {coeff}");
+            // The scalar result is also the mathematical reference.
+            for i in 0..len {
+                assert_eq!(scalar[i], base[i] ^ mul(coeff, src[i]));
+            }
+        }
+        let mut scalar = base.clone();
+        let mut simd = base.clone();
+        xor_row(Isa::Scalar, &src, &mut scalar);
+        xor_row(detected, &src, &mut simd);
+        assert_eq!(scalar, simd);
+    }
+
+    #[test]
+    fn unsupported_isa_degrades_to_scalar_not_a_fault() {
+        // A hand-constructed ISA the host may not support must still give
+        // the scalar answer (the guards re-verify the CPU probe).
+        let src = vec![0xA5u8; 97];
+        for isa in [Isa::Avx2Fma, Isa::Neon] {
+            let mut dst = vec![0x0Fu8; 97];
+            xor_row(isa, &src, &mut dst);
+            assert!(dst.iter().all(|&v| v == 0xAA));
+        }
+    }
+
+    #[test]
+    fn scale_row_matches_elementwise_mul() {
+        let mut rng = Rng::seed_from(13);
+        let row: Vec<u8> = (0..257).map(|_| rng.next_below(256) as u8).collect();
+        for coeff in [1u8, 3, 0x1D, 0xFF] {
+            let mut scaled = row.clone();
+            scale_row(coeff, &mut scaled);
+            for (s, &r) in scaled.iter().zip(&row) {
+                assert_eq!(*s, mul(coeff, r));
+            }
+        }
+    }
+}

@@ -9,7 +9,16 @@
 //! vectors, the composite aggregation, and the `GᵀG/u → I` diagnostic that
 //! justifies the unbiasedness approximation (eq. 31).
 
+pub mod code;
+pub mod gf256;
 pub mod secure_agg;
+
+pub use code::{
+    pack_byte_planes, unpack_byte_planes, Code, CodeKind, CodeSpec, DecodeScratch,
+    DenseRandomCode, RatelessCode, RecoveryMode,
+};
+
+use anyhow::Result;
 
 use crate::rng::Rng;
 use crate::tensor::Mat;
@@ -23,13 +32,25 @@ pub enum GeneratorKind {
     Rademacher,
 }
 
+impl GeneratorKind {
+    /// The lowercase name [`FromStr`](std::str::FromStr) accepts.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GeneratorKind::Normal => "normal",
+            GeneratorKind::Rademacher => "rademacher",
+        }
+    }
+}
+
 impl std::str::FromStr for GeneratorKind {
     type Err = String;
-    fn from_str(s: &str) -> Result<Self, Self::Err> {
-        match s {
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
             "normal" => Ok(GeneratorKind::Normal),
             "rademacher" => Ok(GeneratorKind::Rademacher),
-            other => Err(format!("unknown generator kind {other:?}")),
+            other => Err(format!(
+                "unknown generator kind {other:?} (expected one of normal | rademacher)"
+            )),
         }
     }
 }
@@ -78,13 +99,25 @@ pub fn sample_processed(ell: usize, ell_star: usize, rng: &mut Rng) -> Vec<bool>
 
 /// Sum local parity blocks into the composite global parity dataset
 /// (paper eq. 20): `X̌ = Σ_j X̌^(j)`, `Y̌ = Σ_j Y̌^(j)`.
-pub fn aggregate_parity(parts: &[Mat]) -> Mat {
-    assert!(!parts.is_empty(), "no parity blocks to aggregate");
+///
+/// Every part must share part 0's shape; a mismatch is reported as an
+/// error naming the offending part instead of panicking mid-`axpy`.
+pub fn aggregate_parity(parts: &[Mat]) -> Result<Mat> {
+    anyhow::ensure!(!parts.is_empty(), "no parity blocks to aggregate");
+    let (rows, cols) = (parts[0].rows(), parts[0].cols());
+    for (i, p) in parts.iter().enumerate().skip(1) {
+        anyhow::ensure!(
+            p.rows() == rows && p.cols() == cols,
+            "parity part {i} has shape [{}, {}], expected [{rows}, {cols}] like part 0",
+            p.rows(),
+            p.cols()
+        );
+    }
     let mut acc = parts[0].clone();
     for p in &parts[1..] {
         acc.axpy(1.0, p);
     }
-    acc
+    Ok(acc)
 }
 
 /// Diagnostic for the WLLN approximation of eq. (31): largest absolute
@@ -139,7 +172,16 @@ mod tests {
             "rademacher".parse::<GeneratorKind>().unwrap(),
             GeneratorKind::Rademacher
         );
-        assert!("gauss".parse::<GeneratorKind>().is_err());
+        // Case variants parse, like every other spec in the crate…
+        assert_eq!("Normal".parse::<GeneratorKind>().unwrap(), GeneratorKind::Normal);
+        assert_eq!(
+            " RADEMACHER ".parse::<GeneratorKind>().unwrap(),
+            GeneratorKind::Rademacher
+        );
+        // …and the rejection lists the valid options.
+        let e = "gauss".parse::<GeneratorKind>().unwrap_err();
+        assert!(e.contains("expected one of"), "{e}");
+        assert!(e.contains("normal") && e.contains("rademacher"), "{e}");
     }
 
     #[test]
@@ -167,8 +209,19 @@ mod tests {
     fn aggregate_parity_sums() {
         let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
         let b = Mat::from_vec(2, 2, vec![10.0, 20.0, 30.0, 40.0]);
-        let s = aggregate_parity(&[a, b]);
+        let s = aggregate_parity(&[a, b]).unwrap();
         assert_eq!(s.as_slice(), &[11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn aggregate_parity_names_the_mismatched_part() {
+        let a = Mat::zeros(2, 2);
+        let b = Mat::zeros(2, 2);
+        let c = Mat::zeros(3, 2);
+        let e = aggregate_parity(&[a, b, c]).unwrap_err().to_string();
+        assert!(e.contains("part 2"), "error must name the offending part: {e}");
+        assert!(e.contains("[3, 2]") && e.contains("[2, 2]"), "{e}");
+        assert!(aggregate_parity(&[]).is_err());
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub use parser::{parse, ConfError, Doc, Value};
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::coding::GeneratorKind;
+use crate::coding::{CodeSpec, GeneratorKind, RecoveryMode};
 use crate::sim::scenario::ScenarioSpec;
 use crate::tensor::SimdPolicy;
 use crate::topology::AsymLinkSpec;
@@ -93,6 +93,16 @@ pub struct ExperimentConfig {
     pub u_max: usize,
     /// Generator matrix distribution.
     pub generator: GeneratorKind,
+    /// Erasure code over client gradient shards (`[coding] code` /
+    /// `--code`): `dense` (the paper's random generator, default) or
+    /// `rateless[:overhead=ρ]` (systematic GF(256) fountain code). Only
+    /// consulted by the coded scheme.
+    pub code: CodeSpec,
+    /// How the coded scheme recovers from stragglers (`[coding] recovery`
+    /// / `--recovery`): `expectation` (the paper's parity-dataset
+    /// gradient, default) or `exact` (stop at the first decodable arrival
+    /// subset and reconstruct the full-fleet gradient bit-exactly).
+    pub recovery: RecoveryMode,
     /// Train set size (m_total = train points across all clients).
     pub train_size: usize,
     /// Test set size.
@@ -127,6 +137,8 @@ impl Default for ExperimentConfig {
             fleet_asym: None,
             u_max: 1536,
             generator: GeneratorKind::Normal,
+            code: CodeSpec::Dense,
+            recovery: RecoveryMode::Expectation,
             train_size: 30_000,
             test_size: 2_000,
             artifacts_dir: "artifacts".into(),
@@ -156,7 +168,7 @@ const KNOWN_KEYS: &[(&str, &[&str])] = &[
             "eval_every",
         ],
     ),
-    ("coding", &["u_max", "generator"]),
+    ("coding", &["u_max", "generator", "code", "recovery"]),
     ("runtime", &["threads", "simd"]),
     ("scenario", &["kind"]),
     ("fleet", &["tau_down", "tau_up", "p_down", "p_up"]),
@@ -269,6 +281,18 @@ impl ExperimentConfig {
                 .parse()
                 .map_err(|e: String| ConfError::Invalid(format!("[coding] generator: {e}")))?;
         }
+        if let Some(v) = cod.map.get("code") {
+            let s = v.as_str().ok_or_else(|| cod.bad("code", "string", v))?;
+            c.code = s
+                .parse()
+                .map_err(|e: String| ConfError::Invalid(format!("[coding] code: {e}")))?;
+        }
+        if let Some(v) = cod.map.get("recovery") {
+            let s = v.as_str().ok_or_else(|| cod.bad("recovery", "string", v))?;
+            c.recovery = s
+                .parse()
+                .map_err(|e: String| ConfError::Invalid(format!("[coding] recovery: {e}")))?;
+        }
 
         let rtc = sect("runtime");
         rtc.get_usize("threads", &mut c.threads)?;
@@ -336,6 +360,9 @@ impl ExperimentConfig {
                 "eval_every must be >= 1 (1 = evaluate every round)".into(),
             ));
         }
+        self.code
+            .validate()
+            .map_err(|e| ConfError::Invalid(format!("[coding] code: {e}")))?;
         self.scenario
             .validate()
             .map_err(|e| ConfError::Invalid(format!("[scenario] kind: {e}")))?;
@@ -629,6 +656,43 @@ generator = "rademacher"
         let text = "[coding]\ngenerator = \"foo\"\n";
         let e = ExperimentConfig::from_str_conf(text).unwrap_err().to_string();
         assert!(e.contains("generator"), "{e}");
+    }
+
+    #[test]
+    fn code_and_recovery_parse_defaults_and_reject_garbage() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.code, CodeSpec::Dense);
+        assert_eq!(d.recovery, RecoveryMode::Expectation);
+        let c = ExperimentConfig::from_str_conf(
+            "[coding]\ncode = \"rateless:overhead=0.75\"\nrecovery = \"exact\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.code, CodeSpec::Rateless { overhead: 0.75 });
+        assert_eq!(c.recovery, RecoveryMode::Exact);
+        // Case variants parse like the other spec strings.
+        let c = ExperimentConfig::from_str_conf(
+            "[coding]\ncode = \"Dense\"\nrecovery = \"Expectation\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.code, CodeSpec::Dense);
+        assert_eq!(c.recovery, RecoveryMode::Expectation);
+        // Unknown values name the section/key and list the options.
+        let e = ExperimentConfig::from_str_conf("[coding]\ncode = \"fountain\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[coding] code") && e.contains("expected one of"), "{e}");
+        let e = ExperimentConfig::from_str_conf("[coding]\nrecovery = \"precise\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[coding] recovery") && e.contains("expectation"), "{e}");
+        // Out-of-range overhead is rejected by validate, naming the key.
+        let e = ExperimentConfig::from_str_conf("[coding]\ncode = \"rateless:overhead=0\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("overhead"), "{e}");
+        // Mistyped value names section and key.
+        let e = ExperimentConfig::from_str_conf("[coding]\ncode = 3\n").unwrap_err().to_string();
+        assert!(e.contains("[coding]") && e.contains("code"), "{e}");
     }
 
     #[test]

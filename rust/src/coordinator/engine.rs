@@ -225,7 +225,10 @@ pub fn run(
             for (req, g) in plan.requests.iter().zip(&grad_outs) {
                 agg.axpy(req.scale, g);
             }
-            let exec = RoundExec::new(rt, &theta_prep);
+            // The exec handle also exposes the per-request gradients just
+            // computed (plan order) — exact-recovery aggregation encodes
+            // and decodes over them without re-running anything.
+            let exec = RoundExec::new(rt, &theta_prep, &grad_outs[..jobs.len()]);
             let cost = scheme.aggregate(&ctx, trace.delays(), &plan, &exec, &mut agg)?;
             (plan.requests.len(), cost)
         };

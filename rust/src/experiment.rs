@@ -23,11 +23,11 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
-use crate::coding::GeneratorKind;
+use crate::coding::{CodeSpec, GeneratorKind, RecoveryMode};
 use crate::conf::{ConfError, ExperimentConfig};
 use crate::coordinator::{engine, FedSetup, RoundObserver, TrainOutcome};
 use crate::runtime::{Runtime, RuntimeShapes};
-use crate::schemes::{Scheme, SchemeSpec};
+use crate::schemes::{CodedFedL, Scheme, SchemeSpec};
 use crate::sim::scenario::ScenarioSpec;
 use crate::tensor::SimdPolicy;
 use crate::topology::AsymLinkSpec;
@@ -150,6 +150,13 @@ impl ExperimentBuilder {
         u_max: usize,
         /// Generator matrix distribution.
         generator: GeneratorKind,
+        /// Erasure code over client gradient shards (`CodeSpec::Dense` —
+        /// the paper's generator — or `CodeSpec::Rateless`).
+        code: CodeSpec,
+        /// Straggler recovery mode for the coded scheme
+        /// (`RecoveryMode::Expectation` — the paper's — or
+        /// `RecoveryMode::Exact` for bit-exact erasure decoding).
+        recovery: RecoveryMode,
         /// Train set size.
         train_size: usize,
         /// Test set size.
@@ -231,9 +238,18 @@ impl Session {
     }
 
     /// Convenience: build and run a [`SchemeSpec`] (the CLI/TOML string
-    /// form — `SchemeSpec::parse("coded:delta=0.1")`).
+    /// form — `SchemeSpec::parse("coded:delta=0.1")`). The coded scheme
+    /// picks up the session's `[coding] code` / `recovery` configuration;
+    /// the defaults (dense, expectation) reproduce the paper's scheme
+    /// bit-for-bit.
     pub fn run_spec(&self, spec: SchemeSpec) -> Result<TrainOutcome> {
-        let mut scheme = spec.build();
+        let cfg = self.config();
+        let mut scheme: Box<dyn Scheme> = match spec {
+            SchemeSpec::Coded { delta } => Box::new(
+                CodedFedL::new(delta).with_code(cfg.code).with_recovery(cfg.recovery),
+            ),
+            other => other.build(),
+        };
         self.run(scheme.as_mut())
             .with_context(|| format!("running scheme {}", spec.label()))
     }

@@ -60,6 +60,26 @@
 //! exactly by the timeline, with the allocation optimizer seeing each
 //! client's matched-mean reciprocal surrogate.
 //!
+//! ## Erasure coding and exact recovery
+//!
+//! The coded scheme's straggler tolerance is pluggable ([`coding`]): a
+//! [`coding::Code`] treats each client's gradient block as a GF(256)
+//! source symbol and fixes a deterministic, seeded set of repair symbols
+//! — [`coding::DenseRandomCode`] (the paper's dense generator) or
+//! [`coding::RatelessCode`] (a systematic LT-style fountain code with
+//! XOR-dominant sparse rows). `[coding] code` / `--code` /
+//! [`ExperimentBuilder::code`] selects the code, and `[coding] recovery`
+//! / `--recovery` / [`ExperimentBuilder::recovery`] selects how rounds
+//! complete: `expectation` (default) keeps the paper's unbiased
+//! expectation aggregate bit-for-bit, while `exact` watches the round
+//! timeline, stops as soon as the arrived subset is decodable, and
+//! erasure-decodes the missing client gradients — reproducing the
+//! all-arrived aggregate exactly (GF(256) arithmetic has no rounding).
+//! The field kernels ([`coding::gf256`]) dispatch through the same
+//! runtime [`tensor::Isa`] as the GEMM microkernel; decode scratch lives
+//! in caller-owned buffers so warm rounds stay allocation-free. See
+//! `examples/exact_recovery.rs`.
+//!
 //! ## The stack
 //!
 //! The crate is the **Layer-3 coordinator** of a three-layer stack:
@@ -91,9 +111,9 @@
 //! reuses all per-round buffers — a warm training round performs zero
 //! heap allocations on the compute path (`tests/alloc_gate.rs`). See
 //! `rust/PERF.md` for the kernel/dispatch/threading/allocation design,
-//! the tracked `BENCH_hotpath.json` baseline (schema 3: per-op GFLOP/s +
-//! the selected ISA; `cargo bench --bench hotpath`), and how to compare
-//! runs across PRs.
+//! the tracked `BENCH_hotpath.json` baseline (schema 4: per-op GFLOP/s,
+//! codec GB/s + symbols/s, and the selected ISA; `cargo bench --bench
+//! hotpath`), and how to compare runs across PRs.
 //!
 //! Knobs: thread count comes from `[runtime] threads` / `--threads` /
 //! [`ExperimentBuilder::threads`] (0 = all cores) and never changes

@@ -15,7 +15,7 @@ use codedfedl::cli::{parse_argv, Args, Command, OptSpec};
 use codedfedl::conf::ExperimentConfig;
 use codedfedl::coordinator::{RoundEvent, RoundObserver};
 use codedfedl::metrics::GainRow;
-use codedfedl::schemes::SchemeSpec;
+use codedfedl::schemes::{CodedFedL, Scheme, SchemeSpec};
 use codedfedl::topology::FleetSpec;
 use codedfedl::ExperimentBuilder;
 
@@ -46,6 +46,18 @@ fn commands() -> Vec<Command> {
         OptSpec {
             name: "scenario",
             help: "network scenario: static | dropout[:rate=r] | fading[:depth=d,period=T] | burst[:slow=s,factor=f]",
+            default: None,
+            is_flag: false,
+        },
+        OptSpec {
+            name: "code",
+            help: "erasure code for the coded scheme: dense | rateless[:overhead=ρ]",
+            default: None,
+            is_flag: false,
+        },
+        OptSpec {
+            name: "recovery",
+            help: "coded straggler recovery: expectation (paper) | exact (erasure decode)",
             default: None,
             is_flag: false,
         },
@@ -131,6 +143,12 @@ fn builder_from(args: &Args) -> Result<ExperimentBuilder> {
     if let Some(s) = args.get("scenario") {
         b = b.scenario(s.parse().map_err(anyhow::Error::msg)?);
     }
+    if let Some(s) = args.get("code") {
+        b = b.code(s.parse().map_err(anyhow::Error::msg)?);
+    }
+    if let Some(s) = args.get("recovery") {
+        b = b.recovery(s.parse().map_err(anyhow::Error::msg)?);
+    }
     Ok(b)
 }
 
@@ -203,7 +221,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     let session = builder_from(args)?.build()?;
     let total = session.config().total_iters();
     println!("scheme: {}", spec.label());
-    let mut scheme = spec.build();
+    // The coded scheme picks up `[coding] code` / `recovery` (and the
+    // --code/--recovery flags) from the session config, like `run_spec`.
+    let cfg = session.config();
+    let mut scheme: Box<dyn Scheme> = match spec {
+        SchemeSpec::Coded { delta } => {
+            Box::new(CodedFedL::new(delta).with_code(cfg.code).with_recovery(cfg.recovery))
+        }
+        other => other.build(),
+    };
     let mut progress = ProgressPrinter { stride: (total / 20).max(1) };
     let out = session.run_observed(scheme.as_mut(), &mut progress)?;
     if let (Some(t), Some(u)) = (out.t_star, out.u_star) {

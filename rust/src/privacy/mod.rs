@@ -11,7 +11,14 @@
 //!
 //! `f` measures how concentrated the data is along its most vulnerable
 //! feature: concentrated ⇒ small `f` ⇒ larger leakage.
+//!
+//! The bound is derived for a *Gaussian* dense generator matrix. For other
+//! code/generator combinations ([`CodeSpec::Rateless`], Rademacher
+//! generators) eq. (62) does not apply, and [`report`] marks the budget as
+//! not applicable instead of printing a number the analysis does not
+//! support.
 
+use crate::coding::{CodeSpec, GeneratorKind};
 use crate::tensor::Mat;
 
 /// The feature-concentration statistic `f(X̂)` of eq. (62).
@@ -47,17 +54,52 @@ pub fn epsilon_mi_dp(xhat: &Mat, u: usize) -> f64 {
     0.5 * (1.0 + u as f64 / (f * f)).log2()
 }
 
+/// Whether the eq. (62) ε-MI-DP analysis applies to this code/generator
+/// combination: it is derived for the dense code with a Gaussian (normal)
+/// generator matrix only.
+pub fn applicable(code: &CodeSpec, generator: GeneratorKind) -> bool {
+    matches!(code, CodeSpec::Dense) && matches!(generator, GeneratorKind::Normal)
+}
+
 /// Per-client privacy report used by the `privacy_budget` example and the
 /// privacy section of EXPERIMENTS.md.
+///
+/// `epsilon_bits` is `None` when the Gaussian analysis does not cover the
+/// labelled code (see [`applicable`]); `code` records which code/generator
+/// the report was computed for.
 #[derive(Clone, Debug)]
 pub struct PrivacyReport {
     pub f_stat: f64,
-    pub epsilon_bits: f64,
+    /// ε budget in bits, or `None` when eq. (62) is not applicable.
+    pub epsilon_bits: Option<f64>,
     pub u: usize,
+    /// Label of the code/generator the report describes, e.g.
+    /// `"dense/normal"` or `"rateless(overhead=0.5)/rademacher"`.
+    pub code: String,
 }
 
-pub fn report(xhat: &Mat, u: usize) -> PrivacyReport {
-    PrivacyReport { f_stat: concentration_f(xhat), epsilon_bits: epsilon_mi_dp(xhat, u), u }
+impl PrivacyReport {
+    /// Render the ε column: the budget in bits, or an explicit
+    /// not-applicable marker for non-Gaussian codes.
+    pub fn epsilon_label(&self) -> String {
+        match self.epsilon_bits {
+            Some(e) => format!("{e:.4}"),
+            None => "n/a (analysis not applicable)".to_string(),
+        }
+    }
+}
+
+/// Build a [`PrivacyReport`] for sharing `u` parity rows of `xhat` under
+/// the given code and generator. The ε bound is only filled in for the
+/// dense/normal combination eq. (62) covers.
+pub fn report(xhat: &Mat, u: usize, code: &CodeSpec, generator: GeneratorKind) -> PrivacyReport {
+    let epsilon_bits = applicable(code, generator).then(|| epsilon_mi_dp(xhat, u));
+    PrivacyReport {
+        f_stat: concentration_f(xhat),
+        epsilon_bits,
+        u,
+        code: format!("{}/{}", code.label(), generator.as_str()),
+    }
 }
 
 #[cfg(test)]
@@ -97,6 +139,35 @@ mod tests {
         let small = Mat::from_fn(10, 4, |r, c| (((r * 7 + c * 3) % 10) as f32 + 1.0) / 10.0);
         let big = Mat::from_fn(1000, 4, |r, c| (((r * 7 + c * 3) % 10) as f32 + 1.0) / 10.0);
         assert!(epsilon_mi_dp(&big, 50) < epsilon_mi_dp(&small, 50));
+    }
+
+    #[test]
+    fn report_labels_the_code_and_gates_epsilon_on_applicability() {
+        let m = Mat::from_fn(20, 4, |r, c| ((r + c) % 5) as f32 / 5.0 + 0.1);
+
+        let gaussian = report(&m, 10, &CodeSpec::Dense, GeneratorKind::Normal);
+        assert_eq!(gaussian.code, "dense/normal");
+        let eps = gaussian.epsilon_bits.expect("dense/normal is covered by eq. 62");
+        assert!((eps - epsilon_mi_dp(&m, 10)).abs() < 1e-12);
+        assert_eq!(gaussian.epsilon_label(), format!("{eps:.4}"));
+
+        let rateless = report(&m, 10, &CodeSpec::Rateless { overhead: 0.5 }, GeneratorKind::Normal);
+        assert!(rateless.epsilon_bits.is_none());
+        assert!(rateless.code.starts_with("rateless"), "{}", rateless.code);
+        assert!(rateless.epsilon_label().contains("not applicable"));
+
+        let rademacher = report(&m, 10, &CodeSpec::Dense, GeneratorKind::Rademacher);
+        assert!(rademacher.epsilon_bits.is_none());
+        assert_eq!(rademacher.code, "dense/rademacher");
+        // f(X̂) is a property of the data alone — reported either way.
+        assert!(rademacher.f_stat > 0.0);
+    }
+
+    #[test]
+    fn applicability_covers_exactly_the_gaussian_dense_case() {
+        assert!(applicable(&CodeSpec::Dense, GeneratorKind::Normal));
+        assert!(!applicable(&CodeSpec::Dense, GeneratorKind::Rademacher));
+        assert!(!applicable(&CodeSpec::Rateless { overhead: 1.0 }, GeneratorKind::Normal));
     }
 
     #[test]

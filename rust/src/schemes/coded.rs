@@ -1,16 +1,46 @@
 //! CodedFedL (paper §III): deadline-based aggregation with a coded
 //! gradient from parity data compensating the missing stragglers.
+//!
+//! Two recovery modes (`[coding] recovery` / `--recovery`):
+//!
+//! * [`RecoveryMode::Expectation`] — the paper's scheme, unchanged: load
+//!   allocation fixes `(t*, ℓ*_j, u*)` once (§III-C), every round costs
+//!   exactly `t*`, and the real-valued parity-dataset gradient (eq. 28)
+//!   compensates deadline-missing clients *in expectation* (eq. 31). Only
+//!   the dense random generator has parity datasets, so this mode
+//!   requires `code = "dense"`; its histories are bit-identical to every
+//!   pre-trait run.
+//! * [`RecoveryMode::Exact`] — the erasure-coded upgrade the paper cannot
+//!   express. Client gradient blocks are the source symbols of a
+//!   [`crate::coding::Code`] (byte planes over GF(256)); the server walks
+//!   the round's event timeline and declares the round complete at the
+//!   first instant the received subset — arrived uplinks plus the parity
+//!   unit's repair symbols — is decodable, then reconstructs every
+//!   missing gradient **bit-exactly** and folds the full-fleet aggregate
+//!   in client-index order. When the subset is decodable the aggregate's
+//!   bits equal the all-clients-arrived fold exactly; when it is not, the
+//!   round degrades to the arrived partial sum (normalised by the rows
+//!   that actually arrived).
+//!
+//! Exact-mode decode state (packed source/repair pools, the
+//! [`DecodeScratch`] elimination workspace, the reconstruction buffer)
+//! is allocated once in `prepare` and reused every round, keeping warm
+//! rounds on the engine's 0-alloc compute-path gate.
 
 use anyhow::{Context, Result};
 
 use super::{GradRequest, RoundCost, RoundCtx, RoundExec, RoundPlan, Scheme, SchemeSetup, SchemeStats};
 use crate::allocation::{self, NodeSpec};
-use crate::coding;
+use crate::coding::{
+    self, pack_byte_planes, unpack_byte_planes, Code, CodeSpec, DecodeScratch, DenseRandomCode,
+    RecoveryMode,
+};
 use crate::coordinator::FedSetup;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
+use crate::sim::timeline::{Leg, LegEvent};
 use crate::sim::RoundDelays;
-use crate::tensor::Mat;
+use crate::tensor::{Isa, Mat};
 
 /// State fixed before training (per global mini-batch parity).
 struct CodedState {
@@ -32,61 +62,93 @@ struct CodedState {
     parity_overhead: f64,
 }
 
+/// Per-round decision recorded by exact-mode `plan_round` and consumed by
+/// `aggregate` (the engine always calls them in that order).
+#[derive(Clone, Copy, Debug, Default)]
+struct ExactRound {
+    decodable: bool,
+    repairs_avail: usize,
+}
+
+/// State fixed before training in exact-recovery mode.
+struct ExactState {
+    t_star: f64,
+    u_star: usize,
+    parity_overhead: f64,
+    code: Box<dyn Code>,
+    isa: Isa,
+    /// Bytes per source symbol: `q · classes · 4` (one packed gradient).
+    symbol_len: usize,
+    /// All-ones mask over `local_batch` rows, cloned into each request
+    /// (exact mode reconstructs *full* gradients — no §III-D subsampling).
+    full_mask: Vec<f32>,
+    /// Arrival mask, rewritten by every `plan_round`.
+    have: Vec<bool>,
+    /// Packed source pool, `clients · symbol_len` bytes.
+    src: Vec<u8>,
+    /// Packed repair pool, `code.repairs() · symbol_len` bytes.
+    repairs: Vec<u8>,
+    /// Reconstruction buffer for one decoded gradient (`[q, c]`).
+    recon: Mat,
+    scratch: DecodeScratch,
+    round: ExactRound,
+}
+
 /// The paper's scheme: load allocation fixes `(t*, ℓ*_j, u*)` once before
 /// training (§III-C); each round costs exactly `t*`; deadline-missing
 /// clients are compensated by the coded gradient over the parity data
-/// (eq. 28), keeping the aggregate a stochastic approximation of the full
-/// gradient (eq. 30).
+/// (eq. 28) — or, under `recovery = exact`, reconstructed bit-exactly
+/// from an erasure code over the gradient bytes (module docs).
 pub struct CodedFedL {
     delta: f64,
+    code: CodeSpec,
+    recovery: RecoveryMode,
     state: Option<CodedState>,
+    exact: Option<ExactState>,
 }
 
 impl CodedFedL {
-    /// `delta` is the coding redundancy `u_max / m` in `(0, 1]`.
+    /// `delta` is the coding redundancy `u_max / m` in `(0, 1]`. Defaults
+    /// to the paper's configuration: dense code, expectation recovery.
     pub fn new(delta: f64) -> Self {
-        CodedFedL { delta, state: None }
+        CodedFedL {
+            delta,
+            code: CodeSpec::Dense,
+            recovery: RecoveryMode::Expectation,
+            state: None,
+            exact: None,
+        }
+    }
+
+    /// Select the erasure code (`[coding] code` / `--code`).
+    pub fn with_code(mut self, code: CodeSpec) -> Self {
+        self.code = code;
+        self
+    }
+
+    /// Select the recovery mode (`[coding] recovery` / `--recovery`).
+    pub fn with_recovery(mut self, recovery: RecoveryMode) -> Self {
+        self.recovery = recovery;
+        self
     }
 
     pub fn delta(&self) -> f64 {
         self.delta
     }
 
+    pub fn code(&self) -> CodeSpec {
+        self.code
+    }
+
+    pub fn recovery(&self) -> RecoveryMode {
+        self.recovery
+    }
+
     fn state(&self) -> &CodedState {
         self.state.as_ref().expect("prepare() runs before any round")
     }
-}
 
-impl Scheme for CodedFedL {
-    fn label(&self) -> String {
-        format!("coded(delta={})", self.delta)
-    }
-
-    fn rng_tag(&self) -> u64 {
-        103
-    }
-
-    fn prepare(
-        &mut self,
-        setup: &FedSetup,
-        rt: &Runtime,
-        code_rng: &mut Rng,
-    ) -> Result<SchemeSetup> {
-        let state = prepare_coded(setup, rt, self.delta, code_rng)?;
-        let out = SchemeSetup {
-            client_loads: state
-                .masks
-                .iter()
-                .map(|m| m.iter().sum::<f32>() as f64)
-                .collect(),
-            server_load: state.u_star as f64,
-            clock_offset: state.parity_overhead,
-        };
-        self.state = Some(state);
-        Ok(out)
-    }
-
-    fn plan_round(&mut self, _ctx: &RoundCtx, delays: &RoundDelays) -> Result<RoundPlan> {
+    fn plan_expectation(&mut self, delays: &RoundDelays) -> Result<RoundPlan> {
         let cs = self.state();
         // Uncoded part: clients that make the deadline (eq. 29) and have a
         // non-empty processed subset contribute their masked gradient.
@@ -103,6 +165,208 @@ impl Scheme for CodedFedL {
         Ok(RoundPlan { requests, round_time: cs.t_star })
     }
 
+    /// Exact mode: walk the round's time-sorted event stream — uplink
+    /// arrivals reveal source symbols, the parity unit's completion
+    /// reveals the repair symbols — and stop at the first instant the
+    /// received subset is decodable. Decodable rounds request *every*
+    /// client in index order (the engine's fold is then the all-arrived
+    /// aggregate, which `aggregate` reproduces through the codec);
+    /// undecodable rounds request only the arrived clients.
+    fn plan_exact(&mut self, ctx: &RoundCtx) -> Result<RoundPlan> {
+        let es = self.exact.as_mut().expect("prepare() runs before any round");
+        let n = es.have.len();
+        es.have.iter_mut().for_each(|h| *h = false);
+        let mut missing = n;
+        let mut repairs_avail = 0usize;
+        let mut decodable = false;
+        let mut done_at = f64::NAN;
+        let mut last_finite = f64::NAN;
+        for ev in ctx.trace.events() {
+            let t = ev.time();
+            if !t.is_finite() {
+                // Dropped clients never deliver; they can only be decoded
+                // around, not waited for.
+                continue;
+            }
+            last_finite = if last_finite.is_nan() { t } else { last_finite.max(t) };
+            match *ev {
+                LegEvent::Client { client, leg: Leg::Uplink, .. } => {
+                    if !es.have[client] {
+                        es.have[client] = true;
+                        missing -= 1;
+                    }
+                }
+                LegEvent::ServerParity { .. } => repairs_avail = es.code.repairs(),
+                // Downlink/compute completions change nothing the decoder
+                // can see.
+                LegEvent::Client { .. } => continue,
+            }
+            if missing <= repairs_avail
+                && es.code.decodable(&es.have, repairs_avail, &mut es.scratch)
+            {
+                decodable = true;
+                done_at = t;
+                break;
+            }
+        }
+        if !decodable {
+            // The round ran its whole timeline without becoming decodable;
+            // charge the last completion (or t* on an all-dropped round).
+            done_at = if last_finite.is_finite() { last_finite } else { es.t_star };
+        }
+        es.round = ExactRound { decodable, repairs_avail };
+        let requests = (0..n)
+            .filter(|&j| decodable || es.have[j])
+            .map(|j| GradRequest { client: j, mask: es.full_mask.clone(), scale: 1.0 })
+            .collect();
+        Ok(RoundPlan { requests, round_time: done_at })
+    }
+
+    /// Exact-mode aggregation: pack the planned gradients into byte
+    /// planes, form the repair symbols, erase the sources that never
+    /// arrived, decode them back, and refold the aggregate in client-index
+    /// order. GF(256) decode is exact, so the refolded bits equal the
+    /// all-arrived fold bit-for-bit.
+    fn aggregate_exact(
+        &mut self,
+        ctx: &RoundCtx,
+        plan: &RoundPlan,
+        exec: &RoundExec,
+        agg: &mut Mat,
+    ) -> Result<RoundCost> {
+        let es = self.exact.as_mut().expect("prepare() runs before any round");
+        if !es.round.decodable {
+            // Engine already folded the arrived full-batch gradients;
+            // normalise by the rows that actually arrived (0 ⇒ the engine
+            // falls back to m and the round is a pure decay step).
+            let returned = (plan.requests.len() * ctx.setup.cfg.local_batch) as f32;
+            return Ok(RoundCost { sim_seconds: plan.round_time, returned });
+        }
+        let n = es.have.len();
+        anyhow::ensure!(
+            plan.requests.len() == n,
+            "decodable exact round planned {} of {n} clients",
+            plan.requests.len()
+        );
+        if es.have.iter().all(|&h| h) {
+            // Everyone arrived: the engine's fold already is the
+            // all-arrived aggregate; nothing to reconstruct.
+            return Ok(RoundCost { sim_seconds: plan.round_time, returned: 0.0 });
+        }
+        let grads = exec.planned_grads();
+        let ExactState { code, isa, symbol_len, have, src, repairs, recon, scratch, round, .. } =
+            es;
+        let (isa, len) = (*isa, *symbol_len);
+        // Sources: every planned gradient, packed. Encoding over the full
+        // pool reproduces the parity the fleet's distributed encode would
+        // have formed ahead of the round.
+        for (j, g) in grads.iter().enumerate() {
+            pack_byte_planes(g.as_slice(), &mut src[j * len..(j + 1) * len]);
+        }
+        for r in 0..code.repairs() {
+            let (head, tail) = repairs.split_at_mut(r * len);
+            let _ = head;
+            code.encode_repair(isa, r, src, len, &mut tail[..len]);
+        }
+        // Erase what never arrived, then decode it back bit-exactly.
+        for j in 0..n {
+            if !have[j] {
+                src[j * len..(j + 1) * len].fill(0);
+            }
+        }
+        code.decode_into(isa, have, round.repairs_avail, len, src, repairs, scratch)
+            .map_err(|e| anyhow::anyhow!("exact recovery failed: {e}"))
+            .context("decoding missing client gradients")?;
+        // Refold in client-index order — the same order the engine folded
+        // the planned gradients, so arrived entries contribute identical
+        // bits and decoded entries contribute the exact missing bits.
+        agg.as_mut_slice().fill(0.0);
+        for (j, g) in grads.iter().enumerate() {
+            if have[j] {
+                agg.axpy(1.0, g);
+            } else {
+                unpack_byte_planes(&src[j * len..(j + 1) * len], recon.as_mut_slice());
+                agg.axpy(1.0, recon);
+            }
+        }
+        Ok(RoundCost { sim_seconds: plan.round_time, returned: 0.0 })
+    }
+}
+
+impl Scheme for CodedFedL {
+    fn label(&self) -> String {
+        if self.code == CodeSpec::Dense && self.recovery == RecoveryMode::Expectation {
+            // The paper's configuration keeps its historical label (and
+            // history curves) unchanged.
+            format!("coded(delta={})", self.delta)
+        } else {
+            format!(
+                "coded(delta={},code={},recovery={})",
+                self.delta,
+                self.code.label(),
+                self.recovery
+            )
+        }
+    }
+
+    fn rng_tag(&self) -> u64 {
+        103
+    }
+
+    fn prepare(
+        &mut self,
+        setup: &FedSetup,
+        rt: &Runtime,
+        code_rng: &mut Rng,
+    ) -> Result<SchemeSetup> {
+        match self.recovery {
+            RecoveryMode::Expectation => {
+                anyhow::ensure!(
+                    self.code == CodeSpec::Dense,
+                    "{} has no expectation-mode parity datasets (set [coding] recovery = \"exact\")",
+                    self.code.label()
+                );
+                let state = prepare_coded(setup, rt, self.delta, code_rng)?;
+                let out = SchemeSetup {
+                    client_loads: state
+                        .masks
+                        .iter()
+                        .map(|m| m.iter().sum::<f32>() as f64)
+                        .collect(),
+                    server_load: state.u_star as f64,
+                    clock_offset: state.parity_overhead,
+                };
+                self.state = Some(state);
+                Ok(out)
+            }
+            RecoveryMode::Exact => {
+                self.code
+                    .validate()
+                    .map_err(|e| anyhow::anyhow!("[coding] code: {e}"))?;
+                let state = prepare_exact(setup, rt, self.delta, self.code, code_rng)?;
+                let out = SchemeSetup {
+                    // Exact mode reconstructs full gradients, so every
+                    // client computes its whole local batch.
+                    client_loads: vec![setup.cfg.local_batch as f64; setup.cfg.clients],
+                    server_load: state.u_star as f64,
+                    clock_offset: state.parity_overhead,
+                };
+                self.exact = Some(state);
+                Ok(out)
+            }
+        }
+    }
+
+    fn plan_round(&mut self, ctx: &RoundCtx, delays: &RoundDelays) -> Result<RoundPlan> {
+        match self.recovery {
+            RecoveryMode::Expectation => {
+                let _ = ctx;
+                self.plan_expectation(delays)
+            }
+            RecoveryMode::Exact => self.plan_exact(ctx),
+        }
+    }
+
     fn aggregate(
         &mut self,
         ctx: &RoundCtx,
@@ -111,6 +375,9 @@ impl Scheme for CodedFedL {
         exec: &RoundExec,
         agg: &mut Mat,
     ) -> Result<RoundCost> {
+        if self.recovery == RecoveryMode::Exact {
+            return self.aggregate_exact(ctx, plan, exec, agg);
+        }
         let cs = self.state.as_mut().expect("prepare() runs before any round");
         // Coded part (eq. 28): gradient over this step's parity, scaled by
         // 1/((1−pnr_C)·u*), whenever the MEC unit itself makes t*. The
@@ -130,31 +397,33 @@ impl Scheme for CodedFedL {
     }
 
     fn stats(&self) -> SchemeStats {
-        match &self.state {
-            Some(cs) => SchemeStats {
+        match (&self.state, &self.exact) {
+            (Some(cs), _) => SchemeStats {
                 t_star: Some(cs.t_star),
                 u_star: Some(cs.u_star),
                 parity_overhead: cs.parity_overhead,
             },
-            None => SchemeStats::default(),
+            (None, Some(es)) => SchemeStats {
+                t_star: Some(es.t_star),
+                u_star: Some(es.u_star),
+                parity_overhead: es.parity_overhead,
+            },
+            (None, None) => SchemeStats::default(),
         }
     }
 }
 
-/// Load allocation (§III-C) + weight matrices (§III-D) + per-step parity
-/// datasets (§III-B).
-fn prepare_coded(
+/// The two-step load allocation of §III-C, shared by both recovery modes:
+/// `(t*, per-client ℓ*, u*)` over the per-round mini-batch.
+fn solve_allocation(
     setup: &FedSetup,
-    rt: &Runtime,
     delta: f64,
-    rng: &mut Rng,
-) -> Result<CodedState> {
+) -> Result<(f64, Vec<usize>, usize)> {
     let cfg = &setup.cfg;
     let m = setup.m();
     let u_cap = ((delta * m as f64).round() as usize).min(cfg.u_max);
     anyhow::ensure!(u_cap > 0, "delta {delta} gives zero parity rows");
 
-    // --- two-step load allocation over the per-round mini-batch ---
     let mut nodes: Vec<NodeSpec> = setup
         .clients
         .iter()
@@ -163,7 +432,6 @@ fn prepare_coded(
     nodes.push(NodeSpec { params: setup.server, max_load: u_cap as f64 });
     let alloc = allocation::solve(&nodes, m as f64)
         .map_err(|e| anyhow::anyhow!("load allocation failed: {e}"))?;
-    let t_star = alloc.t_star;
 
     // Integer loads; pnr re-evaluated at the rounded load for exactness.
     let ell_star: Vec<usize> = alloc.loads[..cfg.clients]
@@ -171,6 +439,34 @@ fn prepare_coded(
         .map(|&l| (l.floor() as usize).min(cfg.local_batch))
         .collect();
     let u_star = (alloc.u_star().floor() as usize).clamp(1, u_cap);
+    Ok((alloc.t_star, ell_star, u_star))
+}
+
+/// One-time parity upload overhead (Fig. 4(a) inset): clients upload in
+/// parallel; the clock pays the slowest client's total upload across all
+/// `steps_per_epoch` parity sets.
+fn parity_upload_overhead(setup: &FedSetup, u_star: usize) -> f64 {
+    setup
+        .clients
+        .iter()
+        .map(|cl| {
+            setup.fleet_spec.parity_upload_secs(cl, u_star) * setup.cfg.steps_per_epoch as f64
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Load allocation (§III-C) + weight matrices (§III-D) + per-step parity
+/// datasets (§III-B) for expectation mode. The generator draws run
+/// through [`DenseRandomCode`] — the paper's dense code behind the
+/// [`Code`] trait — and are byte-for-byte the historical sequence.
+fn prepare_coded(
+    setup: &FedSetup,
+    rt: &Runtime,
+    delta: f64,
+    rng: &mut Rng,
+) -> Result<CodedState> {
+    let cfg = &setup.cfg;
+    let (t_star, ell_star, u_star) = solve_allocation(setup, delta)?;
     let pnr_server = 1.0 - setup.server.cdf(t_star, u_star as f64);
     anyhow::ensure!(
         pnr_server < 1.0,
@@ -192,12 +488,13 @@ fn prepare_coded(
     }
 
     // --- distributed encoding per global mini-batch (§V-A) ---
+    let dense = DenseRandomCode::expectation(cfg.generator, cfg.clients);
     let mut parity: Vec<(Mat, Mat)> = Vec::with_capacity(cfg.steps_per_epoch);
     for step in 0..cfg.steps_per_epoch {
         let mut xp_acc: Option<Mat> = None;
         let mut yp_acc: Option<Mat> = None;
         for j in 0..cfg.clients {
-            let g = coding::generator_matrix(cfg.generator, u_star, cfg.local_batch, rng);
+            let g = dense.generator_matrix(u_star, cfg.local_batch, rng);
             let cd = &setup.client_data[j];
             let (xp, yp) = rt
                 .encode(&g, &weights[j], &cd.xhat[step], &cd.y[step])
@@ -220,16 +517,7 @@ fn prepare_coded(
         parity.push((xp, yp));
     }
 
-    // One-time parity upload overhead (Fig. 4(a) inset): clients upload in
-    // parallel; the clock pays the slowest client's total upload across
-    // all steps_per_epoch parity sets.
-    let parity_overhead = setup
-        .clients
-        .iter()
-        .map(|cl| {
-            setup.fleet_spec.parity_upload_secs(cl, u_star) * cfg.steps_per_epoch as f64
-        })
-        .fold(0.0, f64::max);
+    let parity_overhead = parity_upload_overhead(setup, u_star);
 
     Ok(CodedState {
         t_star,
@@ -240,5 +528,48 @@ fn prepare_coded(
         parity_grad: Mat::zeros(cfg.q, cfg.classes),
         pnr_server,
         parity_overhead,
+    })
+}
+
+/// Exact-mode preparation: the same §III-C allocation (for `u*`, `t*` and
+/// the parity-unit load), then a seeded [`Code`] over the fleet's
+/// gradient shards and every persistent decode buffer, sized for the
+/// worst case so warm rounds never allocate.
+fn prepare_exact(
+    setup: &FedSetup,
+    rt: &Runtime,
+    delta: f64,
+    spec: CodeSpec,
+    rng: &mut Rng,
+) -> Result<ExactState> {
+    let cfg = &setup.cfg;
+    let (t_star, _ell_star, u_star) = solve_allocation(setup, delta)?;
+    anyhow::ensure!(cfg.clients > 0, "exact recovery needs at least one client");
+
+    // The code's coefficient rows are drawn from the scheme's private
+    // stream — reproducible per (seed, scheme tag), independent of the
+    // delay draws.
+    let code = spec.build(cfg.generator, cfg.clients, rng.next_u64());
+    let isa = rt.isa().unwrap_or(Isa::Scalar);
+    let symbol_len = cfg.q * cfg.classes * 4;
+    let n = cfg.clients;
+    let r = code.repairs();
+    let mut scratch = DecodeScratch::new();
+    scratch.reserve(r, n, symbol_len);
+
+    Ok(ExactState {
+        t_star,
+        u_star,
+        parity_overhead: parity_upload_overhead(setup, u_star),
+        code,
+        isa,
+        symbol_len,
+        full_mask: vec![1.0; cfg.local_batch],
+        have: vec![false; n],
+        src: vec![0u8; n * symbol_len],
+        repairs: vec![0u8; r * symbol_len],
+        recon: Mat::zeros(cfg.q, cfg.classes),
+        scratch,
+        round: ExactRound::default(),
     })
 }

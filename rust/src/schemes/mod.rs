@@ -134,11 +134,21 @@ pub struct RoundCost {
 pub struct RoundExec<'a> {
     rt: &'a Runtime,
     theta: &'a PreparedTheta<'a>,
+    grads: &'a [Mat],
 }
 
 impl<'a> RoundExec<'a> {
-    pub(crate) fn new(rt: &'a Runtime, theta: &'a PreparedTheta<'a>) -> Self {
-        RoundExec { rt, theta }
+    pub(crate) fn new(rt: &'a Runtime, theta: &'a PreparedTheta<'a>, grads: &'a [Mat]) -> Self {
+        RoundExec { rt, theta, grads }
+    }
+
+    /// The gradients the engine computed for this round's
+    /// [`RoundPlan::requests`], in plan order (`planned_grads()[i]` is
+    /// request `i`'s masked gradient, already scaled into `agg` but held
+    /// unscaled here). Exact-recovery aggregation reads these to encode
+    /// the arrived shards without re-running any gradient.
+    pub fn planned_grads(&self) -> &[Mat] {
+        self.grads
     }
 
     /// Masked gradient `X̂ᵀ diag(mask) (X̂θ − Y)` over arbitrary data

@@ -25,13 +25,20 @@
 //! under every built-in scenario. The scheme's `RoundPlan`/mask control
 //! path stays outside the gate (a handful of pointer-sized entries per
 //! round — see the engine module docs).
+//!
+//! And it covers the erasure-codec path (the coding PR): the full warm
+//! pack → encode → erase → decode → refold cycle of `recovery = exact`
+//! runs at zero allocations for **both** built-in codes, with every
+//! decode buffer living in the caller-owned, pre-reserved
+//! `DecodeScratch` — exactly the discipline `schemes::coded` relies on.
 
 use codedfedl::benchutil::CountingAlloc;
+use codedfedl::coding::{pack_byte_planes, unpack_byte_planes, CodeSpec, DecodeScratch};
 use codedfedl::rng::Rng;
 use codedfedl::runtime::GradJob;
 use codedfedl::sim::scenario::{Scenario, ScenarioSpec};
 use codedfedl::sim::timeline::RoundTrace;
-use codedfedl::tensor::{Mat, SimdPolicy};
+use codedfedl::tensor::{Isa, Mat, SimdPolicy};
 use codedfedl::topology::FleetView;
 use codedfedl::ExperimentBuilder;
 
@@ -170,6 +177,80 @@ fn steady_state_compute_path_allocates_zero_bytes() {
             b1 - b0,
             0,
             "scenario {}: warm rounds requested {} bytes",
+            spec.label(),
+            b1 - b0
+        );
+    }
+
+    // --- the erasure-codec path: pack every client gradient into GF(256)
+    //     byte planes, encode all repair symbols, erase a client, decode
+    //     it back and refold the fleet. Once the pools and the
+    //     DecodeScratch are reserved, a warm cycle must acquire no memory
+    //     at all, for both built-in codes and under the gated ISA. ---
+    let isa = Isa::detect(env_policy());
+    let symbol_len = q * c * 4;
+    let mut codec_agg = Mat::zeros(q, c);
+    let mut recon = Mat::zeros(q, c);
+    for spec in [CodeSpec::Dense, CodeSpec::Rateless { overhead: 0.5 }] {
+        let code = spec.build(cfg.generator, n, 0xC0DE);
+        let reps = code.repairs();
+        let mut src = vec![0u8; n * symbol_len];
+        let mut repairs = vec![0u8; reps * symbol_len];
+        let mut have = vec![true; n];
+        let mut scratch = DecodeScratch::new();
+        scratch.reserve(reps, n, symbol_len);
+
+        // One exact-recovery codec cycle over the engine's gradient slots,
+        // straggling client `erase` (single erasures are decodable by
+        // construction for both codes).
+        let mut codec_round = |erase: usize| {
+            for (j, g) in outs.iter().enumerate() {
+                pack_byte_planes(g.as_slice(), &mut src[j * symbol_len..(j + 1) * symbol_len]);
+            }
+            for r in 0..reps {
+                code.encode_repair(
+                    isa,
+                    r,
+                    &src,
+                    symbol_len,
+                    &mut repairs[r * symbol_len..(r + 1) * symbol_len],
+                );
+            }
+            for h in have.iter_mut() {
+                *h = true;
+            }
+            have[erase] = false;
+            src[erase * symbol_len..(erase + 1) * symbol_len].fill(0);
+            assert!(code.decodable(&have, reps, &mut scratch));
+            code.decode_into(isa, &have, reps, symbol_len, &mut src, &repairs, &mut scratch)
+                .unwrap();
+            codec_agg.as_mut_slice().fill(0.0);
+            for j in 0..n {
+                unpack_byte_planes(&src[j * symbol_len..(j + 1) * symbol_len], recon.as_mut_slice());
+                codec_agg.axpy(1.0, &recon);
+            }
+        };
+
+        // Two warm cycles touch every pool and scratch buffer…
+        codec_round(0);
+        codec_round(1 % n);
+
+        // …after which a cycle must acquire no memory at all.
+        let (a0, b0) = (CountingAlloc::allocations(), CountingAlloc::bytes());
+        codec_round(2 % n);
+        let (a1, b1) = (CountingAlloc::allocations(), CountingAlloc::bytes());
+        assert_eq!(
+            a1 - a0,
+            0,
+            "codec {}: warm cycle performed {} allocations ({} bytes)",
+            spec.label(),
+            a1 - a0,
+            b1 - b0
+        );
+        assert_eq!(
+            b1 - b0,
+            0,
+            "codec {}: warm cycle requested {} bytes",
             spec.label(),
             b1 - b0
         );

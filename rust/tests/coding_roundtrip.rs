@@ -1,0 +1,430 @@
+//! Erasure-coding round-trip and exact-recovery gates (the coding PR).
+//!
+//! 1. **Field axioms** — the GF(256) exp/log tables agree with a
+//!    carry-less reference multiplier on every pair, inverses invert, and
+//!    the usual axioms hold on a dense sample of triples.
+//! 2. **Kernel oracle** — the ISA-dispatched row kernels ([`gf256::xor_row`],
+//!    [`gf256::mul_acc_row`]) are bit-identical to the scalar reference
+//!    loop under both SIMD policies, on tail-exercising odd lengths.
+//! 3. **Round-trip** — both built-in codes encode and decode erasure
+//!    subsets bit-exactly, and the encoded/decoded bytes hash identically
+//!    under `SimdPolicy::Scalar` and `SimdPolicy::Auto` (GF(256) has no
+//!    rounding, so SIMD must change nothing at all).
+//! 4. **Acceptance criterion, engine-free** — folding erasure-*decoded*
+//!    gradients reproduces the all-arrived aggregate gradient bit for bit.
+//! 5. **Engine-level determinism** — `recovery = exact` training runs are
+//!    reproducible across thread counts and within each SIMD policy for
+//!    both codes, and the default dense/expectation path is bit-identical
+//!    whether the knobs are left alone or set explicitly (backward
+//!    compatibility with pre-PR histories).
+//! 6. **CI matrix entry point** — `CODEDFEDL_CODING` (`dense` |
+//!    `rateless`; default `dense`) selects the code for an end-to-end
+//!    exact-recovery training smoke, which is how
+//!    `.github/workflows/ci.yml` runs this file once per code.
+
+use codedfedl::coding::{
+    gf256, pack_byte_planes, unpack_byte_planes, Code, CodeSpec, DecodeScratch, GeneratorKind,
+    RecoveryMode,
+};
+use codedfedl::rng::Rng;
+use codedfedl::schemes::SchemeSpec;
+use codedfedl::sim::scenario::ScenarioSpec;
+use codedfedl::tensor::{Isa, Mat, SimdPolicy};
+use codedfedl::{ExperimentBuilder, TrainOutcome};
+
+/// Carry-less "Russian peasant" multiplier modulo 0x11D — the slow,
+/// obviously-correct reference the table-driven [`gf256::mul`] must match.
+fn mul_ref(a: u8, b: u8) -> u8 {
+    let (mut a, mut b, mut p) = (a as u16, b as u16, 0u16);
+    while b != 0 {
+        if b & 1 != 0 {
+            p ^= a;
+        }
+        a <<= 1;
+        if a & 0x100 != 0 {
+            a ^= 0x11D;
+        }
+        b >>= 1;
+    }
+    p as u8
+}
+
+/// FNV-1a over a byte pool — the golden-hash fingerprint the SIMD
+/// policies are compared through.
+fn pool_hash(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a over a run's bits (θ + history), matching
+/// `tests/scenario_determinism.rs`.
+fn run_hash(out: &TrainOutcome) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bits: u64| {
+        for b in bits.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for &v in out.theta.as_slice() {
+        eat(v.to_bits() as u64);
+    }
+    for p in &out.history.points {
+        eat(p.iter as u64);
+        eat(p.sim_time.to_bits());
+        eat(p.accuracy.to_bits());
+        eat(p.train_loss.to_bits());
+    }
+    h
+}
+
+fn random_pool(n: usize, len: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::seed_from(seed);
+    (0..n * len).map(|_| rng.next_below(256) as u8).collect()
+}
+
+#[test]
+fn gf256_tables_match_the_reference_multiplier_and_axioms_hold() {
+    // Exhaustive: every product agrees with the carry-less reference.
+    for a in 0..=255u8 {
+        for b in 0..=255u8 {
+            assert_eq!(gf256::mul(a, b), mul_ref(a, b), "mul({a}, {b})");
+        }
+    }
+    // Every nonzero element inverts, and division round-trips.
+    for a in 1..=255u8 {
+        assert_eq!(gf256::mul(a, gf256::inv(a)), 1, "inv({a})");
+        assert_eq!(gf256::div(gf256::mul(a, 0x53), 0x53), a);
+    }
+    // Axioms on a dense triple sample (stride keeps this fast in debug
+    // builds while still covering high/low bits and the 0x11D carries).
+    let sample: Vec<u8> = (0..=255u8).step_by(7).chain([1, 2, 254, 255]).collect();
+    for &a in &sample {
+        for &b in &sample {
+            assert_eq!(gf256::add(a, b), a ^ b);
+            assert_eq!(gf256::mul(a, b), gf256::mul(b, a));
+            for &c in &sample {
+                assert_eq!(
+                    gf256::mul(a, gf256::mul(b, c)),
+                    gf256::mul(gf256::mul(a, b), c),
+                    "associativity at ({a}, {b}, {c})"
+                );
+                assert_eq!(
+                    gf256::mul(a, gf256::add(b, c)),
+                    gf256::add(gf256::mul(a, b), gf256::mul(a, c)),
+                    "distributivity at ({a}, {b}, {c})"
+                );
+            }
+        }
+    }
+    // Identities and absorbing zero.
+    for a in 0..=255u8 {
+        assert_eq!(gf256::mul(a, 1), a);
+        assert_eq!(gf256::mul(a, 0), 0);
+        assert_eq!(gf256::add(a, a), 0, "characteristic 2");
+    }
+}
+
+#[test]
+fn row_kernels_are_bit_identical_to_the_scalar_oracle() {
+    // 1021 is odd and prime: every SIMD arm's remainder loop runs.
+    let len = 1021usize;
+    let src = random_pool(1, len, 11);
+    let dst0 = random_pool(1, len, 12);
+    for policy in [SimdPolicy::Scalar, SimdPolicy::Auto] {
+        let isa = Isa::detect(policy);
+        // xor_row vs the definition.
+        let mut dst = dst0.clone();
+        gf256::xor_row(isa, &src, &mut dst);
+        for i in 0..len {
+            assert_eq!(dst[i], dst0[i] ^ src[i], "xor_row[{i}] under {policy:?}");
+        }
+        // mul_acc_row vs the definition, across coefficient classes: the
+        // zero row (no-op), the binary row (pure XOR lane) and general
+        // table-driven coefficients.
+        for coeff in [0u8, 1, 2, 0x53, 0xFF] {
+            let mut dst = dst0.clone();
+            gf256::mul_acc_row(isa, coeff, &src, &mut dst);
+            for i in 0..len {
+                let want = dst0[i] ^ gf256::mul(coeff, src[i]);
+                assert_eq!(dst[i], want, "mul_acc_row[{i}] coeff {coeff:#x} under {policy:?}");
+            }
+        }
+    }
+    // scale_row is the in-place diagonal case.
+    let mut row = src.clone();
+    gf256::scale_row(0x1D, &mut row);
+    for i in 0..len {
+        assert_eq!(row[i], gf256::mul(0x1D, src[i]));
+    }
+}
+
+/// Encode every repair of `code` over `pool` under `isa`.
+fn encode_all(code: &dyn Code, isa: Isa, pool: &[u8], len: usize) -> Vec<u8> {
+    let mut repairs = vec![0u8; code.repairs() * len];
+    for r in 0..code.repairs() {
+        code.encode_repair(isa, r, pool, len, &mut repairs[r * len..(r + 1) * len]);
+    }
+    repairs
+}
+
+#[test]
+fn both_codes_round_trip_erasures_identically_under_every_simd_policy() {
+    // 101 is odd (tail lanes), 12 sources is big enough for interesting
+    // erasure patterns while keeping the debug-build sweep quick.
+    let (n, len) = (12usize, 101usize);
+    let truth = random_pool(n, len, 21);
+    for spec in [CodeSpec::Dense, CodeSpec::Rateless { overhead: 0.5 }] {
+        let code = spec.build(GeneratorKind::Normal, n, 0xC0DE);
+        assert_eq!(code.sources(), n);
+        assert_eq!(code.kind(), spec.kind());
+
+        // Encoded repair bytes must be one golden pool regardless of ISA.
+        let repairs_scalar = encode_all(&*code, Isa::Scalar, &truth, len);
+        let repairs_auto = encode_all(&*code, Isa::detect(SimdPolicy::Auto), &truth, len);
+        assert_eq!(
+            pool_hash(&repairs_scalar),
+            pool_hash(&repairs_auto),
+            "{}: SIMD changed the encoded bytes",
+            spec.label()
+        );
+
+        // Sweep singles (guaranteed decodable for both codes: dense rows
+        // are all-nonzero, rateless row 0 is the full-degree spike) plus
+        // every decodable pair; each decodable subset must reconstruct
+        // the truth bit-for-bit under both policies.
+        let mut scratch = DecodeScratch::new();
+        let mut patterns: Vec<Vec<usize>> = (0..n).map(|j| vec![j]).collect();
+        for a in 0..n {
+            for b in a + 1..n {
+                patterns.push(vec![a, b]);
+            }
+        }
+        let mut decoded_some_pair = false;
+        for drop in &patterns {
+            let mut have = vec![true; n];
+            for &j in drop {
+                have[j] = false;
+            }
+            if drop.len() == 1 {
+                assert!(
+                    code.decodable(&have, code.repairs(), &mut scratch),
+                    "{}: single erasure {drop:?} must be decodable",
+                    spec.label()
+                );
+            } else if !code.decodable(&have, code.repairs(), &mut scratch) {
+                continue;
+            } else {
+                decoded_some_pair = true;
+            }
+            let mut hashes = Vec::new();
+            for policy in [SimdPolicy::Scalar, SimdPolicy::Auto] {
+                let isa = Isa::detect(policy);
+                let mut pool = truth.clone();
+                for &j in drop {
+                    pool[j * len..(j + 1) * len].fill(0);
+                }
+                code.decode_into(
+                    isa,
+                    &have,
+                    code.repairs(),
+                    len,
+                    &mut pool,
+                    &repairs_scalar,
+                    &mut scratch,
+                )
+                .unwrap();
+                assert_eq!(
+                    pool,
+                    truth,
+                    "{}: decode not bit-exact (dropped {drop:?}, {policy:?})",
+                    spec.label()
+                );
+                hashes.push(pool_hash(&pool));
+            }
+            assert_eq!(hashes[0], hashes[1], "{}: SIMD changed decoded bytes", spec.label());
+        }
+        assert!(decoded_some_pair, "{}: no pair erasure decodable at all", spec.label());
+    }
+}
+
+#[test]
+fn decoding_stragglers_reproduces_the_all_arrived_aggregate_bit_for_bit() {
+    // The PR's acceptance criterion, demonstrated engine-free: pack n
+    // client gradients, encode repairs, erase a decodable subset, decode,
+    // unpack and fold — the aggregate must equal the fold of the original
+    // gradients to the bit. GF(256) decoding is exact, the byte-plane
+    // packing is a bitwise identity, and both folds run in index order,
+    // so every f32 operation sees identical operands.
+    let (n, q, c) = (10usize, 16usize, 5usize);
+    let len = q * c * 4;
+    let mut rng = Rng::seed_from(33);
+    let grads: Vec<Mat> = (0..n)
+        .map(|_| {
+            let mut g = Mat::zeros(q, c);
+            rng.fill_normal_f32(g.as_mut_slice());
+            g
+        })
+        .collect();
+
+    // The all-arrived aggregate (what a no-straggler round would fold).
+    let mut truth_agg = Mat::zeros(q, c);
+    for g in &grads {
+        truth_agg.axpy(1.0, g);
+    }
+
+    for spec in [CodeSpec::Dense, CodeSpec::Rateless { overhead: 0.5 }] {
+        let code = spec.build(GeneratorKind::Normal, n, 7);
+        let isa = Isa::detect(SimdPolicy::Auto);
+        let mut pool = vec![0u8; n * len];
+        for (j, g) in grads.iter().enumerate() {
+            pack_byte_planes(g.as_slice(), &mut pool[j * len..(j + 1) * len]);
+        }
+        let repairs = encode_all(&*code, isa, &pool, len);
+
+        // Straggle a decodable subset (fall back to a single erasure,
+        // which both codes always absorb).
+        let mut scratch = DecodeScratch::new();
+        let drop = [vec![2, 6], vec![4]]
+            .into_iter()
+            .find(|d| {
+                let mut have = vec![true; n];
+                for &j in d {
+                    have[j] = false;
+                }
+                code.decodable(&have, code.repairs(), &mut scratch)
+            })
+            .expect("even a single erasure failed the decodability check");
+        let mut have = vec![true; n];
+        for &j in &drop {
+            have[j] = false;
+            pool[j * len..(j + 1) * len].fill(0);
+        }
+        code.decode_into(isa, &have, code.repairs(), len, &mut pool, &repairs, &mut scratch)
+            .unwrap();
+
+        // Fold the decoded fleet in index order and compare bits.
+        let mut agg = Mat::zeros(q, c);
+        let mut recon = Mat::zeros(q, c);
+        for j in 0..n {
+            unpack_byte_planes(&pool[j * len..(j + 1) * len], recon.as_mut_slice());
+            agg.axpy(1.0, &recon);
+        }
+        let identical = agg
+            .as_slice()
+            .iter()
+            .zip(truth_agg.as_slice())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(
+            identical,
+            "{}: decoded aggregate differs from the all-arrived fold (dropped {drop:?})",
+            spec.label()
+        );
+    }
+}
+
+fn run_coded(
+    code: CodeSpec,
+    recovery: RecoveryMode,
+    threads: usize,
+    simd: SimdPolicy,
+) -> TrainOutcome {
+    ExperimentBuilder::preset("tiny")
+        .unwrap()
+        .epochs(2)
+        .threads(threads)
+        .simd(simd)
+        .scenario(ScenarioSpec::Dropout { rate: 0.2 })
+        .code(code)
+        .recovery(recovery)
+        .build()
+        .unwrap()
+        .run_spec(SchemeSpec::Coded { delta: 0.3 })
+        .unwrap()
+}
+
+#[test]
+fn exact_recovery_training_is_reproducible_across_threads_and_per_policy() {
+    for spec in [CodeSpec::Dense, CodeSpec::Rateless { overhead: 0.5 }] {
+        for simd in [SimdPolicy::Scalar, SimdPolicy::Auto] {
+            let one = run_hash(&run_coded(spec, RecoveryMode::Exact, 1, simd));
+            let rerun = run_hash(&run_coded(spec, RecoveryMode::Exact, 1, simd));
+            let four = run_hash(&run_coded(spec, RecoveryMode::Exact, 4, simd));
+            assert_eq!(one, rerun, "{}: exact rerun changed bits", spec.label());
+            assert_eq!(one, four, "{}: thread count changed exact bits", spec.label());
+        }
+    }
+    // The recovery knob is real: under dropout, decoding stragglers
+    // exactly walks a different trajectory than the expectation parity
+    // substitute (different aggregates *and* a different round clock).
+    let expectation = run_hash(&run_coded(
+        CodeSpec::Dense,
+        RecoveryMode::Expectation,
+        1,
+        SimdPolicy::Scalar,
+    ));
+    let exact = run_hash(&run_coded(CodeSpec::Dense, RecoveryMode::Exact, 1, SimdPolicy::Scalar));
+    assert_ne!(expectation, exact, "recovery mode left the run untouched");
+}
+
+#[test]
+fn untouched_knobs_reproduce_the_papers_dense_expectation_run_exactly() {
+    // Backward compatibility: a session that never mentions the new knobs
+    // must be bit-identical to one that sets them to their defaults —
+    // dense code, expectation recovery, the pre-PR behaviour.
+    let implicit = ExperimentBuilder::preset("tiny")
+        .unwrap()
+        .epochs(2)
+        .threads(1)
+        .simd(SimdPolicy::Scalar)
+        .build()
+        .unwrap()
+        .run_spec(SchemeSpec::Coded { delta: 0.3 })
+        .unwrap();
+    let explicit = ExperimentBuilder::preset("tiny")
+        .unwrap()
+        .epochs(2)
+        .threads(1)
+        .simd(SimdPolicy::Scalar)
+        .code(CodeSpec::Dense)
+        .recovery(RecoveryMode::Expectation)
+        .build()
+        .unwrap()
+        .run_spec(SchemeSpec::Coded { delta: 0.3 })
+        .unwrap();
+    assert_eq!(
+        run_hash(&implicit),
+        run_hash(&explicit),
+        "explicit defaults diverged from the untouched configuration"
+    );
+    assert_eq!(codedfedl::conf::ExperimentConfig::default().code, CodeSpec::Dense);
+    assert_eq!(
+        codedfedl::conf::ExperimentConfig::default().recovery,
+        RecoveryMode::Expectation
+    );
+}
+
+#[test]
+fn env_selected_code_trains_exact_recovery_end_to_end() {
+    // CI's coding matrix (`CODEDFEDL_CODING=dense|rateless`) lands here:
+    // one full exact-recovery training run under dropout with the
+    // env-selected code. Unset, the dense baseline runs.
+    let spec: CodeSpec = match std::env::var("CODEDFEDL_CODING") {
+        Ok(v) => v.parse().expect("CODEDFEDL_CODING"),
+        Err(_) => CodeSpec::Dense,
+    };
+    let out = run_coded(spec, RecoveryMode::Exact, 2, SimdPolicy::Auto);
+    assert!(out.t_star.unwrap() > 0.0, "{}: no load-allocation t*", spec.label());
+    assert!(out.u_star.unwrap() > 0, "{}: no parity rows", spec.label());
+    assert!(out.parity_overhead >= 0.0 && out.parity_overhead.is_finite());
+    assert!(
+        out.history.points.iter().all(|p| p.train_loss.is_finite()),
+        "{}: exact-recovery training produced non-finite losses",
+        spec.label()
+    );
+    assert!(!out.history.points.is_empty());
+}

@@ -211,7 +211,7 @@ fn prop_parity_aggregation_linear() {
             global.axpy(1.0, &part);
             parts.push(part);
         }
-        let agg = coding::aggregate_parity(&parts);
+        let agg = coding::aggregate_parity(&parts).unwrap();
         assert!(agg.max_abs_diff(&global) < 1e-4);
     }
 }
