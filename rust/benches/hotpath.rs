@@ -18,14 +18,16 @@
 //! it.
 
 use codedfedl::allocation::{self, NodeSpec};
-use codedfedl::benchutil::{bench_iters, load_runtime, shapes_for, BenchReport, CountingAlloc};
+use codedfedl::benchutil::{bench, bench_iters, load_runtime, shapes_for, BenchReport, CountingAlloc};
 use codedfedl::coding::{gf256, Code, CodeSpec, DecodeScratch};
 use codedfedl::conf::ExperimentConfig;
 use codedfedl::rng::Rng;
 use codedfedl::runtime::{GradJob, Runtime, RuntimeShapes};
 use codedfedl::schemes::CodedFedL;
+use codedfedl::sim::timeline::RoundTrace;
+use codedfedl::sim::KthScratch;
 use codedfedl::tensor::{Isa, Mat, SimdPolicy};
-use codedfedl::topology::FleetSpec;
+use codedfedl::topology::{FleetShards, FleetSpec, FleetView, ParticipationSampler, ParticipationSpec};
 use codedfedl::ExperimentBuilder;
 
 #[global_allocator]
@@ -407,6 +409,54 @@ fn main() -> anyhow::Result<()> {
         session.runtime().threads(),
         session.runtime().isa_name(),
     );
+
+    // --- fleet_scale: the sampled-round decision path vs fleet size N
+    //     (schema 5). One iteration is everything the engine does per
+    //     round besides gradient compute: the counter-based roster draw
+    //     (sample:k=31), the O(K) roster view reset over the sharded
+    //     ladder fleet, K-slot timeline sampling, and the streaming
+    //     top-k arrival selection. rounds/s must stay flat as N grows —
+    //     the cost tracks the roster size K, never N. Shard arenas are
+    //     materialised up front (`build_all`): lazy builds are amortised
+    //     cold-path cost by design, so the timed rounds are warm. ---
+    {
+        let base_links = spec.build_links(&clients);
+        let server = spec.build_server();
+        let loads: Vec<f64> = vec![cfg.local_batch as f64; cfg.clients];
+        let k_sample = 31usize;
+        let sel_k = 8usize;
+        for fleet_n in [31usize, 1_000, 100_000] {
+            let mut mega = spec;
+            mega.n = fleet_n;
+            let mut shards = FleetShards::ladder(mega, 0xF1EE7 ^ fleet_n as u64, 1024);
+            shards.build_all();
+            let mut sampler = ParticipationSampler::new(
+                ParticipationSpec::Sample { k: k_sample.min(fleet_n) },
+                fleet_n,
+                0xBA5E ^ fleet_n as u64,
+            );
+            let mut delay_rng = Rng::seed_from(34);
+            let mut view = FleetView::from_base(&base_links, server);
+            let mut trace = RoundTrace::with_capacity(k_sample);
+            let mut roster_loads: Vec<f64> = Vec::new();
+            let mut scratch = KthScratch::default();
+            let mut round = 0usize;
+            let shape = format!("n={fleet_n} sample:k={k_sample} top{sel_k}");
+            let (wu, it) = bench_iters(10, 2000);
+            let stats = bench(&format!("fleet_scale::round ({shape})"), wu, it, || {
+                let roster = sampler.draw(round);
+                round += 1;
+                roster_loads.clear();
+                roster_loads.extend(roster.iter().map(|&g| loads[g as usize % cfg.clients]));
+                view.reset_roster(&mut shards, roster, server);
+                trace.sample_into(&view, &roster_loads, 8.0, &mut delay_rng);
+                let (t_k, winners) =
+                    trace.delays().kth_fastest_into(sel_k, &mut scratch).unwrap();
+                std::hint::black_box((t_k, winners.len()));
+            });
+            report.record_fleet("fleet_scale::round", &shape, 1, &stats, fleet_n);
+        }
+    }
 
     let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());
     report.write_json(std::path::Path::new(&path))?;

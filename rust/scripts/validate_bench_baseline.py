@@ -4,11 +4,16 @@
 Usage: validate_bench_baseline.py <committed_baseline.json> <smoke_run.json>
 
 Checks (coverage gates, not timing gates — smoke numbers are meaningless):
-  * both documents parse and carry the current schema (4) with a
+  * both documents parse and carry the current schema (5) with a
     well-formed, non-empty record list (op/shape/ns_per_iter/threads/iters
-    plus the throughput fields — ``gflops`` (schema 3) and the schema-4
-    codec columns ``gbps``/``symbols_per_s`` — each a positive number or
+    plus the throughput fields — ``gflops`` (schema 3), the schema-4
+    codec columns ``gbps``/``symbols_per_s``, and the schema-5 fleet
+    columns ``n_clients``/``rounds_per_s`` — each a positive number or
     null);
+  * ``fleet_scale`` records carry non-null ``n_clients``/``rounds_per_s``,
+    and the committed baseline times the sampled-round decision path at
+    two or more distinct fleet sizes, so the flat-cost-vs-N claim stays
+    diffable;
   * both documents record a non-empty ``isa`` string (the GEMM microkernel
     the run resolved — ``scalar`` / ``avx2+fma`` / ``neon`` / ``pjrt``),
     so perf numbers are always attributable to an instruction set;
@@ -30,7 +35,7 @@ next to the uploaded artifact.
 import json
 import sys
 
-SCHEMA = 4
+SCHEMA = 5
 RECORD_FIELDS = {
     "op": str,
     "shape": str,
@@ -39,8 +44,11 @@ RECORD_FIELDS = {
     "iters": int,
 }
 # Per-record throughput columns: must be present, and a positive number
-# or null (null = not meaningful for that op).
-THROUGHPUT_FIELDS = ("gflops", "gbps", "symbols_per_s")
+# or null (null = not meaningful for that op). n_clients/rounds_per_s are
+# the schema-5 fleet_scale columns.
+THROUGHPUT_FIELDS = ("gflops", "gbps", "symbols_per_s", "n_clients", "rounds_per_s")
+# Ops whose records must carry the fleet columns non-null.
+FLEET_OP_PREFIX = "fleet_scale"
 # Warn when a smoke run is this much slower than the committed baseline.
 REGRESSION_WARN_RATIO = 1.20
 
@@ -65,11 +73,18 @@ def check_doc(doc, name, errors):
             errors.append(f"{name}: records[{i}].ns_per_iter must be > 0")
         for field in THROUGHPUT_FIELDS:
             if field not in rec:
-                errors.append(f"{name}: records[{i}] is missing the schema-4 {field} field")
+                errors.append(f"{name}: records[{i}] is missing the schema-{SCHEMA} {field} field")
             elif rec[field] is not None:
                 if not isinstance(rec[field], (int, float)) or rec[field] <= 0:
                     errors.append(
                         f"{name}: records[{i}].{field} is {rec[field]!r}, want > 0 or null"
+                    )
+        if str(rec.get("op", "")).startswith(FLEET_OP_PREFIX):
+            for field in ("n_clients", "rounds_per_s"):
+                if rec.get(field) is None:
+                    errors.append(
+                        f"{name}: records[{i}] is a {FLEET_OP_PREFIX} row and must carry "
+                        f"a non-null {field}"
                     )
         by_key[(rec.get("op"), rec.get("shape"))] = rec
     if len(by_key) != len(records):
@@ -117,6 +132,17 @@ def main(baseline_path, smoke_path):
         )
     for key in sorted(set(baseline_recs) - set(smoke_recs), key=str):
         errors.append(f"baseline record not covered by the smoke run: {key}")
+    fleet_ns = {
+        rec["n_clients"]
+        for rec in baseline_recs.values()
+        if str(rec.get("op", "")).startswith(FLEET_OP_PREFIX)
+        and isinstance(rec.get("n_clients"), int)
+    }
+    if len(fleet_ns) < 2:
+        errors.append(
+            "baseline: expected fleet_scale records at >= 2 distinct fleet sizes "
+            f"(rounds/s vs N), found n_clients = {sorted(fleet_ns)}"
+        )
 
     if errors:
         for e in errors:

@@ -120,6 +120,13 @@ pub struct BenchRecord {
     /// Achieved coded symbols per second, for the erasure codec's
     /// encode/decode ops (schema 4). `None` elsewhere.
     pub symbols_per_s: Option<f64>,
+    /// Simulated fleet size N behind a `fleet_scale` row (schema 5):
+    /// the per-round decision path is timed at several N to pin that its
+    /// cost depends on the roster size K, not on N. `None` elsewhere.
+    pub n_clients: Option<usize>,
+    /// Achieved decision-path rounds per second (`1e9 / ns_per_iter`),
+    /// recorded on `fleet_scale` rows (schema 5). `None` elsewhere.
+    pub rounds_per_s: Option<f64>,
 }
 
 /// Collects [`TimingStats`] into the tracked-baseline JSON the perf
@@ -171,6 +178,35 @@ impl BenchReport {
             gflops: flops.map(|f| f as f64 / stats.median_ns),
             gbps: None,
             symbols_per_s: None,
+            n_clients: None,
+            rounds_per_s: None,
+        });
+    }
+
+    /// Append a `fleet_scale` record (schema 5): one per-round
+    /// decision-path iteration over an `n_clients`-client fleet. Derives
+    /// rounds/s from the median so the baseline can assert the
+    /// throughput stays flat as N grows.
+    pub fn record_fleet(
+        &mut self,
+        op: &str,
+        shape: &str,
+        threads: usize,
+        stats: &TimingStats,
+        n_clients: usize,
+    ) {
+        self.records.push(BenchRecord {
+            op: op.to_string(),
+            shape: shape.to_string(),
+            ns_per_iter: stats.median_ns,
+            threads,
+            iters: stats.iters,
+            gflops: None,
+            gbps: None,
+            symbols_per_s: None,
+            n_clients: Some(n_clients),
+            // 1e9 ns/s ÷ ns/round ≡ rounds/s
+            rounds_per_s: Some(1e9 / stats.median_ns),
         });
     }
 
@@ -196,6 +232,8 @@ impl BenchReport {
             // bytes/ns ≡ GB/s; symbols/ns · 1e9 ≡ symbols/s
             gbps: bytes.map(|b| b as f64 / stats.median_ns),
             symbols_per_s: symbols.map(|s| s as f64 * 1e9 / stats.median_ns),
+            n_clients: None,
+            rounds_per_s: None,
         });
     }
 
@@ -259,7 +297,7 @@ impl BenchReport {
         fn esc(s: &str) -> String {
             s.replace('\\', "\\\\").replace('"', "\\\"")
         }
-        let mut out = String::from("{\n  \"schema\": 4,\n");
+        let mut out = String::from("{\n  \"schema\": 5,\n");
         out.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
         out.push_str(&format!("  \"isa\": \"{}\",\n", esc(&self.isa)));
         match self.allocs_per_round {
@@ -277,7 +315,7 @@ impl BenchReport {
             out.push_str(&format!(
                 "    {{\"op\": \"{}\", \"shape\": \"{}\", \"ns_per_iter\": {:.1}, \
                  \"threads\": {}, \"iters\": {}, \"gflops\": {}, \"gbps\": {}, \
-                 \"symbols_per_s\": {}}}{}\n",
+                 \"symbols_per_s\": {}, \"n_clients\": {}, \"rounds_per_s\": {}}}{}\n",
                 esc(&r.op),
                 esc(&r.shape),
                 r.ns_per_iter,
@@ -286,6 +324,11 @@ impl BenchReport {
                 opt(r.gflops),
                 opt(r.gbps),
                 opt(r.symbols_per_s),
+                match r.n_clients {
+                    Some(n) => n.to_string(),
+                    None => "null".to_string(),
+                },
+                opt(r.rounds_per_s),
                 if i + 1 == self.records.len() { "" } else { "," }
             ));
         }
@@ -401,8 +444,10 @@ mod tests {
         rep.record("full coded epoch", "tiny", 1, &stats);
         // codec row: 2469 bytes and 2 symbols per iteration
         rep.record_throughput("coding::encode", "dense 10+5", 1, &stats, Some(2_469), Some(2));
+        // fleet row: one sampled-round decision path over 100k clients
+        rep.record_fleet("fleet_scale::round", "n=100000 sample:k=31", 1, &stats, 100_000);
         let json = rep.to_json();
-        assert!(json.contains("\"schema\": 4"), "{json}");
+        assert!(json.contains("\"schema\": 5"), "{json}");
         assert!(json.contains("\"isa\": \"avx2+fma\""), "{json}");
         assert!(json.contains("\"op\": \"runtime::grad\""), "{json}");
         assert!(json.contains("\"shape\": \"client 200x512x10\""), "{json}");
@@ -417,10 +462,15 @@ mod tests {
         assert!(json.contains("\"symbols_per_s\": 1620089."), "{json}");
         assert!(json.contains("\"gbps\": null"), "{json}");
         assert!(json.contains("\"symbols_per_s\": null"), "{json}");
+        // fleet rows carry N and rounds/s (1e9 / 1234.5 ns); others null
+        assert!(json.contains("\"n_clients\": 100000"), "{json}");
+        assert!(json.contains("\"rounds_per_s\": 810044."), "{json}");
+        assert!(json.contains("\"n_clients\": null"), "{json}");
+        assert!(json.contains("\"rounds_per_s\": null"), "{json}");
         // unmeasured allocation gate serialises as null…
         assert!(json.contains("\"allocs_per_round\": null"), "{json}");
         // a trailing comma between consecutive records, none after the last
-        assert_eq!(json.matches("},\n").count(), 2, "{json}");
+        assert_eq!(json.matches("},\n").count(), 3, "{json}");
         // …and a measured one as the number
         rep.allocs_per_round = Some(0);
         assert!(rep.to_json().contains("\"allocs_per_round\": 0"), "{}", rep.to_json());

@@ -22,7 +22,7 @@ use std::path::Path;
 use crate::coding::{CodeSpec, GeneratorKind, RecoveryMode};
 use crate::sim::scenario::ScenarioSpec;
 use crate::tensor::SimdPolicy;
-use crate::topology::AsymLinkSpec;
+use crate::topology::{AggregationMode, AsymLinkSpec, ParticipationSpec};
 
 /// Back-compat alias for the pre-0.2 closed scheme enum. New code should
 /// use the open [`crate::schemes::Scheme`] trait (or
@@ -89,6 +89,26 @@ pub struct ExperimentConfig {
     /// load-allocation optimizer sees each client's reciprocal surrogate
     /// with matched mean communication delay.
     pub fleet_asym: Option<AsymLinkSpec>,
+    /// Simulated fleet size N (`[fleet] n` / `--fleet-n`): `None`
+    /// (default) keeps the fleet at `clients`; `Some(N ≥ clients)` runs
+    /// a ladder-tiled mega-fleet of N clients whose data shards tile the
+    /// `clients` training shards (`g % clients`). Pair with sampled
+    /// participation — per-round cost scales with the roster, not N.
+    pub fleet_n: Option<usize>,
+    /// Per-round participation (`[fleet] participation` /
+    /// `--participation`): `full` (default; bit-identical to the
+    /// pre-participation engine) or `sample:k=…` — a fresh seeded,
+    /// scheme-independent uniform sample of k clients per round.
+    pub participation: ParticipationSpec,
+    /// Clients per lazily-built fleet shard arena (`[fleet] shard_size`).
+    /// Storage granularity only: the fleet's parameters are identical
+    /// for every value.
+    pub shard_size: usize,
+    /// Gradient fold mode (`[fleet] aggregation` / `--aggregation`):
+    /// `flat` (default; the historical sequential plan-order fold) or
+    /// `hier:shard=…` — per-shard partial sums on the worker pool before
+    /// the root fold, in a documented thread-invariant order.
+    pub aggregation: AggregationMode,
     /// Max parity rows the server can process (u_max, AOT-compiled shape).
     pub u_max: usize,
     /// Generator matrix distribution.
@@ -135,6 +155,10 @@ impl Default for ExperimentConfig {
             simd: SimdPolicy::Auto,
             scenario: ScenarioSpec::Static,
             fleet_asym: None,
+            fleet_n: None,
+            participation: ParticipationSpec::Full,
+            shard_size: 1024,
+            aggregation: AggregationMode::Flat,
             u_max: 1536,
             generator: GeneratorKind::Normal,
             code: CodeSpec::Dense,
@@ -171,7 +195,10 @@ const KNOWN_KEYS: &[(&str, &[&str])] = &[
     ("coding", &["u_max", "generator", "code", "recovery"]),
     ("runtime", &["threads", "simd"]),
     ("scenario", &["kind"]),
-    ("fleet", &["tau_down", "tau_up", "p_down", "p_up"]),
+    (
+        "fleet",
+        &["tau_down", "tau_up", "p_down", "p_up", "n", "participation", "shard_size", "aggregation"],
+    ),
 ];
 
 impl ExperimentConfig {
@@ -225,6 +252,18 @@ impl ExperimentConfig {
     /// Total training iterations.
     pub fn total_iters(&self) -> usize {
         self.epochs * self.steps_per_epoch
+    }
+
+    /// Simulated fleet size N (`fleet_n`, defaulting to `clients`).
+    pub fn fleet_size(&self) -> usize {
+        self.fleet_n.unwrap_or(self.clients)
+    }
+
+    /// Whether rounds run over a sampled/mega-fleet roster instead of the
+    /// historical one-view-per-client path. `false` (the default config)
+    /// keeps the engine on the exact pre-participation code path.
+    pub fn roster_mode(&self) -> bool {
+        self.fleet_n.is_some() || self.participation != ParticipationSpec::Full
     }
 
     /// Learning rate at (0-based) epoch `e` (step decay, §V-A).
@@ -311,9 +350,11 @@ impl ExperimentConfig {
                 .map_err(|e: String| ConfError::Invalid(format!("[scenario] kind: {e}")))?;
         }
 
-        // Any [fleet] key switches the fleet to the asymmetric per-leg
-        // link model; omitted keys keep the reciprocal-equivalent
-        // defaults (unit τ multipliers, the paper's p = 0.1).
+        // Any asym [fleet] key switches the fleet to the asymmetric
+        // per-leg link model; omitted keys keep the reciprocal-equivalent
+        // defaults (unit τ multipliers, the paper's p = 0.1). The
+        // scale-out keys (n, participation, shard_size, aggregation) do
+        // NOT trigger the asym model.
         let fl = sect("fleet");
         if ["tau_down", "tau_up", "p_down", "p_up"]
             .iter()
@@ -325,6 +366,22 @@ impl ExperimentConfig {
             fl.get_f64("p_down", &mut a.p_down)?;
             fl.get_f64("p_up", &mut a.p_up)?;
             c.fleet_asym = Some(a);
+        }
+        if let Some(i) = fl.get_nonneg("n")? {
+            c.fleet_n = Some(i as usize);
+        }
+        if let Some(v) = fl.map.get("participation") {
+            let s = v.as_str().ok_or_else(|| fl.bad("participation", "string", v))?;
+            c.participation = s
+                .parse()
+                .map_err(|e: String| ConfError::Invalid(format!("[fleet] participation: {e}")))?;
+        }
+        fl.get_usize("shard_size", &mut c.shard_size)?;
+        if let Some(v) = fl.map.get("aggregation") {
+            let s = v.as_str().ok_or_else(|| fl.bad("aggregation", "string", v))?;
+            c.aggregation = s
+                .parse()
+                .map_err(|e: String| ConfError::Invalid(format!("[fleet] aggregation: {e}")))?;
         }
         c.validate()?;
         Ok(c)
@@ -368,6 +425,34 @@ impl ExperimentConfig {
             .map_err(|e| ConfError::Invalid(format!("[scenario] kind: {e}")))?;
         if let Some(a) = &self.fleet_asym {
             a.validate().map_err(|e| ConfError::Invalid(format!("[fleet] {e}")))?;
+        }
+        if let Some(n) = self.fleet_n {
+            if n < self.clients {
+                return Err(ConfError::Invalid(format!(
+                    "[fleet] n: fleet size {n} must be >= clients {} (data shards tile the \
+                     training shards)",
+                    self.clients
+                )));
+            }
+        }
+        if self.shard_size == 0 {
+            return Err(ConfError::Invalid(
+                "[fleet] shard_size: must be >= 1 client per shard".into(),
+            ));
+        }
+        self.participation
+            .validate(self.fleet_size())
+            .map_err(|e| ConfError::Invalid(format!("[fleet] participation: {e}")))?;
+        // Exact recovery packs every client's gradient as a code source
+        // symbol — it is defined over the full fixed fleet, not a
+        // per-round roster.
+        if self.recovery == RecoveryMode::Exact && self.roster_mode() {
+            return Err(ConfError::Invalid(format!(
+                "[coding] recovery: exact recovery requires the full fixed fleet — drop \
+                 [fleet] n / participation (got participation = \"{}\", fleet n = {})",
+                self.participation.label(),
+                self.fleet_size()
+            )));
         }
         Ok(())
     }
@@ -643,6 +728,103 @@ generator = "rademacher"
             .unwrap_err()
             .to_string();
         assert!(e.contains("[fleet]") && e.contains("tau_down"), "{e}");
+    }
+
+    #[test]
+    fn participation_round_trips_through_config() {
+        // Defaults: full participation over the clients-sized fleet.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.participation, ParticipationSpec::Full);
+        assert_eq!(d.fleet_n, None);
+        assert_eq!(d.fleet_size(), d.clients);
+        assert!(!d.roster_mode());
+        // Full [fleet] scale-out keys round-trip into the typed config…
+        let text = "[fleet]\nn = 100000\nparticipation = \"sample:k=31\"\n\
+                    shard_size = 4096\naggregation = \"hier:shard=8\"\n";
+        let c = ExperimentConfig::from_str_conf(text).unwrap();
+        assert_eq!(c.fleet_n, Some(100_000));
+        assert_eq!(c.participation, ParticipationSpec::Sample { k: 31 });
+        assert_eq!(c.shard_size, 4096);
+        assert_eq!(c.aggregation, AggregationMode::Hier { shard: 8 });
+        assert_eq!(c.fleet_size(), 100_000);
+        assert!(c.roster_mode());
+        // …and the scale-out keys do NOT trigger the asym link model.
+        assert!(c.fleet_asym.is_none());
+        // Sampling the base fleet needs no `n`.
+        let c = ExperimentConfig::from_str_conf("[fleet]\nparticipation = \"sample:k=4\"\n")
+            .unwrap();
+        assert_eq!(c.fleet_n, None);
+        assert!(c.roster_mode());
+    }
+
+    #[test]
+    fn participation_rejects_bad_k_naming_the_fleet_section() {
+        // k = 0 is rejected with the section name and the accepted range.
+        let e = ExperimentConfig::from_str_conf("[fleet]\nparticipation = \"sample:k=0\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[fleet] participation"), "{e}");
+        assert!(e.contains("k=0") && e.contains("expected one of 1..=30"), "{e}");
+        // k > N likewise (default fleet is 30 clients).
+        let e = ExperimentConfig::from_str_conf("[fleet]\nparticipation = \"sample:k=31\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[fleet] participation") && e.contains("k=31"), "{e}");
+        // …but k = 31 is fine once the fleet is big enough.
+        let ok = "[fleet]\nn = 1000\nparticipation = \"sample:k=31\"\n";
+        assert!(ExperimentConfig::from_str_conf(ok).is_ok());
+        // Unknown participation names list the accepted forms.
+        let e = ExperimentConfig::from_str_conf("[fleet]\nparticipation = \"partial\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("expected one of full, sample:k="), "{e}");
+        // Mistyped value names section and key.
+        let e = ExperimentConfig::from_str_conf("[fleet]\nparticipation = 3\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[fleet]") && e.contains("participation"), "{e}");
+    }
+
+    #[test]
+    fn fleet_scale_out_keys_validate() {
+        // fleet n below clients is rejected naming the constraint.
+        let e = ExperimentConfig::from_str_conf("[fleet]\nn = 7\n").unwrap_err().to_string();
+        assert!(e.contains("[fleet] n") && e.contains("clients"), "{e}");
+        // shard_size = 0 is rejected.
+        let e = ExperimentConfig::from_str_conf("[fleet]\nshard_size = 0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("shard_size"), "{e}");
+        // Bad aggregation specs are rejected naming the section.
+        let e = ExperimentConfig::from_str_conf("[fleet]\naggregation = \"tree\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[fleet] aggregation") && e.contains("expected one of"), "{e}");
+        let e = ExperimentConfig::from_str_conf("[fleet]\naggregation = \"hier:shard=0\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[fleet] aggregation"), "{e}");
+    }
+
+    #[test]
+    fn exact_recovery_rejects_rosters() {
+        // Exact recovery is defined over the full fixed fleet: sampled
+        // participation and mega-fleets are both rejected, naming both
+        // settings involved.
+        let e = ExperimentConfig::from_str_conf(
+            "[coding]\nrecovery = \"exact\"\n\n[fleet]\nparticipation = \"sample:k=4\"\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("[coding] recovery") && e.contains("participation"), "{e}");
+        let e = ExperimentConfig::from_str_conf(
+            "[coding]\nrecovery = \"exact\"\n\n[fleet]\nn = 1000\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("exact"), "{e}");
+        // Exact over the full fixed fleet stays accepted.
+        assert!(ExperimentConfig::from_str_conf("[coding]\nrecovery = \"exact\"\n").is_ok());
     }
 
     #[test]

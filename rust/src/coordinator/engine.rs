@@ -16,6 +16,22 @@
 //! [`crate::sim::RoundDelays`] view. The default `static` scenario
 //! reproduces fixed-fleet histories bit-for-bit (`tests/scenario_determinism.rs`).
 //!
+//! ## Fleet scale-out (`[fleet] n` / `participation` / `aggregation`)
+//!
+//! The engine also runs mega-fleets of N = 10^5–10^6 simulated clients:
+//! `[fleet] n` sizes the fleet (per-client links come lazily from a
+//! sharded [`FleetShards`] store — no monolithic length-N rebuild, ever)
+//! and `[fleet] participation = "sample:k=K"` draws a seeded,
+//! scheme-independent K-of-N roster per round, so per-round cost scales
+//! with K, not N. Rosters are sorted global indices; the round's
+//! [`FleetView`], delays and gradient requests all index *slots*
+//! `0..K`, and slot state tiles back to the `clients` training shards via
+//! [`RoundCtx::data_shard`]. `sample:k=N` realises the identity roster
+//! and reproduces `full` bit-for-bit; the defaults skip the roster path
+//! entirely. `[fleet] aggregation = "hier:shard=S"` folds the round's
+//! gradients through per-shard partial sums on the worker pool (see
+//! `fold_hier` below for the pinned, thread-invariant order).
+//!
 //! Per round, every participating node's gradient is *really* executed
 //! through the runtime's grad executor — the round's independent client
 //! requests go through [`Runtime::grad_batch_into`], which fans them out
@@ -46,11 +62,18 @@ use super::setup::FedSetup;
 use crate::metrics::{accuracy, History, Point};
 use crate::rng::Rng;
 use crate::runtime::{GradJob, PreparedTheta, Runtime};
-use crate::schemes::{RoundCtx, RoundExec, Scheme};
+use crate::schemes::{GradRequest, RoundCtx, RoundExec, Scheme};
 use crate::sim::scenario::{Scenario, SCENARIO_STREAM_TAG};
 use crate::sim::timeline::RoundTrace;
 use crate::tensor::Mat;
-use crate::topology::FleetView;
+use crate::topology::{
+    AggregationMode, FleetShards, FleetView, ParticipationSampler, PARTICIPATION_STREAM_TAG,
+};
+
+/// XOR'd into the experiment seed to pin the ladder-tiled mega-fleet's
+/// per-client parameter draws ([`crate::topology::FleetSpec::node_at`]) —
+/// a stream of its own, off every historical RNG split.
+const FLEET_LADDER_SEED: u64 = 0xF1EE_75CA_1E00_0001;
 
 /// Result of one scheme's run.
 #[derive(Clone, Debug)]
@@ -141,6 +164,17 @@ pub fn run(
     let mut delay_rng = root.split(tag);
     let mut code_rng = root.split(tag.wrapping_add(1000));
     let mut scenario_rng = root.split(SCENARIO_STREAM_TAG);
+    // The participation stream is appended *after* every historical split
+    // (`split` advances the root identically for any tag), so the delay,
+    // code and scenario sequences above are exactly their
+    // pre-participation bits. Like the scenario stream, the tag is
+    // scheme-independent: every scheme on a session faces the identical
+    // roster realisation. Rosters themselves are drawn from the
+    // counter-based `Rng::indexed(part_base, round)` streams, so round
+    // r's roster is a pure O(k) function of (seed, r) — independent of
+    // fleet size, shard layout and every other stream.
+    let mut part_stream = root.split(PARTICIPATION_STREAM_TAG);
+    let part_base = part_stream.next_u64();
     let mut scenario: Box<dyn Scenario> = cfg.scenario.build();
 
     let prep = scheme
@@ -156,6 +190,29 @@ pub fn run(
     let client_loads = prep.client_loads;
     let server_load = prep.server_load;
 
+    // --- fleet scale-out state (`[fleet] n` / `participation`) ---
+    // With the defaults (no mega-fleet, full participation) `roster_mode`
+    // is false and the round loop below runs the historical full-fleet
+    // path untouched. Otherwise the engine materialises each round's view
+    // over the sampled roster only: the sharded store hands out per-client
+    // links lazily (a million-node fleet never builds a monolithic Vec),
+    // and per-client prepare-time state tiles across the mega-fleet by
+    // data shard (`g % clients`).
+    let fleet_size = cfg.fleet_size();
+    let roster_mode = cfg.roster_mode();
+    cfg.participation
+        .validate(fleet_size)
+        .map_err(|e| anyhow::anyhow!("[fleet] participation: {e}"))?;
+    let mut shards = if fleet_size == n {
+        FleetShards::from_links(&setup.client_links)
+    } else {
+        let mut mega = setup.fleet_spec;
+        mega.n = fleet_size;
+        FleetShards::ladder(mega, setup.seed ^ FLEET_LADDER_SEED, cfg.shard_size)
+    };
+    let mut sampler = ParticipationSampler::new(cfg.participation, fleet_size, part_base);
+    let mut roster_loads: Vec<f64> = Vec::new();
+
     let mut theta = Mat::zeros(q, c);
     let mut history = History::new(scheme.label());
     let mut clock = prep.clock_offset;
@@ -169,22 +226,40 @@ pub fn run(
     let mut agg = Mat::zeros(q, c);
     let mut theta_panel: Vec<f32> = Vec::new();
     let mut grad_outs: Vec<Mat> = Vec::new();
+    let mut partials: Vec<Mat> = Vec::new();
     let mut view = FleetView::from_base(&setup.client_links, setup.server);
     let mut trace = RoundTrace::with_capacity(n);
     let mut eval_logits = Mat::zeros(setup.test_xhat.rows(), c);
     let mut probe_logits = Mat::zeros(cfg.local_batch, c);
+    // A scenario that never perturbs the fleet (`static`) lets full-fleet
+    // rounds skip the O(n) view reset entirely — the view built above is
+    // already this round's fleet, bit-for-bit.
+    let scenario_resets = scenario.perturbs_fleet();
 
     let total_iters = cfg.total_iters();
     for iter in 0..total_iters {
         let epoch = iter / cfg.steps_per_epoch;
         let step = iter % cfg.steps_per_epoch;
         let lr = setup.effective_lr(epoch) as f32;
-        // Scenario first (this round's fleet), then the per-leg timeline
-        // draw — same delay-RNG sequence as the one-shot sampler.
-        view.reset_from(&setup.client_links, setup.server);
+        // Roster (if sampling), then scenario (this round's fleet), then
+        // the per-leg timeline draw — on the full fixed fleet the
+        // delay-RNG sequence is exactly the one-shot sampler's.
+        let roster: Option<&[u32]> = if roster_mode {
+            let r = sampler.draw(iter);
+            roster_loads.clear();
+            roster_loads.extend(r.iter().map(|&g| client_loads[g as usize % n]));
+            view.reset_roster(&mut shards, r, setup.server);
+            Some(r)
+        } else {
+            if scenario_resets {
+                view.reset_from(&setup.client_links, setup.server);
+            }
+            None
+        };
         scenario.begin_round(iter, &mut view, &mut scenario_rng);
-        trace.sample_into(&view, &client_loads, server_load, &mut delay_rng);
-        let ctx = RoundCtx { iter, epoch, step, setup, trace: &trace };
+        let loads: &[f64] = if roster_mode { &roster_loads } else { &client_loads };
+        trace.sample_into(&view, loads, server_load, &mut delay_rng);
+        let ctx = RoundCtx { iter, epoch, step, setup, trace: &trace, roster };
 
         // --- the scheme's waiting policy decides who participates ---
         agg.as_mut_slice().fill(0.0);
@@ -194,22 +269,25 @@ pub fn run(
             // update below can mutate θ again.
             let theta_prep = rt.prepare_theta_into(&theta, &mut theta_panel)?;
             let plan = scheme.plan_round(&ctx, trace.delays())?;
+            let participants = ctx.participants();
             for req in &plan.requests {
                 anyhow::ensure!(
-                    req.client < n,
-                    "scheme {} requested client {} of {n}",
+                    req.client < participants,
+                    "scheme {} requested client {} of {participants}",
                     scheme.label(),
                     req.client
                 );
             }
             // The round's independent client gradients run as one batch
             // (parallel across the persistent worker pool) into the
-            // engine's reusable output slots…
+            // engine's reusable output slots… Each participant slot trains
+            // on its data shard (`ctx.data_shard` — the identity on the
+            // full fixed fleet, `roster[slot] % clients` under sampling).
             let jobs: Vec<GradJob> = plan
                 .requests
                 .iter()
                 .map(|req| {
-                    let cd = &setup.client_data[req.client];
+                    let cd = &setup.client_data[ctx.data_shard(req.client)];
                     GradJob { xhat: &cd.xhat[step], y: &cd.y[step], mask: &req.mask }
                 })
                 .collect();
@@ -220,10 +298,25 @@ pub fn run(
                 .with_context(|| {
                     format!("executing {} client gradients (step {step})", jobs.len())
                 })?;
-            // …and fold in plan order, fixing the aggregate's bits
-            // independently of the thread count.
-            for (req, g) in plan.requests.iter().zip(&grad_outs) {
-                agg.axpy(req.scale, g);
+            // …and fold in a pinned order, fixing the aggregate's bits
+            // independently of the thread count: flat mode folds
+            // sequentially in plan order (the historical fold), hier mode
+            // folds plan-order groups into per-shard partial sums (each
+            // written by exactly one pool thread) before the root fold.
+            match cfg.aggregation {
+                AggregationMode::Flat => {
+                    for (req, g) in plan.requests.iter().zip(&grad_outs) {
+                        agg.axpy(req.scale, g);
+                    }
+                }
+                AggregationMode::Hier { shard } => fold_hier(
+                    &mut agg,
+                    &plan.requests,
+                    &grad_outs[..jobs.len()],
+                    shard,
+                    &mut partials,
+                    rt,
+                ),
             }
             // The exec handle also exposes the per-request gradients just
             // computed (plan order) — exact-recovery aggregation encodes
@@ -278,6 +371,74 @@ pub fn run(
         parity_overhead: stats.parity_overhead,
         theta,
     })
+}
+
+/// Raw pointer to the hierarchical fold's partial-sum slots. Shared with
+/// the pool workers, which write *disjoint* group-index ranges (see
+/// [`fold_hier`]) — the disjointness is what makes the access sound.
+struct MatSlots(*mut Mat);
+
+unsafe impl Sync for MatSlots {}
+
+/// Hierarchical aggregation (`[fleet] aggregation = "hier:shard=S"`):
+/// fold the round's planned gradients through per-shard partial sums
+/// before the root fold.
+///
+/// The fold order is pinned and documented: partial `i` sums requests
+/// `i·S .. (i+1)·S` *sequentially in plan order*, and the root then folds
+/// the partials sequentially in group order. Each partial is written by
+/// exactly one thread, and neither level's order depends on how groups
+/// are partitioned across the pool — so the aggregate's bits depend only
+/// on the plan and `S`, never on the thread count
+/// (`tests/participation_determinism.rs` pins this against a hand-rolled
+/// reference). Group sums run concurrently across the native worker pool
+/// when one exists (serial fallback on PJRT); `partials` persists across
+/// rounds, so warm rounds allocate nothing here.
+fn fold_hier(
+    agg: &mut Mat,
+    requests: &[GradRequest],
+    grads: &[Mat],
+    shard: usize,
+    partials: &mut Vec<Mat>,
+    rt: &Runtime,
+) {
+    let shard = shard.max(1);
+    let groups = requests.len().div_ceil(shard);
+    while partials.len() < groups {
+        partials.push(Mat::zeros(agg.rows(), agg.cols()));
+    }
+    let fold_group = |gi: usize, out: &mut Mat| {
+        out.as_mut_slice().fill(0.0);
+        let lo = gi * shard;
+        let hi = (lo + shard).min(requests.len());
+        for (req, g) in requests[lo..hi].iter().zip(&grads[lo..hi]) {
+            out.axpy(req.scale, g);
+        }
+    };
+    let parts = rt.worker_pool().map_or(1, |p| p.threads()).min(groups);
+    if parts > 1 {
+        let pool = rt.worker_pool().expect("parts > 1 implies a native pool");
+        let live = &mut partials[..groups];
+        let slots = MatSlots(live.as_mut_ptr());
+        pool.run(parts, &|part, _scratch| {
+            // Contiguous ceil-split of the group range per part; parts own
+            // disjoint ranges, so each partial has exactly one writer.
+            let per = groups.div_ceil(parts);
+            let lo = (part * per).min(groups);
+            let hi = (lo + per).min(groups);
+            for gi in lo..hi {
+                let out = unsafe { &mut *slots.0.add(gi) };
+                fold_group(gi, out);
+            }
+        });
+    } else {
+        for (gi, out) in partials[..groups].iter_mut().enumerate() {
+            fold_group(gi, out);
+        }
+    }
+    for out in partials[..groups].iter() {
+        agg.axpy(1.0, out);
+    }
 }
 
 /// How many clients the per-iteration loss probe samples. Sampling a

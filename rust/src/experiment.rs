@@ -30,7 +30,7 @@ use crate::runtime::{Runtime, RuntimeShapes};
 use crate::schemes::{CodedFedL, Scheme, SchemeSpec};
 use crate::sim::scenario::ScenarioSpec;
 use crate::tensor::SimdPolicy;
-use crate::topology::AsymLinkSpec;
+use crate::topology::{AggregationMode, AsymLinkSpec, ParticipationSpec};
 
 /// Derive the runtime shape set from an experiment config (must agree with
 /// `python/compile/shapes.py`; the PJRT manifest check fails fast
@@ -146,6 +146,21 @@ impl ExperimentBuilder {
         /// Asymmetric downlink/uplink link overrides (`None` keeps the
         /// paper's reciprocal §V-A links).
         fleet_asym: Option<AsymLinkSpec>,
+        /// Simulated fleet size N (`None` keeps the fleet at `clients`;
+        /// `Some(N ≥ clients)` runs the ladder-tiled mega-fleet whose
+        /// data shards tile the training shards).
+        fleet_n: Option<usize>,
+        /// Per-round participation (`ParticipationSpec::Full` — the
+        /// default, bit-identical to the pre-participation engine — or
+        /// `Sample { k }` for seeded scheme-independent k-of-N rosters).
+        participation: ParticipationSpec,
+        /// Clients per lazily-built fleet shard arena (storage
+        /// granularity only; the fleet is identical for every value).
+        shard_size: usize,
+        /// Gradient fold mode (`AggregationMode::Flat` — the historical
+        /// sequential fold — or `Hier` for worker-pool per-shard partial
+        /// sums in a documented thread-invariant order).
+        aggregation: AggregationMode,
         /// Max parity rows (AOT-compiled shape).
         u_max: usize,
         /// Generator matrix distribution.

@@ -50,6 +50,30 @@ fn commands() -> Vec<Command> {
             is_flag: false,
         },
         OptSpec {
+            name: "fleet-n",
+            help: "simulated fleet size N (>= clients; data shards tile the training shards)",
+            default: None,
+            is_flag: false,
+        },
+        OptSpec {
+            name: "participation",
+            help: "per-round participation: full | sample:k=K (seeded k-of-N roster)",
+            default: None,
+            is_flag: false,
+        },
+        OptSpec {
+            name: "shard-size",
+            help: "clients per lazily-built fleet shard arena (storage granularity only)",
+            default: None,
+            is_flag: false,
+        },
+        OptSpec {
+            name: "aggregation",
+            help: "gradient fold: flat (sequential) | hier:shard=S (per-shard partial sums)",
+            default: None,
+            is_flag: false,
+        },
+        OptSpec {
             name: "code",
             help: "erasure code for the coded scheme: dense | rateless[:overhead=ρ]",
             default: None,
@@ -142,6 +166,18 @@ fn builder_from(args: &Args) -> Result<ExperimentBuilder> {
     }
     if let Some(s) = args.get("scenario") {
         b = b.scenario(s.parse().map_err(anyhow::Error::msg)?);
+    }
+    if let Some(n) = args.parse_usize("fleet-n").map_err(anyhow::Error::msg)? {
+        b = b.fleet_n(Some(n));
+    }
+    if let Some(s) = args.get("participation") {
+        b = b.participation(s.parse().map_err(anyhow::Error::msg)?);
+    }
+    if let Some(s) = args.parse_usize("shard-size").map_err(anyhow::Error::msg)? {
+        b = b.shard_size(s);
+    }
+    if let Some(s) = args.get("aggregation") {
+        b = b.aggregation(s.parse().map_err(anyhow::Error::msg)?);
     }
     if let Some(s) = args.get("code") {
         b = b.code(s.parse().map_err(anyhow::Error::msg)?);

@@ -50,6 +50,22 @@ impl Rng {
         Rng::seed_from(base)
     }
 
+    /// Counter-based (indexable) stream derivation: the generator for
+    /// `(base, index)` is a pure function of its arguments — no parent
+    /// state is consumed — so any index's stream can be constructed
+    /// directly without replaying the indices before it. Used for
+    /// per-round participation draws, where round `r`'s roster must be
+    /// reachable in O(1) at any fleet size.
+    ///
+    /// The mixing is one SplitMix64 step over `base` xor a
+    /// Weyl-multiplied `index` (the same odd constant [`Rng::split`]
+    /// uses), feeding the usual four-draw seeding, so distinct indices
+    /// land in statistically independent states.
+    pub fn indexed(base: u64, index: u64) -> Rng {
+        let mut sm = base ^ index.wrapping_mul(0xA24B_AED4_963E_E407);
+        Rng::seed_from(splitmix64(&mut sm))
+    }
+
     /// Next raw 64 random bits.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
@@ -136,6 +152,27 @@ mod tests {
         let mut d1 = root1.split(12);
         let matches = (0..64).filter(|_| c1.next_u64() == d1.next_u64()).count();
         assert!(matches < 2);
+    }
+
+    #[test]
+    fn indexed_streams_are_pure_functions_of_base_and_index() {
+        // Same (base, index) ⇒ identical stream, regardless of what else
+        // was constructed in between (no hidden parent state).
+        let mut a = Rng::indexed(0xFEED, 17);
+        let _unrelated = Rng::indexed(0xFEED, 3);
+        let mut b = Rng::indexed(0xFEED, 17);
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // Distinct indices (and distinct bases) decorrelate.
+        let mut c = Rng::indexed(0xFEED, 18);
+        let mut d = Rng::indexed(0xFEED ^ 1, 17);
+        let mut e = Rng::indexed(0xFEED, 17);
+        let same_idx = (0..64).filter(|_| e.next_u64() == c.next_u64()).count();
+        assert!(same_idx < 2);
+        let mut f = Rng::indexed(0xFEED, 17);
+        let same_base = (0..64).filter(|_| f.next_u64() == d.next_u64()).count();
+        assert!(same_base < 2);
     }
 
     #[test]

@@ -148,19 +148,29 @@ impl CodedFedL {
         self.state.as_ref().expect("prepare() runs before any round")
     }
 
-    fn plan_expectation(&mut self, delays: &RoundDelays) -> Result<RoundPlan> {
+    fn plan_expectation(&mut self, ctx: &RoundCtx, delays: &RoundDelays) -> Result<RoundPlan> {
         let cs = self.state();
         // Uncoded part: clients that make the deadline (eq. 29) and have a
         // non-empty processed subset contribute their masked gradient.
         // Scenario-dropped clients carry infinite delays, so they simply
         // miss t* and the parity gradient compensates — exactly the
         // paper's straggler story. `arrivals_iter` keeps this per-round
-        // decision free of the old `Vec<bool>` allocation.
+        // decision free of the old `Vec<bool>` allocation. Per-client
+        // state (the §III-D processed-subset masks) is indexed through
+        // `ctx.data_shard`, so sampled rosters over a mega-fleet reuse the
+        // mask of the data shard each slot trains on (identity on the
+        // full fixed fleet).
         let requests = delays
             .arrivals_iter(cs.t_star)
             .enumerate()
-            .filter(|&(j, arrived)| arrived && cs.masks[j].iter().any(|&v| v > 0.0))
-            .map(|(j, _)| GradRequest { client: j, mask: cs.masks[j].clone(), scale: 1.0 })
+            .filter(|&(j, arrived)| {
+                arrived && cs.masks[ctx.data_shard(j)].iter().any(|&v| v > 0.0)
+            })
+            .map(|(j, _)| GradRequest {
+                client: j,
+                mask: cs.masks[ctx.data_shard(j)].clone(),
+                scale: 1.0,
+            })
             .collect();
         Ok(RoundPlan { requests, round_time: cs.t_star })
     }
@@ -173,6 +183,13 @@ impl CodedFedL {
     /// aggregate, which `aggregate` reproduces through the codec);
     /// undecodable rounds request only the arrived clients.
     fn plan_exact(&mut self, ctx: &RoundCtx) -> Result<RoundPlan> {
+        // Config validation rejects `[fleet]` rosters with exact recovery
+        // (the code is sized over the fixed fleet); this is the defensive
+        // backstop for schemes constructed outside the builder.
+        anyhow::ensure!(
+            ctx.roster.is_none(),
+            "exact recovery requires the full fixed fleet (got a sampled participation roster)"
+        );
         let es = self.exact.as_mut().expect("prepare() runs before any round");
         let n = es.have.len();
         es.have.iter_mut().for_each(|h| *h = false);
@@ -359,10 +376,7 @@ impl Scheme for CodedFedL {
 
     fn plan_round(&mut self, ctx: &RoundCtx, delays: &RoundDelays) -> Result<RoundPlan> {
         match self.recovery {
-            RecoveryMode::Expectation => {
-                let _ = ctx;
-                self.plan_expectation(delays)
-            }
+            RecoveryMode::Expectation => self.plan_expectation(ctx, delays),
             RecoveryMode::Exact => self.plan_exact(ctx),
         }
     }

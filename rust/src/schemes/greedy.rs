@@ -3,23 +3,26 @@
 use anyhow::Result;
 
 use super::{GradRequest, RoundCost, RoundCtx, RoundExec, RoundPlan, Scheme};
-use crate::sim::RoundDelays;
+use crate::sim::{KthScratch, RoundDelays};
 use crate::tensor::Mat;
 
 /// The paper's straggler-dropping baseline (§V-A): each round the server
 /// keeps only the fastest `k = (1−ψ)n` updates, so the round costs the
 /// k-th order statistic and the stragglers' gradients are *discarded* —
 /// which is what starves whole classes under non-IID sharding (§V-B).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct GreedyUncoded {
     psi: f64,
+    /// Reused top-k selection buffers — keeps the warm round loop free of
+    /// selection allocations at any fleet size.
+    scratch: KthScratch,
 }
 
 impl GreedyUncoded {
     /// `psi` is the drop fraction in `[0, 1)`; `psi = 0` degenerates to
     /// naive uncoded (same aggregate, same per-round winners set).
     pub fn new(psi: f64) -> Self {
-        GreedyUncoded { psi }
+        GreedyUncoded { psi, scratch: KthScratch::default() }
     }
 
     pub fn psi(&self) -> f64 {
@@ -51,20 +54,24 @@ impl Scheme for GreedyUncoded {
         if present == 0 {
             return Ok(RoundPlan { requests: Vec::new(), round_time: 0.0 });
         }
-        let (t_k, mut winners) = delays
-            .kth_fastest(self.k(cfg.clients).min(present))
+        // k is a fraction of this round's participant slots (== n on the
+        // full fixed fleet); the streaming selection touches each arrival
+        // once instead of sorting the whole fleet.
+        let (t_k, winners) = delays
+            .kth_fastest_into(self.k(ctx.participants()).min(present), &mut self.scratch)
             .map_err(anyhow::Error::msg)?;
-        // Execute in client order, not arrival order: the aggregate's f32
-        // rounding then depends only on the winner *set*, making
-        // greedy(ψ=0) bit-identical to naive on the same setup. This is a
-        // deliberate low-bit deviation from the pre-trait trainer, which
-        // summed winners in arrival order; delay draws, winner sets and
-        // round times are unchanged.
-        winners.sort_unstable();
-        let requests = winners
-            .into_iter()
-            .map(|j| GradRequest::full(j, cfg.local_batch))
+        // The selection returns winners sorted by arrival; requests run in
+        // client order, not arrival order: the aggregate's f32 rounding
+        // then depends only on the winner *set*, making greedy(ψ=0)
+        // bit-identical to naive on the same setup. This is a deliberate
+        // low-bit deviation from the pre-trait trainer, which summed
+        // winners in arrival order; delay draws, winner sets and round
+        // times are unchanged.
+        let mut requests: Vec<GradRequest> = winners
+            .iter()
+            .map(|&j| GradRequest::full(j, cfg.local_batch))
             .collect();
+        requests.sort_unstable_by_key(|r| r.client);
         Ok(RoundPlan { requests, round_time: t_k })
     }
 

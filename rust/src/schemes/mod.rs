@@ -85,12 +85,48 @@ pub struct RoundCtx<'a> {
     /// [`RoundDelays`] passed alongside the hooks is the same trace's
     /// totals view; schemes that only wait on totals can ignore this.
     pub trace: &'a RoundTrace,
+    /// This round's participation roster: `None` when the full fixed
+    /// fleet participates (slot index == global client index — the
+    /// historical behaviour), `Some(roster)` when the engine sampled a
+    /// k-of-N roster. `roster[slot]` is the global fleet index of the
+    /// client in delay/request slot `slot`; rosters are sorted ascending
+    /// and duplicate-free. Schemes index per-client state through
+    /// [`RoundCtx::data_shard`] so they stay correct under sampling.
+    pub roster: Option<&'a [u32]>,
+}
+
+impl RoundCtx<'_> {
+    /// Number of clients participating this round (the slot count —
+    /// `delays.client_t.len()` sees the same value).
+    pub fn participants(&self) -> usize {
+        match self.roster {
+            Some(r) => r.len(),
+            None => self.setup.cfg.clients,
+        }
+    }
+
+    /// Global fleet index of the client in delay/request slot `slot`.
+    pub fn fleet_index(&self, slot: usize) -> usize {
+        match self.roster {
+            Some(r) => r[slot] as usize,
+            None => slot,
+        }
+    }
+
+    /// Training data shard backing slot `slot`. Mega-fleets tile the
+    /// `cfg.clients` data shards across the N simulated nodes
+    /// (`shard = fleet_index % cfg.clients`), so per-shard state built at
+    /// prepare time (masks, loads) stays valid for any roster.
+    pub fn data_shard(&self, slot: usize) -> usize {
+        self.fleet_index(slot) % self.setup.cfg.clients
+    }
 }
 
 /// One client gradient the engine executes on the scheme's behalf.
 #[derive(Clone, Debug)]
 pub struct GradRequest {
-    /// Client index in `0..cfg.clients`.
+    /// Participant slot index in `0..ctx.participants()` (equal to the
+    /// global client index when the full fleet participates).
     pub client: usize,
     /// Per-point mask over the client's `local_batch` rows (1.0 = include).
     pub mask: Vec<f32>,

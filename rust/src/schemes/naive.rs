@@ -34,7 +34,9 @@ impl Scheme for NaiveUncoded {
 
     fn plan_round(&mut self, ctx: &RoundCtx, delays: &RoundDelays) -> Result<RoundPlan> {
         let cfg = &ctx.setup.cfg;
-        let requests = (0..cfg.clients)
+        // Iterate the round's participant slots (== `cfg.clients` on the
+        // full fixed fleet, k under sampled participation).
+        let requests = (0..ctx.participants())
             .filter(|&j| delays.is_present(j))
             .map(|j| GradRequest::full(j, cfg.local_batch))
             .collect();

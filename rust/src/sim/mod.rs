@@ -94,20 +94,100 @@ impl RoundDelays {
     /// uncoded): the k-th order statistic. Also returns the indices of
     /// those clients, sorted fastest-first.
     ///
+    /// Allocates fresh scratch and a fresh winners `Vec` per call — on
+    /// per-round paths prefer [`RoundDelays::kth_fastest_into`] with a
+    /// round-persistent [`KthScratch`].
+    pub fn kth_fastest(&self, k: usize) -> Result<(f64, Vec<usize>), String> {
+        let mut scratch = KthScratch::default();
+        let (t, winners) = self.kth_fastest_into(k, &mut scratch)?;
+        Ok((t, winners.to_vec()))
+    }
+
+    /// [`RoundDelays::kth_fastest`] as a streaming O(n log k) scan into
+    /// caller-owned scratch: a bounded max-heap of the `k` fastest
+    /// `(delay, index)` pairs replaces the full-fleet index sort, so the
+    /// greedy selection path neither allocates once warm nor pays
+    /// O(n log n) on fleets where k ≪ n. The returned winners slice
+    /// borrows the scratch and is sorted fastest-first, ties broken by
+    /// client index — bit-identical to the stable full sort this
+    /// replaces.
+    ///
     /// Total order via [`f64::total_cmp`], so a NaN delay (a buggy custom
     /// delay model, say) sorts last instead of panicking mid-run; an
     /// out-of-range `k` is a recoverable `Err`, not a panic, because `k`
     /// may come straight from user-facing scheme parameters.
-    pub fn kth_fastest(&self, k: usize) -> Result<(f64, Vec<usize>), String> {
+    pub fn kth_fastest_into<'s>(
+        &self,
+        k: usize,
+        scratch: &'s mut KthScratch,
+    ) -> Result<(f64, &'s [usize]), String> {
         let n = self.client_t.len();
         if k == 0 || k > n {
             return Err(format!("kth_fastest: k={k} out of range 1..={n}"));
         }
-        let mut idx: Vec<usize> = (0..n).collect();
-        idx.sort_by(|&a, &b| self.client_t[a].total_cmp(&self.client_t[b]));
-        let winners = idx[..k].to_vec();
-        Ok((self.client_t[winners[k - 1]], winners))
+        // `a` is strictly worse (slower, or same delay at a higher index)
+        // than `b` — the heap keeps the worst of the current k at its root.
+        fn worse(a: (f64, usize), b: (f64, usize)) -> bool {
+            match a.0.total_cmp(&b.0) {
+                std::cmp::Ordering::Equal => a.1 > b.1,
+                ord => ord == std::cmp::Ordering::Greater,
+            }
+        }
+        let KthScratch { heap, winners } = scratch;
+        heap.clear();
+        heap.reserve(k);
+        for (j, &t) in self.client_t.iter().enumerate() {
+            if heap.len() < k {
+                // Grow phase: sift the new entry up.
+                heap.push((t, j));
+                let mut i = heap.len() - 1;
+                while i > 0 {
+                    let parent = (i - 1) / 2;
+                    if !worse(heap[i], heap[parent]) {
+                        break;
+                    }
+                    heap.swap(i, parent);
+                    i = parent;
+                }
+            } else if worse(heap[0], (t, j)) {
+                // Candidate beats the current worst: replace the root and
+                // sift it down.
+                heap[0] = (t, j);
+                let mut i = 0;
+                loop {
+                    let (l, r) = (2 * i + 1, 2 * i + 2);
+                    let mut m = i;
+                    if l < k && worse(heap[l], heap[m]) {
+                        m = l;
+                    }
+                    if r < k && worse(heap[r], heap[m]) {
+                        m = r;
+                    }
+                    if m == i {
+                        break;
+                    }
+                    heap.swap(i, m);
+                    i = m;
+                }
+            }
+        }
+        // Keys are unique by index, so the unstable in-place sort (no
+        // allocation) reproduces the stable order exactly.
+        heap.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        winners.clear();
+        winners.extend(heap.iter().map(|&(_, j)| j));
+        Ok((heap[k - 1].0, winners.as_slice()))
     }
+}
+
+/// Caller-owned scratch for [`RoundDelays::kth_fastest_into`]: the bounded
+/// max-heap of candidate `(delay, index)` pairs plus the winners buffer.
+/// Hold one per scheme (or per selection site) and reuse it every round —
+/// after the first call at a given `k` no further allocations occur.
+#[derive(Clone, Debug, Default)]
+pub struct KthScratch {
+    heap: Vec<(f64, usize)>,
+    winners: Vec<usize>,
 }
 
 /// Samples rounds for a fixed fleet + per-node loads. Borrows the fleet
@@ -258,6 +338,37 @@ mod tests {
         assert!(d.kth_fastest(2).is_err());
         let msg = d.kth_fastest(2).unwrap_err();
         assert!(msg.contains("k=2"), "{msg}");
+    }
+
+    #[test]
+    fn kth_fastest_into_matches_wrapper_for_every_k_and_reuses_scratch() {
+        // Random delays with deliberate ties: the streaming heap must
+        // reproduce the stable full sort's winners exactly, for every k,
+        // out of one reused scratch.
+        let mut rng = Rng::seed_from(77);
+        let mut scratch = KthScratch::default();
+        for trial in 0..20 {
+            let n = 1 + (trial % 13);
+            let client_t: Vec<f64> = (0..n)
+                .map(|_| (rng.next_below(5) as f64) * 0.5)
+                .collect();
+            let d = RoundDelays { client_t, server_t: 0.0 };
+            for k in 1..=n {
+                let (t_ref, w_ref) = d.kth_fastest(k).unwrap();
+                let (t, w) = d.kth_fastest_into(k, &mut scratch).unwrap();
+                assert_eq!(t.to_bits(), t_ref.to_bits(), "n={n} k={k}");
+                assert_eq!(w, &w_ref[..], "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn kth_fastest_into_breaks_ties_by_client_index() {
+        let d = RoundDelays { client_t: vec![1.0, 1.0, 0.5, 1.0], server_t: 0.0 };
+        let mut scratch = KthScratch::default();
+        let (t, w) = d.kth_fastest_into(3, &mut scratch).unwrap();
+        assert_eq!(t, 1.0);
+        assert_eq!(w, &[2, 0, 1]);
     }
 
     #[test]

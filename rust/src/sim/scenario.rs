@@ -61,6 +61,16 @@ pub trait Scenario {
 
     /// Modulate `view` for round `round` (0-based global iteration).
     fn begin_round(&mut self, round: usize, view: &mut FleetView, rng: &mut Rng);
+
+    /// Whether [`Scenario::begin_round`] may mutate the view at all.
+    /// Defaults to `true`; a scenario that provably never touches the
+    /// view (the static fleet) returns `false`, letting the engine skip
+    /// the per-round view reset entirely — the reset exists only to undo
+    /// modulation, so skipping it for a non-perturbing scenario is
+    /// trivially bit-identical.
+    fn perturbs_fleet(&self) -> bool {
+        true
+    }
 }
 
 /// The fixed fleet of the paper (§V-A): no modulation, no RNG use.
@@ -73,6 +83,10 @@ impl Scenario for StaticScenario {
     }
 
     fn begin_round(&mut self, _round: usize, _view: &mut FleetView, _rng: &mut Rng) {}
+
+    fn perturbs_fleet(&self) -> bool {
+        false
+    }
 }
 
 /// Per-round client unavailability: each client drops with probability
@@ -367,6 +381,15 @@ mod tests {
         ] {
             assert_eq!(spec.build().label(), spec.label());
         }
+    }
+
+    #[test]
+    fn only_static_reports_a_non_perturbing_fleet() {
+        assert!(!StaticScenario.perturbs_fleet());
+        assert!(DropoutScenario { rate: 0.1 }.perturbs_fleet());
+        assert!(FadingScenario { depth: 0.5, period: 8.0 }.perturbs_fleet());
+        assert!(BurstScenario { slow: 0.1, factor: 4.0 }.perturbs_fleet());
+        assert!(!ScenarioSpec::Static.build().perturbs_fleet());
     }
 
     #[test]

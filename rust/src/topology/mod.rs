@@ -13,6 +13,18 @@
 //! - The MEC server's computing unit has dedicated, reliable resources
 //!   (`P(T_C ≤ t) = 1` in §V-A — we model `p = 0` with server-grade rates).
 
+//! Fleets beyond the paper's scale live in [`FleetShards`]: a sharded,
+//! lazily-materialised store whose per-client parameters are a pure
+//! function of `(seed, global index)`, so a million-client fleet costs
+//! memory only for the shards a round's sampled roster actually touches
+//! (see [`participation`]).
+
+pub mod participation;
+
+pub use participation::{
+    AggregationMode, ParticipationSampler, ParticipationSpec, PARTICIPATION_STREAM_TAG,
+};
+
 use crate::delay::asymmetric::AsymNodeParams;
 use crate::delay::NodeParams;
 use crate::rng::Rng;
@@ -158,29 +170,176 @@ impl FleetSpec {
         }
     }
 
-    /// Per-leg link models for an already-built fleet — the form the
-    /// round timeline samples. With `asym = None` every client keeps
+    /// Per-leg link model for one already-built node — the per-node body
+    /// of [`FleetSpec::build_links`], shared with the sharded mega-fleet
+    /// store ([`FleetShards`]). With `asym = None` the node keeps
     /// reciprocal links (`τ_d = τ_u = τ`, `p_d = p_u = p`), which samples
     /// bit-identically to the base [`NodeParams`] model; with overrides,
     /// the §V-A τ ladder is scaled per leg and the per-leg erasure
-    /// probabilities replace the symmetric `p`. Draws no randomness —
-    /// the ladder permutation lives entirely in
-    /// [`FleetSpec::build_clients`].
+    /// probabilities replace the symmetric `p`.
+    pub fn link_of(&self, c: &NodeParams) -> AsymNodeParams {
+        match self.asym {
+            None => AsymNodeParams::symmetric(c),
+            Some(a) => AsymNodeParams {
+                mu: c.mu,
+                alpha: c.alpha,
+                tau_down: c.tau * a.tau_down,
+                tau_up: c.tau * a.tau_up,
+                p_down: a.p_down,
+                p_up: a.p_up,
+            },
+        }
+    }
+
+    /// Per-leg link models for an already-built fleet — the form the
+    /// round timeline samples. Draws no randomness — the ladder
+    /// permutation lives entirely in [`FleetSpec::build_clients`].
     pub fn build_links(&self, clients: &[NodeParams]) -> Vec<AsymNodeParams> {
-        clients
-            .iter()
-            .map(|c| match self.asym {
-                None => AsymNodeParams::symmetric(c),
-                Some(a) => AsymNodeParams {
-                    mu: c.mu,
-                    alpha: c.alpha,
-                    tau_down: c.tau * a.tau_down,
-                    tau_up: c.tau * a.tau_up,
-                    p_down: a.p_down,
-                    p_up: a.p_up,
-                },
-            })
-            .collect()
+        clients.iter().map(|c| self.link_of(c)).collect()
+    }
+
+    /// Ladder rung count for the mega-fleet tiling: the §V-A geometric
+    /// ladder keeps its dynamic range by tiling at depth `min(n, 64)`
+    /// instead of assigning a length-`n` permutation (`k₁ⁿ` underflows
+    /// every rate to zero once `n ≫ 10³`). A tiling, not an exact
+    /// permutation: each rung repeats ~`n / depth` times across the
+    /// fleet.
+    pub fn ladder_depth(&self) -> usize {
+        self.n.min(64).max(1)
+    }
+
+    /// Node parameters for global client index `g` of a ladder-tiled
+    /// mega-fleet — a pure function of `(seed, g)` via the counter-based
+    /// [`Rng::indexed`] split, so any client is constructible in O(1),
+    /// independent of shard size, build order and fleet size. The rate
+    /// and MAC rungs are drawn independently, mirroring the two
+    /// independent permutations of [`FleetSpec::build_clients`].
+    pub fn node_at(&self, seed: u64, g: usize) -> NodeParams {
+        let mut rng = Rng::indexed(seed, g as u64);
+        let depth = self.ladder_depth();
+        let rate = self.max_rate_bps * self.k1.powi(rng.next_below(depth) as i32);
+        let macs = self.max_mac_rate * self.k2.powi(rng.next_below(depth) as i32);
+        NodeParams {
+            mu: macs / self.macs_per_point(),
+            alpha: self.alpha,
+            tau: self.packet_bits() / rate,
+            p: self.p,
+        }
+    }
+}
+
+/// Sharded fleet store for N = 10^5–10^6 clients: per-client link models
+/// held in contiguous per-shard arenas that are materialised *lazily*, so
+/// a sampled round touches (and pays memory for) only the shards its
+/// roster lands in — never a monolithic length-N `Vec` rebuild.
+///
+/// Two sources:
+/// * [`FleetShards::from_links`] — the fleet *is* the experiment's base
+///   fleet (`N == cfg.clients`); `link(g)` returns the canonical base
+///   link bit-for-bit, so sampled views agree exactly with
+///   [`FleetView::reset_from`] over the same clients.
+/// * [`FleetShards::ladder`] — a ladder-tiled mega-fleet
+///   (`[fleet] n > clients`); shard arenas are filled from
+///   [`FleetSpec::node_at`], whose parameters depend only on
+///   `(seed, g)`, making the fleet identical for every `shard_size`.
+#[derive(Clone, Debug)]
+pub struct FleetShards {
+    n: usize,
+    shard_size: usize,
+    source: ShardSource,
+    /// Lazily-built arenas; `shards[s]` covers global indices
+    /// `s·shard_size .. min((s+1)·shard_size, n)`.
+    shards: Vec<Option<Box<[AsymNodeParams]>>>,
+}
+
+#[derive(Clone, Debug)]
+enum ShardSource {
+    /// The experiment's base links, indexed directly (no arenas).
+    Links(Vec<AsymNodeParams>),
+    /// Ladder-tiled mega-fleet, derived per shard on first touch.
+    Ladder { spec: FleetSpec, seed: u64 },
+}
+
+impl FleetShards {
+    /// Store over the experiment's base fleet (`N == links.len()`);
+    /// `link(g)` is bit-identical to `links[g]` and no arena is ever
+    /// built.
+    pub fn from_links(links: &[AsymNodeParams]) -> Self {
+        FleetShards {
+            n: links.len(),
+            shard_size: links.len().max(1),
+            source: ShardSource::Links(links.to_vec()),
+            shards: Vec::new(),
+        }
+    }
+
+    /// Ladder-tiled mega-fleet of `spec.n` clients in arenas of
+    /// `shard_size` (`[fleet] shard_size`); `seed` pins the per-client
+    /// parameter draws.
+    pub fn ladder(spec: FleetSpec, seed: u64, shard_size: usize) -> Self {
+        assert!(spec.n > 0, "fleet must have at least one client");
+        assert!(shard_size > 0, "shard_size must be >= 1");
+        let num = spec.n.div_ceil(shard_size);
+        FleetShards {
+            n: spec.n,
+            shard_size,
+            source: ShardSource::Ladder { spec, seed },
+            shards: vec![None; num],
+        }
+    }
+
+    /// Fleet size N.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn shard_size(&self) -> usize {
+        self.shard_size
+    }
+
+    /// Arenas materialised so far (telemetry: a sampled run should touch
+    /// ~`K·rounds/shard_size` of the `ceil(N/shard_size)` shards).
+    pub fn built_shards(&self) -> usize {
+        self.shards.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn num_shards(&self) -> usize {
+        match self.source {
+            ShardSource::Links(_) => 1,
+            ShardSource::Ladder { .. } => self.shards.len(),
+        }
+    }
+
+    /// The per-leg link model of global client `g`, materialising its
+    /// shard on first touch (`&mut` only for that lazy build — the
+    /// returned value is a pure function of the store's construction).
+    pub fn link(&mut self, g: usize) -> AsymNodeParams {
+        assert!(g < self.n, "client {g} of {}", self.n);
+        match &mut self.source {
+            ShardSource::Links(links) => links[g],
+            ShardSource::Ladder { spec, seed } => {
+                let s = g / self.shard_size;
+                let arena = self.shards[s].get_or_insert_with(|| {
+                    let lo = s * self.shard_size;
+                    let hi = ((s + 1) * self.shard_size).min(spec.n);
+                    (lo..hi).map(|i| spec.link_of(&spec.node_at(*seed, i))).collect()
+                });
+                arena[g - s * self.shard_size]
+            }
+        }
+    }
+
+    /// Materialise every shard now (benches/tests that gate warm-round
+    /// allocations use this to reach steady state up front; training
+    /// leaves builds lazy).
+    pub fn build_all(&mut self) {
+        for g in (0..self.n).step_by(self.shard_size) {
+            let _ = self.link(g);
+        }
     }
 }
 
@@ -222,6 +381,24 @@ impl FleetView {
         self.clients.extend_from_slice(links);
         self.available.clear();
         self.available.resize(links.len(), true);
+        self.server = server;
+    }
+
+    /// Reset to a sampled roster: view slot `i` becomes global client
+    /// `roster[i]` of the sharded fleet, everyone available. O(K) per
+    /// round — only the participating clients are touched, never the full
+    /// fleet — and allocation-free once the buffers reached roster size
+    /// and the touched shards are materialised.
+    pub fn reset_roster(
+        &mut self,
+        shards: &mut FleetShards,
+        roster: &[u32],
+        server: NodeParams,
+    ) {
+        self.clients.clear();
+        self.clients.extend(roster.iter().map(|&g| shards.link(g as usize)));
+        self.available.clear();
+        self.available.resize(roster.len(), true);
         self.server = server;
     }
 
@@ -347,6 +524,79 @@ mod tests {
         assert_eq!(view.clients[2].mu, links[2].mu);
         assert!(view.available[4]);
         assert!(view.clients.capacity() >= 5);
+    }
+
+    #[test]
+    fn fleet_shards_from_links_indexes_the_base_fleet_bitwise() {
+        let spec = FleetSpec::paper(6, 100, 10);
+        let clients = spec.build_clients(&mut Rng::seed_from(11));
+        let links = spec.build_links(&clients);
+        let mut shards = FleetShards::from_links(&links);
+        assert_eq!(shards.len(), 6);
+        for (g, l) in links.iter().enumerate() {
+            let got = shards.link(g);
+            assert_eq!(got.tau_down.to_bits(), l.tau_down.to_bits());
+            assert_eq!(got.mu.to_bits(), l.mu.to_bits());
+        }
+        assert_eq!(shards.built_shards(), 0, "base links need no arenas");
+    }
+
+    #[test]
+    fn fleet_shards_ladder_is_lazy_and_shard_size_invariant() {
+        let spec = FleetSpec::paper(1000, 100, 10);
+        let mut a = FleetShards::ladder(spec, 0xF1EE7, 64);
+        let mut b = FleetShards::ladder(spec, 0xF1EE7, 256);
+        assert_eq!(a.num_shards(), 16);
+        assert_eq!(b.num_shards(), 4);
+        assert_eq!(a.built_shards(), 0);
+        // Touching one client builds exactly its shard…
+        let _ = a.link(700);
+        assert_eq!(a.built_shards(), 1);
+        // …and the parameters depend only on (seed, g), not shard_size.
+        for g in [0usize, 63, 64, 700, 999] {
+            let (la, lb) = (a.link(g), b.link(g));
+            assert_eq!(la.tau_down.to_bits(), lb.tau_down.to_bits());
+            assert_eq!(la.mu.to_bits(), lb.mu.to_bits());
+            la.validate().unwrap();
+        }
+        // A different seed draws a different fleet.
+        let mut c = FleetShards::ladder(spec, 0xF1EE8, 64);
+        assert!((0..100).any(|g| c.link(g).mu.to_bits() != b.link(g).mu.to_bits()));
+        // Every rung stays in the tiled ladder's finite range.
+        let depth = spec.ladder_depth();
+        assert_eq!(depth, 64);
+        let min_mu = spec.max_mac_rate * spec.k2.powi(depth as i32 - 1) / spec.macs_per_point();
+        for g in 0..1000 {
+            assert!(b.link(g).mu >= min_mu - 1e-9);
+        }
+        b.build_all();
+        assert_eq!(b.built_shards(), 4);
+    }
+
+    #[test]
+    fn fleet_view_resets_to_roster_slots() {
+        let spec = FleetSpec::paper(10, 100, 10);
+        let clients = spec.build_clients(&mut Rng::seed_from(21));
+        let links = spec.build_links(&clients);
+        let server = spec.build_server();
+        let mut shards = FleetShards::from_links(&links);
+        let mut view = FleetView::from_base(&links, server);
+        let roster: Vec<u32> = vec![1, 4, 7];
+        view.reset_roster(&mut shards, &roster, server);
+        assert_eq!(view.len(), 3);
+        assert!(view.available.iter().all(|&a| a));
+        for (slot, &g) in roster.iter().enumerate() {
+            assert_eq!(view.clients[slot].mu.to_bits(), links[g as usize].mu.to_bits());
+        }
+        // The identity roster reproduces reset_from exactly.
+        let identity: Vec<u32> = (0..10).collect();
+        view.reset_roster(&mut shards, &identity, server);
+        let mut full = FleetView::from_base(&links, server);
+        full.reset_from(&links, server);
+        assert_eq!(view.len(), full.len());
+        for (a, b) in view.clients.iter().zip(&full.clients) {
+            assert_eq!(a.tau_up.to_bits(), b.tau_up.to_bits());
+        }
     }
 
     #[test]

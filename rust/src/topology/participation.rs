@@ -1,0 +1,416 @@
+//! Per-round sampled participation for mega-fleets (`[fleet]
+//! participation`).
+//!
+//! The paper's experiments run every client every round; a
+//! production-scale fleet of 10^5–10^6 clients cannot (and, per the
+//! sampled-participation convergence analyses of arXiv:2201.10092, need
+//! not). This module provides the *scheme-independent* participation
+//! layer: before any scheme sees the round, the engine draws a **roster**
+//! — the sorted global indices of the K clients participating this round
+//! — and materialises the round's [`crate::topology::FleetView`] over the
+//! roster only. Every scheme run on a session therefore observes the
+//! identical participation realisation, exactly as scenarios already
+//! guarantee for network behaviour.
+//!
+//! Determinism contract: round `r`'s roster is a pure function of
+//! `(stream base, r)` through the counter-based [`Rng::indexed`] split —
+//! no state is carried between rounds, no draw depends on the fleet's
+//! shard layout — so the realisation is reproducible at any fleet size
+//! and independent of shard count, thread count and SIMD policy.
+//! `full` participation (the default) draws nothing from the stream and
+//! is bit-identical to the pre-participation engine.
+
+use crate::rng::Rng;
+
+/// Stream label for the engine's participation RNG split (disjoint from
+/// the scheme tags, the scenario stream
+/// [`crate::sim::scenario::SCENARIO_STREAM_TAG`] and the `FedSetup`
+/// streams by construction).
+pub const PARTICIPATION_STREAM_TAG: u64 = 0x9A47_71C1;
+
+/// Who participates each round (`[fleet] participation` / CLI
+/// `--participation`): every client, or a fresh uniform sample of `k`
+/// without replacement per round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParticipationSpec {
+    /// Every client, every round — the paper's setting and the default;
+    /// bit-identical to the pre-participation engine.
+    Full,
+    /// A fresh uniform sample of `k` distinct clients per round
+    /// (`sample:k=`). `sample:k=N` realises the identity roster and
+    /// reproduces `full` bit-for-bit.
+    Sample { k: usize },
+}
+
+impl Default for ParticipationSpec {
+    fn default() -> Self {
+        ParticipationSpec::Full
+    }
+}
+
+impl ParticipationSpec {
+    /// Parse a participation spec string: `full` | `sample:k=31`.
+    pub fn parse(s: &str) -> Result<ParticipationSpec, String> {
+        let (name, params) = match s.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p.trim())),
+            None => (s.trim(), None),
+        };
+        let kvs = |allowed: &[(&str, f64)]| -> Result<Vec<f64>, String> {
+            let mut vals: Vec<f64> = allowed.iter().map(|&(_, d)| d).collect();
+            if let Some(ps) = params {
+                for kv in ps.split(',').filter(|t| !t.trim().is_empty()) {
+                    let (k, v) = kv
+                        .split_once('=')
+                        .ok_or_else(|| format!("{name:?}: expected key=value, got {kv:?}"))?;
+                    let pos = allowed
+                        .iter()
+                        .position(|&(a, _)| a == k.trim())
+                        .ok_or_else(|| {
+                            let keys: Vec<&str> = allowed.iter().map(|&(a, _)| a).collect();
+                            format!(
+                                "{name:?}: unknown parameter {:?} (expected {})",
+                                k.trim(),
+                                keys.join(", ")
+                            )
+                        })?;
+                    vals[pos] = v
+                        .trim()
+                        .parse::<f64>()
+                        .map_err(|_| format!("{name:?}: {} must be a number, got {v:?}", k.trim()))?;
+                }
+            }
+            Ok(vals)
+        };
+        match name {
+            "full" => {
+                kvs(&[])?;
+                Ok(ParticipationSpec::Full)
+            }
+            "sample" => {
+                let v = kvs(&[("k", 0.0)])?;
+                if v[0].fract() != 0.0 || v[0] < 0.0 {
+                    return Err(format!("\"sample\": k must be a non-negative integer, got {}", v[0]));
+                }
+                Ok(ParticipationSpec::Sample { k: v[0] as usize })
+            }
+            other => Err(format!(
+                "unknown participation {other:?} (expected one of full, sample:k=)"
+            )),
+        }
+    }
+
+    /// Range checks against the fleet size `n` (the error is prefixed with
+    /// its config location by the conf loader).
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        if let ParticipationSpec::Sample { k } = *self {
+            if k == 0 || k > n {
+                return Err(format!(
+                    "sample: k={k} out of range (expected one of 1..={n} for the {n}-client fleet)"
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical spec string (round-trips through [`ParticipationSpec::parse`]).
+    pub fn label(&self) -> String {
+        match *self {
+            ParticipationSpec::Full => "full".into(),
+            ParticipationSpec::Sample { k } => format!("sample:k={k}"),
+        }
+    }
+
+    /// Roster size on an `n`-client fleet.
+    pub fn k(&self, n: usize) -> usize {
+        match *self {
+            ParticipationSpec::Full => n,
+            ParticipationSpec::Sample { k } => k,
+        }
+    }
+}
+
+impl std::str::FromStr for ParticipationSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        ParticipationSpec::parse(s)
+    }
+}
+
+/// How the engine folds the round's planned gradients (`[fleet]
+/// aggregation` / CLI `--aggregation`): a flat sequential fold, or
+/// per-shard partial sums on the worker pool before the root fold — the
+/// edge-aggregator tree of arXiv:2007.03273, flattened to two levels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggregationMode {
+    /// Sequential fold in plan order (the historical engine fold;
+    /// default).
+    Flat,
+    /// Hierarchical two-level fold (`hier:shard=`): plan-order groups of
+    /// `shard` consecutive requests each fold sequentially into a partial
+    /// sum (groups run concurrently on the worker pool), then the root
+    /// folds the partials in group order. Both levels are sequential in a
+    /// documented order, so the result is bit-identical for every thread
+    /// count.
+    Hier { shard: usize },
+}
+
+impl Default for AggregationMode {
+    fn default() -> Self {
+        AggregationMode::Flat
+    }
+}
+
+impl AggregationMode {
+    /// Parse an aggregation spec string: `flat` | `hier:shard=256`.
+    pub fn parse(s: &str) -> Result<AggregationMode, String> {
+        let (name, params) = match s.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p.trim())),
+            None => (s.trim(), None),
+        };
+        match name {
+            "flat" => match params {
+                None => Ok(AggregationMode::Flat),
+                Some(p) => Err(format!("\"flat\": takes no parameters, got {p:?}")),
+            },
+            "hier" => {
+                let kv = params.unwrap_or("");
+                let v = kv
+                    .strip_prefix("shard=")
+                    .ok_or_else(|| format!("\"hier\": expected shard=, got {kv:?}"))?;
+                let shard = v
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("\"hier\": shard must be a positive integer, got {v:?}"))?;
+                if shard == 0 {
+                    return Err("\"hier\": shard must be >= 1, got 0".into());
+                }
+                Ok(AggregationMode::Hier { shard })
+            }
+            other => Err(format!(
+                "unknown aggregation {other:?} (expected one of flat, hier:shard=)"
+            )),
+        }
+    }
+
+    /// Canonical spec string (round-trips through [`AggregationMode::parse`]).
+    pub fn label(&self) -> String {
+        match *self {
+            AggregationMode::Flat => "flat".into(),
+            AggregationMode::Hier { shard } => format!("hier:shard={shard}"),
+        }
+    }
+}
+
+impl std::str::FromStr for AggregationMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        AggregationMode::parse(s)
+    }
+}
+
+/// Draws each round's roster: the sorted global indices of the clients
+/// participating that round.
+///
+/// The sampler owns an identity pool of all `n` indices (built once) and
+/// runs a *partial* Fisher–Yates over it per draw — `k` swaps forward,
+/// recorded, then unwound — so a draw costs O(k log k) (the log from the
+/// final roster sort) independent of `n`, allocates nothing once warm,
+/// and leaves the pool in the identity state that makes round `r`'s
+/// roster a pure function of `(base, r)` via [`Rng::indexed`].
+#[derive(Clone, Debug)]
+pub struct ParticipationSampler {
+    spec: ParticipationSpec,
+    n: usize,
+    base: u64,
+    pool: Vec<u32>,
+    swaps: Vec<(u32, u32)>,
+    roster: Vec<u32>,
+}
+
+impl ParticipationSampler {
+    /// Sampler over an `n`-client fleet; `base` seeds the indexable
+    /// per-round streams (the engine derives it from the experiment seed
+    /// through the [`PARTICIPATION_STREAM_TAG`] split).
+    pub fn new(spec: ParticipationSpec, n: usize, base: u64) -> Self {
+        assert!(n > 0, "participation over an empty fleet");
+        spec.validate(n).expect("validated by the config loader");
+        let k = spec.k(n);
+        ParticipationSampler {
+            spec,
+            n,
+            base,
+            // `full` never swaps, so it skips the O(n) pool too.
+            pool: match spec {
+                ParticipationSpec::Full => Vec::new(),
+                ParticipationSpec::Sample { .. } => (0..n as u32).collect(),
+            },
+            swaps: Vec::with_capacity(k),
+            roster: Vec::with_capacity(n.max(k)),
+        }
+    }
+
+    pub fn spec(&self) -> ParticipationSpec {
+        self.spec
+    }
+
+    /// Roster size (clients per round).
+    pub fn k(&self) -> usize {
+        self.spec.k(self.n)
+    }
+
+    /// Fleet size `n`.
+    pub fn fleet_size(&self) -> usize {
+        self.n
+    }
+
+    /// Draw round `round`'s roster: `k` distinct global client indices,
+    /// uniform without replacement, sorted ascending. Allocation-free
+    /// once warm; see the struct docs for the determinism contract.
+    pub fn draw(&mut self, round: usize) -> &[u32] {
+        self.roster.clear();
+        match self.spec {
+            ParticipationSpec::Full => {
+                self.roster.extend(0..self.n as u32);
+            }
+            ParticipationSpec::Sample { k } => {
+                let mut rng = Rng::indexed(self.base, round as u64);
+                self.swaps.clear();
+                for i in 0..k {
+                    let j = i + rng.next_below(self.n - i);
+                    self.swaps.push((i as u32, j as u32));
+                    self.pool.swap(i, j);
+                    self.roster.push(self.pool[i]);
+                }
+                // Unwind the swaps (reverse order) to restore the
+                // identity pool before the next draw.
+                for &(i, j) in self.swaps.iter().rev() {
+                    self.pool.swap(i as usize, j as usize);
+                }
+                self.roster.sort_unstable();
+            }
+        }
+        &self.roster
+    }
+
+    /// The most recent roster (empty before the first draw).
+    pub fn roster(&self) -> &[u32] {
+        &self.roster
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_round_trips() {
+        assert_eq!(ParticipationSpec::parse("full").unwrap(), ParticipationSpec::Full);
+        assert_eq!(
+            ParticipationSpec::parse("sample:k=31").unwrap(),
+            ParticipationSpec::Sample { k: 31 }
+        );
+        for s in ["full", "sample:k=31"] {
+            let spec: ParticipationSpec = s.parse().unwrap();
+            assert_eq!(spec.label(), s);
+        }
+    }
+
+    #[test]
+    fn spec_rejects_garbage_with_expected_one_of() {
+        let e = ParticipationSpec::parse("partial").unwrap_err();
+        assert!(e.contains("expected one of full, sample:k="), "{e}");
+        let e = ParticipationSpec::parse("sample:j=3").unwrap_err();
+        assert!(e.contains("unknown parameter"), "{e}");
+        assert!(ParticipationSpec::parse("sample:k=1.5").is_err());
+        assert!(ParticipationSpec::parse("sample:k").is_err());
+    }
+
+    #[test]
+    fn spec_validates_k_against_fleet_size() {
+        assert!(ParticipationSpec::Full.validate(3).is_ok());
+        assert!(ParticipationSpec::Sample { k: 3 }.validate(3).is_ok());
+        let e = ParticipationSpec::Sample { k: 0 }.validate(3).unwrap_err();
+        assert!(e.contains("expected one of 1..=3"), "{e}");
+        let e = ParticipationSpec::Sample { k: 4 }.validate(3).unwrap_err();
+        assert!(e.contains("k=4") && e.contains("1..=3"), "{e}");
+    }
+
+    #[test]
+    fn aggregation_parses_and_round_trips() {
+        assert_eq!(AggregationMode::parse("flat").unwrap(), AggregationMode::Flat);
+        assert_eq!(
+            AggregationMode::parse("hier:shard=256").unwrap(),
+            AggregationMode::Hier { shard: 256 }
+        );
+        for s in ["flat", "hier:shard=8"] {
+            let m: AggregationMode = s.parse().unwrap();
+            assert_eq!(m.label(), s);
+        }
+        assert!(AggregationMode::parse("tree").unwrap_err().contains("expected one of"));
+        assert!(AggregationMode::parse("hier:shard=0").is_err());
+        assert!(AggregationMode::parse("hier:depth=2").is_err());
+    }
+
+    #[test]
+    fn full_roster_is_identity() {
+        let mut s = ParticipationSampler::new(ParticipationSpec::Full, 5, 7);
+        assert_eq!(s.draw(0), &[0, 1, 2, 3, 4]);
+        assert_eq!(s.k(), 5);
+    }
+
+    #[test]
+    fn sample_rosters_are_sorted_distinct_and_in_range() {
+        let mut s = ParticipationSampler::new(ParticipationSpec::Sample { k: 8 }, 100, 1);
+        for r in 0..50 {
+            let roster = s.draw(r).to_vec();
+            assert_eq!(roster.len(), 8);
+            assert!(roster.windows(2).all(|w| w[0] < w[1]), "{roster:?}");
+            assert!(roster.iter().all(|&g| (g as usize) < 100));
+        }
+    }
+
+    #[test]
+    fn draws_are_counter_based_pure_functions_of_the_round() {
+        // Drawing rounds out of order, repeatedly, or from a fresh sampler
+        // yields identical rosters: no cross-round state.
+        let mut a = ParticipationSampler::new(ParticipationSpec::Sample { k: 4 }, 50, 99);
+        let r7 = a.draw(7).to_vec();
+        let r3 = a.draw(3).to_vec();
+        assert_eq!(a.draw(7), &r7[..]);
+        let mut b = ParticipationSampler::new(ParticipationSpec::Sample { k: 4 }, 50, 99);
+        assert_eq!(b.draw(3), &r3[..]);
+        assert_eq!(b.draw(7), &r7[..]);
+        // Distinct rounds (overwhelmingly) differ.
+        assert!((0..20).any(|r| a.draw(r) != &r7[..]));
+    }
+
+    #[test]
+    fn sample_k_equals_n_is_the_identity_roster() {
+        let mut s = ParticipationSampler::new(ParticipationSpec::Sample { k: 6 }, 6, 5);
+        for r in 0..10 {
+            assert_eq!(s.draw(r), &[0, 1, 2, 3, 4, 5]);
+        }
+    }
+
+    #[test]
+    fn sampling_is_roughly_uniform() {
+        let n = 20;
+        let mut counts = vec![0usize; n];
+        let mut s = ParticipationSampler::new(ParticipationSpec::Sample { k: 5 }, n, 13);
+        let rounds = 2000;
+        for r in 0..rounds {
+            for &g in s.draw(r) {
+                counts[g as usize] += 1;
+            }
+        }
+        let expect = rounds * 5 / n;
+        for (g, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect as f64).abs() < 0.2 * expect as f64,
+                "client {g}: {c} picks vs {expect} expected"
+            );
+        }
+    }
+}

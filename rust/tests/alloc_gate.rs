@@ -26,6 +26,14 @@
 //! path stays outside the gate (a handful of pointer-sized entries per
 //! round — see the engine module docs).
 //!
+//! The fleet-scale PR adds the sampled-participation decision path: the
+//! counter-based roster draw (`ParticipationSampler`), the O(K) roster
+//! view reset over a sharded mega-fleet (`FleetShards`), K-slot timeline
+//! sampling and the streaming top-k arrival selection
+//! (`RoundDelays::kth_fastest_into` + caller-owned `KthScratch`, which
+//! greedy's round loop reuses) — all zero warm-round allocations, with
+//! per-round cost independent of the fleet size N.
+//!
 //! And it covers the erasure-codec path (the coding PR): the full warm
 //! pack → encode → erase → decode → refold cycle of `recovery = exact`
 //! runs at zero allocations for **both** built-in codes, with every
@@ -38,8 +46,9 @@ use codedfedl::rng::Rng;
 use codedfedl::runtime::GradJob;
 use codedfedl::sim::scenario::{Scenario, ScenarioSpec};
 use codedfedl::sim::timeline::RoundTrace;
+use codedfedl::sim::KthScratch;
 use codedfedl::tensor::{Isa, Mat, SimdPolicy};
-use codedfedl::topology::FleetView;
+use codedfedl::topology::{FleetShards, FleetView, ParticipationSampler, ParticipationSpec};
 use codedfedl::ExperimentBuilder;
 
 #[global_allocator]
@@ -178,6 +187,64 @@ fn steady_state_compute_path_allocates_zero_bytes() {
             0,
             "scenario {}: warm rounds requested {} bytes",
             spec.label(),
+            b1 - b0
+        );
+    }
+
+    // --- the fleet-scale decision path (million-client PR): counter-based
+    //     roster draw over a sharded mega-fleet, O(K) roster view reset,
+    //     per-leg sampling over the K slots only and greedy's streaming
+    //     top-k arrival selection (`kth_fastest_into` + caller-owned
+    //     scratch) — zero allocations once warm. Shard arenas are
+    //     materialised up front (`build_all`): lazy builds are amortised
+    //     cold-path allocations by design, not per-round cost. ---
+    {
+        let fleet_n = 10_000usize;
+        let k_sample = 31usize;
+        let sel_k = 8usize;
+        let mut mega = setup.fleet_spec;
+        mega.n = fleet_n;
+        let mut shards = FleetShards::ladder(mega, 0xF1EE7, 512);
+        shards.build_all();
+        let mut sampler =
+            ParticipationSampler::new(ParticipationSpec::Sample { k: k_sample }, fleet_n, 77);
+        let mut delay_rng = Rng::seed_from(33);
+        let mut view = FleetView::from_base(&setup.client_links, setup.server);
+        let mut trace = RoundTrace::with_capacity(k_sample);
+        let mut roster_loads: Vec<f64> = Vec::new();
+        let mut scratch = KthScratch::default();
+        let mut fleet_round = |r: usize| {
+            let roster = sampler.draw(r);
+            roster_loads.clear();
+            roster_loads.extend(roster.iter().map(|&g| loads[g as usize % n]));
+            view.reset_roster(&mut shards, roster, setup.server);
+            trace.sample_into(&view, &roster_loads, 8.0, &mut delay_rng);
+            let (t_k, winners) = trace.delays().kth_fastest_into(sel_k, &mut scratch).unwrap();
+            std::hint::black_box((t_k, winners.len()));
+        };
+
+        // Two warm rounds reach every buffer's steady-state (K-sized)
+        // capacity…
+        fleet_round(0);
+        fleet_round(1);
+
+        // …after which warm sampled rounds must acquire no memory at all.
+        let (a0, b0) = (CountingAlloc::allocations(), CountingAlloc::bytes());
+        for r in 2..5 {
+            fleet_round(r);
+        }
+        let (a1, b1) = (CountingAlloc::allocations(), CountingAlloc::bytes());
+        assert_eq!(
+            a1 - a0,
+            0,
+            "fleet-scale decision path performed {} allocations ({} bytes)",
+            a1 - a0,
+            b1 - b0
+        );
+        assert_eq!(
+            b1 - b0,
+            0,
+            "fleet-scale decision path requested {} bytes",
             b1 - b0
         );
     }

@@ -1,0 +1,293 @@
+//! Determinism gates for the fleet scale-out (sampled participation,
+//! sharded fleets, hierarchical aggregation).
+//!
+//! 1. **Full-fleet equivalence** — `sample:k=N` realises the identity
+//!    roster and reproduces a `full` run bit-for-bit, for every scheme.
+//! 2. **Sampled reproducibility** — sampled runs hash identically across
+//!    reruns, thread counts and within each SIMD policy.
+//! 3. **Shard invariance** — the shard arena size is storage granularity
+//!    only: every `shard_size` yields the same bits on a mega-fleet.
+//! 4. **Scheme independence** — the participation stream splits off the
+//!    experiment root *after* the per-scheme streams, so every scheme
+//!    tag derives the same roster base (the fair-comparison property).
+//! 5. **Mega-fleet smoke** — a 10^5-client fleet trains sampled rounds
+//!    and reproduces (the per-round cost bound lives in the alloc gate
+//!    and the `fleet_scale` bench).
+//! 6. **Hierarchical fold** — `hier:shard=1` partials are exactly the
+//!    per-request products folded in plan order, so it must match the
+//!    flat fold bit-for-bit; wider shards must be thread-invariant.
+//! 7. **Config validation** — out-of-range rosters and exact-recovery ×
+//!    sampling are rejected at build time with errors naming `[fleet]`.
+
+use codedfedl::coding::RecoveryMode;
+use codedfedl::rng::Rng;
+use codedfedl::schemes::SchemeSpec;
+use codedfedl::sim::scenario::SCENARIO_STREAM_TAG;
+use codedfedl::tensor::SimdPolicy;
+use codedfedl::topology::{AggregationMode, ParticipationSpec, PARTICIPATION_STREAM_TAG};
+use codedfedl::{ExperimentBuilder, TrainOutcome};
+
+const SCHEMES: [SchemeSpec; 3] = [
+    SchemeSpec::NaiveUncoded,
+    SchemeSpec::GreedyUncoded { psi: 0.2 },
+    SchemeSpec::Coded { delta: 0.3 },
+];
+
+/// FNV-1a over the run's bits: θ plus every history point (same digest as
+/// `tests/scenario_determinism.rs`).
+fn run_hash(out: &TrainOutcome) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bits: u64| {
+        for b in bits.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for &v in out.theta.as_slice() {
+        eat(v.to_bits() as u64);
+    }
+    for p in &out.history.points {
+        eat(p.iter as u64);
+        eat(p.sim_time.to_bits());
+        eat(p.accuracy.to_bits());
+        eat(p.train_loss.to_bits());
+    }
+    h
+}
+
+fn builder(participation: ParticipationSpec) -> ExperimentBuilder {
+    ExperimentBuilder::preset("tiny")
+        .unwrap()
+        .epochs(2)
+        .threads(1)
+        .simd(SimdPolicy::Scalar)
+        .participation(participation)
+}
+
+#[test]
+fn sampling_the_whole_fleet_reproduces_full_bit_for_bit() {
+    // tiny has 5 clients: `sample:k=5` draws the identity roster every
+    // round, so the view, the loads and the sequential delay stream are
+    // byte-identical to the untouched full-participation path.
+    for spec in SCHEMES {
+        let full = builder(ParticipationSpec::Full).build().unwrap().run_spec(spec).unwrap();
+        let identity = builder(ParticipationSpec::Sample { k: 5 })
+            .build()
+            .unwrap()
+            .run_spec(spec)
+            .unwrap();
+        assert_eq!(
+            run_hash(&full),
+            run_hash(&identity),
+            "{}: sample:k=N diverged from full",
+            spec.label()
+        );
+    }
+    // …and a strict subsample genuinely changes the run (no inert path).
+    let full = builder(ParticipationSpec::Full)
+        .build()
+        .unwrap()
+        .run_spec(SchemeSpec::NaiveUncoded)
+        .unwrap();
+    let sampled = builder(ParticipationSpec::Sample { k: 3 })
+        .build()
+        .unwrap()
+        .run_spec(SchemeSpec::NaiveUncoded)
+        .unwrap();
+    assert_ne!(run_hash(&full), run_hash(&sampled), "k=3 roster left naive untouched");
+}
+
+#[test]
+fn sampled_runs_reproduce_across_threads_and_simd() {
+    for spec in SCHEMES {
+        for simd in [SimdPolicy::Scalar, SimdPolicy::Auto] {
+            let run = |threads: usize| {
+                builder(ParticipationSpec::Sample { k: 3 })
+                    .threads(threads)
+                    .simd(simd)
+                    .build()
+                    .unwrap()
+                    .run_spec(spec)
+                    .unwrap()
+            };
+            let one = run_hash(&run(1));
+            let rerun = run_hash(&run(1));
+            let four = run_hash(&run(4));
+            assert_eq!(one, rerun, "{}: sampled rerun changed bits", spec.label());
+            assert_eq!(one, four, "{}: thread count changed sampled bits", spec.label());
+        }
+    }
+}
+
+#[test]
+fn shard_size_is_storage_granularity_only() {
+    // A 200-client ladder fleet sampled at k=8: the roster and every
+    // node's parameters are counter-based pure functions of global index,
+    // so re-arranging the arenas cannot move a bit.
+    let run = |shard_size: usize, spec: SchemeSpec| {
+        builder(ParticipationSpec::Sample { k: 8 })
+            .fleet_n(Some(200))
+            .shard_size(shard_size)
+            .build()
+            .unwrap()
+            .run_spec(spec)
+            .unwrap()
+    };
+    for spec in [SchemeSpec::NaiveUncoded, SchemeSpec::Coded { delta: 0.3 }] {
+        let golden = run_hash(&run(32, spec));
+        for shard_size in [64, 256, 1024] {
+            assert_eq!(
+                golden,
+                run_hash(&run(shard_size, spec)),
+                "{}: shard_size={shard_size} changed the run",
+                spec.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn participation_stream_is_scheme_independent() {
+    // The engine derives the roster base by splitting the participation
+    // stream off the experiment root *after* the per-scheme delay/code
+    // splits and the scenario split. `split` advances the root
+    // identically for any label, so every scheme tag must reach the same
+    // base — all schemes on a session face one participation realisation.
+    let part_base = |seed: u64, tag: u64| {
+        let mut root = Rng::seed_from(seed ^ 0x5EED_0000);
+        let _ = root.split(tag);
+        let _ = root.split(tag.wrapping_add(1000));
+        let _ = root.split(SCENARIO_STREAM_TAG);
+        root.split(PARTICIPATION_STREAM_TAG).next_u64()
+    };
+    let tags: Vec<u64> = SCHEMES.iter().map(|s| s.build().rng_tag()).collect();
+    assert_eq!(tags.len(), 3);
+    let reference = part_base(42, tags[0]);
+    for &tag in &tags[1..] {
+        assert_eq!(reference, part_base(42, tag), "tag {tag} derives a different roster base");
+    }
+    // Different experiments still draw different rosters.
+    assert_ne!(reference, part_base(43, tags[0]));
+}
+
+#[test]
+fn mega_fleet_sampled_run_trains_and_reproduces() {
+    // 10^5 clients, 5 sampled per round: the lazily-built shard store
+    // only materialises the handful of arenas the rosters touch, so this
+    // completes at tiny-preset speed. Two independent sessions must agree
+    // bit-for-bit — rosters, ladder nodes and data shards are all pure
+    // functions of (seed, global index).
+    let run = || {
+        builder(ParticipationSpec::Sample { k: 5 })
+            .epochs(1)
+            .fleet_n(Some(100_000))
+            .build()
+            .unwrap()
+            .run_spec(SchemeSpec::NaiveUncoded)
+            .unwrap()
+    };
+    let a = run();
+    assert!(!a.history.points.is_empty());
+    assert!(a.history.points.iter().all(|p| p.train_loss.is_finite()));
+    let mut prev = 0.0;
+    for p in &a.history.points {
+        assert!(p.sim_time > prev, "mega-fleet clock not increasing");
+        prev = p.sim_time;
+    }
+    let b = run();
+    assert_eq!(run_hash(&a), run_hash(&b), "mega-fleet run is not reproducible");
+}
+
+#[test]
+fn hier_with_unit_shards_matches_the_flat_fold_bitwise() {
+    // shard=1 partials are exactly round(scale·g) — the same per-element
+    // operation sequence as the flat fold — so the histories must agree
+    // bit-for-bit. This pins the hierarchical fold to the documented
+    // plan-order arithmetic, not just to itself.
+    for spec in SCHEMES {
+        let flat = builder(ParticipationSpec::Full).build().unwrap().run_spec(spec).unwrap();
+        let hier = builder(ParticipationSpec::Full)
+            .aggregation(AggregationMode::Hier { shard: 1 })
+            .build()
+            .unwrap()
+            .run_spec(spec)
+            .unwrap();
+        assert_eq!(
+            run_hash(&flat),
+            run_hash(&hier),
+            "{}: hier:shard=1 diverged from flat",
+            spec.label()
+        );
+    }
+}
+
+#[test]
+fn hier_fold_is_thread_invariant_and_reproducible() {
+    // Wider shards change the fold tree (allowed), but each partial is
+    // owned by exactly one worker and both fold levels run in pinned
+    // sequential orders — so bits must not move with the thread count,
+    // under full and sampled participation alike.
+    for participation in [ParticipationSpec::Full, ParticipationSpec::Sample { k: 3 }] {
+        for spec in [SchemeSpec::NaiveUncoded, SchemeSpec::Coded { delta: 0.3 }] {
+            let run = |threads: usize| {
+                builder(participation)
+                    .threads(threads)
+                    .aggregation(AggregationMode::Hier { shard: 2 })
+                    .build()
+                    .unwrap()
+                    .run_spec(spec)
+                    .unwrap()
+            };
+            let serial = run_hash(&run(1));
+            assert_eq!(
+                serial,
+                run_hash(&run(1)),
+                "{} ({}): hier rerun changed bits",
+                spec.label(),
+                participation.label()
+            );
+            assert_eq!(
+                serial,
+                run_hash(&run(4)),
+                "{} ({}): hier fold moved with the thread count",
+                spec.label(),
+                participation.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn build_rejects_invalid_fleet_configs() {
+    // Oversized roster: k > N names [fleet] and the accepted range.
+    let e = builder(ParticipationSpec::Sample { k: 20 })
+        .fleet_n(Some(10))
+        .build()
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("[fleet] participation"), "{e}");
+    assert!(e.contains("1..=10"), "{e}");
+
+    // Empty roster.
+    let e = builder(ParticipationSpec::Sample { k: 0 }).build().map(|_| ()).unwrap_err().to_string();
+    assert!(e.contains("k=0"), "{e}");
+
+    // A fleet smaller than the data shards it must tile.
+    let e = builder(ParticipationSpec::Full)
+        .fleet_n(Some(3))
+        .build()
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("[fleet] n"), "{e}");
+
+    // Exact recovery is defined over the full fixed fleet only.
+    let e = builder(ParticipationSpec::Sample { k: 3 })
+        .recovery(RecoveryMode::Exact)
+        .build()
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("exact recovery requires the full fixed fleet"), "{e}");
+}

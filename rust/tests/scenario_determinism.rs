@@ -22,8 +22,18 @@ use codedfedl::sim::scenario::{Scenario, ScenarioSpec};
 use codedfedl::sim::timeline::RoundTrace;
 use codedfedl::sim::{RoundDelays, RoundSampler};
 use codedfedl::tensor::SimdPolicy;
-use codedfedl::topology::{AsymLinkSpec, FleetSpec, FleetView};
+use codedfedl::topology::{AsymLinkSpec, FleetSpec, FleetView, ParticipationSpec};
 use codedfedl::{ExperimentBuilder, TrainOutcome};
+
+/// Participation under test (`CODEDFEDL_PARTICIPATION`, default `full`) —
+/// CI re-runs the whole suite under `sample:k=4`, so every reproducibility
+/// gate here also pins the sampled-roster path.
+fn env_participation() -> ParticipationSpec {
+    match std::env::var("CODEDFEDL_PARTICIPATION") {
+        Ok(v) => v.parse().expect("CODEDFEDL_PARTICIPATION"),
+        Err(_) => ParticipationSpec::Full,
+    }
+}
 
 const BUILT_INS: [ScenarioSpec; 4] = [
     ScenarioSpec::Static,
@@ -61,6 +71,7 @@ fn run(scenario: ScenarioSpec, threads: usize, simd: SimdPolicy) -> TrainOutcome
         .threads(threads)
         .simd(simd)
         .scenario(scenario)
+        .participation(env_participation())
         .build()
         .unwrap()
         .run_spec(SchemeSpec::Coded { delta: 0.3 })
@@ -123,6 +134,7 @@ fn static_golden_history_is_thread_invariant_and_reproducible() {
             epochs: 2,
             threads: 1,
             simd: SimdPolicy::Scalar,
+            participation: env_participation(),
             ..ExperimentConfig::tiny()
         };
         let session = ExperimentBuilder::from_config(cfg).build().unwrap();
@@ -160,6 +172,7 @@ fn non_static_scenarios_change_the_sampled_rounds() {
             .threads(1)
             .simd(SimdPolicy::Scalar)
             .scenario(scenario)
+            .participation(env_participation())
             .build()
             .unwrap()
             .run_spec(SchemeSpec::NaiveUncoded)
