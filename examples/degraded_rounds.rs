@@ -1,0 +1,78 @@
+//! Degraded rounds: fault injection + deadlines and the degradation
+//! ladder.
+//!
+//! ```sh
+//! cargo run --release --example degraded_rounds
+//! ```
+//!
+//! Real fleets crash mid-round, lose uplink packets and occasionally lose
+//! the MEC unit's parity gradient — and latency SLOs force the server to
+//! close rounds before every straggler reports. This example runs the
+//! three schemes under increasingly hostile fault mixes with a quantile
+//! deadline and tabulates, per scheme, how its rounds actually resolved:
+//! the engine's degradation ladder (full → exact decode → parity
+//! compensation → renormalised partial fold → documented skip) records
+//! one rung per round, and the event stream carries achieved vs planned
+//! participation. CodedFedL's parity gradient keeps rounds off the
+//! partial/skip rungs that starve the uncoded schemes.
+
+use codedfedl::coordinator::EventLog;
+use codedfedl::schemes::SchemeSpec;
+use codedfedl::sim::fault::{DeadlineSpec, FaultSpec};
+use codedfedl::ExperimentBuilder;
+
+fn main() -> anyhow::Result<()> {
+    let mixes = [
+        FaultSpec::None,
+        FaultSpec::Crash { rate: 0.2 },
+        FaultSpec::Mixed { crash: 0.2, link: 0.3, parity: 0.3 },
+    ];
+    let schemes = [
+        SchemeSpec::NaiveUncoded,
+        SchemeSpec::GreedyUncoded { psi: 0.2 },
+        SchemeSpec::Coded { delta: 0.3 },
+    ];
+
+    println!(
+        "{:<18} {:>5} {:>6} {:>7} {:>8} {:>5} {:>12} {:>10}",
+        "faults / scheme", "full", "exact", "parity", "partial", "skip", "achieved", "final acc"
+    );
+    for faults in mixes {
+        // One session per mix: every scheme below faces the same fault
+        // realisation (the fault stream is scheme-independent) and the
+        // same 80th-percentile round deadline.
+        let session = ExperimentBuilder::preset("tiny")?
+            .epochs(12)
+            .faults(faults)
+            .deadline(DeadlineSpec::Quantile { q: 0.8 })
+            .build()?;
+        println!("--- {} ---", faults.label());
+        for spec in schemes {
+            let mut log = EventLog::default();
+            let mut scheme = spec.build();
+            let out = session.run_observed(scheme.as_mut(), &mut log)?;
+            let o = out.outcomes;
+            // Achieved participation: what fraction of the planned
+            // gradients actually entered the aggregates.
+            let planned: usize = log.events.iter().map(|ev| ev.planned).sum();
+            let arrived: usize = log.events.iter().map(|ev| ev.arrivals).sum();
+            let achieved = if planned > 0 {
+                arrived as f64 / planned as f64
+            } else {
+                0.0
+            };
+            println!(
+                "{:<18} {:>5} {:>6} {:>7} {:>8} {:>5} {:>11.1}% {:>10.4}",
+                spec.label(),
+                o.full,
+                o.exact_decode,
+                o.parity,
+                o.partial,
+                o.skip,
+                100.0 * achieved,
+                out.history.final_accuracy()
+            );
+        }
+    }
+    Ok(())
+}

@@ -21,9 +21,11 @@ use codedfedl::allocation::{self, NodeSpec};
 use codedfedl::benchutil::{bench, bench_iters, load_runtime, shapes_for, BenchReport, CountingAlloc};
 use codedfedl::coding::{gf256, Code, CodeSpec, DecodeScratch};
 use codedfedl::conf::ExperimentConfig;
+use codedfedl::coordinator::EventLog;
 use codedfedl::rng::Rng;
 use codedfedl::runtime::{GradJob, Runtime, RuntimeShapes};
 use codedfedl::schemes::CodedFedL;
+use codedfedl::sim::fault::{DeadlineSpec, FaultSpec};
 use codedfedl::sim::timeline::RoundTrace;
 use codedfedl::sim::KthScratch;
 use codedfedl::tensor::{Isa, Mat, SimdPolicy};
@@ -409,6 +411,36 @@ fn main() -> anyhow::Result<()> {
         session.runtime().threads(),
         session.runtime().isa_name(),
     );
+
+    // --- degraded epoch: the fault + deadline decision path (schema 6).
+    //     Mixed faults and an 80th-percentile deadline push rounds down
+    //     the degradation ladder; the record carries the rung histogram
+    //     and achieved participation so a perf diff can tell a genuinely
+    //     faster run from one that silently skipped rounds. ---
+    {
+        let session = ExperimentBuilder::preset("tiny")?
+            .epochs(1)
+            .faults(FaultSpec::Mixed { crash: 0.2, link: 0.2, parity: 0.3 })
+            .deadline(DeadlineSpec::Quantile { q: 0.8 })
+            .build()?;
+        let mut log = EventLog::default();
+        let out = session.run_observed(&mut CodedFedL::new(0.3), &mut log)?;
+        let planned: usize = log.events.iter().map(|ev| ev.planned).sum();
+        let arrived: usize = log.events.iter().map(|ev| ev.arrivals).sum();
+        let achieved = arrived as f64 / planned.max(1) as f64;
+        println!(
+            "degraded epoch rungs {:?}, achieved participation {:.1}%",
+            out.outcomes.as_array(),
+            100.0 * achieved
+        );
+        let shape = "tiny: mixed faults, q=0.8 deadline";
+        let threads = session.runtime().threads();
+        let (wu, it) = bench_iters(1, 10);
+        let stats = bench(&format!("degraded::epoch ({shape})"), wu, it, || {
+            std::hint::black_box(session.run(&mut CodedFedL::new(0.3)).unwrap());
+        });
+        report.record_degraded("degraded::epoch", shape, threads, &stats, &out.outcomes, achieved);
+    }
 
     // --- fleet_scale: the sampled-round decision path vs fleet size N
     //     (schema 5). One iteration is everything the engine does per

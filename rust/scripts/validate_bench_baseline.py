@@ -4,16 +4,22 @@
 Usage: validate_bench_baseline.py <committed_baseline.json> <smoke_run.json>
 
 Checks (coverage gates, not timing gates — smoke numbers are meaningless):
-  * both documents parse and carry the current schema (5) with a
+  * both documents parse and carry the current schema (6) with a
     well-formed, non-empty record list (op/shape/ns_per_iter/threads/iters
     plus the throughput fields — ``gflops`` (schema 3), the schema-4
     codec columns ``gbps``/``symbols_per_s``, and the schema-5 fleet
     columns ``n_clients``/``rounds_per_s`` — each a positive number or
-    null);
+    null — and the schema-6 robustness columns: ``rungs``, a 5-element
+    degradation-ladder histogram ``[full, exact_decode, parity, partial,
+    skip]`` of non-negative integers or null, and
+    ``achieved_participation``, a fraction in [0, 1] or null);
   * ``fleet_scale`` records carry non-null ``n_clients``/``rounds_per_s``,
     and the committed baseline times the sampled-round decision path at
     two or more distinct fleet sizes, so the flat-cost-vs-N claim stays
     diffable;
+  * ``degraded`` records carry non-null ``rungs``/``achieved_participation``
+    (a perf diff on a faulted run must always see how its rounds resolved,
+    so a "faster" run that silently skipped rounds is visible);
   * both documents record a non-empty ``isa`` string (the GEMM microkernel
     the run resolved — ``scalar`` / ``avx2+fma`` / ``neon`` / ``pjrt``),
     so perf numbers are always attributable to an instruction set;
@@ -35,7 +41,7 @@ next to the uploaded artifact.
 import json
 import sys
 
-SCHEMA = 5
+SCHEMA = 6
 RECORD_FIELDS = {
     "op": str,
     "shape": str,
@@ -49,6 +55,10 @@ RECORD_FIELDS = {
 THROUGHPUT_FIELDS = ("gflops", "gbps", "symbols_per_s", "n_clients", "rounds_per_s")
 # Ops whose records must carry the fleet columns non-null.
 FLEET_OP_PREFIX = "fleet_scale"
+# Ops whose records must carry the schema-6 robustness columns non-null.
+DEGRADED_OP_PREFIX = "degraded"
+# Number of degradation-ladder rungs in a ``rungs`` histogram.
+RUNG_COUNT = 5
 # Warn when a smoke run is this much slower than the committed baseline.
 REGRESSION_WARN_RATIO = 1.20
 
@@ -84,6 +94,35 @@ def check_doc(doc, name, errors):
                 if rec.get(field) is None:
                     errors.append(
                         f"{name}: records[{i}] is a {FLEET_OP_PREFIX} row and must carry "
+                        f"a non-null {field}"
+                    )
+        # Schema-6 robustness columns: rung histogram + achieved fraction.
+        for field in ("rungs", "achieved_participation"):
+            if field not in rec:
+                errors.append(f"{name}: records[{i}] is missing the schema-{SCHEMA} {field} field")
+        rungs = rec.get("rungs")
+        if rungs is not None and (
+            not isinstance(rungs, list)
+            or len(rungs) != RUNG_COUNT
+            or not all(isinstance(r, int) and r >= 0 for r in rungs)
+        ):
+            errors.append(
+                f"{name}: records[{i}].rungs is {rungs!r}, want a {RUNG_COUNT}-element "
+                f"list of non-negative integers or null"
+            )
+        achieved = rec.get("achieved_participation")
+        if achieved is not None and (
+            not isinstance(achieved, (int, float)) or not 0.0 <= achieved <= 1.0
+        ):
+            errors.append(
+                f"{name}: records[{i}].achieved_participation is {achieved!r}, "
+                f"want a fraction in [0, 1] or null"
+            )
+        if str(rec.get("op", "")).startswith(DEGRADED_OP_PREFIX):
+            for field in ("rungs", "achieved_participation"):
+                if rec.get(field) is None:
+                    errors.append(
+                        f"{name}: records[{i}] is a {DEGRADED_OP_PREFIX} row and must carry "
                         f"a non-null {field}"
                     )
         by_key[(rec.get("op"), rec.get("shape"))] = rec

@@ -17,7 +17,7 @@ use anyhow::Result;
 use crate::conf::ExperimentConfig;
 use crate::coordinator::TrainOutcome;
 use crate::experiment::{ExperimentBuilder, Session};
-use crate::metrics::History;
+use crate::metrics::{History, OutcomeCounts};
 use crate::runtime::{Runtime, RuntimeShapes};
 use crate::schemes::SchemeSpec;
 
@@ -127,6 +127,13 @@ pub struct BenchRecord {
     /// Achieved decision-path rounds per second (`1e9 / ns_per_iter`),
     /// recorded on `fleet_scale` rows (schema 5). `None` elsewhere.
     pub rounds_per_s: Option<f64>,
+    /// Degradation-ladder rung histogram of the training run behind a
+    /// `degraded` row (schema 6), in [`OutcomeCounts::as_array`] order:
+    /// `[full, exact_decode, parity, partial, skip]`. `None` elsewhere.
+    pub rungs: Option<[u64; 5]>,
+    /// Achieved-participation fraction (arrived / planned gradients) of
+    /// the run behind a `degraded` row (schema 6). `None` elsewhere.
+    pub achieved_participation: Option<f64>,
 }
 
 /// Collects [`TimingStats`] into the tracked-baseline JSON the perf
@@ -180,6 +187,8 @@ impl BenchReport {
             symbols_per_s: None,
             n_clients: None,
             rounds_per_s: None,
+            rungs: None,
+            achieved_participation: None,
         });
     }
 
@@ -207,6 +216,38 @@ impl BenchReport {
             n_clients: Some(n_clients),
             // 1e9 ns/s ÷ ns/round ≡ rounds/s
             rounds_per_s: Some(1e9 / stats.median_ns),
+            rungs: None,
+            achieved_participation: None,
+        });
+    }
+
+    /// Append a `degraded` record (schema 6): a training run under fault
+    /// injection and/or a round deadline, annotated with how its rounds
+    /// resolved (the degradation-ladder rung histogram) and the fraction
+    /// of planned gradients that actually arrived — so a perf diff can
+    /// tell a genuinely faster run from one that silently skipped rounds.
+    pub fn record_degraded(
+        &mut self,
+        op: &str,
+        shape: &str,
+        threads: usize,
+        stats: &TimingStats,
+        outcomes: &OutcomeCounts,
+        achieved_participation: f64,
+    ) {
+        self.records.push(BenchRecord {
+            op: op.to_string(),
+            shape: shape.to_string(),
+            ns_per_iter: stats.median_ns,
+            threads,
+            iters: stats.iters,
+            gflops: None,
+            gbps: None,
+            symbols_per_s: None,
+            n_clients: None,
+            rounds_per_s: None,
+            rungs: Some(outcomes.as_array()),
+            achieved_participation: Some(achieved_participation),
         });
     }
 
@@ -234,6 +275,8 @@ impl BenchReport {
             symbols_per_s: symbols.map(|s| s as f64 * 1e9 / stats.median_ns),
             n_clients: None,
             rounds_per_s: None,
+            rungs: None,
+            achieved_participation: None,
         });
     }
 
@@ -297,7 +340,7 @@ impl BenchReport {
         fn esc(s: &str) -> String {
             s.replace('\\', "\\\\").replace('"', "\\\"")
         }
-        let mut out = String::from("{\n  \"schema\": 5,\n");
+        let mut out = String::from("{\n  \"schema\": 6,\n");
         out.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
         out.push_str(&format!("  \"isa\": \"{}\",\n", esc(&self.isa)));
         match self.allocs_per_round {
@@ -315,7 +358,8 @@ impl BenchReport {
             out.push_str(&format!(
                 "    {{\"op\": \"{}\", \"shape\": \"{}\", \"ns_per_iter\": {:.1}, \
                  \"threads\": {}, \"iters\": {}, \"gflops\": {}, \"gbps\": {}, \
-                 \"symbols_per_s\": {}, \"n_clients\": {}, \"rounds_per_s\": {}}}{}\n",
+                 \"symbols_per_s\": {}, \"n_clients\": {}, \"rounds_per_s\": {}, \
+                 \"rungs\": {}, \"achieved_participation\": {}}}{}\n",
                 esc(&r.op),
                 esc(&r.shape),
                 r.ns_per_iter,
@@ -329,6 +373,11 @@ impl BenchReport {
                     None => "null".to_string(),
                 },
                 opt(r.rounds_per_s),
+                match r.rungs {
+                    Some(h) => format!("[{}, {}, {}, {}, {}]", h[0], h[1], h[2], h[3], h[4]),
+                    None => "null".to_string(),
+                },
+                opt(r.achieved_participation),
                 if i + 1 == self.records.len() { "" } else { "," }
             ));
         }
@@ -446,8 +495,12 @@ mod tests {
         rep.record_throughput("coding::encode", "dense 10+5", 1, &stats, Some(2_469), Some(2));
         // fleet row: one sampled-round decision path over 100k clients
         rep.record_fleet("fleet_scale::round", "n=100000 sample:k=31", 1, &stats, 100_000);
+        // degraded row: a faulted run that resolved 3 rounds full, 1 via
+        // parity compensation — with 87.5% of planned gradients arrived
+        let outcomes = OutcomeCounts { full: 3, parity: 1, ..Default::default() };
+        rep.record_degraded("degraded::epoch", "tiny mixed", 1, &stats, &outcomes, 0.875);
         let json = rep.to_json();
-        assert!(json.contains("\"schema\": 5"), "{json}");
+        assert!(json.contains("\"schema\": 6"), "{json}");
         assert!(json.contains("\"isa\": \"avx2+fma\""), "{json}");
         assert!(json.contains("\"op\": \"runtime::grad\""), "{json}");
         assert!(json.contains("\"shape\": \"client 200x512x10\""), "{json}");
@@ -467,10 +520,16 @@ mod tests {
         assert!(json.contains("\"rounds_per_s\": 810044."), "{json}");
         assert!(json.contains("\"n_clients\": null"), "{json}");
         assert!(json.contains("\"rounds_per_s\": null"), "{json}");
+        // degraded rows carry the rung histogram ([full, exact_decode,
+        // parity, partial, skip]) and achieved participation; others null
+        assert!(json.contains("\"rungs\": [3, 0, 1, 0, 0]"), "{json}");
+        assert!(json.contains("\"achieved_participation\": 0.875"), "{json}");
+        assert!(json.contains("\"rungs\": null"), "{json}");
+        assert!(json.contains("\"achieved_participation\": null"), "{json}");
         // unmeasured allocation gate serialises as null…
         assert!(json.contains("\"allocs_per_round\": null"), "{json}");
         // a trailing comma between consecutive records, none after the last
-        assert_eq!(json.matches("},\n").count(), 3, "{json}");
+        assert_eq!(json.matches("},\n").count(), 4, "{json}");
         // …and a measured one as the number
         rep.allocs_per_round = Some(0);
         assert!(rep.to_json().contains("\"allocs_per_round\": 0"), "{}", rep.to_json());

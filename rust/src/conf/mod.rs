@@ -20,6 +20,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::coding::{CodeSpec, GeneratorKind, RecoveryMode};
+use crate::sim::fault::{DeadlineSpec, FaultSpec};
 use crate::sim::scenario::ScenarioSpec;
 use crate::tensor::SimdPolicy;
 use crate::topology::{AggregationMode, AsymLinkSpec, ParticipationSpec};
@@ -65,6 +66,13 @@ pub struct ExperimentConfig {
     /// rounds (≥ 1; the final round is always evaluated). Telemetry only —
     /// training math is unaffected.
     pub eval_every: usize,
+    /// Coordinator deadline (`[training] deadline` / `--deadline`):
+    /// `none` (default — bit-identical to the open-ended coordinator),
+    /// `quantile:q=…` (close each round at the q-quantile of surviving
+    /// arrivals) or `fixed:t=…` (a hard per-round wall-clock cut).
+    /// Deadline-missing clients are resolved through the engine's
+    /// degradation ladder (see `coordinator::engine`).
+    pub deadline: DeadlineSpec,
     /// Native-backend worker threads (0 = available parallelism; capped
     /// at 512 by the runtime). Sizes the persistent worker pool spawned
     /// once per session — workers park between rounds, nothing spawns
@@ -82,6 +90,13 @@ pub struct ExperimentConfig {
     /// or `burst:slow=…,factor=…`. Every scheme on a session sees the
     /// same scenario realisation, so comparisons stay fair.
     pub scenario: ScenarioSpec,
+    /// Fault injection (`[faults]` section / `--faults`): `none`
+    /// (default — bit-identical to the fault-free engine),
+    /// `crash:rate=…`, `link:rate=…,retry=…`, `parity:rate=…` or
+    /// `mixed:crash=…,link=…,parity=…`. Faults compose with every
+    /// scenario and draw from their own RNG stream, so fault-free
+    /// histories are untouched.
+    pub faults: FaultSpec,
     /// Asymmetric downlink/uplink link overrides (`[fleet]` section):
     /// per-leg multipliers on the §V-A τ ladder plus per-leg erasure
     /// probabilities. `None` (default) keeps the paper's reciprocal
@@ -151,9 +166,11 @@ impl Default for ExperimentConfig {
             lr_decay_epochs: vec![40, 65],
             l2: 9e-6,
             eval_every: 1,
+            deadline: DeadlineSpec::None,
             threads: 0,
             simd: SimdPolicy::Auto,
             scenario: ScenarioSpec::Static,
+            faults: FaultSpec::None,
             fleet_asym: None,
             fleet_n: None,
             participation: ParticipationSpec::Full,
@@ -190,11 +207,13 @@ const KNOWN_KEYS: &[(&str, &[&str])] = &[
             "lr_decay_epochs",
             "l2",
             "eval_every",
+            "deadline",
         ],
     ),
     ("coding", &["u_max", "generator", "code", "recovery"]),
     ("runtime", &["threads", "simd"]),
     ("scenario", &["kind"]),
+    ("faults", &["kind"]),
     (
         "fleet",
         &["tau_down", "tau_up", "p_down", "p_up", "n", "participation", "shard_size", "aggregation"],
@@ -311,6 +330,12 @@ impl ExperimentConfig {
         tr.get_f64("l2", &mut c.l2)?;
         tr.get_usize("eval_every", &mut c.eval_every)?;
         tr.get_usize_array("lr_decay_epochs", &mut c.lr_decay_epochs)?;
+        if let Some(v) = tr.map.get("deadline") {
+            let s = v.as_str().ok_or_else(|| tr.bad("deadline", "string", v))?;
+            c.deadline = s
+                .parse()
+                .map_err(|e: String| ConfError::Invalid(format!("[training] deadline: {e}")))?;
+        }
 
         let cod = sect("coding");
         cod.get_usize("u_max", &mut c.u_max)?;
@@ -348,6 +373,14 @@ impl ExperimentConfig {
             c.scenario = s
                 .parse()
                 .map_err(|e: String| ConfError::Invalid(format!("[scenario] kind: {e}")))?;
+        }
+
+        let fa = sect("faults");
+        if let Some(v) = fa.map.get("kind") {
+            let s = v.as_str().ok_or_else(|| fa.bad("kind", "string", v))?;
+            c.faults = s
+                .parse()
+                .map_err(|e: String| ConfError::Invalid(format!("[faults] kind: {e}")))?;
         }
 
         // Any asym [fleet] key switches the fleet to the asymmetric
@@ -423,6 +456,12 @@ impl ExperimentConfig {
         self.scenario
             .validate()
             .map_err(|e| ConfError::Invalid(format!("[scenario] kind: {e}")))?;
+        self.faults
+            .validate()
+            .map_err(|e| ConfError::Invalid(format!("[faults] kind: {e}")))?;
+        self.deadline
+            .validate()
+            .map_err(|e| ConfError::Invalid(format!("[training] deadline: {e}")))?;
         if let Some(a) = &self.fleet_asym {
             a.validate().map_err(|e| ConfError::Invalid(format!("[fleet] {e}")))?;
         }
@@ -468,13 +507,13 @@ fn reject_unknown_keys(doc: &Doc) -> Result<(), ConfError> {
             return Err(ConfError::Invalid(format!(
                 "key `{first}` appears before any [section] header \
                  (sections: experiment, model, training, coding, runtime, \
-                 scenario, fleet)"
+                 scenario, faults, fleet)"
             )));
         }
         let Some((_, known)) = KNOWN_KEYS.iter().find(|(s, _)| s == section) else {
             return Err(ConfError::Invalid(format!(
                 "unknown section [{section}] (expected one of: experiment, model, \
-                 training, coding, runtime, scenario, fleet)"
+                 training, coding, runtime, scenario, faults, fleet)"
             )));
         };
         for key in keys.keys() {
@@ -702,6 +741,56 @@ generator = "rademacher"
             .unwrap_err()
             .to_string();
         assert!(e.contains("mode") && e.contains("kind"), "{e}");
+    }
+
+    #[test]
+    fn faults_kind_parses_defaults_and_rejects_garbage() {
+        assert_eq!(ExperimentConfig::default().faults, FaultSpec::None);
+        let c = ExperimentConfig::from_str_conf("[faults]\nkind = \"crash:rate=0.3\"\n").unwrap();
+        assert_eq!(c.faults, FaultSpec::Crash { rate: 0.3 });
+        let c = ExperimentConfig::from_str_conf("[faults]\nkind = \"link:rate=0.2,retry=2\"\n")
+            .unwrap();
+        assert_eq!(c.faults, FaultSpec::Link { rate: 0.2, retry: 2 });
+        // unknown kind names the section and the offender
+        let e = ExperimentConfig::from_str_conf("[faults]\nkind = \"meteor\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[faults]") && e.contains("meteor"), "{e}");
+        assert!(e.contains("expected one of"), "{e}");
+        // out-of-range rate is rejected at build time with its name
+        let e = ExperimentConfig::from_str_conf("[faults]\nkind = \"crash:rate=1.5\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("rate") && e.contains("[faults]"), "{e}");
+        // mistyped value names section and key
+        let e = ExperimentConfig::from_str_conf("[faults]\nkind = 3\n").unwrap_err().to_string();
+        assert!(e.contains("[faults]") && e.contains("kind"), "{e}");
+    }
+
+    #[test]
+    fn deadline_parses_defaults_and_rejects_out_of_range() {
+        assert_eq!(ExperimentConfig::default().deadline, DeadlineSpec::None);
+        let c = ExperimentConfig::from_str_conf("[training]\ndeadline = \"quantile:q=0.8\"\n")
+            .unwrap();
+        assert_eq!(c.deadline, DeadlineSpec::Quantile { q: 0.8 });
+        let c = ExperimentConfig::from_str_conf("[training]\ndeadline = \"fixed:t=12.5\"\n")
+            .unwrap();
+        assert_eq!(c.deadline, DeadlineSpec::Fixed { t: 12.5 });
+        // q outside (0,1] is rejected at build time, naming section + key
+        let e = ExperimentConfig::from_str_conf("[training]\ndeadline = \"quantile:q=1.5\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[training] deadline") && e.contains("q=1.5"), "{e}");
+        // t <= 0 likewise
+        let e = ExperimentConfig::from_str_conf("[training]\ndeadline = \"fixed:t=0\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[training] deadline") && e.contains('t'), "{e}");
+        // unknown kind lists the accepted forms
+        let e = ExperimentConfig::from_str_conf("[training]\ndeadline = \"soon\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("soon") && e.contains("expected one of"), "{e}");
     }
 
     #[test]

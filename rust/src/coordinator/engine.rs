@@ -32,6 +32,44 @@
 //! gradients through per-shard partial sums on the worker pool (see
 //! `fold_hier` below for the pinned, thread-invariant order).
 //!
+//! ## Faults + deadlines: the degradation ladder
+//!
+//! Two orthogonal robustness knobs compose with every scheme and every
+//! scenario:
+//!
+//! * `[faults]` / `--faults` ([`crate::sim::fault`]) injects seeded
+//!   client crashes, uplink losses (optionally retried with modelled
+//!   backoff) and server-side parity loss into the sampled round trace.
+//!   Fault draws come from their own RNG stream
+//!   ([`crate::sim::fault::FAULT_STREAM_TAG`], split off *after* every
+//!   historical stream), so `faults = "none"` histories are bit-for-bit
+//!   the pre-fault ones.
+//! * `[training] deadline` closes the round at a wall-clock cut — a
+//!   fixed `t` or the per-round `q`-quantile of surviving arrivals —
+//!   before the scheme plans: clients past the cut are simply gone,
+//!   exactly like scenario dropouts.
+//!
+//! When either knob is active the engine resolves each round's aggregate
+//! through an explicit **degradation ladder**, recording which rung fired
+//! in [`RoundEvent::outcome`] / [`TrainOutcome::outcomes`]:
+//!
+//! 1. **Full** — every planned participant folded (rung 0).
+//! 2. **Exact decode** — erasure recovery reconstructed the missing
+//!    gradients bit-exactly ([`RoundOutcome::ExactDecode`]).
+//! 3. **Parity compensation** — the coded parity gradient compensated
+//!    the stragglers in expectation ([`RoundOutcome::ParityCompensation`]).
+//! 4. **Partial fold** — the arrived subset, renormalised by the data
+//!    that actually returned ([`RoundOutcome::PartialFold`]).
+//! 5. **Skip** — nothing returned at all: θ is left untouched (no 0/0,
+//!    no NaN), the clock still advances by what the server waited, and
+//!    the round is reported as [`RoundOutcome::Skip`].
+//!
+//! Rungs 1–4 are the schemes' own aggregation outcomes; the engine only
+//! adds the final skip rung and the bookkeeping. With both knobs off the
+//! ladder never engages and the update math below is byte-for-byte the
+//! historical path (`deadline = "none"`, `faults = "none"` histories are
+//! golden-hash pinned by `tests/scenario_determinism.rs`).
+//!
 //! Per round, every participating node's gradient is *really* executed
 //! through the runtime's grad executor — the round's independent client
 //! requests go through [`Runtime::grad_batch_into`], which fans them out
@@ -59,12 +97,14 @@
 use anyhow::{Context, Result};
 
 use super::setup::FedSetup;
-use crate::metrics::{accuracy, History, Point};
+use crate::metrics::{accuracy, History, OutcomeCounts, Point, RoundOutcome};
 use crate::rng::Rng;
 use crate::runtime::{GradJob, PreparedTheta, Runtime};
 use crate::schemes::{GradRequest, RoundCtx, RoundExec, Scheme};
+use crate::sim::fault::{DeadlineSpec, FAULT_STREAM_TAG};
 use crate::sim::scenario::{Scenario, SCENARIO_STREAM_TAG};
 use crate::sim::timeline::RoundTrace;
+use crate::sim::KthScratch;
 use crate::tensor::Mat;
 use crate::topology::{
     AggregationMode, FleetShards, FleetView, ParticipationSampler, PARTICIPATION_STREAM_TAG,
@@ -85,6 +125,10 @@ pub struct TrainOutcome {
     pub u_star: Option<usize>,
     /// One-time parity upload overhead added to the clock (seconds).
     pub parity_overhead: f64,
+    /// Degradation-ladder rung histogram over *every* round (evaluated or
+    /// not) — how the run actually resolved its aggregates under faults
+    /// and deadlines. All-`full` on an unfaulted, deadline-free run.
+    pub outcomes: OutcomeCounts,
     /// Final model (q × c).
     pub theta: Mat,
 }
@@ -107,8 +151,16 @@ pub struct RoundEvent {
     pub step: usize,
     /// Cumulative simulated MEC clock after this round (seconds).
     pub clock: f64,
-    /// Client gradients that arrived and entered the aggregate.
+    /// Client gradients that arrived and entered the aggregate
+    /// (*achieved* participation).
     pub arrivals: usize,
+    /// The round's participant slots (*planned* participation — the full
+    /// fleet, or the sampled roster size). `arrivals as f64 / planned as
+    /// f64` is the round's achieved-participation fraction.
+    pub planned: usize,
+    /// Which degradation-ladder rung resolved the round's aggregate
+    /// (always [`RoundOutcome::Full`] when faults and deadlines are off).
+    pub outcome: RoundOutcome,
     /// Training objective after the round's update.
     pub loss: f64,
     /// Test accuracy after the round's update.
@@ -175,7 +227,17 @@ pub fn run(
     // fleet size, shard layout and every other stream.
     let mut part_stream = root.split(PARTICIPATION_STREAM_TAG);
     let part_base = part_stream.next_u64();
+    // The fault stream is appended after the participation stream — again
+    // off every historical split, and again scheme-independent: each
+    // scheme on a session faces the identical fault realisation. An
+    // inactive plan (`faults = "none"`) never draws from it.
+    let mut fault_rng = root.split(FAULT_STREAM_TAG);
+    let fault_plan = cfg.faults.build();
     let mut scenario: Box<dyn Scenario> = cfg.scenario.build();
+    // Degraded mode (the ladder's skip rung, see the module docs) only
+    // engages when a robustness knob is actually on — otherwise the
+    // update below is byte-for-byte the historical math.
+    let degraded = fault_plan.is_active() || cfg.deadline != DeadlineSpec::None;
 
     let prep = scheme
         .prepare(setup, rt, &mut code_rng)
@@ -231,6 +293,10 @@ pub fn run(
     let mut trace = RoundTrace::with_capacity(n);
     let mut eval_logits = Mat::zeros(setup.test_xhat.rows(), c);
     let mut probe_logits = Mat::zeros(cfg.local_batch, c);
+    // Quantile-deadline selection scratch — same reuse discipline, so a
+    // warm deadline round stays on the 0-alloc gate.
+    let mut kth_scratch = KthScratch::default();
+    let mut outcomes = OutcomeCounts::default();
     // A scenario that never perturbs the fleet (`static`) lets full-fleet
     // rounds skip the O(n) view reset entirely — the view built above is
     // already this round's fleet, bit-for-bit.
@@ -259,11 +325,38 @@ pub fn run(
         scenario.begin_round(iter, &mut view, &mut scenario_rng);
         let loads: &[f64] = if roster_mode { &roster_loads } else { &client_loads };
         trace.sample_into(&view, loads, server_load, &mut delay_rng);
+        // Faults mutate the sampled trace in place (crashes, uplink
+        // losses, parity loss), then the deadline closes it: clients past
+        // the cut are gone before any scheme looks, exactly like scenario
+        // dropouts — which is why every scheme composes unmodified.
+        fault_plan.apply(&mut trace, &mut fault_rng);
+        let deadline_t = match cfg.deadline {
+            DeadlineSpec::None => None,
+            DeadlineSpec::Fixed { t } => Some(t),
+            DeadlineSpec::Quantile { q } => {
+                // The q-quantile of this round's *surviving* arrivals:
+                // wait for ⌈q·k⌉ of the k clients faults left reachable.
+                let k = trace.delays().present_count();
+                if k == 0 {
+                    None
+                } else {
+                    let kth = ((q * k as f64).ceil() as usize).clamp(1, k);
+                    let (t, _) = trace
+                        .delays()
+                        .kth_fastest_into(kth, &mut kth_scratch)
+                        .map_err(anyhow::Error::msg)?;
+                    Some(t)
+                }
+            }
+        };
+        if let Some(t) = deadline_t {
+            trace.close_at(t);
+        }
         let ctx = RoundCtx { iter, epoch, step, setup, trace: &trace, roster };
 
         // --- the scheme's waiting policy decides who participates ---
         agg.as_mut_slice().fill(0.0);
-        let (arrivals, cost) = {
+        let (arrivals, planned, cost) = {
             // θ is packed once and borrowed by every grad call this round
             // (rust/PERF.md §Design); the scope bounds the borrow so the
             // update below can mutate θ again.
@@ -323,20 +416,64 @@ pub fn run(
             // and decodes over them without re-running anything.
             let exec = RoundExec::new(rt, &theta_prep, &grad_outs[..jobs.len()]);
             let cost = scheme.aggregate(&ctx, trace.delays(), &plan, &exec, &mut agg)?;
-            (plan.requests.len(), cost)
+            (plan.requests.len(), participants, cost)
         };
 
-        // g_M = (1/m̂)·agg + λθ  (eq. 30 + the §V-A L2 regulariser).
-        // m̂ = m for stochastically complete schemes (returned = 0) and the
-        // actual aggregate return (e.g. greedy's (1−ψ)m) otherwise.
-        let denom = if cost.returned > 0.0 { cost.returned } else { m };
-        agg.scale(1.0 / denom);
-        agg.axpy(cfg.l2 as f32, &theta);
+        // --- degradation-ladder resolution (module docs) ---
+        // The scheme reported how *its* aggregation resolved (rungs 1–4);
+        // the engine downgrades to the skip rung when degraded mode is on
+        // and the round folded nothing at all: no planned requests and no
+        // server-side contribution (parity compensation and exact decode
+        // both write into `agg` even with zero arrived clients).
+        let outcome = if degraded
+            && arrivals == 0
+            && !matches!(
+                cost.outcome,
+                RoundOutcome::ParityCompensation | RoundOutcome::ExactDecode
+            ) {
+            RoundOutcome::Skip
+        } else {
+            cost.outcome
+        };
+        outcomes.record(outcome);
 
-        // θ ← θ − μ_r g_M  (eq. 5).
-        theta.axpy(-lr, &agg);
+        if outcome == RoundOutcome::Skip {
+            // Skip rung: θ is left untouched — no 0/0, no NaN, just a
+            // documented stall — but the server still waited, so the
+            // clock advances by the scheme's round time when it charged
+            // one, else the deadline it held open, else the last event
+            // that actually completed (the surviving downlinks).
+            let dt = if cost.sim_seconds.is_finite() && cost.sim_seconds > 0.0 {
+                cost.sim_seconds
+            } else if let Some(t) = deadline_t {
+                t
+            } else {
+                // Events sort ascending with ∞ last; charge the last
+                // *finite* completion (0 on a fully silent round).
+                trace
+                    .events()
+                    .iter()
+                    .rev()
+                    .map(|ev| ev.time())
+                    .find(|t| t.is_finite())
+                    .unwrap_or(0.0)
+            };
+            clock += dt;
+        } else {
+            // g_M = (1/m̂)·agg + λθ  (eq. 30 + the §V-A L2 regulariser).
+            // m̂ = m for stochastically complete schemes (returned = 0)
+            // and the actual aggregate return (e.g. greedy's (1−ψ)m)
+            // otherwise. With faults and deadlines off this branch is
+            // unconditional and byte-for-byte the historical update.
+            let denom = if cost.returned > 0.0 { cost.returned } else { m };
+            agg.scale(1.0 / denom);
+            agg.axpy(cfg.l2 as f32, &theta);
 
-        clock += cost.sim_seconds;
+            // θ ← θ − μ_r g_M  (eq. 5).
+            theta.axpy(-lr, &agg);
+
+            clock += cost.sim_seconds;
+        }
 
         // --- evaluation + event fan-out (sampled every `eval_every`
         //     rounds; the final round is always evaluated) ---
@@ -355,6 +492,8 @@ pub fn run(
             step,
             clock,
             arrivals,
+            planned,
+            outcome,
             loss,
             acc,
         };
@@ -369,6 +508,7 @@ pub fn run(
         t_star: stats.t_star,
         u_star: stats.u_star,
         parity_overhead: stats.parity_overhead,
+        outcomes,
         theta,
     })
 }

@@ -6,13 +6,16 @@
 //! [`engine::run`] executes any [`crate::schemes::Scheme`] to completion
 //! on the virtual MEC clock, computing every gradient through the runtime
 //! and streaming one [`RoundEvent`] per round to registered
-//! [`RoundObserver`]s. [`trainer::run_scheme`] is the deprecated pre-trait
-//! entry point.
+//! [`RoundObserver`]s — resolving each round through the degradation
+//! ladder (see the engine module docs) when `[faults]` or a `[training]
+//! deadline` is active. [`trainer::run_scheme`] is the deprecated
+//! pre-trait entry point.
 
 pub mod engine;
 pub mod setup;
 pub mod trainer;
 
+pub use crate::metrics::{OutcomeCounts, RoundOutcome};
 pub use engine::{EventLog, RoundEvent, RoundObserver, TrainOutcome};
 pub use setup::FedSetup;
 #[allow(deprecated)]

@@ -28,6 +28,7 @@ use crate::conf::{ConfError, ExperimentConfig};
 use crate::coordinator::{engine, FedSetup, RoundObserver, TrainOutcome};
 use crate::runtime::{Runtime, RuntimeShapes};
 use crate::schemes::{CodedFedL, Scheme, SchemeSpec};
+use crate::sim::fault::{DeadlineSpec, FaultSpec};
 use crate::sim::scenario::ScenarioSpec;
 use crate::tensor::SimdPolicy;
 use crate::topology::{AggregationMode, AsymLinkSpec, ParticipationSpec};
@@ -134,6 +135,11 @@ impl ExperimentBuilder {
         l2: f64,
         /// Evaluate every `eval_every` rounds (≥ 1; final round always).
         eval_every: usize,
+        /// Coordinator deadline (`DeadlineSpec::None` — the default —
+        /// keeps the open-ended coordinator bit-identical; `Quantile` /
+        /// `Fixed` close each round and resolve stragglers through the
+        /// engine's degradation ladder).
+        deadline: DeadlineSpec,
         /// Native worker threads (0 = available parallelism).
         threads: usize,
         /// SIMD microkernel policy (`Auto` detects AVX2+FMA / NEON once;
@@ -143,6 +149,11 @@ impl ExperimentBuilder {
         /// default — is bit-identical to the fixed-fleet behaviour;
         /// `Dropout`/`Fading`/`Burst` open the non-stationary regimes).
         scenario: ScenarioSpec,
+        /// Fault injection (`FaultSpec::None` — the default — is
+        /// bit-identical to the fault-free engine; `Crash`/`Link`/
+        /// `Parity`/`Mixed` inject seeded failures that compose with
+        /// every scenario).
+        faults: FaultSpec,
         /// Asymmetric downlink/uplink link overrides (`None` keeps the
         /// paper's reciprocal §V-A links).
         fleet_asym: Option<AsymLinkSpec>,

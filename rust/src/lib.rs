@@ -60,6 +60,24 @@
 //! exactly by the timeline, with the allocation optimizer seeing each
 //! client's matched-mean reciprocal surrogate.
 //!
+//! ## Faults, deadlines and degraded rounds
+//!
+//! Orthogonal to scenarios, [`sim::fault`] (`[faults]` config /
+//! `--faults` / [`ExperimentBuilder::faults`]) injects seeded client
+//! crashes, uplink losses (optionally retried with modelled backoff) and
+//! server-side parity loss into the sampled timeline, and `[training]
+//! deadline` / `--deadline` / [`ExperimentBuilder::deadline`] closes
+//! each round at a fixed or quantile wall-clock cut. The engine then
+//! resolves every round through an explicit **degradation ladder** —
+//! exact decode → parity compensation → renormalised partial fold →
+//! documented skip — never panicking and never producing NaN, and
+//! reports the rung per round ([`metrics::RoundOutcome`] on
+//! [`coordinator::RoundEvent`], histogrammed in
+//! [`coordinator::TrainOutcome::outcomes`]) so experiments can plot
+//! achieved vs planned participation. Fault draws use a dedicated RNG
+//! stream, so `faults = "none"` + `deadline = "none"` histories are
+//! bit-for-bit the historical ones. See `examples/degraded_rounds.rs`.
+//!
 //! ## Erasure coding and exact recovery
 //!
 //! The coded scheme's straggler tolerance is pluggable ([`coding`]): a
@@ -111,9 +129,10 @@
 //! reuses all per-round buffers — a warm training round performs zero
 //! heap allocations on the compute path (`tests/alloc_gate.rs`). See
 //! `rust/PERF.md` for the kernel/dispatch/threading/allocation design,
-//! the tracked `BENCH_hotpath.json` baseline (schema 4: per-op GFLOP/s,
-//! codec GB/s + symbols/s, and the selected ISA; `cargo bench --bench
-//! hotpath`), and how to compare runs across PRs.
+//! the tracked `BENCH_hotpath.json` baseline (schema 6: per-op GFLOP/s,
+//! codec GB/s + symbols/s, the selected ISA, fleet-scale rounds/s, and
+//! the degraded-run rung histogram + achieved participation; `cargo
+//! bench --bench hotpath`), and how to compare runs across PRs.
 //!
 //! Knobs: thread count comes from `[runtime] threads` / `--threads` /
 //! [`ExperimentBuilder::threads`] (0 = all cores) and never changes
@@ -153,5 +172,7 @@ pub mod topology;
 
 pub use coordinator::{FedSetup, RoundEvent, RoundObserver, TrainOutcome};
 pub use experiment::{ExperimentBuilder, Session};
+pub use metrics::{OutcomeCounts, RoundOutcome};
 pub use schemes::{Scheme, SchemeSpec};
+pub use sim::fault::{DeadlineSpec, FaultSpec};
 pub use sim::scenario::{Scenario, ScenarioSpec};

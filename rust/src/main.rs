@@ -50,6 +50,18 @@ fn commands() -> Vec<Command> {
             is_flag: false,
         },
         OptSpec {
+            name: "faults",
+            help: "fault injection: none | crash[:rate=r] | link[:rate=r,retry=n] | parity[:rate=r] | mixed[:crash=a,link=b,parity=c]",
+            default: None,
+            is_flag: false,
+        },
+        OptSpec {
+            name: "deadline",
+            help: "round deadline: none | quantile[:q=0.9] | fixed[:t=30] (degradation ladder past the cut)",
+            default: None,
+            is_flag: false,
+        },
+        OptSpec {
             name: "fleet-n",
             help: "simulated fleet size N (>= clients; data shards tile the training shards)",
             default: None,
@@ -167,6 +179,12 @@ fn builder_from(args: &Args) -> Result<ExperimentBuilder> {
     if let Some(s) = args.get("scenario") {
         b = b.scenario(s.parse().map_err(anyhow::Error::msg)?);
     }
+    if let Some(s) = args.get("faults") {
+        b = b.faults(s.parse().map_err(anyhow::Error::msg)?);
+    }
+    if let Some(s) = args.get("deadline") {
+        b = b.deadline(s.parse().map_err(anyhow::Error::msg)?);
+    }
     if let Some(n) = args.parse_usize("fleet-n").map_err(anyhow::Error::msg)? {
         b = b.fleet_n(Some(n));
     }
@@ -231,9 +249,16 @@ struct ProgressPrinter {
 impl RoundObserver for ProgressPrinter {
     fn on_round(&mut self, ev: &RoundEvent) {
         if ev.iter % self.stride == 0 || ev.iter == 1 {
+            // Degraded rounds (faults/deadline) tag the ladder rung that
+            // resolved the aggregate; full rounds stay on the old format.
+            let rung = if ev.outcome == codedfedl::metrics::RoundOutcome::Full {
+                String::new()
+            } else {
+                format!("  [{}]", ev.outcome.label())
+            };
             println!(
-                "iter {:>5}  sim {:>10.1} s  acc {:.4}  loss {:.5}  ({} arrivals)",
-                ev.iter, ev.clock, ev.acc, ev.loss, ev.arrivals
+                "iter {:>5}  sim {:>10.1} s  acc {:.4}  loss {:.5}  ({}/{} arrivals){rung}",
+                ev.iter, ev.clock, ev.acc, ev.loss, ev.arrivals, ev.planned
             );
         }
     }

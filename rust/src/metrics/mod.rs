@@ -77,6 +77,93 @@ impl History {
     }
 }
 
+/// Which rung of the engine's degradation ladder resolved a round's
+/// aggregate (see `coordinator::engine`). Ordered best → worst: the
+/// engine records exactly one outcome per round, and experiments report
+/// the histogram ([`OutcomeCounts`]) next to achieved participation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundOutcome {
+    /// Every planned gradient arrived; the aggregate is the full planned
+    /// sum (also the only outcome outside degraded mode).
+    Full,
+    /// Some planned gradients were missing but the erasure code decoded
+    /// them exactly from the arrived subset + parity.
+    ExactDecode,
+    /// The coded scheme compensated for stragglers with the parity
+    /// gradient in expectation (the paper's operating mode).
+    ParityCompensation,
+    /// A renormalized partial fold over the arrivals that beat the
+    /// deadline — unbiased per-sample scaling, reduced participation.
+    PartialFold,
+    /// Nothing usable arrived: the round was skipped. Theta is unchanged
+    /// and the round still advances the simulated clock.
+    Skip,
+}
+
+impl RoundOutcome {
+    /// Stable index into [`OutcomeCounts`]' rung histogram.
+    pub fn rung(self) -> usize {
+        match self {
+            RoundOutcome::Full => 0,
+            RoundOutcome::ExactDecode => 1,
+            RoundOutcome::ParityCompensation => 2,
+            RoundOutcome::PartialFold => 3,
+            RoundOutcome::Skip => 4,
+        }
+    }
+
+    /// Short stable label (bench reports, CLI telemetry).
+    pub fn label(self) -> &'static str {
+        match self {
+            RoundOutcome::Full => "full",
+            RoundOutcome::ExactDecode => "exact_decode",
+            RoundOutcome::ParityCompensation => "parity",
+            RoundOutcome::PartialFold => "partial",
+            RoundOutcome::Skip => "skip",
+        }
+    }
+}
+
+/// Per-run histogram of [`RoundOutcome`] rungs, accumulated by the engine
+/// for every training round (not just evaluated ones).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OutcomeCounts {
+    pub full: u64,
+    pub exact_decode: u64,
+    pub parity: u64,
+    pub partial: u64,
+    pub skip: u64,
+}
+
+impl OutcomeCounts {
+    pub fn record(&mut self, outcome: RoundOutcome) {
+        match outcome {
+            RoundOutcome::Full => self.full += 1,
+            RoundOutcome::ExactDecode => self.exact_decode += 1,
+            RoundOutcome::ParityCompensation => self.parity += 1,
+            RoundOutcome::PartialFold => self.partial += 1,
+            RoundOutcome::Skip => self.skip += 1,
+        }
+    }
+
+    /// Total rounds recorded.
+    pub fn total(&self) -> u64 {
+        self.full + self.exact_decode + self.parity + self.partial + self.skip
+    }
+
+    /// Rounds that resolved below the top (full-participation) rung.
+    pub fn degraded(&self) -> u64 {
+        self.exact_decode + self.parity + self.partial + self.skip
+    }
+
+    /// The histogram as a fixed rung-indexed array
+    /// (`[full, exact_decode, parity, partial, skip]` — schema-6 bench
+    /// column order).
+    pub fn as_array(&self) -> [u64; 5] {
+        [self.full, self.exact_decode, self.parity, self.partial, self.skip]
+    }
+}
+
 /// One row of Table II/III: target accuracy + per-scheme times + gains.
 #[derive(Clone, Debug)]
 pub struct GainRow {
@@ -176,6 +263,38 @@ mod tests {
         assert_eq!(row.gain_vs_greedy(), Some(6.0));
         let s = row.render();
         assert!(s.contains("2.0x") && s.contains("6.0x"), "{s}");
+    }
+
+    #[test]
+    fn outcome_counts_record_and_summarise() {
+        let mut c = OutcomeCounts::default();
+        for o in [
+            RoundOutcome::Full,
+            RoundOutcome::Full,
+            RoundOutcome::ExactDecode,
+            RoundOutcome::ParityCompensation,
+            RoundOutcome::PartialFold,
+            RoundOutcome::Skip,
+        ] {
+            c.record(o);
+        }
+        assert_eq!(c.total(), 6);
+        assert_eq!(c.degraded(), 4);
+        assert_eq!(c.as_array(), [2, 1, 1, 1, 1]);
+        // rung indices match the histogram order
+        for (i, o) in [
+            RoundOutcome::Full,
+            RoundOutcome::ExactDecode,
+            RoundOutcome::ParityCompensation,
+            RoundOutcome::PartialFold,
+            RoundOutcome::Skip,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            assert_eq!(o.rung(), i);
+        }
+        assert_eq!(RoundOutcome::Skip.label(), "skip");
     }
 
     #[test]

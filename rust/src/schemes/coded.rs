@@ -36,6 +36,7 @@ use crate::coding::{
     RecoveryMode,
 };
 use crate::coordinator::FedSetup;
+use crate::metrics::RoundOutcome;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::sim::timeline::{Leg, LegEvent};
@@ -257,7 +258,11 @@ impl CodedFedL {
             // normalise by the rows that actually arrived (0 ⇒ the engine
             // falls back to m and the round is a pure decay step).
             let returned = (plan.requests.len() * ctx.setup.cfg.local_batch) as f32;
-            return Ok(RoundCost { sim_seconds: plan.round_time, returned });
+            return Ok(RoundCost {
+                sim_seconds: plan.round_time,
+                returned,
+                outcome: RoundOutcome::PartialFold,
+            });
         }
         let n = es.have.len();
         anyhow::ensure!(
@@ -268,7 +273,11 @@ impl CodedFedL {
         if es.have.iter().all(|&h| h) {
             // Everyone arrived: the engine's fold already is the
             // all-arrived aggregate; nothing to reconstruct.
-            return Ok(RoundCost { sim_seconds: plan.round_time, returned: 0.0 });
+            return Ok(RoundCost {
+                sim_seconds: plan.round_time,
+                returned: 0.0,
+                outcome: RoundOutcome::Full,
+            });
         }
         let grads = exec.planned_grads();
         let ExactState { code, isa, symbol_len, have, src, repairs, recon, scratch, round, .. } =
@@ -306,7 +315,11 @@ impl CodedFedL {
                 agg.axpy(1.0, recon);
             }
         }
-        Ok(RoundCost { sim_seconds: plan.round_time, returned: 0.0 })
+        Ok(RoundCost {
+            sim_seconds: plan.round_time,
+            returned: 0.0,
+            outcome: RoundOutcome::ExactDecode,
+        })
     }
 }
 
@@ -397,7 +410,8 @@ impl Scheme for CodedFedL {
         // 1/((1−pnr_C)·u*), whenever the MEC unit itself makes t*. The
         // mask and output buffer are held in the scheme state, so the
         // round loop allocates nothing here.
-        if delays.server_t <= cs.t_star {
+        let parity_in = delays.server_t <= cs.t_star;
+        if parity_in {
             let scale = 1.0 / ((1.0 - cs.pnr_server) as f32 * cs.u_star as f32);
             let CodedState { parity, parity_mask, parity_grad, .. } = cs;
             let (xp, yp) = &parity[ctx.step];
@@ -405,9 +419,21 @@ impl Scheme for CodedFedL {
                 .context("coded gradient over parity data")?;
             agg.axpy(scale, parity_grad);
         }
+        // Every client made the deadline ⇒ the full planned aggregate;
+        // else the parity gradient (when the MEC unit itself made t* —
+        // server-side parity faults carry T_C = ∞ and fail the check)
+        // compensates the stragglers in expectation; else the round is an
+        // uncompensated partial fold.
+        let outcome = if plan.requests.len() == ctx.participants() {
+            RoundOutcome::Full
+        } else if parity_in {
+            RoundOutcome::ParityCompensation
+        } else {
+            RoundOutcome::PartialFold
+        };
         // Every round costs exactly t*; the return is stochastically
         // complete (returned = 0.0 ⇒ engine normalises by m).
-        Ok(RoundCost { sim_seconds: plan.round_time, returned: 0.0 })
+        Ok(RoundCost { sim_seconds: plan.round_time, returned: 0.0, outcome })
     }
 
     fn stats(&self) -> SchemeStats {

@@ -3,6 +3,7 @@
 use anyhow::Result;
 
 use super::{GradRequest, RoundCost, RoundCtx, RoundExec, RoundPlan, Scheme};
+use crate::metrics::RoundOutcome;
 use crate::sim::{KthScratch, RoundDelays};
 use crate::tensor::Mat;
 
@@ -86,6 +87,14 @@ impl Scheme for GreedyUncoded {
         // Normalise by the *actual* aggregate return (1−ψ)m — greedy's
         // discards are real data loss, not stochastic shortfall.
         let returned = (plan.requests.len() * ctx.setup.cfg.local_batch) as f32;
-        Ok(RoundCost { sim_seconds: plan.round_time, returned })
+        // Greedy *plans* to fold only k winners: reaching its own k is its
+        // full outcome; fewer (deadline/fault losses past the plan) is a
+        // partial fold.
+        let outcome = if plan.requests.len() >= self.k(ctx.participants()) {
+            RoundOutcome::Full
+        } else {
+            RoundOutcome::PartialFold
+        };
+        Ok(RoundCost { sim_seconds: plan.round_time, returned, outcome })
     }
 }

@@ -38,6 +38,7 @@ use anyhow::Result;
 
 use crate::conf::ExperimentConfig;
 use crate::coordinator::FedSetup;
+use crate::metrics::RoundOutcome;
 use crate::rng::Rng;
 use crate::runtime::{PreparedTheta, Runtime};
 use crate::sim::timeline::RoundTrace;
@@ -162,6 +163,11 @@ pub struct RoundCost {
     /// eq. (30). `0.0` means "stochastically complete" and the engine
     /// falls back to the global batch size `m` (naive/coded semantics).
     pub returned: f32,
+    /// Which degradation-ladder rung resolved the aggregate (see
+    /// `coordinator::engine`). The engine downgrades this to
+    /// [`RoundOutcome::Skip`] itself when a degraded-mode round folded
+    /// nothing, so schemes only report how *their* aggregation resolved.
+    pub outcome: RoundOutcome,
 }
 
 /// Execution handle passed to [`Scheme::aggregate`]: lets a scheme run
@@ -264,7 +270,11 @@ pub trait Scheme {
         agg: &mut Mat,
     ) -> Result<RoundCost> {
         let _ = (ctx, delays, exec, agg);
-        Ok(RoundCost { sim_seconds: plan.round_time, returned: 0.0 })
+        Ok(RoundCost {
+            sim_seconds: plan.round_time,
+            returned: 0.0,
+            outcome: RoundOutcome::Full,
+        })
     }
 
     /// Scheme internals worth reporting (deadline, redundancy, overheads).

@@ -4,6 +4,7 @@
 use anyhow::Result;
 
 use super::{GradRequest, RoundCost, RoundCtx, RoundExec, RoundPlan, Scheme};
+use crate::metrics::RoundOutcome;
 use crate::sim::RoundDelays;
 use crate::tensor::Mat;
 
@@ -56,6 +57,11 @@ impl Scheme for NaiveUncoded {
         // under scenario dropout the absent clients' data really is
         // missing from the round, mirroring greedy's discard pricing.
         let returned = (plan.requests.len() * ctx.setup.cfg.local_batch) as f32;
-        Ok(RoundCost { sim_seconds: plan.round_time, returned })
+        let outcome = if plan.requests.len() == ctx.participants() {
+            RoundOutcome::Full
+        } else {
+            RoundOutcome::PartialFold
+        };
+        Ok(RoundCost { sim_seconds: plan.round_time, returned, outcome })
     }
 }

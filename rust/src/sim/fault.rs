@@ -1,0 +1,617 @@
+//! Seeded, scheme-independent fault injection on the round timeline.
+//!
+//! Scenarios ([`crate::sim::scenario`]) model *clean* network variation:
+//! a dropped client is known-gone before the round starts and nobody
+//! waits for it. Faults model the ugly middle: a client that dies *after*
+//! receiving θ (its compute leg never completes), an uplink whose payload
+//! is lost after the client did the work (optionally re-priced by a
+//! modelled retry + backoff), and the MEC unit's parity gradient failing
+//! server-side. The related erasure-centric FL work (arXiv:2007.03273)
+//! motivates treating these erasures — not mere slowness — as the
+//! first-class failure model; the engine's degradation ladder
+//! ([`crate::coordinator::engine`]) is what absorbs them.
+//!
+//! A [`FaultSpec`] is the CLI/TOML-facing description (`--faults`,
+//! `[faults] kind = …`, [`crate::ExperimentBuilder::faults`]); a built
+//! [`FaultPlan`] mutates each sampled [`RoundTrace`] *after* scenario
+//! modulation and leg sampling, so faults compose with every scenario and
+//! every scheme: schemes keep consuming the trace/delay view and simply
+//! observe fewer (or later) arrivals.
+//!
+//! Determinism: a plan draws only from the dedicated stream the engine
+//! splits at [`FAULT_STREAM_TAG`] — appended after every historical
+//! stream, so pre-fault runs keep their exact sequences — and an inactive
+//! plan (`faults = none` or all rates zero) never touches the RNG at all,
+//! keeping `faults = none` bit-identical to pre-fault behaviour.
+
+use crate::rng::Rng;
+use crate::sim::timeline::RoundTrace;
+
+/// Tag of the RNG stream fault plans draw from. Split off the experiment
+/// root after the scenario and participation streams (scheme-independent,
+/// like theirs): every scheme on a session faces the same fault
+/// realisation, and all pre-fault streams keep their historical
+/// sequences.
+pub const FAULT_STREAM_TAG: u64 = 0xFA17_0001;
+
+/// Closed, serialisable description of the built-in fault mixes — the
+/// form the CLI (`--faults`), TOML files (`[faults] kind = …`) and tests
+/// speak. `parse` accepts `none`, `crash[:rate=r]`,
+/// `link[:rate=r,retry=n]`, `parity[:rate=r]` and
+/// `mixed[:crash=a,link=b,parity=c]`.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum FaultSpec {
+    /// No injection (default; bit-identical to pre-fault runs — the
+    /// fault RNG stream is never touched).
+    #[default]
+    None,
+    /// Each present client dies mid-round with the given probability:
+    /// it received θ but its compute leg never completes, so neither a
+    /// compute nor an uplink event reaches the server.
+    Crash { rate: f64 },
+    /// Each surviving uplink loses its payload with the given
+    /// probability. `retry` > 0 models retransmission: each of up to
+    /// `retry` attempts redelivers with probability `1 - rate`, pricing
+    /// one backoff + one retransmit (two uplink durations) per failed
+    /// attempt onto the timeline; if all attempts fail the gradient is
+    /// lost.
+    Link { rate: f64, retry: usize },
+    /// The MEC unit's parity gradient is lost server-side with the given
+    /// probability (the coded schemes see no parity completion that
+    /// round).
+    Parity { rate: f64 },
+    /// All three at once: crash, single-attempt link loss and parity
+    /// loss with independent probabilities.
+    Mixed { crash: f64, link: f64, parity: f64 },
+}
+
+impl FaultSpec {
+    pub fn label(&self) -> String {
+        match self {
+            FaultSpec::None => "none".into(),
+            FaultSpec::Crash { rate } => format!("crash(rate={rate})"),
+            FaultSpec::Link { rate, retry } => format!("link(rate={rate},retry={retry})"),
+            FaultSpec::Parity { rate } => format!("parity(rate={rate})"),
+            FaultSpec::Mixed { crash, link, parity } => {
+                format!("mixed(crash={crash},link={link},parity={parity})")
+            }
+        }
+    }
+
+    /// Parse a fault string: `none`, `crash`, `crash:rate=0.3`,
+    /// `link:rate=0.2,retry=2`, `parity:rate=0.5`,
+    /// `mixed:crash=0.1,link=0.1,parity=0.2`, … Unknown kinds, unknown
+    /// parameters and out-of-range values are errors naming the offender
+    /// and the accepted forms.
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let (name, params) = match s.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p)),
+            None => (s.trim(), None),
+        };
+        // Comma-separated key=value list against a (key, default) table.
+        let kvs = |allowed: &[(&str, f64)]| -> Result<Vec<f64>, String> {
+            let mut vals: Vec<f64> = allowed.iter().map(|&(_, d)| d).collect();
+            let Some(p) = params else { return Ok(vals) };
+            for part in p.split(',') {
+                let part = part.trim();
+                let (k, v) = part.split_once('=').ok_or_else(|| {
+                    format!("faults {name:?}: expected key=value, got {part:?}")
+                })?;
+                let idx = allowed
+                    .iter()
+                    .position(|&(key, _)| key == k.trim())
+                    .ok_or_else(|| {
+                        let keys: Vec<&str> = allowed.iter().map(|&(key, _)| key).collect();
+                        format!(
+                            "faults {name:?}: unknown parameter {:?} (expected one of {})",
+                            k.trim(),
+                            keys.join(", ")
+                        )
+                    })?;
+                vals[idx] = v
+                    .trim()
+                    .parse::<f64>()
+                    .map_err(|e| format!("faults {name:?}: {}: {e}", k.trim()))?;
+            }
+            Ok(vals)
+        };
+        let spec = match name {
+            "none" => match params {
+                None => FaultSpec::None,
+                Some(p) => {
+                    return Err(format!("faults \"none\" takes no parameters, got {p:?}"))
+                }
+            },
+            "crash" => {
+                let v = kvs(&[("rate", 0.1)])?;
+                FaultSpec::Crash { rate: v[0] }
+            }
+            "link" => {
+                let v = kvs(&[("rate", 0.1), ("retry", 0.0)])?;
+                if v[1] < 0.0 || v[1].fract() != 0.0 || v[1] > 64.0 {
+                    return Err(format!(
+                        "faults \"link\": retry must be an integer in 0..=64, got {}",
+                        v[1]
+                    ));
+                }
+                FaultSpec::Link { rate: v[0], retry: v[1] as usize }
+            }
+            "parity" => {
+                let v = kvs(&[("rate", 0.1)])?;
+                FaultSpec::Parity { rate: v[0] }
+            }
+            "mixed" => {
+                let v = kvs(&[("crash", 0.1), ("link", 0.1), ("parity", 0.1)])?;
+                FaultSpec::Mixed { crash: v[0], link: v[1], parity: v[2] }
+            }
+            other => {
+                return Err(format!(
+                    "unknown faults kind {other:?} (expected one of none | crash[:rate=r] | \
+                     link[:rate=r,retry=n] | parity[:rate=r] | \
+                     mixed[:crash=a,link=b,parity=c])"
+                ))
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Range-check the parameters (also called by the config validator,
+    /// since specs can be built directly). Rates are probabilities —
+    /// rate 1.0 is legal and forces the fault every round (the empty-round
+    /// regression path).
+    pub fn validate(&self) -> Result<(), String> {
+        fn rate(kind: &str, param: &str, v: f64) -> Result<(), String> {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!(
+                    "faults {kind:?}: {param}={v} out of range (expected one of [0,1])"
+                ));
+            }
+            Ok(())
+        }
+        match *self {
+            FaultSpec::None => Ok(()),
+            FaultSpec::Crash { rate: r } => rate("crash", "rate", r),
+            FaultSpec::Link { rate: r, retry: _ } => rate("link", "rate", r),
+            FaultSpec::Parity { rate: r } => rate("parity", "rate", r),
+            FaultSpec::Mixed { crash, link, parity } => {
+                rate("mixed", "crash", crash)?;
+                rate("mixed", "link", link)?;
+                rate("mixed", "parity", parity)
+            }
+        }
+    }
+
+    /// Instantiate the per-round injection plan.
+    pub fn build(&self) -> FaultPlan {
+        match *self {
+            FaultSpec::None => FaultPlan {
+                crash_rate: 0.0,
+                link_rate: 0.0,
+                link_retries: 0,
+                parity_rate: 0.0,
+            },
+            FaultSpec::Crash { rate } => FaultPlan {
+                crash_rate: rate,
+                link_rate: 0.0,
+                link_retries: 0,
+                parity_rate: 0.0,
+            },
+            FaultSpec::Link { rate, retry } => FaultPlan {
+                crash_rate: 0.0,
+                link_rate: rate,
+                link_retries: retry,
+                parity_rate: 0.0,
+            },
+            FaultSpec::Parity { rate } => FaultPlan {
+                crash_rate: 0.0,
+                link_rate: 0.0,
+                link_retries: 0,
+                parity_rate: rate,
+            },
+            FaultSpec::Mixed { crash, link, parity } => FaultPlan {
+                crash_rate: crash,
+                link_rate: link,
+                link_retries: 0,
+                parity_rate: parity,
+            },
+        }
+    }
+}
+
+impl std::str::FromStr for FaultSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        FaultSpec::parse(s)
+    }
+}
+
+/// A built fault mix, applied to every sampled round trace.
+///
+/// Draw order is the reproducibility contract: present clients in index
+/// order (crash draw; survivors draw link loss, then one draw per retry
+/// attempt until redelivery), then one server parity draw. An inactive
+/// plan returns before the first draw, so `faults = none` never touches
+/// the RNG stream. Allocation-free: every mutation is an in-place
+/// retain/overwrite on the trace's reused buffers (the warm-round gate in
+/// `tests/alloc_gate.rs` pins this).
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    crash_rate: f64,
+    link_rate: f64,
+    link_retries: usize,
+    parity_rate: f64,
+}
+
+impl FaultPlan {
+    /// Whether the plan can ever mutate a trace (any rate positive).
+    /// Inactive plans skip injection entirely — and the engine uses this
+    /// to decide whether degraded-mode semantics apply at all.
+    pub fn is_active(&self) -> bool {
+        self.crash_rate > 0.0 || self.link_rate > 0.0 || self.parity_rate > 0.0
+    }
+
+    /// Inject this round's faults into a freshly sampled `trace`.
+    pub fn apply(&self, trace: &mut RoundTrace, rng: &mut Rng) {
+        if !self.is_active() {
+            return;
+        }
+        let mut repriced = false;
+        for j in 0..trace.num_clients() {
+            if !trace.is_present(j) {
+                continue;
+            }
+            if self.crash_rate > 0.0 && rng.next_f64() < self.crash_rate {
+                trace.fail_compute(j);
+                continue;
+            }
+            if self.link_rate > 0.0 && rng.next_f64() < self.link_rate {
+                let mut delivered = false;
+                for attempt in 1..=self.link_retries {
+                    if rng.next_f64() >= self.link_rate {
+                        // Redelivered: each failed attempt cost one backoff
+                        // plus one retransmission — two uplink durations.
+                        let legs = trace.legs(j).expect("present client has legs");
+                        let t = legs.total() + attempt as f64 * 2.0 * legs.uplink_time();
+                        trace.reprice_uplink(j, t);
+                        repriced = true;
+                        delivered = true;
+                        break;
+                    }
+                }
+                if !delivered {
+                    trace.fail_uplink(j);
+                }
+            }
+        }
+        if self.parity_rate > 0.0 && rng.next_f64() < self.parity_rate {
+            trace.fail_parity();
+        }
+        if repriced {
+            // Removals preserve the sorted event order; only re-priced
+            // uplinks can move an event later.
+            trace.resort_events();
+        }
+    }
+}
+
+/// When the coordinator closes each round (`[training] deadline = …`,
+/// `--deadline`, [`crate::ExperimentBuilder::deadline`]). Outside `none`
+/// the engine truncates the sampled trace at the deadline and resolves
+/// the aggregate through its degradation ladder
+/// ([`crate::coordinator::engine`]).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum DeadlineSpec {
+    /// No deadline: every scheme's own waiting policy prices the round
+    /// (default; bit-identical to pre-deadline runs).
+    #[default]
+    None,
+    /// Close the round once a `q`-fraction of the present clients have
+    /// arrived (the ⌈q·k⌉-th order statistic of this round's delays).
+    Quantile { q: f64 },
+    /// Close the round at a fixed simulated time `t` (seconds).
+    Fixed { t: f64 },
+}
+
+impl DeadlineSpec {
+    pub fn label(&self) -> String {
+        match self {
+            DeadlineSpec::None => "none".into(),
+            DeadlineSpec::Quantile { q } => format!("quantile(q={q})"),
+            DeadlineSpec::Fixed { t } => format!("fixed(t={t})"),
+        }
+    }
+
+    /// Parse a deadline string: `none`, `quantile:q=0.8`, `fixed:t=30`.
+    pub fn parse(s: &str) -> Result<DeadlineSpec, String> {
+        let (name, params) = match s.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p)),
+            None => (s.trim(), None),
+        };
+        let one = |key: &str, default: f64| -> Result<f64, String> {
+            let Some(p) = params else { return Ok(default) };
+            let part = p.trim();
+            let (k, v) = part.split_once('=').ok_or_else(|| {
+                format!("deadline {name:?}: expected key=value, got {part:?}")
+            })?;
+            if k.trim() != key {
+                return Err(format!(
+                    "deadline {name:?}: unknown parameter {:?} (expected one of {key})",
+                    k.trim()
+                ));
+            }
+            v.trim()
+                .parse::<f64>()
+                .map_err(|e| format!("deadline {name:?}: {key}: {e}"))
+        };
+        let spec = match name {
+            "none" => match params {
+                None => DeadlineSpec::None,
+                Some(p) => {
+                    return Err(format!("deadline \"none\" takes no parameters, got {p:?}"))
+                }
+            },
+            "quantile" => DeadlineSpec::Quantile { q: one("q", 0.9)? },
+            "fixed" => DeadlineSpec::Fixed { t: one("t", 30.0)? },
+            other => {
+                return Err(format!(
+                    "unknown deadline {other:?} (expected one of none | quantile[:q=0.9] | \
+                     fixed[:t=30])"
+                ))
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Range-check the parameters (also called by the config validator).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            DeadlineSpec::None => Ok(()),
+            DeadlineSpec::Quantile { q } => {
+                if !(q > 0.0 && q <= 1.0) {
+                    return Err(format!(
+                        "deadline \"quantile\": q={q} out of range (expected one of (0,1])"
+                    ));
+                }
+                Ok(())
+            }
+            DeadlineSpec::Fixed { t } => {
+                if !(t > 0.0) {
+                    return Err(format!(
+                        "deadline \"fixed\": t={t} out of range (expected one of t > 0)"
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for DeadlineSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        DeadlineSpec::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{FleetSpec, FleetView};
+
+    fn sampled_trace(n: usize, seed: u64) -> RoundTrace {
+        let spec = FleetSpec::paper(n, 64, 10);
+        let clients = spec.build_clients(&mut Rng::seed_from(2));
+        let links = spec.build_links(&clients);
+        let server = spec.build_server();
+        let view = FleetView::from_base(&links, server);
+        let mut trace = RoundTrace::with_capacity(n);
+        trace.sample_into(&view, &vec![9.0; n], 20.0, &mut Rng::seed_from(seed));
+        trace
+    }
+
+    #[test]
+    fn spec_parse_roundtrip_and_defaults() {
+        assert_eq!(FaultSpec::parse("none").unwrap(), FaultSpec::None);
+        assert_eq!(FaultSpec::parse("crash").unwrap(), FaultSpec::Crash { rate: 0.1 });
+        assert_eq!(
+            FaultSpec::parse("crash:rate=0.3").unwrap(),
+            FaultSpec::Crash { rate: 0.3 }
+        );
+        assert_eq!(
+            FaultSpec::parse("link:rate=0.2,retry=2").unwrap(),
+            FaultSpec::Link { rate: 0.2, retry: 2 }
+        );
+        assert_eq!(
+            FaultSpec::parse("parity:rate=0.5").unwrap(),
+            FaultSpec::Parity { rate: 0.5 }
+        );
+        assert_eq!(
+            "mixed:crash=0.1,link=0.2,parity=0.3".parse::<FaultSpec>().unwrap(),
+            FaultSpec::Mixed { crash: 0.1, link: 0.2, parity: 0.3 }
+        );
+        // Rate 1.0 is legal: the empty-round regression knob.
+        assert_eq!(
+            FaultSpec::parse("crash:rate=1").unwrap(),
+            FaultSpec::Crash { rate: 1.0 }
+        );
+    }
+
+    #[test]
+    fn spec_parse_rejects_garbage() {
+        assert!(FaultSpec::parse("meteor").is_err());
+        assert!(FaultSpec::parse("none:rate=0.1").is_err());
+        assert!(FaultSpec::parse("crash:probability=0.1").is_err());
+        assert!(FaultSpec::parse("crash:rate=lots").is_err());
+        assert!(FaultSpec::parse("crash:rate=1.5").is_err());
+        assert!(FaultSpec::parse("crash:rate=-0.1").is_err());
+        assert!(FaultSpec::parse("link:retry=1.5").is_err());
+        assert!(FaultSpec::parse("link:retry=-1").is_err());
+        assert!(FaultSpec::parse("mixed:link=2").is_err());
+        let e = FaultSpec::parse("crash:probability=0.1").unwrap_err();
+        assert!(e.contains("probability") && e.contains("rate"), "{e}");
+        let e = FaultSpec::parse("meteor").unwrap_err();
+        assert!(e.contains("expected one of"), "{e}");
+        let e = FaultSpec::parse("crash:rate=1.5").unwrap_err();
+        assert!(e.contains("rate") && e.contains("expected one of"), "{e}");
+    }
+
+    #[test]
+    fn deadline_parse_roundtrip_and_rejects_out_of_range() {
+        assert_eq!(DeadlineSpec::parse("none").unwrap(), DeadlineSpec::None);
+        assert_eq!(
+            DeadlineSpec::parse("quantile:q=0.8").unwrap(),
+            DeadlineSpec::Quantile { q: 0.8 }
+        );
+        assert_eq!(DeadlineSpec::parse("quantile").unwrap(), DeadlineSpec::Quantile { q: 0.9 });
+        assert_eq!("fixed:t=25".parse::<DeadlineSpec>().unwrap(), DeadlineSpec::Fixed { t: 25.0 });
+        assert!(DeadlineSpec::parse("soonish").is_err());
+        assert!(DeadlineSpec::parse("quantile:q=0").is_err());
+        assert!(DeadlineSpec::parse("quantile:q=1.2").is_err());
+        assert!(DeadlineSpec::parse("fixed:t=0").is_err());
+        assert!(DeadlineSpec::parse("fixed:t=-3").is_err());
+        assert!(DeadlineSpec::parse("none:q=1").is_err());
+        let e = DeadlineSpec::parse("quantile:q=0").unwrap_err();
+        assert!(e.contains("q=0") && e.contains("expected one of"), "{e}");
+        let e = DeadlineSpec::parse("soonish").unwrap_err();
+        assert!(e.contains("expected one of"), "{e}");
+    }
+
+    #[test]
+    fn labels_roundtrip() {
+        for spec in [
+            FaultSpec::None,
+            FaultSpec::Crash { rate: 0.3 },
+            FaultSpec::Link { rate: 0.2, retry: 2 },
+            FaultSpec::Parity { rate: 0.5 },
+            FaultSpec::Mixed { crash: 0.1, link: 0.2, parity: 0.3 },
+        ] {
+            assert!(!spec.label().is_empty());
+        }
+        assert_eq!(FaultSpec::Crash { rate: 0.3 }.label(), "crash(rate=0.3)");
+        assert_eq!(DeadlineSpec::Quantile { q: 0.8 }.label(), "quantile(q=0.8)");
+    }
+
+    #[test]
+    fn inactive_plan_never_touches_the_rng() {
+        let mut trace = sampled_trace(4, 7);
+        let before = trace.clone();
+        let mut rng = Rng::seed_from(5);
+        let probe = rng.clone();
+        FaultSpec::None.build().apply(&mut trace, &mut rng);
+        FaultSpec::Crash { rate: 0.0 }.build().apply(&mut trace, &mut rng);
+        assert_eq!(trace.delays().client_t, before.delays().client_t);
+        assert_eq!(trace.events().len(), before.events().len());
+        let mut a = rng;
+        let mut b = probe;
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn crash_rate_one_removes_every_arrival() {
+        let mut trace = sampled_trace(5, 11);
+        let mut rng = Rng::seed_from(3);
+        FaultSpec::Crash { rate: 1.0 }.build().apply(&mut trace, &mut rng);
+        assert_eq!(trace.delays().present_count(), 0);
+        for j in 0..5 {
+            assert!(!trace.is_present(j));
+            assert!(trace.delays().client_t[j].is_infinite());
+        }
+        // Crashed clients still received θ: downlink events survive, the
+        // compute/uplink legs never complete. Parity is untouched.
+        assert_eq!(trace.events().len(), 5 + 1);
+        assert!(trace.server_time().is_finite());
+    }
+
+    #[test]
+    fn link_loss_without_retry_drops_only_the_uplink() {
+        let mut trace = sampled_trace(5, 13);
+        let events_before = trace.events().len();
+        let mut rng = Rng::seed_from(9);
+        FaultSpec::Link { rate: 1.0, retry: 0 }.build().apply(&mut trace, &mut rng);
+        // Every payload lost, but downlink + compute events survive.
+        assert_eq!(trace.delays().present_count(), 0);
+        assert_eq!(trace.events().len(), events_before - 5);
+        assert!(trace.server_time().is_finite());
+    }
+
+    #[test]
+    fn link_retry_reprices_the_uplink_with_backoff() {
+        // Over several seeds some client must get its payload through on a
+        // retry; every re-priced delay must be total + k·2·uplink for an
+        // attempt count k within the retry budget.
+        let plan = FaultSpec::Link { rate: 0.5, retry: 3 }.build();
+        let mut saw_reprice = false;
+        for seed in 0..8u64 {
+            let base = sampled_trace(6, 17);
+            let mut trace = base.clone();
+            plan.apply(&mut trace, &mut Rng::seed_from(seed));
+            for j in 0..6 {
+                if !trace.is_present(j) {
+                    continue;
+                }
+                let legs = base.legs(j).expect("present in base");
+                let t = trace.delays().client_t[j];
+                let t0 = legs.total();
+                if t > t0 {
+                    saw_reprice = true;
+                    let extra = t - t0;
+                    let unit = 2.0 * legs.uplink_time();
+                    let k = (extra / unit).round();
+                    assert!(
+                        (1.0..=3.0).contains(&k),
+                        "client {j}: extra {extra}, unit {unit}"
+                    );
+                    assert!((extra - k * unit).abs() < 1e-9);
+                } else {
+                    assert_eq!(t.to_bits(), t0.to_bits(), "unfaulted client {j} unchanged");
+                }
+            }
+            // Events stay time-ordered after the resort.
+            for w in trace.events().windows(2) {
+                assert!(w[0].time() <= w[1].time());
+            }
+        }
+        assert!(saw_reprice, "no uplink re-priced across 8 seeds");
+    }
+
+    #[test]
+    fn parity_fault_removes_the_server_event() {
+        let mut trace = sampled_trace(3, 19);
+        let mut rng = Rng::seed_from(1);
+        FaultSpec::Parity { rate: 1.0 }.build().apply(&mut trace, &mut rng);
+        assert!(trace.server_time().is_infinite());
+        assert!(trace.events().iter().all(|e| e.client().is_some()));
+        // Clients untouched.
+        assert_eq!(trace.delays().present_count(), 3);
+    }
+
+    #[test]
+    fn fault_draws_are_reproducible() {
+        let mut a = sampled_trace(8, 23);
+        let mut b = sampled_trace(8, 23);
+        let plan = FaultSpec::Mixed { crash: 0.3, link: 0.3, parity: 0.5 }.build();
+        plan.apply(&mut a, &mut Rng::seed_from(77));
+        plan.apply(&mut b, &mut Rng::seed_from(77));
+        assert_eq!(a.delays().client_t, b.delays().client_t);
+        assert_eq!(a.delays().server_t.to_bits(), b.delays().server_t.to_bits());
+        assert_eq!(a.events().len(), b.events().len());
+    }
+
+    #[test]
+    fn close_at_truncates_trace_and_events() {
+        let mut trace = sampled_trace(6, 29);
+        let t = trace.delays().client_t.iter().cloned().fold(0.0, f64::max) * 0.5;
+        trace.close_at(t);
+        for j in 0..6 {
+            let ct = trace.delays().client_t[j];
+            assert!(ct <= t || ct.is_infinite());
+            assert_eq!(trace.is_present(j), ct.is_finite());
+        }
+        assert!(trace.events().iter().all(|e| e.time() <= t));
+        assert!(trace.delays().server_t <= t || trace.delays().server_t.is_infinite());
+    }
+}

@@ -19,17 +19,26 @@
 //!   [`crate::topology::FleetView`] (dropouts, fading, compute bursts)
 //!   before the timeline samples it. `static` — the default — is
 //!   bit-identical to the fixed-fleet behaviour below.
+//! * [`fault`] — seeded fault injection on the sampled trace: crashes
+//!   (compute leg never completes), uplink payload loss (with optional
+//!   retry + backoff re-pricing) and server-side parity loss, drawn from
+//!   their own RNG stream so they compose with every scenario and scheme
+//!   ([`fault::FaultSpec`] / [`fault::FaultPlan`]). [`fault::DeadlineSpec`]
+//!   describes when the coordinator closes each round.
 //! * [`RoundSampler`] — the direct fixed-fleet sampler (the pre-timeline
 //!   path, kept as the static reference and for code that needs totals
 //!   only).
 //!
-//! A client a scenario marks unavailable carries `T_j = ∞` in
-//! [`RoundDelays`]: it never arrives by any deadline, sorts after every
-//! finite delay, and is excluded from the waiting policies' pricing.
+//! A client a scenario marks unavailable — or a fault removes — carries
+//! `T_j = ∞` in [`RoundDelays`]: it never arrives by any deadline, sorts
+//! after every finite delay, and is excluded from the waiting policies'
+//! pricing.
 
+pub mod fault;
 pub mod scenario;
 pub mod timeline;
 
+pub use fault::{DeadlineSpec, FaultPlan, FaultSpec};
 pub use scenario::{Scenario, ScenarioSpec};
 pub use timeline::{Leg, LegEvent, RoundTrace};
 

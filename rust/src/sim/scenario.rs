@@ -266,31 +266,46 @@ impl ScenarioSpec {
     }
 
     /// Range-check the parameters (also called by the config validator,
-    /// since specs can be built directly).
+    /// since specs can be built directly). Errors follow the house
+    /// `… out of range (expected one of …)` style shared with
+    /// [`crate::sim::fault::FaultSpec`] and
+    /// [`crate::sim::fault::DeadlineSpec`].
     pub fn validate(&self) -> Result<(), String> {
         match *self {
             ScenarioSpec::Static => Ok(()),
             ScenarioSpec::Dropout { rate } => {
                 if !(0.0..1.0).contains(&rate) {
-                    return Err(format!("dropout rate must be in [0,1), got {rate}"));
+                    return Err(format!(
+                        "scenario \"dropout\": rate={rate} out of range (expected one of [0,1))"
+                    ));
                 }
                 Ok(())
             }
             ScenarioSpec::Fading { depth, period } => {
                 if !(0.0..1.0).contains(&depth) {
-                    return Err(format!("fading depth must be in [0,1), got {depth}"));
+                    return Err(format!(
+                        "scenario \"fading\": depth={depth} out of range (expected one of [0,1))"
+                    ));
                 }
                 if !(period > 0.0) {
-                    return Err(format!("fading period must be > 0 rounds, got {period}"));
+                    return Err(format!(
+                        "scenario \"fading\": period={period} out of range (expected one of \
+                         period > 0)"
+                    ));
                 }
                 Ok(())
             }
             ScenarioSpec::Burst { slow, factor } => {
                 if !(0.0..=1.0).contains(&slow) {
-                    return Err(format!("burst slow must be in [0,1], got {slow}"));
+                    return Err(format!(
+                        "scenario \"burst\": slow={slow} out of range (expected one of [0,1])"
+                    ));
                 }
                 if !(factor >= 1.0) {
-                    return Err(format!("burst factor must be >= 1, got {factor}"));
+                    return Err(format!(
+                        "scenario \"burst\": factor={factor} out of range (expected one of \
+                         factor >= 1)"
+                    ));
                 }
                 Ok(())
             }
@@ -369,6 +384,14 @@ mod tests {
         assert!(ScenarioSpec::parse("burst:factor=0.5").is_err());
         let e = ScenarioSpec::parse("dropout:frequency=0.1").unwrap_err();
         assert!(e.contains("frequency") && e.contains("rate"), "{e}");
+        // Out-of-range errors follow the house "expected one of" style
+        // shared with the fault/deadline parsers.
+        let e = ScenarioSpec::parse("dropout:rate=1.5").unwrap_err();
+        assert!(e.contains("rate=1.5") && e.contains("expected one of"), "{e}");
+        let e = ScenarioSpec::parse("fading:period=0").unwrap_err();
+        assert!(e.contains("period=0") && e.contains("expected one of"), "{e}");
+        // NaN parameters are out of range, not silently accepted.
+        assert!(ScenarioSpec::Dropout { rate: f64::NAN }.validate().is_err());
     }
 
     #[test]

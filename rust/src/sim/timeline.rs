@@ -179,6 +179,86 @@ impl RoundTrace {
     pub fn server_time(&self) -> f64 {
         self.delays.server_t
     }
+
+    // ---- fault-injection mutators (`sim::fault`) -------------------------
+    //
+    // All of these rewrite the already-sampled trace in place — removal is
+    // `Vec::retain` (order-preserving, allocation-free) and re-pricing
+    // overwrites the event's time — so the warm-round zero-allocation gate
+    // holds on the faulted path too. Removals keep the events sorted;
+    // after re-pricing the caller runs [`RoundTrace::resort_events`] once.
+
+    /// Client `j` crashed mid-round: it received θ (the downlink event
+    /// stays) but its compute leg never completes, so the compute and
+    /// uplink events vanish and its total becomes `∞`.
+    pub fn fail_compute(&mut self, j: usize) {
+        self.present[j] = false;
+        self.delays.client_t[j] = f64::INFINITY;
+        self.events.retain(|ev| {
+            !matches!(*ev,
+                LegEvent::Client { client, leg, .. } if client == j && leg != Leg::Downlink)
+        });
+    }
+
+    /// Client `j`'s uplink payload was lost: the client did the work
+    /// (downlink and compute events stay) but no gradient reaches the
+    /// server — the uplink event vanishes and its total becomes `∞`.
+    pub fn fail_uplink(&mut self, j: usize) {
+        self.present[j] = false;
+        self.delays.client_t[j] = f64::INFINITY;
+        self.events.retain(|ev| {
+            !matches!(*ev,
+                LegEvent::Client { client, leg: Leg::Uplink, .. } if client == j)
+        });
+    }
+
+    /// Client `j`'s gradient was redelivered late (retry + backoff): move
+    /// its uplink event and total to `t`. The sampled legs keep their
+    /// original values — `legs(j).total()` is the fault-free delivery
+    /// time, `delays().client_t[j]` the re-priced one. Call
+    /// [`RoundTrace::resort_events`] once after the last re-price.
+    pub fn reprice_uplink(&mut self, j: usize, t: f64) {
+        self.delays.client_t[j] = t;
+        for ev in self.events.iter_mut() {
+            if let LegEvent::Client { client, leg: Leg::Uplink, time } = ev {
+                if *client == j {
+                    *time = t;
+                }
+            }
+        }
+    }
+
+    /// The MEC unit's parity gradient was lost server-side: the parity
+    /// event vanishes and `T_C` becomes `∞` (it fails every deadline
+    /// comparison, so the coded schemes see no parity this round).
+    pub fn fail_parity(&mut self) {
+        self.delays.server_t = f64::INFINITY;
+        self.events.retain(|ev| !matches!(ev, LegEvent::ServerParity { .. }));
+    }
+
+    /// Restore the events' time order after re-pricing (in-place
+    /// `sort_unstable`, no allocation).
+    pub fn resort_events(&mut self) {
+        self.events.sort_unstable_by(|a, b| a.time().total_cmp(&b.time()));
+    }
+
+    /// Close the round at deadline `t`: every client whose gradient has
+    /// not arrived by `t` is treated as absent (`T_j = ∞`), a parity
+    /// gradient finishing after `t` is unavailable, and events after `t`
+    /// are dropped — the coordinator's deadline mode sees only what the
+    /// server had in hand when the round ended.
+    pub fn close_at(&mut self, t: f64) {
+        for (j, ct) in self.delays.client_t.iter_mut().enumerate() {
+            if *ct > t {
+                *ct = f64::INFINITY;
+                self.present[j] = false;
+            }
+        }
+        if self.delays.server_t > t {
+            self.delays.server_t = f64::INFINITY;
+        }
+        self.events.retain(|ev| ev.time() <= t);
+    }
 }
 
 #[cfg(test)]

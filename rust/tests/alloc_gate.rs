@@ -39,11 +39,19 @@
 //! runs at zero allocations for **both** built-in codes, with every
 //! decode buffer living in the caller-owned, pre-reserved
 //! `DecodeScratch` — exactly the discipline `schemes::coded` relies on.
+//!
+//! The robustness PR adds the deadline+fault decision path: in-place
+//! fault injection over the sampled trace (`FaultPlan::apply` — crash,
+//! link-loss with retry re-pricing, parity loss), the quantile-deadline
+//! selection (`kth_fastest_into` over the surviving arrivals) and the
+//! trace truncation at the cut (`RoundTrace::close_at`) — all zero warm
+//! allocations, so degraded rounds stay on the same gate as clean ones.
 
 use codedfedl::benchutil::CountingAlloc;
 use codedfedl::coding::{pack_byte_planes, unpack_byte_planes, CodeSpec, DecodeScratch};
 use codedfedl::rng::Rng;
 use codedfedl::runtime::GradJob;
+use codedfedl::sim::fault::FaultSpec;
 use codedfedl::sim::scenario::{Scenario, ScenarioSpec};
 use codedfedl::sim::timeline::RoundTrace;
 use codedfedl::sim::KthScratch;
@@ -187,6 +195,57 @@ fn steady_state_compute_path_allocates_zero_bytes() {
             0,
             "scenario {}: warm rounds requested {} bytes",
             spec.label(),
+            b1 - b0
+        );
+    }
+
+    // --- the deadline+fault decision path (robustness PR): sample the
+    //     round trace, inject a mixed fault realisation in place, select
+    //     the quantile deadline over the survivors and close the trace at
+    //     the cut — the exact per-round sequence a degraded engine round
+    //     runs before planning — zero allocations once warm. ---
+    {
+        let plan = FaultSpec::Mixed { crash: 0.2, link: 0.2, parity: 0.3 }.build();
+        let mut fault_rng = Rng::seed_from(41);
+        let mut delay_rng = Rng::seed_from(42);
+        let mut view = FleetView::from_base(&setup.client_links, setup.server);
+        let mut trace = RoundTrace::with_capacity(n);
+        let mut scratch = KthScratch::default();
+        let mut degraded_round = || {
+            view.reset_from(&setup.client_links, setup.server);
+            trace.sample_into(&view, &loads, 8.0, &mut delay_rng);
+            plan.apply(&mut trace, &mut fault_rng);
+            let k = trace.delays().present_count();
+            if k > 0 {
+                let kth = ((0.8 * k as f64).ceil() as usize).clamp(1, k);
+                let (t, _) = trace.delays().kth_fastest_into(kth, &mut scratch).unwrap();
+                trace.close_at(t);
+            }
+            let survivors = trace.delays().present_count();
+            std::hint::black_box(survivors);
+        };
+
+        // Two warm rounds reach every buffer's steady-state capacity…
+        degraded_round();
+        degraded_round();
+
+        // …after which a warm degraded round must acquire no memory.
+        let (a0, b0) = (CountingAlloc::allocations(), CountingAlloc::bytes());
+        for _ in 0..3 {
+            degraded_round();
+        }
+        let (a1, b1) = (CountingAlloc::allocations(), CountingAlloc::bytes());
+        assert_eq!(
+            a1 - a0,
+            0,
+            "deadline+fault decision path performed {} allocations ({} bytes)",
+            a1 - a0,
+            b1 - b0
+        );
+        assert_eq!(
+            b1 - b0,
+            0,
+            "deadline+fault decision path requested {} bytes",
             b1 - b0
         );
     }

@@ -1,0 +1,186 @@
+//! Chaos sweep (robustness): every scheme × scenario × fault mix ×
+//! deadline mode runs a few rounds to completion — no panic, finite θ,
+//! monotone clocks, one degradation-ladder rung recorded per round —
+//! and stays bit-reproducible across thread counts for each SIMD policy.
+//!
+//! The sweep is seeded and deterministic: the fault stream is split off
+//! the experiment root independently of the scheme, so every scheme in a
+//! combo faces the identical fault realisation, and a combo that passes
+//! once passes forever.
+
+use codedfedl::coding::RecoveryMode;
+use codedfedl::conf::ExperimentConfig;
+use codedfedl::coordinator::EventLog;
+use codedfedl::metrics::RoundOutcome;
+use codedfedl::schemes::{CodedFedL, SchemeSpec};
+use codedfedl::sim::fault::{DeadlineSpec, FaultSpec};
+use codedfedl::sim::scenario::ScenarioSpec;
+use codedfedl::tensor::SimdPolicy;
+use codedfedl::{ExperimentBuilder, Session};
+
+const SCENARIOS: [ScenarioSpec; 3] = [
+    ScenarioSpec::Static,
+    ScenarioSpec::Dropout { rate: 0.3 },
+    ScenarioSpec::Burst { slow: 0.3, factor: 4.0 },
+];
+
+const FAULTS: [FaultSpec; 5] = [
+    FaultSpec::None,
+    FaultSpec::Crash { rate: 0.4 },
+    FaultSpec::Link { rate: 0.4, retry: 1 },
+    FaultSpec::Parity { rate: 0.5 },
+    FaultSpec::Mixed { crash: 0.3, link: 0.3, parity: 0.5 },
+];
+
+const DEADLINES: [DeadlineSpec; 3] = [
+    DeadlineSpec::None,
+    DeadlineSpec::Quantile { q: 0.8 },
+    DeadlineSpec::Fixed { t: 30.0 },
+];
+
+fn combo_session(scenario: ScenarioSpec, faults: FaultSpec, deadline: DeadlineSpec) -> Session {
+    let cfg = ExperimentConfig {
+        epochs: 2, // tiny: 2 steps/epoch → 4 rounds per run
+        scenario,
+        faults,
+        deadline,
+        ..ExperimentConfig::tiny()
+    };
+    ExperimentBuilder::from_config(cfg).build().unwrap()
+}
+
+/// Run one scheme on a combo session and assert the chaos invariants.
+fn assert_survives(session: &Session, scheme: &mut dyn codedfedl::Scheme, tag: &str) {
+    let mut log = EventLog::default();
+    let out = session.run_observed(scheme, &mut log).unwrap();
+    let total = session.config().total_iters();
+
+    // θ is finite — the degradation ladder never produces NaN/∞.
+    assert!(out.theta.as_slice().iter().all(|v| v.is_finite()), "{tag}: non-finite theta");
+    // One ladder rung is recorded per round, evaluated or not.
+    assert_eq!(out.outcomes.total(), total as u64, "{tag}: rung histogram");
+    // With the default eval_every = 1 every round emits an event carrying
+    // its rung, achieved ≤ planned participation, and finite telemetry.
+    assert_eq!(log.events.len(), total, "{tag}: event count");
+    let mut prev_clock = 0.0;
+    for ev in &log.events {
+        assert!(ev.arrivals <= ev.planned, "{tag}: iter {}", ev.iter);
+        assert!(ev.loss.is_finite() && ev.acc.is_finite(), "{tag}: iter {}", ev.iter);
+        // The simulated clock is monotone — a skipped round still charges
+        // what the server actually waited, never negative time.
+        assert!(ev.clock >= prev_clock, "{tag}: clock went backwards at iter {}", ev.iter);
+        prev_clock = ev.clock;
+        // The skip rung means *nothing* entered the aggregate.
+        if ev.outcome == RoundOutcome::Skip {
+            assert_eq!(ev.arrivals, 0, "{tag}: skip with arrivals at iter {}", ev.iter);
+        }
+    }
+}
+
+fn run_combo(scenario: ScenarioSpec, faults: FaultSpec, deadline: DeadlineSpec) {
+    let session = combo_session(scenario, faults, deadline);
+    let combo = format!("{} / {} / {}", scenario.label(), faults.label(), deadline.label());
+    for spec in [
+        SchemeSpec::NaiveUncoded,
+        SchemeSpec::GreedyUncoded { psi: 0.2 },
+        SchemeSpec::Coded { delta: 0.3 },
+    ] {
+        let mut scheme = spec.build();
+        assert_survives(&session, scheme.as_mut(), &format!("{} / {combo}", spec.label()));
+    }
+    // Exact recovery rides the same session, exercising the decode rungs
+    // of the ladder under loss.
+    let mut exact = CodedFedL::new(0.3).with_recovery(RecoveryMode::Exact);
+    assert_survives(&session, &mut exact, &format!("coded-exact / {combo}"));
+}
+
+#[test]
+fn every_scheme_survives_every_fault_deadline_scenario_combo() {
+    for scenario in SCENARIOS {
+        for faults in FAULTS {
+            for deadline in DEADLINES {
+                run_combo(scenario, faults, deadline);
+            }
+        }
+    }
+}
+
+#[test]
+fn crash_rate_one_skips_every_round_and_leaves_theta_untouched() {
+    // Satellite regression: zero clients ever return AND the parity unit
+    // is lost — every scheme must take the documented skip rung every
+    // round (θ stays exactly at its zero initialisation, no 0/0, no NaN).
+    let session = combo_session(
+        ScenarioSpec::Static,
+        FaultSpec::Mixed { crash: 1.0, link: 0.0, parity: 1.0 },
+        DeadlineSpec::None,
+    );
+    let total = session.config().total_iters() as u64;
+    for spec in [
+        SchemeSpec::NaiveUncoded,
+        SchemeSpec::GreedyUncoded { psi: 0.2 },
+        SchemeSpec::Coded { delta: 0.3 },
+    ] {
+        let mut log = EventLog::default();
+        let mut scheme = spec.build();
+        let out = session.run_observed(scheme.as_mut(), &mut log).unwrap();
+        assert_eq!(out.outcomes.skip, total, "{}: not all rounds skipped", spec.label());
+        assert_eq!(out.outcomes.degraded(), total, "{}", spec.label());
+        assert!(
+            out.theta.as_slice().iter().all(|&v| v == 0.0),
+            "{}: theta moved on an all-skip run",
+            spec.label()
+        );
+        // The clock still advances: the surviving downlink completions
+        // price what the server waited before giving up on each round.
+        assert!(log.events.iter().all(|ev| ev.arrivals == 0), "{}", spec.label());
+        assert!(out.history.total_sim_time() > 0.0, "{}", spec.label());
+    }
+
+    // Crash alone (parity unit alive) lets the coded scheme climb off the
+    // skip rung whenever the MEC unit makes t*: those rounds resolve as
+    // parity compensation in expectation. No round can be full — zero of
+    // the planned client gradients ever arrive — and θ stays finite
+    // either way (the parity scale 1/((1-pnr)·u*) is finite by setup).
+    let session = combo_session(
+        ScenarioSpec::Static,
+        FaultSpec::Crash { rate: 1.0 },
+        DeadlineSpec::None,
+    );
+    let out = session.run_spec(SchemeSpec::Coded { delta: 0.3 }).unwrap();
+    assert_eq!(out.outcomes.full, 0);
+    assert_eq!(out.outcomes.exact_decode, 0);
+    assert_eq!(out.outcomes.partial, 0);
+    assert_eq!(out.outcomes.parity + out.outcomes.skip, total);
+    assert!(out.theta.as_slice().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn degraded_runs_are_bit_reproducible_across_threads_and_simd() {
+    // The heaviest combo: dropout scenario + mixed faults + quantile
+    // deadline. For each SIMD policy, any thread count must reproduce the
+    // serial run bit-for-bit — fault draws, deadline cuts and ladder
+    // rungs included.
+    let run = |threads: usize, simd: SimdPolicy| {
+        let cfg = ExperimentConfig {
+            epochs: 2,
+            scenario: ScenarioSpec::Dropout { rate: 0.3 },
+            faults: FaultSpec::Mixed { crash: 0.3, link: 0.3, parity: 0.5 },
+            deadline: DeadlineSpec::Quantile { q: 0.8 },
+            threads,
+            simd,
+            ..ExperimentConfig::tiny()
+        };
+        let session = ExperimentBuilder::from_config(cfg).build().unwrap();
+        let mut log = EventLog::default();
+        let out = session.run_observed(&mut CodedFedL::new(0.3), &mut log).unwrap();
+        (out, log)
+    };
+    for simd in [SimdPolicy::Scalar, SimdPolicy::Auto] {
+        let (serial, slog) = run(1, simd);
+        let (parallel, plog) = run(4, simd);
+        assert_eq!(serial.theta.as_slice(), parallel.theta.as_slice(), "{simd:?}");
+        assert_eq!(serial.outcomes, parallel.outcomes, "{simd:?}");
+        assert_eq!(slog.events, plog.events, "{simd:?}");
+    }
+}

@@ -10,11 +10,14 @@
 //! Likewise under the participation named by `CODEDFEDL_PARTICIPATION`
 //! (any [`ParticipationSpec`] string; default `full`) — CI runs the
 //! suite under `sample:k=4` too, so the claims survive per-round
-//! sampled rosters.
+//! sampled rosters — and under the fault mix named by `CODEDFEDL_FAULTS`
+//! (any [`FaultSpec`] string; default `none`), so they survive injected
+//! client crashes as well.
 
 use codedfedl::benchutil;
 use codedfedl::conf::ExperimentConfig;
 use codedfedl::schemes::{CodedFedL, SchemeSpec};
+use codedfedl::sim::fault::FaultSpec;
 use codedfedl::sim::scenario::ScenarioSpec;
 use codedfedl::topology::ParticipationSpec;
 use codedfedl::{ExperimentBuilder, Session};
@@ -33,11 +36,19 @@ fn env_participation() -> ParticipationSpec {
     }
 }
 
+fn env_faults() -> FaultSpec {
+    match std::env::var("CODEDFEDL_FAULTS") {
+        Ok(v) => v.parse().expect("CODEDFEDL_FAULTS"),
+        Err(_) => FaultSpec::None,
+    }
+}
+
 fn tiny(epochs: usize) -> ExperimentConfig {
     ExperimentConfig {
         epochs,
         scenario: env_scenario(),
         participation: env_participation(),
+        faults: env_faults(),
         ..ExperimentConfig::tiny()
     }
 }
@@ -95,10 +106,11 @@ fn coded_round_time_is_deadline_and_faster_than_naive() {
         assert!((dt - t_star).abs() < 1e-9, "round cost {dt} != t* {t_star}");
     }
     // per-iteration simulated cost must beat waiting for every straggler.
-    // Only claimed under full participation: a sampled naive round waits
-    // for k < n clients, which can legitimately undercut the full-fleet
-    // deadline t*.
-    if env_participation() == ParticipationSpec::Full {
+    // Only claimed under full participation and without injected faults:
+    // a sampled naive round waits for k < n clients, and a crash-faulted
+    // naive round waits only for the survivors — either can legitimately
+    // undercut the full-fleet deadline t*.
+    if env_participation() == ParticipationSpec::Full && env_faults() == FaultSpec::None {
         let naive_per_iter = naive.history.total_sim_time() / naive.history.points.len() as f64;
         let coded_per_iter =
             (coded.history.total_sim_time() - coded.parity_overhead) / pts.len() as f64;
@@ -137,6 +149,7 @@ fn thread_count_does_not_change_the_history() {
             .threads(threads)
             .scenario(env_scenario())
             .participation(env_participation())
+            .faults(env_faults())
             .build()
             .unwrap()
             .run_spec(spec)
@@ -171,6 +184,7 @@ fn eval_every_samples_history_but_keeps_training_identical() {
             .eval_every(eval_every)
             .scenario(env_scenario())
             .participation(env_participation())
+            .faults(env_faults())
             .build()
             .unwrap()
             .run(&mut CodedFedL::new(0.3))
