@@ -21,7 +21,8 @@ use codedfedl::allocation::{self, NodeSpec};
 use codedfedl::benchutil::{bench, bench_iters, load_runtime, shapes_for, BenchReport, CountingAlloc};
 use codedfedl::coding::{gf256, Code, CodeSpec, DecodeScratch};
 use codedfedl::conf::ExperimentConfig;
-use codedfedl::coordinator::EventLog;
+use codedfedl::coordinator::{checkpoint, EventLog};
+use codedfedl::metrics::Point;
 use codedfedl::rng::Rng;
 use codedfedl::runtime::{GradJob, Runtime, RuntimeShapes};
 use codedfedl::schemes::CodedFedL;
@@ -488,6 +489,48 @@ fn main() -> anyhow::Result<()> {
             });
             report.record_fleet("fleet_scale::round", &shape, 1, &stats, fleet_n);
         }
+    }
+
+    // --- checkpoint snapshot latency (schema 7): what one periodic
+    //     crash-consistent checkpoint costs the training loop — encode
+    //     the full resumable state (θ, RNG streams, history) and persist
+    //     it through io::atomic_write (temp + fsync + rename). The round
+    //     itself stays 0-alloc; this is the price paid only on the
+    //     `[checkpoint] every = R` boundary. ---
+    {
+        let snap = checkpoint::Snapshot {
+            config_fingerprint: 0xC0FFEE,
+            scheme_label: "codedfedl(delta=0.10)".to_string(),
+            next_iter: 100,
+            clock: 1234.5,
+            theta_rows: s.q as u32,
+            theta_cols: s.c as u32,
+            theta: (0..s.q * s.c).map(|i| i as f32 * 0.001).collect(),
+            delay_rng: [1, 2, 3, 4],
+            code_rng: [5, 6, 7, 8],
+            scenario_rng: [9, 10, 11, 12],
+            fault_rng: [13, 14, 15, 16],
+            outcomes: [90, 4, 3, 2, 1],
+            corrupted_total: 0,
+            history: (1..=100)
+                .map(|i| Point {
+                    iter: i,
+                    sim_time: i as f64 * 12.0,
+                    accuracy: 0.9,
+                    train_loss: 0.1,
+                })
+                .collect(),
+        };
+        let ckpt_path = std::env::temp_dir().join("codedfedl_bench_snapshot.ckpt");
+        let shape = format!("theta {}x{} + 100 pts", s.q, s.c);
+        let (wu, it) = bench_iters(3, 50);
+        report.bench("checkpoint::snapshot", &shape, 1, wu, it, || {
+            checkpoint::write(&ckpt_path, &snap).unwrap();
+        });
+        // round-trip sanity: the timed artifact must load back bit-exactly
+        let back = checkpoint::load(&ckpt_path)?;
+        anyhow::ensure!(back == snap, "checkpoint round-trip diverged after timing");
+        let _ = std::fs::remove_file(&ckpt_path);
     }
 
     let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".into());

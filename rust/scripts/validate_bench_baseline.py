@@ -4,7 +4,7 @@
 Usage: validate_bench_baseline.py <committed_baseline.json> <smoke_run.json>
 
 Checks (coverage gates, not timing gates — smoke numbers are meaningless):
-  * both documents parse and carry the current schema (6) with a
+  * both documents parse and carry the current schema (7) with a
     well-formed, non-empty record list (op/shape/ns_per_iter/threads/iters
     plus the throughput fields — ``gflops`` (schema 3), the schema-4
     codec columns ``gbps``/``symbols_per_s``, and the schema-5 fleet
@@ -20,6 +20,10 @@ Checks (coverage gates, not timing gates — smoke numbers are meaningless):
   * ``degraded`` records carry non-null ``rungs``/``achieved_participation``
     (a perf diff on a faulted run must always see how its rounds resolved,
     so a "faster" run that silently skipped rounds is visible);
+  * the committed baseline carries a ``checkpoint::snapshot`` latency row
+    (schema 7: what one crash-consistent checkpoint — encode + atomic
+    fsync'd write — costs the training loop), so the checkpoint path can
+    never silently drop out of the tracked perf surface;
   * both documents record a non-empty ``isa`` string (the GEMM microkernel
     the run resolved — ``scalar`` / ``avx2+fma`` / ``neon`` / ``pjrt``),
     so perf numbers are always attributable to an instruction set;
@@ -41,7 +45,7 @@ next to the uploaded artifact.
 import json
 import sys
 
-SCHEMA = 6
+SCHEMA = 7
 RECORD_FIELDS = {
     "op": str,
     "shape": str,
@@ -57,6 +61,8 @@ THROUGHPUT_FIELDS = ("gflops", "gbps", "symbols_per_s", "n_clients", "rounds_per
 FLEET_OP_PREFIX = "fleet_scale"
 # Ops whose records must carry the schema-6 robustness columns non-null.
 DEGRADED_OP_PREFIX = "degraded"
+# The schema-7 checkpoint latency row the committed baseline must carry.
+CHECKPOINT_OP_PREFIX = "checkpoint"
 # Number of degradation-ladder rungs in a ``rungs`` histogram.
 RUNG_COUNT = 5
 # Warn when a smoke run is this much slower than the committed baseline.
@@ -181,6 +187,14 @@ def main(baseline_path, smoke_path):
         errors.append(
             "baseline: expected fleet_scale records at >= 2 distinct fleet sizes "
             f"(rounds/s vs N), found n_clients = {sorted(fleet_ns)}"
+        )
+    if not any(
+        str(op).startswith(CHECKPOINT_OP_PREFIX) for op, _shape in baseline_recs
+    ):
+        errors.append(
+            f"baseline: expected a {CHECKPOINT_OP_PREFIX}::snapshot latency record "
+            "(schema 7: the crash-consistent checkpoint cost must stay on the "
+            "tracked perf surface)"
         )
 
     if errors:

@@ -340,7 +340,7 @@ impl BenchReport {
         fn esc(s: &str) -> String {
             s.replace('\\', "\\\\").replace('"', "\\\"")
         }
-        let mut out = String::from("{\n  \"schema\": 6,\n");
+        let mut out = String::from("{\n  \"schema\": 7,\n");
         out.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
         out.push_str(&format!("  \"isa\": \"{}\",\n", esc(&self.isa)));
         match self.allocs_per_round {
@@ -385,9 +385,11 @@ impl BenchReport {
         out
     }
 
-    /// Write the JSON report to `path`.
+    /// Write the JSON report to `path` atomically ([`crate::io::atomic_write`]:
+    /// temp file + fsync + rename), so an interrupted bench run can never
+    /// leave a torn baseline for the validator to misread.
     pub fn write_json(&self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.to_json())
+        crate::io::atomic_write(path, self.to_json().as_bytes())
             .map_err(|e| anyhow::anyhow!("writing bench report {path:?}: {e}"))
     }
 }
@@ -500,7 +502,7 @@ mod tests {
         let outcomes = OutcomeCounts { full: 3, parity: 1, ..Default::default() };
         rep.record_degraded("degraded::epoch", "tiny mixed", 1, &stats, &outcomes, 0.875);
         let json = rep.to_json();
-        assert!(json.contains("\"schema\": 6"), "{json}");
+        assert!(json.contains("\"schema\": 7"), "{json}");
         assert!(json.contains("\"isa\": \"avx2+fma\""), "{json}");
         assert!(json.contains("\"op\": \"runtime::grad\""), "{json}");
         assert!(json.contains("\"shape\": \"client 200x512x10\""), "{json}");

@@ -20,6 +20,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::coding::{CodeSpec, GeneratorKind, RecoveryMode};
+use crate::coordinator::checkpoint::ResumeSpec;
 use crate::sim::fault::{DeadlineSpec, FaultSpec};
 use crate::sim::scenario::ScenarioSpec;
 use crate::tensor::SimdPolicy;
@@ -138,6 +139,22 @@ pub struct ExperimentConfig {
     /// gradient, default) or `exact` (stop at the first decodable arrival
     /// subset and reconstruct the full-fleet gradient bit-exactly).
     pub recovery: RecoveryMode,
+    /// Write a crash-consistent checkpoint every this many rounds
+    /// (`[checkpoint] every` / `--checkpoint-every`); 0 (default)
+    /// disables periodic checkpointing. Any positive value also writes a
+    /// final snapshot at graceful shutdown. Telemetry/durability only:
+    /// the realized training history is identical for every value.
+    pub checkpoint_every: usize,
+    /// Checkpoint file path (`[checkpoint] path` / `--checkpoint-path`).
+    /// `None` (default) derives `checkpoint_<scheme-tag>.ckpt` under
+    /// `artifacts_dir`, so concurrent schemes never clobber each other.
+    pub checkpoint_path: Option<String>,
+    /// How a run starts relative to an existing checkpoint
+    /// (`[checkpoint] resume` / `--resume`): `off` (default), `auto`
+    /// (resume if the checkpoint file exists) or `path:<p>` (resume from
+    /// exactly that file, failing if missing or invalid). A resumed run
+    /// is bit-identical to the uninterrupted one.
+    pub resume: ResumeSpec,
     /// Train set size (m_total = train points across all clients).
     pub train_size: usize,
     /// Test set size.
@@ -180,6 +197,9 @@ impl Default for ExperimentConfig {
             generator: GeneratorKind::Normal,
             code: CodeSpec::Dense,
             recovery: RecoveryMode::Expectation,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            resume: ResumeSpec::Off,
             train_size: 30_000,
             test_size: 2_000,
             artifacts_dir: "artifacts".into(),
@@ -211,6 +231,7 @@ const KNOWN_KEYS: &[(&str, &[&str])] = &[
         ],
     ),
     ("coding", &["u_max", "generator", "code", "recovery"]),
+    ("checkpoint", &["every", "path", "resume"]),
     ("runtime", &["threads", "simd"]),
     ("scenario", &["kind"]),
     ("faults", &["kind"]),
@@ -358,6 +379,19 @@ impl ExperimentConfig {
                 .map_err(|e: String| ConfError::Invalid(format!("[coding] recovery: {e}")))?;
         }
 
+        let ck = sect("checkpoint");
+        ck.get_usize("every", &mut c.checkpoint_every)?;
+        if let Some(v) = ck.map.get("path") {
+            let s = v.as_str().ok_or_else(|| ck.bad("path", "string", v))?;
+            c.checkpoint_path = Some(s.to_string());
+        }
+        if let Some(v) = ck.map.get("resume") {
+            let s = v.as_str().ok_or_else(|| ck.bad("resume", "string", v))?;
+            c.resume = s
+                .parse()
+                .map_err(|e: String| ConfError::Invalid(format!("[checkpoint] resume: {e}")))?;
+        }
+
         let rtc = sect("runtime");
         rtc.get_usize("threads", &mut c.threads)?;
         if let Some(v) = rtc.map.get("simd") {
@@ -493,6 +527,37 @@ impl ExperimentConfig {
                 self.fleet_size()
             )));
         }
+        // Exact recovery erasure-decodes missing gradients from the
+        // arrived symbols; a corrupted (excluded-as-zero) source symbol
+        // would decode into the wrong full-fleet aggregate, silently.
+        if self.recovery == RecoveryMode::Exact {
+            if let FaultSpec::Corrupt { rate } = self.faults {
+                if rate > 0.0 {
+                    return Err(ConfError::Invalid(format!(
+                        "[faults] kind: corrupt(rate={rate}) cannot combine with \
+                         [coding] recovery = \"exact\" — exact decode would reconstruct \
+                         from corrupted source symbols (expected one of recovery = \
+                         \"expectation\" | faults without corrupt)"
+                    )));
+                }
+            }
+        }
+        if let ResumeSpec::Path(p) = &self.resume {
+            if p.trim().is_empty() {
+                return Err(ConfError::Invalid(
+                    "[checkpoint] resume: \"path:\" names no file (expected path:<file>)".into(),
+                ));
+            }
+        }
+        if let Some(p) = &self.checkpoint_path {
+            if p.trim().is_empty() {
+                return Err(ConfError::Invalid(
+                    "[checkpoint] path: must name a file (or omit the key for the \
+                     artifacts-dir default)"
+                        .into(),
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -506,14 +571,14 @@ fn reject_unknown_keys(doc: &Doc) -> Result<(), ConfError> {
             let first = keys.keys().next().map(String::as_str).unwrap_or("?");
             return Err(ConfError::Invalid(format!(
                 "key `{first}` appears before any [section] header \
-                 (sections: experiment, model, training, coding, runtime, \
+                 (sections: experiment, model, training, coding, checkpoint, runtime, \
                  scenario, faults, fleet)"
             )));
         }
         let Some((_, known)) = KNOWN_KEYS.iter().find(|(s, _)| s == section) else {
             return Err(ConfError::Invalid(format!(
                 "unknown section [{section}] (expected one of: experiment, model, \
-                 training, coding, runtime, scenario, faults, fleet)"
+                 training, coding, checkpoint, runtime, scenario, faults, fleet)"
             )));
         };
         for key in keys.keys() {
@@ -914,6 +979,67 @@ generator = "rademacher"
         assert!(e.contains("exact"), "{e}");
         // Exact over the full fixed fleet stays accepted.
         assert!(ExperimentConfig::from_str_conf("[coding]\nrecovery = \"exact\"\n").is_ok());
+    }
+
+    #[test]
+    fn checkpoint_section_parses_defaults_and_rejects_garbage() {
+        // Defaults: checkpointing off, derived path, fresh start.
+        let d = ExperimentConfig::default();
+        assert_eq!(d.checkpoint_every, 0);
+        assert_eq!(d.checkpoint_path, None);
+        assert_eq!(d.resume, ResumeSpec::Off);
+        // Full section round-trips into the typed config.
+        let c = ExperimentConfig::from_str_conf(
+            "[checkpoint]\nevery = 25\npath = \"artifacts/run.ckpt\"\nresume = \"auto\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.checkpoint_every, 25);
+        assert_eq!(c.checkpoint_path.as_deref(), Some("artifacts/run.ckpt"));
+        assert_eq!(c.resume, ResumeSpec::Auto);
+        let c = ExperimentConfig::from_str_conf("[checkpoint]\nresume = \"path:x.ckpt\"\n")
+            .unwrap();
+        assert_eq!(c.resume, ResumeSpec::Path("x.ckpt".into()));
+        // Unknown resume modes name the section and list the options.
+        let e = ExperimentConfig::from_str_conf("[checkpoint]\nresume = \"maybe\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[checkpoint] resume") && e.contains("expected one of"), "{e}");
+        // Empty path forms are rejected with their names.
+        let e = ExperimentConfig::from_str_conf("[checkpoint]\nresume = \"path:\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("path:"), "{e}");
+        let e = ExperimentConfig::from_str_conf("[checkpoint]\npath = \"\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[checkpoint] path"), "{e}");
+        // Mistyped values name section and key; unknown keys are listed.
+        let e = ExperimentConfig::from_str_conf("[checkpoint]\nevery = \"often\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[checkpoint]") && e.contains("every"), "{e}");
+        let e = ExperimentConfig::from_str_conf("[checkpoint]\ninterval = 5\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("interval") && e.contains("every"), "{e}");
+    }
+
+    #[test]
+    fn corrupt_faults_cannot_combine_with_exact_recovery() {
+        let e = ExperimentConfig::from_str_conf(
+            "[coding]\nrecovery = \"exact\"\n\n[faults]\nkind = \"corrupt:rate=0.5\"\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("corrupt") && e.contains("exact"), "{e}");
+        // Each alone is fine.
+        assert!(ExperimentConfig::from_str_conf("[faults]\nkind = \"corrupt:rate=0.5\"\n")
+            .is_ok());
+        assert!(ExperimentConfig::from_str_conf("[coding]\nrecovery = \"exact\"\n").is_ok());
+        // server faults parse through the config path.
+        let c = ExperimentConfig::from_str_conf("[faults]\nkind = \"server:rate=0.2\"\n")
+            .unwrap();
+        assert_eq!(c.faults, FaultSpec::Server { rate: 0.2 });
     }
 
     #[test]

@@ -1,0 +1,572 @@
+//! Crash-consistent checkpoint/resume for the training engine.
+//!
+//! A checkpoint is a versioned, CRC-guarded binary snapshot of the full
+//! training state at a round boundary: θ, the simulated clock, the next
+//! round index, the position of every sequential RNG stream (delay /
+//! code / scenario / fault — the participation and server-fault streams
+//! are counter-based and need only their bases, which the resumed run
+//! re-derives), the degradation-ladder histogram
+//! ([`crate::metrics::OutcomeCounts`]), the excluded-corrupt-update
+//! count, the evaluated history so far, and a fingerprint of every
+//! history-affecting config field. Scheme state (e.g. CodedFedL's parity
+//! datasets and code coefficients) is *not* serialized: it is derived
+//! deterministically by `Scheme::prepare` from the scheme's private
+//! `code_rng` stream, so a resumed run re-runs `prepare` and then
+//! restores the stream positions — cheaper, version-proof, and exact.
+//!
+//! Files are written via [`crate::io::atomic_write`] (temp + fsync +
+//! rename), so a crash mid-write leaves the previous checkpoint intact.
+//! Decoding rejects torn, truncated, corrupted, or mismatched files with
+//! a named [`CheckpointError`] — never a panic. The house invariant
+//! (proved by `tests/checkpoint_resume.rs`): a run interrupted at any
+//! round and resumed from its checkpoint is **bit-identical** to the
+//! uninterrupted run, for every scheme × scenario × fault × thread ×
+//! SIMD combination.
+
+use std::fmt;
+use std::path::Path;
+
+use crate::conf::ExperimentConfig;
+use crate::io::{atomic_write, crc32, fnv1a};
+use crate::metrics::Point;
+
+/// File magic: the first 8 bytes of every checkpoint.
+pub const MAGIC: [u8; 8] = *b"CFEDCKPT";
+
+/// Current (and only) checkpoint format version.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Everything a decode/verify can reject with. Every variant renders a
+/// named, actionable message — resume paths surface these, they never
+/// panic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CheckpointError {
+    /// Filesystem failure reading or writing `path`.
+    Io { path: String, err: String },
+    /// The file ends before `field` could be read — a torn or truncated
+    /// checkpoint.
+    Truncated { field: &'static str, needed: usize, have: usize },
+    /// The file does not start with [`MAGIC`].
+    BadMagic,
+    /// The file's format version is not one this build can read.
+    UnsupportedVersion(u32),
+    /// The payload CRC does not match — bit rot or partial corruption.
+    CrcMismatch { expected: u32, found: u32 },
+    /// The checkpoint was taken under a different experiment config.
+    ConfigMismatch { expected: u64, found: u64 },
+    /// The checkpoint was taken by a different scheme.
+    SchemeMismatch { expected: String, found: String },
+    /// The checkpointed θ has the wrong shape for this model.
+    ShapeMismatch { expected: (u32, u32), found: (u32, u32) },
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Io { path, err } => write!(f, "checkpoint io at {path:?}: {err}"),
+            CheckpointError::Truncated { field, needed, have } => write!(
+                f,
+                "truncated checkpoint: reading {field} needs {needed} bytes, only {have} remain \
+                 (torn or incomplete file)"
+            ),
+            CheckpointError::BadMagic => write!(
+                f,
+                "not a CodedFedL checkpoint (bad magic; expected one of {:?})",
+                std::str::from_utf8(&MAGIC).unwrap_or("CFEDCKPT")
+            ),
+            CheckpointError::UnsupportedVersion(v) => write!(
+                f,
+                "unsupported checkpoint format version {v} (expected one of {FORMAT_VERSION})"
+            ),
+            CheckpointError::CrcMismatch { expected, found } => write!(
+                f,
+                "checkpoint CRC mismatch: payload hashes to {found:#010x}, file records \
+                 {expected:#010x} (torn or corrupted file)"
+            ),
+            CheckpointError::ConfigMismatch { expected, found } => write!(
+                f,
+                "checkpoint config fingerprint {found:#018x} does not match this run's \
+                 {expected:#018x} (the checkpoint was taken under a different experiment config)"
+            ),
+            CheckpointError::SchemeMismatch { expected, found } => write!(
+                f,
+                "checkpoint was taken by scheme {found:?}, this run is {expected:?}"
+            ),
+            CheckpointError::ShapeMismatch { expected, found } => write!(
+                f,
+                "checkpointed theta is {}x{}, this model needs {}x{}",
+                found.0, found.1, expected.0, expected.1
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+/// How a run starts relative to an existing checkpoint (`[checkpoint]
+/// resume` / `--resume` / `ExperimentBuilder::resume`).
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub enum ResumeSpec {
+    /// Start fresh, ignoring any checkpoint on disk (the default).
+    #[default]
+    Off,
+    /// Resume from the run's checkpoint path if a checkpoint exists
+    /// there; start fresh otherwise.
+    Auto,
+    /// Resume from exactly this file; fail if it is missing or invalid.
+    Path(String),
+}
+
+impl ResumeSpec {
+    /// Canonical spec string (round-trips through [`ResumeSpec::parse`]).
+    pub fn label(&self) -> String {
+        match self {
+            ResumeSpec::Off => "off".into(),
+            ResumeSpec::Auto => "auto".into(),
+            ResumeSpec::Path(p) => format!("path:{p}"),
+        }
+    }
+
+    /// Parse a resume mode: `off`, `auto`, or `path:<file>`.
+    pub fn parse(s: &str) -> Result<ResumeSpec, String> {
+        let t = s.trim();
+        match t {
+            "off" => Ok(ResumeSpec::Off),
+            "auto" => Ok(ResumeSpec::Auto),
+            _ => match t.split_once(':') {
+                Some(("path", p)) if !p.trim().is_empty() => {
+                    Ok(ResumeSpec::Path(p.trim().to_string()))
+                }
+                Some(("path", _)) => Err("resume mode \"path:\" names no file \
+                     (expected path:<file>)"
+                    .into()),
+                _ => Err(format!(
+                    "unknown resume mode {t:?} (expected one of off | auto | path:<file>)"
+                )),
+            },
+        }
+    }
+}
+
+impl std::str::FromStr for ResumeSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        ResumeSpec::parse(s)
+    }
+}
+
+/// The full resumable training state at a round boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    /// Fingerprint of the history-affecting config (see [`fingerprint`]).
+    pub config_fingerprint: u64,
+    /// Label of the scheme that wrote the checkpoint.
+    pub scheme_label: String,
+    /// First round the resumed run executes (rounds `0..next_iter` are
+    /// already folded into this snapshot).
+    pub next_iter: u64,
+    /// Simulated MEC clock, seconds.
+    pub clock: f64,
+    /// θ shape and row-major contents.
+    pub theta_rows: u32,
+    pub theta_cols: u32,
+    pub theta: Vec<f32>,
+    /// Sequential RNG stream positions.
+    pub delay_rng: [u64; 4],
+    pub code_rng: [u64; 4],
+    pub scenario_rng: [u64; 4],
+    pub fault_rng: [u64; 4],
+    /// Degradation-ladder histogram so far (`OutcomeCounts::as_array`).
+    pub outcomes: [u64; 5],
+    /// Non-finite client updates excluded from folds so far.
+    pub corrupted_total: u64,
+    /// Evaluated history points so far, bit-exact.
+    pub history: Vec<Point>,
+}
+
+impl Snapshot {
+    /// Serialize to the on-disk format: `MAGIC ∥ version ∥ payload ∥
+    /// crc32(payload)`, all little-endian.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut payload = Vec::with_capacity(128 + self.theta.len() * 4 + self.history.len() * 32);
+        payload.extend_from_slice(&self.config_fingerprint.to_le_bytes());
+        payload.extend_from_slice(&(self.scheme_label.len() as u32).to_le_bytes());
+        payload.extend_from_slice(self.scheme_label.as_bytes());
+        payload.extend_from_slice(&self.next_iter.to_le_bytes());
+        payload.extend_from_slice(&self.clock.to_bits().to_le_bytes());
+        payload.extend_from_slice(&self.theta_rows.to_le_bytes());
+        payload.extend_from_slice(&self.theta_cols.to_le_bytes());
+        for &v in &self.theta {
+            payload.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        for state in [&self.delay_rng, &self.code_rng, &self.scenario_rng, &self.fault_rng] {
+            for &w in state.iter() {
+                payload.extend_from_slice(&w.to_le_bytes());
+            }
+        }
+        for &c in &self.outcomes {
+            payload.extend_from_slice(&c.to_le_bytes());
+        }
+        payload.extend_from_slice(&self.corrupted_total.to_le_bytes());
+        payload.extend_from_slice(&(self.history.len() as u32).to_le_bytes());
+        for p in &self.history {
+            payload.extend_from_slice(&(p.iter as u64).to_le_bytes());
+            payload.extend_from_slice(&p.sim_time.to_bits().to_le_bytes());
+            payload.extend_from_slice(&p.accuracy.to_bits().to_le_bytes());
+            payload.extend_from_slice(&p.train_loss.to_bits().to_le_bytes());
+        }
+
+        let mut out = Vec::with_capacity(MAGIC.len() + 4 + payload.len() + 4);
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&payload);
+        out.extend_from_slice(&crc32(&payload).to_le_bytes());
+        out
+    }
+
+    /// Parse and integrity-check a checkpoint. Magic, version and CRC are
+    /// validated before any field is trusted; every failure is a named
+    /// [`CheckpointError`].
+    pub fn decode(bytes: &[u8]) -> Result<Snapshot, CheckpointError> {
+        let header = MAGIC.len() + 4;
+        if bytes.len() < header + 4 {
+            return Err(CheckpointError::Truncated {
+                field: "header",
+                needed: header + 4,
+                have: bytes.len(),
+            });
+        }
+        if bytes[..MAGIC.len()] != MAGIC {
+            return Err(CheckpointError::BadMagic);
+        }
+        let version = u32::from_le_bytes(bytes[MAGIC.len()..header].try_into().unwrap());
+        if version != FORMAT_VERSION {
+            return Err(CheckpointError::UnsupportedVersion(version));
+        }
+        let payload = &bytes[header..bytes.len() - 4];
+        let expected = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        let found = crc32(payload);
+        if expected != found {
+            return Err(CheckpointError::CrcMismatch { expected, found });
+        }
+
+        let mut cur = Cursor { bytes: payload, pos: 0 };
+        let config_fingerprint = cur.u64("config_fingerprint")?;
+        let label_len = cur.u32("scheme_label length")? as usize;
+        let label_bytes = cur.take(label_len, "scheme_label")?;
+        let scheme_label = String::from_utf8_lossy(label_bytes).into_owned();
+        let next_iter = cur.u64("next_iter")?;
+        let clock = f64::from_bits(cur.u64("clock")?);
+        let theta_rows = cur.u32("theta_rows")?;
+        let theta_cols = cur.u32("theta_cols")?;
+        let n_theta = theta_rows as usize * theta_cols as usize;
+        let mut theta = Vec::with_capacity(n_theta);
+        for _ in 0..n_theta {
+            theta.push(f32::from_bits(cur.u32("theta")?));
+        }
+        let mut states = [[0u64; 4]; 4];
+        for state in states.iter_mut() {
+            for w in state.iter_mut() {
+                *w = cur.u64("rng state")?;
+            }
+        }
+        let mut outcomes = [0u64; 5];
+        for c in outcomes.iter_mut() {
+            *c = cur.u64("outcome counts")?;
+        }
+        let corrupted_total = cur.u64("corrupted_total")?;
+        let n_points = cur.u32("history length")? as usize;
+        let mut history = Vec::with_capacity(n_points);
+        for _ in 0..n_points {
+            history.push(Point {
+                iter: cur.u64("history iter")? as usize,
+                sim_time: f64::from_bits(cur.u64("history sim_time")?),
+                accuracy: f64::from_bits(cur.u64("history accuracy")?),
+                train_loss: f64::from_bits(cur.u64("history train_loss")?),
+            });
+        }
+
+        Ok(Snapshot {
+            config_fingerprint,
+            scheme_label,
+            next_iter,
+            clock,
+            theta_rows,
+            theta_cols,
+            theta,
+            delay_rng: states[0],
+            code_rng: states[1],
+            scenario_rng: states[2],
+            fault_rng: states[3],
+            outcomes,
+            corrupted_total,
+            history,
+        })
+    }
+
+    /// Reject a snapshot that does not belong to this run: wrong config
+    /// fingerprint, wrong scheme, or wrong θ shape.
+    pub fn verify(
+        &self,
+        config_fingerprint: u64,
+        scheme_label: &str,
+        theta_rows: usize,
+        theta_cols: usize,
+    ) -> Result<(), CheckpointError> {
+        if self.config_fingerprint != config_fingerprint {
+            return Err(CheckpointError::ConfigMismatch {
+                expected: config_fingerprint,
+                found: self.config_fingerprint,
+            });
+        }
+        if self.scheme_label != scheme_label {
+            return Err(CheckpointError::SchemeMismatch {
+                expected: scheme_label.to_string(),
+                found: self.scheme_label.clone(),
+            });
+        }
+        let expected = (theta_rows as u32, theta_cols as u32);
+        let found = (self.theta_rows, self.theta_cols);
+        if expected != found || self.theta.len() != theta_rows * theta_cols {
+            return Err(CheckpointError::ShapeMismatch { expected, found });
+        }
+        Ok(())
+    }
+}
+
+/// Bounds-checked little-endian reader over a CRC-validated payload.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, field: &'static str) -> Result<&'a [u8], CheckpointError> {
+        let have = self.bytes.len() - self.pos;
+        if have < n {
+            return Err(CheckpointError::Truncated { field, needed: n, have });
+        }
+        let out = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u32(&mut self, field: &'static str) -> Result<u32, CheckpointError> {
+        Ok(u32::from_le_bytes(self.take(4, field)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, field: &'static str) -> Result<u64, CheckpointError> {
+        Ok(u64::from_le_bytes(self.take(8, field)?.try_into().unwrap()))
+    }
+}
+
+/// Atomically write `snap` to `path` (temp + fsync + rename).
+pub fn write(path: &Path, snap: &Snapshot) -> Result<(), CheckpointError> {
+    atomic_write(path, &snap.encode()).map_err(|e| CheckpointError::Io {
+        path: path.display().to_string(),
+        err: e.to_string(),
+    })
+}
+
+/// Read and decode the checkpoint at `path`.
+pub fn load(path: &Path) -> Result<Snapshot, CheckpointError> {
+    let bytes = std::fs::read(path).map_err(|e| CheckpointError::Io {
+        path: path.display().to_string(),
+        err: e.to_string(),
+    })?;
+    Snapshot::decode(&bytes)
+}
+
+/// The run's default checkpoint path when `[checkpoint] path` is unset:
+/// scoped by the scheme's RNG tag so concurrent schemes on one artifacts
+/// dir never clobber each other's state.
+pub fn default_path(artifacts_dir: &str, scheme_tag: u64) -> String {
+    format!("{artifacts_dir}/checkpoint_{scheme_tag:016x}.ckpt")
+}
+
+/// FNV-1a fingerprint over every config field that shapes the realized
+/// training history. Deliberately **excluded**: `epochs` (a checkpoint
+/// from a shorter run may resume into a longer schedule — the per-round
+/// math is epoch-schedule-driven, not total-length-driven), `threads`
+/// (histories are thread-invariant by contract), `shard_size` (bitwise
+/// inert by contract), `artifacts_dir` and the `[checkpoint]` keys
+/// themselves (where state lives cannot change what the state is).
+pub fn fingerprint(cfg: &ExperimentConfig) -> u64 {
+    let canon = format!(
+        "seed={};clients={};dim={};q={};classes={};sigma={:016x};local_batch={};\
+         steps_per_epoch={};lr={:016x};lr_decay={:016x};lr_decay_epochs={:?};l2={:016x};\
+         eval_every={};deadline={:?};simd={:?};scenario={:?};faults={:?};fleet_asym={:?};\
+         fleet_n={:?};participation={:?};aggregation={:?};u_max={};generator={:?};code={:?};\
+         recovery={:?};train_size={};test_size={};dataset={}",
+        cfg.seed,
+        cfg.clients,
+        cfg.dim,
+        cfg.q,
+        cfg.classes,
+        cfg.sigma.to_bits(),
+        cfg.local_batch,
+        cfg.steps_per_epoch,
+        cfg.lr.to_bits(),
+        cfg.lr_decay.to_bits(),
+        cfg.lr_decay_epochs,
+        cfg.l2.to_bits(),
+        cfg.eval_every,
+        cfg.deadline,
+        cfg.simd,
+        cfg.scenario,
+        cfg.faults,
+        cfg.fleet_asym,
+        cfg.fleet_n,
+        cfg.participation,
+        cfg.aggregation,
+        cfg.u_max,
+        cfg.generator,
+        cfg.code,
+        cfg.recovery,
+        cfg.train_size,
+        cfg.test_size,
+        cfg.dataset,
+    );
+    fnv1a(canon.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Snapshot {
+        Snapshot {
+            config_fingerprint: 0xABCD_EF01_2345_6789,
+            scheme_label: "coded(delta=0.3)".into(),
+            next_iter: 7,
+            clock: 123.456,
+            theta_rows: 3,
+            theta_cols: 2,
+            theta: vec![1.0, -2.5, 0.0, f32::MIN_POSITIVE, 3.25, -0.125],
+            delay_rng: [1, 2, 3, 4],
+            code_rng: [5, 6, 7, 8],
+            scenario_rng: [9, 10, 11, 12],
+            fault_rng: [13, 14, 15, 16],
+            outcomes: [4, 0, 2, 1, 0],
+            corrupted_total: 3,
+            history: vec![
+                Point { iter: 1, sim_time: 10.0, accuracy: 0.5, train_loss: 1.25 },
+                Point { iter: 2, sim_time: 20.5, accuracy: 0.625, train_loss: 0.75 },
+            ],
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrips_bit_exactly() {
+        let snap = sample();
+        let decoded = Snapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(snap, decoded);
+    }
+
+    #[test]
+    fn truncation_at_every_length_is_rejected_never_panics() {
+        let bytes = sample().encode();
+        for cut in 0..bytes.len() {
+            let err = Snapshot::decode(&bytes[..cut])
+                .expect_err("a strict prefix must never decode");
+            // Either detected structurally or by the CRC; both are named.
+            assert!(
+                matches!(
+                    err,
+                    CheckpointError::Truncated { .. } | CheckpointError::CrcMismatch { .. }
+                ),
+                "cut at {cut}: unexpected error {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_rejected() {
+        let bytes = sample().encode();
+        for byte in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[byte] ^= 0x40;
+            assert!(
+                Snapshot::decode(&bad).is_err(),
+                "flip in byte {byte} decoded successfully"
+            );
+        }
+    }
+
+    #[test]
+    fn wrong_magic_and_version_name_the_expectation() {
+        let mut bytes = sample().encode();
+        bytes[0] = b'X';
+        assert_eq!(Snapshot::decode(&bytes), Err(CheckpointError::BadMagic));
+
+        let mut bytes = sample().encode();
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let err = Snapshot::decode(&bytes).unwrap_err();
+        assert_eq!(err, CheckpointError::UnsupportedVersion(99));
+        let msg = err.to_string();
+        assert!(msg.contains("expected one of 1"), "{msg}");
+    }
+
+    #[test]
+    fn verify_rejects_mismatches_by_name() {
+        let snap = sample();
+        snap.verify(snap.config_fingerprint, "coded(delta=0.3)", 3, 2).unwrap();
+        assert!(matches!(
+            snap.verify(1, "coded(delta=0.3)", 3, 2),
+            Err(CheckpointError::ConfigMismatch { .. })
+        ));
+        assert!(matches!(
+            snap.verify(snap.config_fingerprint, "naive", 3, 2),
+            Err(CheckpointError::SchemeMismatch { .. })
+        ));
+        assert!(matches!(
+            snap.verify(snap.config_fingerprint, "coded(delta=0.3)", 2, 3),
+            Err(CheckpointError::ShapeMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn resume_spec_parses_and_roundtrips() {
+        assert_eq!(ResumeSpec::parse("off").unwrap(), ResumeSpec::Off);
+        assert_eq!(ResumeSpec::parse("auto").unwrap(), ResumeSpec::Auto);
+        assert_eq!(
+            ResumeSpec::parse("path:/tmp/x.ckpt").unwrap(),
+            ResumeSpec::Path("/tmp/x.ckpt".into())
+        );
+        for spec in [
+            ResumeSpec::Off,
+            ResumeSpec::Auto,
+            ResumeSpec::Path("artifacts/run.ckpt".into()),
+        ] {
+            assert_eq!(ResumeSpec::parse(&spec.label()).unwrap(), spec);
+        }
+        let e = ResumeSpec::parse("sometimes").unwrap_err();
+        assert!(e.contains("expected one of off | auto | path:<file>"), "{e}");
+        assert!(ResumeSpec::parse("path:").is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_history_affecting_fields_only() {
+        let base = ExperimentConfig::tiny();
+        let f0 = fingerprint(&base);
+        assert_eq!(f0, fingerprint(&base.clone()));
+
+        // Epochs, threads and checkpoint placement do NOT change the
+        // fingerprint — they are exactly the knobs a resume may vary.
+        let mut longer = base.clone();
+        longer.epochs += 10;
+        longer.threads = 4;
+        longer.checkpoint_every = 2;
+        longer.resume = ResumeSpec::Auto;
+        assert_eq!(f0, fingerprint(&longer));
+
+        // Seed and lr DO.
+        let mut reseeded = base.clone();
+        reseeded.seed ^= 1;
+        assert_ne!(f0, fingerprint(&reseeded));
+        let mut hotter = base;
+        hotter.lr *= 2.0;
+        assert_ne!(f0, fingerprint(&hotter));
+    }
+}

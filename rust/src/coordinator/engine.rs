@@ -94,14 +94,17 @@
 //! control-path only — the scheme's `RoundPlan` and the borrowed
 //! `GradJob` list, a handful of pointer-sized entries per round.
 
+use std::path::Path;
+
 use anyhow::{Context, Result};
 
+use super::checkpoint::{self, ResumeSpec, Snapshot};
 use super::setup::FedSetup;
 use crate::metrics::{accuracy, History, OutcomeCounts, Point, RoundOutcome};
 use crate::rng::Rng;
 use crate::runtime::{GradJob, PreparedTheta, Runtime};
 use crate::schemes::{GradRequest, RoundCtx, RoundExec, Scheme};
-use crate::sim::fault::{DeadlineSpec, FAULT_STREAM_TAG};
+use crate::sim::fault::{DeadlineSpec, FAULT_STREAM_TAG, SERVER_FAULT_STREAM_TAG};
 use crate::sim::scenario::{Scenario, SCENARIO_STREAM_TAG};
 use crate::sim::timeline::RoundTrace;
 use crate::sim::KthScratch;
@@ -129,6 +132,12 @@ pub struct TrainOutcome {
     /// not) — how the run actually resolved its aggregates under faults
     /// and deadlines. All-`full` on an unfaulted, deadline-free run.
     pub outcomes: OutcomeCounts,
+    /// Non-finite client updates excluded from folds over the whole run
+    /// (`faults = corrupt:rate=…`, or natural numeric blow-ups).
+    pub corrupted_total: u64,
+    /// `Some(round)` when the run restored from a checkpoint and began at
+    /// this 0-based round instead of 0 (`[checkpoint] resume`).
+    pub resumed_from: Option<usize>,
     /// Final model (q × c).
     pub theta: Mat,
 }
@@ -161,6 +170,10 @@ pub struct RoundEvent {
     /// Which degradation-ladder rung resolved the round's aggregate
     /// (always [`RoundOutcome::Full`] when faults and deadlines are off).
     pub outcome: RoundOutcome,
+    /// Arrived gradients excluded from this round's fold because they
+    /// were non-finite (`faults = corrupt:rate=…`). Already subtracted
+    /// from [`RoundEvent::arrivals`].
+    pub corrupted: usize,
     /// Training objective after the round's update.
     pub loss: f64,
     /// Test accuracy after the round's update.
@@ -233,6 +246,15 @@ pub fn run(
     // inactive plan (`faults = "none"`) never draws from it.
     let mut fault_rng = root.split(FAULT_STREAM_TAG);
     let fault_plan = cfg.faults.build();
+    // The server-fault (coordinator-kill) stream is counter-based like
+    // participation: appended after every other split, only its base is
+    // consumed, and `Rng::indexed(server_base, round)` decides round r's
+    // kill in O(1) — which is what lets a *restarted* coordinator
+    // re-derive the exact kill schedule without replaying anything.
+    let mut server_stream = root.split(SERVER_FAULT_STREAM_TAG);
+    let server_base = server_stream.next_u64();
+    let server_rate = fault_plan.server_rate();
+    let corrupt_rate = fault_plan.corrupt_rate();
     let mut scenario: Box<dyn Scenario> = cfg.scenario.build();
     // Degraded mode (the ladder's skip rung, see the module docs) only
     // engages when a robustness knob is actually on — otherwise the
@@ -302,8 +324,86 @@ pub fn run(
     // already this round's fleet, bit-for-bit.
     let scenario_resets = scenario.perturbs_fleet();
 
+    // --- checkpoint/resume seam ---
+    // All cross-round scheme state (CodedFedL's parity datasets, code
+    // coefficients, t*/u*) is a deterministic function of `prepare`'s
+    // code-stream draws, so resume re-runs `prepare` (done above) and
+    // then rewinds the four sequential streams to their checkpointed
+    // positions; the counter-based participation and server-kill streams
+    // need only their bases, re-derived identically from the seed.
+    let scheme_label = scheme.label();
+    let fingerprint = checkpoint::fingerprint(cfg);
+    let ckpt_every = cfg.checkpoint_every;
+    let checkpointing = ckpt_every > 0;
+    let ckpt_path_buf = cfg
+        .checkpoint_path
+        .clone()
+        .unwrap_or_else(|| checkpoint::default_path(&cfg.artifacts_dir, tag));
+    let ckpt_path = Path::new(&ckpt_path_buf);
+    let mut corrupted_total: u64 = 0;
+    let mut corrupt_flags: Vec<bool> = Vec::new();
+    let mut start_iter: usize = 0;
+    let mut resumed_from: Option<usize> = None;
+    let resume_snap: Option<Snapshot> = match &cfg.resume {
+        ResumeSpec::Off => None,
+        ResumeSpec::Auto if !ckpt_path.exists() => None,
+        ResumeSpec::Auto => Some(
+            checkpoint::load(ckpt_path)
+                .map_err(|e| anyhow::anyhow!("[checkpoint] resume = \"auto\": {e}"))?,
+        ),
+        ResumeSpec::Path(p) => Some(
+            checkpoint::load(Path::new(p))
+                .map_err(|e| anyhow::anyhow!("[checkpoint] resume: {e}"))?,
+        ),
+    };
+    if let Some(snap) = &resume_snap {
+        snap.verify(fingerprint, &scheme_label, q, c)
+            .map_err(|e| anyhow::anyhow!("[checkpoint] resume: {e}"))?;
+        restore_state(
+            snap,
+            &mut theta,
+            &mut clock,
+            &mut history,
+            &mut outcomes,
+            &mut corrupted_total,
+            &mut delay_rng,
+            &mut code_rng,
+            &mut scenario_rng,
+            &mut fault_rng,
+        );
+        start_iter = snap.next_iter as usize;
+        resumed_from = Some(start_iter);
+    }
+    // In-process kill-and-restart (`faults = server:rate=…`) restores
+    // from the latest snapshot *bytes* — the durable checkpoint when one
+    // was written, else the run's initial state (a full restart).
+    let mut restore_bytes: Option<Vec<u8>> = if server_rate > 0.0 {
+        let snap = capture_state(
+            fingerprint,
+            &scheme_label,
+            start_iter,
+            clock,
+            &theta,
+            &delay_rng,
+            &code_rng,
+            &scenario_rng,
+            &fault_rng,
+            &outcomes,
+            corrupted_total,
+            &history,
+        );
+        Some(snap.encode())
+    } else {
+        None
+    };
+    // Strictly-increasing high-water mark of rounds that already killed
+    // the coordinator: replayed pre-kill rounds must not re-fire (each
+    // round kills at most once per run, so recovery always terminates).
+    let mut kill_hw: Option<usize> = None;
+
     let total_iters = cfg.total_iters();
-    for iter in 0..total_iters {
+    let mut iter = start_iter;
+    while iter < total_iters {
         let epoch = iter / cfg.steps_per_epoch;
         let step = iter % cfg.steps_per_epoch;
         let lr = setup.effective_lr(epoch) as f32;
@@ -330,6 +430,44 @@ pub fn run(
         // the cut are gone before any scheme looks, exactly like scenario
         // dropouts — which is why every scheme composes unmodified.
         fault_plan.apply(&mut trace, &mut fault_rng);
+        if corrupt_rate > 0.0 {
+            // Scheme-independent draw, one per present client in slot
+            // order, into the engine's reused flag buffer; the flagged
+            // gradients are poisoned after execution below.
+            fault_plan.draw_corrupt(&trace, &mut corrupt_flags, &mut fault_rng);
+        }
+        // --- in-process coordinator kill (`faults = server:rate=…`) ---
+        // The check sits mid-round, after this round's trace, fault and
+        // corruption draws already consumed RNG state: a kill genuinely
+        // rewinds partially-consumed streams to the snapshot, and the
+        // recovery invariant (resumed ≡ uninterrupted, bit-identical)
+        // makes the realized history equal `faults = none`'s. Replayed
+        // rounds re-emit observer events — consumers that must not see
+        // duplicates dedup by `RoundEvent::iter`, keeping the last.
+        if server_rate > 0.0
+            && kill_hw.map_or(true, |h| iter > h)
+            && Rng::indexed(server_base, iter as u64).next_f64() < server_rate
+        {
+            kill_hw = Some(iter);
+            let bytes =
+                restore_bytes.as_ref().expect("server faults always hold a restore point");
+            let snap = Snapshot::decode(bytes)
+                .map_err(|e| anyhow::anyhow!("restarting after server fault: {e}"))?;
+            restore_state(
+                &snap,
+                &mut theta,
+                &mut clock,
+                &mut history,
+                &mut outcomes,
+                &mut corrupted_total,
+                &mut delay_rng,
+                &mut code_rng,
+                &mut scenario_rng,
+                &mut fault_rng,
+            );
+            iter = snap.next_iter as usize;
+            continue;
+        }
         let deadline_t = match cfg.deadline {
             DeadlineSpec::None => None,
             DeadlineSpec::Fixed { t } => Some(t),
@@ -356,7 +494,7 @@ pub fn run(
 
         // --- the scheme's waiting policy decides who participates ---
         agg.as_mut_slice().fill(0.0);
-        let (arrivals, planned, cost) = {
+        let (arrivals, planned, cost, corrupted_now, excluded_rows) = {
             // θ is packed once and borrowed by every grad call this round
             // (rust/PERF.md §Design); the scope bounds the borrow so the
             // update below can mutate θ again.
@@ -391,6 +529,27 @@ pub fn run(
                 .with_context(|| {
                     format!("executing {} client gradients (step {step})", jobs.len())
                 })?;
+            // Corrupt faults poison the flagged clients' just-computed
+            // gradients with non-finite garbage; the fold below must
+            // never see a non-finite update, so every request's gradient
+            // is screened and offenders are zero-filled in place (a zero
+            // contribution drops out of both flat and hier folds) and
+            // counted. The screen only runs under `corrupt:` — the
+            // fault-free hot loop is untouched.
+            let mut corrupted_now = 0usize;
+            let mut excluded_rows = 0.0f32;
+            if corrupt_rate > 0.0 {
+                for (req, g) in plan.requests.iter().zip(grad_outs.iter_mut()) {
+                    if corrupt_flags.get(req.client).copied().unwrap_or(false) {
+                        g.as_mut_slice().fill(f32::NAN);
+                    }
+                    if !g.as_slice().iter().all(|v| v.is_finite()) {
+                        g.as_mut_slice().fill(0.0);
+                        corrupted_now += 1;
+                        excluded_rows += req.mask.iter().sum::<f32>();
+                    }
+                }
+            }
             // …and fold in a pinned order, fixing the aggregate's bits
             // independently of the thread count: flat mode folds
             // sequentially in plan order (the historical fold), hier mode
@@ -416,8 +575,15 @@ pub fn run(
             // and decodes over them without re-running anything.
             let exec = RoundExec::new(rt, &theta_prep, &grad_outs[..jobs.len()]);
             let cost = scheme.aggregate(&ctx, trace.delays(), &plan, &exec, &mut agg)?;
-            (plan.requests.len(), participants, cost)
+            (
+                plan.requests.len() - corrupted_now,
+                participants,
+                cost,
+                corrupted_now,
+                excluded_rows,
+            )
         };
+        corrupted_total += corrupted_now as u64;
 
         // --- degradation-ladder resolution (module docs) ---
         // The scheme reported how *its* aggregation resolved (rungs 1–4);
@@ -432,6 +598,10 @@ pub fn run(
                 RoundOutcome::ParityCompensation | RoundOutcome::ExactDecode
             ) {
             RoundOutcome::Skip
+        } else if corrupted_now > 0 && cost.outcome == RoundOutcome::Full {
+            // Some planned gradients were excluded as non-finite: the
+            // fold was partial even though every planned client arrived.
+            RoundOutcome::PartialFold
         } else {
             cost.outcome
         };
@@ -465,7 +635,20 @@ pub fn run(
             // and the actual aggregate return (e.g. greedy's (1−ψ)m)
             // otherwise. With faults and deadlines off this branch is
             // unconditional and byte-for-byte the historical update.
-            let denom = if cost.returned > 0.0 { cost.returned } else { m };
+            // m̂ additionally sheds the rows of excluded (corrupted)
+            // gradients when the scheme counted actual returns;
+            // stochastically complete schemes (returned = 0) keep m —
+            // an excluded update is a zero gradient there, not fewer
+            // samples.
+            let denom = if cost.returned > 0.0 {
+                if corrupted_now > 0 {
+                    (cost.returned - excluded_rows).max(1.0)
+                } else {
+                    cost.returned
+                }
+            } else {
+                m
+            };
             agg.scale(1.0 / denom);
             agg.axpy(cfg.l2 as f32, &theta);
 
@@ -478,28 +661,84 @@ pub fn run(
         // --- evaluation + event fan-out (sampled every `eval_every`
         //     rounds; the final round is always evaluated) ---
         let evaluate = (iter + 1) % cfg.eval_every == 0 || iter + 1 == total_iters;
-        if !evaluate {
-            continue;
+        if evaluate {
+            let theta_prep = rt.prepare_theta_into(&theta, &mut theta_panel)?;
+            rt.predict_into(&setup.test_xhat, &theta_prep, &mut eval_logits)?;
+            let acc = accuracy(&eval_logits, &setup.test_labels);
+            let loss = eval_train_loss(rt, setup, &theta_prep, &theta, &mut probe_logits)?;
+            history.push(Point {
+                iter: iter + 1,
+                sim_time: clock,
+                accuracy: acc,
+                train_loss: loss,
+            });
+            let event = RoundEvent {
+                iter: iter + 1,
+                epoch,
+                step,
+                clock,
+                arrivals,
+                planned,
+                outcome,
+                corrupted: corrupted_now,
+                loss,
+                acc,
+            };
+            for obs in observers.iter_mut() {
+                obs.on_round(&event);
+            }
         }
-        let theta_prep = rt.prepare_theta_into(&theta, &mut theta_panel)?;
-        rt.predict_into(&setup.test_xhat, &theta_prep, &mut eval_logits)?;
-        let acc = accuracy(&eval_logits, &setup.test_labels);
-        let loss = eval_train_loss(rt, setup, &theta_prep, &theta, &mut probe_logits)?;
-        history.push(Point { iter: iter + 1, sim_time: clock, accuracy: acc, train_loss: loss });
-        let event = RoundEvent {
-            iter: iter + 1,
-            epoch,
-            step,
+
+        // --- periodic checkpoint (`[checkpoint] every = R`) ---
+        // Warm non-checkpoint rounds pay only this modulo test (0-alloc,
+        // gated by tests/alloc_gate.rs); checkpoint rounds snapshot,
+        // encode and atomically persist, and the encoded bytes double as
+        // the in-process restore point for `server:` kills.
+        if checkpointing && (iter + 1) % ckpt_every == 0 {
+            let snap = capture_state(
+                fingerprint,
+                &scheme_label,
+                iter + 1,
+                clock,
+                &theta,
+                &delay_rng,
+                &code_rng,
+                &scenario_rng,
+                &fault_rng,
+                &outcomes,
+                corrupted_total,
+                &history,
+            );
+            let bytes = snap.encode();
+            crate::io::atomic_write(ckpt_path, &bytes).with_context(|| {
+                format!("writing checkpoint {} (round {})", ckpt_path.display(), iter + 1)
+            })?;
+            if restore_bytes.is_some() {
+                restore_bytes = Some(bytes);
+            }
+        }
+        iter += 1;
+    }
+
+    // Graceful shutdown: leave a final checkpoint so a follow-up run with
+    // a longer schedule (resume = "auto") continues where this one ended.
+    if checkpointing {
+        let snap = capture_state(
+            fingerprint,
+            &scheme_label,
+            total_iters,
             clock,
-            arrivals,
-            planned,
-            outcome,
-            loss,
-            acc,
-        };
-        for obs in observers.iter_mut() {
-            obs.on_round(&event);
-        }
+            &theta,
+            &delay_rng,
+            &code_rng,
+            &scenario_rng,
+            &fault_rng,
+            &outcomes,
+            corrupted_total,
+            &history,
+        );
+        checkpoint::write(ckpt_path, &snap)
+            .map_err(|e| anyhow::anyhow!("writing final checkpoint: {e}"))?;
     }
 
     let stats = scheme.stats();
@@ -509,8 +748,74 @@ pub fn run(
         u_star: stats.u_star,
         parity_overhead: stats.parity_overhead,
         outcomes,
+        corrupted_total,
+        resumed_from,
         theta,
     })
+}
+
+/// Snapshot the engine's full resumable state at a round boundary
+/// (`next_iter` = the first round the restored run will execute).
+#[allow(clippy::too_many_arguments)]
+fn capture_state(
+    fingerprint: u64,
+    scheme_label: &str,
+    next_iter: usize,
+    clock: f64,
+    theta: &Mat,
+    delay_rng: &Rng,
+    code_rng: &Rng,
+    scenario_rng: &Rng,
+    fault_rng: &Rng,
+    outcomes: &OutcomeCounts,
+    corrupted_total: u64,
+    history: &History,
+) -> Snapshot {
+    Snapshot {
+        config_fingerprint: fingerprint,
+        scheme_label: scheme_label.to_string(),
+        next_iter: next_iter as u64,
+        clock,
+        theta_rows: theta.rows() as u32,
+        theta_cols: theta.cols() as u32,
+        theta: theta.as_slice().to_vec(),
+        delay_rng: delay_rng.state(),
+        code_rng: code_rng.state(),
+        scenario_rng: scenario_rng.state(),
+        fault_rng: fault_rng.state(),
+        outcomes: outcomes.as_array(),
+        corrupted_total,
+        history: history.points.clone(),
+    }
+}
+
+/// Rewind the engine to a snapshot: θ, clock, history, outcome counts and
+/// all four sequential RNG stream positions. The inverse of
+/// [`capture_state`]; shape/config agreement was verified beforehand.
+#[allow(clippy::too_many_arguments)]
+fn restore_state(
+    snap: &Snapshot,
+    theta: &mut Mat,
+    clock: &mut f64,
+    history: &mut History,
+    outcomes: &mut OutcomeCounts,
+    corrupted_total: &mut u64,
+    delay_rng: &mut Rng,
+    code_rng: &mut Rng,
+    scenario_rng: &mut Rng,
+    fault_rng: &mut Rng,
+) {
+    theta.as_mut_slice().copy_from_slice(&snap.theta);
+    *clock = snap.clock;
+    history.points.clear();
+    history.points.extend_from_slice(&snap.history);
+    let [full, exact_decode, parity, partial, skip] = snap.outcomes;
+    *outcomes = OutcomeCounts { full, exact_decode, parity, partial, skip };
+    *corrupted_total = snap.corrupted_total;
+    *delay_rng = Rng::from_state(snap.delay_rng);
+    *code_rng = Rng::from_state(snap.code_rng);
+    *scenario_rng = Rng::from_state(snap.scenario_rng);
+    *fault_rng = Rng::from_state(snap.fault_rng);
 }
 
 /// Raw pointer to the hierarchical fold's partial-sum slots. Shared with

@@ -8,14 +8,18 @@
 //! and streaming one [`RoundEvent`] per round to registered
 //! [`RoundObserver`]s — resolving each round through the degradation
 //! ladder (see the engine module docs) when `[faults]` or a `[training]
-//! deadline` is active. [`trainer::run_scheme`] is the deprecated
-//! pre-trait entry point.
+//! deadline` is active. [`checkpoint`] makes the loop crash-consistent:
+//! periodic CRC-guarded snapshots plus `resume` modes that restart an
+//! interrupted run bit-identically. [`trainer::run_scheme`] is the
+//! deprecated pre-trait entry point.
 
+pub mod checkpoint;
 pub mod engine;
 pub mod setup;
 pub mod trainer;
 
 pub use crate::metrics::{OutcomeCounts, RoundOutcome};
+pub use checkpoint::{CheckpointError, ResumeSpec, Snapshot};
 pub use engine::{EventLog, RoundEvent, RoundObserver, TrainOutcome};
 pub use setup::FedSetup;
 #[allow(deprecated)]

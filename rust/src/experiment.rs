@@ -25,6 +25,7 @@ use anyhow::{Context, Result};
 
 use crate::coding::{CodeSpec, GeneratorKind, RecoveryMode};
 use crate::conf::{ConfError, ExperimentConfig};
+use crate::coordinator::checkpoint::ResumeSpec;
 use crate::coordinator::{engine, FedSetup, RoundObserver, TrainOutcome};
 use crate::runtime::{Runtime, RuntimeShapes};
 use crate::schemes::{CodedFedL, Scheme, SchemeSpec};
@@ -183,6 +184,20 @@ impl ExperimentBuilder {
         /// (`RecoveryMode::Expectation` — the paper's — or
         /// `RecoveryMode::Exact` for bit-exact erasure decoding).
         recovery: RecoveryMode,
+        /// Write a crash-consistent checkpoint every this many rounds
+        /// (0 — the default — disables periodic checkpointing; any
+        /// positive value also snapshots at graceful shutdown). Never
+        /// changes the realized history.
+        checkpoint_every: usize,
+        /// Checkpoint file path (`None` derives
+        /// `checkpoint_<scheme-tag>.ckpt` under the artifacts dir).
+        checkpoint_path: Option<String>,
+        /// How the run starts relative to an existing checkpoint
+        /// (`ResumeSpec::Off` — the default — starts fresh; `Auto`
+        /// resumes if the file exists; `Path` resumes from exactly that
+        /// file). A resumed run is bit-identical to the uninterrupted
+        /// one.
+        resume: ResumeSpec,
         /// Train set size.
         train_size: usize,
         /// Test set size.

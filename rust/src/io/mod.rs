@@ -1,0 +1,124 @@
+//! Durable file output: crash-consistent writes and the integrity
+//! primitives the checkpoint format is built on.
+//!
+//! [`atomic_write`] is the one way any tracked artifact reaches disk —
+//! checkpoints ([`crate::coordinator::checkpoint`]) and the bench report
+//! ([`crate::benchutil::BenchReport::write_json`]) both route through it.
+//! The sequence is the classic temp file → `fsync` → `rename`: a reader
+//! (or a resumed run) either sees the complete previous contents or the
+//! complete new contents, never a torn mix, even if the process dies
+//! mid-write. [`crc32`] is the IEEE CRC-32 used to detect the remaining
+//! failure mode — a checkpoint corrupted *after* it was durably written
+//! (bit rot, partial copies between machines).
+
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+
+/// IEEE CRC-32 (polynomial 0xEDB88320) lookup table, built at compile
+/// time so integrity checks carry no startup cost.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+};
+
+/// IEEE CRC-32 over `bytes` — the checksum guarding every checkpoint
+/// payload against torn or corrupted files.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ CRC32_TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+/// FNV-1a over `bytes` — the stable 64-bit hash used for config
+/// fingerprints (and the default scheme RNG tag).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Write `bytes` to `path` crash-consistently: write a sibling temp file,
+/// `fsync` it, then atomically rename it over `path`. A crash at any point
+/// leaves either the old complete file or the new complete file — never a
+/// truncated or interleaved one. The parent directory is created if
+/// missing.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    std::fs::create_dir_all(&dir)?;
+    // The temp name embeds the target's file name so concurrent writers
+    // to *different* targets in one directory never collide; concurrent
+    // writers to the same target last-writer-wins atomically, which is
+    // exactly rename's contract.
+    let file_name = path.file_name().and_then(|n| n.to_str()).unwrap_or("out");
+    let tmp = dir.join(format!(".{file_name}.tmp.{}", std::process::id()));
+    let result = (|| {
+        let mut f = File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)
+    })();
+    if result.is_err() {
+        // Best-effort cleanup; the original target is untouched either way.
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // The canonical IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"abc"), crc32(b"abd"));
+    }
+
+    #[test]
+    fn fnv1a_is_stable_and_input_dependent() {
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"naive"), fnv1a(b"naive"));
+        assert_ne!(fnv1a(b"naive"), fnv1a(b"greedy"));
+    }
+
+    #[test]
+    fn atomic_write_replaces_contents_completely() {
+        let dir = std::env::temp_dir().join(format!("codedfedl_io_{}", std::process::id()));
+        let path = dir.join("nested/report.json");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second, longer contents").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer contents");
+        // No temp litter left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

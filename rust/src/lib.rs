@@ -78,6 +78,30 @@
 //! stream, so `faults = "none"` + `deadline = "none"` histories are
 //! bit-for-bit the historical ones. See `examples/degraded_rounds.rs`.
 //!
+//! ## Crash recovery
+//!
+//! The coordinator itself is restartable mid-run
+//! ([`coordinator::checkpoint`]): `[checkpoint] every = R` /
+//! `--checkpoint-every` writes a versioned, CRC-guarded snapshot of the
+//! full training state — θ, the simulated clock, the round index, every
+//! sequential RNG stream position, the outcome histogram and the
+//! evaluated history — every `R` rounds and at graceful shutdown, always
+//! through [`io::atomic_write`] (temp file + fsync + rename) so a crash
+//! mid-write can never tear the file. `[checkpoint] resume = "auto" |
+//! "path:<p>" | "off"` / `--resume` restores the engine loop mid-run;
+//! torn, truncated, corrupted or mismatched-config checkpoints are
+//! rejected with named [`coordinator::CheckpointError`]s, never panics.
+//! The house invariant, proved by `tests/checkpoint_resume.rs` across
+//! schemes × scenarios × faults × thread counts × SIMD policies: a run
+//! interrupted at any round and resumed is **bit-identical** to the
+//! uninterrupted run. The fault kind `server:rate=…` kills-and-restarts
+//! the coordinator in-process from its latest snapshot so chaos tests
+//! drive the recovery path, and `corrupt:rate=…` injects non-finite
+//! client gradients that the fold excludes before aggregation (counted
+//! on [`coordinator::RoundEvent::corrupted`] /
+//! [`coordinator::TrainOutcome::corrupted_total`]). See
+//! `examples/resume_training.rs`.
+//!
 //! ## Erasure coding and exact recovery
 //!
 //! The coded scheme's straggler tolerance is pluggable ([`coding`]): a
@@ -129,10 +153,11 @@
 //! reuses all per-round buffers — a warm training round performs zero
 //! heap allocations on the compute path (`tests/alloc_gate.rs`). See
 //! `rust/PERF.md` for the kernel/dispatch/threading/allocation design,
-//! the tracked `BENCH_hotpath.json` baseline (schema 6: per-op GFLOP/s,
-//! codec GB/s + symbols/s, the selected ISA, fleet-scale rounds/s, and
-//! the degraded-run rung histogram + achieved participation; `cargo
-//! bench --bench hotpath`), and how to compare runs across PRs.
+//! the tracked `BENCH_hotpath.json` baseline (schema 7: per-op GFLOP/s,
+//! codec GB/s + symbols/s, the selected ISA, fleet-scale rounds/s, the
+//! degraded-run rung histogram + achieved participation, and the
+//! checkpoint snapshot latency; `cargo bench --bench hotpath`), and how
+//! to compare runs across PRs.
 //!
 //! Knobs: thread count comes from `[runtime] threads` / `--threads` /
 //! [`ExperimentBuilder::threads`] (0 = all cores) and never changes
@@ -160,6 +185,7 @@ pub mod coordinator;
 pub mod data;
 pub mod delay;
 pub mod experiment;
+pub mod io;
 pub mod metrics;
 pub mod numerics;
 pub mod privacy;
@@ -170,7 +196,9 @@ pub mod sim;
 pub mod tensor;
 pub mod topology;
 
-pub use coordinator::{FedSetup, RoundEvent, RoundObserver, TrainOutcome};
+pub use coordinator::{
+    CheckpointError, FedSetup, ResumeSpec, RoundEvent, RoundObserver, TrainOutcome,
+};
 pub use experiment::{ExperimentBuilder, Session};
 pub use metrics::{OutcomeCounts, RoundOutcome};
 pub use schemes::{Scheme, SchemeSpec};

@@ -13,7 +13,7 @@ use codedfedl::allocation::{self, NodeSpec};
 use codedfedl::benchutil;
 use codedfedl::cli::{parse_argv, Args, Command, OptSpec};
 use codedfedl::conf::ExperimentConfig;
-use codedfedl::coordinator::{RoundEvent, RoundObserver};
+use codedfedl::coordinator::{checkpoint, ResumeSpec, RoundEvent, RoundObserver};
 use codedfedl::metrics::GainRow;
 use codedfedl::schemes::{CodedFedL, Scheme, SchemeSpec};
 use codedfedl::topology::FleetSpec;
@@ -94,6 +94,24 @@ fn commands() -> Vec<Command> {
         OptSpec {
             name: "recovery",
             help: "coded straggler recovery: expectation (paper) | exact (erasure decode)",
+            default: None,
+            is_flag: false,
+        },
+        OptSpec {
+            name: "checkpoint-every",
+            help: "write a crash-consistent checkpoint every k rounds (0 = off)",
+            default: None,
+            is_flag: false,
+        },
+        OptSpec {
+            name: "checkpoint-path",
+            help: "checkpoint file (default: checkpoint_<scheme-tag>.ckpt under the artifacts dir)",
+            default: None,
+            is_flag: false,
+        },
+        OptSpec {
+            name: "resume",
+            help: "resume from a checkpoint: off | auto (if the file exists) | path:<file>",
             default: None,
             is_flag: false,
         },
@@ -203,6 +221,15 @@ fn builder_from(args: &Args) -> Result<ExperimentBuilder> {
     if let Some(s) = args.get("recovery") {
         b = b.recovery(s.parse().map_err(anyhow::Error::msg)?);
     }
+    if let Some(k) = args.parse_usize("checkpoint-every").map_err(anyhow::Error::msg)? {
+        b = b.checkpoint_every(k);
+    }
+    if let Some(p) = args.get("checkpoint-path") {
+        b = b.checkpoint_path(Some(p.to_string()));
+    }
+    if let Some(s) = args.get("resume") {
+        b = b.resume(s.parse().map_err(anyhow::Error::msg)?);
+    }
     Ok(b)
 }
 
@@ -291,8 +318,46 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         other => other.build(),
     };
+    // Surface the checkpoint situation before the first round so operators
+    // can tell a resumed run from a fresh one (the engine itself performs
+    // the actual restore and re-validates the file).
+    let ckpt_path = cfg
+        .checkpoint_path
+        .clone()
+        .unwrap_or_else(|| checkpoint::default_path(&cfg.artifacts_dir, scheme.rng_tag()));
+    match &cfg.resume {
+        ResumeSpec::Off => {
+            if cfg.checkpoint_every > 0 {
+                println!(
+                    "checkpoint: writing {ckpt_path} every {} rounds (fresh start)",
+                    cfg.checkpoint_every
+                );
+            }
+        }
+        spec => {
+            let peek_path = match spec {
+                ResumeSpec::Path(p) => p.clone(),
+                _ => ckpt_path.clone(),
+            };
+            match checkpoint::load(std::path::Path::new(&peek_path)) {
+                Ok(snap) => println!(
+                    "checkpoint: resuming from {peek_path} at round {} (sim clock {:.1} s)",
+                    snap.next_iter, snap.clock
+                ),
+                Err(_) if *spec == ResumeSpec::Auto => {
+                    println!("checkpoint: no usable checkpoint at {peek_path}; starting fresh");
+                }
+                // `path:<p>` resume with a bad file: let the engine fail
+                // with the named CheckpointError instead of pre-judging.
+                Err(_) => {}
+            }
+        }
+    }
     let mut progress = ProgressPrinter { stride: (total / 20).max(1) };
     let out = session.run_observed(scheme.as_mut(), &mut progress)?;
+    if let Some(r) = out.resumed_from {
+        println!("resumed at round {r}: earlier rounds restored from the checkpoint");
+    }
     if let (Some(t), Some(u)) = (out.t_star, out.u_star) {
         println!("t* = {t:.2} s   u* = {u}   parity overhead = {:.1} s", out.parity_overhead);
     }

@@ -34,11 +34,21 @@ use crate::sim::timeline::RoundTrace;
 /// sequences.
 pub const FAULT_STREAM_TAG: u64 = 0xFA17_0001;
 
+/// Tag of the counter-based stream deciding coordinator (server) kills
+/// for `faults = server:rate=…`. Split off the experiment root after
+/// every other stream; only its base is consumed (`Rng::indexed(base,
+/// round)` reaches any round in O(1)), so a restarted coordinator
+/// re-derives the exact kill schedule without replaying rounds.
+pub const SERVER_FAULT_STREAM_TAG: u64 = 0xFA17_5E11;
+
 /// Closed, serialisable description of the built-in fault mixes — the
 /// form the CLI (`--faults`), TOML files (`[faults] kind = …`) and tests
 /// speak. `parse` accepts `none`, `crash[:rate=r]`,
-/// `link[:rate=r,retry=n]`, `parity[:rate=r]` and
-/// `mixed[:crash=a,link=b,parity=c]`.
+/// `link[:rate=r,retry=n]`, `parity[:rate=r]`,
+/// `mixed[:crash=a,link=b,parity=c]`, `server[:rate=r]` (in-process
+/// coordinator kill-and-restart, driving the checkpoint recovery path)
+/// and `corrupt[:rate=r]` (non-finite client gradients, excluded by the
+/// engine fold).
 #[derive(Clone, Copy, Debug, PartialEq, Default)]
 pub enum FaultSpec {
     /// No injection (default; bit-identical to pre-fault runs — the
@@ -63,6 +73,19 @@ pub enum FaultSpec {
     /// All three at once: crash, single-attempt link loss and parity
     /// loss with independent probabilities.
     Mixed { crash: f64, link: f64, parity: f64 },
+    /// The *coordinator* dies mid-round with the given probability and is
+    /// restarted in-process from its latest snapshot
+    /// ([`crate::coordinator::checkpoint`]). Draws come from a dedicated
+    /// counter-based stream — never the sequential fault stream — and the
+    /// recovery invariant makes the realized history bit-identical to
+    /// `faults = none`, which is exactly what chaos tests assert.
+    Server { rate: f64 },
+    /// Each arrived client gradient is replaced by non-finite garbage
+    /// with the given probability (a poisoned or bit-rotted update). The
+    /// engine excludes non-finite updates from the fold before
+    /// aggregation and counts them on
+    /// [`crate::coordinator::RoundEvent::corrupted`].
+    Corrupt { rate: f64 },
 }
 
 impl FaultSpec {
@@ -75,6 +98,8 @@ impl FaultSpec {
             FaultSpec::Mixed { crash, link, parity } => {
                 format!("mixed(crash={crash},link={link},parity={parity})")
             }
+            FaultSpec::Server { rate } => format!("server(rate={rate})"),
+            FaultSpec::Corrupt { rate } => format!("corrupt(rate={rate})"),
         }
     }
 
@@ -144,11 +169,19 @@ impl FaultSpec {
                 let v = kvs(&[("crash", 0.1), ("link", 0.1), ("parity", 0.1)])?;
                 FaultSpec::Mixed { crash: v[0], link: v[1], parity: v[2] }
             }
+            "server" => {
+                let v = kvs(&[("rate", 0.1)])?;
+                FaultSpec::Server { rate: v[0] }
+            }
+            "corrupt" => {
+                let v = kvs(&[("rate", 0.1)])?;
+                FaultSpec::Corrupt { rate: v[0] }
+            }
             other => {
                 return Err(format!(
                     "unknown faults kind {other:?} (expected one of none | crash[:rate=r] | \
                      link[:rate=r,retry=n] | parity[:rate=r] | \
-                     mixed[:crash=a,link=b,parity=c])"
+                     mixed[:crash=a,link=b,parity=c] | server[:rate=r] | corrupt[:rate=r])"
                 ))
             }
         };
@@ -179,42 +212,36 @@ impl FaultSpec {
                 rate("mixed", "link", link)?;
                 rate("mixed", "parity", parity)
             }
+            FaultSpec::Server { rate: r } => rate("server", "rate", r),
+            FaultSpec::Corrupt { rate: r } => rate("corrupt", "rate", r),
         }
     }
 
     /// Instantiate the per-round injection plan.
     pub fn build(&self) -> FaultPlan {
+        let inactive = FaultPlan {
+            crash_rate: 0.0,
+            link_rate: 0.0,
+            link_retries: 0,
+            parity_rate: 0.0,
+            server_rate: 0.0,
+            corrupt_rate: 0.0,
+        };
         match *self {
-            FaultSpec::None => FaultPlan {
-                crash_rate: 0.0,
-                link_rate: 0.0,
-                link_retries: 0,
-                parity_rate: 0.0,
-            },
-            FaultSpec::Crash { rate } => FaultPlan {
-                crash_rate: rate,
-                link_rate: 0.0,
-                link_retries: 0,
-                parity_rate: 0.0,
-            },
-            FaultSpec::Link { rate, retry } => FaultPlan {
-                crash_rate: 0.0,
-                link_rate: rate,
-                link_retries: retry,
-                parity_rate: 0.0,
-            },
-            FaultSpec::Parity { rate } => FaultPlan {
-                crash_rate: 0.0,
-                link_rate: 0.0,
-                link_retries: 0,
-                parity_rate: rate,
-            },
+            FaultSpec::None => inactive,
+            FaultSpec::Crash { rate } => FaultPlan { crash_rate: rate, ..inactive },
+            FaultSpec::Link { rate, retry } => {
+                FaultPlan { link_rate: rate, link_retries: retry, ..inactive }
+            }
+            FaultSpec::Parity { rate } => FaultPlan { parity_rate: rate, ..inactive },
             FaultSpec::Mixed { crash, link, parity } => FaultPlan {
                 crash_rate: crash,
                 link_rate: link,
-                link_retries: 0,
                 parity_rate: parity,
+                ..inactive
             },
+            FaultSpec::Server { rate } => FaultPlan { server_rate: rate, ..inactive },
+            FaultSpec::Corrupt { rate } => FaultPlan { corrupt_rate: rate, ..inactive },
         }
     }
 }
@@ -242,14 +269,61 @@ pub struct FaultPlan {
     link_rate: f64,
     link_retries: usize,
     parity_rate: f64,
+    server_rate: f64,
+    corrupt_rate: f64,
 }
 
 impl FaultPlan {
-    /// Whether the plan can ever mutate a trace (any rate positive).
-    /// Inactive plans skip injection entirely — and the engine uses this
-    /// to decide whether degraded-mode semantics apply at all.
+    /// Whether the plan can ever perturb the realized training history
+    /// (any trace- or gradient-level rate positive). `server_rate` is
+    /// deliberately excluded: coordinator kills are recovered
+    /// bit-identically, so they must not flip the engine into degraded
+    /// mode — `faults = server:…` histories equal `faults = none` ones.
     pub fn is_active(&self) -> bool {
-        self.crash_rate > 0.0 || self.link_rate > 0.0 || self.parity_rate > 0.0
+        self.crash_rate > 0.0
+            || self.link_rate > 0.0
+            || self.parity_rate > 0.0
+            || self.corrupt_rate > 0.0
+    }
+
+    /// Per-round probability that the coordinator is killed mid-round
+    /// (drawn by the engine from the counter-based
+    /// [`SERVER_FAULT_STREAM_TAG`] stream, not by this plan).
+    pub fn server_rate(&self) -> f64 {
+        self.server_rate
+    }
+
+    /// Per-gradient corruption probability (drawn via
+    /// [`FaultPlan::draw_corrupt`]).
+    pub fn corrupt_rate(&self) -> f64 {
+        self.corrupt_rate
+    }
+
+    /// Draw this round's gradient-corruption flags: one draw per present
+    /// client in slot-index order (scheme-independent, like every fault
+    /// draw), written into the engine's reused `flags` buffer. Returns
+    /// the number of flagged clients. A zero corrupt rate returns before
+    /// the first draw, so other fault mixes keep their exact historical
+    /// streams.
+    pub fn draw_corrupt(
+        &self,
+        trace: &RoundTrace,
+        flags: &mut Vec<bool>,
+        rng: &mut Rng,
+    ) -> usize {
+        flags.clear();
+        flags.resize(trace.num_clients(), false);
+        if self.corrupt_rate <= 0.0 {
+            return 0;
+        }
+        let mut n = 0;
+        for j in 0..trace.num_clients() {
+            if trace.is_present(j) && rng.next_f64() < self.corrupt_rate {
+                flags[j] = true;
+                n += 1;
+            }
+        }
+        n
     }
 
     /// Inject this round's faults into a freshly sampled `trace`.
@@ -438,6 +512,15 @@ mod tests {
             FaultSpec::parse("crash:rate=1").unwrap(),
             FaultSpec::Crash { rate: 1.0 }
         );
+        assert_eq!(
+            FaultSpec::parse("server:rate=0.2").unwrap(),
+            FaultSpec::Server { rate: 0.2 }
+        );
+        assert_eq!(FaultSpec::parse("server").unwrap(), FaultSpec::Server { rate: 0.1 });
+        assert_eq!(
+            "corrupt:rate=1".parse::<FaultSpec>().unwrap(),
+            FaultSpec::Corrupt { rate: 1.0 }
+        );
     }
 
     #[test]
@@ -451,6 +534,10 @@ mod tests {
         assert!(FaultSpec::parse("link:retry=1.5").is_err());
         assert!(FaultSpec::parse("link:retry=-1").is_err());
         assert!(FaultSpec::parse("mixed:link=2").is_err());
+        assert!(FaultSpec::parse("server:rate=1.5").is_err());
+        assert!(FaultSpec::parse("corrupt:rate=-0.2").is_err());
+        let e = FaultSpec::parse("meteor").unwrap_err();
+        assert!(e.contains("server[:rate=r]") && e.contains("corrupt[:rate=r]"), "{e}");
         let e = FaultSpec::parse("crash:probability=0.1").unwrap_err();
         assert!(e.contains("probability") && e.contains("rate"), "{e}");
         let e = FaultSpec::parse("meteor").unwrap_err();
@@ -492,7 +579,48 @@ mod tests {
             assert!(!spec.label().is_empty());
         }
         assert_eq!(FaultSpec::Crash { rate: 0.3 }.label(), "crash(rate=0.3)");
+        assert_eq!(FaultSpec::Server { rate: 0.2 }.label(), "server(rate=0.2)");
+        assert_eq!(FaultSpec::Corrupt { rate: 0.4 }.label(), "corrupt(rate=0.4)");
         assert_eq!(DeadlineSpec::Quantile { q: 0.8 }.label(), "quantile(q=0.8)");
+    }
+
+    #[test]
+    fn server_faults_are_inactive_for_the_trace_but_expose_their_rate() {
+        let plan = FaultSpec::Server { rate: 0.7 }.build();
+        assert!(!plan.is_active(), "server kills must not flip degraded mode");
+        assert_eq!(plan.server_rate(), 0.7);
+        // apply() is a no-op that never touches the RNG, so the realized
+        // trace history equals faults = none.
+        let mut trace = sampled_trace(4, 31);
+        let before = trace.clone();
+        let mut rng = Rng::seed_from(5);
+        let probe = rng.clone();
+        plan.apply(&mut trace, &mut rng);
+        assert_eq!(trace.delays().client_t, before.delays().client_t);
+        let (mut a, mut b) = (rng, probe);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn corrupt_draws_flag_present_clients_only() {
+        let plan = FaultSpec::Corrupt { rate: 1.0 }.build();
+        assert!(plan.is_active());
+        assert_eq!(plan.corrupt_rate(), 1.0);
+        let trace = sampled_trace(6, 37);
+        let mut flags = Vec::new();
+        let n = plan.draw_corrupt(&trace, &mut flags, &mut Rng::seed_from(3));
+        assert_eq!(n, trace.delays().present_count());
+        for j in 0..6 {
+            assert_eq!(flags[j], trace.is_present(j));
+        }
+        // Zero rate: flags cleared, RNG untouched.
+        let zero = FaultSpec::Crash { rate: 0.5 }.build();
+        let mut rng = Rng::seed_from(9);
+        let probe = rng.clone();
+        assert_eq!(zero.draw_corrupt(&trace, &mut flags, &mut rng), 0);
+        assert!(flags.iter().all(|&f| !f));
+        let (mut a, mut b) = (rng, probe);
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

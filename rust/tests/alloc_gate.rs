@@ -46,6 +46,14 @@
 //! selection (`kth_fastest_into` over the surviving arrivals) and the
 //! trace truncation at the cut (`RoundTrace::close_at`) — all zero warm
 //! allocations, so degraded rounds stay on the same gate as clean ones.
+//!
+//! The checkpoint PR adds the crash-recovery decision path: the per-round
+//! corrupt-flag draw into a warm `Vec<bool>` (`FaultPlan::draw_corrupt`),
+//! the counter-based server-kill draw (`Rng::indexed` — stateless by
+//! construction, so replays can't disturb the sequential streams) and
+//! the checkpoint-cadence test the engine runs every round. Warm
+//! *non-checkpoint* rounds stay at zero allocations with checkpointing
+//! enabled — only the rounds that actually write a snapshot pay for it.
 
 use codedfedl::benchutil::CountingAlloc;
 use codedfedl::coding::{pack_byte_planes, unpack_byte_planes, CodeSpec, DecodeScratch};
@@ -246,6 +254,56 @@ fn steady_state_compute_path_allocates_zero_bytes() {
             b1 - b0,
             0,
             "deadline+fault decision path requested {} bytes",
+            b1 - b0
+        );
+    }
+
+    // --- the checkpoint+chaos decision path (crash-recovery PR): the
+    //     per-round corrupt-flag draw into the engine's warm flag buffer,
+    //     the stateless counter-based server-kill draw and the
+    //     checkpoint-cadence modulo — everything a non-checkpoint warm
+    //     round pays with `[checkpoint] every` and `corrupt:`/`server:`
+    //     faults enabled — zero allocations once warm. ---
+    {
+        let plan = FaultSpec::Corrupt { rate: 0.3 }.build();
+        let server_base = 0xFA17_5E11u64;
+        let ckpt_every = 64usize; // no round below hits the cadence
+        let mut fault_rng = Rng::seed_from(51);
+        let mut delay_rng = Rng::seed_from(52);
+        let mut view = FleetView::from_base(&setup.client_links, setup.server);
+        let mut trace = RoundTrace::with_capacity(n);
+        let mut flags: Vec<bool> = Vec::new();
+        let mut recovery_round = |r: usize| {
+            view.reset_from(&setup.client_links, setup.server);
+            trace.sample_into(&view, &loads, 8.0, &mut delay_rng);
+            plan.apply(&mut trace, &mut fault_rng);
+            let corrupted = plan.draw_corrupt(&trace, &mut flags, &mut fault_rng);
+            let killed = Rng::indexed(server_base, r as u64).next_f64() < 0.2;
+            let snapshot_due = (r + 1) % ckpt_every == 0;
+            std::hint::black_box((corrupted, killed, snapshot_due));
+        };
+
+        // Two warm rounds grow the flag buffer to the fleet size…
+        recovery_round(0);
+        recovery_round(1);
+
+        // …after which a warm non-checkpoint round must acquire no memory.
+        let (a0, b0) = (CountingAlloc::allocations(), CountingAlloc::bytes());
+        for r in 2..5 {
+            recovery_round(r);
+        }
+        let (a1, b1) = (CountingAlloc::allocations(), CountingAlloc::bytes());
+        assert_eq!(
+            a1 - a0,
+            0,
+            "checkpoint+chaos decision path performed {} allocations ({} bytes)",
+            a1 - a0,
+            b1 - b0
+        );
+        assert_eq!(
+            b1 - b0,
+            0,
+            "checkpoint+chaos decision path requested {} bytes",
             b1 - b0
         );
     }

@@ -7,10 +7,18 @@
 //! the experiment root independently of the scheme, so every scheme in a
 //! combo faces the identical fault realisation, and a combo that passes
 //! once passes forever.
+//!
+//! `CODEDFEDL_FAULTS` (the CI chaos legs, e.g. `server:rate=0.2`)
+//! overrides the fault mix of the sweep and the thread/SIMD
+//! reproducibility test, so the whole suite re-runs under any injected
+//! fault kind — including in-process coordinator kills.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use codedfedl::coding::RecoveryMode;
 use codedfedl::conf::ExperimentConfig;
-use codedfedl::coordinator::EventLog;
+use codedfedl::coordinator::{EventLog, RoundEvent};
 use codedfedl::metrics::RoundOutcome;
 use codedfedl::schemes::{CodedFedL, SchemeSpec};
 use codedfedl::sim::fault::{DeadlineSpec, FaultSpec};
@@ -24,13 +32,51 @@ const SCENARIOS: [ScenarioSpec; 3] = [
     ScenarioSpec::Burst { slow: 0.3, factor: 4.0 },
 ];
 
-const FAULTS: [FaultSpec; 5] = [
+const FAULTS: [FaultSpec; 7] = [
     FaultSpec::None,
     FaultSpec::Crash { rate: 0.4 },
     FaultSpec::Link { rate: 0.4, retry: 1 },
     FaultSpec::Parity { rate: 0.5 },
     FaultSpec::Mixed { crash: 0.3, link: 0.3, parity: 0.5 },
+    FaultSpec::Server { rate: 0.4 },
+    FaultSpec::Corrupt { rate: 0.4 },
 ];
+
+static UNIQ: AtomicUsize = AtomicUsize::new(0);
+
+/// A collision-free scratch path (tests in this binary run concurrently).
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "codedfedl_chaos_{}_{}_{tag}",
+        std::process::id(),
+        UNIQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// CI fault override: when set, the sweep and the reproducibility test
+/// face this fault mix instead of their built-in one.
+fn env_faults() -> Option<FaultSpec> {
+    match std::env::var("CODEDFEDL_FAULTS") {
+        Ok(v) => Some(v.parse().expect("CODEDFEDL_FAULTS")),
+        Err(_) => None,
+    }
+}
+
+/// The realized round timeline: `server:` kills replay rounds, and each
+/// replayed round re-emits its event, so the raw observer stream can
+/// rewind. Keeping only the *last* emission per iteration (dropping
+/// everything a rewind superseded) reconstructs the history the run
+/// actually settled on.
+fn realized(events: &[RoundEvent]) -> Vec<RoundEvent> {
+    let mut out: Vec<RoundEvent> = Vec::new();
+    for ev in events {
+        while out.last().is_some_and(|last| last.iter >= ev.iter) {
+            out.pop();
+        }
+        out.push(*ev);
+    }
+    out
+}
 
 const DEADLINES: [DeadlineSpec; 3] = [
     DeadlineSpec::None,
@@ -57,13 +103,18 @@ fn assert_survives(session: &Session, scheme: &mut dyn codedfedl::Scheme, tag: &
 
     // θ is finite — the degradation ladder never produces NaN/∞.
     assert!(out.theta.as_slice().iter().all(|v| v.is_finite()), "{tag}: non-finite theta");
-    // One ladder rung is recorded per round, evaluated or not.
+    // One ladder rung is recorded per round, evaluated or not (server
+    // kills rewind the histogram along with everything else, so replays
+    // never double-count).
     assert_eq!(out.outcomes.total(), total as u64, "{tag}: rung histogram");
     // With the default eval_every = 1 every round emits an event carrying
     // its rung, achieved ≤ planned participation, and finite telemetry.
-    assert_eq!(log.events.len(), total, "{tag}: event count");
+    // Under `server:` kills the raw stream holds replays; the realized
+    // timeline must still be exactly one event per round.
+    let events = realized(&log.events);
+    assert_eq!(events.len(), total, "{tag}: event count");
     let mut prev_clock = 0.0;
-    for ev in &log.events {
+    for ev in &events {
         assert!(ev.arrivals <= ev.planned, "{tag}: iter {}", ev.iter);
         assert!(ev.loss.is_finite() && ev.acc.is_finite(), "{tag}: iter {}", ev.iter);
         // The simulated clock is monotone — a skipped round still charges
@@ -96,8 +147,14 @@ fn run_combo(scenario: ScenarioSpec, faults: FaultSpec, deadline: DeadlineSpec) 
 
 #[test]
 fn every_scheme_survives_every_fault_deadline_scenario_combo() {
+    // A CI fault override collapses the fault axis to the injected mix —
+    // the whole scenario × deadline grid re-runs under it.
+    let fault_axis: Vec<FaultSpec> = match env_faults() {
+        Some(f) => vec![f],
+        None => FAULTS.to_vec(),
+    };
     for scenario in SCENARIOS {
-        for faults in FAULTS {
+        for &faults in &fault_axis {
             for deadline in DEADLINES {
                 run_combo(scenario, faults, deadline);
             }
@@ -165,7 +222,8 @@ fn degraded_runs_are_bit_reproducible_across_threads_and_simd() {
         let cfg = ExperimentConfig {
             epochs: 2,
             scenario: ScenarioSpec::Dropout { rate: 0.3 },
-            faults: FaultSpec::Mixed { crash: 0.3, link: 0.3, parity: 0.5 },
+            faults: env_faults()
+                .unwrap_or(FaultSpec::Mixed { crash: 0.3, link: 0.3, parity: 0.5 }),
             deadline: DeadlineSpec::Quantile { q: 0.8 },
             threads,
             simd,
@@ -183,4 +241,98 @@ fn degraded_runs_are_bit_reproducible_across_threads_and_simd() {
         assert_eq!(serial.outcomes, parallel.outcomes, "{simd:?}");
         assert_eq!(slog.events, plog.events, "{simd:?}");
     }
+}
+
+#[test]
+fn server_kills_replay_to_a_bit_identical_history() {
+    // `server:rate=…` kills-and-restarts the coordinator mid-round from
+    // its latest snapshot. The kill draw rides its own dedicated RNG
+    // stream (excluded from `FaultPlan::is_active()`), so the realized
+    // run must equal the fault-free run *bit for bit* — a kill costs
+    // replayed work, never a different answer. Checked without
+    // checkpointing (recovery restores the run-initial snapshot and
+    // replays from round 0) and with per-round checkpointing (recovery
+    // loses at most the interrupted round).
+    let golden_session =
+        combo_session(ScenarioSpec::Static, FaultSpec::None, DeadlineSpec::None);
+    let mut glog = EventLog::default();
+    let golden =
+        golden_session.run_observed(&mut CodedFedL::new(0.3), &mut glog).unwrap();
+
+    for rate in [0.4, 1.0] {
+        for ckpt_every in [0usize, 1] {
+            let tag = format!("server:rate={rate} ckpt_every={ckpt_every}");
+            let ckpt = tmp_path("server.ckpt");
+            let mut cfg = ExperimentConfig {
+                epochs: 2,
+                faults: FaultSpec::Server { rate },
+                ..ExperimentConfig::tiny()
+            };
+            cfg.checkpoint_every = ckpt_every;
+            if ckpt_every > 0 {
+                cfg.checkpoint_path = Some(ckpt.to_string_lossy().into_owned());
+            }
+            let session = ExperimentBuilder::from_config(cfg).build().unwrap();
+            let mut log = EventLog::default();
+            let out = session.run_observed(&mut CodedFedL::new(0.3), &mut log).unwrap();
+            assert_eq!(out.theta.as_slice(), golden.theta.as_slice(), "{tag}: theta");
+            assert_eq!(out.outcomes, golden.outcomes, "{tag}: rung histogram");
+            assert_eq!(out.history.points, golden.history.points, "{tag}: history");
+            assert_eq!(realized(&log.events), glog.events, "{tag}: realized timeline");
+            // rate = 1.0 kills every round at least once, so the raw
+            // stream must visibly contain replays — proof the recovery
+            // path actually ran rather than the draw never firing.
+            if rate == 1.0 {
+                assert!(log.events.len() > glog.events.len(), "{tag}: no replays seen");
+            }
+            let _ = std::fs::remove_file(&ckpt);
+        }
+    }
+}
+
+#[test]
+fn corrupt_rate_one_excludes_every_gradient_and_stays_finite() {
+    // Satellite regression: every client gradient is poisoned non-finite
+    // every round. The fold must exclude them all — θ never sees a NaN.
+    let session = combo_session(
+        ScenarioSpec::Static,
+        FaultSpec::Corrupt { rate: 1.0 },
+        DeadlineSpec::None,
+    );
+    let total = session.config().total_iters() as u64;
+    // Uncoded schemes fold client gradients only: with all of them
+    // excluded, every round takes the documented skip rung and θ stays
+    // exactly at its zero initialisation.
+    for spec in [SchemeSpec::NaiveUncoded, SchemeSpec::GreedyUncoded { psi: 0.2 }] {
+        let mut log = EventLog::default();
+        let mut scheme = spec.build();
+        let out = session.run_observed(scheme.as_mut(), &mut log).unwrap();
+        assert_eq!(out.outcomes.skip, total, "{}: not all rounds skipped", spec.label());
+        assert!(
+            out.theta.as_slice().iter().all(|&v| v == 0.0),
+            "{}: theta moved on an all-corrupt run",
+            spec.label()
+        );
+        assert!(out.corrupted_total > 0, "{}", spec.label());
+        let per_round: u64 = log.events.iter().map(|ev| ev.corrupted as u64).sum();
+        assert_eq!(out.corrupted_total, per_round, "{}: corrupt accounting", spec.label());
+        for ev in &log.events {
+            assert_eq!(ev.arrivals, 0, "{}: iter {}", spec.label(), ev.iter);
+            assert!(ev.corrupted > 0, "{}: iter {}", spec.label(), ev.iter);
+            assert!(ev.loss.is_finite() && ev.acc.is_finite(), "{}", spec.label());
+        }
+    }
+    // The coded scheme's server-side parity gradient is not a client
+    // update, so it survives the purge: any round whose plan left
+    // stragglers for the MEC unit to compensate resolves as parity
+    // compensation; rounds that planned the full fleet (and so folded no
+    // parity) fold nothing at all and take the skip rung. Either way no
+    // round can be full and θ stays finite.
+    let out = session.run_spec(SchemeSpec::Coded { delta: 0.3 }).unwrap();
+    assert_eq!(out.outcomes.full, 0);
+    assert_eq!(out.outcomes.exact_decode, 0);
+    assert_eq!(out.outcomes.partial, 0);
+    assert_eq!(out.outcomes.parity + out.outcomes.skip, total);
+    assert!(out.corrupted_total > 0);
+    assert!(out.theta.as_slice().iter().all(|v| v.is_finite()));
 }

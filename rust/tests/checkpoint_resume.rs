@@ -1,0 +1,328 @@
+//! Crash-consistent checkpoint/resume gates (robustness PR): the house
+//! invariant is that **a run interrupted at any round and resumed is
+//! bit-identical to the uninterrupted run** — θ bits, every history
+//! point, the outcome histogram, everything.
+//!
+//! 1. **Resume-at-every-boundary equivalence** — for every scheme ×
+//!    {static, dropout} × {faults none, crash:rate=0.3} × SIMD policy, a
+//!    checkpointed run snapshots at every round boundary; resuming from
+//!    *each* boundary (at 1 and 4 threads — resume is thread-invariant,
+//!    like the histories themselves) reproduces the uninterrupted run's
+//!    golden hash exactly. Checkpointing itself never moves a bit.
+//! 2. **Schedule extension** — `resume = "auto"` continues a shorter
+//!    (fewer-epochs) run into a longer schedule bit-identically: the
+//!    config fingerprint deliberately excludes `epochs`, so truncation +
+//!    resume is the supported interruption mechanism.
+//! 3. **Rejection, never panic** — torn/truncated prefixes, bit flips,
+//!    wrong magic, unknown versions, mismatched configs and mismatched
+//!    schemes all surface named `CheckpointError`s through the engine's
+//!    resume path ("expected one of …" style), and a missing `path:`
+//!    file is a named io error.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use codedfedl::conf::ExperimentConfig;
+use codedfedl::coordinator::{RoundEvent, RoundObserver};
+use codedfedl::schemes::{CodedFedL, Scheme, SchemeSpec};
+use codedfedl::sim::fault::FaultSpec;
+use codedfedl::sim::scenario::ScenarioSpec;
+use codedfedl::tensor::SimdPolicy;
+use codedfedl::{ExperimentBuilder, ResumeSpec, TrainOutcome};
+
+static UNIQ: AtomicUsize = AtomicUsize::new(0);
+
+/// A collision-free scratch path (tests in this binary run concurrently).
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "codedfedl_ckpt_{}_{}_{tag}",
+        std::process::id(),
+        UNIQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// FNV-1a over the run's bits: θ plus every history point — the same
+/// golden-hash idiom `tests/scenario_determinism.rs` pins histories with.
+fn run_hash(out: &TrainOutcome) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bits: u64| {
+        for b in bits.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for &v in out.theta.as_slice() {
+        eat(v.to_bits() as u64);
+    }
+    for p in &out.history.points {
+        eat(p.iter as u64);
+        eat(p.sim_time.to_bits());
+        eat(p.accuracy.to_bits());
+        eat(p.train_loss.to_bits());
+    }
+    h
+}
+
+fn cfg_with(
+    scenario: ScenarioSpec,
+    faults: FaultSpec,
+    threads: usize,
+    simd: SimdPolicy,
+) -> ExperimentConfig {
+    ExperimentConfig {
+        epochs: 2, // tiny: 2 steps/epoch → 4 rounds
+        threads,
+        simd,
+        scenario,
+        faults,
+        ..ExperimentConfig::tiny()
+    }
+}
+
+/// Build a scheme exactly like `Session::run_spec` does, so labels (and
+/// therefore checkpoint scheme stamps) agree across runs.
+fn build_scheme(cfg: &ExperimentConfig, spec: SchemeSpec) -> Box<dyn Scheme> {
+    match spec {
+        SchemeSpec::Coded { delta } => {
+            Box::new(CodedFedL::new(delta).with_code(cfg.code).with_recovery(cfg.recovery))
+        }
+        other => other.build(),
+    }
+}
+
+fn run(cfg: ExperimentConfig, spec: SchemeSpec) -> TrainOutcome {
+    let session = ExperimentBuilder::from_config(cfg).build().unwrap();
+    let mut scheme = build_scheme(session.config(), spec);
+    session.run(scheme.as_mut()).unwrap()
+}
+
+/// Copies the live checkpoint file at every round boundary. When the
+/// event for round `k` fires, the file on disk holds boundary `k − 1`
+/// (the engine checkpoints *after* the event fan-out), so snatching on
+/// events 2..=total captures boundaries 1..=total−1; the graceful final
+/// checkpoint supplies boundary `total`.
+struct BoundarySnatcher {
+    src: PathBuf,
+    dir: PathBuf,
+    copied: Vec<(usize, PathBuf)>,
+}
+
+impl RoundObserver for BoundarySnatcher {
+    fn on_round(&mut self, ev: &RoundEvent) {
+        if ev.iter >= 2 {
+            let b = ev.iter - 1;
+            let dst = self.dir.join(format!("boundary_{b}.ckpt"));
+            std::fs::copy(&self.src, &dst).expect("snatching the live checkpoint");
+            self.copied.push((b, dst));
+        }
+    }
+}
+
+#[test]
+fn resume_at_every_boundary_is_bit_identical_to_the_uninterrupted_run() {
+    let schemes = [
+        SchemeSpec::NaiveUncoded,
+        SchemeSpec::GreedyUncoded { psi: 0.2 },
+        SchemeSpec::Coded { delta: 0.3 },
+    ];
+    let scenarios = [ScenarioSpec::Static, ScenarioSpec::Dropout { rate: 0.3 }];
+    let fault_mixes = [FaultSpec::None, FaultSpec::Crash { rate: 0.3 }];
+
+    for spec in schemes {
+        for scenario in scenarios {
+            for faults in fault_mixes {
+                for simd in [SimdPolicy::Scalar, SimdPolicy::Auto] {
+                    let tag = format!(
+                        "{} / {} / {} / {simd:?}",
+                        spec.label(),
+                        scenario.label(),
+                        faults.label()
+                    );
+
+                    // The uninterrupted golden run.
+                    let golden_out = run(cfg_with(scenario, faults, 1, simd), spec);
+                    assert!(golden_out.resumed_from.is_none(), "{tag}");
+                    let golden = run_hash(&golden_out);
+
+                    // The same run with per-round checkpointing, capturing
+                    // every boundary as it goes by.
+                    let live = tmp_path("live.ckpt");
+                    let dir = tmp_path("boundaries");
+                    std::fs::create_dir_all(&dir).unwrap();
+                    let mut cfg = cfg_with(scenario, faults, 1, simd);
+                    let total = cfg.total_iters();
+                    cfg.checkpoint_every = 1;
+                    cfg.checkpoint_path = Some(live.to_string_lossy().into_owned());
+                    let session = ExperimentBuilder::from_config(cfg).build().unwrap();
+                    let mut scheme = build_scheme(session.config(), spec);
+                    let mut snatcher = BoundarySnatcher {
+                        src: live.clone(),
+                        dir: dir.clone(),
+                        copied: Vec::new(),
+                    };
+                    let ckpt_out =
+                        session.run_observed(scheme.as_mut(), &mut snatcher).unwrap();
+                    // Checkpointing is bit-inert: same golden hash.
+                    assert_eq!(
+                        run_hash(&ckpt_out),
+                        golden,
+                        "{tag}: checkpointing changed the history"
+                    );
+                    // The graceful-shutdown checkpoint is boundary `total`.
+                    let final_b = dir.join(format!("boundary_{total}.ckpt"));
+                    std::fs::copy(&live, &final_b).unwrap();
+                    snatcher.copied.push((total, final_b));
+                    assert_eq!(snatcher.copied.len(), total, "{tag}: missed a boundary");
+
+                    // Resume from every boundary, at 1 and 4 threads: the
+                    // resumed run must be the golden run, bit for bit.
+                    for (b, path) in &snatcher.copied {
+                        for threads in [1usize, 4] {
+                            let mut rcfg = cfg_with(scenario, faults, threads, simd);
+                            rcfg.resume =
+                                ResumeSpec::Path(path.to_string_lossy().into_owned());
+                            let out = run(rcfg, spec);
+                            assert_eq!(
+                                out.resumed_from,
+                                Some(*b),
+                                "{tag}: boundary {b}, {threads} threads"
+                            );
+                            assert_eq!(
+                                run_hash(&out),
+                                golden,
+                                "{tag}: resume at boundary {b} ({threads} threads) \
+                                 diverged from the uninterrupted run"
+                            );
+                            assert_eq!(
+                                out.outcomes, golden_out.outcomes,
+                                "{tag}: boundary {b} outcome histogram"
+                            );
+                        }
+                    }
+
+                    let _ = std::fs::remove_file(&live);
+                    let _ = std::fs::remove_dir_all(&dir);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_resume_continues_a_shorter_run_into_a_longer_schedule() {
+    let ckpt = tmp_path("auto.ckpt");
+    let ckpt_str = ckpt.to_string_lossy().into_owned();
+
+    // The interrupted run: half the schedule, checkpointing on. Its
+    // graceful-shutdown checkpoint lands at round total/2.
+    let mut short = cfg_with(ScenarioSpec::Static, FaultSpec::None, 1, SimdPolicy::Scalar);
+    short.epochs = 1;
+    short.checkpoint_every = 1;
+    short.checkpoint_path = Some(ckpt_str.clone());
+    let short_total = short.total_iters();
+    run(short, SchemeSpec::Coded { delta: 0.3 });
+
+    // `resume = "auto"` picks the checkpoint up and finishes the full
+    // schedule — bit-identical to never having stopped.
+    let golden = run_hash(&run(
+        cfg_with(ScenarioSpec::Static, FaultSpec::None, 1, SimdPolicy::Scalar),
+        SchemeSpec::Coded { delta: 0.3 },
+    ));
+    let mut resumed = cfg_with(ScenarioSpec::Static, FaultSpec::None, 1, SimdPolicy::Scalar);
+    resumed.checkpoint_path = Some(ckpt_str.clone());
+    resumed.resume = ResumeSpec::Auto;
+    let out = run(resumed, SchemeSpec::Coded { delta: 0.3 });
+    assert_eq!(out.resumed_from, Some(short_total));
+    assert_eq!(run_hash(&out), golden, "auto resume diverged from the uninterrupted run");
+
+    // `auto` with no checkpoint on disk starts fresh — same golden run,
+    // no resume round reported.
+    let missing = tmp_path("never_written.ckpt");
+    let mut fresh = cfg_with(ScenarioSpec::Static, FaultSpec::None, 1, SimdPolicy::Scalar);
+    fresh.checkpoint_path = Some(missing.to_string_lossy().into_owned());
+    fresh.resume = ResumeSpec::Auto;
+    let out = run(fresh, SchemeSpec::Coded { delta: 0.3 });
+    assert!(out.resumed_from.is_none());
+    assert_eq!(run_hash(&out), golden, "auto-without-checkpoint is not a fresh run");
+
+    let _ = std::fs::remove_file(&ckpt);
+}
+
+/// Run a session whose resume spec points at `path` and return the full
+/// rendered error chain (the run must fail — that's asserted here).
+fn resume_error(spec: SchemeSpec, seed: Option<u64>, path: &str) -> String {
+    let mut cfg = cfg_with(ScenarioSpec::Static, FaultSpec::None, 1, SimdPolicy::Scalar);
+    if let Some(s) = seed {
+        cfg.seed = s;
+    }
+    cfg.resume = ResumeSpec::Path(path.to_string());
+    let session = ExperimentBuilder::from_config(cfg).build().unwrap();
+    let mut scheme = build_scheme(session.config(), spec);
+    let err = session
+        .run(scheme.as_mut())
+        .expect_err("a bad checkpoint must be rejected, never trained from");
+    format!("{err:#}")
+}
+
+#[test]
+fn torn_and_mismatched_checkpoints_are_rejected_with_named_errors() {
+    // A genuine checkpoint to corrupt: one short coded run.
+    let ckpt = tmp_path("victim.ckpt");
+    let mut cfg = cfg_with(ScenarioSpec::Static, FaultSpec::None, 1, SimdPolicy::Scalar);
+    cfg.epochs = 1;
+    cfg.checkpoint_every = 1;
+    cfg.checkpoint_path = Some(ckpt.to_string_lossy().into_owned());
+    run(cfg, SchemeSpec::Coded { delta: 0.3 });
+    let bytes = std::fs::read(&ckpt).unwrap();
+    let coded = SchemeSpec::Coded { delta: 0.3 };
+
+    // Torn prefixes of every flavour: decode names the failure (a
+    // truncated field or the CRC), the engine surfaces it, nothing panics.
+    for cut in [0, 4, 9, 12, bytes.len() / 2, bytes.len() - 5, bytes.len() - 1] {
+        let torn = tmp_path("torn.ckpt");
+        std::fs::write(&torn, &bytes[..cut]).unwrap();
+        let msg = resume_error(coded, None, &torn.to_string_lossy());
+        assert!(
+            msg.contains("truncated") || msg.contains("CRC mismatch"),
+            "cut at {cut}: unhelpful error {msg:?}"
+        );
+        let _ = std::fs::remove_file(&torn);
+    }
+
+    // A single flipped bit mid-payload is caught by the CRC by name.
+    let flipped = tmp_path("flipped.ckpt");
+    let mut bad = bytes.clone();
+    bad[bytes.len() / 2] ^= 0x01;
+    std::fs::write(&flipped, &bad).unwrap();
+    let msg = resume_error(coded, None, &flipped.to_string_lossy());
+    assert!(msg.contains("CRC mismatch"), "bit flip: {msg:?}");
+
+    // Wrong magic and unknown version carry "expected one of …" text.
+    let mut bad = bytes.clone();
+    bad[0] ^= 0x01;
+    std::fs::write(&flipped, &bad).unwrap();
+    let msg = resume_error(coded, None, &flipped.to_string_lossy());
+    assert!(msg.contains("bad magic"), "magic: {msg:?}");
+    let mut bad = bytes.clone();
+    bad[8..12].copy_from_slice(&99u32.to_le_bytes());
+    std::fs::write(&flipped, &bad).unwrap();
+    let msg = resume_error(coded, None, &flipped.to_string_lossy());
+    assert!(msg.contains("expected one of 1"), "version: {msg:?}");
+    let _ = std::fs::remove_file(&flipped);
+
+    // A different experiment config (seed) is a named fingerprint
+    // mismatch — the checkpoint is intact, it's just not this run's.
+    let msg = resume_error(coded, Some(0xD15EA5E), &ckpt.to_string_lossy());
+    assert!(msg.contains("fingerprint"), "config mismatch: {msg:?}");
+
+    // A different scheme is rejected by name even under the same config.
+    let msg = resume_error(SchemeSpec::NaiveUncoded, None, &ckpt.to_string_lossy());
+    assert!(msg.contains("scheme"), "scheme mismatch: {msg:?}");
+
+    // `path:` to a missing file is a named io error, not a fresh start.
+    let gone = tmp_path("missing.ckpt");
+    let msg = resume_error(coded, None, &gone.to_string_lossy());
+    assert!(msg.contains("checkpoint io"), "missing file: {msg:?}");
+
+    let _ = std::fs::remove_file(&ckpt);
+}
