@@ -1,0 +1,73 @@
+//! Payload ablation: what a gradient uplink codec buys, and why.
+//!
+//! ```sh
+//! cargo run --release --example payload_ablation
+//! ```
+//!
+//! The `[comm]` communication model prices every delay leg by the bytes
+//! it actually carries, so shrinking the uplink gradient does two things
+//! at once: the load-allocation optimizer sees cheaper uplinks and moves
+//! its optimal (deadline, load, redundancy) split, and every simulated
+//! round gets cheaper on the clock. This example runs CodedFedL under
+//! the three codecs plus the `payload = "fixed"` ablation control
+//! (quantized folds, *unchanged* delays) and tabulates, per
+//! configuration: the optimizer's (t*, u*), total simulated wall clock,
+//! bytes on the wire and final accuracy — separating how much of the
+//! speedup is repricing and how much (if any) accuracy the quantization
+//! costs.
+
+use codedfedl::comm::{CodecSpec, PayloadSpec, ScaleSpec};
+use codedfedl::coordinator::EventLog;
+use codedfedl::schemes::CodedFedL;
+use codedfedl::ExperimentBuilder;
+
+fn main() -> anyhow::Result<()> {
+    let configs: [(&str, CodecSpec, PayloadSpec); 4] = [
+        ("none (baseline)", CodecSpec::None, PayloadSpec::Auto),
+        ("q8 (8-bit)", CodecSpec::Q8 { scale: ScaleSpec::Auto }, PayloadSpec::Auto),
+        ("bitpack (4-bit)", CodecSpec::Bitpack, PayloadSpec::Auto),
+        // Ablation control: quantize the folds but keep the pre-codec
+        // fixed-size payload pricing — same clock as the baseline, so
+        // any accuracy delta is pure quantization noise.
+        ("q8 + fixed price", CodecSpec::Q8 { scale: ScaleSpec::Auto }, PayloadSpec::Fixed),
+    ];
+
+    println!(
+        "{:<18} {:>8} {:>5} {:>12} {:>10} {:>10} {:>10}",
+        "codec", "t* (s)", "u*", "wall (s)", "MB down", "MB up", "final acc"
+    );
+    let mut baseline_wall = None;
+    for (name, codec, payload) in configs {
+        let session = ExperimentBuilder::preset("tiny")?
+            .epochs(12)
+            .codec(codec)
+            .payload(payload)
+            .build()?;
+        let mut log = EventLog::default();
+        let out = session.run_observed(&mut CodedFedL::new(0.3), &mut log)?;
+        let wall = out.history.total_sim_time();
+        println!(
+            "{:<18} {:>8.3} {:>5} {:>12.1} {:>10.2} {:>10.2} {:>10.4}",
+            name,
+            out.t_star.unwrap_or(f64::NAN),
+            out.u_star.unwrap_or(0),
+            wall,
+            out.bytes_down_total as f64 / 1e6,
+            out.bytes_up_total as f64 / 1e6,
+            out.history.final_accuracy()
+        );
+        match baseline_wall {
+            None => baseline_wall = Some(wall),
+            Some(base) => println!(
+                "{:<18} {:>8} {:>5} {:>11.1}%",
+                "  vs baseline", "", "", 100.0 * (wall - base) / base
+            ),
+        }
+    }
+    println!(
+        "\nThe lossy codecs lower t* (the optimizer waits less for cheap uplinks)\n\
+         and the wall clock with it; the fixed-price ablation shows the folds\n\
+         survive quantization with the clock pinned to the baseline."
+    );
+    Ok(())
+}

@@ -20,6 +20,7 @@
 use codedfedl::allocation::{self, NodeSpec};
 use codedfedl::benchutil::{bench, bench_iters, load_runtime, shapes_for, BenchReport, CountingAlloc};
 use codedfedl::coding::{gf256, Code, CodeSpec, DecodeScratch};
+use codedfedl::comm::{self, CodecSpec, ScaleSpec};
 use codedfedl::conf::ExperimentConfig;
 use codedfedl::coordinator::{checkpoint, EventLog};
 use codedfedl::metrics::Point;
@@ -339,6 +340,88 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // --- comm payload codecs (schema 8): the uplink quantize / pack
+    //     kernels the engine runs per arrived gradient under a lossy
+    //     `[comm] codec`. Rows are sized at 256 Ki scalars (1 MiB of
+    //     f32) so the numbers measure bandwidth, not loop overhead;
+    //     throughput is accounted in *input* f32 bytes so none/q8/bitpack
+    //     compare on the same denominator. ---
+    {
+        let isa = rt.isa().unwrap_or(Isa::Scalar);
+        let q8 = CodecSpec::Q8 { scale: ScaleSpec::Auto };
+        let row_len = 1usize << 18;
+        let mut src = vec![0.0f32; row_len];
+        let mut rng_row = Rng::seed_from(0xC077);
+        rng_row.fill_normal_f32(&mut src);
+        let in_bytes = (row_len * 4) as u64;
+        let mut codes = vec![0u8; row_len];
+        let mut packed = vec![0u8; comm::packed_len(row_len)];
+        let mut back = vec![0.0f32; row_len];
+
+        for codec in [q8, CodecSpec::Bitpack] {
+            let pq = comm::quant_params(codec, &src);
+            let op = format!("comm::quantize[{}]", codec.label());
+            let (wu, it) = bench_iters(10, 200);
+            report.bench_throughput(&op, "256 Ki f32 row", 1, wu, it, Some(in_bytes), None, || {
+                comm::quantize_row(isa, codec, &src, pq, &mut codes);
+                std::hint::black_box(&codes);
+            });
+            let op = format!("comm::dequantize[{}]", codec.label());
+            let (wu, it) = bench_iters(10, 200);
+            report.bench_throughput(&op, "256 Ki f32 row", 1, wu, it, Some(in_bytes), None, || {
+                comm::dequantize_row(isa, &codes, pq, &mut back);
+                std::hint::black_box(&back);
+            });
+        }
+        // Nibble packing only runs under bitpack; re-quantize so every
+        // code fits 4 bits before timing the byte shuffles.
+        let pq = comm::quant_params(CodecSpec::Bitpack, &src);
+        comm::quantize_row(isa, CodecSpec::Bitpack, &src, pq, &mut codes);
+        let (wu, it) = bench_iters(10, 200);
+        report.bench_throughput(
+            "comm::pack_nibbles",
+            "256 Ki codes",
+            1,
+            wu,
+            it,
+            Some(row_len as u64),
+            None,
+            || {
+                comm::pack_nibbles(isa, &codes, &mut packed);
+                std::hint::black_box(&packed);
+            },
+        );
+        let (wu, it) = bench_iters(10, 200);
+        report.bench_throughput(
+            "comm::unpack_nibbles",
+            "256 Ki codes",
+            1,
+            wu,
+            it,
+            Some(row_len as u64),
+            None,
+            || {
+                comm::unpack_nibbles(isa, &packed, &mut codes);
+                std::hint::black_box(&codes);
+            },
+        );
+        // The engine's actual per-gradient call: transcode one q x c
+        // gradient in place (quantize → [pack/unpack] → dequantize).
+        let mut scratch = comm::CodecScratch::default();
+        scratch.reserve(s.c);
+        let mut grad = randn(s.q, s.c, &mut rng);
+        let grad_bytes = (s.q * s.c * 4) as u64;
+        for codec in [q8, CodecSpec::Bitpack] {
+            let op = format!("comm::transcode[{}]", codec.label());
+            let shape = format!("grad {}x{}", s.q, s.c);
+            let (wu, it) = bench_iters(10, 500);
+            report.bench_throughput(&op, &shape, 1, wu, it, Some(grad_bytes), None, || {
+                comm::transcode_mat(isa, codec, &mut grad, &mut scratch);
+                std::hint::black_box(&grad);
+            });
+        }
+    }
+
     // --- one steady-state training round, pool warm (the per-round
     //     compute path the engine runs: pack θ, batch the n client
     //     gradients into held slots, fold, evaluate) ---
@@ -412,6 +495,50 @@ fn main() -> anyhow::Result<()> {
         session.runtime().threads(),
         session.runtime().isa_name(),
     );
+
+    // --- codec epoch comparison (schema 8): the same coded epoch under
+    //     q8 — the transcode overhead shows up in host time while the
+    //     *simulated* clock and bytes on the wire drop (the tentpole's
+    //     efficacy claim, re-checked on every bench run so the baseline
+    //     can never ship a codec that stopped paying for itself). The
+    //     tracked `bytes_per_round` is the default pipeline's (codec
+    //     none) modelled wire bytes per round, down + up. ---
+    {
+        fn observe(
+            codec: CodecSpec,
+        ) -> anyhow::Result<(codedfedl::Session, codedfedl::TrainOutcome, EventLog)> {
+            let session = ExperimentBuilder::preset("tiny")?.epochs(1).codec(codec).build()?;
+            let mut log = EventLog::default();
+            let out = session.run_observed(&mut CodedFedL::new(0.3), &mut log)?;
+            Ok((session, out, log))
+        }
+        let (_, none_out, none_log) = observe(CodecSpec::None)?;
+        let q8 = CodecSpec::Q8 { scale: ScaleSpec::Auto };
+        let (q8_session, q8_out, _) = observe(q8)?;
+        let rounds = none_log.events.len().max(1) as u64;
+        report.bytes_per_round =
+            Some((none_out.bytes_down_total + none_out.bytes_up_total) / rounds);
+        println!(
+            "codec epoch: none t*={:.3}s wall={:.1}s up={:.2} MB | q8 t*={:.3}s wall={:.1}s \
+             up={:.2} MB",
+            none_out.t_star.unwrap_or(f64::NAN),
+            none_out.history.total_sim_time(),
+            none_out.bytes_up_total as f64 / 1e6,
+            q8_out.t_star.unwrap_or(f64::NAN),
+            q8_out.history.total_sim_time(),
+            q8_out.bytes_up_total as f64 / 1e6,
+        );
+        anyhow::ensure!(
+            q8_out.history.total_sim_time() < none_out.history.total_sim_time()
+                && q8_out.bytes_up_total < none_out.bytes_up_total,
+            "q8 stopped beating codec=none on the simulated clock / wire bytes"
+        );
+        let threads = q8_session.runtime().threads();
+        let (wu, it) = bench_iters(1, 10);
+        report.bench("full coded epoch", "tiny: codec=q8", threads, wu, it, || {
+            std::hint::black_box(q8_session.run(&mut CodedFedL::new(0.3)).unwrap());
+        });
+    }
 
     // --- degraded epoch: the fault + deadline decision path (schema 6).
     //     Mixed faults and an 80th-percentile deadline push rounds down
@@ -512,6 +639,8 @@ fn main() -> anyhow::Result<()> {
             fault_rng: [13, 14, 15, 16],
             outcomes: [90, 4, 3, 2, 1],
             corrupted_total: 0,
+            bytes_down_total: 3_520_000,
+            bytes_up_total: 3_520_000,
             history: (1..=100)
                 .map(|i| Point {
                     iter: i,

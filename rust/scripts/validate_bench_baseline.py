@@ -4,7 +4,7 @@
 Usage: validate_bench_baseline.py <committed_baseline.json> <smoke_run.json>
 
 Checks (coverage gates, not timing gates — smoke numbers are meaningless):
-  * both documents parse and carry the current schema (7) with a
+  * both documents parse and carry the current schema (8) with a
     well-formed, non-empty record list (op/shape/ns_per_iter/threads/iters
     plus the throughput fields — ``gflops`` (schema 3), the schema-4
     codec columns ``gbps``/``symbols_per_s``, and the schema-5 fleet
@@ -24,6 +24,12 @@ Checks (coverage gates, not timing gates — smoke numbers are meaningless):
     (schema 7: what one crash-consistent checkpoint — encode + atomic
     fsync'd write — costs the training loop), so the checkpoint path can
     never silently drop out of the tracked perf surface;
+  * the committed baseline carries ``comm::`` payload-codec rows (schema 8:
+    the quantize/dequantize/pack kernels behind ``[comm] codec``) and a
+    positive top-level ``bytes_per_round`` (the default pipeline's modelled
+    wire bytes per round — the denominator the codec rows shrink against),
+    so the communication model can never silently drop out of the tracked
+    perf surface;
   * both documents record a non-empty ``isa`` string (the GEMM microkernel
     the run resolved — ``scalar`` / ``avx2+fma`` / ``neon`` / ``pjrt``),
     so perf numbers are always attributable to an instruction set;
@@ -45,7 +51,7 @@ next to the uploaded artifact.
 import json
 import sys
 
-SCHEMA = 7
+SCHEMA = 8
 RECORD_FIELDS = {
     "op": str,
     "shape": str,
@@ -63,6 +69,8 @@ FLEET_OP_PREFIX = "fleet_scale"
 DEGRADED_OP_PREFIX = "degraded"
 # The schema-7 checkpoint latency row the committed baseline must carry.
 CHECKPOINT_OP_PREFIX = "checkpoint"
+# The schema-8 payload-codec kernel rows the committed baseline must carry.
+COMM_OP_PREFIX = "comm"
 # Number of degradation-ladder rungs in a ``rungs`` histogram.
 RUNG_COUNT = 5
 # Warn when a smoke run is this much slower than the committed baseline.
@@ -195,6 +203,18 @@ def main(baseline_path, smoke_path):
             f"baseline: expected a {CHECKPOINT_OP_PREFIX}::snapshot latency record "
             "(schema 7: the crash-consistent checkpoint cost must stay on the "
             "tracked perf surface)"
+        )
+    if not any(str(op).startswith(COMM_OP_PREFIX + "::") for op, _shape in baseline_recs):
+        errors.append(
+            f"baseline: expected {COMM_OP_PREFIX}:: payload-codec kernel records "
+            "(schema 8: the [comm] quantize/pack path must stay on the tracked "
+            "perf surface)"
+        )
+    bytes_per_round = baseline.get("bytes_per_round")
+    if not isinstance(bytes_per_round, int) or bytes_per_round <= 0:
+        errors.append(
+            "baseline: bytes_per_round must be the measured positive wire-byte "
+            f"count of the default pipeline (schema 8), got {bytes_per_round!r}"
         )
 
     if errors:

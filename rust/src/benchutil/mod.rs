@@ -153,6 +153,11 @@ pub struct BenchReport {
     /// — required non-empty by the schema-3 baseline validator so perf
     /// numbers are always attributable to an instruction set.
     pub isa: String,
+    /// Modelled wire bytes per round of the default pipeline (codec
+    /// `none`, down + up) on the tiny preset (schema 8): the tracked
+    /// denominator the `[comm]` codec rows shrink against. `None` when
+    /// the run did not measure it.
+    pub bytes_per_round: Option<u64>,
 }
 
 impl BenchReport {
@@ -340,12 +345,16 @@ impl BenchReport {
         fn esc(s: &str) -> String {
             s.replace('\\', "\\\\").replace('"', "\\\"")
         }
-        let mut out = String::from("{\n  \"schema\": 7,\n");
+        let mut out = String::from("{\n  \"schema\": 8,\n");
         out.push_str(&format!("  \"smoke\": {},\n", smoke_mode()));
         out.push_str(&format!("  \"isa\": \"{}\",\n", esc(&self.isa)));
         match self.allocs_per_round {
             Some(n) => out.push_str(&format!("  \"allocs_per_round\": {n},\n")),
             None => out.push_str("  \"allocs_per_round\": null,\n"),
+        }
+        match self.bytes_per_round {
+            Some(n) => out.push_str(&format!("  \"bytes_per_round\": {n},\n")),
+            None => out.push_str("  \"bytes_per_round\": null,\n"),
         }
         out.push_str("  \"records\": [\n");
         fn opt(v: Option<f64>) -> String {
@@ -502,7 +511,7 @@ mod tests {
         let outcomes = OutcomeCounts { full: 3, parity: 1, ..Default::default() };
         rep.record_degraded("degraded::epoch", "tiny mixed", 1, &stats, &outcomes, 0.875);
         let json = rep.to_json();
-        assert!(json.contains("\"schema\": 7"), "{json}");
+        assert!(json.contains("\"schema\": 8"), "{json}");
         assert!(json.contains("\"isa\": \"avx2+fma\""), "{json}");
         assert!(json.contains("\"op\": \"runtime::grad\""), "{json}");
         assert!(json.contains("\"shape\": \"client 200x512x10\""), "{json}");
@@ -530,11 +539,15 @@ mod tests {
         assert!(json.contains("\"achieved_participation\": null"), "{json}");
         // unmeasured allocation gate serialises as null…
         assert!(json.contains("\"allocs_per_round\": null"), "{json}");
+        assert!(json.contains("\"bytes_per_round\": null"), "{json}");
         // a trailing comma between consecutive records, none after the last
         assert_eq!(json.matches("},\n").count(), 4, "{json}");
         // …and a measured one as the number
         rep.allocs_per_round = Some(0);
-        assert!(rep.to_json().contains("\"allocs_per_round\": 0"), "{}", rep.to_json());
+        rep.bytes_per_round = Some(7_040_000);
+        let json = rep.to_json();
+        assert!(json.contains("\"allocs_per_round\": 0"), "{json}");
+        assert!(json.contains("\"bytes_per_round\": 7040000"), "{json}");
     }
 
     #[test]

@@ -1,0 +1,825 @@
+//! Byte-accurate communication model + payload compression codecs.
+//!
+//! The paper prices every transfer as one fixed packet of `q·c` 32-bit
+//! scalars plus 10% protocol overhead (§V-A). This module makes the
+//! payload a first-class modelled quantity:
+//!
+//! * [`PayloadModel`] — the modelled bytes of the three wire transfers
+//!   (θ downlink broadcast, gradient uplink, one-shot parity upload),
+//!   derived from the experiment shape and the active codec. The fleet
+//!   builder ([`crate::topology::FleetSpec`]) folds the model's per-leg
+//!   byte scales into each client's per-packet times, so the round
+//!   timeline and the allocation optimizer both price what the wire
+//!   actually carries. The identity model (codec `none`, payload `auto`)
+//!   leaves every τ bit-untouched — seeded histories are pinned on it.
+//! * [`CodecSpec`] — the pluggable uplink codec (`[comm] codec`,
+//!   `--codec`, builder `.codec(...)`): `none` (32-bit scalars,
+//!   historical), `q8[:scale=auto|σ]` (per-row affine int8 quantization,
+//!   8 bits/scalar), `bitpack` (per-row affine 4-bit codes packed two to
+//!   a byte, 4 bits/scalar). Quantized codecs carry an 8-byte per-row
+//!   header (`lo`, `step` as f32), amortised to `64/cols` bits/scalar.
+//! * Quantize/dequantize row kernels with AVX2/NEON arms dispatched
+//!   through the runtime [`Isa`] (the `tensor::gemm` / `coding::gf256`
+//!   discipline: resolve once, branch on the copy, feature-guard the SIMD
+//!   arms so a hand-constructed [`Isa`] degrades to scalar, never
+//!   faults). Unlike GEMM, the quantize kernels are **bit-exact** across
+//!   ISAs: codes are `floor((x − lo)·step⁻¹ + 0.5)` clamped, and
+//!   subtract/multiply/add/floor round identically per element in every
+//!   lane width (no FMA in these kernels, by construction).
+//! * [`transcode_mat`] — the engine's uplink simulation: quantize each
+//!   gradient row, (for `bitpack`) pack/unpack the nibble codes, then
+//!   dequantize in place, so the fold trains on exactly what a receiver
+//!   could reconstruct from the wire bytes. Zero-alloc on warm rounds via
+//!   the caller-owned [`CodecScratch`].
+//!
+//! The MEC unit's parity gradient never crosses a wireless link (§III-C:
+//! the server computes it locally from the parity data uploaded once),
+//! so it is never transcoded — the one-shot parity *upload* is priced
+//! through [`PayloadModel::parity_scale`] instead.
+
+use crate::tensor::{Isa, Mat};
+
+/// Scale selection for a quantizing codec.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScaleSpec {
+    /// Per-row affine range: `lo = min(row)`, `step = (max−min)/(L−1)`.
+    Auto,
+    /// Fixed symmetric step σ: `step = σ`, `lo = −(L/2)·σ`.
+    Fixed(f64),
+}
+
+/// The pluggable uplink codec (`[comm] codec`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum CodecSpec {
+    /// 32-bit scalars, no transcoding — bit-identical to historical runs.
+    #[default]
+    None,
+    /// Per-row affine int8 quantization (256 levels, 8 bits/scalar).
+    Q8 { scale: ScaleSpec },
+    /// Per-row affine 4-bit quantization, nibble-packed (16 levels,
+    /// 4 bits/scalar, two codes per wire byte).
+    Bitpack,
+}
+
+impl CodecSpec {
+    /// Quantization level count (meaningless for `none`).
+    pub fn levels(self) -> u32 {
+        match self {
+            CodecSpec::None => 0,
+            CodecSpec::Q8 { .. } => 256,
+            CodecSpec::Bitpack => 16,
+        }
+    }
+
+    /// Modelled wire bits per gradient scalar, headers excluded.
+    pub fn bits_per_scalar(self) -> f64 {
+        match self {
+            CodecSpec::None => 32.0,
+            CodecSpec::Q8 { .. } => 8.0,
+            CodecSpec::Bitpack => 4.0,
+        }
+    }
+
+    /// Modelled per-row header bits (`lo` + `step` as f32).
+    pub fn row_header_bits(self) -> f64 {
+        match self {
+            CodecSpec::None => 0.0,
+            _ => 64.0,
+        }
+    }
+
+    /// Byte-scale of a coded row of `cols` scalars relative to the
+    /// historical 32-bit payload: `(bits/scalar + header/cols) / 32`.
+    /// `none` is exactly 1.0 (the bit-identity anchor).
+    pub fn byte_scale(self, cols: usize) -> f64 {
+        match self {
+            CodecSpec::None => 1.0,
+            _ => (self.bits_per_scalar() + self.row_header_bits() / cols as f64) / 32.0,
+        }
+    }
+
+    pub fn is_none(self) -> bool {
+        matches!(self, CodecSpec::None)
+    }
+
+    /// Canonical spelling — what checkpoints fingerprint and logs print.
+    pub fn label(self) -> String {
+        match self {
+            CodecSpec::None => "none".into(),
+            CodecSpec::Q8 { scale: ScaleSpec::Auto } => "q8:scale=auto".into(),
+            CodecSpec::Q8 { scale: ScaleSpec::Fixed(s) } => format!("q8:scale={s}"),
+            CodecSpec::Bitpack => "bitpack".into(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if let CodecSpec::Q8 { scale: ScaleSpec::Fixed(s) } = self {
+            if !(s.is_finite() && *s > 0.0) {
+                return Err(format!("q8 scale must be a finite value > 0, got {s}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for CodecSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "none" => Ok(CodecSpec::None),
+            "q8" => Ok(CodecSpec::Q8 { scale: ScaleSpec::Auto }),
+            "bitpack" => Ok(CodecSpec::Bitpack),
+            other => {
+                if let Some(rest) = other.strip_prefix("q8:") {
+                    let val = rest.strip_prefix("scale=").ok_or_else(|| {
+                        format!(
+                            "unknown q8 option {rest:?} (expected scale=auto or scale=<sigma>)"
+                        )
+                    })?;
+                    if val == "auto" {
+                        return Ok(CodecSpec::Q8 { scale: ScaleSpec::Auto });
+                    }
+                    let sigma: f64 = val.parse().map_err(|_| {
+                        format!("q8 scale: expected auto or a number, got {val:?}")
+                    })?;
+                    let spec = CodecSpec::Q8 { scale: ScaleSpec::Fixed(sigma) };
+                    spec.validate()?;
+                    return Ok(spec);
+                }
+                Err(format!(
+                    "unknown codec {other:?} (expected one of none | q8[:scale=auto|<sigma>] | bitpack)"
+                ))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for CodecSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// How modelled payload bytes follow the codec (`[comm] payload`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum PayloadSpec {
+    /// Derive the per-leg byte scales from the codec: downlink θ stays
+    /// full precision, uplink gradient and parity upload shrink to the
+    /// codec's wire bytes (the default).
+    #[default]
+    Auto,
+    /// Keep the historical fixed 32-bit pricing on every leg even when a
+    /// codec runs — isolates the codec's *training* effect from its
+    /// communication benefit (an ablation control).
+    Fixed,
+    /// Explicit per-leg byte-scale multipliers.
+    Scale { down: f64, up: f64, parity: f64 },
+}
+
+impl PayloadSpec {
+    /// Canonical spelling for fingerprints and logs.
+    pub fn label(self) -> String {
+        match self {
+            PayloadSpec::Auto => "auto".into(),
+            PayloadSpec::Fixed => "fixed".into(),
+            PayloadSpec::Scale { down, up, parity } => {
+                format!("scale:down={down},up={up},parity={parity}")
+            }
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if let PayloadSpec::Scale { down, up, parity } = self {
+            for (name, v) in [("down", down), ("up", up), ("parity", parity)] {
+                if !(v.is_finite() && *v > 0.0) {
+                    return Err(format!("payload {name} scale must be > 0, got {v}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for PayloadSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "auto" => Ok(PayloadSpec::Auto),
+            "fixed" => Ok(PayloadSpec::Fixed),
+            other => {
+                if let Some(rest) = other.strip_prefix("scale:") {
+                    let (mut down, mut up, mut parity) = (1.0f64, 1.0f64, 1.0f64);
+                    for part in rest.split(',') {
+                        let (key, val) = part.split_once('=').ok_or_else(|| {
+                            format!("payload scale option {part:?} must be key=value")
+                        })?;
+                        let v: f64 = val.parse().map_err(|_| {
+                            format!("payload {key}: expected a number, got {val:?}")
+                        })?;
+                        match key {
+                            "down" => down = v,
+                            "up" => up = v,
+                            "parity" => parity = v,
+                            other => {
+                                return Err(format!(
+                                    "unknown payload scale key {other:?} (expected one of down | up | parity)"
+                                ))
+                            }
+                        }
+                    }
+                    let spec = PayloadSpec::Scale { down, up, parity };
+                    spec.validate()?;
+                    return Ok(spec);
+                }
+                Err(format!(
+                    "unknown payload model {other:?} (expected one of auto | fixed | scale:down=..,up=..,parity=..)"
+                ))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for PayloadSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// Modelled bytes of the three wire transfers, resolved once per run from
+/// the experiment shape `(q, c)`, the codec, and the payload spec.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PayloadModel {
+    /// RFF dimension q (gradient rows).
+    pub q: usize,
+    /// Classes c (gradient columns).
+    pub c: usize,
+    /// Protocol overhead fraction (the paper's 10%).
+    pub overhead: f64,
+    /// Downlink θ byte scale relative to the 32-bit payload.
+    pub down_scale: f64,
+    /// Uplink gradient byte scale.
+    pub up_scale: f64,
+    /// One-shot parity upload byte scale (rows of width `q + c`).
+    pub parity_scale: f64,
+}
+
+impl PayloadModel {
+    pub fn new(q: usize, c: usize, codec: CodecSpec, payload: PayloadSpec, overhead: f64) -> Self {
+        let (down_scale, up_scale, parity_scale) = match payload {
+            PayloadSpec::Auto => (1.0, codec.byte_scale(c), codec.byte_scale(q + c)),
+            PayloadSpec::Fixed => (1.0, 1.0, 1.0),
+            PayloadSpec::Scale { down, up, parity } => (down, up, parity),
+        };
+        PayloadModel { q, c, overhead, down_scale, up_scale, parity_scale }
+    }
+
+    /// The historical fixed payload in bytes: `q·c` 32-bit scalars plus
+    /// protocol overhead (the byte form of `FleetSpec::packet_bits`).
+    fn base_bytes(&self) -> f64 {
+        (self.q * self.c) as f64 * 4.0 * (1.0 + self.overhead)
+    }
+
+    /// Modelled bytes of one θ downlink broadcast to one client.
+    pub fn theta_down_bytes(&self) -> f64 {
+        self.base_bytes() * self.down_scale
+    }
+
+    /// Modelled bytes of one client's gradient uplink.
+    pub fn grad_up_bytes(&self) -> f64 {
+        self.base_bytes() * self.up_scale
+    }
+
+    /// Modelled bytes of the one-shot upload of `u` parity rows of width
+    /// `q + c`.
+    pub fn parity_upload_bytes(&self, u: usize) -> f64 {
+        u as f64 * (self.q + self.c) as f64 * 4.0 * (1.0 + self.overhead) * self.parity_scale
+    }
+
+    /// Whether every leg keeps the historical pricing bit-for-bit.
+    pub fn is_identity(&self) -> bool {
+        self.down_scale == 1.0 && self.up_scale == 1.0 && self.parity_scale == 1.0
+    }
+}
+
+/// Per-row affine quantization parameters — the modelled 8-byte row
+/// header (`x ≈ lo + code·step`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RowQuant {
+    pub lo: f32,
+    pub step: f32,
+}
+
+/// Resolve one row's quantization parameters. Scalar min/max reduction —
+/// exact (no rounding), so trivially ISA- and thread-invariant. A
+/// constant row gets `step = 0` and dequantizes to `lo` exactly.
+/// Panics for `CodecSpec::None`, which has no quantization grid.
+pub fn quant_params(codec: CodecSpec, row: &[f32]) -> RowQuant {
+    let levels = codec.levels();
+    assert!(levels >= 2, "quant_params: codec {codec} does not quantize");
+    match codec {
+        CodecSpec::Q8 { scale: ScaleSpec::Fixed(s) } => {
+            let step = s as f32;
+            RowQuant { lo: -(levels as f32 / 2.0) * step, step }
+        }
+        _ => {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &x in row {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            if row.is_empty() {
+                return RowQuant { lo: 0.0, step: 0.0 };
+            }
+            RowQuant { lo, step: (hi - lo) / (levels - 1) as f32 }
+        }
+    }
+}
+
+/// Whether this host can run the AVX2 quantize lanes (cached CPUID probe
+/// — the `coding::gf256` safety net against hand-constructed [`Isa`]s).
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// Whether this host can run the NEON quantize lanes (cached probe).
+#[cfg(target_arch = "aarch64")]
+#[inline]
+fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+/// Quantize one row: `out[i] = clamp(⌊(src[i] − lo)·step⁻¹ + 0.5⌋, 0, L−1)`.
+/// Bit-identical across ISAs: every arm performs the same
+/// subtract/multiply/add/floor f32 sequence per element (no FMA).
+/// `step = 0` (constant row) maps everything to code 0.
+pub fn quantize_row(isa: Isa, codec: CodecSpec, src: &[f32], pq: RowQuant, out: &mut [u8]) {
+    assert_eq!(src.len(), out.len(), "comm::quantize_row: length mismatch");
+    let levels = codec.levels();
+    assert!(levels >= 2, "comm::quantize_row: codec {codec} does not quantize");
+    let step_inv = if pq.step > 0.0 { 1.0 / pq.step } else { 0.0 };
+    let max_code = (levels - 1) as f32;
+    match isa {
+        Isa::Scalar => quantize_row_scalar(src, pq.lo, step_inv, max_code, out),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma if avx2_available() => {
+            // Safety: lengths asserted equal above; the guard verified AVX2.
+            unsafe { quantize_row_avx2(src, pq.lo, step_inv, max_code, out) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon if neon_available() => {
+            // Safety: lengths asserted equal above; the guard verified NEON.
+            unsafe { quantize_row_neon(src, pq.lo, step_inv, max_code, out) }
+        }
+        // An ISA this build has no kernel for, or this host lacks: degrade
+        // to the scalar oracle, never fault.
+        #[allow(unreachable_patterns)]
+        _ => quantize_row_scalar(src, pq.lo, step_inv, max_code, out),
+    }
+}
+
+/// Dequantize one row: `dst[i] = lo + codes[i]·step` (multiply then add,
+/// no FMA — bit-identical across ISAs).
+pub fn dequantize_row(isa: Isa, codes: &[u8], pq: RowQuant, dst: &mut [f32]) {
+    assert_eq!(codes.len(), dst.len(), "comm::dequantize_row: length mismatch");
+    match isa {
+        Isa::Scalar => dequantize_row_scalar(codes, pq.lo, pq.step, dst),
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2Fma if avx2_available() => {
+            // Safety: lengths asserted equal above; the guard verified AVX2.
+            unsafe { dequantize_row_avx2(codes, pq.lo, pq.step, dst) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon if neon_available() => {
+            // Safety: lengths asserted equal above; the guard verified NEON.
+            unsafe { dequantize_row_neon(codes, pq.lo, pq.step, dst) }
+        }
+        #[allow(unreachable_patterns)]
+        _ => dequantize_row_scalar(codes, pq.lo, pq.step, dst),
+    }
+}
+
+fn quantize_row_scalar(src: &[f32], lo: f32, step_inv: f32, max_code: f32, out: &mut [u8]) {
+    for (o, &x) in out.iter_mut().zip(src) {
+        let code = ((x - lo) * step_inv + 0.5).floor().clamp(0.0, max_code);
+        // Non-negative and floored, so the truncating cast is exact.
+        *o = code as u8;
+    }
+}
+
+fn dequantize_row_scalar(codes: &[u8], lo: f32, step: f32, dst: &mut [f32]) {
+    for (d, &c) in dst.iter_mut().zip(codes) {
+        *d = lo + c as f32 * step;
+    }
+}
+
+/// Safety: caller guarantees `src.len() == out.len()` and AVX2 support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn quantize_row_avx2(src: &[f32], lo: f32, step_inv: f32, max_code: f32, out: &mut [u8]) {
+    use std::arch::x86_64::*;
+    let n = src.len();
+    let vlo = _mm256_set1_ps(lo);
+    let vsi = _mm256_set1_ps(step_inv);
+    let vhalf = _mm256_set1_ps(0.5);
+    let vzero = _mm256_setzero_ps();
+    let vmax = _mm256_set1_ps(max_code);
+    let mut i = 0;
+    while i + 8 <= n {
+        let x = _mm256_loadu_ps(src.as_ptr().add(i));
+        // sub → mul → add → floor: the scalar sequence, lane-wise (no FMA).
+        let t = _mm256_add_ps(_mm256_mul_ps(_mm256_sub_ps(x, vlo), vsi), vhalf);
+        let code = _mm256_min_ps(_mm256_max_ps(_mm256_floor_ps(t), vzero), vmax);
+        let ints = _mm256_cvttps_epi32(code);
+        let lo128 = _mm256_castsi256_si128(ints);
+        let hi128 = _mm256_extracti128_si256(ints, 1);
+        let words = _mm_packus_epi32(lo128, hi128);
+        let bytes = _mm_packus_epi16(words, _mm_setzero_si128());
+        _mm_storel_epi64(out.as_mut_ptr().add(i) as *mut __m128i, bytes);
+        i += 8;
+    }
+    while i < n {
+        let code = ((*src.get_unchecked(i) - lo) * step_inv + 0.5)
+            .floor()
+            .clamp(0.0, max_code);
+        *out.get_unchecked_mut(i) = code as u8;
+        i += 1;
+    }
+}
+
+/// Safety: caller guarantees `codes.len() == dst.len()` and AVX2 support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dequantize_row_avx2(codes: &[u8], lo: f32, step: f32, dst: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = codes.len();
+    let vlo = _mm256_set1_ps(lo);
+    let vstep = _mm256_set1_ps(step);
+    let mut i = 0;
+    while i + 8 <= n {
+        let bytes = _mm_loadl_epi64(codes.as_ptr().add(i) as *const __m128i);
+        let ints = _mm256_cvtepu8_epi32(bytes);
+        let x = _mm256_add_ps(_mm256_mul_ps(_mm256_cvtepi32_ps(ints), vstep), vlo);
+        _mm256_storeu_ps(dst.as_mut_ptr().add(i), x);
+        i += 8;
+    }
+    while i < n {
+        *dst.get_unchecked_mut(i) = lo + *codes.get_unchecked(i) as f32 * step;
+        i += 1;
+    }
+}
+
+/// Safety: caller guarantees `src.len() == out.len()` and NEON support.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn quantize_row_neon(src: &[f32], lo: f32, step_inv: f32, max_code: f32, out: &mut [u8]) {
+    use std::arch::aarch64::*;
+    let n = src.len();
+    let vlo = vdupq_n_f32(lo);
+    let vsi = vdupq_n_f32(step_inv);
+    let vhalf = vdupq_n_f32(0.5);
+    let vzero = vdupq_n_f32(0.0);
+    let vmax = vdupq_n_f32(max_code);
+    let mut i = 0;
+    while i + 8 <= n {
+        let quant4 = |p: *const f32| {
+            let x = vld1q_f32(p);
+            // sub → mul → add → floor, lane-wise (vrndmq = floor; no FMA).
+            let t = vaddq_f32(vmulq_f32(vsubq_f32(x, vlo), vsi), vhalf);
+            let code = vminq_f32(vmaxq_f32(vrndmq_f32(t), vzero), vmax);
+            vcvtq_u32_f32(code)
+        };
+        let a = quant4(src.as_ptr().add(i));
+        let b = quant4(src.as_ptr().add(i + 4));
+        let words = vcombine_u16(vmovn_u32(a), vmovn_u32(b));
+        vst1_u8(out.as_mut_ptr().add(i), vmovn_u16(words));
+        i += 8;
+    }
+    while i < n {
+        let code = ((*src.get_unchecked(i) - lo) * step_inv + 0.5)
+            .floor()
+            .clamp(0.0, max_code);
+        *out.get_unchecked_mut(i) = code as u8;
+        i += 1;
+    }
+}
+
+/// Safety: caller guarantees `codes.len() == dst.len()` and NEON support.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn dequantize_row_neon(codes: &[u8], lo: f32, step: f32, dst: &mut [f32]) {
+    use std::arch::aarch64::*;
+    let n = codes.len();
+    let vlo = vdupq_n_f32(lo);
+    let vstep = vdupq_n_f32(step);
+    let mut i = 0;
+    while i + 8 <= n {
+        let bytes = vld1_u8(codes.as_ptr().add(i));
+        let words = vmovl_u8(bytes);
+        let a = vcvtq_f32_u32(vmovl_u16(vget_low_u16(words)));
+        let b = vcvtq_f32_u32(vmovl_u16(vget_high_u16(words)));
+        vst1q_f32(dst.as_mut_ptr().add(i), vaddq_f32(vmulq_f32(a, vstep), vlo));
+        vst1q_f32(dst.as_mut_ptr().add(i + 4), vaddq_f32(vmulq_f32(b, vstep), vlo));
+        i += 8;
+    }
+    while i < n {
+        *dst.get_unchecked_mut(i) = lo + *codes.get_unchecked(i) as f32 * step;
+        i += 1;
+    }
+}
+
+/// Bytes one packed nibble row occupies: two 4-bit codes per byte, the
+/// odd tail code alone in the last byte.
+pub fn packed_len(n_codes: usize) -> usize {
+    n_codes.div_ceil(2)
+}
+
+/// Pack 4-bit codes two to a byte (`out[i] = codes[2i] | codes[2i+1] « 4`).
+/// Pure byte shuffles — exact on every ISA, and simple enough that the
+/// autovectorizer already saturates memory bandwidth, so there is no
+/// hand-written SIMD arm (the `isa` parameter keeps the call-site
+/// discipline uniform with the quantize kernels).
+pub fn pack_nibbles(_isa: Isa, codes: &[u8], out: &mut [u8]) {
+    assert_eq!(out.len(), packed_len(codes.len()), "comm::pack_nibbles: length mismatch");
+    let pairs = codes.len() / 2;
+    for i in 0..pairs {
+        debug_assert!(codes[2 * i] < 16 && codes[2 * i + 1] < 16);
+        out[i] = codes[2 * i] | (codes[2 * i + 1] << 4);
+    }
+    if codes.len() % 2 == 1 {
+        debug_assert!(codes[codes.len() - 1] < 16);
+        out[pairs] = codes[codes.len() - 1];
+    }
+}
+
+/// Unpack nibble-packed bytes back to one 4-bit code per byte — the exact
+/// inverse of [`pack_nibbles`] for valid codes.
+pub fn unpack_nibbles(_isa: Isa, packed: &[u8], codes: &mut [u8]) {
+    assert_eq!(packed.len(), packed_len(codes.len()), "comm::unpack_nibbles: length mismatch");
+    let pairs = codes.len() / 2;
+    for i in 0..pairs {
+        codes[2 * i] = packed[i] & 0x0F;
+        codes[2 * i + 1] = packed[i] >> 4;
+    }
+    if codes.len() % 2 == 1 {
+        codes[codes.len() - 1] = packed[pairs] & 0x0F;
+    }
+}
+
+/// Caller-owned scratch for the transcode path: one row of codes and its
+/// packed form. Reserve once at engine construction — warm rounds then
+/// resize within capacity and allocate nothing.
+#[derive(Debug, Default)]
+pub struct CodecScratch {
+    pub codes: Vec<u8>,
+    pub packed: Vec<u8>,
+}
+
+impl CodecScratch {
+    /// Pre-size for rows of up to `cols` scalars.
+    pub fn reserve(&mut self, cols: usize) {
+        if self.codes.capacity() < cols {
+            self.codes.reserve(cols - self.codes.len());
+        }
+        let plen = packed_len(cols);
+        if self.packed.capacity() < plen {
+            self.packed.reserve(plen - self.packed.len());
+        }
+    }
+}
+
+/// Simulate one gradient's uplink through `codec`, in place: per row,
+/// quantize → (`bitpack` only) pack + unpack the wire nibbles →
+/// dequantize. After this the matrix holds exactly what a receiver could
+/// reconstruct from the modelled wire bytes. `none` is a no-op.
+/// Allocation-free once `scratch` is reserved for the matrix width.
+pub fn transcode_mat(isa: Isa, codec: CodecSpec, mat: &mut Mat, scratch: &mut CodecScratch) {
+    let cols = mat.cols();
+    if codec.is_none() || cols == 0 {
+        return;
+    }
+    scratch.codes.resize(cols, 0);
+    if matches!(codec, CodecSpec::Bitpack) {
+        scratch.packed.resize(packed_len(cols), 0);
+    }
+    for row in mat.as_mut_slice().chunks_exact_mut(cols) {
+        let pq = quant_params(codec, row);
+        quantize_row(isa, codec, row, pq, &mut scratch.codes);
+        if matches!(codec, CodecSpec::Bitpack) {
+            pack_nibbles(isa, &scratch.codes, &mut scratch.packed);
+            unpack_nibbles(isa, &scratch.packed, &mut scratch.codes);
+        }
+        dequantize_row(isa, &scratch.codes, pq, row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::SimdPolicy;
+
+    #[test]
+    fn codec_spec_parses_and_labels() {
+        assert_eq!("none".parse::<CodecSpec>().unwrap(), CodecSpec::None);
+        assert_eq!(
+            "q8".parse::<CodecSpec>().unwrap(),
+            CodecSpec::Q8 { scale: ScaleSpec::Auto }
+        );
+        assert_eq!(
+            "q8:scale=auto".parse::<CodecSpec>().unwrap(),
+            CodecSpec::Q8 { scale: ScaleSpec::Auto }
+        );
+        assert_eq!(
+            "q8:scale=0.5".parse::<CodecSpec>().unwrap(),
+            CodecSpec::Q8 { scale: ScaleSpec::Fixed(0.5) }
+        );
+        assert_eq!("bitpack".parse::<CodecSpec>().unwrap(), CodecSpec::Bitpack);
+        for spec in ["none", "q8:scale=auto", "q8:scale=0.5", "bitpack"] {
+            assert_eq!(spec.parse::<CodecSpec>().unwrap().label(), spec, "label round trip");
+        }
+        let err = "zstd".parse::<CodecSpec>().unwrap_err();
+        assert!(err.contains("zstd") && err.contains("expected one of"), "{err}");
+        assert!("q8:scale=-1".parse::<CodecSpec>().is_err());
+        assert!("q8:scale=nope".parse::<CodecSpec>().is_err());
+        assert!("q8:window=3".parse::<CodecSpec>().is_err());
+    }
+
+    #[test]
+    fn payload_spec_parses_and_labels() {
+        assert_eq!("auto".parse::<PayloadSpec>().unwrap(), PayloadSpec::Auto);
+        assert_eq!("fixed".parse::<PayloadSpec>().unwrap(), PayloadSpec::Fixed);
+        assert_eq!(
+            "scale:up=0.25".parse::<PayloadSpec>().unwrap(),
+            PayloadSpec::Scale { down: 1.0, up: 0.25, parity: 1.0 }
+        );
+        assert_eq!(
+            "scale:down=0.5,up=0.25,parity=0.75".parse::<PayloadSpec>().unwrap(),
+            PayloadSpec::Scale { down: 0.5, up: 0.25, parity: 0.75 }
+        );
+        let err = "shrink".parse::<PayloadSpec>().unwrap_err();
+        assert!(err.contains("shrink") && err.contains("expected one of"), "{err}");
+        assert!("scale:sideways=2".parse::<PayloadSpec>().is_err());
+        assert!("scale:up=0".parse::<PayloadSpec>().is_err());
+    }
+
+    #[test]
+    fn payload_model_scales_match_the_codec_arithmetic() {
+        // q8 at c=10: (8 + 64/10)/32 = 0.45 of the 32-bit payload.
+        let m = PayloadModel::new(
+            2000,
+            10,
+            CodecSpec::Q8 { scale: ScaleSpec::Auto },
+            PayloadSpec::Auto,
+            0.1,
+        );
+        assert!((m.up_scale - 0.45).abs() < 1e-12);
+        assert_eq!(m.down_scale, 1.0, "theta broadcast stays full precision");
+        // bitpack at c=10: (4 + 6.4)/32 = 0.325.
+        let b = PayloadModel::new(2000, 10, CodecSpec::Bitpack, PayloadSpec::Auto, 0.1);
+        assert!((b.up_scale - 0.325).abs() < 1e-12);
+        // The identity model reproduces packet_bits in byte form.
+        let id = PayloadModel::new(2000, 10, CodecSpec::None, PayloadSpec::Auto, 0.1);
+        assert!(id.is_identity());
+        assert!((id.theta_down_bytes() - 704_000.0 / 8.0).abs() < 1e-6);
+        assert_eq!(id.theta_down_bytes().to_bits(), id.grad_up_bytes().to_bits());
+        // `fixed` pins every leg at 1.0 regardless of codec.
+        let f = PayloadModel::new(2000, 10, CodecSpec::Bitpack, PayloadSpec::Fixed, 0.1);
+        assert!(f.is_identity());
+        // Parity rows are width q+c, so their header amortizes further.
+        assert!(m.parity_scale < m.up_scale);
+        assert!((m.parity_upload_bytes(100) / id.parity_upload_bytes(100) - m.parity_scale).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantize_kernels_match_the_scalar_oracle_bitwise() {
+        // 1031 is odd and > one SIMD lane, so body + tail are both hit.
+        let mut rng = Rng::seed_from(40);
+        let len = 1031;
+        let src: Vec<f32> = (0..len).map(|_| (rng.next_f64() * 8.0 - 4.0) as f32).collect();
+        let detected = Isa::detect(SimdPolicy::Auto);
+        for codec in [
+            CodecSpec::Q8 { scale: ScaleSpec::Auto },
+            CodecSpec::Q8 { scale: ScaleSpec::Fixed(0.03125) },
+            CodecSpec::Bitpack,
+        ] {
+            let pq = quant_params(codec, &src);
+            let mut scalar = vec![0u8; len];
+            let mut simd = vec![0u8; len];
+            quantize_row(Isa::Scalar, codec, &src, pq, &mut scalar);
+            quantize_row(detected, codec, &src, pq, &mut simd);
+            assert_eq!(scalar, simd, "quantize diverged under {codec}");
+            assert!(scalar.iter().all(|&c| (c as u32) < codec.levels()));
+            let mut d_scalar = vec![0.0f32; len];
+            let mut d_simd = vec![0.0f32; len];
+            dequantize_row(Isa::Scalar, &scalar, pq, &mut d_scalar);
+            dequantize_row(detected, &scalar, pq, &mut d_simd);
+            for i in 0..len {
+                assert_eq!(
+                    d_scalar[i].to_bits(),
+                    d_simd[i].to_bits(),
+                    "dequantize diverged at {i} under {codec}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unsupported_isa_degrades_to_scalar_not_a_fault() {
+        let src = vec![1.25f32; 97];
+        let codec = CodecSpec::Q8 { scale: ScaleSpec::Auto };
+        let pq = quant_params(codec, &src);
+        for isa in [Isa::Avx2Fma, Isa::Neon] {
+            let mut out = vec![0u8; 97];
+            quantize_row(isa, codec, &src, pq, &mut out);
+            assert!(out.iter().all(|&c| c == 0), "constant row must map to code 0");
+            let mut back = vec![0.0f32; 97];
+            dequantize_row(isa, &out, pq, &mut back);
+            assert!(back.iter().all(|&x| x == 1.25), "constant row round-trips exactly");
+        }
+    }
+
+    #[test]
+    fn round_trip_error_is_bounded_by_half_a_step() {
+        let mut rng = Rng::seed_from(41);
+        let len = 513;
+        let src: Vec<f32> = (0..len).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+        for codec in [CodecSpec::Q8 { scale: ScaleSpec::Auto }, CodecSpec::Bitpack] {
+            let pq = quant_params(codec, &src);
+            let mut codes = vec![0u8; len];
+            quantize_row(Isa::Scalar, codec, &src, pq, &mut codes);
+            let mut back = vec![0.0f32; len];
+            dequantize_row(Isa::Scalar, &codes, pq, &mut back);
+            // Half-step reconstruction bound, plus an f32-rounding margin.
+            let bound = 0.5 * pq.step as f64 * (1.0 + 1e-5) + 1e-7;
+            for i in 0..len {
+                let err = (back[i] as f64 - src[i] as f64).abs();
+                assert!(err <= bound, "{codec}: |{}-{}| = {err} > {bound}", back[i], src[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn nibble_pack_round_trips_even_and_odd_lengths() {
+        let mut rng = Rng::seed_from(42);
+        for len in [0usize, 1, 2, 9, 64, 1031] {
+            let codes: Vec<u8> = (0..len).map(|_| rng.next_below(16) as u8).collect();
+            let mut packed = vec![0u8; packed_len(len)];
+            pack_nibbles(Isa::Scalar, &codes, &mut packed);
+            assert_eq!(packed.len(), len.div_ceil(2));
+            let mut back = vec![0u8; len];
+            unpack_nibbles(Isa::Scalar, &packed, &mut back);
+            assert_eq!(codes, back, "len={len}");
+        }
+    }
+
+    #[test]
+    fn transcode_none_is_identity_and_q8_stays_close() {
+        let mut rng = Rng::seed_from(43);
+        let mat = Mat::from_fn(7, 33, |_, _| (rng.next_f64() * 4.0 - 2.0) as f32);
+        let mut scratch = CodecScratch::default();
+        let mut none = mat.clone();
+        transcode_mat(Isa::Scalar, CodecSpec::None, &mut none, &mut scratch);
+        assert_eq!(none, mat, "codec none must not touch a single bit");
+        let mut q8 = mat.clone();
+        transcode_mat(Isa::Scalar, CodecSpec::Q8 { scale: ScaleSpec::Auto }, &mut q8, &mut scratch);
+        assert_ne!(q8, mat, "q8 must actually quantize");
+        for r in 0..mat.rows() {
+            let pq = quant_params(CodecSpec::Q8 { scale: ScaleSpec::Auto }, mat.row(r));
+            for (a, b) in q8.row(r).iter().zip(mat.row(r)) {
+                assert!((a - b).abs() <= 0.5 * pq.step * 1.001 + 1e-7);
+            }
+        }
+        // bitpack survives the pack/unpack wire simulation.
+        let mut bp = mat.clone();
+        transcode_mat(Isa::Scalar, CodecSpec::Bitpack, &mut bp, &mut scratch);
+        for r in 0..mat.rows() {
+            let pq = quant_params(CodecSpec::Bitpack, mat.row(r));
+            for (a, b) in bp.row(r).iter().zip(mat.row(r)) {
+                assert!((a - b).abs() <= 0.5 * pq.step * 1.001 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn transcode_is_isa_invariant_on_whole_matrices() {
+        let mut rng = Rng::seed_from(44);
+        let mat = Mat::from_fn(5, 257, |_, _| (rng.next_f64() * 6.0 - 3.0) as f32);
+        let detected = Isa::detect(SimdPolicy::Auto);
+        for codec in [CodecSpec::Q8 { scale: ScaleSpec::Auto }, CodecSpec::Bitpack] {
+            let mut scratch_a = CodecScratch::default();
+            let mut scratch_b = CodecScratch::default();
+            let mut a = mat.clone();
+            let mut b = mat.clone();
+            transcode_mat(Isa::Scalar, codec, &mut a, &mut scratch_a);
+            transcode_mat(detected, codec, &mut b, &mut scratch_b);
+            for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "transcode diverged under {codec}");
+            }
+        }
+    }
+}

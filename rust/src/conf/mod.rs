@@ -20,6 +20,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::coding::{CodeSpec, GeneratorKind, RecoveryMode};
+use crate::comm::{CodecSpec, PayloadSpec};
 use crate::coordinator::checkpoint::ResumeSpec;
 use crate::sim::fault::{DeadlineSpec, FaultSpec};
 use crate::sim::scenario::ScenarioSpec;
@@ -155,6 +156,19 @@ pub struct ExperimentConfig {
     /// exactly that file, failing if missing or invalid). A resumed run
     /// is bit-identical to the uninterrupted one.
     pub resume: ResumeSpec,
+    /// Uplink gradient codec (`[comm] codec` / `--codec` / builder
+    /// `.codec(...)`): `none` (default — 32-bit scalars, bit-identical
+    /// to historical runs), `q8[:scale=auto|σ]` (per-row affine int8) or
+    /// `bitpack` (4-bit nibble-packed). The engine transcodes each
+    /// arrived gradient through the codec before the fold, and the
+    /// payload model reprices the uplink accordingly.
+    pub codec: CodecSpec,
+    /// How modelled payload bytes follow the codec (`[comm] payload`):
+    /// `auto` (default — per-leg byte scales derived from the codec),
+    /// `fixed` (keep historical 32-bit pricing, isolating the codec's
+    /// training effect) or `scale:down=…,up=…,parity=…` (explicit
+    /// multipliers).
+    pub payload: PayloadSpec,
     /// Train set size (m_total = train points across all clients).
     pub train_size: usize,
     /// Test set size.
@@ -200,6 +214,8 @@ impl Default for ExperimentConfig {
             checkpoint_every: 0,
             checkpoint_path: None,
             resume: ResumeSpec::Off,
+            codec: CodecSpec::None,
+            payload: PayloadSpec::Auto,
             train_size: 30_000,
             test_size: 2_000,
             artifacts_dir: "artifacts".into(),
@@ -231,6 +247,7 @@ const KNOWN_KEYS: &[(&str, &[&str])] = &[
         ],
     ),
     ("coding", &["u_max", "generator", "code", "recovery"]),
+    ("comm", &["codec", "payload"]),
     ("checkpoint", &["every", "path", "resume"]),
     ("runtime", &["threads", "simd"]),
     ("scenario", &["kind"]),
@@ -379,6 +396,20 @@ impl ExperimentConfig {
                 .map_err(|e: String| ConfError::Invalid(format!("[coding] recovery: {e}")))?;
         }
 
+        let cm = sect("comm");
+        if let Some(v) = cm.map.get("codec") {
+            let s = v.as_str().ok_or_else(|| cm.bad("codec", "string", v))?;
+            c.codec = s
+                .parse()
+                .map_err(|e: String| ConfError::Invalid(format!("[comm] codec: {e}")))?;
+        }
+        if let Some(v) = cm.map.get("payload") {
+            let s = v.as_str().ok_or_else(|| cm.bad("payload", "string", v))?;
+            c.payload = s
+                .parse()
+                .map_err(|e: String| ConfError::Invalid(format!("[comm] payload: {e}")))?;
+        }
+
         let ck = sect("checkpoint");
         ck.get_usize("every", &mut c.checkpoint_every)?;
         if let Some(v) = ck.map.get("path") {
@@ -496,6 +527,12 @@ impl ExperimentConfig {
         self.deadline
             .validate()
             .map_err(|e| ConfError::Invalid(format!("[training] deadline: {e}")))?;
+        self.codec
+            .validate()
+            .map_err(|e| ConfError::Invalid(format!("[comm] codec: {e}")))?;
+        self.payload
+            .validate()
+            .map_err(|e| ConfError::Invalid(format!("[comm] payload: {e}")))?;
         if let Some(a) = &self.fleet_asym {
             a.validate().map_err(|e| ConfError::Invalid(format!("[fleet] {e}")))?;
         }
@@ -571,14 +608,14 @@ fn reject_unknown_keys(doc: &Doc) -> Result<(), ConfError> {
             let first = keys.keys().next().map(String::as_str).unwrap_or("?");
             return Err(ConfError::Invalid(format!(
                 "key `{first}` appears before any [section] header \
-                 (sections: experiment, model, training, coding, checkpoint, runtime, \
-                 scenario, faults, fleet)"
+                 (sections: experiment, model, training, coding, comm, checkpoint, \
+                 runtime, scenario, faults, fleet)"
             )));
         }
         let Some((_, known)) = KNOWN_KEYS.iter().find(|(s, _)| s == section) else {
             return Err(ConfError::Invalid(format!(
                 "unknown section [{section}] (expected one of: experiment, model, \
-                 training, coding, checkpoint, runtime, scenario, faults, fleet)"
+                 training, coding, comm, checkpoint, runtime, scenario, faults, fleet)"
             )));
         };
         for key in keys.keys() {
@@ -1022,6 +1059,52 @@ generator = "rademacher"
             .unwrap_err()
             .to_string();
         assert!(e.contains("interval") && e.contains("every"), "{e}");
+    }
+
+    #[test]
+    fn comm_section_parses_defaults_and_rejects_garbage() {
+        use crate::comm::ScaleSpec;
+        // Defaults: no codec, payload follows the codec (i.e. identity).
+        let d = ExperimentConfig::default();
+        assert_eq!(d.codec, CodecSpec::None);
+        assert_eq!(d.payload, PayloadSpec::Auto);
+        // Full section round-trips into the typed config.
+        let c = ExperimentConfig::from_str_conf(
+            "[comm]\ncodec = \"q8:scale=auto\"\npayload = \"auto\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.codec, CodecSpec::Q8 { scale: ScaleSpec::Auto });
+        assert_eq!(c.payload, PayloadSpec::Auto);
+        let c = ExperimentConfig::from_str_conf("[comm]\ncodec = \"bitpack\"\n").unwrap();
+        assert_eq!(c.codec, CodecSpec::Bitpack);
+        let c = ExperimentConfig::from_str_conf(
+            "[comm]\npayload = \"scale:up=0.25,parity=0.5\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.payload, PayloadSpec::Scale { down: 1.0, up: 0.25, parity: 0.5 });
+        // Unknown codec names the section and lists the accepted forms.
+        let e = ExperimentConfig::from_str_conf("[comm]\ncodec = \"zstd\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[comm] codec") && e.contains("zstd"), "{e}");
+        assert!(e.contains("expected one of"), "{e}");
+        // Out-of-range scale is rejected with the section name.
+        let e = ExperimentConfig::from_str_conf("[comm]\ncodec = \"q8:scale=-2\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[comm] codec") && e.contains("scale"), "{e}");
+        // Unknown payload models likewise.
+        let e = ExperimentConfig::from_str_conf("[comm]\npayload = \"tiny\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("[comm] payload") && e.contains("expected one of"), "{e}");
+        // Mistyped value names section and key; unknown keys are listed.
+        let e = ExperimentConfig::from_str_conf("[comm]\ncodec = 8\n").unwrap_err().to_string();
+        assert!(e.contains("[comm]") && e.contains("codec"), "{e}");
+        let e = ExperimentConfig::from_str_conf("[comm]\ncompression = \"q8\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("compression") && e.contains("codec"), "{e}");
     }
 
     #[test]

@@ -33,8 +33,11 @@ use crate::metrics::Point;
 /// File magic: the first 8 bytes of every checkpoint.
 pub const MAGIC: [u8; 8] = *b"CFEDCKPT";
 
-/// Current (and only) checkpoint format version.
-pub const FORMAT_VERSION: u32 = 1;
+/// Current (and only) checkpoint format version. Version 2 added the
+/// cumulative bytes-on-wire totals (modelled payload accounting); v1
+/// files predate the communication model and are rejected rather than
+/// silently resumed with zeroed byte counters.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Everything a decode/verify can reject with. Every variant renders a
 /// named, actionable message — resume paths surface these, they never
@@ -181,6 +184,10 @@ pub struct Snapshot {
     pub outcomes: [u64; 5],
     /// Non-finite client updates excluded from folds so far.
     pub corrupted_total: u64,
+    /// Cumulative modelled downlink bytes (θ broadcasts) so far.
+    pub bytes_down_total: u64,
+    /// Cumulative modelled uplink bytes (gradient uploads) so far.
+    pub bytes_up_total: u64,
     /// Evaluated history points so far, bit-exact.
     pub history: Vec<Point>,
 }
@@ -209,6 +216,8 @@ impl Snapshot {
             payload.extend_from_slice(&c.to_le_bytes());
         }
         payload.extend_from_slice(&self.corrupted_total.to_le_bytes());
+        payload.extend_from_slice(&self.bytes_down_total.to_le_bytes());
+        payload.extend_from_slice(&self.bytes_up_total.to_le_bytes());
         payload.extend_from_slice(&(self.history.len() as u32).to_le_bytes());
         for p in &self.history {
             payload.extend_from_slice(&(p.iter as u64).to_le_bytes());
@@ -276,6 +285,8 @@ impl Snapshot {
             *c = cur.u64("outcome counts")?;
         }
         let corrupted_total = cur.u64("corrupted_total")?;
+        let bytes_down_total = cur.u64("bytes_down_total")?;
+        let bytes_up_total = cur.u64("bytes_up_total")?;
         let n_points = cur.u32("history length")? as usize;
         let mut history = Vec::with_capacity(n_points);
         for _ in 0..n_points {
@@ -301,6 +312,8 @@ impl Snapshot {
             fault_rng: states[3],
             outcomes,
             corrupted_total,
+            bytes_down_total,
+            bytes_up_total,
             history,
         })
     }
@@ -398,7 +411,7 @@ pub fn fingerprint(cfg: &ExperimentConfig) -> u64 {
          steps_per_epoch={};lr={:016x};lr_decay={:016x};lr_decay_epochs={:?};l2={:016x};\
          eval_every={};deadline={:?};simd={:?};scenario={:?};faults={:?};fleet_asym={:?};\
          fleet_n={:?};participation={:?};aggregation={:?};u_max={};generator={:?};code={:?};\
-         recovery={:?};train_size={};test_size={};dataset={}",
+         recovery={:?};train_size={};test_size={};dataset={};codec={};payload={}",
         cfg.seed,
         cfg.clients,
         cfg.dim,
@@ -427,6 +440,8 @@ pub fn fingerprint(cfg: &ExperimentConfig) -> u64 {
         cfg.train_size,
         cfg.test_size,
         cfg.dataset,
+        cfg.codec.label(),
+        cfg.payload.label(),
     );
     fnv1a(canon.as_bytes())
 }
@@ -450,6 +465,8 @@ mod tests {
             fault_rng: [13, 14, 15, 16],
             outcomes: [4, 0, 2, 1, 0],
             corrupted_total: 3,
+            bytes_down_total: 123_456_789,
+            bytes_up_total: 98_765_432,
             history: vec![
                 Point { iter: 1, sim_time: 10.0, accuracy: 0.5, train_loss: 1.25 },
                 Point { iter: 2, sim_time: 20.5, accuracy: 0.625, train_loss: 0.75 },
@@ -505,7 +522,7 @@ mod tests {
         let err = Snapshot::decode(&bytes).unwrap_err();
         assert_eq!(err, CheckpointError::UnsupportedVersion(99));
         let msg = err.to_string();
-        assert!(msg.contains("expected one of 1"), "{msg}");
+        assert!(msg.contains("expected one of 2"), "{msg}");
     }
 
     #[test]
@@ -561,10 +578,16 @@ mod tests {
         longer.resume = ResumeSpec::Auto;
         assert_eq!(f0, fingerprint(&longer));
 
-        // Seed and lr DO.
+        // Seed, lr and the communication model DO.
         let mut reseeded = base.clone();
         reseeded.seed ^= 1;
         assert_ne!(f0, fingerprint(&reseeded));
+        let mut quantized = base.clone();
+        quantized.codec = crate::comm::CodecSpec::Bitpack;
+        assert_ne!(f0, fingerprint(&quantized));
+        let mut repriced = base.clone();
+        repriced.payload = crate::comm::PayloadSpec::Fixed;
+        assert_ne!(f0, fingerprint(&repriced));
         let mut hotter = base;
         hotter.lr *= 2.0;
         assert_ne!(f0, fingerprint(&hotter));

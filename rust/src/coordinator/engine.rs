@@ -70,6 +70,22 @@
 //! historical path (`deadline = "none"`, `faults = "none"` histories are
 //! golden-hash pinned by `tests/scenario_determinism.rs`).
 //!
+//! ## Communication model (`[comm] codec` / `payload`)
+//!
+//! Every leg's delay is priced by the modelled payload it carries
+//! ([`crate::comm::PayloadModel`], applied to the fleet at setup), and
+//! the engine accounts the resulting bytes-on-wire per round:
+//! `bytes_down = planned · |θ|` and `bytes_up = uploads · |∇|`, both in
+//! modelled bytes after the configured codec, surfaced on
+//! [`RoundEvent`] and totalled on [`TrainOutcome`]. When a lossy codec
+//! is configured (`q8`, `bitpack`), each arrived gradient is also
+//! transcoded — quantize → (bit)pack → dequantize, in place, through
+//! the runtime's detected ISA — before the fold, so the aggregate is
+//! computed from exactly the f32 matrix the server could reconstruct
+//! from the wire payload. `codec = "none"` skips both the transcode
+//! loop and the repricing entirely: its histories are bit-for-bit the
+//! fixed-payload ones (`tests/payload_determinism.rs`).
+//!
 //! Per round, every participating node's gradient is *really* executed
 //! through the runtime's grad executor — the round's independent client
 //! requests go through [`Runtime::grad_batch_into`], which fans them out
@@ -100,6 +116,7 @@ use anyhow::{Context, Result};
 
 use super::checkpoint::{self, ResumeSpec, Snapshot};
 use super::setup::FedSetup;
+use crate::comm::{self, PayloadModel};
 use crate::metrics::{accuracy, History, OutcomeCounts, Point, RoundOutcome};
 use crate::rng::Rng;
 use crate::runtime::{GradJob, PreparedTheta, Runtime};
@@ -138,6 +155,12 @@ pub struct TrainOutcome {
     /// `Some(round)` when the run restored from a checkpoint and began at
     /// this 0-based round instead of 0 (`[checkpoint] resume`).
     pub resumed_from: Option<usize>,
+    /// Total modelled downlink bytes over the run (θ broadcasts to every
+    /// planned participant, priced by the `[comm]` payload model).
+    pub bytes_down_total: u64,
+    /// Total modelled uplink bytes over the run (every uploaded gradient
+    /// — arrived or corrupt-excluded — priced after the codec).
+    pub bytes_up_total: u64,
     /// Final model (q × c).
     pub theta: Mat,
 }
@@ -178,6 +201,11 @@ pub struct RoundEvent {
     pub loss: f64,
     /// Test accuracy after the round's update.
     pub acc: f64,
+    /// Modelled downlink bytes this round (θ to every planned slot).
+    pub bytes_down: u64,
+    /// Modelled uplink bytes this round (every uploaded gradient, priced
+    /// after the configured codec).
+    pub bytes_up: u64,
 }
 
 /// Receives one [`RoundEvent`] per *evaluated* training round (every
@@ -318,6 +346,23 @@ pub fn run(
     // Quantile-deadline selection scratch — same reuse discipline, so a
     // warm deadline round stays on the 0-alloc gate.
     let mut kth_scratch = KthScratch::default();
+    // Codec transcode scratch (`[comm] codec`): the per-row code and
+    // nibble buffers are sized once here, so warm quantized rounds stay
+    // on the 0-alloc gate too. codec = "none" never touches them.
+    let codec = cfg.codec;
+    let codec_isa = rt.isa().unwrap_or(crate::tensor::Isa::Scalar);
+    let mut codec_scratch = comm::CodecScratch::default();
+    if !codec.is_none() {
+        codec_scratch.reserve(c);
+    }
+    // Bytes-on-wire pricing: one model for the whole run, matching the
+    // scales `FedSetup::build` applied to the fleet's legs.
+    let payload_model =
+        PayloadModel::new(q, c, codec, cfg.payload, setup.fleet_spec.overhead);
+    let theta_down_b = payload_model.theta_down_bytes();
+    let grad_up_b = payload_model.grad_up_bytes();
+    let mut bytes_down_total: u64 = 0;
+    let mut bytes_up_total: u64 = 0;
     let mut outcomes = OutcomeCounts::default();
     // A scenario that never perturbs the fleet (`static`) lets full-fleet
     // rounds skip the O(n) view reset entirely — the view built above is
@@ -366,6 +411,8 @@ pub fn run(
             &mut history,
             &mut outcomes,
             &mut corrupted_total,
+            &mut bytes_down_total,
+            &mut bytes_up_total,
             &mut delay_rng,
             &mut code_rng,
             &mut scenario_rng,
@@ -390,6 +437,8 @@ pub fn run(
             &fault_rng,
             &outcomes,
             corrupted_total,
+            bytes_down_total,
+            bytes_up_total,
             &history,
         );
         Some(snap.encode())
@@ -460,6 +509,8 @@ pub fn run(
                 &mut history,
                 &mut outcomes,
                 &mut corrupted_total,
+                &mut bytes_down_total,
+                &mut bytes_up_total,
                 &mut delay_rng,
                 &mut code_rng,
                 &mut scenario_rng,
@@ -550,6 +601,19 @@ pub fn run(
                     }
                 }
             }
+            // Lossy uplink codec (`[comm] codec`): every uploaded gradient
+            // is transcoded in place — quantize → (bit)pack → dequantize
+            // through the runtime's detected ISA — so the fold below sees
+            // exactly the f32 matrix the server could reconstruct from the
+            // modelled wire payload. Runs after the corrupt screen (zeroed
+            // offenders quantize to an exact all-zero row) and before any
+            // aggregation; `codec = "none"` skips the loop entirely, so
+            // unquantized histories keep their bits.
+            if !codec.is_none() {
+                for g in grad_outs[..jobs.len()].iter_mut() {
+                    comm::transcode_mat(codec_isa, codec, g, &mut codec_scratch);
+                }
+            }
             // …and fold in a pinned order, fixing the aggregate's bits
             // independently of the thread count: flat mode folds
             // sequentially in plan order (the historical fold), hier mode
@@ -584,6 +648,13 @@ pub fn run(
             )
         };
         corrupted_total += corrupted_now as u64;
+        // Bytes-on-wire this round: θ went down to every planned slot;
+        // every executed request uploaded a gradient (the corrupt screen
+        // excludes updates from the fold, not from the wire).
+        let bytes_down = (planned as f64 * theta_down_b).round() as u64;
+        let bytes_up = ((arrivals + corrupted_now) as f64 * grad_up_b).round() as u64;
+        bytes_down_total += bytes_down;
+        bytes_up_total += bytes_up;
 
         // --- degradation-ladder resolution (module docs) ---
         // The scheme reported how *its* aggregation resolved (rungs 1–4);
@@ -683,6 +754,8 @@ pub fn run(
                 corrupted: corrupted_now,
                 loss,
                 acc,
+                bytes_down,
+                bytes_up,
             };
             for obs in observers.iter_mut() {
                 obs.on_round(&event);
@@ -707,6 +780,8 @@ pub fn run(
                 &fault_rng,
                 &outcomes,
                 corrupted_total,
+                bytes_down_total,
+                bytes_up_total,
                 &history,
             );
             let bytes = snap.encode();
@@ -735,6 +810,8 @@ pub fn run(
             &fault_rng,
             &outcomes,
             corrupted_total,
+            bytes_down_total,
+            bytes_up_total,
             &history,
         );
         checkpoint::write(ckpt_path, &snap)
@@ -750,6 +827,8 @@ pub fn run(
         outcomes,
         corrupted_total,
         resumed_from,
+        bytes_down_total,
+        bytes_up_total,
         theta,
     })
 }
@@ -769,6 +848,8 @@ fn capture_state(
     fault_rng: &Rng,
     outcomes: &OutcomeCounts,
     corrupted_total: u64,
+    bytes_down_total: u64,
+    bytes_up_total: u64,
     history: &History,
 ) -> Snapshot {
     Snapshot {
@@ -785,6 +866,8 @@ fn capture_state(
         fault_rng: fault_rng.state(),
         outcomes: outcomes.as_array(),
         corrupted_total,
+        bytes_down_total,
+        bytes_up_total,
         history: history.points.clone(),
     }
 }
@@ -800,6 +883,8 @@ fn restore_state(
     history: &mut History,
     outcomes: &mut OutcomeCounts,
     corrupted_total: &mut u64,
+    bytes_down_total: &mut u64,
+    bytes_up_total: &mut u64,
     delay_rng: &mut Rng,
     code_rng: &mut Rng,
     scenario_rng: &mut Rng,
@@ -812,6 +897,8 @@ fn restore_state(
     let [full, exact_decode, parity, partial, skip] = snap.outcomes;
     *outcomes = OutcomeCounts { full, exact_decode, parity, partial, skip };
     *corrupted_total = snap.corrupted_total;
+    *bytes_down_total = snap.bytes_down_total;
+    *bytes_up_total = snap.bytes_up_total;
     *delay_rng = Rng::from_state(snap.delay_rng);
     *code_rng = Rng::from_state(snap.code_rng);
     *scenario_rng = Rng::from_state(snap.scenario_rng);

@@ -70,17 +70,31 @@ impl FedSetup {
         // --- dataset (real IDX files if present, synthetic otherwise) ---
         let (train, test) = load_dataset(cfg, &mut data_rng)?;
 
-        // --- fleet (§V-A LTE setting; [fleet] may make links asymmetric) ---
+        // --- fleet (§V-A LTE setting; [fleet] may make links asymmetric,
+        //     [comm] may reprice legs by modelled payload bytes) ---
         let mut fleet_spec = FleetSpec::paper(cfg.clients, cfg.q, cfg.classes);
         fleet_spec.asym = cfg.fleet_asym;
+        let payload_model = crate::comm::PayloadModel::new(
+            cfg.q,
+            cfg.classes,
+            cfg.codec,
+            cfg.payload,
+            fleet_spec.overhead,
+        );
+        fleet_spec.apply_payload(&payload_model);
         let base_clients = fleet_spec.build_clients(&mut topo_rng);
         let client_links = fleet_spec.build_links(&base_clients);
         // The allocation/CDF layer speaks the reciprocal model: under
-        // asymmetric links each client is represented there by a
-        // surrogate with matched mean communication delay, while the
-        // round timeline samples the exact per-leg model. The symmetric
-        // fleet passes through untouched (bit-identity).
-        let clients: Vec<NodeParams> = if fleet_spec.asym.is_some() {
+        // asymmetric links — configured per-leg overrides OR a payload
+        // model that prices the two legs differently — each client is
+        // represented there by a surrogate with matched mean
+        // communication delay, while the round timeline samples the exact
+        // per-leg model. This is how uplink bytes reach the optimizer: a
+        // codec that shrinks the uplink lowers the surrogate's τ, which
+        // shifts the optimal (load, redundancy) split. The symmetric
+        // identity fleet passes through untouched (bit-identity).
+        let clients: Vec<NodeParams> = if fleet_spec.asym.is_some() || fleet_spec.payload_scaled()
+        {
             client_links.iter().map(AsymNodeParams::reciprocal_surrogate).collect()
         } else {
             base_clients

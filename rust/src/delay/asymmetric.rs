@@ -11,6 +11,12 @@
 //!
 //! The exact CDF generalises the Theorem's single negative-binomial series
 //! to a truncated double series over `(ν_d, ν_u)`.
+//!
+//! This is also the shape the `[comm]` payload model produces: a codec
+//! that shrinks the uplink gradient scales `τ_u` below `τ_d` even on an
+//! otherwise-reciprocal fleet ([`crate::topology::FleetSpec::apply_payload`]),
+//! and the allocation layer then sees each client through
+//! [`AsymNodeParams::reciprocal_surrogate`].
 
 use crate::rng::Rng;
 

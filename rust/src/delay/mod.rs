@@ -11,6 +11,16 @@
 //! used by the allocation optimizer, and samplers used by the virtual-clock
 //! round simulator. The MEC server's computing unit uses the same model
 //! with server-grade parameters (§III-C).
+//!
+//! τ is **per-leg and payload-priced**: each leg's per-packet time is
+//! `b_leg / (ηW)` where `b_leg` is the *modelled bytes that leg actually
+//! carries* — the θ broadcast on the downlink, the (possibly
+//! codec-compressed) gradient on the uplink — not a fixed shared packet
+//! size. The `[comm]` payload model ([`crate::comm::PayloadModel`],
+//! applied in [`crate::topology::FleetSpec::apply_payload`]) scales the
+//! two legs' τs independently; with the default `codec = "none"` both
+//! scales are exactly 1.0 and the arithmetic below is bit-identical to
+//! the historical fixed-payload pricing.
 
 pub mod asymmetric;
 
@@ -112,7 +122,11 @@ pub struct NodeParams {
     /// Compute-to-memory-access ratio α (> 0); the stochastic compute part
     /// is `Exp(αμ/ℓ̃)`, i.e. mean `ℓ̃/(αμ)`.
     pub alpha: f64,
-    /// Per-packet transmission time τ = b / (ηW) seconds.
+    /// Per-packet transmission time τ = b / (ηW) seconds, where `b` is
+    /// the leg's modelled payload bytes. In the symmetric reciprocal
+    /// model one τ serves both legs (equal payloads); under a `[comm]`
+    /// codec the fleet prices each leg's τ from the bytes it carries
+    /// (see [`crate::delay::asymmetric::AsymNodeParams`]).
     pub tau: f64,
     /// Wireless erasure probability `p ∈ [0, 1)`; `p = 0` models the AWGN
     /// special case (one reliable transmission).

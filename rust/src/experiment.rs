@@ -24,6 +24,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use crate::coding::{CodeSpec, GeneratorKind, RecoveryMode};
+use crate::comm::{CodecSpec, PayloadSpec};
 use crate::conf::{ConfError, ExperimentConfig};
 use crate::coordinator::checkpoint::ResumeSpec;
 use crate::coordinator::{engine, FedSetup, RoundObserver, TrainOutcome};
@@ -184,6 +185,16 @@ impl ExperimentBuilder {
         /// (`RecoveryMode::Expectation` — the paper's — or
         /// `RecoveryMode::Exact` for bit-exact erasure decoding).
         recovery: RecoveryMode,
+        /// Gradient uplink codec (`CodecSpec::None` — the default — keeps
+        /// payloads and histories bit-identical; `Q8`/`Bitpack` quantize
+        /// each uploaded gradient, shrink the modelled uplink bytes and
+        /// reprice every uplink leg, shifting the coded scheme's optimal
+        /// (load, redundancy) split).
+        codec: CodecSpec,
+        /// Payload pricing mode (`PayloadSpec::Auto` — the default —
+        /// derives per-leg byte scales from the codec; `Fixed` pins the
+        /// pre-codec fixed-size payloads as an ablation control).
+        payload: PayloadSpec,
         /// Write a crash-consistent checkpoint every this many rounds
         /// (0 — the default — disables periodic checkpointing; any
         /// positive value also snapshots at graceful shutdown). Never

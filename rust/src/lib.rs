@@ -102,6 +102,27 @@
 //! [`coordinator::TrainOutcome::corrupted_total`]). See
 //! `examples/resume_training.rs`.
 //!
+//! ## Communication model
+//!
+//! Payload bytes are a first-class modelled quantity ([`comm`]): a
+//! [`comm::PayloadModel`] prices the three wire transfers — θ downlink
+//! broadcast, gradient uplink, one-shot parity upload — and the fleet
+//! builder folds its per-leg byte scales into every client's packet
+//! times, so the round timeline *and* the allocation optimizer both see
+//! what the wire actually carries (compression shifts the optimal
+//! (load, redundancy) split). `[comm] codec` / `--codec` /
+//! [`ExperimentBuilder::codec`] selects the uplink codec: `none`
+//! (default — 32-bit scalars, every seeded history bit-identical),
+//! `q8[:scale=auto|σ]` (per-row affine int8 quantization) or `bitpack`
+//! (4-bit nibble-packed codes). The engine transcodes each arrived
+//! gradient through the codec before the fold (quantize → pack → unpack
+//! → dequantize, ISA-dispatched and bit-exact across SIMD policies —
+//! the kernels use no FMA), and reports per-round bytes on the wire on
+//! [`coordinator::RoundEvent`] and totals on
+//! [`coordinator::TrainOutcome`]. `[comm] payload` decouples pricing
+//! from transcoding (`fixed` keeps historical pricing under any codec).
+//! See `examples/payload_ablation.rs` and `tests/payload_determinism.rs`.
+//!
 //! ## Erasure coding and exact recovery
 //!
 //! The coded scheme's straggler tolerance is pluggable ([`coding`]): a
@@ -153,10 +174,11 @@
 //! reuses all per-round buffers — a warm training round performs zero
 //! heap allocations on the compute path (`tests/alloc_gate.rs`). See
 //! `rust/PERF.md` for the kernel/dispatch/threading/allocation design,
-//! the tracked `BENCH_hotpath.json` baseline (schema 7: per-op GFLOP/s,
+//! the tracked `BENCH_hotpath.json` baseline (schema 8: per-op GFLOP/s,
 //! codec GB/s + symbols/s, the selected ISA, fleet-scale rounds/s, the
-//! degraded-run rung histogram + achieved participation, and the
-//! checkpoint snapshot latency; `cargo bench --bench hotpath`), and how
+//! degraded-run rung histogram + achieved participation, the checkpoint
+//! snapshot latency, and the payload pipeline's bytes-per-round +
+//! quantize/pack GB/s rows; `cargo bench --bench hotpath`), and how
 //! to compare runs across PRs.
 //!
 //! Knobs: thread count comes from `[runtime] threads` / `--threads` /
@@ -179,6 +201,7 @@ pub mod allocation;
 pub mod benchutil;
 pub mod cli;
 pub mod coding;
+pub mod comm;
 pub mod conf;
 pub mod convergence;
 pub mod coordinator;

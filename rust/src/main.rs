@@ -115,6 +115,18 @@ fn commands() -> Vec<Command> {
             default: None,
             is_flag: false,
         },
+        OptSpec {
+            name: "codec",
+            help: "gradient uplink codec: none | q8[:scale=auto|<sigma>] | bitpack (reprices uplinks, quantizes folds)",
+            default: None,
+            is_flag: false,
+        },
+        OptSpec {
+            name: "payload",
+            help: "payload pricing: auto (derive from codec) | fixed (pre-codec sizes) | scale:down=..,up=..,parity=..",
+            default: None,
+            is_flag: false,
+        },
     ];
     vec![
         Command {
@@ -229,6 +241,12 @@ fn builder_from(args: &Args) -> Result<ExperimentBuilder> {
     }
     if let Some(s) = args.get("resume") {
         b = b.resume(s.parse().map_err(anyhow::Error::msg)?);
+    }
+    if let Some(s) = args.get("codec") {
+        b = b.codec(s.parse().map_err(anyhow::Error::msg)?);
+    }
+    if let Some(s) = args.get("payload") {
+        b = b.payload(s.parse().map_err(anyhow::Error::msg)?);
     }
     Ok(b)
 }
@@ -362,6 +380,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("t* = {t:.2} s   u* = {u}   parity overhead = {:.1} s", out.parity_overhead);
     }
     println!("final accuracy {:.4}", out.history.final_accuracy());
+    println!(
+        "bytes on wire: {:.1} MB down, {:.1} MB up (codec {})",
+        out.bytes_down_total as f64 / 1e6,
+        out.bytes_up_total as f64 / 1e6,
+        session.config().codec.label()
+    );
     Ok(())
 }
 

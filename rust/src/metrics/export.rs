@@ -41,6 +41,34 @@ pub fn to_csv_string(histories: &[&History]) -> String {
     s
 }
 
+/// Render evaluated round events — one line per [`RoundEvent`] — with the
+/// communication model's bytes-on-wire columns:
+/// `scheme,iter,sim_time_s,accuracy,train_loss,bytes_down,bytes_up`.
+///
+/// This is a separate long-format CSV from [`to_csv_string`] on purpose:
+/// the history CSV's shape is pinned by downstream plotting scripts, while
+/// byte accounting rides on the observer event stream (`[comm]`).
+pub fn round_csv_string(label: &str, events: &[crate::coordinator::RoundEvent]) -> String {
+    let mut s = String::from("scheme,iter,sim_time_s,accuracy,train_loss,bytes_down,bytes_up\n");
+    for ev in events {
+        s.push_str(&format!(
+            "{},{},{:.6},{:.6},{:.6},{},{}\n",
+            label, ev.iter, ev.clock, ev.acc, ev.loss, ev.bytes_down, ev.bytes_up
+        ));
+    }
+    s
+}
+
+/// Write [`round_csv_string`]'s format to `path`.
+pub fn write_round_csv(
+    path: &Path,
+    label: &str,
+    events: &[crate::coordinator::RoundEvent],
+) -> Result<()> {
+    std::fs::write(path, round_csv_string(label, events))
+        .with_context(|| format!("writing {path:?}"))
+}
+
 /// Markdown gain table in the paper's Table II/III layout.
 pub fn gain_table_markdown(rows: &[GainRow]) -> String {
     let mut s = String::from(
@@ -97,6 +125,34 @@ mod tests {
         let back = std::fs::read_to_string(&path).unwrap();
         assert_eq!(back, to_csv_string(&[&h]));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn round_csv_carries_bytes_columns() {
+        let ev = crate::coordinator::RoundEvent {
+            iter: 3,
+            epoch: 0,
+            step: 2,
+            clock: 42.5,
+            arrivals: 28,
+            planned: 30,
+            outcome: crate::metrics::RoundOutcome::Full,
+            corrupted: 0,
+            loss: 0.25,
+            acc: 0.875,
+            bytes_down: 10_560_000,
+            bytes_up: 4_752_000,
+        };
+        let s = round_csv_string("coded(delta=0.1)", &[ev]);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(
+            lines[0],
+            "scheme,iter,sim_time_s,accuracy,train_loss,bytes_down,bytes_up"
+        );
+        assert_eq!(
+            lines[1],
+            "coded(delta=0.1),3,42.500000,0.875000,0.250000,10560000,4752000"
+        );
     }
 
     #[test]

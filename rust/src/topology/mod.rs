@@ -8,8 +8,11 @@
 //! - Compute: MAC rates follow the ladder `{1, k₂, …}` with max
 //!   3.072·10⁶ MAC/s, `α = 2`; the data-point rate `μ_j` divides the MAC
 //!   rate by the MACs per point of the regression gradient (`2·q·c`).
-//! - Packets carry one model/gradient (`q·c` scalars, 32 bit, 10%
-//!   protocol overhead): `τ_j = b / rate_j`.
+//! - Packets carry one model/gradient: `τ_j = b / rate_j`, where `b` is
+//!   the *modelled payload* of that leg — `q·c` scalars at 32 bit plus
+//!   10% protocol overhead by default, shrunk per leg by the
+//!   [`crate::comm::PayloadModel`] byte scales when a `[comm]` codec is
+//!   active (identity scales leave every τ bit-untouched).
 //! - The MEC server's computing unit has dedicated, reliable resources
 //!   (`P(T_C ≤ t) = 1` in §V-A — we model `p = 0` with server-grade rates).
 
@@ -98,6 +101,13 @@ pub struct FleetSpec {
     pub overhead: f64,
     /// Bits per scalar (32).
     pub bits_per_scalar: f64,
+    /// Downlink θ byte scale from the `[comm]` payload model (1.0 = the
+    /// historical fixed payload, bit-identical pricing).
+    pub payload_down_scale: f64,
+    /// Uplink gradient byte scale (see [`crate::comm::PayloadModel`]).
+    pub payload_up_scale: f64,
+    /// One-shot parity upload byte scale.
+    pub payload_parity_scale: f64,
 }
 
 impl FleetSpec {
@@ -115,7 +125,26 @@ impl FleetSpec {
             p: 0.1,
             overhead: 0.1,
             bits_per_scalar: 32.0,
+            payload_down_scale: 1.0,
+            payload_up_scale: 1.0,
+            payload_parity_scale: 1.0,
         }
+    }
+
+    /// Fold a resolved `[comm]` payload model into the fleet's per-leg
+    /// pricing. Identity scales (codec `none`) change nothing — every τ
+    /// and every seeded history stays bit-identical.
+    pub fn apply_payload(&mut self, model: &crate::comm::PayloadModel) {
+        self.payload_down_scale = model.down_scale;
+        self.payload_up_scale = model.up_scale;
+        self.payload_parity_scale = model.parity_scale;
+    }
+
+    /// Whether the payload model prices the two data legs differently
+    /// from the historical fixed payload (drives the allocation
+    /// optimizer's switch to per-leg surrogates).
+    pub fn payload_scaled(&self) -> bool {
+        self.payload_down_scale != 1.0 || self.payload_up_scale != 1.0
     }
 
     /// Packet size in bits for one model or gradient transfer (q·c scalars
@@ -132,10 +161,15 @@ impl FleetSpec {
 
     /// One-time parity upload time for `u` parity rows of width `q + c`
     /// over client `j`'s uplink (expected retransmissions included) —
-    /// the Fig. 4(a) inset overhead.
+    /// the Fig. 4(a) inset overhead. A `[comm]` payload model scales the
+    /// modelled parity bytes; the identity scale skips the multiply so
+    /// historical pricing stays bit-exact.
     pub fn parity_upload_secs(&self, client: &NodeParams, u: usize) -> f64 {
-        let bits =
+        let mut bits =
             u as f64 * (self.q + self.c) as f64 * self.bits_per_scalar * (1.0 + self.overhead);
+        if self.payload_parity_scale != 1.0 {
+            bits *= self.payload_parity_scale;
+        }
         let packets = bits / self.packet_bits();
         packets * client.tau / (1.0 - client.p)
     }
@@ -176,9 +210,12 @@ impl FleetSpec {
     /// reciprocal links (`τ_d = τ_u = τ`, `p_d = p_u = p`), which samples
     /// bit-identically to the base [`NodeParams`] model; with overrides,
     /// the §V-A τ ladder is scaled per leg and the per-leg erasure
-    /// probabilities replace the symmetric `p`.
+    /// probabilities replace the symmetric `p`. A `[comm]` payload model
+    /// then scales each leg's τ by its modelled byte ratio (τ = b/rate,
+    /// so bytes and packet time are proportional); the identity scales
+    /// skip the multiply, keeping historical fleets bit-identical.
     pub fn link_of(&self, c: &NodeParams) -> AsymNodeParams {
-        match self.asym {
+        let mut link = match self.asym {
             None => AsymNodeParams::symmetric(c),
             Some(a) => AsymNodeParams {
                 mu: c.mu,
@@ -188,7 +225,14 @@ impl FleetSpec {
                 p_down: a.p_down,
                 p_up: a.p_up,
             },
+        };
+        if self.payload_down_scale != 1.0 {
+            link.tau_down *= self.payload_down_scale;
         }
+        if self.payload_up_scale != 1.0 {
+            link.tau_up *= self.payload_up_scale;
+        }
+        link
     }
 
     /// Per-leg link models for an already-built fleet — the form the
@@ -606,5 +650,52 @@ mod tests {
         let t1 = s.parity_upload_secs(&c, 100);
         let t2 = s.parity_upload_secs(&c, 200);
         assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn payload_scales_reprice_the_legs_and_identity_is_bit_exact() {
+        use crate::comm::{CodecSpec, PayloadModel, PayloadSpec, ScaleSpec};
+        let mut spec = FleetSpec::paper(8, 100, 10);
+        let clients = spec.build_clients(&mut Rng::seed_from(30));
+        let base_links = spec.build_links(&clients);
+        // The identity model leaves every leg bit-untouched.
+        let id = PayloadModel::new(100, 10, CodecSpec::None, PayloadSpec::Auto, spec.overhead);
+        spec.apply_payload(&id);
+        assert!(!spec.payload_scaled());
+        for (l, b) in spec.build_links(&clients).iter().zip(&base_links) {
+            assert_eq!(l.tau_down.to_bits(), b.tau_down.to_bits());
+            assert_eq!(l.tau_up.to_bits(), b.tau_up.to_bits());
+        }
+        let c0 = clients[0];
+        let parity_base = spec.parity_upload_secs(&c0, 64);
+        // A q8 payload shrinks only the uplink (and the parity upload).
+        let q8 = PayloadModel::new(
+            100,
+            10,
+            CodecSpec::Q8 { scale: ScaleSpec::Auto },
+            PayloadSpec::Auto,
+            spec.overhead,
+        );
+        spec.apply_payload(&q8);
+        assert!(spec.payload_scaled());
+        for (l, b) in spec.build_links(&clients).iter().zip(&base_links) {
+            assert_eq!(l.tau_down.to_bits(), b.tau_down.to_bits(), "theta stays 32-bit");
+            assert!((l.tau_up / b.tau_up - q8.up_scale).abs() < 1e-12);
+            l.validate().unwrap();
+        }
+        let parity_q8 = spec.parity_upload_secs(&c0, 64);
+        assert!((parity_q8 / parity_base - q8.parity_scale).abs() < 1e-12);
+        // The mega-fleet ladder path prices through the same link_of body.
+        let mut shards = FleetShards::ladder(spec, 0xF1EE7, 64);
+        let mut plain = spec;
+        plain.payload_down_scale = 1.0;
+        plain.payload_up_scale = 1.0;
+        plain.payload_parity_scale = 1.0;
+        let mut base_shards = FleetShards::ladder(plain, 0xF1EE7, 64);
+        for g in [0usize, 5, 63] {
+            let (a, b) = (shards.link(g), base_shards.link(g));
+            assert_eq!(a.tau_down.to_bits(), b.tau_down.to_bits());
+            assert!((a.tau_up / b.tau_up - q8.up_scale).abs() < 1e-12);
+        }
     }
 }

@@ -440,6 +440,53 @@ fn steady_state_compute_path_allocates_zero_bytes() {
         );
     }
 
+    // --- the payload-codec path (`[comm]` PR): the full warm
+    //     quantize → bitpack → unpack → dequantize transcode the engine
+    //     runs over every uploaded gradient before the fold, through the
+    //     gated ISA, against the engine's gradient slots. Once the
+    //     CodecScratch is reserved, a warm transcode of the whole round's
+    //     uploads must acquire no memory at all, for every codec. ---
+    {
+        use codedfedl::comm::{self, CodecSpec, ScaleSpec};
+        for codec in [
+            CodecSpec::Q8 { scale: ScaleSpec::Auto },
+            CodecSpec::Q8 { scale: ScaleSpec::Fixed(0.01) },
+            CodecSpec::Bitpack,
+        ] {
+            let mut scratch = comm::CodecScratch::default();
+            scratch.reserve(c);
+            let mut transcode_round = || {
+                for g in outs.iter_mut() {
+                    comm::transcode_mat(isa, codec, g, &mut scratch);
+                }
+            };
+
+            // Two warm rounds reach the scratch buffers' steady state…
+            transcode_round();
+            transcode_round();
+
+            // …after which a warm transcode must acquire no memory.
+            let (a0, b0) = (CountingAlloc::allocations(), CountingAlloc::bytes());
+            transcode_round();
+            let (a1, b1) = (CountingAlloc::allocations(), CountingAlloc::bytes());
+            assert_eq!(
+                a1 - a0,
+                0,
+                "codec {}: warm transcode performed {} allocations ({} bytes)",
+                codec.label(),
+                a1 - a0,
+                b1 - b0
+            );
+            assert_eq!(
+                b1 - b0,
+                0,
+                "codec {}: warm transcode requested {} bytes",
+                codec.label(),
+                b1 - b0
+            );
+        }
+    }
+
     // Sanity: the counter itself works (an allocation is visible).
     let before = CountingAlloc::allocations();
     let v = std::hint::black_box(vec![0u8; 4096]);

@@ -46,7 +46,7 @@ fn example_config_parses_and_documents_every_key() {
         "classes", "sigma", "local_batch", "steps_per_epoch", "epochs", "lr", "lr_decay",
         "lr_decay_epochs", "l2", "eval_every", "u_max", "generator", "code", "recovery",
         "threads", "simd", "kind", "tau_down", "tau_up", "p_down", "p_up", "deadline", "faults",
-        "[checkpoint]", "every", "path", "resume",
+        "[checkpoint]", "every", "path", "resume", "[comm]", "codec", "payload",
     ] {
         assert!(text.contains(key), "example.toml is missing documented key {key}");
     }

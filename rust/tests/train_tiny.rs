@@ -12,9 +12,12 @@
 //! suite under `sample:k=4` too, so the claims survive per-round
 //! sampled rosters — and under the fault mix named by `CODEDFEDL_FAULTS`
 //! (any [`FaultSpec`] string; default `none`), so they survive injected
-//! client crashes as well.
+//! client crashes as well — and under the uplink codec named by
+//! `CODEDFEDL_CODEC` (any [`CodecSpec`] string; default `none`), so they
+//! survive quantized gradients and repriced uplinks too.
 
 use codedfedl::benchutil;
+use codedfedl::comm::CodecSpec;
 use codedfedl::conf::ExperimentConfig;
 use codedfedl::schemes::{CodedFedL, SchemeSpec};
 use codedfedl::sim::fault::FaultSpec;
@@ -43,12 +46,20 @@ fn env_faults() -> FaultSpec {
     }
 }
 
+fn env_codec() -> CodecSpec {
+    match std::env::var("CODEDFEDL_CODEC") {
+        Ok(v) => v.parse().expect("CODEDFEDL_CODEC"),
+        Err(_) => CodecSpec::None,
+    }
+}
+
 fn tiny(epochs: usize) -> ExperimentConfig {
     ExperimentConfig {
         epochs,
         scenario: env_scenario(),
         participation: env_participation(),
         faults: env_faults(),
+        codec: env_codec(),
         ..ExperimentConfig::tiny()
     }
 }
@@ -150,6 +161,7 @@ fn thread_count_does_not_change_the_history() {
             .scenario(env_scenario())
             .participation(env_participation())
             .faults(env_faults())
+            .codec(env_codec())
             .build()
             .unwrap()
             .run_spec(spec)
@@ -185,6 +197,7 @@ fn eval_every_samples_history_but_keeps_training_identical() {
             .scenario(env_scenario())
             .participation(env_participation())
             .faults(env_faults())
+            .codec(env_codec())
             .build()
             .unwrap()
             .run(&mut CodedFedL::new(0.3))
